@@ -1,0 +1,42 @@
+//! Codec micro-benchmarks: quantize + dequantize throughput per format,
+//! with and without importance weighting. This is the L3-side hot path
+//! of `dsq quantize` (the serving hot path dequantizes inside XLA).
+
+use dsq::quant::{self, QuantFormat};
+use dsq::util::bench::Bench;
+use dsq::util::rng::Pcg;
+
+fn main() {
+    let n = 256 * 256; // 64K weights ≈ one tiny-moe expert matrix
+    let mut rng = Pcg::new(1);
+    let data: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
+    let importance: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+
+    println!("# codec throughput, {n} weights/iter\n");
+    for fmt in [
+        QuantFormat::Q8_0,
+        QuantFormat::Q6K,
+        QuantFormat::Q5K,
+        QuantFormat::Q4K,
+        QuantFormat::Q3K,
+        QuantFormat::Q2K,
+    ] {
+        let bytes = (n * 4) as u64;
+        Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("quantize/{}", fmt.name()), || {
+                quant::quantize(fmt, &data, None).unwrap()
+            });
+        Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("quantize-imatrix/{}", fmt.name()), || {
+                quant::quantize(fmt, &data, Some(&importance)).unwrap()
+            });
+        let packed = quant::quantize(fmt, &data, None).unwrap();
+        Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("dequantize/{}", fmt.name()), || {
+                quant::dequantize(fmt, &packed, n).unwrap()
+            });
+    }
+}

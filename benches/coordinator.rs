@@ -1,0 +1,47 @@
+//! Coordinator micro-benchmarks: sampling, batch packing, task
+//! generation — the L3 logic that must never dominate a serving step.
+
+use dsq::coordinator::sampler::{sample, SamplingParams};
+use dsq::eval::{suites, tasks};
+use dsq::util::bench::Bench;
+use dsq::util::rng::Pcg;
+
+fn main() {
+    println!("# L3 coordinator micro-benches\n");
+    // Sampler over a vocab-512 logits row (the per-token cost).
+    let mut rng = Pcg::new(3);
+    let logits: Vec<f32> = (0..512).map(|_| rng.next_normal()).collect();
+    let params = SamplingParams::paper();
+    let mut srng = Pcg::new(4);
+    Bench::new()
+        .throughput_items(1)
+        .run("sampler/top-p-512", || sample(&logits, &params, &mut srng));
+    let greedy = SamplingParams::greedy();
+    Bench::new()
+        .throughput_items(1)
+        .run("sampler/greedy-512", || sample(&logits, &greedy, &mut srng));
+
+    // Question generation (used by the eval harness and serve driver).
+    for suite in ["MATH 500", "AIME 2024", "MMLU", "LiveCodeBench"] {
+        let s = suites::by_name(suite).unwrap();
+        let mut qid = 0u64;
+        Bench::new().throughput_items(1).run(&format!("taskgen/{suite}"), || {
+            qid += 1;
+            tasks::eval_question(s, qid).prompt.len()
+        });
+    }
+
+    // Batch packing: 16 prompts into the fixed [16, 16] token buffer.
+    let qs: Vec<_> = (0..16)
+        .map(|i| tasks::eval_question(suites::by_name("MATH 500").unwrap(), i))
+        .collect();
+    Bench::new().run("pack/wave-16", || {
+        let mut tokens = vec![0i32; 16 * 16];
+        let mut lengths = vec![1i32; 16];
+        for (i, q) in qs.iter().enumerate() {
+            tokens[i * 16..i * 16 + q.prompt.len()].copy_from_slice(&q.prompt);
+            lengths[i] = q.prompt.len() as i32;
+        }
+        (tokens, lengths)
+    });
+}

@@ -1,0 +1,68 @@
+//! End-to-end serving benchmark over the PJRT runtime (needs
+//! `make artifacts`; exits gracefully when artifacts are absent).
+//!
+//! Measures prefill latency, decode-step latency and wave throughput
+//! per quantization scheme — the data for EXPERIMENTS.md §Perf.
+
+use dsq::container::{quantize_container, Container};
+use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
+use dsq::eval::{suites, tasks};
+use dsq::runtime::Engine;
+use dsq::scheme::builtin;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let hlo = PathBuf::from("artifacts/hlo");
+    let ckpt_dir = PathBuf::from("artifacts/ckpt");
+    // Prefer a trained checkpoint; fall back to the smoke one.
+    let tag = ["r1", "v3", "smoke"]
+        .into_iter()
+        .find(|t| ckpt_dir.join(format!("{t}.f32.dsq")).exists());
+    let Some(tag) = tag else {
+        eprintln!("serving bench skipped: no checkpoints (run `make artifacts`)");
+        return Ok(());
+    };
+    println!("# serving bench on checkpoint {tag}\n");
+    for scheme in ["f32", "q4_k_m", "dq3_k_m", "q2_k_l"] {
+        let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
+        let path = if scheme == "f32" {
+            f32_path
+        } else {
+            let q = ckpt_dir.join(format!("{tag}.{scheme}.dsq"));
+            if !q.exists() {
+                let src = Container::open(&f32_path)?;
+                quantize_container(&src, &builtin::scheme(scheme)?, None)?.write(&q)?;
+            }
+            q
+        };
+        let t0 = std::time::Instant::now();
+        let engine = Engine::load(&hlo, &path)?;
+        let compile_s = t0.elapsed().as_secs_f64();
+        let mut coord = Coordinator::new(engine);
+        for i in 0..64u64 {
+            let suite = &suites::SUITES[(i % 9) as usize];
+            let q = tasks::eval_question(suite, i);
+            coord.submit(Request {
+                id: i,
+                prompt: q.prompt,
+                params: SamplingParams::paper(),
+                seed: i,
+            })?;
+        }
+        let t0 = std::time::Instant::now();
+        coord.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let p = coord.metrics.prefill_summary();
+        let d = coord.metrics.decode_summary();
+        println!(
+            "bench serving/{:<10} compile {:>5.1}s | prefill med {:>7.1} ms | decode med {:>7.1} ms | {:>7.1} tok/s | 64 reqs in {:.2}s",
+            scheme,
+            compile_s,
+            p.median,
+            d.median,
+            coord.metrics.tokens_per_sec(),
+            wall
+        );
+    }
+    Ok(())
+}

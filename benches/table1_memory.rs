@@ -1,0 +1,27 @@
+//! Table 1 / Table 6 regeneration bench: the analytic census + memory
+//! model over the full 671B architecture (exercises the scheme engine's
+//! per-tensor assignment over 1000+ tensors per scheme).
+
+use dsq::memory;
+use dsq::model::ModelConfig;
+use dsq::scheme::builtin;
+use dsq::util::bench::Bench;
+
+fn main() {
+    println!("# table 1 regeneration (671B census × 5 schemes)\n");
+    let cfg = ModelConfig::by_name("deepseek-r1-671b").unwrap();
+    Bench::new().run("census/deepseek-671b", || cfg.census().len());
+    for name in dsq::tables::TABLE1_SCHEMES {
+        let scheme = builtin::scheme(name).unwrap();
+        Bench::new().run(&format!("estimate/{name}"), || {
+            memory::estimate_default(&cfg, &scheme).total_bytes
+        });
+    }
+    Bench::quick().run("table1/full-render", || dsq::tables::table1(true).unwrap().len());
+    Bench::quick().run("table7/full-render", || dsq::tables::table7().unwrap().len());
+
+    // And print the tables themselves — the bench IS the regenerator.
+    println!("\n{}", dsq::tables::table1(true).unwrap());
+    println!("{}", dsq::tables::table7().unwrap());
+    println!("{}", dsq::tables::table8(false));
+}

@@ -1,0 +1,63 @@
+//! Memory planner — §4.4's deployment recommendations as a tool (E9).
+//!
+//! For every device type and every model/scheme combination, prints
+//! whether a single 8-device machine can host it, and the best scheme
+//! per device.
+//!
+//! Run: `cargo run --release --example memory_planner [-- ctx]`
+
+use dsq::memory::{self, devices};
+use dsq::model::ModelConfig;
+use dsq::scheme::builtin;
+
+fn main() -> anyhow::Result<()> {
+    let ctx: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(32_768);
+
+    for model in ["deepseek-r1-671b", "distill-qwen-32b"] {
+        let cfg = ModelConfig::by_name(model)?;
+        println!("\n## {model} @ {ctx} ctx x {} seqs", memory::DEFAULT_N_SEQ);
+        print!("{:<12}", "scheme");
+        for d in devices::DEVICES {
+            print!(" {:>12}", d.name);
+        }
+        println!(" {:>9} {:>8}", "per-GPU", "bits");
+        for scheme in builtin::all() {
+            if scheme.name == "f32" {
+                continue;
+            }
+            let est = memory::estimate(&cfg, &scheme, ctx, memory::DEFAULT_N_SEQ);
+            print!("{:<12}", scheme.name);
+            for d in devices::DEVICES {
+                print!(" {:>12}", if devices::fits(&est, d) { "fits" } else { "-" });
+            }
+            println!(" {:>8.1}G {:>8.2}", est.per_gpu_gib(), est.avg_bits);
+        }
+    }
+
+    println!("\n## best (highest-precision) scheme per device, R1-671B:");
+    let cfg = ModelConfig::by_name("deepseek-r1-671b")?;
+    for d in devices::DEVICES {
+        let mut best: Option<(String, f64)> = None;
+        for s in builtin::all() {
+            if s.name == "f32" {
+                continue;
+            }
+            let est = memory::estimate(&cfg, &s, ctx, memory::DEFAULT_N_SEQ);
+            let better = best.as_ref().map_or(true, |(_, b)| est.avg_bits > *b);
+            if devices::fits(&est, d) && better {
+                best = Some((s.name.clone(), est.avg_bits));
+            }
+        }
+        println!(
+            "  8x{:<12} -> {}",
+            d.name,
+            best.map(|(n, b)| format!("{n} ({b:.2} bpw)"))
+                .unwrap_or_else(|| "nothing fits".into())
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quant explorer — the bpw ↔ reconstruction-error trade-off (E10),
+//! plus the effect of importance weighting (imatrix) on each format.
+//!
+//! Run: `cargo run --release --example quant_explorer`
+
+use dsq::quant::{self, error, QuantFormat};
+use dsq::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let n = 256 * 64;
+    let mut rng = Pcg::new(2024);
+    // Realistic weight-like data: gaussian bulk + heavy-tailed outliers
+    // (the "super weights" of Yu et al. that motivate DQ3_K_M).
+    let data: Vec<f32> = (0..n)
+        .map(|i| {
+            let base = rng.next_normal() * 0.02;
+            if i % 997 == 0 {
+                base * 40.0
+            } else {
+                base
+            }
+        })
+        .collect();
+    // Importance: emphasize a random 5% of weights (as an activation
+    // calibration pass would).
+    let importance: Vec<f32> = (0..n)
+        .map(|_| if rng.next_f32() < 0.05 { 100.0 } else { 1.0 })
+        .collect();
+
+    println!(
+        "{:<8} {:>7} {:>12} {:>12} {:>16} {:>16}",
+        "format", "bpw", "rel-rmse", "max|err|", "imp-rmse plain", "imp-rmse imatrix"
+    );
+    for fmt in [
+        QuantFormat::Q8_0,
+        QuantFormat::Q6K,
+        QuantFormat::Q5K,
+        QuantFormat::Q4K,
+        QuantFormat::Q3K,
+        QuantFormat::Q2K,
+    ] {
+        let plain = quant::roundtrip(fmt, &data, None)?;
+        let weighted = quant::roundtrip(fmt, &data, Some(&importance))?;
+        // rmse restricted to the "important" subset.
+        let imp_err = |recon: &[f32]| {
+            let (mut num, mut den) = (0f64, 0f64);
+            for ((a, b), w) in data.iter().zip(recon).zip(&importance) {
+                if *w > 1.0 {
+                    let d = (*a - *b) as f64;
+                    num += d * d;
+                    den += (*a as f64) * (*a as f64);
+                }
+            }
+            (num / den.max(1e-30)).sqrt()
+        };
+        println!(
+            "{:<8} {:>7.4} {:>12.6} {:>12.6} {:>16.6} {:>16.6}",
+            fmt.name(),
+            fmt.bits_per_weight(),
+            error::rel_rmse(&data, &plain),
+            error::max_abs_err(&data, &plain),
+            imp_err(&plain),
+            imp_err(&weighted),
+        );
+    }
+    println!(
+        "\n(imp-rmse falling from 'plain' to 'imatrix' shows calibration\n steering the rounding toward important weights — §2.2's PTQ objective)"
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the 60-second tour of the `dsq` public API.
+//!
+//! 1. Build a tiny f32 checkpoint in memory (normally `train.py` does
+//!    this), 2. quantize it with the paper's DQ3_K_M recipe, 3. inspect
+//!    sizes/errors, 4. show the §4.4 memory model for the real 671B
+//!    model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dsq::container::{quantize_container, Container, Writer};
+use dsq::memory;
+use dsq::model::ModelConfig;
+use dsq::quant::error::rel_rmse;
+use dsq::quant::QuantFormat;
+use dsq::scheme::builtin;
+use dsq::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. a tiny f32 checkpoint ------------------------------------
+    let cfg = ModelConfig::tiny_moe();
+    let mut w = Writer::new(cfg.clone(), "f32");
+    let mut rng = Pcg::new(42);
+    for t in cfg.census() {
+        let n: usize = t.shape.iter().product();
+        let vals: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
+        let payload = dsq::quant::quantize(QuantFormat::F32, &vals, None)?;
+        w.add_tensor(&t.name, t.class, t.layer, &t.shape, QuantFormat::F32, &payload)?;
+    }
+    let f32_ckpt = Container::from_bytes(w.to_bytes())?;
+    println!(
+        "f32 checkpoint: {} tensors, {:.1} MiB",
+        f32_ckpt.tensors.len(),
+        f32_ckpt.data_bytes() as f64 / (1 << 20) as f64
+    );
+
+    // --- 2. quantize with DQ3_K_M ------------------------------------
+    let scheme = builtin::scheme("dq3_k_m")?;
+    let q = Container::from_bytes(quantize_container(&f32_ckpt, &scheme, None)?.to_bytes())?;
+    println!(
+        "dq3_k_m checkpoint: {:.1} MiB ({:.2}x smaller, {:.2} bits/weight)",
+        q.data_bytes() as f64 / (1 << 20) as f64,
+        f32_ckpt.data_bytes() as f64 / q.data_bytes() as f64,
+        scheme.avg_bits(&cfg)
+    );
+
+    // --- 3. per-tensor reconstruction error --------------------------
+    println!("\nffn_down formats + reconstruction error (dynamic rule at work):");
+    for t in q.tensors.iter().filter(|t| t.name.contains("ffn_down")).take(7) {
+        let ref_vals = f32_ckpt.dequantize(f32_ckpt.tensor(&t.name)?)?;
+        let got = q.dequantize(t)?;
+        println!(
+            "  {:<34} {:<5} rel-rmse {:.4}",
+            t.name,
+            t.format.name(),
+            rel_rmse(&ref_vals, &got)
+        );
+    }
+
+    // --- 4. would this fit your machine? (671B memory model) ---------
+    let big = ModelConfig::by_name("deepseek-r1-671b")?;
+    println!("\nDeepSeek-R1 671B under DQ3_K_M @ 32K ctx:");
+    let est = memory::estimate_default(&big, &scheme);
+    println!(
+        "  weights {:.0}G | total {:.0}GB | per-GPU {:.0}GB",
+        est.model_gib(),
+        est.total_gib(),
+        est.per_gpu_gib()
+    );
+    for d in dsq::memory::devices::DEVICES {
+        println!(
+            "  8x{:<12}: {}",
+            d.name,
+            if dsq::memory::devices::fits(&est, d) { "fits" } else { "does NOT fit" }
+        );
+    }
+    Ok(())
+}

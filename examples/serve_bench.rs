@@ -1,0 +1,78 @@
+//! End-to-end serving driver (DESIGN.md E12) — the validation run
+//! recorded in EXPERIMENTS.md.
+//!
+//! Loads a real (trained + quantized) checkpoint through the AOT
+//! artifacts, serves batched generation requests drawn from the
+//! benchmark distribution through the L3 coordinator, and reports
+//! latency/throughput per scheme.
+//!
+//! Run after `make artifacts`:
+//! `cargo run --release --example serve_bench -- [requests] [ckpt_tag]`
+
+use dsq::container::{quantize_container, Container};
+use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
+use dsq::eval::{suites, tasks};
+use dsq::runtime::Engine;
+use dsq::scheme::builtin;
+use std::path::{Path, PathBuf};
+
+fn ensure_quantized(ckpt_dir: &Path, tag: &str, scheme: &str) -> anyhow::Result<PathBuf> {
+    let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
+    if scheme == "f32" {
+        return Ok(f32_path);
+    }
+    let qpath = ckpt_dir.join(format!("{tag}.{scheme}.dsq"));
+    if !qpath.exists() {
+        let src = Container::open(&f32_path)?;
+        quantize_container(&src, &builtin::scheme(scheme)?, None)?.write(&qpath)?;
+    }
+    Ok(qpath)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let tag = args.get(1).cloned().unwrap_or_else(|| "r1".to_string());
+    let hlo = PathBuf::from("artifacts/hlo");
+    let ckpt_dir = PathBuf::from("artifacts/ckpt");
+    if !ckpt_dir.join(format!("{tag}.f32.dsq")).exists() {
+        eprintln!("checkpoint artifacts/ckpt/{tag}.f32.dsq missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("# serve_bench: {n_requests} requests per scheme, checkpoint {tag}\n");
+    for scheme in ["f32", "q4_k_m", "dq3_k_m", "q3_k_m"] {
+        let ckpt = ensure_quantized(&ckpt_dir, &tag, scheme)?;
+        let t_load = std::time::Instant::now();
+        let engine = Engine::load(&hlo, &ckpt)?;
+        let load_s = t_load.elapsed().as_secs_f64();
+        let mut coord = Coordinator::new(engine);
+        for i in 0..n_requests as u64 {
+            let suite = &suites::SUITES[(i as usize) % suites::SUITES.len()];
+            let q = tasks::eval_question(suite, i);
+            coord.submit(Request {
+                id: i,
+                prompt: q.prompt,
+                params: SamplingParams::paper(),
+                seed: i.wrapping_mul(0x9E37),
+            })?;
+        }
+        let t0 = std::time::Instant::now();
+        let responses = coord.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let d = coord.metrics.decode_summary();
+        let p = coord.metrics.prefill_summary();
+        println!(
+            "scheme {:<10} load+compile {:>5.1}s | prefill med {:>6.1} ms | decode med {:>6.1} ms | {:>6.1} tok/s | {:>5.2} req/s | {} reqs in {:.2}s",
+            scheme,
+            load_s,
+            p.median,
+            d.median,
+            coord.metrics.tokens_per_sec(),
+            responses.len() as f64 / wall,
+            responses.len(),
+            wall,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts.
+
+For every (model, scheme) variant the paper's tables need, this emits:
+
+- ``artifacts/hlo/{model}_{scheme}_prefill.hlo.txt``
+- ``artifacts/hlo/{model}_{scheme}_decode.hlo.txt``
+- matching ``.manifest.json`` files describing the exact input/output
+  order, shapes, dtypes, and per-weight quant formats, which the Rust
+  runtime (`rust/src/runtime/`) uses to marshal buffers.
+
+HLO **text** (not serialized protos) is the interchange format — the
+image's xla_extension 0.5.1 rejects jax≥0.5 64-bit-id protos; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Weights are *runtime inputs*: quantized tensors enter as packed uint8
+``[rows, row_bytes]`` buffers streamed straight from the `.dsq`
+container — Python never touches the request path.
+
+Usage: ``python -m compile.aot --out ../artifacts/hlo [--only tiny-moe_f32]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, quants, schemes, tasks
+
+BATCH = 16
+PROMPT_LEN = tasks.MAX_PROMPT  # 16
+MAX_CTX = tasks.SEQ_LEN  # 24
+
+# (model, scheme) variants required by Tables 2-5.
+VARIANTS: list[tuple[str, str]] = [
+    *[("tiny-moe", s) for s in
+      ["f32", "q4_k_m", "q3_k_m", "dq3_k_m", "q2_k_l", "ud_q2_k_xl", "q4_k", "q3_k"]],
+    *[("tiny-dense", s) for s in ["f32", "q8_0", "q4_k_m", "q3_k_m"]],
+]
+
+
+def weight_specs(cfg: model.Config, scheme_name: str):
+    """Per-weight (name, class, fmt, logical shape, buffer shape/dtype)."""
+    scheme = schemes.load_scheme(scheme_name)
+    specs = []
+    for name, cls, layer, shape in model.census(cfg):
+        row_len = shape[-1]
+        n_params = 1
+        for d in shape:
+            n_params *= d
+        fmt = schemes.assign(scheme, cls, layer, row_len, n_params, cfg)
+        if fmt == "f32":
+            buf_shape, dtype = tuple(shape), "f32"
+        else:
+            rows = n_params // row_len
+            buf_shape, dtype = (rows, quants.row_bytes(fmt, row_len)), "u8"
+        specs.append(dict(name=name, cls=cls, layer=layer, fmt=fmt,
+                          shape=tuple(shape), buf_shape=buf_shape, dtype=dtype))
+    return specs
+
+
+def _abstract(spec):
+    dt = {"f32": jnp.float32, "u8": jnp.uint8, "i32": jnp.int32}[spec["dtype"]]
+    return jax.ShapeDtypeStruct(spec["buf_shape"], dt)
+
+
+def _weights_from_args(cfg, specs, args):
+    weights = {}
+    for spec, arr in zip(specs, args):
+        weights[spec["name"]] = model.WeightTensor(spec["fmt"], arr, spec["shape"])
+    return weights
+
+
+def build_fns(cfg: model.Config, scheme_name: str):
+    specs = weight_specs(cfg, scheme_name)
+
+    def prefill(tokens, lengths, *wargs):
+        weights = _weights_from_args(cfg, specs, wargs)
+        logits, cache = model.forward_prefill(cfg, weights, tokens, lengths, MAX_CTX)
+        if cfg.kind == "mla_moe":
+            return (logits, cache)
+        return (logits, cache[0], cache[1])
+
+    def decode(token, pos, *rest):
+        if cfg.kind == "mla_moe":
+            cache = rest[0]
+            wargs = rest[1:]
+        else:
+            cache = (rest[0], rest[1])
+            wargs = rest[2:]
+        weights = _weights_from_args(cfg, specs, wargs)
+        logits, out_cache = model.forward_decode(cfg, weights, token, pos, cache)
+        if cfg.kind == "mla_moe":
+            return (logits, out_cache)
+        return (logits, out_cache[0], out_cache[1])
+
+    return specs, prefill, decode
+
+
+def cache_specs(cfg: model.Config):
+    if cfg.kind == "mla_moe":
+        return [dict(role="cache_kv",
+                     buf_shape=(cfg.n_layers, BATCH, MAX_CTX, cfg.kv_dim()),
+                     dtype="f32")]
+    kd = cfg.n_kv_heads * cfg.head_dim
+    return [
+        dict(role="cache_k", buf_shape=(cfg.n_layers, BATCH, MAX_CTX, kd), dtype="f32"),
+        dict(role="cache_v", buf_shape=(cfg.n_layers, BATCH, MAX_CTX, kd), dtype="f32"),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(model_name: str, scheme_name: str, outdir: Path):
+    cfg = model.Config.load(model_name)
+    specs, prefill, decode = build_fns(cfg, scheme_name)
+    w_abs = [_abstract(s) for s in specs]
+    caches = cache_specs(cfg)
+    c_abs = [jax.ShapeDtypeStruct(c["buf_shape"], jnp.float32) for c in caches]
+
+    for phase in ("prefill", "decode"):
+        t0 = time.time()
+        if phase == "prefill":
+            args = [
+                jax.ShapeDtypeStruct((BATCH, PROMPT_LEN), jnp.int32),
+                jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+                *w_abs,
+            ]
+            lowered = jax.jit(prefill).lower(*args)
+            inputs = (
+                [dict(role="tokens", buf_shape=(BATCH, PROMPT_LEN), dtype="i32"),
+                 dict(role="lengths", buf_shape=(BATCH,), dtype="i32")]
+                + [dict(role="weight", name=s["name"], format=s["fmt"],
+                        buf_shape=s["buf_shape"], dtype=s["dtype"]) for s in specs]
+            )
+        else:
+            args = [
+                jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+                jax.ShapeDtypeStruct((BATCH,), jnp.int32),
+                *c_abs,
+                *w_abs,
+            ]
+            lowered = jax.jit(decode).lower(*args)
+            inputs = (
+                [dict(role="token", buf_shape=(BATCH,), dtype="i32"),
+                 dict(role="pos", buf_shape=(BATCH,), dtype="i32")]
+                + caches
+                + [dict(role="weight", name=s["name"], format=s["fmt"],
+                        buf_shape=s["buf_shape"], dtype=s["dtype"]) for s in specs]
+            )
+        outputs = [dict(role="logits", buf_shape=(BATCH, cfg.vocab_size), dtype="f32")] + caches
+
+        stem = f"{model_name}_{scheme_name}_{phase}"
+        text = to_hlo_text(lowered)
+        (outdir / f"{stem}.hlo.txt").write_text(text)
+        manifest = dict(
+            model=cfg.to_dict(), scheme=scheme_name, phase=phase,
+            batch=BATCH, prompt_len=PROMPT_LEN, max_ctx=MAX_CTX,
+            vocab=cfg.vocab_size,
+            inputs=[_jsonable(i) for i in inputs],
+            outputs=[_jsonable(o) for o in outputs],
+        )
+        (outdir / f"{stem}.manifest.json").write_text(json.dumps(manifest, indent=1))
+        print(f"[aot] {stem}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s",
+              flush=True)
+
+
+def _jsonable(d):
+    d = dict(d)
+    d["buf_shape"] = list(d["buf_shape"])
+    return d
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/hlo")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated '{model}_{scheme}' stems to build")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    for model_name, scheme_name in VARIANTS:
+        stem = f"{model_name}_{scheme_name}"
+        if only is not None and stem not in only:
+            continue
+        lower_variant(model_name, scheme_name, outdir)
+
+
+if __name__ == "__main__":
+    main()

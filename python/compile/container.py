@@ -1,0 +1,157 @@
+"""Python reader/writer for the `.dsq` container (mirror of
+`rust/src/container/`). train.py writes f32 checkpoints with this; the
+AOT pipeline and tests read both f32 and Rust-quantized containers."""
+
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import numpy as np
+
+from . import quants
+
+MAGIC = b"DSQ1"
+DATA_ALIGN = 4096
+TENSOR_ALIGN = 64
+
+
+@dataclass
+class Entry:
+    name: str
+    cls: str
+    layer: int | None
+    shape: tuple[int, ...]
+    fmt: str
+    offset: int
+    nbytes: int
+
+    @property
+    def n_elems(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclass
+class Container:
+    model: dict
+    scheme: str
+    meta: dict
+    entries: list[Entry]
+    data: bytes
+
+    @classmethod
+    def open(cls, path: str | Path) -> "Container":
+        raw = Path(path).read_bytes()
+        if raw[:4] != MAGIC:
+            raise ValueError(f"{path}: not a DSQ1 container")
+        (hlen,) = struct.unpack("<I", raw[4:8])
+        header = json.loads(raw[8 : 8 + hlen].decode())
+        if header["version"] != 1:
+            raise ValueError(f"unsupported version {header['version']}")
+        data_start = -(-(8 + hlen) // DATA_ALIGN) * DATA_ALIGN
+        entries = []
+        for t in header["tensors"]:
+            e = Entry(
+                name=t["name"],
+                cls=t["class"],
+                layer=t["layer"],
+                shape=tuple(t["shape"]),
+                fmt=t["format"],
+                offset=t["offset"],
+                nbytes=t["nbytes"],
+            )
+            expect = quants.row_bytes(e.fmt, e.n_elems)
+            if expect != e.nbytes:
+                raise ValueError(f"{e.name}: nbytes {e.nbytes} != {expect}")
+            entries.append(e)
+        return cls(
+            model=header["model"],
+            scheme=header["scheme"],
+            meta=header.get("meta", {}),
+            entries=entries,
+            data=raw[data_start:],
+        )
+
+    def entry(self, name: str) -> Entry:
+        for e in self.entries:
+            if e.name == name:
+                return e
+        raise KeyError(name)
+
+    def raw(self, e: Entry) -> np.ndarray:
+        return np.frombuffer(self.data, np.uint8, e.nbytes, e.offset)
+
+    def packed(self, e: Entry) -> np.ndarray:
+        """Packed bytes reshaped to [rows, row_bytes] (kernel layout).
+
+        Expert tensors [E, N, K] flatten to [E·N, row_bytes].
+        """
+        rows = e.n_elems // e.shape[-1]
+        return self.raw(e).reshape(rows, -1).copy()
+
+    def dequantize(self, e: Entry) -> np.ndarray:
+        return quants.dequantize(e.fmt, self.raw(e), e.n_elems).reshape(e.shape)
+
+
+@dataclass
+class Writer:
+    model: dict
+    scheme: str
+    meta: dict = field(default_factory=dict)
+    entries: list[Entry] = field(default_factory=list)
+    chunks: list[bytes] = field(default_factory=list)
+    size: int = 0
+
+    def add(self, name: str, cls: str, layer, array: np.ndarray, fmt: str = "f32"):
+        """Add a tensor. For f32 the array is stored verbatim."""
+        if fmt != "f32":
+            raise ValueError("python writer only emits f32 checkpoints")
+        arr = np.ascontiguousarray(array, dtype=np.float32)
+        payload = arr.tobytes()
+        aligned = -(-self.size // TENSOR_ALIGN) * TENSOR_ALIGN
+        if aligned > self.size:
+            self.chunks.append(b"\0" * (aligned - self.size))
+            self.size = aligned
+        self.entries.append(
+            Entry(name, cls, layer, tuple(arr.shape), fmt, self.size, len(payload))
+        )
+        self.chunks.append(payload)
+        self.size += len(payload)
+
+    def to_bytes(self) -> bytes:
+        tensors = [
+            {
+                "name": e.name,
+                "class": e.cls,
+                "layer": e.layer,
+                "shape": list(e.shape),
+                "format": e.fmt,
+                "offset": e.offset,
+                "nbytes": e.nbytes,
+            }
+            for e in self.entries
+        ]
+        header = json.dumps(
+            {
+                "version": 1,
+                "model": self.model,
+                "scheme": self.scheme,
+                "meta": self.meta,
+                "tensors": tensors,
+            },
+            separators=(",", ":"),
+        ).encode()
+        data_start = -(-(8 + len(header)) // DATA_ALIGN) * DATA_ALIGN
+        out = bytearray()
+        out += MAGIC
+        out += struct.pack("<I", len(header))
+        out += header
+        out += b"\0" * (data_start - len(out))
+        for c in self.chunks:
+            out += c
+        return bytes(out)
+
+    def write(self, path: str | Path):
+        Path(path).write_bytes(self.to_bytes())

@@ -1,0 +1,5 @@
+"""L1 kernels: Pallas fused dequantize-matmul, with a pure-jnp oracle.
+
+`dequant_matmul.matmul_qT` is the hot-spot primitive every quantized
+linear layer in the L2 model lowers to.
+"""

@@ -1,0 +1,104 @@
+"""Pallas fused dequantize-matmul — the paper's compute hot-spot on TPU.
+
+## Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+
+llama.cpp's k-quant kernels unpack per-warp on CUDA. The TPU rethink
+tiles at the **VMEM boundary** instead: the grid walks output-row tiles
+of the quantized weight matrix; each step BlockSpec-streams one
+``[TILE_N, K_bytes]`` slab of *packed* super-blocks HBM→VMEM (3.4–8.5
+bits/weight — the whole point of the paper is that this is the memory
+traffic you pay), unpacks it with VPU integer ops, and feeds the f32
+``[TILE_N, K]`` tile plus the ``[B, K]`` activation tile to the MXU.
+
+VMEM budget per grid step (TILE_N=128, K=512, q4_k):
+  packed slab 128·288 B = 36 KiB, unpacked tile 128·512·4 = 256 KiB,
+  activations 16·512·4 = 32 KiB, accumulator 16·128·4 = 8 KiB
+  → well under the ~16 MiB VMEM of a modern TPU core.
+
+Kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpec structure is what a real TPU
+lowering would tile on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import quants
+
+# Output-row tile. Weight matrices in this project have N ∈ {256, ...};
+# the tile divides every N used by the models.
+TILE_N = 256
+
+
+def _kernel(x_ref, wq_ref, o_ref, *, fmt: str, k: int):
+    """One grid step: o[B, TILE_N] = x[B, K] @ dequant(wq[TILE_N, :]).T."""
+    x = x_ref[...]
+    wq = wq_ref[...]
+    tile_n = wq.shape[0]
+    bw = quants.BLOCK_WEIGHTS[fmt]
+    bb = quants.BLOCK_BYTES[fmt]
+    blocks = wq.reshape(tile_n * (k // bw), bb)
+    w = quants.UNPACKERS[fmt](jnp, blocks).reshape(tile_n, k)
+    o_ref[...] = jax.lax.dot_general(
+        x,
+        w,
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "n", "k"))
+def matmul_qT(x, wq, *, fmt: str, n: int, k: int):
+    """Fused ``x @ dequant(wq).T`` as a Pallas kernel.
+
+    Args:
+      x: f32 ``[b, k]`` activations (2-D; callers flatten leading dims).
+      wq: uint8 ``[n, k_bytes]`` packed weights (row-major blocks).
+      fmt: quant format name; ``"f32"``/``"f16"`` take a fast path with
+        no unpacking.
+      n, k: logical weight shape.
+
+    Returns:
+      f32 ``[b, n]``.
+    """
+    if fmt in ("f32", "f16"):
+        # No bit-twiddling needed; let XLA fuse the cast into the matmul.
+        from . import ref
+
+        w = ref.dequant_rows(wq, fmt, n, k)
+        return x @ w.T
+
+    b = x.shape[0]
+    k_bytes = k // quants.BLOCK_WEIGHTS[fmt] * quants.BLOCK_BYTES[fmt]
+    assert wq.shape == (n, k_bytes), (wq.shape, (n, k_bytes))
+    # Largest divisor of n within the VMEM tile budget (output dims like
+    # kv_lora+rope = 288 are not multiples of 128).
+    tile = next(d for d in range(min(TILE_N, n), 0, -1) if n % d == 0)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, fmt=fmt, k=k),
+        grid=(n // tile,),
+        in_specs=[
+            # Activations are resident for every grid step.
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            # One packed row-tile of the weight matrix per step: this is
+            # the HBM→VMEM stream the paper's memory claims are about.
+            pl.BlockSpec((tile, k_bytes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, wq)
+
+
+def matmul_qT_nd(x, wq, *, fmt: str, n: int, k: int):
+    """As `matmul_qT` but accepting arbitrary leading dims on `x`."""
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, k)
+    out = matmul_qT(flat, wq, fmt=fmt, n=n, k=k)
+    return out.reshape(*lead, n)

@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+`dequant_rows` reconstructs a quantized weight matrix exactly (same
+block math as `rust/src/quant`); `matmul_qT_ref` is the reference for
+the fused kernel: ``x @ dequant(Wq).T``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import quants
+
+
+def dequant_rows(wq, fmt: str, n: int, k: int):
+    """Dequantize a packed weight matrix.
+
+    Args:
+      wq: uint8 array ``[n, k_bytes]`` — each row is row-major packed
+        blocks of the row's `k` weights.
+      fmt: quant format name (``"q4_k"`` ...) or ``"f32"``/``"f16"``.
+      n, k: logical matrix shape.
+
+    Returns:
+      f32 array ``[n, k]``.
+    """
+    if fmt == "f32":
+        return jnp.asarray(wq).view(jnp.float32).reshape(n, k)
+    if fmt == "f16":
+        return jnp.asarray(wq).view(jnp.float16).reshape(n, k).astype(jnp.float32)
+    bb = quants.BLOCK_BYTES[fmt]
+    bw = quants.BLOCK_WEIGHTS[fmt]
+    blocks = jnp.asarray(wq).reshape(n * (k // bw), bb)
+    w = quants.UNPACKERS[fmt](jnp, blocks)
+    return w.reshape(n, k)
+
+
+def matmul_qT_ref(x, wq, fmt: str, n: int, k: int):
+    """Reference for the fused kernel: ``x @ dequant(wq).T``.
+
+    Args:
+      x: f32 ``[..., k]`` activations.
+      wq: packed weights ``[n, k_bytes]``.
+    Returns:
+      f32 ``[..., n]``.
+    """
+    w = dequant_rows(wq, fmt, n, k)
+    return x @ w.T

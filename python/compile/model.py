@@ -1,0 +1,533 @@
+"""L2: the proxy models' forward pass in JAX.
+
+Two architectures, matching `rust/src/model/config.rs`:
+
+- **MLA + MoE** (`tiny-moe`): Multi-head Latent Attention with q/kv
+  LoRA compression and RoPE on the decoupled key part, plus a
+  DeepSeek-V3-style MoE FFN (shared expert + top-k routed experts,
+  computed densely — at this scale gathering is slower than masking).
+- **Dense GQA** (`tiny-dense`): standard Llama/Qwen-style block, the
+  distill proxy.
+
+Weights are a dict ``name → WeightTensor``; every linear goes through
+[`linear`], which dispatches to the Pallas fused dequant-matmul
+(`kernels.dequant_matmul.matmul_qT_nd`) when the tensor is packed, or a
+plain jnp matmul for f32 (the training path). Tensor names match the
+Rust census exactly.
+
+Entry points:
+
+- [`forward_train`]  — f32, full logits, teacher forcing (train.py).
+- [`forward_prefill`] — logits at the last real position + KV cache.
+- [`forward_decode`]  — one-token step updating the cache in place.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dequant_matmul
+
+MODELS_DIR = Path(__file__).resolve().parents[2] / "configs" / "models"
+
+
+@dataclass
+class Config:
+    """Mirror of rust ModelConfig (loaded from configs/models/*.json)."""
+
+    name: str
+    kind: str
+    vocab_size: int
+    hidden_size: int
+    n_layers: int
+    first_dense: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+    intermediate_size: int
+    moe_intermediate_size: int
+    n_routed_experts: int
+    n_shared_experts: int
+    n_active_experts: int
+
+    @classmethod
+    def load(cls, name: str) -> "Config":
+        with open(MODELS_DIR / f"{name}.json") as f:
+            return cls(**json.load(f))
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.kind == "mla_moe" and i >= self.first_dense
+
+    def kv_dim(self) -> int:
+        """Per-token cache width."""
+        if self.kind == "mla_moe":
+            return self.kv_lora_rank + self.qk_rope_head_dim
+        return 2 * self.n_kv_heads * self.head_dim
+
+
+@dataclass
+class WeightTensor:
+    """One model weight: f32 array, or packed quantized bytes."""
+
+    fmt: str  # "f32" or a quant format
+    data: object  # f32 [..., n, k] or uint8 [rows, row_bytes]
+    shape: tuple[int, ...]  # logical shape
+
+
+def linear(x, w: WeightTensor):
+    """``x @ W.T`` for a [n, k] weight (leading dims on x free)."""
+    n, k = w.shape[-2], w.shape[-1]
+    if w.fmt == "f32":
+        return x @ w.data.T
+    return dequant_matmul.matmul_qT_nd(x, w.data, fmt=w.fmt, n=n, k=k)
+
+
+def expert_linear(x, w: WeightTensor, e: int):
+    """Per-expert slice of an [E, n, k] stacked weight."""
+    _, n, k = w.shape
+    if w.fmt == "f32":
+        return x @ w.data[e].T
+    rows = w.data.reshape(w.shape[0], n, -1)
+    return dequant_matmul.matmul_qT_nd(x, rows[e], fmt=w.fmt, n=n, k=k)
+
+
+def stacked_linear(x, w: WeightTensor):
+    """All experts of an [E, n, k] weight as one ``[..., E·n]`` matmul.
+
+    The packed rows of every expert are already contiguous, so this is a
+    pure reshape — one fused kernel call instead of E (the dominant
+    XLA-graph-size / compile-time win; see DESIGN.md §Perf).
+    """
+    e, n, k = w.shape
+    if w.fmt == "f32":
+        return x @ w.data.reshape(e * n, k).T
+    return dequant_matmul.matmul_qT_nd(
+        x, w.data.reshape(e * n, -1), fmt=w.fmt, n=e * n, k=k
+    )
+
+
+def concat_k_linear(x, w: WeightTensor):
+    """[E, n, k] expert weights fused along the *contraction* dim:
+    ``y[.., n] = Σ_e x[.., e·k:(e+1)·k] @ W_e.T``.
+
+    Because k-quant super-blocks never straddle a row (k % 256 == 0),
+    the byte-transpose [E, n, kb] → [n, E·kb] reinterprets each output
+    row as E consecutive runs of valid super-blocks — the whole MoE
+    down-projection collapses into a single fused dequant-matmul.
+    """
+    e, n, k = w.shape
+    if w.fmt == "f32":
+        wt = w.data.transpose(1, 0, 2).reshape(n, e * k)
+        return x @ wt.T
+    kb = w.data.shape[-1] if w.data.ndim == 2 else None
+    packed = w.data.reshape(e, n, -1).transpose(1, 0, 2).reshape(n, -1)
+    del kb
+    return dequant_matmul.matmul_qT_nd(x, packed, fmt=w.fmt, n=n, k=e * k)
+
+
+def rms_norm(x, weight, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def rope(x, positions, base=10000.0):
+    """Rotary embedding over the last dim. x: [..., T, D], positions [..., T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def _w(weights, name):
+    return weights[f"{name}.weight"]
+
+
+def _blk(weights, i, stem):
+    return weights[f"blk.{i}.{stem}.weight"]
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def mla_attention(cfg: Config, weights, i, x, positions, cache_kv, mask):
+    """Multi-head Latent Attention.
+
+    Args:
+      x: [B, T, H] normed input.
+      positions: [B, T] absolute positions of x.
+      cache_kv: [B, C, kv_lora+rope] — compressed KV cache covering all
+        positions (already containing this chunk; see callers).
+      mask: [B, T, C] additive attention mask.
+    Returns: [B, T, H] attention output.
+    """
+    b, t, _ = x.shape
+    c = cache_kv.shape[1]
+    h, nope, rp, vd = cfg.n_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = linear(x, _blk(weights, i, "attn_q_a"))
+    q = rms_norm(q, _blk(weights, i, "attn_q_a_norm").data)
+    q = linear(q, _blk(weights, i, "attn_q_b")).reshape(b, t, h, nope + rp)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope.transpose(0, 2, 1, 3), positions[:, None, :]).transpose(0, 2, 1, 3)
+
+    c_kv = cache_kv[..., : cfg.kv_lora_rank]  # [B, C, kv_lora] (normed)
+    k_rope = cache_kv[..., cfg.kv_lora_rank :]  # [B, C, rope] (roped)
+
+    kv = linear(c_kv, _blk(weights, i, "attn_kv_b")).reshape(b, c, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    # Scores: decoupled nope/rope parts (k_rope is shared across heads).
+    scale = 1.0 / np.sqrt(nope + rp)
+    s_nope = jnp.einsum("bthd,bchd->bhtc", q_nope, k_nope)
+    s_rope = jnp.einsum("bthd,bcd->bhtc", q_rope, k_rope)
+    scores = (s_nope + s_rope) * scale + mask[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhtc,bchd->bthd", probs, v).reshape(b, t, h * vd)
+    return linear(out, _blk(weights, i, "attn_output"))
+
+
+def mla_compress(cfg: Config, weights, i, x, positions):
+    """Produce the cacheable compressed KV for a chunk: [B, T, kv_lora+rope]."""
+    ckv = linear(x, _blk(weights, i, "attn_kv_a_mqa"))
+    c_kv = rms_norm(ckv[..., : cfg.kv_lora_rank], _blk(weights, i, "attn_kv_a_norm").data)
+    k_rope = rope(ckv[..., cfg.kv_lora_rank :], positions)
+    return jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def gqa_attention(cfg: Config, weights, i, x, positions, cache_k, cache_v, mask):
+    """Standard GQA attention; caches hold full keys/values [B, C, KVH·D]."""
+    b, t, _ = x.shape
+    c = cache_k.shape[1]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // kvh
+
+    q = linear(x, _blk(weights, i, "attn_q")).reshape(b, t, h, hd)
+    q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :]).transpose(0, 2, 1, 3)
+    k = cache_k.reshape(b, c, kvh, hd)
+    v = cache_v.reshape(b, c, kvh, hd)
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bthd,bchd->bhtc", q, k) * scale + mask[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhtc,bchd->bthd", probs, v).reshape(b, t, h * hd)
+    return linear(out, _blk(weights, i, "attn_output"))
+
+
+def gqa_compress(cfg: Config, weights, i, x, positions):
+    """Cacheable K (roped) and V for a chunk: each [B, T, KVH·D]."""
+    b, t, _ = x.shape
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    k = linear(x, _blk(weights, i, "attn_k")).reshape(b, t, kvh, hd)
+    k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :]).transpose(0, 2, 1, 3)
+    v = linear(x, _blk(weights, i, "attn_v"))
+    return k.reshape(b, t, kvh * hd), v
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn(cfg: Config, weights, i, x):
+    gate = linear(x, _blk(weights, i, "ffn_gate"))
+    up = linear(x, _blk(weights, i, "ffn_up"))
+    return linear(swiglu(gate, up), _blk(weights, i, "ffn_down"))
+
+
+def moe_ffn(cfg: Config, weights, i, x):
+    """DeepSeek-style MoE: shared expert + top-k routed (dense compute)."""
+    e, k_act = cfg.n_routed_experts, cfg.n_active_experts
+    router = _blk(weights, i, "ffn_gate_inp")  # f32 [E, H]
+    logits = x @ router.data.T  # [B, T, E]
+    # Top-k via iterated argmax: xla_extension 0.5.1's HLO text parser
+    # predates the TopK op attribute jax's lax.top_k lowers to, and k is
+    # tiny (2) anyway.
+    masked = logits
+    onehots = []
+    topvs = []
+    for _ in range(k_act):
+        idx = jnp.argmax(masked, axis=-1)
+        oh = jax.nn.one_hot(idx, e, dtype=x.dtype)  # [B, T, E]
+        topvs.append(jnp.sum(masked * oh, axis=-1))
+        masked = masked - oh * 1e9
+        onehots.append(oh)
+    topv = jnp.stack(topvs, axis=-1)  # [B, T, k]
+    gates = jax.nn.softmax(topv, axis=-1)  # normalized over the top-k
+    onehot = jnp.stack(onehots, axis=-2)  # [B, T, k, E]
+    gate_full = jnp.einsum("btk,btke->bte", gates, onehot)
+
+    # All-expert compute in three fused kernel calls: stacked gate/up
+    # over the output dim, down fused over the contraction dim with the
+    # routing gates folded into the activations (exact: the down
+    # projection is linear, so g_e·down_e(h_e) = down_e(g_e·h_e)).
+    m = cfg.moe_intermediate_size
+    g = stacked_linear(x, _blk(weights, i, "ffn_gate_exps"))  # [B,T,E·M]
+    u = stacked_linear(x, _blk(weights, i, "ffn_up_exps"))
+    h = swiglu(g, u) * jnp.repeat(gate_full, m, axis=-1)
+    out = concat_k_linear(h, _blk(weights, i, "ffn_down_exps"))
+
+    sg = linear(x, _blk(weights, i, "ffn_gate_shexp"))
+    su = linear(x, _blk(weights, i, "ffn_up_shexp"))
+    out = out + linear(swiglu(sg, su), _blk(weights, i, "ffn_down_shexp"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks and full passes
+# ---------------------------------------------------------------------------
+
+
+def block(cfg: Config, weights, i, x, positions, caches, mask):
+    """One transformer block over chunk x given full caches."""
+    h = rms_norm(x, _blk(weights, i, "attn_norm").data)
+    if cfg.kind == "mla_moe":
+        attn = mla_attention(cfg, weights, i, h, positions, caches[i], mask)
+    else:
+        ck, cv = caches[i]
+        attn = gqa_attention(cfg, weights, i, h, positions, ck, cv, mask)
+    x = x + attn
+    h = rms_norm(x, _blk(weights, i, "ffn_norm").data)
+    ffn = moe_ffn(cfg, weights, i, h) if cfg.is_moe_layer(i) else dense_ffn(cfg, weights, i, h)
+    return x + ffn
+
+
+def _compress_chunk(cfg, weights, i, x_normed, positions):
+    if cfg.kind == "mla_moe":
+        return mla_compress(cfg, weights, i, x_normed, positions)
+    return gqa_compress(cfg, weights, i, x_normed, positions)
+
+
+def embed(cfg: Config, weights, tokens):
+    w = _w(weights, "token_embd")
+    if w.fmt == "f32":
+        table = w.data
+    else:
+        from .kernels.ref import dequant_rows
+
+        table = dequant_rows(w.data, w.fmt, cfg.vocab_size, cfg.hidden_size)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(cfg: Config, weights, x):
+    x = rms_norm(x, _w(weights, "output_norm").data)
+    return linear(x, _w(weights, "output"))
+
+
+def forward_train(cfg: Config, weights, tokens):
+    """Teacher-forced full-sequence logits (f32 path). tokens: [B, T]."""
+    b, t = tokens.shape
+    x = embed(cfg, weights, tokens)
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    # Causal mask (PAD handling is done by the loss mask in train.py).
+    causal = jnp.where(
+        jnp.arange(t)[:, None] >= jnp.arange(t)[None, :], 0.0, -1e9
+    ).astype(x.dtype)
+    mask = jnp.broadcast_to(causal, (b, t, t))
+    caches = {}
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, _blk(weights, i, "attn_norm").data)
+        caches[i] = _compress_chunk(cfg, weights, i, h, positions)
+        x = block(cfg, weights, i, x, positions, caches, mask)
+    return unembed(cfg, weights, x)
+
+
+def forward_prefill(cfg: Config, weights, tokens, lengths, max_ctx: int):
+    """Prefill: process padded prompts, return last-token logits + cache.
+
+    Args:
+      tokens: [B, T] right-padded prompts.
+      lengths: [B] true prompt lengths (≥1).
+      max_ctx: cache capacity C (≥ T).
+    Returns:
+      logits [B, V] at each sequence's last real token, cache.
+      Cache: MLA → [L, B, C, kv_dim]; GQA → ([L,B,C,kd], [L,B,C,kd]).
+    """
+    b, t = tokens.shape
+    x = embed(cfg, weights, tokens)
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    valid = positions < lengths[:, None]  # [B, T]
+    causal = jnp.arange(t)[:, None] >= jnp.arange(t)[None, :]
+    mask = jnp.where(causal[None] & valid[:, None, :], 0.0, -1e9).astype(x.dtype)
+
+    if cfg.kind == "mla_moe":
+        cache = jnp.zeros((cfg.n_layers, b, max_ctx, cfg.kv_dim()), jnp.float32)
+        caches = {}
+        for i in range(cfg.n_layers):
+            h = rms_norm(x, _blk(weights, i, "attn_norm").data)
+            ckv = _compress_chunk(cfg, weights, i, h, positions)  # [B,T,D]
+            # Zero padded positions so they never leak via the cache.
+            ckv = jnp.where(valid[..., None], ckv, 0.0)
+            cache = cache.at[i, :, :t, :].set(ckv)
+            caches[i] = ckv
+            x = block(cfg, weights, i, x, positions, caches, mask)
+        out_cache = cache
+    else:
+        kd = cfg.n_kv_heads * cfg.head_dim
+        cache_k = jnp.zeros((cfg.n_layers, b, max_ctx, kd), jnp.float32)
+        cache_v = jnp.zeros((cfg.n_layers, b, max_ctx, kd), jnp.float32)
+        caches = {}
+        for i in range(cfg.n_layers):
+            h = rms_norm(x, _blk(weights, i, "attn_norm").data)
+            k, v = _compress_chunk(cfg, weights, i, h, positions)
+            k = jnp.where(valid[..., None], k, 0.0)
+            v = jnp.where(valid[..., None], v, 0.0)
+            cache_k = cache_k.at[i, :, :t, :].set(k)
+            cache_v = cache_v.at[i, :, :t, :].set(v)
+            caches[i] = (k, v)
+            x = block(cfg, weights, i, x, positions, caches, mask)
+        out_cache = (cache_k, cache_v)
+
+    logits = unembed(cfg, weights, x)  # [B, T, V]
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+    return last, out_cache
+
+
+def forward_decode(cfg: Config, weights, token, pos, cache):
+    """One decode step.
+
+    Args:
+      token: [B] current token ids.
+      pos: [B] positions to write (== current sequence length).
+      cache: as returned by forward_prefill.
+    Returns: logits [B, V], updated cache.
+    """
+    b = token.shape[0]
+    if cfg.kind == "mla_moe":
+        max_ctx = cache.shape[2]
+    else:
+        max_ctx = cache[0].shape[2]
+    x = embed(cfg, weights, token[:, None])  # [B, 1, H]
+    positions = pos[:, None]  # [B, 1]
+    # Attend to everything written so far plus the current token.
+    ctx_pos = jnp.arange(max_ctx)[None, :]  # [1, C]
+    attend = ctx_pos <= pos[:, None]  # [B, C]
+    mask = jnp.where(attend, 0.0, -1e9).astype(x.dtype)[:, None, :]  # [B,1,C]
+
+    bidx = jnp.arange(b)
+    if cfg.kind == "mla_moe":
+        caches = {}
+        for i in range(cfg.n_layers):
+            h = rms_norm(x, _blk(weights, i, "attn_norm").data)
+            ckv = _compress_chunk(cfg, weights, i, h, positions)  # [B,1,D]
+            cache = cache.at[i, bidx, pos, :].set(ckv[:, 0, :])
+            caches[i] = cache[i]
+            x = block(cfg, weights, i, x, positions, caches, mask)
+        out_cache = cache
+    else:
+        cache_k, cache_v = cache
+        caches = {}
+        for i in range(cfg.n_layers):
+            h = rms_norm(x, _blk(weights, i, "attn_norm").data)
+            k, v = _compress_chunk(cfg, weights, i, h, positions)
+            cache_k = cache_k.at[i, bidx, pos, :].set(k[:, 0, :])
+            cache_v = cache_v.at[i, bidx, pos, :].set(v[:, 0, :])
+            caches[i] = (cache_k[i], cache_v[i])
+            x = block(cfg, weights, i, x, positions, caches, mask)
+        out_cache = (cache_k, cache_v)
+
+    logits = unembed(cfg, weights, x)[:, 0, :]
+    return logits, out_cache
+
+
+# ---------------------------------------------------------------------------
+# Initialization (training path)
+# ---------------------------------------------------------------------------
+
+
+def census(cfg: Config):
+    """(name, class, layer, shape) for every weight — mirrors Rust census."""
+    out = [("token_embd.weight", "token_embd", None, (cfg.vocab_size, cfg.hidden_size))]
+    for i in range(cfg.n_layers):
+        blk_ = lambda stem, cls, shape: out.append(
+            (f"blk.{i}.{stem}.weight", cls, i, shape)
+        )
+        blk_("attn_norm", "norm", (cfg.hidden_size,))
+        if cfg.kind == "mla_moe":
+            qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            blk_("attn_q_a", "attn_q_a", (cfg.q_lora_rank, cfg.hidden_size))
+            blk_("attn_q_a_norm", "norm", (cfg.q_lora_rank,))
+            blk_("attn_q_b", "attn_q_b", (cfg.n_heads * qk, cfg.q_lora_rank))
+            blk_(
+                "attn_kv_a_mqa",
+                "attn_kv_a_mqa",
+                (cfg.kv_lora_rank + cfg.qk_rope_head_dim, cfg.hidden_size),
+            )
+            blk_("attn_kv_a_norm", "norm", (cfg.kv_lora_rank,))
+            blk_(
+                "attn_kv_b",
+                "attn_kv_b",
+                (cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), cfg.kv_lora_rank),
+            )
+            blk_(
+                "attn_output",
+                "attn_output",
+                (cfg.hidden_size, cfg.n_heads * cfg.v_head_dim),
+            )
+        else:
+            blk_("attn_q", "attn_q", (cfg.n_heads * cfg.head_dim, cfg.hidden_size))
+            blk_("attn_k", "attn_k", (cfg.n_kv_heads * cfg.head_dim, cfg.hidden_size))
+            blk_("attn_v", "attn_v", (cfg.n_kv_heads * cfg.head_dim, cfg.hidden_size))
+            blk_(
+                "attn_output",
+                "attn_output",
+                (cfg.hidden_size, cfg.n_heads * cfg.head_dim),
+            )
+        blk_("ffn_norm", "norm", (cfg.hidden_size,))
+        if cfg.is_moe_layer(i):
+            e, m, h = cfg.n_routed_experts, cfg.moe_intermediate_size, cfg.hidden_size
+            sh = cfg.n_shared_experts * m
+            blk_("ffn_gate_inp", "ffn_gate_inp", (e, h))
+            blk_("ffn_gate_exps", "ffn_gate_exps", (e, m, h))
+            blk_("ffn_up_exps", "ffn_up_exps", (e, m, h))
+            blk_("ffn_down_exps", "ffn_down_exps", (e, h, m))
+            blk_("ffn_gate_shexp", "ffn_gate_shexp", (sh, h))
+            blk_("ffn_up_shexp", "ffn_up_shexp", (sh, h))
+            blk_("ffn_down_shexp", "ffn_down_shexp", (h, sh))
+        else:
+            blk_("ffn_gate", "ffn_gate", (cfg.intermediate_size, cfg.hidden_size))
+            blk_("ffn_up", "ffn_up", (cfg.intermediate_size, cfg.hidden_size))
+            blk_("ffn_down", "ffn_down", (cfg.hidden_size, cfg.intermediate_size))
+    out.append(("output_norm.weight", "norm", None, (cfg.hidden_size,)))
+    out.append(("output.weight", "output", None, (cfg.vocab_size, cfg.hidden_size)))
+    return out
+
+
+def init_weights(cfg: Config, seed: int) -> dict:
+    """f32 initialization (truncated-normal-ish, scaled by fan-in)."""
+    rng = np.random.default_rng(seed)
+    weights = {}
+    for name, cls, _layer, shape in census(cfg):
+        if cls == "norm":
+            data = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-1]
+            data = rng.normal(0.0, fan_in**-0.5, shape).astype(np.float32)
+        weights[name] = WeightTensor("f32", jnp.asarray(data), tuple(shape))
+    return weights

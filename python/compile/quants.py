@@ -1,0 +1,202 @@
+"""k-quant block *dequantization*, mirroring `rust/src/quant/` bit-for-bit.
+
+The Rust side owns quantization (packing); this module only unpacks, and
+is written generically over an array module ``xp`` (numpy or jax.numpy)
+so the same code serves:
+
+- the pure-numpy reference path (container loading, oracles), and
+- the Pallas/JAX kernels (L1), which call these functions on tiles.
+
+Layouts (identical byte sizes to llama.cpp; flat element order — see the
+Rust module docs for the authoritative description):
+
+==========  =====  ===========  =========================================
+format      block  bytes/block  structure
+==========  =====  ===========  =========================================
+``q8_0``       32           34  f16 d | 32×i8
+``q6_k``      256          210  ql128 | qh64 | 16×i8 sc | f16 d
+``q5_k``      256          176  d | dmin | sc+m 12B | qh32 | qs128
+``q4_k``      256          144  d | dmin | sc+m 12B | qs128
+``q3_k``      256          110  sc 12B | hmask32 | qs64 | f16 d
+``q2_k``      256           84  16×(sc|m<<4) | qs64 | f16 d | f16 dmin
+==========  =====  ===========  =========================================
+
+Cross-language correctness is pinned by ``tests/test_quants.py`` against
+test vectors emitted by ``dsq testvec``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BLOCK_BYTES = {
+    "f32": 4,
+    "f16": 2,
+    "q8_0": 34,
+    "q6_k": 210,
+    "q5_k": 176,
+    "q4_k": 144,
+    "q3_k": 110,
+    "q2_k": 84,
+}
+BLOCK_WEIGHTS = {
+    "f32": 1,
+    "f16": 2 // 2,
+    "q8_0": 32,
+    "q6_k": 256,
+    "q5_k": 256,
+    "q4_k": 256,
+    "q3_k": 256,
+    "q2_k": 256,
+}
+FORMATS = list(BLOCK_BYTES)
+
+
+def bits_per_weight(fmt: str) -> float:
+    return BLOCK_BYTES[fmt] * 8.0 / BLOCK_WEIGHTS[fmt]
+
+
+def row_bytes(fmt: str, n: int) -> int:
+    bw = BLOCK_WEIGHTS[fmt]
+    if n % bw:
+        raise ValueError(f"{fmt}: {n} weights not a multiple of block {bw}")
+    return n // bw * BLOCK_BYTES[fmt]
+
+
+def _f16(xp, lo, hi):
+    """Decode IEEE half from two uint8 arrays (little endian)."""
+    bits = lo.astype(xp.uint16) | (hi.astype(xp.uint16) << 8)
+    if xp is np:
+        return bits.view(np.float16).astype(np.float32)
+    import jax
+
+    return jax.lax.bitcast_convert_type(bits, xp.float16).astype(xp.float32)
+
+
+def _nibbles(xp, b):
+    """[nb, K] uint8 → [nb, 2K] codes: element 2i = low nibble of b[i]."""
+    lo = b & 0x0F
+    hi = b >> 4
+    return xp.stack([lo, hi], axis=-1).reshape(b.shape[0], -1)
+
+
+def _crumbs(xp, b):
+    """[nb, K] uint8 → [nb, 4K] 2-bit codes, bits 2·(i&3)."""
+    parts = [(b >> (2 * k)) & 0x03 for k in range(4)]
+    return xp.stack(parts, axis=-1).reshape(b.shape[0], -1)
+
+
+def _bits(xp, b):
+    """[nb, K] uint8 → [nb, 8K] single bits, bit (i&7)."""
+    parts = [(b >> k) & 0x01 for k in range(8)]
+    return xp.stack(parts, axis=-1).reshape(b.shape[0], -1)
+
+
+def _rep(xp, v, sub):
+    """Repeat per-sub-block values across their `sub` elements."""
+    return xp.repeat(v, sub, axis=-1)
+
+
+def unpack_q8_0(xp, blocks):
+    """[nb, 34] uint8 → [nb, 32] f32."""
+    d = _f16(xp, blocks[:, 0], blocks[:, 1])[:, None]
+    q = blocks[:, 2:34].astype(xp.int8).astype(xp.float32)
+    return d * q
+
+
+def unpack_q6_k(xp, blocks):
+    """[nb, 210] uint8 → [nb, 256] f32."""
+    lo = _nibbles(xp, blocks[:, 0:128])
+    hi = _crumbs(xp, blocks[:, 128:192])
+    c = (lo | (hi << 4)).astype(xp.int32)
+    sc = blocks[:, 192:208].astype(xp.int8).astype(xp.float32)
+    d = _f16(xp, blocks[:, 208], blocks[:, 209])[:, None]
+    return d * _rep(xp, sc, 16) * (c - 32).astype(xp.float32)
+
+
+def _scale_min_6(xp, b12):
+    """Unpack 8 six-bit scales + 8 six-bit mins from [nb, 12] bytes."""
+    sc = b12[:, 0:8] & 0x3F
+    m_lo = b12[:, 0:8] >> 6  # 2 bits
+    hi_nib = _nibbles(xp, b12[:, 8:12])  # [nb, 8] 4-bit values
+    m = m_lo | (hi_nib << 2)
+    return sc.astype(xp.float32), m.astype(xp.float32)
+
+
+def unpack_q4_k(xp, blocks):
+    """[nb, 144] uint8 → [nb, 256] f32."""
+    d = _f16(xp, blocks[:, 0], blocks[:, 1])[:, None]
+    dmin = _f16(xp, blocks[:, 2], blocks[:, 3])[:, None]
+    sc, m = _scale_min_6(xp, blocks[:, 4:16])
+    c = _nibbles(xp, blocks[:, 16:144]).astype(xp.float32)
+    return d * _rep(xp, sc, 32) * c - dmin * _rep(xp, m, 32)
+
+
+def unpack_q5_k(xp, blocks):
+    """[nb, 176] uint8 → [nb, 256] f32."""
+    d = _f16(xp, blocks[:, 0], blocks[:, 1])[:, None]
+    dmin = _f16(xp, blocks[:, 2], blocks[:, 3])[:, None]
+    sc, m = _scale_min_6(xp, blocks[:, 4:16])
+    hi = _bits(xp, blocks[:, 16:48])
+    lo = _nibbles(xp, blocks[:, 48:176])
+    c = (lo | (hi << 4)).astype(xp.float32)
+    return d * _rep(xp, sc, 32) * c - dmin * _rep(xp, m, 32)
+
+
+def _scales_6x16(xp, b12):
+    """Unpack 16 six-bit scale codes from [nb, 12] bytes (q3_k)."""
+    lo = _nibbles(xp, b12[:, 0:8])  # [nb, 16]: j<8 low nibble, j>=8 high
+    # Flat nibble order is [b0.lo, b0.hi, b1.lo, ...] = [sc0, sc8, sc1, sc9, ...]
+    # Reorder to [sc0..sc7, sc8..sc15].
+    lo = lo.reshape(b12.shape[0], 8, 2).transpose(0, 2, 1).reshape(b12.shape[0], 16)
+    hi = _crumbs(xp, b12[:, 8:12])  # [nb, 16]: byte 8+k bits 2t → sc[4t+k]
+    # Flat crumb order is [b8.t0, b8.t1, b8.t2, b8.t3, b9.t0, ...] where
+    # b(8+k) crumb t is sc[4t+k]; reorder accordingly.
+    hi = hi.reshape(b12.shape[0], 4, 4).transpose(0, 2, 1).reshape(b12.shape[0], 16)
+    return (lo | (hi << 4)).astype(xp.float32)
+
+
+def unpack_q3_k(xp, blocks):
+    """[nb, 110] uint8 → [nb, 256] f32."""
+    sc = _scales_6x16(xp, blocks[:, 0:12]) - 32.0
+    hi = _bits(xp, blocks[:, 12:44])
+    lo = _crumbs(xp, blocks[:, 44:108])
+    c = (lo | (hi << 2)).astype(xp.float32)
+    d = _f16(xp, blocks[:, 108], blocks[:, 109])[:, None]
+    return d * _rep(xp, sc, 16) * (c - 4.0)
+
+
+def unpack_q2_k(xp, blocks):
+    """[nb, 84] uint8 → [nb, 256] f32."""
+    sc = (blocks[:, 0:16] & 0x0F).astype(xp.float32)
+    m = (blocks[:, 0:16] >> 4).astype(xp.float32)
+    c = _crumbs(xp, blocks[:, 16:80]).astype(xp.float32)
+    d = _f16(xp, blocks[:, 80], blocks[:, 81])[:, None]
+    dmin = _f16(xp, blocks[:, 82], blocks[:, 83])[:, None]
+    return d * _rep(xp, sc, 16) * c - dmin * _rep(xp, m, 16)
+
+
+UNPACKERS = {
+    "q8_0": unpack_q8_0,
+    "q6_k": unpack_q6_k,
+    "q5_k": unpack_q5_k,
+    "q4_k": unpack_q4_k,
+    "q3_k": unpack_q3_k,
+    "q2_k": unpack_q2_k,
+}
+
+
+def dequantize(fmt: str, raw: np.ndarray, n: int, xp=np):
+    """Dequantize `n` weights from packed bytes `raw` (1-D uint8)."""
+    if fmt == "f32":
+        if xp is np:
+            return raw.view(np.float32)[:n].copy()
+        raise ValueError("f32 passthrough is numpy-only at container level")
+    if fmt == "f16":
+        if xp is np:
+            return raw.view(np.float16)[:n].astype(np.float32)
+        raise ValueError("f16 passthrough is numpy-only at container level")
+    bb, bw = BLOCK_BYTES[fmt], BLOCK_WEIGHTS[fmt]
+    nb = n // bw
+    blocks = raw.reshape(nb, bb)
+    return UNPACKERS[fmt](xp, blocks).reshape(n)

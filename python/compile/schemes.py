@@ -1,0 +1,78 @@
+"""Python mirror of the Rust scheme engine (`rust/src/scheme/`).
+
+Reads the same ``configs/schemes/*.json`` files; `assign` reproduces
+`Scheme::assign` exactly (including llama.cpp's `use_more_bits` mix and
+the DQ3_K_M dynamic rule) so the AOT-compiled graphs expect precisely
+the per-tensor formats the Rust quantizer produces. Pinned by
+``tests/test_schemes.py`` golden assignments.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import quants
+
+SCHEMES_DIR = Path(__file__).resolve().parents[2] / "configs" / "schemes"
+
+SCHEME_NAMES = [
+    "f32",
+    "q8_0",
+    "q4_k_m",
+    "q4_k",
+    "q3_k_m",
+    "q3_k",
+    "dq3_k_m",
+    "q2_k_l",
+    "ud_q2_k_xl",
+]
+
+
+def load_scheme(name: str) -> dict:
+    with open(SCHEMES_DIR / f"{name}.json") as f:
+        s = json.load(f)
+    assert s["name"] == name
+    return s
+
+
+def use_more_bits(i_layer: int, n_layer: int) -> bool:
+    return (
+        i_layer < n_layer // 8
+        or i_layer >= 7 * n_layer // 8
+        or (i_layer - n_layer // 8) % 3 == 2
+    )
+
+
+def assign(scheme: dict, cls: str, layer, row_len: int, n_params: int, cfg) -> str:
+    """Format for a tensor of module class `cls` at `layer`.
+
+    `cfg` needs `.n_layers` and `.first_dense` (duck-typed; the model
+    config objects in model.py provide them).
+    """
+    if cls in ("norm", "ffn_gate_inp"):
+        return "f32"
+    rule = next((r for r in scheme["rules"] if r["module"] == cls), None)
+    if rule is None:
+        fmt = scheme["default"]
+    elif "format" in rule:
+        fmt = rule["format"]
+    elif "more_bits" in rule:
+        li = layer or 0
+        fmt = rule["more_bits"]["high" if use_more_bits(li, cfg.n_layers) else "low"]
+    elif "dynamic" in rule:
+        dy = rule["dynamic"]
+        li = layer or 0
+        moe_idx = max(0, li - cfg.first_dense)
+        if moe_idx < dy["first_moe"]:
+            fmt = dy["first_format"]
+        elif dy["period"] > 0 and li % dy["period"] == 0:
+            fmt = dy["period_format"]
+        else:
+            fmt = dy["default"]
+    else:
+        raise ValueError(f"bad rule for {cls}")
+    bw = quants.BLOCK_WEIGHTS[fmt]
+    if row_len % bw or n_params % bw:
+        return "f16"
+    return fmt

@@ -1,0 +1,275 @@
+"""Synthetic benchmark task generators — the proxy suites of DESIGN.md §7.
+
+This module is mirrored *exactly* by ``rust/src/eval/tasks.rs``: the same
+splitmix64 RNG, the same token vocabulary, the same renderings. The
+Python side generates training data (and the distillation corpus); the
+Rust side regenerates the identical evaluation questions. Golden tests
+on both sides pin the sequences.
+
+## Token vocabulary (512 ids)
+
+====== =============================
+0      PAD
+1      BOS
+2      SEP
+3      ANS    (generation starts after this)
+4      EOS
+5–14   digits 0–9
+15–18  choice letters A–D
+19–24  transform ops: SORT REV INC DEC MAX MIN
+25–26  arithmetic ops: ADD SUB
+64–191 entities (128; questions use 32 subjects)
+320–351 relations (32; knowledge domain d ∈ {1,2,3,4} owns 8)
+====== =============================
+
+## Task families
+
+- ``arith``       (MATH-500 proxy):   ``a ± b mod 100`` → 2 digits.
+- ``arith_chain`` (AIME proxy):       ``((a±b)±c)±d mod 100`` → 2 digits.
+- ``knowledge``   (GPQA/MMLU/CMMLU/C-Eval proxies): 4-way MC over a
+  deterministic relation KB; domains are disjoint relation spaces.
+- ``transform``   (MBPP/MBPP+ proxy): apply one op to 4–6 digits.
+- ``transform_hard`` (LiveCodeBench proxy): two composed ops.
+
+Answers always terminate with EOS. MBPP scores prefix-leniently; MBPP+
+requires exact-match including EOS (the "stricter tests" of the paper).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MASK64 = (1 << 64) - 1
+
+# --- token ids (mirror: rust/src/eval/tasks.rs) ---
+PAD, BOS, SEP, ANS, EOS = 0, 1, 2, 3, 4
+DIG0 = 5  # digits 0-9 → 5..14
+CH_A = 15  # choices A-D → 15..18
+OP_SORT, OP_REV, OP_INC, OP_DEC, OP_MAX, OP_MIN = 19, 20, 21, 22, 23, 24
+OP_ADD, OP_SUB = 25, 26
+ENT0, N_ENT = 64, 128
+N_SUBJ = 32
+REL0, RELS_PER_DOMAIN = 320, 8
+VOCAB = 512
+
+KB_SEED = 0xDEE9_5EED
+TRAIN_SEED = 1234
+EVAL_SEED = 777
+
+TRANSFORM_OPS = [OP_SORT, OP_REV, OP_INC, OP_DEC, OP_MAX, OP_MIN]
+
+
+class Pcg:
+    """splitmix64 — exact mirror of ``rust/src/util/rng.rs::Pcg``."""
+
+    def __init__(self, seed: int):
+        self.state = (seed + 0x9E3779B97F4A7C15) & MASK64
+
+    def derive(self, label: int) -> "Pcg":
+        child = Pcg(self.state ^ ((label * 0xD1342543DE82EF95) & MASK64))
+        child.next_u64()
+        return child
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_below(self, bound: int) -> int:
+        return (self.next_u64() * bound) >> 64
+
+    def next_f32(self) -> float:
+        return (self.next_u64() >> 40) / (1 << 24)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) / (1 << 53)
+
+
+def fnv1a(s: str) -> int:
+    """Suite-name → substream id (mirror of Suite::stream_id)."""
+    h = 0xCBF29CE484222325
+    for b in s.encode():
+        h = ((h ^ b) * 0x100000001B3) & MASK64
+    return h
+
+
+def kb_answer(domain: int, subj: int, rel: int) -> int:
+    """Deterministic KB: entity index answering (subject, relation)."""
+    r = Pcg(KB_SEED ^ (domain << 40) ^ (subj << 20) ^ rel)
+    return r.next_below(N_ENT)
+
+
+def _digits2(v: int) -> list[int]:
+    return [DIG0 + (v // 10) % 10, DIG0 + v % 10]
+
+
+@dataclass
+class Question:
+    """A rendered task instance."""
+
+    prompt: list[int]  # ends with ANS
+    answer: list[int]  # ends with EOS
+
+
+def gen_arith(rng: Pcg) -> Question:
+    a, b = rng.next_below(100), rng.next_below(100)
+    op = OP_ADD if rng.next_below(2) == 0 else OP_SUB
+    c = (a + b) % 100 if op == OP_ADD else (a - b) % 100
+    return Question([BOS, *_digits2(a), op, *_digits2(b), ANS], [*_digits2(c), EOS])
+
+
+def gen_arith_chain(rng: Pcg) -> Question:
+    vals = [rng.next_below(100) for _ in range(4)]
+    ops = [OP_ADD if rng.next_below(2) == 0 else OP_SUB for _ in range(3)]
+    acc = vals[0]
+    prompt = [BOS, *_digits2(vals[0])]
+    for v, op in zip(vals[1:], ops):
+        acc = (acc + v) % 100 if op == OP_ADD else (acc - v) % 100
+        prompt += [op, *_digits2(v)]
+    prompt.append(ANS)
+    return Question(prompt, [*_digits2(acc), EOS])
+
+
+def gen_knowledge(rng: Pcg, domain: int) -> Question:
+    subj = rng.next_below(N_SUBJ)
+    rel = rng.next_below(RELS_PER_DOMAIN)
+    ans = kb_answer(domain, subj, rel)
+    # Three distinct distractors.
+    distractors: list[int] = []
+    while len(distractors) < 3:
+        d = rng.next_below(N_ENT)
+        if d != ans and d not in distractors:
+            distractors.append(d)
+    pos = rng.next_below(4)
+    choices = distractors[:pos] + [ans] + distractors[pos:]
+    prompt = [BOS, ENT0 + subj, REL0 + (domain - 1) * RELS_PER_DOMAIN + rel, SEP]
+    prompt += [ENT0 + c for c in choices]
+    prompt.append(ANS)
+    return Question(prompt, [CH_A + pos, EOS])
+
+
+def _apply_op(op: int, xs: list[int]) -> list[int]:
+    if op == OP_SORT:
+        return sorted(xs)
+    if op == OP_REV:
+        return xs[::-1]
+    if op == OP_INC:
+        return [(x + 1) % 10 for x in xs]
+    if op == OP_DEC:
+        return [(x - 1) % 10 for x in xs]
+    if op == OP_MAX:
+        return [max(xs)]
+    if op == OP_MIN:
+        return [min(xs)]
+    raise ValueError(op)
+
+
+def gen_transform(rng: Pcg) -> Question:
+    n = 4 + rng.next_below(3)  # 4..6 digits
+    xs = [rng.next_below(10) for _ in range(n)]
+    op = TRANSFORM_OPS[rng.next_below(len(TRANSFORM_OPS))]
+    out = _apply_op(op, xs)
+    return Question(
+        [BOS, op, *[DIG0 + x for x in xs], ANS],
+        [*[DIG0 + x for x in out], EOS],
+    )
+
+
+def gen_transform_hard(rng: Pcg) -> Question:
+    n = 4 + rng.next_below(3)
+    xs = [rng.next_below(10) for _ in range(n)]
+    # Second op must keep a list (not MAX/MIN) for the first slot.
+    op1 = TRANSFORM_OPS[rng.next_below(4)]  # SORT REV INC DEC
+    op2 = TRANSFORM_OPS[rng.next_below(len(TRANSFORM_OPS))]
+    out = _apply_op(op2, _apply_op(op1, xs))
+    return Question(
+        [BOS, op1, op2, *[DIG0 + x for x in xs], ANS],
+        [*[DIG0 + x for x in out], EOS],
+    )
+
+
+FAMILY_GENS = {
+    "arith": lambda rng, dom: gen_arith(rng),
+    "arith_chain": lambda rng, dom: gen_arith_chain(rng),
+    "knowledge": gen_knowledge,
+    "transform": lambda rng, dom: gen_transform(rng),
+    "transform_hard": lambda rng, dom: gen_transform_hard(rng),
+}
+
+# Suite registry mirror (rust/src/eval/suites.rs is authoritative).
+SUITES = [
+    ("AIME 2024", "arith_chain", 0),
+    ("MATH 500", "arith", 0),
+    ("GPQA", "knowledge", 1),
+    ("MBPP", "transform", 0),
+    ("MBPP+", "transform", 0),
+    ("LiveCodeBench", "transform_hard", 0),
+    ("MMLU", "knowledge", 2),
+    ("CMMLU", "knowledge", 3),
+    ("C-Eval", "knowledge", 4),
+]
+
+
+def eval_question(suite_name: str, family: str, domain: int, qid: int) -> Question:
+    """The exact question the Rust harness evaluates (suite stream)."""
+    rng = Pcg(EVAL_SEED ^ fnv1a(suite_name)).derive(qid)
+    return FAMILY_GENS[family](rng, domain)
+
+
+def train_sample(mixture: list[tuple[str, int, float]], rng: Pcg) -> Question:
+    """Draw one training sample from a ``(family, domain, weight)`` mix."""
+    total = sum(w for _, _, w in mixture)
+    r = rng.next_f64() * total
+    acc = 0.0
+    for family, domain, w in mixture:
+        acc += w
+        if r < acc:
+            return FAMILY_GENS[family](rng, domain)
+    family, domain, _ = mixture[-1]
+    return FAMILY_GENS[family](rng, domain)
+
+
+# Training mixtures per proxy checkpoint (DESIGN.md §2: the r1 proxy is
+# reasoning-heavy, v3 balanced; v3-0324 is v3 trained longer).
+MIXTURES = {
+    "r1": [
+        ("arith", 0, 0.22),
+        ("arith_chain", 0, 0.22),
+        ("knowledge", 1, 0.06),
+        ("knowledge", 2, 0.10),
+        ("knowledge", 3, 0.10),
+        ("knowledge", 4, 0.10),
+        ("transform", 0, 0.10),
+        ("transform_hard", 0, 0.10),
+    ],
+    "v3": [
+        ("arith", 0, 0.16),
+        ("arith_chain", 0, 0.10),
+        ("knowledge", 1, 0.08),
+        ("knowledge", 2, 0.14),
+        ("knowledge", 3, 0.14),
+        ("knowledge", 4, 0.14),
+        ("transform", 0, 0.14),
+        ("transform_hard", 0, 0.10),
+    ],
+}
+MIXTURES["v3_0324"] = MIXTURES["v3"]
+
+MAX_PROMPT = 16
+MAX_ANSWER = 8
+SEQ_LEN = MAX_PROMPT + MAX_ANSWER  # 24
+
+
+def pad_example(q: Question, seq_len: int = SEQ_LEN):
+    """(tokens, loss_mask) for teacher-forced training.
+
+    The loss mask is 1 on the answer tokens (positions predicting them).
+    """
+    toks = q.prompt + q.answer
+    assert len(toks) <= seq_len, (len(toks), seq_len)
+    mask = [0] * len(q.prompt) + [1] * len(q.answer)
+    toks = toks + [PAD] * (seq_len - len(toks))
+    mask = mask + [0] * (seq_len - len(mask))
+    return toks, mask

@@ -1,0 +1,278 @@
+"""Build-time training of the four proxy checkpoints (DESIGN.md §2).
+
+Checkpoints (written as f32 `.dsq` containers to ``artifacts/ckpt/``):
+
+- ``r1``      — tiny-moe, reasoning-heavy mixture (DeepSeek-R1 proxy).
+- ``v3``      — tiny-moe, balanced mixture (DeepSeek-V3 proxy).
+- ``v3_0324`` — the v3 run continued for 50% more steps (the 0324
+  checkpoint refresh).
+- ``distill`` — tiny-dense trained by *distillation*: prompts from the
+  r1 mixture, targets sampled greedily from the trained r1 model
+  (§2.1's data-driven distillation, in miniature).
+
+Pure-JAX Adam (no optax in this environment). Deterministic: fixed
+seeds, fixed data streams (tasks.Pcg).
+
+Usage: ``python -m compile.train --out ../artifacts/ckpt [--steps N]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import container, model, tasks
+
+BATCH = 32
+SEQ = tasks.SEQ_LEN  # 24
+
+
+def make_batch(mixture, rng: tasks.Pcg, batch=BATCH):
+    toks = np.zeros((batch, SEQ), np.int32)
+    mask = np.zeros((batch, SEQ), np.float32)
+    for b in range(batch):
+        q = tasks.train_sample(mixture, rng)
+        t, m = tasks.pad_example(q)
+        toks[b], mask[b] = t, m
+    return jnp.asarray(toks), jnp.asarray(mask)
+
+
+def loss_fn(params, cfg, tokens, mask):
+    weights = {k: model.WeightTensor("f32", v, v.shape) for k, v in params.items()}
+    logits = model.forward_train(cfg, weights, tokens)
+    # Predict token t+1 from position t.
+    targets = tokens[:, 1:]
+    lmask = mask[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * lmask) / jnp.maximum(jnp.sum(lmask), 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1, 2))
+def train_step(params, m_state, v_state, step, cfg, tokens, mask, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens, mask)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    new_p, new_m, new_v = {}, {}, {}
+    t = step + 1.0
+    for k in params:
+        g = grads[k]
+        m = b1 * m_state[k] + (1 - b1) * g
+        v = b2 * v_state[k] + (1 - b2) * g * g
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return new_p, new_m, new_v, loss
+
+
+def train(cfg: model.Config, mixture, steps: int, seed: int, lr=3e-3, params=None,
+          batch_fn=None, log_every=50, tag=""):
+    if params is None:
+        params = {k: w.data for k, w in model.init_weights(cfg, seed).items()}
+    m_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v_state = {k: jnp.zeros_like(v) for k, v in params.items()}
+    rng = tasks.Pcg(tasks.TRAIN_SEED ^ seed)
+    losses = []
+    t0 = time.time()
+    hcfg = HashableConfig(cfg)
+    for step in range(steps):
+        if batch_fn is not None:
+            tokens, mask = batch_fn(step)
+        else:
+            tokens, mask = make_batch(mixture, rng)
+        # Cosine LR decay with short warmup.
+        warm = min(1.0, (step + 1) / 30)
+        decay = 0.5 * (1 + np.cos(np.pi * step / max(steps, 1)))
+        cur_lr = lr * warm * (0.1 + 0.9 * decay)
+        params, m_state, v_state, loss = train_step(
+            params, m_state, v_state, float(step), hcfg, tokens, mask, cur_lr
+        )
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"[train{tag}] step {step:4d} loss {float(loss):.4f} "
+                f"lr {cur_lr:.2e} ({time.time()-t0:.0f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+class HashableConfig:
+    """jit static wrapper for model.Config."""
+
+    def __init__(self, cfg: model.Config):
+        self.cfg = cfg
+        self._key = tuple(sorted(cfg.to_dict().items()))
+
+    def __getattr__(self, k):
+        return getattr(self.cfg, k)
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, HashableConfig) and self._key == other._key
+
+
+# ---------------------------------------------------------------------------
+# Distillation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_ctx"))
+def _prefill_jit(cfg, params, tokens, lengths, max_ctx):
+    weights = {k: model.WeightTensor("f32", v, v.shape) for k, v in params.items()}
+    return model.forward_prefill(cfg.cfg, weights, tokens, lengths, max_ctx)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_jit(cfg, params, token, pos, cache):
+    weights = {k: model.WeightTensor("f32", v, v.shape) for k, v in params.items()}
+    return model.forward_decode(cfg.cfg, weights, token, pos, cache)
+
+
+def teacher_generate(cfg, params, prompts, lengths, max_new=tasks.MAX_ANSWER):
+    """Greedy generation from the teacher. prompts [B, T], lengths [B]."""
+    hcfg = HashableConfig(cfg)
+    b, t = prompts.shape
+    max_ctx = t + max_new
+    logits, cache = _prefill_jit(hcfg, params, jnp.asarray(prompts), jnp.asarray(lengths), max_ctx)
+    outs = [[] for _ in range(b)]
+    done = np.zeros(b, bool)
+    pos = np.asarray(lengths).copy()
+    for _ in range(max_new):
+        tok = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in range(b):
+            if not done[i]:
+                outs[i].append(int(tok[i]))
+                if tok[i] == tasks.EOS:
+                    done[i] = True
+        if done.all():
+            break
+        logits, cache = _decode_jit(hcfg, params, jnp.asarray(tok), jnp.asarray(pos), cache)
+        pos = pos + 1
+    return outs
+
+
+def make_distill_batch(teacher_cfg, teacher_params, mixture, rng, batch=BATCH):
+    """Prompts from the mixture; targets = teacher's greedy outputs."""
+    qs = [tasks.train_sample(mixture, rng) for _ in range(batch)]
+    t = tasks.MAX_PROMPT
+    prompts = np.zeros((batch, t), np.int32)
+    lengths = np.zeros(batch, np.int32)
+    for i, q in enumerate(qs):
+        prompts[i, : len(q.prompt)] = q.prompt
+        lengths[i] = len(q.prompt)
+    outs = teacher_generate(teacher_cfg, teacher_params, prompts, lengths)
+    toks = np.zeros((batch, SEQ), np.int32)
+    mask = np.zeros((batch, SEQ), np.float32)
+    for i, q in enumerate(qs):
+        ans = outs[i][: tasks.MAX_ANSWER]
+        seqt = q.prompt + ans
+        toks[i, : len(seqt)] = seqt
+        mask[i, len(q.prompt) : len(seqt)] = 1.0
+    return jnp.asarray(toks), jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint IO
+# ---------------------------------------------------------------------------
+
+
+def save_checkpoint(cfg: model.Config, params, path: Path, meta: dict):
+    w = container.Writer(model=cfg.to_dict(), scheme="f32", meta=meta)
+    for name, cls, layer, _shape in model.census(cfg):
+        w.add(name, cls, layer, np.asarray(params[name]))
+    path.parent.mkdir(parents=True, exist_ok=True)
+    w.write(path)
+    print(f"[train] wrote {path} ({path.stat().st_size/1e6:.1f} MB)")
+
+
+def load_checkpoint(path: Path) -> dict:
+    """Read an f32 .dsq back into a params dict (jnp arrays)."""
+    import jax.numpy as jnp
+
+    c = container.Container.open(path)
+    return {e.name: jnp.asarray(c.dequantize(e)) for e in c.entries}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/ckpt")
+    ap.add_argument("--steps", type=int, default=900)
+    ap.add_argument("--extra-steps", type=int, default=None,
+                    help="v3_0324 continuation steps (default steps//2)")
+    ap.add_argument("--distill-steps", type=int, default=450)
+    ap.add_argument("--only", default=None, help="train a single checkpoint")
+    ap.add_argument("--skip", default="", help="comma-separated checkpoints to skip")
+    args = ap.parse_args()
+    out = Path(args.out)
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    moe = model.Config.load("tiny-moe")
+    dense = model.Config.load("tiny-dense")
+
+    def want(name):
+        if name in skip:
+            return False
+        return args.only is None or args.only == name
+
+    r1_params = None
+    if want("r1") or want("distill"):
+        existing = out / "r1.f32.dsq"
+        if "r1" in skip and existing.exists():
+            print("=== loading existing r1 checkpoint (teacher) ===", flush=True)
+            r1_params = load_checkpoint(existing)
+        else:
+            print("=== training r1 proxy (tiny-moe, reasoning-heavy) ===", flush=True)
+            r1_params, losses = train(moe, tasks.MIXTURES["r1"], args.steps, seed=101, tag=":r1")
+            save_checkpoint(
+                moe, r1_params, out / "r1.f32.dsq",
+                {"proxy_for": "DeepSeek-R1", "steps": args.steps, "seed": 101,
+                 "final_loss": round(float(np.mean(losses[-20:])), 4)},
+            )
+
+    if want("v3") or want("v3_0324"):
+        print("=== training v3 proxy (tiny-moe, balanced) ===", flush=True)
+        v3_params, losses = train(moe, tasks.MIXTURES["v3"], args.steps, seed=202, tag=":v3")
+        if want("v3"):
+            save_checkpoint(
+                moe, v3_params, out / "v3.f32.dsq",
+                {"proxy_for": "DeepSeek-V3", "steps": args.steps, "seed": 202,
+                 "final_loss": round(float(np.mean(losses[-20:])), 4)},
+            )
+        if want("v3_0324"):
+            print("=== continuing v3 → v3-0324 (extra steps) ===", flush=True)
+            extra = args.extra_steps if args.extra_steps is not None else args.steps // 2
+            v3b_params, losses = train(
+                moe, tasks.MIXTURES["v3_0324"], extra, seed=203, params=v3_params, tag=":v3_0324"
+            )
+            save_checkpoint(
+                moe, v3b_params, out / "v3_0324.f32.dsq",
+                {"proxy_for": "DeepSeek-V3-0324", "steps": args.steps + extra, "seed": 203,
+                 "final_loss": round(float(np.mean(losses[-20:])), 4)},
+            )
+
+    if want("distill"):
+        print("=== distilling r1 → tiny-dense ===", flush=True)
+        rng = tasks.Pcg(tasks.TRAIN_SEED ^ 404)
+        batch_fn = lambda step: make_distill_batch(moe, r1_params, tasks.MIXTURES["r1"], rng)
+        d_params, losses = train(
+            dense, None, args.distill_steps, seed=404, batch_fn=batch_fn, tag=":distill"
+        )
+        save_checkpoint(
+            dense, d_params, out / "distill.f32.dsq",
+            {"proxy_for": "DeepSeek-R1-distill-Qwen-32B", "steps": args.distill_steps,
+             "seed": 404, "teacher": "r1",
+             "final_loss": round(float(np.mean(losses[-20:])), 4)},
+        )
+
+
+if __name__ == "__main__":
+    main()

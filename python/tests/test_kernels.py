@@ -1,0 +1,99 @@
+"""L1 kernel correctness: Pallas fused dequant-matmul vs the pure-jnp
+oracle, swept over formats and shapes with hypothesis."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quants
+from compile.kernels import dequant_matmul, ref
+
+# Packing requires the Rust quantizer; for kernel tests we only need
+# *valid* packed bytes. Random bytes decode for every field EXCEPT the
+# f16 block scales, where exponent-31 patterns are Inf/NaN — so we mask
+# the scale high bytes down to finite range.
+
+F16_HI_BYTES = {  # (block_bytes, [offsets of f16 high bytes])
+    "q8_0": (34, [1]),
+    "q6_k": (210, [209]),
+    "q5_k": (176, [1, 3]),
+    "q4_k": (144, [1, 3]),
+    "q3_k": (110, [109]),
+    "q2_k": (84, [81, 83]),
+}
+
+
+def random_packed(fmt: str, n: int, k: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    kb = quants.row_bytes(fmt, k)
+    raw = rng.integers(0, 256, (n, kb), dtype=np.uint8)
+    bb, his = F16_HI_BYTES[fmt]
+    blocks = raw.reshape(-1, bb)
+    for off in his:
+        blocks[:, off] &= 0x3F  # exponent <= 15, finite f16
+    return blocks.reshape(n, kb)
+
+
+QUANT_FORMATS = ["q8_0", "q6_k", "q5_k", "q4_k", "q3_k", "q2_k"]
+
+
+@pytest.mark.parametrize("fmt", QUANT_FORMATS)
+def test_kernel_matches_ref(fmt):
+    n, k, b = 256, 256, 4
+    wq = random_packed(fmt, n, k, 1)
+    x = np.random.default_rng(2).normal(size=(b, k)).astype(np.float32)
+    got = dequant_matmul.matmul_qT(jnp.asarray(x), jnp.asarray(wq), fmt=fmt, n=n, k=k)
+    want = np.asarray(ref.matmul_qT_ref(jnp.asarray(x), jnp.asarray(wq), fmt, n, k))
+    tol = 1e-5 * max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=tol)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    fmt=st.sampled_from(QUANT_FORMATS),
+    n_blocks=st.integers(1, 3),
+    k_blocks=st.integers(1, 2),
+    b=st.integers(1, 5),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref_property(fmt, n_blocks, k_blocks, b, seed):
+    """Hypothesis sweep: shapes × formats × data."""
+    bw = quants.BLOCK_WEIGHTS[fmt]
+    n = 128 * n_blocks
+    k = max(bw, 256) * k_blocks
+    wq = random_packed(fmt, n, k, seed)
+    x = np.random.default_rng(seed ^ 1).normal(size=(b, k)).astype(np.float32)
+    got = dequant_matmul.matmul_qT(jnp.asarray(x), jnp.asarray(wq), fmt=fmt, n=n, k=k)
+    want = np.asarray(ref.matmul_qT_ref(jnp.asarray(x), jnp.asarray(wq), fmt, n, k))
+    tol = 1e-5 * max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=tol)
+
+
+def test_f32_passthrough():
+    n, k = 64, 32
+    w = np.random.default_rng(0).normal(size=(n, k)).astype(np.float32)
+    x = np.random.default_rng(1).normal(size=(2, k)).astype(np.float32)
+    got = dequant_matmul.matmul_qT(jnp.asarray(x), jnp.asarray(w), fmt="f32", n=n, k=k)
+    np.testing.assert_allclose(np.asarray(got), x @ w.T, rtol=1e-5, atol=1e-5)
+
+
+def test_nd_wrapper():
+    fmt, n, k = "q4_k", 128, 256
+    wq = random_packed(fmt, n, k, 3)
+    x = np.random.default_rng(4).normal(size=(2, 3, k)).astype(np.float32)
+    got = dequant_matmul.matmul_qT_nd(jnp.asarray(x), jnp.asarray(wq), fmt=fmt, n=n, k=k)
+    assert got.shape == (2, 3, n)
+    flat = dequant_matmul.matmul_qT(jnp.asarray(x.reshape(6, k)), jnp.asarray(wq), fmt=fmt, n=n, k=k)
+    np.testing.assert_allclose(np.asarray(got).reshape(6, n), np.asarray(flat), rtol=1e-6)
+
+
+def test_odd_output_dim_tiling():
+    """n=288 (kv_lora+rope) forces the non-128 tile path."""
+    fmt, n, k = "q6_k", 288, 256
+    wq = random_packed(fmt, n, k, 5)
+    x = np.random.default_rng(6).normal(size=(2, k)).astype(np.float32)
+    got = dequant_matmul.matmul_qT(jnp.asarray(x), jnp.asarray(wq), fmt=fmt, n=n, k=k)
+    want = np.asarray(ref.matmul_qT_ref(jnp.asarray(x), jnp.asarray(wq), fmt, n, k))
+    tol = 1e-5 * max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=tol)

@@ -1,0 +1,85 @@
+"""L2 model tests: shapes, prefill/decode/train consistency, quantized
+weight path."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import container, model, quants, schemes, tasks
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = model.Config.load("tiny-moe")
+    return cfg, model.init_weights(cfg, 0)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = model.Config.load("tiny-dense")
+    return cfg, model.init_weights(cfg, 1)
+
+
+def test_census_matches_rust_expectations(moe):
+    cfg, _ = moe
+    names = [n for n, _, _, _ in model.census(cfg)]
+    assert "blk.1.ffn_down_exps.weight" in names
+    assert "blk.0.ffn_down.weight" in names  # layer 0 dense
+    assert len(names) == len(set(names))
+
+
+@pytest.mark.parametrize("fixture", ["moe", "dense"])
+def test_prefill_matches_teacher_forcing(fixture, request):
+    cfg, w = request.getfixturevalue(fixture)
+    rng = np.random.default_rng(3)
+    b, t = 2, 10
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (b, t), dtype=np.int32))
+    lengths = jnp.asarray([7, 10], dtype=np.int32)
+    last, cache = model.forward_prefill(cfg, w, toks, lengths, max_ctx=16)
+    full = model.forward_train(cfg, w, toks)
+    np.testing.assert_allclose(
+        np.asarray(last[0]), np.asarray(full[0, 6]), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(last[1]), np.asarray(full[1, 9]), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("fixture", ["moe", "dense"])
+def test_decode_continues_prefill(fixture, request):
+    """Decoding token t+1 must equal teacher-forcing at position t+1."""
+    cfg, w = request.getfixturevalue(fixture)
+    rng = np.random.default_rng(4)
+    b, t = 2, 6
+    toks = rng.integers(1, cfg.vocab_size, (b, t + 1), dtype=np.int32)
+    lengths = jnp.asarray([t, t], dtype=np.int32)
+    last, cache = model.forward_prefill(cfg, w, jnp.asarray(toks[:, :t]), lengths, max_ctx=12)
+    logits, _ = model.forward_decode(
+        cfg, w, jnp.asarray(toks[:, t]), jnp.asarray([t, t]), cache
+    )
+    full = model.forward_train(cfg, w, jnp.asarray(toks))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, t]), rtol=1e-3, atol=1e-4)
+
+
+def test_quantized_weights_run(moe):
+    """Random packed weights through the full fwd (format plumbing)."""
+    cfg, _ = moe
+    scheme = schemes.load_scheme("dq3_k_m")
+    rng = np.random.default_rng(5)
+    weights = {}
+    for name, cls, layer, shape in model.census(cfg):
+        row_len = shape[-1]
+        n_params = int(np.prod(shape))
+        fmt = schemes.assign(scheme, cls, layer, row_len, n_params, cfg)
+        if fmt == "f32":
+            data = jnp.asarray(rng.normal(0, 0.02, shape).astype(np.float32))
+        else:
+            from tests.test_kernels import random_packed
+
+            rows = n_params // row_len
+            data = jnp.asarray(random_packed(fmt, rows, row_len, int(rng.integers(1 << 30))))
+        weights[name] = model.WeightTensor(fmt, data, tuple(shape))
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8), dtype=np.int32))
+    last, cache = model.forward_prefill(cfg, weights, toks, jnp.asarray([8, 8]), max_ctx=12)
+    assert last.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(last)).all()

@@ -1,0 +1,55 @@
+"""Codec mirror tests: python unpack == rust pack→dequant, bit for bit.
+
+Requires `dsq testvec --out artifacts/testvectors` (run by
+`make artifacts`); skipped when the vectors are absent.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import quants
+
+VEC_DIR = Path(__file__).resolve().parents[2] / "artifacts" / "testvectors"
+
+pytestmark = pytest.mark.skipif(
+    not (VEC_DIR / "index.json").exists(),
+    reason="test vectors not built (run `make artifacts`)",
+)
+
+
+def _cases():
+    if not (VEC_DIR / "index.json").exists():
+        return []
+    return json.loads((VEC_DIR / "index.json").read_text())
+
+
+@pytest.mark.parametrize("case", _cases(), ids=lambda c: c["format"])
+def test_python_dequant_matches_rust(case):
+    fmt, n = case["format"], case["n"]
+    packed = np.fromfile(VEC_DIR / f"{fmt}.packed.bin", np.uint8)
+    rust_deq = np.fromfile(VEC_DIR / f"{fmt}.deq.f32", np.float32)
+    py_deq = quants.dequantize(fmt, packed, n)
+    np.testing.assert_array_equal(py_deq, rust_deq, err_msg=fmt)
+
+
+@pytest.mark.parametrize("case", _cases(), ids=lambda c: c["format"])
+def test_reconstruction_error_bounded(case):
+    fmt, n = case["format"], case["n"]
+    if fmt == "f16":
+        return
+    src = np.fromfile(VEC_DIR / f"{fmt}.src.f32", np.float32)
+    packed = np.fromfile(VEC_DIR / f"{fmt}.packed.bin", np.uint8)
+    deq = quants.dequantize(fmt, packed, n)
+    rel = np.sqrt(np.mean((src - deq) ** 2) / np.mean(src**2))
+    bound = {"q8_0": 0.01, "q6_k": 0.02, "q5_k": 0.05, "q4_k": 0.09,
+             "q3_k": 0.17, "q2_k": 0.35}[fmt]
+    assert rel < bound, (fmt, rel)
+
+
+def test_row_bytes():
+    assert quants.row_bytes("q4_k", 512) == 288
+    with pytest.raises(ValueError):
+        quants.row_bytes("q4_k", 100)

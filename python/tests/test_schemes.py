@@ -1,0 +1,51 @@
+"""Scheme-mirror tests: python assignment == rust scheme engine."""
+
+import pytest
+
+from compile import model, schemes
+
+
+@pytest.fixture(scope="module")
+def moe():
+    return model.Config.load("tiny-moe")
+
+
+def test_all_schemes_load():
+    for name in schemes.SCHEME_NAMES:
+        s = schemes.load_scheme(name)
+        assert s["name"] == name
+
+
+def test_dq3_dynamic_assignment(moe):
+    s = schemes.load_scheme("dq3_k_m")
+    # tiny-moe: first_dense=1, layers 1..5 are MoE. first_moe=2 → layers
+    # 1,2 get q6_k; layer 5 (period 5) → q4_k; layers 3,4 → q3_k.
+    expect = {1: "q6_k", 2: "q6_k", 3: "q3_k", 4: "q3_k", 5: "q4_k"}
+    for layer, fmt in expect.items():
+        got = schemes.assign(s, "ffn_down_exps", layer, 256, 8 * 256 * 256, moe)
+        assert got == fmt, (layer, got)
+
+
+def test_norms_stay_f32(moe):
+    for name in schemes.SCHEME_NAMES:
+        s = schemes.load_scheme(name)
+        assert schemes.assign(s, "norm", 0, 256, 256, moe) == "f32"
+        assert schemes.assign(s, "ffn_gate_inp", 1, 256, 2048, moe) == "f32"
+
+
+def test_ragged_rows_fall_back_to_f16(moe):
+    s = schemes.load_scheme("q4_k_m")
+    assert schemes.assign(s, "attn_output", 0, 100, 10000, moe) == "f16"
+
+
+def test_use_more_bits_split():
+    # 61-layer model: 27 of the 58 MoE layers are high-precision.
+    n = sum(schemes.use_more_bits(i, 61) for i in range(3, 61))
+    assert n == 27
+
+
+def test_q4_k_m_table7_rows(moe):
+    s = schemes.load_scheme("q4_k_m")
+    assert schemes.assign(s, "output", None, 256, 512 * 256, moe) == "q6_k"
+    assert schemes.assign(s, "token_embd", None, 256, 512 * 256, moe) == "q4_k"
+    assert schemes.assign(s, "ffn_gate_exps", 3, 256, 8 * 256 * 256, moe) == "q4_k"

@@ -1,0 +1,89 @@
+"""Task generator + RNG mirror tests (cross-language contract)."""
+
+import pytest
+
+from compile import tasks
+
+
+def test_rng_golden():
+    """Golden sequence pinned against rust/src/util/rng.rs (seed 42)."""
+    r = tasks.Pcg(42)
+    got = [r.next_u64() for _ in range(4)]
+    # Recompute via the spec: splitmix64.
+    def splitmix(state):
+        M = (1 << 64) - 1
+        state = (state + 0x9E3779B97F4A7C15) & M
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M
+        return state, z ^ (z >> 31)
+    s = (42 + 0x9E3779B97F4A7C15) & ((1 << 64) - 1)
+    expect = []
+    for _ in range(4):
+        s, v = splitmix(s)
+        expect.append(v)
+    assert got == expect
+
+
+def test_next_below_bounds():
+    r = tasks.Pcg(1)
+    assert all(r.next_below(7) < 7 for _ in range(10000))
+
+
+def test_arith_answers():
+    rng = tasks.Pcg(99)
+    for _ in range(200):
+        q = tasks.gen_arith(rng)
+        a = (q.prompt[1] - tasks.DIG0) * 10 + (q.prompt[2] - tasks.DIG0)
+        b = (q.prompt[4] - tasks.DIG0) * 10 + (q.prompt[5] - tasks.DIG0)
+        c = (q.answer[0] - tasks.DIG0) * 10 + (q.answer[1] - tasks.DIG0)
+        expect = (a + b) % 100 if q.prompt[3] == tasks.OP_ADD else (a - b) % 100
+        assert c == expect
+        assert q.answer[-1] == tasks.EOS
+
+
+def test_knowledge_answer_position():
+    rng = tasks.Pcg(5)
+    for _ in range(100):
+        q = tasks.gen_knowledge(rng, 3)
+        pos = q.answer[0] - tasks.CH_A
+        subj = q.prompt[1] - tasks.ENT0
+        rel = q.prompt[2] - tasks.REL0 - 2 * tasks.RELS_PER_DOMAIN
+        assert q.prompt[4 + pos] - tasks.ENT0 == tasks.kb_answer(3, subj, rel)
+
+
+def test_prompts_fit_shapes():
+    for name, family, domain in tasks.SUITES:
+        for qid in range(100):
+            q = tasks.eval_question(name, family, domain, qid)
+            assert len(q.prompt) <= tasks.MAX_PROMPT, (name, q)
+            assert len(q.answer) <= tasks.MAX_ANSWER
+            assert all(0 <= t < tasks.VOCAB for t in q.prompt + q.answer)
+
+
+def test_eval_stream_deterministic():
+    a = tasks.eval_question("MATH 500", "arith", 0, 17)
+    b = tasks.eval_question("MATH 500", "arith", 0, 17)
+    assert a == b
+
+
+def test_pad_example():
+    rng = tasks.Pcg(3)
+    q = tasks.gen_transform(rng)
+    toks, mask = tasks.pad_example(q)
+    assert len(toks) == tasks.SEQ_LEN == len(mask)
+    assert sum(mask) == len(q.answer)
+
+
+def test_transform_ops():
+    rng = tasks.Pcg(8)
+    for _ in range(100):
+        q = tasks.gen_transform_hard(rng)
+        assert q.prompt[1] in tasks.TRANSFORM_OPS[:4]
+        assert q.prompt[2] in tasks.TRANSFORM_OPS
+
+
+def test_mixtures_normalized():
+    for name, mix in tasks.MIXTURES.items():
+        total = sum(w for _, _, w in mix)
+        assert abs(total - 1.0) < 1e-9, name

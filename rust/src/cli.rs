@@ -1,0 +1,136 @@
+//! Minimal CLI argument parsing (offline replacement for `clap`).
+//!
+//! Grammar: `dsq <command> [positional...] [--flag value | --switch]`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &[
+    "help",
+    "full-size",
+    "verbose",
+    "no-imatrix",
+    "json",
+    "paper",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter().peekable();
+        let command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing command; try `dsq help`"))?;
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    switches.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { command, positional, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("invalid value for --{name}: {e}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.flag(name)
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn positional_at(&self, i: usize) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing positional argument {i}"))
+    }
+
+    pub fn reject_unknown(&self, known_flags: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known_flags.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for command {}", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let a = Args::parse(&argv("quantize in.dsq --scheme dq3_k_m --output out.dsq")).unwrap();
+        assert_eq!(a.command, "quantize");
+        assert_eq!(a.positional, vec!["in.dsq"]);
+        assert_eq!(a.flag("scheme"), Some("dq3_k_m"));
+        assert_eq!(a.flag("output"), Some("out.dsq"));
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let a = Args::parse(&argv("table 1 --paper --model 671b")).unwrap();
+        assert!(a.switch("paper"));
+        assert_eq!(a.flag("model"), Some("671b"));
+        assert_eq!(a.positional, vec!["1"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("x --scheme")).is_err());
+        assert!(Args::parse(&argv("")).is_err());
+    }
+
+    #[test]
+    fn flag_parse_types() {
+        let a = Args::parse(&argv("memory --ctx 4096")).unwrap();
+        assert_eq!(a.flag_parse("ctx", 0usize).unwrap(), 4096);
+        assert_eq!(a.flag_parse("nope", 7usize).unwrap(), 7);
+    }
+}

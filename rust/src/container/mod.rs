@@ -1,0 +1,403 @@
+//! `.dsq` — the checkpoint container format.
+//!
+//! A single-file tensor container, GGUF-like in spirit but with a JSON
+//! header (readable by both the Rust runtime and the Python build
+//! pipeline without extra dependencies):
+//!
+//! ```text
+//! [0..4)    magic "DSQ1"
+//! [4..8)    u32 LE header length H
+//! [8..8+H)  header JSON (UTF-8)
+//! ...       zero padding to DATA_ALIGN (4096)
+//! [D..)     tensor payloads, each aligned to TENSOR_ALIGN (64)
+//! ```
+//!
+//! Header schema:
+//! ```json
+//! {
+//!   "version": 1,
+//!   "model": { ...ModelConfig... },
+//!   "scheme": "dq3_k_m",
+//!   "meta": {"seed": 42, "train_steps": 600},
+//!   "tensors": [
+//!     {"name": "blk.0.attn_q_a.weight", "class": "attn_q_a",
+//!      "layer": 0, "shape": [256, 256], "format": "q4_k",
+//!      "offset": 0, "nbytes": 36864}
+//!   ]
+//! }
+//! ```
+//! `offset` is relative to the start of the data section. Written by
+//! `dsq quantize` (Rust) and `python/compile/train.py` (f32 checkpoints);
+//! both sides are covered by cross-format tests.
+
+use crate::model::{ModelConfig, ModuleClass};
+use crate::quant::QuantFormat;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"DSQ1";
+pub const DATA_ALIGN: usize = 4096;
+pub const TENSOR_ALIGN: usize = 64;
+
+/// Metadata for one stored tensor.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub class: ModuleClass,
+    pub layer: Option<usize>,
+    pub shape: Vec<usize>,
+    pub format: QuantFormat,
+    /// Offset into the data section.
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+impl TensorEntry {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An open container (fully resident; checkpoints here are small).
+pub struct Container {
+    pub model: ModelConfig,
+    pub scheme_name: String,
+    pub meta: Value,
+    pub tensors: Vec<TensorEntry>,
+    data: Vec<u8>,
+}
+
+impl Container {
+    /// Read and validate a `.dsq` file.
+    pub fn open(path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() < 8 || &bytes[0..4] != MAGIC {
+            bail!("not a DSQ1 container");
+        }
+        let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        if 8 + hlen > bytes.len() {
+            bail!("truncated header");
+        }
+        let header: Value = json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)?;
+        let version = header.req("version")?.as_u64()?;
+        if version != 1 {
+            bail!("unsupported container version {version}");
+        }
+        let model = ModelConfig::from_json(header.req("model")?)?;
+        let scheme_name = header.req("scheme")?.as_str()?.to_string();
+        let meta = header.get("meta").cloned().unwrap_or(Value::Obj(vec![]));
+        let data_start = (8 + hlen).div_ceil(DATA_ALIGN) * DATA_ALIGN;
+        let mut tensors = Vec::new();
+        for tv in header.req("tensors")?.as_arr()? {
+            let name = tv.req("name")?.as_str()?.to_string();
+            let class_name = tv.req("class")?.as_str()?;
+            let class = ModuleClass::parse(class_name)
+                .ok_or_else(|| anyhow!("unknown module class {class_name:?}"))?;
+            let layer = match tv.get("layer") {
+                Some(Value::Null) | None => None,
+                Some(v) => Some(v.as_usize()?),
+            };
+            let shape: Vec<usize> = tv
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            let format = QuantFormat::parse(tv.req("format")?.as_str()?)?;
+            let offset = tv.req("offset")?.as_usize()?;
+            let nbytes = tv.req("nbytes")?.as_usize()?;
+            // Validate byte count against shape × format.
+            let expect = format.row_bytes(shape.iter().product())?;
+            if expect != nbytes {
+                bail!("tensor {name}: nbytes {nbytes} != expected {expect}");
+            }
+            if data_start + offset + nbytes > bytes.len() {
+                bail!("tensor {name}: payload out of bounds");
+            }
+            tensors.push(TensorEntry { name, class, layer, shape, format, offset, nbytes });
+        }
+        let data = bytes[data_start..].to_vec();
+        Ok(Container { model, scheme_name, meta, tensors, data })
+    }
+
+    /// Raw payload bytes of a tensor entry.
+    pub fn bytes(&self, t: &TensorEntry) -> &[u8] {
+        &self.data[t.offset..t.offset + t.nbytes]
+    }
+
+    /// Find a tensor by name.
+    pub fn tensor(&self, name: &str) -> Result<&TensorEntry> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow!("tensor {name:?} not in container"))
+    }
+
+    /// Dequantize a tensor to f32.
+    pub fn dequantize(&self, t: &TensorEntry) -> Result<Vec<f32>> {
+        crate::quant::dequantize(t.format, self.bytes(t), t.n_elems())
+    }
+
+    /// Total data-section bytes.
+    pub fn data_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Streaming writer.
+pub struct Writer {
+    model: ModelConfig,
+    scheme_name: String,
+    meta: Value,
+    tensors: Vec<TensorEntry>,
+    data: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new(model: ModelConfig, scheme_name: &str) -> Self {
+        Writer {
+            model,
+            scheme_name: scheme_name.to_string(),
+            meta: Value::Obj(vec![]),
+            tensors: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    pub fn set_meta(&mut self, meta: Value) {
+        self.meta = meta;
+    }
+
+    /// Append a tensor payload (already packed in `format`).
+    pub fn add_tensor(
+        &mut self,
+        name: &str,
+        class: ModuleClass,
+        layer: Option<usize>,
+        shape: &[usize],
+        format: QuantFormat,
+        payload: &[u8],
+    ) -> Result<()> {
+        let expect = format.row_bytes(shape.iter().product())?;
+        if payload.len() != expect {
+            bail!("tensor {name}: payload {} != expected {expect}", payload.len());
+        }
+        if self.tensors.iter().any(|t| t.name == name) {
+            bail!("duplicate tensor {name}");
+        }
+        // Align each payload.
+        let aligned = self.data.len().div_ceil(TENSOR_ALIGN) * TENSOR_ALIGN;
+        self.data.resize(aligned, 0);
+        self.tensors.push(TensorEntry {
+            name: name.to_string(),
+            class,
+            layer,
+            shape: shape.to_vec(),
+            format,
+            offset: aligned,
+            nbytes: payload.len(),
+        });
+        self.data.extend_from_slice(payload);
+        Ok(())
+    }
+
+    fn header_json(&self) -> Value {
+        let tensors: Vec<Value> = self
+            .tensors
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("name", json::str_(&t.name)),
+                    ("class", json::str_(t.class.name())),
+                    (
+                        "layer",
+                        t.layer.map_or(Value::Null, |l| json::num(l as f64)),
+                    ),
+                    (
+                        "shape",
+                        json::arr(t.shape.iter().map(|&d| json::num(d as f64)).collect()),
+                    ),
+                    ("format", json::str_(t.format.name())),
+                    ("offset", json::num(t.offset as f64)),
+                    ("nbytes", json::num(t.nbytes as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("model", self.model.to_json()),
+            ("scheme", json::str_(&self.scheme_name)),
+            ("meta", self.meta.clone()),
+            ("tensors", json::arr(tensors)),
+        ])
+    }
+
+    /// Serialize the container to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = json::to_string(&self.header_json());
+        let hlen = header.len();
+        let data_start = (8 + hlen).div_ceil(DATA_ALIGN) * DATA_ALIGN;
+        let mut out = Vec::with_capacity(data_start + self.data.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(hlen as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.resize(data_start, 0);
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    /// Write to a file (atomic: write to `.tmp`, then rename).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("dsq.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+/// Quantize an f32 container under `scheme`, returning the new container
+/// bytes. `importance` optionally maps tensor name → per-element
+/// importance (from calibration).
+pub fn quantize_container(
+    src: &Container,
+    scheme: &crate::scheme::Scheme,
+    importance: Option<&std::collections::HashMap<String, Vec<f32>>>,
+) -> Result<Writer> {
+    let mut w = Writer::new(src.model.clone(), &scheme.name);
+    w.set_meta(src.meta.clone());
+    for t in &src.tensors {
+        if t.format != QuantFormat::F32 {
+            bail!("quantize_container expects an f32 source, found {} in {}", t.format, t.name);
+        }
+        let values = src.dequantize(t)?;
+        let info = crate::model::TensorInfo {
+            name: t.name.clone(),
+            class: t.class,
+            layer: t.layer,
+            shape: t.shape.clone(),
+        };
+        let fmt = scheme.assign(&info, &src.model);
+        let imp = importance.and_then(|m| m.get(&t.name)).map(|v| v.as_slice());
+        let payload = crate::quant::quantize(fmt, &values, imp)?;
+        w.add_tensor(&t.name, t.class, t.layer, &t.shape, fmt, &payload)?;
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheme::builtin;
+    use crate::util::rng::Pcg;
+
+    fn tiny_f32_container() -> Writer {
+        let cfg = ModelConfig::tiny_moe();
+        let mut w = Writer::new(cfg.clone(), "f32");
+        let mut rng = Pcg::new(7);
+        for t in cfg.census() {
+            let n: usize = t.shape.iter().product();
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
+            let payload = crate::quant::quantize(QuantFormat::F32, &vals, None).unwrap();
+            w.add_tensor(&t.name, t.class, t.layer, &t.shape, QuantFormat::F32, &payload)
+                .unwrap();
+        }
+        w
+    }
+
+    #[test]
+    fn roundtrip_f32_container() {
+        let w = tiny_f32_container();
+        let bytes = w.to_bytes();
+        let c = Container::from_bytes(bytes).unwrap();
+        assert_eq!(c.model.name, "tiny-moe");
+        assert_eq!(c.scheme_name, "f32");
+        assert_eq!(c.tensors.len(), ModelConfig::tiny_moe().census().len());
+        let t = c.tensor("blk.1.ffn_down_exps.weight").unwrap();
+        let vals = c.dequantize(t).unwrap();
+        assert_eq!(vals.len(), t.n_elems());
+    }
+
+    #[test]
+    fn quantize_container_respects_scheme() {
+        let src = Container::from_bytes(tiny_f32_container().to_bytes()).unwrap();
+        let scheme = builtin::scheme("dq3_k_m").unwrap();
+        let q = quantize_container(&src, &scheme, None).unwrap();
+        let qc = Container::from_bytes(q.to_bytes()).unwrap();
+        assert_eq!(qc.scheme_name, "dq3_k_m");
+        // Dynamic rule: first two MoE layers' down_exps are q6_k.
+        let cfg = ModelConfig::tiny_moe();
+        for t in &qc.tensors {
+            if t.class == ModuleClass::FfnDownExps {
+                let expect = match t.layer.unwrap() {
+                    1 | 2 => QuantFormat::Q6K,
+                    5 => QuantFormat::Q4K, // layer 5 % period(5) == 0
+                    _ => QuantFormat::Q3K,
+                };
+                assert_eq!(t.format, expect, "layer {:?}", t.layer);
+            }
+            if !t.class.quantizable() {
+                assert_eq!(t.format, QuantFormat::F32, "{}", t.name);
+            }
+        }
+        // Quantized container must be much smaller than f32.
+        assert!(qc.data_bytes() * 4 < src.data_bytes() * 2, "compression missing");
+        let _ = cfg;
+    }
+
+    #[test]
+    fn corrupted_files_rejected() {
+        let mut bytes = tiny_f32_container().to_bytes();
+        // Bad magic.
+        let mut b2 = bytes.clone();
+        b2[0] = b'X';
+        assert!(Container::from_bytes(b2).is_err());
+        // Truncated payload.
+        bytes.truncate(bytes.len() - 100);
+        assert!(Container::from_bytes(bytes).is_err());
+    }
+
+    #[test]
+    fn duplicate_tensor_rejected() {
+        let cfg = ModelConfig::tiny_dense();
+        let mut w = Writer::new(cfg, "f32");
+        let vals = vec![0f32; 256];
+        let payload = crate::quant::quantize(QuantFormat::F32, &vals, None).unwrap();
+        w.add_tensor("a", ModuleClass::Norm, None, &[256], QuantFormat::F32, &payload)
+            .unwrap();
+        assert!(w
+            .add_tensor("a", ModuleClass::Norm, None, &[256], QuantFormat::F32, &payload)
+            .is_err());
+    }
+
+    #[test]
+    fn payload_size_validated() {
+        let cfg = ModelConfig::tiny_dense();
+        let mut w = Writer::new(cfg, "f32");
+        assert!(w
+            .add_tensor("a", ModuleClass::Norm, None, &[256], QuantFormat::F32, &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dsq-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.dsq");
+        tiny_f32_container().write(&path).unwrap();
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.model.name, "tiny-moe");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

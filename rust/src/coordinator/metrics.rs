@@ -1,0 +1,145 @@
+//! Serving metrics: latency distributions and throughput counters.
+
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub waves: u64,
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+    prefill_ms: Vec<f64>,
+    decode_ms: Vec<f64>,
+    wave_ms: Vec<f64>,
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub median: f64,
+    pub p90: f64,
+    pub mean: f64,
+}
+
+fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { median: 0.0, p90: 0.0, mean: 0.0 };
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        median: pct(&s, 0.5),
+        p90: pct(&s, 0.9),
+        mean: xs.iter().sum::<f64>() / xs.len() as f64,
+    }
+}
+
+impl Metrics {
+    pub fn record_prefill(&mut self, d: Duration, _n: usize) {
+        self.prefill_calls += 1;
+        self.prefill_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_decode(&mut self, d: Duration, _n: usize) {
+        self.decode_calls += 1;
+        self.decode_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_wave(&mut self, d: Duration, responses: &[super::Response]) {
+        self.waves += 1;
+        self.requests += responses.len() as u64;
+        self.generated_tokens += responses.iter().map(|r| r.n_generated as u64).sum::<u64>();
+        self.wave_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn prefill_summary(&self) -> Summary {
+        summarize(&self.prefill_ms)
+    }
+
+    pub fn decode_summary(&self) -> Summary {
+        summarize(&self.decode_ms)
+    }
+
+    pub fn wave_summary(&self) -> Summary {
+        summarize(&self.wave_ms)
+    }
+
+    /// Generated tokens per second of total wave time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total_s: f64 = self.wave_ms.iter().sum::<f64>() / 1e3;
+        if total_s == 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / total_s
+        }
+    }
+
+    /// Requests per second of total wave time.
+    pub fn requests_per_sec(&self) -> f64 {
+        let total_s: f64 = self.wave_ms.iter().sum::<f64>() / 1e3;
+        if total_s == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / total_s
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let p = self.prefill_summary();
+        let d = self.decode_summary();
+        let w = self.wave_summary();
+        format!(
+            "waves {} | requests {} | gen tokens {}\n\
+             prefill: {} calls, median {:.1} ms, p90 {:.1} ms\n\
+             decode:  {} calls, median {:.1} ms, p90 {:.1} ms\n\
+             wave:    median {:.1} ms, p90 {:.1} ms\n\
+             throughput: {:.1} tok/s, {:.2} req/s",
+            self.waves,
+            self.requests,
+            self.generated_tokens,
+            self.prefill_calls,
+            p.median,
+            p.p90,
+            self.decode_calls,
+            d.median,
+            d.p90,
+            w.median,
+            w.p90,
+            self.tokens_per_sec(),
+            self.requests_per_sec()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summaries_from_samples() {
+        let mut m = Metrics::default();
+        for i in 1..=10 {
+            m.record_decode(Duration::from_millis(i), 4);
+        }
+        let s = m.decode_summary();
+        assert_eq!(m.decode_calls, 10);
+        assert!((s.mean - 5.5).abs() < 1e-9);
+        assert!(s.median >= 5.0 && s.median <= 6.0);
+        assert!(s.p90 >= 9.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.wave_summary().median, 0.0);
+    }
+}

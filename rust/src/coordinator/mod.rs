@@ -1,0 +1,169 @@
+//! L3 serving coordinator.
+//!
+//! The deployment layer the paper's §4.4 recommendations are about:
+//! a request queue, a batch scheduler that packs pending generation
+//! requests into the engine's compiled batch slots, per-request
+//! sampling state, early-exit on EOS, and serving metrics
+//! (latency / throughput) — all in Rust over the PJRT runtime;
+//! Python is never on this path.
+//!
+//! Scheduling model: *batch-synchronous with early termination*. The
+//! engine's executables are compiled for a fixed batch B; the scheduler
+//! drains up to B requests per wave, prefills them together, then
+//! decodes until every sequence has emitted EOS (or hit its token
+//! budget) — finished slots simply stop contributing steps, and the
+//! wave ends as soon as all slots finish. (Slot-level continuous
+//! batching would require per-slot KV-cache splicing across PJRT
+//! literals; see DESIGN.md §Perf for the measured trade-off.)
+
+pub mod metrics;
+pub mod sampler;
+
+use crate::eval::tasks::{EOS, PAD};
+use crate::runtime::Engine;
+use crate::util::rng::Pcg;
+use anyhow::{bail, Result};
+use metrics::Metrics;
+use sampler::SamplingParams;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (must fit the engine's compiled prompt length).
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+    /// Sampling seed (paper protocol: one seed per (question, sample)).
+    pub seed: u64,
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Generated tokens (EOS included when emitted within budget).
+    pub tokens: Vec<i32>,
+    /// Wall-clock latency of the whole wave this request rode in.
+    pub latency_ms: f64,
+    /// Tokens decoded in this request.
+    pub n_generated: usize,
+}
+
+/// The coordinator: queue + scheduler + metrics around an [`Engine`].
+pub struct Coordinator {
+    engine: Engine,
+    queue: VecDeque<Request>,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine) -> Self {
+        Coordinator { engine, queue: VecDeque::new(), metrics: Metrics::default() }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        if req.prompt.is_empty() || req.prompt.len() > self.engine.prompt_len() {
+            bail!(
+                "prompt length {} out of range 1..={}",
+                req.prompt.len(),
+                self.engine.prompt_len()
+            );
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the queue, returning responses in completion order.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            out.extend(self.run_wave()?);
+        }
+        Ok(out)
+    }
+
+    /// Run one batch wave (up to `engine.batch()` requests).
+    pub fn run_wave(&mut self) -> Result<Vec<Response>> {
+        let b = self.engine.batch();
+        let t = self.engine.prompt_len();
+        let max_ctx = self.engine.max_ctx();
+        let vocab = self.engine.vocab();
+        let n = self.queue.len().min(b);
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let wave: Vec<Request> = self.queue.drain(..n).collect();
+        let start = Instant::now();
+
+        // Pack prompts into the fixed batch (unused slots get length 1).
+        let mut tokens = vec![PAD; b * t];
+        let mut lengths = vec![1i32; b];
+        for (i, req) in wave.iter().enumerate() {
+            tokens[i * t..i * t + req.prompt.len()].copy_from_slice(&req.prompt);
+            lengths[i] = req.prompt.len() as i32;
+        }
+        let prefill_start = Instant::now();
+        let mut step = self.engine.run_prefill(&tokens, &lengths)?;
+        self.metrics.record_prefill(prefill_start.elapsed(), n);
+
+        let mut rngs: Vec<Pcg> = wave.iter().map(|r| Pcg::new(r.seed)).collect();
+        let mut generated: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut done = vec![false; n];
+        let mut pos: Vec<i32> = lengths.clone();
+        let budget = wave
+            .iter()
+            .map(|r| r.params.max_new_tokens)
+            .max()
+            .unwrap_or(0)
+            .min(max_ctx - t);
+
+        for _ in 0..budget {
+            // Sample the next token for every live slot.
+            let mut next = vec![PAD; b];
+            for i in 0..n {
+                if done[i] {
+                    continue;
+                }
+                let row = &step.logits[i * vocab..(i + 1) * vocab];
+                let tok = sampler::sample(row, &wave[i].params, &mut rngs[i]);
+                generated[i].push(tok);
+                if tok == EOS || generated[i].len() >= wave[i].params.max_new_tokens {
+                    done[i] = true;
+                }
+                next[i] = tok;
+            }
+            if done[..n].iter().all(|&d| d) {
+                break;
+            }
+            let decode_start = Instant::now();
+            step = self.engine.run_decode(&next, &pos, step.cache)?;
+            self.metrics.record_decode(decode_start.elapsed(), n);
+            for p in pos.iter_mut() {
+                *p += 1;
+            }
+        }
+
+        let latency_ms = start.elapsed().as_secs_f64() * 1e3;
+        let responses: Vec<Response> = wave
+            .iter()
+            .zip(generated)
+            .map(|(req, tokens)| {
+                let n_generated = tokens.len();
+                Response { id: req.id, tokens, latency_ms, n_generated }
+            })
+            .collect();
+        self.metrics.record_wave(start.elapsed(), &responses);
+        Ok(responses)
+    }
+}

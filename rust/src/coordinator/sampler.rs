@@ -1,0 +1,129 @@
+//! Token sampling — temperature + nucleus (top-p), matching the paper's
+//! decoding configuration (§4.2: temperature 0.6, top-p 0.95).
+
+use crate::util::rng::Pcg;
+
+/// Sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    pub top_p: f32,
+    /// Maximum tokens to generate (answers are short in the proxy
+    /// suites; the paper's 32,768-token budget is a no-op here).
+    pub max_new_tokens: usize,
+}
+
+impl SamplingParams {
+    /// The paper's configuration (§4.2).
+    pub fn paper() -> Self {
+        SamplingParams { temperature: 0.6, top_p: 0.95, max_new_tokens: 8 }
+    }
+
+    /// Greedy decoding.
+    pub fn greedy() -> Self {
+        SamplingParams { temperature: 0.0, top_p: 1.0, max_new_tokens: 8 }
+    }
+}
+
+/// Sample one token from a logits row.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Pcg) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Softmax with temperature (stable: subtract max).
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let inv_t = 1.0 / params.temperature;
+    let mut probs: Vec<(usize, f32)> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i, ((l - max) * inv_t).exp()))
+        .collect();
+    let z: f32 = probs.iter().map(|(_, p)| p).sum();
+    for p in probs.iter_mut() {
+        p.1 /= z;
+    }
+    // Nucleus truncation.
+    probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut cum = 0.0;
+    let mut cut = probs.len();
+    for (i, (_, p)) in probs.iter().enumerate() {
+        cum += p;
+        if cum >= params.top_p {
+            cut = i + 1;
+            break;
+        }
+    }
+    probs.truncate(cut);
+    let z: f32 = probs.iter().map(|(_, p)| p).sum();
+    let mut r = rng.next_f32() * z;
+    for (i, p) in &probs {
+        r -= p;
+        if r <= 0.0 {
+            return *i as i32;
+        }
+    }
+    probs.last().map(|(i, _)| *i as i32).unwrap_or(0)
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Pcg::new(1);
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        // One dominant token (p > 0.95): nucleus keeps only it.
+        let mut logits = vec![0.0f32; 8];
+        logits[3] = 20.0;
+        let params = SamplingParams { temperature: 1.0, top_p: 0.95, max_new_tokens: 4 };
+        let mut rng = Pcg::new(2);
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, &params, &mut rng), 3);
+        }
+    }
+
+    #[test]
+    fn temperature_spreads_samples() {
+        let logits = vec![1.0f32, 1.0, 1.0, 1.0];
+        let params = SamplingParams { temperature: 1.0, top_p: 1.0, max_new_tokens: 4 };
+        let mut rng = Pcg::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &params, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "uniform logits must hit all tokens");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let params = SamplingParams::paper();
+        let a: Vec<i32> = {
+            let mut rng = Pcg::new(7);
+            (0..20).map(|_| sample(&logits, &params, &mut rng)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Pcg::new(7);
+            (0..20).map(|_| sample(&logits, &params, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,313 @@
+//! Benchmark evaluation harness — reproduces Tables 2–5.
+//!
+//! Implements the paper's protocol (§4.2): temperature 0.6 / top-p 0.95
+//! decoding; 8 independent samples per AIME question, 4 for the other
+//! small suites, a single pass for the large knowledge suites; mean ±
+//! population-std across sample passes; plain and Table-8-weighted
+//! averages; relative accuracy drop vs the reference column.
+
+pub mod report;
+pub mod suites;
+pub mod tasks;
+
+use crate::coordinator::{sampler::SamplingParams, Coordinator, Request};
+use crate::util::json::{self, Value};
+use anyhow::Result;
+use suites::{Suite, TaskFamily};
+
+/// Evaluation protocol options.
+#[derive(Debug, Clone, Copy)]
+pub struct Protocol {
+    /// Use the paper's full question counts (default: CPU-scaled).
+    pub full_size: bool,
+    /// Divide per-question sample counts by this factor (≥1).
+    pub sample_divisor: usize,
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl Default for Protocol {
+    fn default() -> Self {
+        // Default: scaled counts, halved samples (AIME 8→4, small 4→2)
+        // to keep a full table run tractable on one CPU core.
+        Protocol { full_size: false, sample_divisor: 2, temperature: 0.6, top_p: 0.95 }
+    }
+}
+
+impl Protocol {
+    pub fn paper() -> Self {
+        Protocol { full_size: true, sample_divisor: 1, temperature: 0.6, top_p: 0.95 }
+    }
+
+    pub fn samples_for(&self, suite: &Suite) -> usize {
+        (suite.samples / self.sample_divisor).max(1)
+    }
+}
+
+/// Result of one suite evaluation.
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub suite: &'static str,
+    pub weight: f64,
+    /// Suite-level score (0–100) per sample pass.
+    pub sample_scores: Vec<f64>,
+    pub n_questions: usize,
+}
+
+impl SuiteResult {
+    pub fn mean(&self) -> f64 {
+        let (m, _) = crate::util::mean_std(&self.sample_scores);
+        m
+    }
+
+    /// Population std across sample passes (None for single-pass suites).
+    pub fn std(&self) -> Option<f64> {
+        if self.sample_scores.len() < 2 {
+            return None;
+        }
+        let (_, s) = crate::util::mean_std(&self.sample_scores);
+        Some(s)
+    }
+}
+
+/// Full evaluation of one (checkpoint, scheme) column.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub model: String,
+    pub scheme: String,
+    pub suites: Vec<SuiteResult>,
+}
+
+impl EvalResult {
+    /// Plain average over suites (the paper's "Average" row).
+    pub fn average(&self) -> f64 {
+        let scores: Vec<f64> = self.suites.iter().map(|s| s.mean()).collect();
+        let (m, _) = crate::util::mean_std(&scores);
+        m
+    }
+
+    /// Table-8-weighted average (the paper's "Weighted avg." row).
+    pub fn weighted_average(&self) -> f64 {
+        let num: f64 = self.suites.iter().map(|s| s.weight * s.mean()).sum();
+        let den: f64 = self.suites.iter().map(|s| s.weight).sum();
+        num / den
+    }
+
+    /// Relative accuracy drop vs a reference (the paper clamps gains
+    /// to 0, reporting "0" when a quantized model beats the reference).
+    pub fn accuracy_drop_vs(&self, reference: &EvalResult) -> f64 {
+        let r = reference.weighted_average();
+        let d = (r - self.weighted_average()) / r * 100.0;
+        d.max(0.0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::str_(&self.model)),
+            ("scheme", json::str_(&self.scheme)),
+            (
+                "suites",
+                json::arr(
+                    self.suites
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("suite", json::str_(s.suite)),
+                                ("weight", json::num(s.weight)),
+                                ("n_questions", json::num(s.n_questions as f64)),
+                                (
+                                    "sample_scores",
+                                    json::arr(
+                                        s.sample_scores.iter().map(|&x| json::num(x)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<EvalResult> {
+        let mut suites_out = Vec::new();
+        for sv in v.req("suites")?.as_arr()? {
+            let name = sv.req("suite")?.as_str()?;
+            let suite = suites::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown suite {name:?}"))?;
+            suites_out.push(SuiteResult {
+                suite: suite.name,
+                weight: sv.req("weight")?.as_f64()?,
+                n_questions: sv.req("n_questions")?.as_usize()?,
+                sample_scores: sv
+                    .req("sample_scores")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_f64())
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(EvalResult {
+            model: v.req("model")?.as_str()?.to_string(),
+            scheme: v.req("scheme")?.as_str()?.to_string(),
+            suites: suites_out,
+        })
+    }
+}
+
+/// Score a generation against the expected answer.
+///
+/// MBPP ("prefix-lenient"): the expected content tokens must be a prefix
+/// of the generation — trailing rambling is forgiven. Everything else
+/// (including MBPP+, the "stricter tests" variant) requires exact match
+/// including the terminating EOS.
+pub fn score(family: TaskFamily, strict: bool, expected: &[i32], generated: &[i32]) -> bool {
+    let _ = family;
+    if strict {
+        generated == expected
+    } else {
+        let content = &expected[..expected.len() - 1]; // strip EOS
+        generated.len() >= content.len() && &generated[..content.len()] == content
+    }
+}
+
+/// Evaluate one suite through the coordinator.
+pub fn run_suite(
+    coord: &mut Coordinator,
+    suite: &'static Suite,
+    protocol: &Protocol,
+    strict_override: Option<bool>,
+) -> Result<SuiteResult> {
+    let n = suite.count(protocol.full_size);
+    let samples = protocol.samples_for(suite);
+    // MBPP is the only prefix-lenient suite (MBPP+ re-scores strictly).
+    let strict = strict_override.unwrap_or(suite.name != "MBPP");
+
+    let mut sample_scores = Vec::with_capacity(samples);
+    for s in 0..samples {
+        let mut correct = 0usize;
+        let mut questions = Vec::with_capacity(n);
+        for qid in 0..n {
+            let q = tasks::eval_question(suite, qid as u64);
+            coord.submit(Request {
+                id: qid as u64,
+                prompt: q.prompt.clone(),
+                params: SamplingParams {
+                    temperature: protocol.temperature,
+                    top_p: protocol.top_p,
+                    max_new_tokens: tasks::MAX_ANSWER,
+                },
+                seed: 0x5eed ^ (suite.stream_id())
+                    ^ ((qid as u64) << 20)
+                    ^ ((s as u64) << 50),
+            })?;
+            questions.push(q);
+        }
+        let responses = coord.run_to_completion()?;
+        for resp in responses {
+            let q = &questions[resp.id as usize];
+            if score(suite.family, strict, &q.answer, &resp.tokens) {
+                correct += 1;
+            }
+        }
+        sample_scores.push(correct as f64 / n as f64 * 100.0);
+    }
+    Ok(SuiteResult {
+        suite: suite.name,
+        weight: suite.weight,
+        sample_scores,
+        n_questions: n,
+    })
+}
+
+/// Evaluate all nine suites for one engine.
+pub fn run_all(coord: &mut Coordinator, protocol: &Protocol) -> Result<EvalResult> {
+    let mut out = Vec::new();
+    for suite in suites::SUITES {
+        let t0 = std::time::Instant::now();
+        let r = run_suite(coord, suite, protocol, None)?;
+        eprintln!(
+            "[eval] {} {}: {} = {:.2} (±{:.2}) [{} questions × {} samples, {:.1}s]",
+            coord.engine().model_name,
+            coord.engine().scheme_name,
+            suite.name,
+            r.mean(),
+            r.std().unwrap_or(0.0),
+            r.n_questions,
+            r.sample_scores.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        out.push(r);
+    }
+    Ok(EvalResult {
+        model: coord.engine().model_name.clone(),
+        scheme: coord.engine().scheme_name.clone(),
+        suites: out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoring_rules() {
+        use TaskFamily::*;
+        // Exact.
+        assert!(score(Arith, true, &[7, 8, 4], &[7, 8, 4]));
+        assert!(!score(Arith, true, &[7, 8, 4], &[7, 8]));
+        assert!(!score(Arith, true, &[7, 8, 4], &[7, 8, 4, 9]));
+        // Prefix-lenient (MBPP): rambling after the answer is fine.
+        assert!(score(Transform, false, &[7, 8, 4], &[7, 8, 4]));
+        assert!(score(Transform, false, &[7, 8, 4], &[7, 8, 9, 9]));
+        assert!(!score(Transform, false, &[7, 8, 4], &[7, 9, 4]));
+    }
+
+    #[test]
+    fn protocol_sample_scaling() {
+        let p = Protocol::default();
+        assert_eq!(p.samples_for(suites::by_name("AIME 2024").unwrap()), 4);
+        assert_eq!(p.samples_for(suites::by_name("MATH 500").unwrap()), 2);
+        assert_eq!(p.samples_for(suites::by_name("MMLU").unwrap()), 1);
+        let full = Protocol::paper();
+        assert_eq!(full.samples_for(suites::by_name("AIME 2024").unwrap()), 8);
+    }
+
+    #[test]
+    fn eval_result_aggregation() {
+        let mk = |name: &str, scores: Vec<f64>| SuiteResult {
+            suite: suites::by_name(name).unwrap().name,
+            weight: suites::by_name(name).unwrap().weight,
+            sample_scores: scores,
+            n_questions: 10,
+        };
+        let r = EvalResult {
+            model: "m".into(),
+            scheme: "s".into(),
+            suites: vec![mk("AIME 2024", vec![50.0, 60.0]), mk("MMLU", vec![80.0])],
+        };
+        assert!((r.average() - 67.5).abs() < 1e-9);
+        // Weighted: (0.2·55 + 1.0·80) / 1.2 = 75.833…
+        assert!((r.weighted_average() - 75.8333333).abs() < 1e-5);
+        let json = r.to_json();
+        let back = EvalResult::from_json(&json).unwrap();
+        assert!((back.weighted_average() - r.weighted_average()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_drop_clamped_at_zero() {
+        let mk = |score: f64| EvalResult {
+            model: "m".into(),
+            scheme: "s".into(),
+            suites: vec![SuiteResult {
+                suite: suites::SUITES[0].name,
+                weight: 1.0,
+                sample_scores: vec![score],
+                n_questions: 1,
+            }],
+        };
+        let reference = mk(80.0);
+        assert!((mk(76.0).accuracy_drop_vs(&reference) - 5.0).abs() < 1e-9);
+        assert_eq!(mk(85.0).accuracy_drop_vs(&reference), 0.0);
+    }
+}

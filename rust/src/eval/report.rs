@@ -1,0 +1,147 @@
+//! Table rendering for the accuracy tables (Tables 2–5).
+
+use super::EvalResult;
+
+/// Render an accuracy table: one row per suite (mean with ±std), plus
+/// Average / Weighted avg. / Accuracy drop rows — the exact row
+/// structure of Tables 2–5. The first column is the reference
+/// (accuracy drop is relative to it).
+pub fn render(title: &str, columns: &[EvalResult]) -> String {
+    assert!(!columns.is_empty());
+    let reference = &columns[0];
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n\n"));
+
+    let mut header = vec!["Benchmark".to_string()];
+    header.extend(columns.iter().map(|c| display_scheme(&c.scheme)));
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    for (i, suite) in reference.suites.iter().enumerate() {
+        let mut row = vec![suite.suite.to_string()];
+        for c in columns {
+            let s = &c.suites[i];
+            match s.std() {
+                Some(sd) => row.push(format!("{:.2} (±{:.2})", s.mean(), sd)),
+                None => row.push(format!("{:.2}", s.mean())),
+            }
+        }
+        rows.push(row);
+    }
+    let mut avg = vec!["Average".to_string()];
+    let mut wavg = vec!["Weighted avg.".to_string()];
+    let mut drop = vec!["Accuracy drop".to_string()];
+    for (i, c) in columns.iter().enumerate() {
+        avg.push(format!("{:.2}", c.average()));
+        wavg.push(format!("{:.2}", c.weighted_average()));
+        if i == 0 {
+            drop.push("-".to_string());
+        } else {
+            let d = c.accuracy_drop_vs(reference);
+            drop.push(if d == 0.0 { "0".to_string() } else { format!("{d:.2}%") });
+        }
+    }
+    rows.push(avg);
+    rows.push(wavg);
+    rows.push(drop);
+
+    out.push_str(&render_markdown(&header, &rows));
+    out
+}
+
+/// Human display name for a scheme column.
+pub fn display_scheme(name: &str) -> String {
+    match name {
+        "f32" => "FP32 (reference)".to_string(),
+        "q8_0" => "Q8_0 (llama.cpp)".to_string(),
+        "q4_k_m" => "Q4_K_M (llama.cpp)".to_string(),
+        "q3_k_m" => "Q3_K_M (llama.cpp)".to_string(),
+        "dq3_k_m" => "DQ3_K_M (ours)".to_string(),
+        "q2_k_l" => "Q2_K_L (llama.cpp)".to_string(),
+        "ud_q2_k_xl" => "UD-Q2_K_XL (Unsloth)".to_string(),
+        "q4_k" => "Q4_K".to_string(),
+        "q3_k" => "Q3_K".to_string(),
+        other => other.to_string(),
+    }
+}
+
+/// Simple aligned markdown table.
+pub fn render_markdown(header: &[String], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut width = vec![0usize; ncol];
+    for (i, h) in header.iter().enumerate() {
+        width[i] = h.chars().count();
+    }
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            width[i] = width[i].max(cell.chars().count());
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:w$} |", c, w = width[i]));
+        }
+        s.push('\n');
+        s
+    };
+    let mut out = fmt_row(header);
+    out.push('|');
+    for w in &width {
+        out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{suites, SuiteResult};
+
+    fn fake(scheme: &str, base: f64) -> EvalResult {
+        EvalResult {
+            model: "tiny-moe".into(),
+            scheme: scheme.into(),
+            suites: suites::SUITES
+                .iter()
+                .enumerate()
+                .map(|(i, s)| SuiteResult {
+                    suite: s.name,
+                    weight: s.weight,
+                    sample_scores: if s.samples > 1 {
+                        vec![base + i as f64, base + i as f64 + 1.0]
+                    } else {
+                        vec![base + i as f64]
+                    },
+                    n_questions: 8,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn renders_all_rows() {
+        let cols = vec![fake("f32", 80.0), fake("dq3_k_m", 79.0)];
+        let t = render("Table 2: DeepSeek-R1 proxy", &cols);
+        assert!(t.contains("AIME 2024"));
+        assert!(t.contains("Weighted avg."));
+        assert!(t.contains("Accuracy drop"));
+        assert!(t.contains("DQ3_K_M (ours)"));
+        assert!(t.contains("(±")); // std for multi-sample rows
+        // 9 suites + 3 aggregate rows + header + separator = 14 lines + title.
+        assert_eq!(t.lines().filter(|l| l.starts_with('|')).count(), 14);
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let t = render_markdown(
+            &["A".into(), "B".into()],
+            &[vec!["x".into(), "yyyy".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+}

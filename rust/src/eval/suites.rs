@@ -1,0 +1,148 @@
+//! Benchmark suite registry — the paper's nine benchmarks with their
+//! question counts, sampling protocol and weighted-average weights
+//! (Table 8 / §4.2), mapped to our synthetic proxy generators.
+
+/// Task family a suite draws from (determines generator + scorer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskFamily {
+    /// Multi-step modular-arithmetic chains (AIME proxy).
+    ArithChain,
+    /// Two-step modular arithmetic (MATH proxy).
+    Arith,
+    /// 4-way multiple choice over a memorized relation KB.
+    Knowledge,
+    /// Sequence-transformation output prediction (MBPP proxy).
+    Transform,
+    /// Composed two-op transformations (LiveCodeBench proxy).
+    TransformHard,
+}
+
+/// One benchmark suite.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    /// Paper benchmark this proxies.
+    pub name: &'static str,
+    pub family: TaskFamily,
+    /// Question count in the paper (Table 8).
+    pub paper_count: usize,
+    /// Question count we run by default (scaled for CPU; `--full-size`
+    /// restores `paper_count`).
+    pub default_count: usize,
+    /// Independent samples per question (§4.2: 8 for AIME, 4 for small
+    /// suites, 1 for the large knowledge suites).
+    pub samples: usize,
+    /// Weight in the paper's weighted average (Table 8).
+    pub weight: f64,
+    /// Knowledge-domain id (disjoint relation spaces for MMLU/CMMLU/
+    /// C-Eval/GPQA); 0 for non-knowledge suites.
+    pub domain: u32,
+}
+
+/// The nine suites, in the paper's table row order.
+pub const SUITES: &[Suite] = &[
+    Suite { name: "AIME 2024", family: TaskFamily::ArithChain, paper_count: 30, default_count: 30, samples: 8, weight: 0.2, domain: 0 },
+    Suite { name: "MATH 500", family: TaskFamily::Arith, paper_count: 500, default_count: 64, samples: 4, weight: 0.5, domain: 0 },
+    Suite { name: "GPQA", family: TaskFamily::Knowledge, paper_count: 198, default_count: 64, samples: 4, weight: 0.5, domain: 1 },
+    Suite { name: "MBPP", family: TaskFamily::Transform, paper_count: 378, default_count: 64, samples: 4, weight: 0.5, domain: 0 },
+    Suite { name: "MBPP+", family: TaskFamily::Transform, paper_count: 378, default_count: 64, samples: 4, weight: 0.5, domain: 0 },
+    Suite { name: "LiveCodeBench", family: TaskFamily::TransformHard, paper_count: 272, default_count: 64, samples: 4, weight: 0.5, domain: 0 },
+    Suite { name: "MMLU", family: TaskFamily::Knowledge, paper_count: 14042, default_count: 160, samples: 1, weight: 1.0, domain: 2 },
+    Suite { name: "CMMLU", family: TaskFamily::Knowledge, paper_count: 11582, default_count: 160, samples: 1, weight: 1.0, domain: 3 },
+    Suite { name: "C-Eval", family: TaskFamily::Knowledge, paper_count: 12342, default_count: 160, samples: 1, weight: 1.0, domain: 4 },
+];
+
+/// MBPP and MBPP+ share questions (MBPP+ re-scores with stricter
+/// checking); this index pairs them.
+pub const MBPP_PLUS_INDEX: usize = 4;
+
+pub fn by_name(name: &str) -> Option<&'static Suite> {
+    SUITES.iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+impl Suite {
+    /// Question count under a given protocol scale.
+    pub fn count(&self, full_size: bool) -> usize {
+        if full_size {
+            self.paper_count
+        } else {
+            self.default_count
+        }
+    }
+
+    /// Stable substream id for the task generator (shared with Python).
+    pub fn stream_id(&self) -> u64 {
+        // FNV-1a over the name — mirrored in python/compile/tasks.py.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counts_and_weights_match_table8() {
+        let expect: &[(&str, usize, f64)] = &[
+            ("AIME 2024", 30, 0.2),
+            ("MATH 500", 500, 0.5),
+            ("GPQA", 198, 0.5),
+            ("MBPP", 378, 0.5),
+            ("MBPP+", 378, 0.5),
+            ("LiveCodeBench", 272, 0.5),
+            ("MMLU", 14042, 1.0),
+            ("CMMLU", 11582, 1.0),
+            ("C-Eval", 12342, 1.0),
+        ];
+        assert_eq!(SUITES.len(), expect.len());
+        for (s, (name, count, weight)) in SUITES.iter().zip(expect) {
+            assert_eq!(&s.name, name);
+            assert_eq!(&s.paper_count, count);
+            assert_eq!(&s.weight, weight);
+        }
+    }
+
+    #[test]
+    fn sampling_protocol_matches_section_4_2() {
+        assert_eq!(by_name("AIME 2024").unwrap().samples, 8);
+        assert_eq!(by_name("MATH 500").unwrap().samples, 4);
+        assert_eq!(by_name("MMLU").unwrap().samples, 1);
+    }
+
+    #[test]
+    fn knowledge_domains_disjoint() {
+        let domains: Vec<u32> = SUITES
+            .iter()
+            .filter(|s| s.family == TaskFamily::Knowledge)
+            .map(|s| s.domain)
+            .collect();
+        let mut d = domains.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), domains.len(), "domains must be disjoint");
+    }
+
+    #[test]
+    fn stream_ids_stable_and_distinct() {
+        let ids: Vec<u64> = SUITES.iter().map(|s| s.stream_id()).collect();
+        let mut d = ids.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), ids.len());
+        // Golden value pinned for the Python mirror.
+        assert_eq!(by_name("MATH 500").unwrap().stream_id(), fnv("MATH 500"));
+    }
+
+    fn fnv(s: &str) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in s.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}

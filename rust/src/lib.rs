@@ -1,0 +1,42 @@
+//! # dsq — DeepSeek Quantization Analysis System
+//!
+//! A reproduction of *"Quantitative Analysis of Performance Drop in DeepSeek
+//! Model Quantization"* (Unicom Data Intelligence, 2025).
+//!
+//! The crate provides, bottom-up:
+//!
+//! - [`quant`] — the llama.cpp k-quant codec family (`q2_k` … `q6_k`,
+//!   `q8_0`) implemented from scratch with byte-layout-faithful block
+//!   formats and importance-weighted scale search.
+//! - [`scheme`] — the quantization *recipe* engine: per-module format
+//!   rules (Table 7 of the paper) including the paper's contribution,
+//!   **DQ3_K_M** dynamic 3-bit allocation.
+//! - [`model`] — architecture census for DeepSeek-V3/R1 (671B),
+//!   R1-distill-Qwen-32B, and the tiny proxy models used for end-to-end
+//!   accuracy evaluation.
+//! - [`memory`] — the analytic memory-usage model behind Tables 1 and 6.
+//! - [`container`] — the `.dsq` tensor container (mmap-able, 4 KiB
+//!   aligned) used to ship both FP32 and quantized checkpoints.
+//! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
+//!   artifacts and executes them (Python is never on the request path).
+//! - [`coordinator`] — the serving layer: request router, continuous
+//!   batcher, KV-cache sessions, sampler, metrics.
+//! - [`eval`] — the benchmark harness reproducing Tables 2–5: nine proxy
+//!   suites, the paper's sampling protocol, weighted aggregation.
+//! - [`calib`] — calibration utilities: activation statistics (imatrix)
+//!   and super-weight scanning.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper table to
+//! a harness entry point.
+
+pub mod cli;
+pub mod container;
+pub mod coordinator;
+pub mod eval;
+pub mod memory;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod scheme;
+pub mod tables;
+pub mod util;

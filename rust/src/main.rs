@@ -1,0 +1,586 @@
+//! `dsq` — the leader binary: quantization, serving, evaluation, and
+//! table regeneration for the DeepSeek-quantization reproduction.
+//!
+//! ```text
+//! dsq table 1|6|7|8 [--paper]            regenerate resource tables
+//! dsq table 2|3|4|5 [--hlo D --ckpt-dir D]  accuracy tables (needs artifacts)
+//! dsq quantize IN.dsq --scheme S --output OUT.dsq [--imatrix F]
+//! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json]
+//! dsq serve --hlo D --ckpt F --requests N   (serving smoke/throughput)
+//! dsq memory --model M --scheme S [--ctx N] [--seqs N]
+//! dsq recommend --model M               §4.4 device recommendations
+//! dsq sweep-error --input CKPT.dsq      bpw ↔ reconstruction error (E10)
+//! dsq testvec --out DIR                 cross-language codec vectors
+//! dsq inspect FILE.dsq
+//! dsq schemes                           list built-in schemes
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use dsq::cli::Args;
+use dsq::container::{quantize_container, Container};
+use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
+use dsq::eval::{self, report, suites};
+use dsq::memory::{self, devices};
+use dsq::model::ModelConfig;
+use dsq::quant::{self, QuantFormat};
+use dsq::runtime::Engine;
+use dsq::scheme::builtin;
+use dsq::util::json;
+use dsq::util::rng::Pcg;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        print!("{}", HELP);
+        return;
+    }
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+dsq — DeepSeek quantization analysis (paper reproduction)
+
+Commands:
+  table <1-8>        regenerate a paper table (2-5 need artifacts)
+  quantize IN.dsq --scheme S --output OUT.dsq
+  eval --hlo DIR --ckpt FILE [--out results.json] [--full-size]
+  serve --hlo DIR --ckpt FILE [--requests N]
+  memory --model M --scheme S [--ctx N] [--seqs N]
+  recommend [--model M]
+  sweep-error --input CKPT.dsq
+  testvec --out DIR
+  fidelity --tag r1 [--schemes a,b,c]
+  inspect FILE.dsq
+  schemes
+";
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "table" => cmd_table(args),
+        "quantize" => cmd_quantize(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "memory" => cmd_memory(args),
+        "recommend" => cmd_recommend(args),
+        "sweep-error" => cmd_sweep_error(args),
+        "testvec" => cmd_testvec(args),
+        "fidelity" => cmd_fidelity(args),
+        "inspect" => cmd_inspect(args),
+        "schemes" => cmd_schemes(),
+        other => bail!("unknown command {other:?}; try `dsq help`"),
+    }
+}
+
+fn cmd_schemes() -> Result<()> {
+    let cfg = ModelConfig::by_name("deepseek-r1-671b")?;
+    println!("{:<12} {:>9} {:>9}  source", "scheme", "avg bits", "size");
+    for s in builtin::all() {
+        println!(
+            "{:<12} {:>9.3} {:>9}  {}",
+            s.name,
+            s.avg_bits(&cfg),
+            dsq::util::fmt_gib(s.model_bytes(&cfg)),
+            s.source
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let which: u32 = args.positional_at(0)?.parse().context("table number")?;
+    match which {
+        1 => println!("{}", dsq::tables::table1(args.switch("paper"))?),
+        6 => {
+            let results = load_cached_results(args)?;
+            println!("{}", dsq::tables::table6(&results)?);
+        }
+        7 => println!("{}", dsq::tables::table7()?),
+        8 => println!("{}", dsq::tables::table8(args.switch("full-size"))),
+        2..=5 => cmd_accuracy_table(args, which)?,
+        other => bail!("unknown table {other}"),
+    }
+    Ok(())
+}
+
+/// Scheme columns per accuracy table (first = reference).
+fn table_columns(which: u32) -> (&'static str, &'static str, Vec<&'static str>) {
+    match which {
+        2 => ("r1", "Table 2: DeepSeek-R1 proxy (tiny-moe)",
+              vec!["f32", "q4_k_m", "q3_k_m", "ud_q2_k_xl", "dq3_k_m"]),
+        3 => ("v3", "Table 3: DeepSeek-V3 proxy (tiny-moe)",
+              vec!["f32", "q4_k_m", "q3_k_m", "q2_k_l", "dq3_k_m"]),
+        4 => ("v3_0324", "Table 4: DeepSeek-V3-0324 proxy (tiny-moe)",
+              vec!["f32", "q4_k_m", "q3_k_m", "q2_k_l", "dq3_k_m", "q4_k", "q3_k"]),
+        5 => ("distill", "Table 5: R1-distill proxy (tiny-dense)",
+              vec!["f32", "q8_0", "q4_k_m", "q3_k_m"]),
+        _ => unreachable!(),
+    }
+}
+
+fn results_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.flag_or("results", "artifacts/results"))
+}
+
+fn cmd_accuracy_table(args: &Args, which: u32) -> Result<()> {
+    let (ckpt_tag, title, schemes) = table_columns(which);
+    let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
+    let ckpt_dir = PathBuf::from(args.flag_or("ckpt-dir", "artifacts/ckpt"));
+    let rdir = results_dir(args);
+    std::fs::create_dir_all(&rdir)?;
+    let protocol = protocol_from_args(args);
+    let model = if which == 5 { "tiny-dense" } else { "tiny-moe" };
+
+    let mut columns = Vec::new();
+    for scheme in &schemes {
+        let model_tag = format!("{model}-{ckpt_tag}");
+        let cache = rdir.join(format!("{model_tag}_{scheme}.json"));
+        let result = if cache.exists() {
+            eval::EvalResult::from_json(&json::parse_file(&cache)?)?
+        } else {
+            let ckpt = checkpoint_for(&ckpt_dir, ckpt_tag, scheme)?;
+            let engine = Engine::load(&hlo, &ckpt)?;
+            let mut coord = Coordinator::new(engine);
+            let mut r = eval::run_all(&mut coord, &protocol)?;
+            r.model = model_tag.clone();
+            std::fs::write(&cache, json::to_string_pretty(&r.to_json()))?;
+            eprintln!("[eval] cached → {}", cache.display());
+            r
+        };
+        columns.push(result);
+    }
+    println!("{}", report::render(title, &columns));
+    Ok(())
+}
+
+/// Resolve (and lazily create) the quantized checkpoint for a scheme.
+fn checkpoint_for(ckpt_dir: &Path, tag: &str, scheme_name: &str) -> Result<PathBuf> {
+    let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
+    if scheme_name == "f32" {
+        if !f32_path.exists() {
+            bail!(
+                "{} missing — run `make artifacts` (python training) first",
+                f32_path.display()
+            );
+        }
+        return Ok(f32_path);
+    }
+    let qpath = ckpt_dir.join(format!("{tag}.{scheme_name}.dsq"));
+    if !qpath.exists() {
+        let src = Container::open(&f32_path)?;
+        let scheme = builtin::scheme(scheme_name)?;
+        eprintln!("[quantize] {} → {}", f32_path.display(), qpath.display());
+        quantize_container(&src, &scheme, None)?.write(&qpath)?;
+    }
+    Ok(qpath)
+}
+
+fn load_cached_results(args: &Args) -> Result<Vec<eval::EvalResult>> {
+    let rdir = results_dir(args);
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&rdir) {
+        for e in entries.flatten() {
+            if e.path().extension().is_some_and(|x| x == "json") {
+                if let Ok(v) = json::parse_file(&e.path()) {
+                    if let Ok(r) = eval::EvalResult::from_json(&v) {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn protocol_from_args(args: &Args) -> eval::Protocol {
+    let mut p = if args.switch("full-size") {
+        eval::Protocol::paper()
+    } else {
+        eval::Protocol::default()
+    };
+    if let Some(d) = args.flag("sample-divisor") {
+        p.sample_divisor = d.parse().unwrap_or(p.sample_divisor).max(1);
+    }
+    p
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.positional_at(0).or_else(|_| args.require("input"))?);
+    let scheme = builtin::scheme(args.require("scheme")?)?;
+    let output = PathBuf::from(args.require("output")?);
+    let src = Container::open(&input)?;
+    let imatrix = match args.flag("imatrix") {
+        Some(p) => Some(load_imatrix(Path::new(p))?),
+        None => None,
+    };
+    let t0 = std::time::Instant::now();
+    let w = quantize_container(&src, &scheme, imatrix.as_ref())?;
+    w.write(&output)?;
+    let out = Container::open(&output)?;
+    println!(
+        "quantized {} ({} tensors) with {} in {:.2}s: {} → {} bytes ({:.2}×)",
+        input.display(),
+        out.tensors.len(),
+        scheme.name,
+        t0.elapsed().as_secs_f64(),
+        src.data_bytes(),
+        out.data_bytes(),
+        src.data_bytes() as f64 / out.data_bytes() as f64
+    );
+    Ok(())
+}
+
+fn load_imatrix(path: &Path) -> Result<std::collections::HashMap<String, Vec<f32>>> {
+    // imatrix container: a .dsq file whose tensors hold per-element
+    // importance (f32), same names as the model.
+    let c = Container::open(path)?;
+    let mut map = std::collections::HashMap::new();
+    for t in &c.tensors {
+        map.insert(t.name.clone(), c.dequantize(t)?);
+    }
+    Ok(map)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let engine = Engine::load(&hlo, &ckpt)?;
+    let mut coord = Coordinator::new(engine);
+    let protocol = protocol_from_args(args);
+    let result = match args.flag("suite") {
+        Some(name) => {
+            let suite = suites::by_name(name).ok_or_else(|| anyhow!("unknown suite {name}"))?;
+            let r = eval::run_suite(&mut coord, suite, &protocol, None)?;
+            eval::EvalResult {
+                model: coord.engine().model_name.clone(),
+                scheme: coord.engine().scheme_name.clone(),
+                suites: vec![r],
+            }
+        }
+        None => eval::run_all(&mut coord, &protocol)?,
+    };
+    println!("{}", report::render("Evaluation", &[result.clone()]));
+    println!("--- serving metrics ---\n{}", coord.metrics.report());
+    if let Some(out) = args.flag("out") {
+        std::fs::write(out, json::to_string_pretty(&result.to_json()))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
+    let ckpt = PathBuf::from(args.require("ckpt")?);
+    let n: usize = args.flag_parse("requests", 64usize)?;
+    let engine = Engine::load(&hlo, &ckpt)?;
+    let mut coord = Coordinator::new(engine);
+    // Mixed request stream drawn from the benchmark distribution.
+    let mut made = 0u64;
+    for suite in suites::SUITES.iter().cycle() {
+        if made as usize >= n {
+            break;
+        }
+        let q = eval::tasks::eval_question(suite, made);
+        coord.submit(Request {
+            id: made,
+            prompt: q.prompt,
+            params: SamplingParams::paper(),
+            seed: made.wrapping_mul(7919),
+        })?;
+        made += 1;
+    }
+    let t0 = std::time::Instant::now();
+    let responses = coord.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", coord.metrics.report());
+    println!(
+        "served {} requests in {wall:.2}s wall ({:.2} req/s end-to-end)",
+        responses.len(),
+        responses.len() as f64 / wall
+    );
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let cfg = ModelConfig::by_name(&args.flag_or("model", "deepseek-r1-671b"))?;
+    let scheme = builtin::scheme(&args.flag_or("scheme", "dq3_k_m"))?;
+    let ctx: usize = args.flag_parse("ctx", 32_768usize)?;
+    let seqs: usize = args.flag_parse("seqs", memory::DEFAULT_N_SEQ)?;
+    let est = memory::estimate(&cfg, &scheme, ctx, seqs);
+    println!(
+        "model {} × scheme {} @ ctx {} × {} seqs\n\
+         weights: {} ({:.2} bits/weight)\n\
+         kv cache: {}\n\
+         total: {:.0}GB | per GPU (×8): {:.0}GB",
+        cfg.name,
+        scheme.name,
+        ctx,
+        seqs,
+        dsq::util::fmt_gib1(est.model_bytes),
+        est.avg_bits,
+        dsq::util::fmt_gib1(est.kv_bytes),
+        est.total_gib(),
+        est.per_gpu_gib()
+    );
+    for d in devices::DEVICES {
+        let fits = devices::fits(&est, d);
+        println!(
+            "  8×{:<12} ({} GiB): {}",
+            d.name,
+            d.vram_gib,
+            if fits { "fits" } else { "does NOT fit" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_recommend(args: &Args) -> Result<()> {
+    let cfg = ModelConfig::by_name(&args.flag_or("model", "deepseek-r1-671b"))?;
+    println!("§4.4 deployment recommendations for {} @ 32K ctx:\n", cfg.name);
+    for d in devices::DEVICES {
+        // Highest-precision scheme that fits this device.
+        let mut best: Option<(String, f64)> = None;
+        for s in builtin::all() {
+            if s.name == "f32" {
+                continue;
+            }
+            let est = memory::estimate_default(&cfg, &s);
+            if devices::fits(&est, d) {
+                match &best {
+                    Some((_, bits)) if *bits >= est.avg_bits => {}
+                    _ => best = Some((s.name.clone(), est.avg_bits)),
+                }
+            }
+        }
+        match best {
+            Some((name, bits)) => println!(
+                "  8×{:<12}: {} ({bits:.2} bits/weight)",
+                d.name,
+                report::display_scheme(&name)
+            ),
+            None => println!("  8×{:<12}: no quantization fits", d.name),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep_error(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.require("input")?);
+    let src = Container::open(&input)?;
+    println!(
+        "# bpw ↔ relative RMSE on real checkpoint tensors ({})",
+        src.model.name
+    );
+    println!("{:<8} {:>7} {:>12} {:>12}", "format", "bpw", "rel RMSE", "max |err|");
+    for fmt in [
+        QuantFormat::Q8_0,
+        QuantFormat::Q6K,
+        QuantFormat::Q5K,
+        QuantFormat::Q4K,
+        QuantFormat::Q3K,
+        QuantFormat::Q2K,
+    ] {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        let mut max_err = 0.0f64;
+        for t in &src.tensors {
+            if !t.class.quantizable() || t.n_elems() % fmt.block_weights() != 0 {
+                continue;
+            }
+            let vals = src.dequantize(t)?;
+            let rt = quant::roundtrip(fmt, &vals, None)?;
+            for (a, b) in vals.iter().zip(&rt) {
+                let d = (*a - *b) as f64;
+                num += d * d;
+                den += (*a as f64) * (*a as f64);
+                max_err = max_err.max(d.abs());
+            }
+        }
+        println!(
+            "{:<8} {:>7.4} {:>12.6} {:>12.6}",
+            fmt.name(),
+            fmt.bits_per_weight(),
+            (num / den.max(1e-30)).sqrt(),
+            max_err
+        );
+    }
+    Ok(())
+}
+
+fn cmd_testvec(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.flag_or("out", "artifacts/testvectors"));
+    std::fs::create_dir_all(&out)?;
+    let mut index = Vec::new();
+    for fmt in [
+        QuantFormat::Q8_0,
+        QuantFormat::Q6K,
+        QuantFormat::Q5K,
+        QuantFormat::Q4K,
+        QuantFormat::Q3K,
+        QuantFormat::Q2K,
+        QuantFormat::F16,
+    ] {
+        let n = fmt.block_weights().max(256) * 4;
+        let mut rng = Pcg::new(0xFEED ^ fmt.block_bytes() as u64);
+        let src: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.1).collect();
+        let packed = quant::quantize(fmt, &src, None)?;
+        let deq = quant::dequantize(fmt, &packed, n)?;
+        let base = fmt.name();
+        std::fs::write(
+            out.join(format!("{base}.src.f32")),
+            src.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>(),
+        )?;
+        std::fs::write(out.join(format!("{base}.packed.bin")), &packed)?;
+        std::fs::write(
+            out.join(format!("{base}.deq.f32")),
+            deq.iter().flat_map(|v| v.to_le_bytes()).collect::<Vec<u8>>(),
+        )?;
+        index.push(json::obj(vec![
+            ("format", json::str_(base)),
+            ("n", json::num(n as f64)),
+            ("packed_bytes", json::num(packed.len() as f64)),
+        ]));
+    }
+    std::fs::write(
+        out.join("index.json"),
+        json::to_string_pretty(&json::Value::Arr(index)),
+    )?;
+    println!("wrote test vectors to {}", out.display());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.positional_at(0)?);
+    let c = Container::open(&path)?;
+    println!(
+        "{}: model={} scheme={} tensors={} data={:.2} MiB",
+        path.display(),
+        c.model.name,
+        c.scheme_name,
+        c.tensors.len(),
+        c.data_bytes() as f64 / (1 << 20) as f64
+    );
+    println!("meta: {}", json::to_string(&c.meta));
+    if args.switch("verbose") {
+        for t in &c.tensors {
+            println!(
+                "  {:<36} {:<6} {:?} ({} bytes)",
+                t.name,
+                t.format.name(),
+                t.shape,
+                t.nbytes
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `dsq fidelity` — logit-level quantization fidelity (experiment E11).
+///
+/// Runs identical prompts through the FP32 engine and each quantized
+/// engine, reporting cosine similarity of last-token logits, top-1
+/// agreement, and the log-prob gap on the reference's top token. This
+/// measures quantization damage *independently of task mastery* — the
+/// monotone bitwidth↔fidelity curve is the distilled form of the
+/// paper's Tables 2–4.
+fn cmd_fidelity(args: &Args) -> Result<()> {
+    let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
+    let ckpt_dir = PathBuf::from(args.flag_or("ckpt-dir", "artifacts/ckpt"));
+    let tag = args.flag_or("tag", "r1");
+    let n_prompts: usize = args.flag_parse("prompts", 96usize)?;
+    let schemes: Vec<String> = args
+        .flag_or("schemes", "q8_0,q4_k_m,q3_k_m,dq3_k_m,ud_q2_k_xl,q2_k_l")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+
+    let reference = Engine::load(&hlo, &checkpoint_for(&ckpt_dir, &tag, "f32")?)?;
+    let b = reference.batch();
+    let t = reference.prompt_len();
+    let v = reference.vocab();
+
+    // A fixed prompt set across all benchmark suites.
+    let mut prompts: Vec<Vec<i32>> = Vec::new();
+    for i in 0..n_prompts as u64 {
+        let suite = &suites::SUITES[(i % 9) as usize];
+        prompts.push(eval::tasks::eval_question(suite, i).prompt);
+    }
+    let mut ref_logits: Vec<Vec<f32>> = Vec::new();
+    for chunk in prompts.chunks(b) {
+        let mut tokens = vec![0i32; b * t];
+        let mut lengths = vec![1i32; b];
+        for (i, p) in chunk.iter().enumerate() {
+            tokens[i * t..i * t + p.len()].copy_from_slice(p);
+            lengths[i] = p.len() as i32;
+        }
+        let out = reference.run_prefill(&tokens, &lengths)?;
+        for i in 0..chunk.len() {
+            ref_logits.push(out.logits[i * v..(i + 1) * v].to_vec());
+        }
+    }
+    drop(reference);
+
+    println!(
+        "# logit fidelity vs FP32 ({} prompts, checkpoint {tag})\n",
+        prompts.len()
+    );
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>16}",
+        "scheme", "bpw", "cosine", "top1-agree", "dlogprob(top1)"
+    );
+    for scheme_name in &schemes {
+        let engine = Engine::load(&hlo, &checkpoint_for(&ckpt_dir, &tag, scheme_name)?)?;
+        let mut cos_sum = 0.0;
+        let mut agree = 0usize;
+        let mut dlp_sum = 0.0;
+        let mut idx = 0usize;
+        for chunk in prompts.chunks(b) {
+            let mut tokens = vec![0i32; b * t];
+            let mut lengths = vec![1i32; b];
+            for (i, p) in chunk.iter().enumerate() {
+                tokens[i * t..i * t + p.len()].copy_from_slice(p);
+                lengths[i] = p.len() as i32;
+            }
+            let out = engine.run_prefill(&tokens, &lengths)?;
+            for i in 0..chunk.len() {
+                let ql = &out.logits[i * v..(i + 1) * v];
+                let rl = &ref_logits[idx];
+                cos_sum += dsq::quant::error::cosine(rl, ql);
+                let top_ref = dsq::coordinator::sampler::argmax(rl);
+                let top_q = dsq::coordinator::sampler::argmax(ql);
+                if top_ref == top_q {
+                    agree += 1;
+                }
+                let lse = |l: &[f32]| {
+                    let m = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    m + l.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+                };
+                let dlp = (ql[top_ref as usize] - lse(ql)) - (rl[top_ref as usize] - lse(rl));
+                dlp_sum += dlp as f64;
+                idx += 1;
+            }
+        }
+        let n = prompts.len() as f64;
+        let bpw = builtin::scheme(scheme_name)?
+            .avg_bits(&ModelConfig::by_name("deepseek-r1-671b")?);
+        println!(
+            "{:<12} {:>8.2} {:>12.5} {:>11.1}% {:>16.4}",
+            scheme_name,
+            bpw,
+            cos_sum / n,
+            agree as f64 / n * 100.0,
+            dlp_sum / n
+        );
+    }
+    Ok(())
+}

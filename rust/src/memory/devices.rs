@@ -1,0 +1,68 @@
+//! Device database and deployment recommendation (§4.4 of the paper).
+
+use super::MemoryEstimate;
+
+/// A GPU/NPU device type the paper discusses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub name: &'static str,
+    pub vendor: &'static str,
+    /// Device memory in GiB.
+    pub vram_gib: u32,
+}
+
+/// Devices from §1/§4.4: "a typical single machine with 8 GPU/NPU
+/// devices (like Nvidia A100/A800/H100/H800/H20 and Huawei Ascend 910B)".
+pub const DEVICES: &[Device] = &[
+    Device { name: "A100-80G", vendor: "nvidia", vram_gib: 80 },
+    Device { name: "A800-80G", vendor: "nvidia", vram_gib: 80 },
+    Device { name: "H100-80G", vendor: "nvidia", vram_gib: 80 },
+    Device { name: "H800-80G", vendor: "nvidia", vram_gib: 80 },
+    Device { name: "H20-96G", vendor: "nvidia", vram_gib: 96 },
+    Device { name: "Ascend-910B", vendor: "huawei", vram_gib: 64 },
+];
+
+/// Safety margin: a deployment "fits" if per-device MU leaves at least
+/// this many GiB free (driver/context headroom not counted in the MU
+/// model's per-device constant).
+pub const FIT_MARGIN_GIB: f64 = 1.0;
+
+/// Does this memory estimate fit on a node of 8 × `device`?
+pub fn fits(est: &MemoryEstimate, device: &Device) -> bool {
+    est.per_gpu_gib() + FIT_MARGIN_GIB <= device.vram_gib as f64
+}
+
+pub fn by_name(name: &str) -> Option<&'static Device> {
+    DEVICES.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::estimate_default;
+    use crate::model::ModelConfig;
+    use crate::scheme::builtin;
+
+    /// §4.4's central deployment claim: Q4_K_M fits 80 GB NVIDIA nodes
+    /// but exceeds the Ascend 910B (64 GB); DQ3_K_M fits both.
+    #[test]
+    fn paper_deployment_claims() {
+        let cfg = ModelConfig::deepseek_v3_671b();
+        let h100 = by_name("H100-80G").unwrap();
+        let ascend = by_name("Ascend-910B").unwrap();
+
+        let q4 = estimate_default(&cfg, &builtin::scheme("q4_k_m").unwrap());
+        assert!(fits(&q4, h100), "Q4_K_M should fit H100");
+        assert!(!fits(&q4, ascend), "Q4_K_M should NOT fit 910B");
+
+        let dq3 = estimate_default(&cfg, &builtin::scheme("dq3_k_m").unwrap());
+        assert!(fits(&dq3, h100), "DQ3_K_M should fit H100");
+        assert!(fits(&dq3, ascend), "DQ3_K_M should fit 910B");
+    }
+
+    #[test]
+    fn device_lookup() {
+        assert!(by_name("h100-80g").is_some());
+        assert!(by_name("tpu-v5").is_none());
+    }
+}

@@ -1,0 +1,376 @@
+//! Tensor census: enumerate every weight tensor of a [`ModelConfig`]
+//! with its GGUF-style module class, layer index and shape.
+
+use super::config::{ModelConfig, ModelKind};
+
+/// GGUF-style module classes (the rows of Table 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModuleClass {
+    TokenEmbd,
+    Output,
+    Norm,
+    AttnQA,
+    AttnQB,
+    AttnKvAMqa,
+    AttnKvB,
+    AttnOutput,
+    // Dense (GQA) attention:
+    AttnQ,
+    AttnK,
+    AttnV,
+    // Dense FFN:
+    FfnGate,
+    FfnUp,
+    FfnDown,
+    // MoE:
+    FfnGateInp,
+    FfnGateExps,
+    FfnUpExps,
+    FfnDownExps,
+    FfnGateShexp,
+    FfnUpShexp,
+    FfnDownShexp,
+}
+
+impl ModuleClass {
+    /// GGUF tensor-name stem, as used in Table 7 and the scheme JSON.
+    pub fn name(self) -> &'static str {
+        use ModuleClass::*;
+        match self {
+            TokenEmbd => "token_embd",
+            Output => "output",
+            Norm => "norm",
+            AttnQA => "attn_q_a",
+            AttnQB => "attn_q_b",
+            AttnKvAMqa => "attn_kv_a_mqa",
+            AttnKvB => "attn_kv_b",
+            AttnOutput => "attn_output",
+            AttnQ => "attn_q",
+            AttnK => "attn_k",
+            AttnV => "attn_v",
+            FfnGate => "ffn_gate",
+            FfnUp => "ffn_up",
+            FfnDown => "ffn_down",
+            FfnGateInp => "ffn_gate_inp",
+            FfnGateExps => "ffn_gate_exps",
+            FfnUpExps => "ffn_up_exps",
+            FfnDownExps => "ffn_down_exps",
+            FfnGateShexp => "ffn_gate_shexp",
+            FfnUpShexp => "ffn_up_shexp",
+            FfnDownShexp => "ffn_down_shexp",
+        }
+    }
+
+    /// All classes, in Table 7 row order where applicable.
+    pub const ALL: [ModuleClass; 21] = [
+        ModuleClass::Output,
+        ModuleClass::TokenEmbd,
+        ModuleClass::AttnKvAMqa,
+        ModuleClass::AttnKvB,
+        ModuleClass::AttnOutput,
+        ModuleClass::AttnQA,
+        ModuleClass::AttnQB,
+        ModuleClass::FfnDown,
+        ModuleClass::FfnGate,
+        ModuleClass::FfnUp,
+        ModuleClass::FfnDownExps,
+        ModuleClass::FfnDownShexp,
+        ModuleClass::FfnGateExps,
+        ModuleClass::FfnGateShexp,
+        ModuleClass::FfnUpExps,
+        ModuleClass::FfnUpShexp,
+        ModuleClass::AttnQ,
+        ModuleClass::AttnK,
+        ModuleClass::AttnV,
+        ModuleClass::FfnGateInp,
+        ModuleClass::Norm,
+    ];
+
+    pub fn parse(name: &str) -> Option<Self> {
+        ModuleClass::ALL.into_iter().find(|c| c.name() == name)
+    }
+
+    /// Norms, biases and the MoE router stay in f32 under every scheme
+    /// (llama.cpp keeps these high-precision too — they are tiny).
+    pub fn quantizable(self) -> bool {
+        !matches!(self, ModuleClass::Norm | ModuleClass::FfnGateInp)
+    }
+}
+
+/// One weight tensor in the census.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    /// Full GGUF-style name, e.g. `blk.7.ffn_down_exps.weight`.
+    pub name: String,
+    pub class: ModuleClass,
+    /// Layer index; `None` for global tensors (embeddings, output).
+    pub layer: Option<usize>,
+    /// Storage shape, outermost first (e.g. `[n_experts, out, in]`).
+    pub shape: Vec<usize>,
+}
+
+impl TensorInfo {
+    pub fn n_params(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+
+    /// The contiguous row length that k-quant blocks run along (the
+    /// innermost dimension).
+    pub fn row_len(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+}
+
+impl ModelConfig {
+    /// Enumerate every weight tensor.
+    pub fn census(&self) -> Vec<TensorInfo> {
+        let mut out = Vec::new();
+        let t = |name: String, class: ModuleClass, layer: Option<usize>, shape: Vec<usize>| {
+            TensorInfo { name, class, layer, shape }
+        };
+        out.push(t(
+            "token_embd.weight".into(),
+            ModuleClass::TokenEmbd,
+            None,
+            vec![self.vocab_size, self.hidden_size],
+        ));
+        for i in 0..self.n_layers {
+            let blk = |stem: &str| format!("blk.{i}.{stem}.weight");
+            out.push(t(blk("attn_norm"), ModuleClass::Norm, Some(i), vec![self.hidden_size]));
+            match self.kind {
+                ModelKind::MlaMoe => {
+                    let qk_head = self.qk_nope_head_dim + self.qk_rope_head_dim;
+                    out.push(t(
+                        blk("attn_q_a"),
+                        ModuleClass::AttnQA,
+                        Some(i),
+                        vec![self.q_lora_rank, self.hidden_size],
+                    ));
+                    out.push(t(
+                        blk("attn_q_a_norm"),
+                        ModuleClass::Norm,
+                        Some(i),
+                        vec![self.q_lora_rank],
+                    ));
+                    out.push(t(
+                        blk("attn_q_b"),
+                        ModuleClass::AttnQB,
+                        Some(i),
+                        vec![self.n_heads * qk_head, self.q_lora_rank],
+                    ));
+                    out.push(t(
+                        blk("attn_kv_a_mqa"),
+                        ModuleClass::AttnKvAMqa,
+                        Some(i),
+                        vec![self.kv_lora_rank + self.qk_rope_head_dim, self.hidden_size],
+                    ));
+                    out.push(t(
+                        blk("attn_kv_a_norm"),
+                        ModuleClass::Norm,
+                        Some(i),
+                        vec![self.kv_lora_rank],
+                    ));
+                    out.push(t(
+                        blk("attn_kv_b"),
+                        ModuleClass::AttnKvB,
+                        Some(i),
+                        vec![
+                            self.n_heads * (self.qk_nope_head_dim + self.v_head_dim),
+                            self.kv_lora_rank,
+                        ],
+                    ));
+                    out.push(t(
+                        blk("attn_output"),
+                        ModuleClass::AttnOutput,
+                        Some(i),
+                        vec![self.hidden_size, self.n_heads * self.v_head_dim],
+                    ));
+                }
+                ModelKind::DenseGqa => {
+                    out.push(t(
+                        blk("attn_q"),
+                        ModuleClass::AttnQ,
+                        Some(i),
+                        vec![self.n_heads * self.head_dim, self.hidden_size],
+                    ));
+                    out.push(t(
+                        blk("attn_k"),
+                        ModuleClass::AttnK,
+                        Some(i),
+                        vec![self.n_kv_heads * self.head_dim, self.hidden_size],
+                    ));
+                    out.push(t(
+                        blk("attn_v"),
+                        ModuleClass::AttnV,
+                        Some(i),
+                        vec![self.n_kv_heads * self.head_dim, self.hidden_size],
+                    ));
+                    out.push(t(
+                        blk("attn_output"),
+                        ModuleClass::AttnOutput,
+                        Some(i),
+                        vec![self.hidden_size, self.n_heads * self.head_dim],
+                    ));
+                }
+            }
+            out.push(t(blk("ffn_norm"), ModuleClass::Norm, Some(i), vec![self.hidden_size]));
+            if self.is_moe_layer(i) {
+                out.push(t(
+                    blk("ffn_gate_inp"),
+                    ModuleClass::FfnGateInp,
+                    Some(i),
+                    vec![self.n_routed_experts, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_gate_exps"),
+                    ModuleClass::FfnGateExps,
+                    Some(i),
+                    vec![self.n_routed_experts, self.moe_intermediate_size, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_up_exps"),
+                    ModuleClass::FfnUpExps,
+                    Some(i),
+                    vec![self.n_routed_experts, self.moe_intermediate_size, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_down_exps"),
+                    ModuleClass::FfnDownExps,
+                    Some(i),
+                    vec![self.n_routed_experts, self.hidden_size, self.moe_intermediate_size],
+                ));
+                let sh_inter = self.n_shared_experts * self.moe_intermediate_size;
+                out.push(t(
+                    blk("ffn_gate_shexp"),
+                    ModuleClass::FfnGateShexp,
+                    Some(i),
+                    vec![sh_inter, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_up_shexp"),
+                    ModuleClass::FfnUpShexp,
+                    Some(i),
+                    vec![sh_inter, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_down_shexp"),
+                    ModuleClass::FfnDownShexp,
+                    Some(i),
+                    vec![self.hidden_size, sh_inter],
+                ));
+            } else {
+                out.push(t(
+                    blk("ffn_gate"),
+                    ModuleClass::FfnGate,
+                    Some(i),
+                    vec![self.intermediate_size, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_up"),
+                    ModuleClass::FfnUp,
+                    Some(i),
+                    vec![self.intermediate_size, self.hidden_size],
+                ));
+                out.push(t(
+                    blk("ffn_down"),
+                    ModuleClass::FfnDown,
+                    Some(i),
+                    vec![self.hidden_size, self.intermediate_size],
+                ));
+            }
+        }
+        out.push(t(
+            "output_norm.weight".into(),
+            ModuleClass::Norm,
+            None,
+            vec![self.hidden_size],
+        ));
+        out.push(t(
+            "output.weight".into(),
+            ModuleClass::Output,
+            None,
+            vec![self.vocab_size, self.hidden_size],
+        ));
+        out
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        self.census().iter().map(|t| t.n_params()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v3_census_totals_671b() {
+        let c = ModelConfig::deepseek_v3_671b();
+        let total = c.total_params();
+        // The census must land on the published 671B figure (±1%).
+        let b = 1_000_000_000f64;
+        let t = total as f64 / b;
+        assert!((665.0..678.0).contains(&t), "total params {t:.1}B");
+    }
+
+    #[test]
+    fn distill_census_totals_32b() {
+        let c = ModelConfig::distill_qwen_32b();
+        let t = c.total_params() as f64 / 1e9;
+        assert!((31.0..34.0).contains(&t), "total params {t:.1}B");
+    }
+
+    #[test]
+    fn moe_layer_structure() {
+        let c = ModelConfig::deepseek_v3_671b();
+        let census = c.census();
+        let down_exps: Vec<_> = census
+            .iter()
+            .filter(|t| t.class == ModuleClass::FfnDownExps)
+            .collect();
+        assert_eq!(down_exps.len(), 58);
+        assert_eq!(down_exps[0].layer, Some(3));
+        assert_eq!(down_exps[0].shape, vec![256, 7168, 2048]);
+        let dense_down: Vec<_> = census
+            .iter()
+            .filter(|t| t.class == ModuleClass::FfnDown)
+            .collect();
+        assert_eq!(dense_down.len(), 3);
+    }
+
+    #[test]
+    fn tiny_quantizable_rows_superblock_aligned() {
+        for cfg in [ModelConfig::tiny_moe(), ModelConfig::tiny_dense()] {
+            for t in cfg.census() {
+                if t.class.quantizable() {
+                    assert_eq!(
+                        t.row_len() % 256,
+                        0,
+                        "{}: row len {} not 256-aligned",
+                        t.name,
+                        t.row_len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let c = ModelConfig::deepseek_v3_671b();
+        let census = c.census();
+        let mut names: Vec<&str> = census.iter().map(|t| t.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(before, names.len());
+    }
+
+    #[test]
+    fn class_name_roundtrip() {
+        for c in ModuleClass::ALL {
+            assert_eq!(ModuleClass::parse(c.name()), Some(c));
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Architecture configurations: the real 671B DeepSeek-V3/R1, the 32B
+//! dense distill, and the tiny proxy models trained at build time.
+
+use anyhow::{bail, Result};
+
+/// Whether a model uses MLA+MoE (DeepSeek-V3 style) or dense GQA
+/// (Qwen2.5 style, for the distill variant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Multi-head Latent Attention + Mixture-of-Experts (DeepSeek-V3/R1).
+    MlaMoe,
+    /// Dense transformer with grouped-query attention (distill-Qwen).
+    DenseGqa,
+}
+
+/// Full architecture description.
+///
+/// For [`ModelKind::DenseGqa`], the MLA/MoE fields are ignored
+/// (`n_routed_experts == 0` etc.).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub kind: ModelKind,
+    pub vocab_size: usize,
+    pub hidden_size: usize,
+    pub n_layers: usize,
+    /// Number of leading dense (non-MoE) layers (`first_k_dense_replace`).
+    pub first_dense: usize,
+    pub n_heads: usize,
+    /// KV heads for GQA (dense models); ignored for MLA.
+    pub n_kv_heads: usize,
+    /// Per-head dim for dense models.
+    pub head_dim: usize,
+    // --- MLA ---
+    pub q_lora_rank: usize,
+    pub kv_lora_rank: usize,
+    pub qk_nope_head_dim: usize,
+    pub qk_rope_head_dim: usize,
+    pub v_head_dim: usize,
+    // --- FFN ---
+    /// Dense-layer FFN intermediate size.
+    pub intermediate_size: usize,
+    /// Per-expert FFN intermediate size (MoE layers).
+    pub moe_intermediate_size: usize,
+    pub n_routed_experts: usize,
+    pub n_shared_experts: usize,
+    pub n_active_experts: usize,
+}
+
+impl ModelConfig {
+    /// DeepSeek-V3 / DeepSeek-R1 (671B). Both share the architecture
+    /// (R1 is an RL-finetuned V3); dims are from the V3 technical report
+    /// `config.json`.
+    pub fn deepseek_v3_671b() -> Self {
+        ModelConfig {
+            name: "deepseek-v3-671b".into(),
+            kind: ModelKind::MlaMoe,
+            vocab_size: 129_280,
+            hidden_size: 7168,
+            n_layers: 61,
+            first_dense: 3,
+            n_heads: 128,
+            n_kv_heads: 128,
+            head_dim: 0,
+            q_lora_rank: 1536,
+            kv_lora_rank: 512,
+            qk_nope_head_dim: 128,
+            qk_rope_head_dim: 64,
+            v_head_dim: 128,
+            intermediate_size: 18_432,
+            moe_intermediate_size: 2048,
+            n_routed_experts: 256,
+            n_shared_experts: 1,
+            n_active_experts: 8,
+        }
+    }
+
+    /// DeepSeek-R1-distill-Qwen-32B (Qwen2.5-32B dense architecture).
+    pub fn distill_qwen_32b() -> Self {
+        ModelConfig {
+            name: "distill-qwen-32b".into(),
+            kind: ModelKind::DenseGqa,
+            vocab_size: 152_064,
+            hidden_size: 5120,
+            n_layers: 64,
+            first_dense: 64,
+            n_heads: 40,
+            n_kv_heads: 8,
+            head_dim: 128,
+            q_lora_rank: 0,
+            kv_lora_rank: 0,
+            qk_nope_head_dim: 0,
+            qk_rope_head_dim: 0,
+            v_head_dim: 0,
+            intermediate_size: 27_648,
+            moe_intermediate_size: 0,
+            n_routed_experts: 0,
+            n_shared_experts: 0,
+            n_active_experts: 0,
+        }
+    }
+
+    /// Tiny MLA+MoE proxy (~7M params) used for the end-to-end accuracy
+    /// experiments (Tables 2–4 shape reproduction). All quantizable
+    /// in-features are multiples of 256 so k-quant super-blocks never
+    /// straddle a matrix row.
+    pub fn tiny_moe() -> Self {
+        ModelConfig {
+            name: "tiny-moe".into(),
+            kind: ModelKind::MlaMoe,
+            vocab_size: 512,
+            hidden_size: 256,
+            n_layers: 6,
+            first_dense: 1,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 0,
+            q_lora_rank: 256,
+            kv_lora_rank: 256,
+            qk_nope_head_dim: 32,
+            qk_rope_head_dim: 32,
+            v_head_dim: 64,
+            intermediate_size: 512,
+            moe_intermediate_size: 256,
+            n_routed_experts: 8,
+            n_shared_experts: 1,
+            n_active_experts: 2,
+        }
+    }
+
+    /// Tiny dense proxy (~3M params) standing in for the distilled
+    /// 32B model (Table 5 shape reproduction).
+    pub fn tiny_dense() -> Self {
+        ModelConfig {
+            name: "tiny-dense".into(),
+            kind: ModelKind::DenseGqa,
+            vocab_size: 512,
+            hidden_size: 256,
+            n_layers: 3,
+            first_dense: 3,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 64,
+            q_lora_rank: 0,
+            kv_lora_rank: 0,
+            qk_nope_head_dim: 0,
+            qk_rope_head_dim: 0,
+            v_head_dim: 0,
+            intermediate_size: 512,
+            moe_intermediate_size: 0,
+            n_routed_experts: 0,
+            n_shared_experts: 0,
+            n_active_experts: 0,
+        }
+    }
+
+    /// Look up a named config.
+    pub fn by_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "deepseek-v3-671b" | "deepseek-r1-671b" | "671b" => {
+                let mut c = Self::deepseek_v3_671b();
+                if name == "deepseek-r1-671b" {
+                    c.name = "deepseek-r1-671b".into();
+                }
+                c
+            }
+            "distill-qwen-32b" | "32b" => Self::distill_qwen_32b(),
+            "tiny-moe" => Self::tiny_moe(),
+            "tiny-dense" => Self::tiny_dense(),
+            other => bail!("unknown model config {other:?}"),
+        })
+    }
+
+    /// Number of MoE layers.
+    pub fn n_moe_layers(&self) -> usize {
+        match self.kind {
+            ModelKind::MlaMoe => self.n_layers - self.first_dense,
+            ModelKind::DenseGqa => 0,
+        }
+    }
+
+    /// Is layer `i` a MoE layer?
+    pub fn is_moe_layer(&self, i: usize) -> bool {
+        self.kind == ModelKind::MlaMoe && i >= self.first_dense
+    }
+
+    /// MLA KV-cache bytes per token (compressed latent + rope key),
+    /// stored in f16: `(kv_lora_rank + qk_rope_head_dim) · n_layers · 2`.
+    /// Dense GQA caches full K/V heads instead.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        match self.kind {
+            ModelKind::MlaMoe => (self.kv_lora_rank + self.qk_rope_head_dim) * self.n_layers * 2,
+            ModelKind::DenseGqa => 2 * self.n_kv_heads * self.head_dim * self.n_layers * 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v3_config_dims_match_tech_report() {
+        let c = ModelConfig::deepseek_v3_671b();
+        assert_eq!(c.n_layers, 61);
+        assert_eq!(c.hidden_size, 7168);
+        assert_eq!(c.n_routed_experts, 256);
+        assert_eq!(c.n_moe_layers(), 58);
+        assert!(!c.is_moe_layer(2));
+        assert!(c.is_moe_layer(3));
+        // MLA cache: (512 + 64) · 61 · 2 bytes ≈ 70.3 KB/token.
+        assert_eq!(c.kv_bytes_per_token(), (512 + 64) * 61 * 2);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(ModelConfig::by_name("deepseek-r1-671b").is_ok());
+        assert!(ModelConfig::by_name("tiny-moe").is_ok());
+        assert!(ModelConfig::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn tiny_rows_are_superblock_aligned() {
+        // Quantization requirement: every quantizable in-feature dim is a
+        // multiple of 256 (checked properly in census tests).
+        let c = ModelConfig::tiny_moe();
+        assert_eq!(c.hidden_size % 256, 0);
+        assert_eq!(c.q_lora_rank % 256, 0);
+        assert_eq!(c.kv_lora_rank % 256, 0);
+        assert_eq!(c.moe_intermediate_size % 256, 0);
+        assert_eq!(c.intermediate_size % 256, 0);
+        assert_eq!(c.n_heads * c.v_head_dim % 256, 0);
+    }
+}
+
+// --- JSON (de)serialization for container headers and configs/models ---
+
+use crate::util::json::{self, Value};
+
+impl ModelConfig {
+    /// Serialize to the JSON object stored in `.dsq` headers and
+    /// `configs/models/*.json`.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::str_(&self.name)),
+            (
+                "kind",
+                json::str_(match self.kind {
+                    ModelKind::MlaMoe => "mla_moe",
+                    ModelKind::DenseGqa => "dense_gqa",
+                }),
+            ),
+            ("vocab_size", json::num(self.vocab_size as f64)),
+            ("hidden_size", json::num(self.hidden_size as f64)),
+            ("n_layers", json::num(self.n_layers as f64)),
+            ("first_dense", json::num(self.first_dense as f64)),
+            ("n_heads", json::num(self.n_heads as f64)),
+            ("n_kv_heads", json::num(self.n_kv_heads as f64)),
+            ("head_dim", json::num(self.head_dim as f64)),
+            ("q_lora_rank", json::num(self.q_lora_rank as f64)),
+            ("kv_lora_rank", json::num(self.kv_lora_rank as f64)),
+            ("qk_nope_head_dim", json::num(self.qk_nope_head_dim as f64)),
+            ("qk_rope_head_dim", json::num(self.qk_rope_head_dim as f64)),
+            ("v_head_dim", json::num(self.v_head_dim as f64)),
+            ("intermediate_size", json::num(self.intermediate_size as f64)),
+            ("moe_intermediate_size", json::num(self.moe_intermediate_size as f64)),
+            ("n_routed_experts", json::num(self.n_routed_experts as f64)),
+            ("n_shared_experts", json::num(self.n_shared_experts as f64)),
+            ("n_active_experts", json::num(self.n_active_experts as f64)),
+        ])
+    }
+
+    /// Inverse of [`ModelConfig::to_json`].
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let kind = match v.req("kind")?.as_str()? {
+            "mla_moe" => ModelKind::MlaMoe,
+            "dense_gqa" => ModelKind::DenseGqa,
+            other => bail!("unknown model kind {other:?}"),
+        };
+        let u = |k: &str| -> Result<usize> { v.req(k)?.as_usize() };
+        Ok(ModelConfig {
+            name: v.req("name")?.as_str()?.to_string(),
+            kind,
+            vocab_size: u("vocab_size")?,
+            hidden_size: u("hidden_size")?,
+            n_layers: u("n_layers")?,
+            first_dense: u("first_dense")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            head_dim: u("head_dim")?,
+            q_lora_rank: u("q_lora_rank")?,
+            kv_lora_rank: u("kv_lora_rank")?,
+            qk_nope_head_dim: u("qk_nope_head_dim")?,
+            qk_rope_head_dim: u("qk_rope_head_dim")?,
+            v_head_dim: u("v_head_dim")?,
+            intermediate_size: u("intermediate_size")?,
+            moe_intermediate_size: u("moe_intermediate_size")?,
+            n_routed_experts: u("n_routed_experts")?,
+            n_shared_experts: u("n_shared_experts")?,
+            n_active_experts: u("n_active_experts")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod json_tests {
+    use super::*;
+
+    /// The checked-in configs/models/*.json (read by the Python build
+    /// pipeline) must stay identical to the built-in configs.
+    #[test]
+    fn config_files_match_builtin() {
+        for (name, text) in [
+            ("tiny-moe", include_str!("../../../configs/models/tiny-moe.json")),
+            ("tiny-dense", include_str!("../../../configs/models/tiny-dense.json")),
+        ] {
+            let v = json::parse(text).unwrap();
+            let parsed = ModelConfig::from_json(&v).unwrap();
+            let builtin = ModelConfig::by_name(name).unwrap();
+            assert_eq!(format!("{parsed:?}"), format!("{builtin:?}"), "{name}");
+        }
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        for cfg in [
+            ModelConfig::deepseek_v3_671b(),
+            ModelConfig::distill_qwen_32b(),
+            ModelConfig::tiny_moe(),
+            ModelConfig::tiny_dense(),
+        ] {
+            let v = cfg.to_json();
+            let back = ModelConfig::from_json(&v).unwrap();
+            assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Model architecture census.
+//!
+//! Describes the *shapes* of every weight tensor in a DeepSeek-V3-style
+//! MLA+MoE transformer (and the dense Qwen-style distill variant), so
+//! that the scheme engine and memory model can compute exact per-module
+//! parameter counts, quantized sizes, and average bit-widths — the
+//! arithmetic behind Tables 1, 6 and 7 of the paper.
+//!
+//! Module naming follows GGUF (`ffn_down_exps`, `attn_kv_a_mqa`, …),
+//! matching Table 7 of the paper.
+
+pub mod census;
+pub mod config;
+
+pub use census::{ModuleClass, TensorInfo};
+pub use config::{ModelConfig, ModelKind};

@@ -1,0 +1,78 @@
+//! Reconstruction-error metrics used by the codec error sweep (E10) and
+//! by the calibration/sensitivity analysis.
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Root-mean-square error relative to the RMS of the reference signal.
+/// This is the scale-free quantity the bpw↔error curve (E10) plots.
+pub fn rel_rmse(reference: &[f32], approx: &[f32]) -> f64 {
+    let ms_ref = reference.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+        / reference.len().max(1) as f64;
+    if ms_ref == 0.0 {
+        return if mse(reference, approx) == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (mse(reference, approx) / ms_ref).sqrt()
+}
+
+/// Maximum absolute error.
+pub fn max_abs_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((*x - *y) as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Cosine similarity (used for logit-level comparisons).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return if na == nb { 1.0 } else { 0.0 };
+    }
+    dot / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert_eq!(mse(&a, &a), 0.0);
+        assert_eq!(rel_rmse(&a, &a), 0.0);
+        assert_eq!(max_abs_err(&a, &a), 0.0);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_rmse_scale_free() {
+        let a = [1.0f32, -1.0, 1.0, -1.0];
+        let b = [1.1f32, -1.1, 1.1, -1.1];
+        let a10: Vec<f32> = a.iter().map(|x| x * 10.0).collect();
+        let b10: Vec<f32> = b.iter().map(|x| x * 10.0).collect();
+        assert!((rel_rmse(&a, &b) - rel_rmse(&a10, &b10)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_orthogonal() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!(cosine(&a, &b).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,128 @@
+//! `Q2_K` — 2-bit k-quant, super-block of 256, 84 bytes (2.625 bpw).
+//!
+//! 16 sub-blocks of 16 weights. Asymmetric:
+//! `x_i = d · sc[j] · c_i − dmin · m[j]` with codes `c_i ∈ [0, 3]` and
+//! 4-bit sub-block scales/mins.
+//!
+//! Layout per super-block (flat element order, sub-block `j = i / 16`):
+//! ```text
+//! [0..16)   scales[16]  byte j = sc[j] | m[j] << 4
+//! [16..80)  qs[64]      2-bit codes: bits 2·(i&3) of qs[i>>2]
+//! [80..82)  f16 d
+//! [82..84)  f16 dmin
+//! ```
+
+use super::scalar::{get_f16, make_qkx_quants, nearest_int, put_f16};
+use super::QK_K;
+
+pub const BLOCK_BYTES: usize = 84;
+const SUB: usize = 16;
+const NSUB: usize = QK_K / SUB;
+
+pub fn quantize(src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+    debug_assert_eq!(src.len() % QK_K, 0);
+    for (bi, (xb, ob)) in src
+        .chunks_exact(QK_K)
+        .zip(out.chunks_exact_mut(BLOCK_BYTES))
+        .enumerate()
+    {
+        let wb = importance.map(|w| &w[bi * QK_K..(bi + 1) * QK_K]);
+        let mut scales = [0f32; NSUB];
+        let mut mins = [0f32; NSUB];
+        let mut codes = [0u8; QK_K];
+        let mut max_scale = 0f32;
+        let mut max_min = 0f32;
+        for j in 0..NSUB {
+            let xs = &xb[j * SUB..(j + 1) * SUB];
+            let ws = wb.map(|w| &w[j * SUB..(j + 1) * SUB]);
+            let (s, m) = make_qkx_quants(xs, 3, ws, &mut codes[j * SUB..(j + 1) * SUB]);
+            scales[j] = s;
+            mins[j] = m;
+            max_scale = max_scale.max(s);
+            max_min = max_min.max(m);
+        }
+        let d = if max_scale > 0.0 { max_scale / 15.0 } else { 0.0 };
+        let dmin = if max_min > 0.0 { max_min / 15.0 } else { 0.0 };
+        put_f16(ob, 80, d);
+        put_f16(ob, 82, dmin);
+        let d = get_f16(ob, 80);
+        let dmin = get_f16(ob, 82);
+        for j in 0..NSUB {
+            let sc = if d > 0.0 {
+                nearest_int(scales[j] / d).clamp(0, 15) as u8
+            } else {
+                0
+            };
+            let mn = if dmin > 0.0 {
+                nearest_int(mins[j] / dmin).clamp(0, 15) as u8
+            } else {
+                0
+            };
+            ob[j] = sc | (mn << 4);
+            let sd = d * sc as f32;
+            let sm = dmin * mn as f32;
+            for k in 0..SUB {
+                let i = j * SUB + k;
+                codes[i] = if sd > 0.0 {
+                    nearest_int((xb[i] + sm) / sd).clamp(0, 3) as u8
+                } else {
+                    0
+                };
+            }
+        }
+        let qs = &mut ob[16..80];
+        qs.fill(0);
+        for (i, &c) in codes.iter().enumerate() {
+            qs[i >> 2] |= (c & 0x03) << (2 * (i & 3));
+        }
+    }
+}
+
+pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
+    for (ob, xb) in bytes.chunks_exact(BLOCK_BYTES).zip(out.chunks_exact_mut(QK_K)) {
+        let d = get_f16(ob, 80);
+        let dmin = get_f16(ob, 82);
+        for i in 0..QK_K {
+            let j = i / SUB;
+            let sc = (ob[j] & 0x0F) as f32;
+            let mn = (ob[j] >> 4) as f32;
+            let c = ((ob[16 + (i >> 2)] >> (2 * (i & 3))) & 0x03) as f32;
+            xb[i] = d * sc * c - dmin * mn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::quant::error::rel_rmse;
+    use crate::quant::{roundtrip, QuantFormat, QK_K};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn q2k_roundtrip_bounded_error() {
+        let mut rng = Pcg::new(41);
+        let src: Vec<f32> = (0..QK_K * 4).map(|_| rng.next_normal()).collect();
+        let rt = roundtrip(QuantFormat::Q2K, &src, None).unwrap();
+        let err = rel_rmse(&src, &rt);
+        // 2-bit is lossy; just bound it and check the ordering vs q3_k.
+        assert!(err < 0.35, "q2_k rel rmse unexpectedly high: {err}");
+        let e3 = rel_rmse(&src, &roundtrip(QuantFormat::Q3K, &src, None).unwrap());
+        assert!(err > e3, "q2_k ({err}) should be worse than q3_k ({e3})");
+    }
+
+    #[test]
+    fn q2k_zero_block() {
+        let src = vec![0f32; QK_K];
+        let rt = roundtrip(QuantFormat::Q2K, &src, None).unwrap();
+        assert_eq!(rt, src);
+    }
+
+    #[test]
+    fn q2k_constant_positive_block() {
+        let src = vec![0.75f32; QK_K];
+        let rt = roundtrip(QuantFormat::Q2K, &src, None).unwrap();
+        for v in &rt {
+            assert!((v - 0.75).abs() < 0.01, "got {v}");
+        }
+    }
+}

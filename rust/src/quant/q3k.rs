@@ -1,0 +1,177 @@
+//! `Q3_K` — 3-bit k-quant, super-block of 256, 110 bytes (3.4375 bpw).
+//!
+//! 16 sub-blocks of 16 weights. Symmetric:
+//! `x_i = d · (sc[j] − 32) · (c_i − 4)` with codes `c_i ∈ [0, 7]` and
+//! 6-bit stored sub-block scales `sc[j] ∈ [0, 63]` (offset-32 signed).
+//!
+//! Layout per super-block (flat element order, sub-block `j = i / 16`):
+//! ```text
+//! [0..12)    packed 6-bit scales (see [`pack_scales_6x16`])
+//! [12..44)   hmask[32]  high bit of c_i: bit (i&7) of hmask[i>>3]
+//! [44..108)  qs[64]     low 2 bits of c_i: bits 2·(i&3) of qs[i>>2]
+//! [108..110) f16 d
+//! ```
+//!
+//! ### 6-bit scale packing (16 values → 12 bytes)
+//!
+//! - byte `j` (j<8): low nibble = `sc[j] & 0xF`, high nibble = `sc[8+j] & 0xF`
+//! - byte `8+k` (k<4): two high bits of `sc[4k .. 4k+4)` at bit `2·t`
+//!
+//! i.e. `sc[j] = ((j<8 ? b[j]&0xF : b[j-8]>>4)) | ((b[8 + j%4] >> (2·(j/4))) & 3) << 4`.
+//!
+//! (Note: high-bit byte index is `j % 4`, shift group is `j / 4`, which
+//! keeps the unpack a pure gather in the JAX mirror.)
+
+use super::scalar::{get_f16, make_qx_quants, nearest_int, put_f16};
+use super::QK_K;
+
+pub const BLOCK_BYTES: usize = 110;
+const SUB: usize = 16;
+const NSUB: usize = QK_K / SUB;
+
+/// Pack 16 six-bit values into 12 bytes.
+pub fn pack_scales_6x16(sc: &[u8; NSUB], out: &mut [u8]) {
+    debug_assert!(out.len() >= 12);
+    for j in 0..8 {
+        out[j] = (sc[j] & 0x0F) | ((sc[8 + j] & 0x0F) << 4);
+    }
+    for k in 0..4 {
+        let mut b = 0u8;
+        for t in 0..4 {
+            b |= ((sc[4 * t + k] >> 4) & 0x03) << (2 * t);
+        }
+        out[8 + k] = b;
+    }
+}
+
+/// Inverse of [`pack_scales_6x16`] for sub-block `j`.
+pub fn unpack_scales_6x16(b: &[u8], j: usize) -> u8 {
+    let lo = if j < 8 { b[j] & 0x0F } else { b[j - 8] >> 4 };
+    let hi = (b[8 + (j % 4)] >> (2 * (j / 4))) & 0x03;
+    lo | (hi << 4)
+}
+
+pub fn quantize(src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+    debug_assert_eq!(src.len() % QK_K, 0);
+    for (bi, (xb, ob)) in src
+        .chunks_exact(QK_K)
+        .zip(out.chunks_exact_mut(BLOCK_BYTES))
+        .enumerate()
+    {
+        let wb = importance.map(|w| &w[bi * QK_K..(bi + 1) * QK_K]);
+        let mut scales = [0f32; NSUB];
+        let mut codes = [0u8; QK_K];
+        let mut max_abs_scale = 0f32;
+        for j in 0..NSUB {
+            let xs = &xb[j * SUB..(j + 1) * SUB];
+            let ws = wb.map(|w| &w[j * SUB..(j + 1) * SUB]);
+            scales[j] = make_qx_quants(xs, 4, ws, &mut codes[j * SUB..(j + 1) * SUB]);
+            max_abs_scale = max_abs_scale.max(scales[j].abs());
+        }
+        if max_abs_scale < 1e-30 {
+            ob.fill(0);
+            // All-zero block: sc=32 (0 after offset) reconstructs zeros,
+            // but sc bytes of 0 give sc-32=-32 times c-4 — ensure codes
+            // decode to 4 (0) by writing the midpoint code plane.
+            let mut sc = [32u8; NSUB];
+            sc.iter_mut().for_each(|s| *s = 32);
+            pack_scales_6x16(&sc, &mut ob[0..12]);
+            pack_codes(&[4u8; QK_K], ob);
+            continue;
+        }
+        let d = max_abs_scale / 31.0;
+        put_f16(ob, 108, d);
+        let d = get_f16(ob, 108);
+        let invd = if d > 0.0 { 1.0 / d } else { 0.0 };
+        let mut sc6 = [0u8; NSUB];
+        for j in 0..NSUB {
+            let isc = nearest_int(scales[j] * invd).clamp(-32, 31);
+            sc6[j] = (isc + 32) as u8;
+            let sd = d * isc as f32;
+            let inv = if sd != 0.0 { 1.0 / sd } else { 0.0 };
+            for k in 0..SUB {
+                let i = j * SUB + k;
+                codes[i] = if sd != 0.0 {
+                    (nearest_int(xb[i] * inv).clamp(-4, 3) + 4) as u8
+                } else {
+                    4
+                };
+            }
+        }
+        pack_scales_6x16(&sc6, &mut ob[0..12]);
+        pack_codes(&codes, ob);
+    }
+}
+
+fn pack_codes(codes: &[u8; QK_K], ob: &mut [u8]) {
+    ob[12..108].fill(0);
+    for (i, &c) in codes.iter().enumerate() {
+        let lo = c & 0x03;
+        let hi = (c >> 2) & 0x01;
+        ob[44 + (i >> 2)] |= lo << (2 * (i & 3));
+        ob[12 + (i >> 3)] |= hi << (i & 7);
+    }
+}
+
+pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
+    for (ob, xb) in bytes.chunks_exact(BLOCK_BYTES).zip(out.chunks_exact_mut(QK_K)) {
+        let d = get_f16(ob, 108);
+        for i in 0..QK_K {
+            let j = i / SUB;
+            let sc = unpack_scales_6x16(&ob[0..12], j) as i32 - 32;
+            let lo = (ob[44 + (i >> 2)] >> (2 * (i & 3))) & 0x03;
+            let hi = (ob[12 + (i >> 3)] >> (i & 7)) & 0x01;
+            let c = (lo | (hi << 2)) as i32;
+            xb[i] = d * sc as f32 * (c - 4) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::rel_rmse;
+    use crate::quant::{roundtrip, QuantFormat};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn scales_packing_roundtrips() {
+        let mut rng = Pcg::new(29);
+        for _ in 0..100 {
+            let mut sc = [0u8; NSUB];
+            for s in sc.iter_mut() {
+                *s = (rng.next_u64() % 64) as u8;
+            }
+            let mut buf = [0u8; 12];
+            pack_scales_6x16(&sc, &mut buf);
+            for j in 0..NSUB {
+                assert_eq!(unpack_scales_6x16(&buf, j), sc[j], "sub-block {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn q3k_accuracy_on_gaussian() {
+        let mut rng = Pcg::new(31);
+        let src: Vec<f32> = (0..QK_K * 4).map(|_| rng.next_normal()).collect();
+        let rt = roundtrip(QuantFormat::Q3K, &src, None).unwrap();
+        let err = rel_rmse(&src, &rt);
+        assert!(err < 0.17, "q3_k rel rmse too high: {err}");
+    }
+
+    #[test]
+    fn q3k_zero_block() {
+        let src = vec![0f32; QK_K];
+        let rt = roundtrip(QuantFormat::Q3K, &src, None).unwrap();
+        assert_eq!(rt, src);
+    }
+
+    #[test]
+    fn monotone_error_q3_worse_than_q4() {
+        let mut rng = Pcg::new(37);
+        let src: Vec<f32> = (0..QK_K * 8).map(|_| rng.next_normal()).collect();
+        let e3 = rel_rmse(&src, &roundtrip(QuantFormat::Q3K, &src, None).unwrap());
+        let e4 = rel_rmse(&src, &roundtrip(QuantFormat::Q4K, &src, None).unwrap());
+        assert!(e3 > e4, "q3_k ({e3}) should be worse than q4_k ({e4})");
+    }
+}

@@ -1,0 +1,217 @@
+//! `Q4_K` — 4-bit k-quant, super-block of 256, 144 bytes (4.5 bpw).
+//!
+//! 8 sub-blocks of 32 weights. Asymmetric:
+//! `x_i = d · sc[j] · c_i − dmin · m[j]` with codes `c_i ∈ [0, 15]` and
+//! 6-bit sub-block scales `sc[j]` / mins `m[j]` quantized against the
+//! per-super-block f16 `d` / `dmin`.
+//!
+//! Layout per super-block (flat element order, sub-block `j = i / 32`):
+//! ```text
+//! [0..2)     f16 d
+//! [2..4)     f16 dmin
+//! [4..16)    packed 6-bit scales+mins (see [`pack_scale_min_6`])
+//! [16..144)  qs[128]   4-bit codes: nibble (i&1) of qs[i>>1]
+//! ```
+//!
+//! ### 6-bit scale/min packing
+//!
+//! 8 scales + 8 mins, 6 bits each = 12 bytes:
+//! - byte `j` (j<8) = `sc[j] & 0x3F | (m[j] & 0x03) << 6`
+//! - byte `8+k` (k<4) = `(m[2k] >> 2) | (m[2k+1] >> 2) << 4`
+//!
+//! i.e. `sc[j] = b[j] & 63`,
+//! `m[j] = (b[j] >> 6) | ((b[8 + j/2] >> (4·(j&1))) & 0x0F) << 2`.
+
+use super::scalar::{get_f16, make_qkx_quants, nearest_int, put_f16};
+use super::QK_K;
+
+pub const BLOCK_BYTES: usize = 144;
+const SUB: usize = 32;
+const NSUB: usize = QK_K / SUB;
+
+/// Pack 8 six-bit scales and 8 six-bit mins into 12 bytes.
+pub fn pack_scale_min_6(sc: &[u8; NSUB], mn: &[u8; NSUB], out: &mut [u8]) {
+    debug_assert!(out.len() >= 12);
+    for j in 0..NSUB {
+        out[j] = (sc[j] & 0x3F) | ((mn[j] & 0x03) << 6);
+    }
+    for k in 0..4 {
+        out[8 + k] = (mn[2 * k] >> 2) | ((mn[2 * k + 1] >> 2) << 4);
+    }
+}
+
+/// Inverse of [`pack_scale_min_6`].
+pub fn unpack_scale_min_6(b: &[u8], j: usize) -> (u8, u8) {
+    let sc = b[j] & 0x3F;
+    let m = (b[j] >> 6) | (((b[8 + j / 2] >> (4 * (j & 1))) & 0x0F) << 2);
+    (sc, m)
+}
+
+pub fn quantize(src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+    quantize_impl(src, importance, out, 15, BLOCK_BYTES, 16, false);
+}
+
+pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
+    dequantize_impl(bytes, out, BLOCK_BYTES, 16, false);
+}
+
+/// Shared implementation for `Q4_K` (`nmax=15`, no high bits) and `Q5_K`
+/// (`nmax=31`, one high bit per code stored in a 32-byte plane before
+/// `qs`). `qs_off` is the byte offset of the 4-bit code plane.
+pub(crate) fn quantize_impl(
+    src: &[f32],
+    importance: Option<&[f32]>,
+    out: &mut [u8],
+    nmax: i32,
+    block_bytes: usize,
+    qs_off: usize,
+    high_bit: bool,
+) {
+    debug_assert_eq!(src.len() % QK_K, 0);
+    for (bi, (xb, ob)) in src
+        .chunks_exact(QK_K)
+        .zip(out.chunks_exact_mut(block_bytes))
+        .enumerate()
+    {
+        let wb = importance.map(|w| &w[bi * QK_K..(bi + 1) * QK_K]);
+        let mut scales = [0f32; NSUB];
+        let mut mins = [0f32; NSUB];
+        let mut codes = [0u8; QK_K];
+        let mut max_scale = 0f32;
+        let mut max_min = 0f32;
+        for j in 0..NSUB {
+            let xs = &xb[j * SUB..(j + 1) * SUB];
+            let ws = wb.map(|w| &w[j * SUB..(j + 1) * SUB]);
+            let (s, m) = make_qkx_quants(xs, nmax, ws, &mut codes[j * SUB..(j + 1) * SUB]);
+            scales[j] = s;
+            mins[j] = m;
+            max_scale = max_scale.max(s);
+            max_min = max_min.max(m);
+        }
+        let d = if max_scale > 0.0 { max_scale / 63.0 } else { 0.0 };
+        let dmin = if max_min > 0.0 { max_min / 63.0 } else { 0.0 };
+        put_f16(ob, 0, d);
+        put_f16(ob, 2, dmin);
+        let d = get_f16(ob, 0);
+        let dmin = get_f16(ob, 2);
+        let mut sc6 = [0u8; NSUB];
+        let mut mn6 = [0u8; NSUB];
+        for j in 0..NSUB {
+            sc6[j] = if d > 0.0 {
+                nearest_int(scales[j] / d).clamp(0, 63) as u8
+            } else {
+                0
+            };
+            mn6[j] = if dmin > 0.0 {
+                nearest_int(mins[j] / dmin).clamp(0, 63) as u8
+            } else {
+                0
+            };
+        }
+        pack_scale_min_6(&sc6, &mn6, &mut ob[4..16]);
+        // Re-round codes against the reconstructed (quantized) scales.
+        for j in 0..NSUB {
+            let sd = d * sc6[j] as f32;
+            let sm = dmin * mn6[j] as f32;
+            for k in 0..SUB {
+                let i = j * SUB + k;
+                codes[i] = if sd > 0.0 {
+                    nearest_int((xb[i] + sm) / sd).clamp(0, nmax) as u8
+                } else {
+                    0
+                };
+            }
+        }
+        // Pack the 4-bit plane (and the high-bit plane for Q5_K).
+        let (head, qs) = ob.split_at_mut(qs_off);
+        qs.fill(0);
+        if high_bit {
+            let qh = &mut head[16..48];
+            qh.fill(0);
+            for (i, &c) in codes.iter().enumerate() {
+                qs[i >> 1] |= (c & 0x0F) << (4 * (i & 1));
+                qh[i >> 3] |= (c >> 4) << (i & 7);
+            }
+        } else {
+            for (i, &c) in codes.iter().enumerate() {
+                qs[i >> 1] |= (c & 0x0F) << (4 * (i & 1));
+            }
+        }
+    }
+}
+
+pub(crate) fn dequantize_impl(
+    bytes: &[u8],
+    out: &mut [f32],
+    block_bytes: usize,
+    qs_off: usize,
+    high_bit: bool,
+) {
+    for (ob, xb) in bytes.chunks_exact(block_bytes).zip(out.chunks_exact_mut(QK_K)) {
+        let d = get_f16(ob, 0);
+        let dmin = get_f16(ob, 2);
+        let qs = &ob[qs_off..];
+        for i in 0..QK_K {
+            let j = i / SUB;
+            let (sc, mn) = unpack_scale_min_6(&ob[4..16], j);
+            let mut c = (qs[i >> 1] >> (4 * (i & 1))) & 0x0F;
+            if high_bit {
+                c |= ((ob[16 + (i >> 3)] >> (i & 7)) & 1) << 4;
+            }
+            xb[i] = d * sc as f32 * c as f32 - dmin * mn as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::rel_rmse;
+    use crate::quant::{roundtrip, QuantFormat};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn scale_min_packing_roundtrips() {
+        let mut rng = Pcg::new(5);
+        for _ in 0..100 {
+            let mut sc = [0u8; NSUB];
+            let mut mn = [0u8; NSUB];
+            for j in 0..NSUB {
+                sc[j] = (rng.next_u64() % 64) as u8;
+                mn[j] = (rng.next_u64() % 64) as u8;
+            }
+            let mut buf = [0u8; 12];
+            pack_scale_min_6(&sc, &mn, &mut buf);
+            for j in 0..NSUB {
+                let (s, m) = unpack_scale_min_6(&buf, j);
+                assert_eq!((s, m), (sc[j], mn[j]), "sub-block {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn q4k_accuracy_on_gaussian() {
+        let mut rng = Pcg::new(13);
+        let src: Vec<f32> = (0..QK_K * 4).map(|_| rng.next_normal()).collect();
+        let rt = roundtrip(QuantFormat::Q4K, &src, None).unwrap();
+        let err = rel_rmse(&src, &rt);
+        assert!(err < 0.09, "q4_k rel rmse too high: {err}");
+    }
+
+    #[test]
+    fn q4k_zero_block() {
+        let src = vec![0f32; QK_K];
+        let rt = roundtrip(QuantFormat::Q4K, &src, None).unwrap();
+        assert_eq!(rt, src);
+    }
+
+    #[test]
+    fn q4k_positive_shift_handled() {
+        // All-positive data exercises the min path.
+        let mut rng = Pcg::new(17);
+        let src: Vec<f32> = (0..QK_K).map(|_| rng.next_normal().abs() + 2.0).collect();
+        let rt = roundtrip(QuantFormat::Q4K, &src, None).unwrap();
+        let err = rel_rmse(&src, &rt);
+        assert!(err < 0.04, "q4_k rel rmse on shifted data: {err}");
+    }
+}

@@ -1,0 +1,58 @@
+//! `Q5_K` — 5-bit k-quant, super-block of 256, 176 bytes (5.5 bpw).
+//!
+//! Identical structure to [`super::q4k`] (8 sub-blocks of 32, asymmetric,
+//! 6-bit packed scales/mins) plus a fifth code bit stored in a 32-byte
+//! high-bit plane:
+//! ```text
+//! [0..2)     f16 d
+//! [2..4)     f16 dmin
+//! [4..16)    packed 6-bit scales+mins
+//! [16..48)   qh[32]    high bit of c_i: bit (i&7) of qh[i>>3]
+//! [48..176)  qs[128]   low 4 bits of c_i: nibble (i&1) of qs[i>>1]
+//! ```
+//! Codes `c_i ∈ [0, 31]`, `x_i = d · sc[j] · c_i − dmin · m[j]`.
+
+use super::q4k::{dequantize_impl, quantize_impl};
+
+
+pub const BLOCK_BYTES: usize = 176;
+
+pub fn quantize(src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+    quantize_impl(src, importance, out, 31, BLOCK_BYTES, 48, true);
+}
+
+pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
+    dequantize_impl(bytes, out, BLOCK_BYTES, 48, true);
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::quant::error::rel_rmse;
+    use crate::quant::{roundtrip, QuantFormat, QK_K};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn q5k_accuracy_on_gaussian() {
+        let mut rng = Pcg::new(19);
+        let src: Vec<f32> = (0..QK_K * 4).map(|_| rng.next_normal()).collect();
+        let rt = roundtrip(QuantFormat::Q5K, &src, None).unwrap();
+        let err = rel_rmse(&src, &rt);
+        assert!(err < 0.05, "q5_k rel rmse too high: {err}");
+    }
+
+    #[test]
+    fn q5k_better_than_q4k() {
+        let mut rng = Pcg::new(23);
+        let src: Vec<f32> = (0..QK_K * 8).map(|_| rng.next_normal()).collect();
+        let e5 = rel_rmse(&src, &roundtrip(QuantFormat::Q5K, &src, None).unwrap());
+        let e4 = rel_rmse(&src, &roundtrip(QuantFormat::Q4K, &src, None).unwrap());
+        assert!(e5 < e4, "q5_k ({e5}) should beat q4_k ({e4})");
+    }
+
+    #[test]
+    fn q5k_zero_block() {
+        let src = vec![0f32; QK_K];
+        let rt = roundtrip(QuantFormat::Q5K, &src, None).unwrap();
+        assert_eq!(rt, src);
+    }
+}

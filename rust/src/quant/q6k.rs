@@ -1,0 +1,131 @@
+//! `Q6_K` — 6-bit k-quant, super-block of 256, 210 bytes (6.5625 bpw).
+//!
+//! 16 sub-blocks of 16 weights. Symmetric: `x_i = d · sc[j] · (c_i − 32)`
+//! with codes `c_i ∈ [0, 63]`, per-sub-block int8 scales `sc[j]`, and a
+//! per-super-block f16 scale `d`.
+//!
+//! Layout per super-block (flat element order `i = 0..256`, sub-block
+//! `j = i / 16`):
+//! ```text
+//! [0..128)    ql[128]    low 4 bits of c_i: nibble (i&1) of ql[i>>1]
+//! [128..192)  qh[64]     high 2 bits of c_i: bits 2·(i&3) of qh[i>>2]
+//! [192..208)  sc[16]     int8 sub-block scales
+//! [208..210)  f16 d
+//! ```
+
+use super::scalar::{get_f16, make_qx_quants, nearest_int, put_f16};
+use super::QK_K;
+
+pub const BLOCK_BYTES: usize = 210;
+const SUB: usize = 16; // weights per sub-block
+const NSUB: usize = QK_K / SUB;
+
+pub fn quantize(src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+    debug_assert_eq!(src.len() % QK_K, 0);
+    for (bi, (xb, ob)) in src
+        .chunks_exact(QK_K)
+        .zip(out.chunks_exact_mut(BLOCK_BYTES))
+        .enumerate()
+    {
+        let wb = importance.map(|w| &w[bi * QK_K..(bi + 1) * QK_K]);
+        // Pass 1: per-sub-block symmetric scale search.
+        let mut scales = [0f32; NSUB];
+        let mut codes = [0u8; QK_K];
+        let mut max_abs_scale = 0f32;
+        for j in 0..NSUB {
+            let xs = &xb[j * SUB..(j + 1) * SUB];
+            let ws = wb.map(|w| &w[j * SUB..(j + 1) * SUB]);
+            scales[j] = make_qx_quants(xs, 32, ws, &mut codes[j * SUB..(j + 1) * SUB]);
+            max_abs_scale = max_abs_scale.max(scales[j].abs());
+        }
+        if max_abs_scale < 1e-30 {
+            ob.fill(0);
+            continue;
+        }
+        // Pass 2: quantize the sub-block scales to int8 against d.
+        let d = max_abs_scale / 127.0;
+        put_f16(ob, 208, d);
+        let d = get_f16(ob, 208); // optimize against the stored value
+        let invd = if d > 0.0 { 1.0 / d } else { 0.0 };
+        for j in 0..NSUB {
+            let isc = nearest_int(scales[j] * invd).clamp(-127, 127) as i8;
+            ob[192 + j] = isc as u8;
+            // Pass 3: re-round the codes against the reconstructed scale.
+            let sd = d * isc as f32;
+            let inv = if sd != 0.0 { 1.0 / sd } else { 0.0 };
+            for k in 0..SUB {
+                let i = j * SUB + k;
+                let c = if sd != 0.0 {
+                    (nearest_int(xb[i] * inv).clamp(-32, 31) + 32) as u8
+                } else {
+                    32
+                };
+                codes[i] = c;
+            }
+        }
+        pack_codes(&codes, ob);
+    }
+}
+
+fn pack_codes(codes: &[u8; QK_K], ob: &mut [u8]) {
+    ob[..192].fill(0);
+    for (i, &c) in codes.iter().enumerate() {
+        let lo = c & 0x0F;
+        let hi = c >> 4; // 2 bits
+        ob[i >> 1] |= lo << (4 * (i & 1));
+        ob[128 + (i >> 2)] |= hi << (2 * (i & 3));
+    }
+}
+
+pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
+    for (ob, xb) in bytes.chunks_exact(BLOCK_BYTES).zip(out.chunks_exact_mut(QK_K)) {
+        let d = get_f16(ob, 208);
+        for i in 0..QK_K {
+            let lo = (ob[i >> 1] >> (4 * (i & 1))) & 0x0F;
+            let hi = (ob[128 + (i >> 2)] >> (2 * (i & 3))) & 0x03;
+            let c = (lo | (hi << 4)) as i32;
+            let sc = ob[192 + i / SUB] as i8 as f32;
+            xb[i] = d * sc * (c - 32) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::rel_rmse;
+    use crate::quant::{roundtrip, QuantFormat};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn q6k_accuracy_on_gaussian() {
+        let mut rng = Pcg::new(11);
+        let src: Vec<f32> = (0..QK_K * 4).map(|_| rng.next_normal()).collect();
+        let rt = roundtrip(QuantFormat::Q6K, &src, None).unwrap();
+        let err = rel_rmse(&src, &rt);
+        assert!(err < 0.02, "q6_k rel rmse too high: {err}");
+    }
+
+    #[test]
+    fn q6k_zero_block() {
+        let src = vec![0f32; QK_K];
+        let rt = roundtrip(QuantFormat::Q6K, &src, None).unwrap();
+        assert_eq!(rt, src);
+    }
+
+    #[test]
+    fn q6k_code_packing_roundtrips() {
+        let mut codes = [0u8; QK_K];
+        let mut rng = Pcg::new(3);
+        for c in codes.iter_mut() {
+            *c = (rng.next_u64() % 64) as u8;
+        }
+        let mut ob = vec![0u8; BLOCK_BYTES];
+        pack_codes(&codes, &mut ob);
+        for i in 0..QK_K {
+            let lo = (ob[i >> 1] >> (4 * (i & 1))) & 0x0F;
+            let hi = (ob[128 + (i >> 2)] >> (2 * (i & 3))) & 0x03;
+            assert_eq!(lo | (hi << 4), codes[i], "element {i}");
+        }
+    }
+}

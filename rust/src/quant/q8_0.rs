@@ -1,0 +1,68 @@
+//! `Q8_0` — 8-bit blocks of 32, 34 bytes/block (8.5 bpw).
+//!
+//! Layout per block (little-endian):
+//! ```text
+//! [0..2)   f16 d        (scale)
+//! [2..34)  i8  qs[32]   (codes; x_i = d · q_i)
+//! ```
+//!
+//! Like llama.cpp, `Q8_0` uses plain absmax scaling (no search): the
+//! format has enough resolution that the scale fit is not the
+//! bottleneck.
+
+use super::scalar::{get_f16, nearest_int, put_f16};
+use super::QK8_0;
+
+pub const BLOCK_BYTES: usize = 34;
+
+pub fn quantize(src: &[f32], _importance: Option<&[f32]>, out: &mut [u8]) {
+    debug_assert_eq!(src.len() % QK8_0, 0);
+    debug_assert_eq!(out.len(), src.len() / QK8_0 * BLOCK_BYTES);
+    for (xb, ob) in src.chunks_exact(QK8_0).zip(out.chunks_exact_mut(BLOCK_BYTES)) {
+        let amax = xb.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let d = amax / 127.0;
+        let inv = if d > 0.0 { 1.0 / d } else { 0.0 };
+        // Store the f16-rounded scale and quantize against *that* value
+        // so the dequantizer reconstructs exactly what we optimized.
+        put_f16(ob, 0, d);
+        let d_stored = get_f16(ob, 0);
+        let inv = if d_stored > 0.0 { 1.0 / d_stored } else { inv };
+        for (i, &v) in xb.iter().enumerate() {
+            ob[2 + i] = nearest_int(v * inv).clamp(-127, 127) as i8 as u8;
+        }
+    }
+}
+
+pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
+    for (ob, xb) in bytes.chunks_exact(BLOCK_BYTES).zip(out.chunks_exact_mut(QK8_0)) {
+        let d = get_f16(ob, 0);
+        for (i, x) in xb.iter_mut().enumerate() {
+            *x = d * (ob[2 + i] as i8) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{roundtrip, QuantFormat};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn near_lossless_on_gaussianish() {
+        let mut rng = Pcg::new(7);
+        let src: Vec<f32> = (0..QK8_0 * 8).map(|_| rng.next_normal()).collect();
+        let rt = roundtrip(QuantFormat::Q8_0, &src, None).unwrap();
+        let amax = src.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in src.iter().zip(&rt) {
+            assert!((a - b).abs() <= amax / 127.0 * 0.51 + 1e-4);
+        }
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let src = vec![0f32; QK8_0];
+        let rt = roundtrip(QuantFormat::Q8_0, &src, None).unwrap();
+        assert_eq!(rt, src);
+    }
+}

@@ -1,0 +1,267 @@
+//! Scale-search primitives shared by the k-quant codecs.
+//!
+//! These follow the strategy of llama.cpp's `make_qx_quants` /
+//! `make_qkx2_quants`: start from the naive min-max scale and refine it
+//! with a small deterministic search that minimizes (importance-)weighted
+//! squared reconstruction error.
+
+/// Round-to-nearest, ties away from zero (matches llama.cpp's
+/// `nearest_int` behaviour for the value ranges we use).
+#[inline]
+pub fn nearest_int(x: f32) -> i32 {
+    x.round() as i32
+}
+
+/// Default importance weight when no imatrix is supplied: `x²` biases the
+/// search toward preserving large-magnitude weights, mirroring
+/// llama.cpp's `quantize_row_*_impl` fallback (`weight = x*x`).
+#[inline]
+fn default_weight(x: f32) -> f32 {
+    x * x + 1e-8
+}
+
+/// Symmetric scale search: find `scale` such that
+/// `q_i = clamp(round(x_i / scale), -nmax, nmax-1)` minimizes
+/// `Σ w_i (x_i - scale·q_i)²`, writing the chosen `q_i + nmax` (i.e. an
+/// unsigned code in `[0, 2·nmax)`) into `out`.
+///
+/// Returns the scale. `nmax` is the magnitude bound: 4 for 3-bit
+/// (`q ∈ [-4, 3]`), 32 for 6-bit (`q ∈ [-32, 31]`).
+///
+/// The search mirrors llama.cpp `make_qx_quants(..., rmse_type=1)`:
+/// evaluate the least-squares-optimal scale for the roundings induced by
+/// 19 candidate scales around `-nmax / max|x|` and keep the best.
+pub fn make_qx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [u8]) -> f32 {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let mut amax = 0f32;
+    let mut max = 0f32;
+    for &v in x {
+        if v.abs() > amax {
+            amax = v.abs();
+            max = v;
+        }
+    }
+    if amax < 1e-30 {
+        out.iter_mut().for_each(|o| *o = nmax as u8);
+        return 0.0;
+    }
+    // llama.cpp anchors the initial inverse scale on the signed max so
+    // that the extreme value maps exactly to ±nmax.
+    let mut best_scale = 0f32;
+    let mut best_err = f32::INFINITY;
+    let w_at = |i: usize| weights.map_or(default_weight(x[i]), |w| w[i] + 1e-10);
+    for is in -9i32..=9 {
+        let iscale = -(nmax as f32 + 0.1f32 * is as f32) / max;
+        // Least-squares re-fit of the scale for this rounding: given
+        // q_i fixed, optimal scale = Σ w x q / Σ w q².
+        let mut sumlx = 0f32;
+        let mut suml2 = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * x[i]).clamp(-nmax, nmax - 1) as f32;
+            let w = w_at(i);
+            sumlx += w * x[i] * l;
+            suml2 += w * l * l;
+        }
+        if suml2 <= 0.0 {
+            continue;
+        }
+        let scale = sumlx / suml2;
+        let mut err = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * x[i]).clamp(-nmax, nmax - 1) as f32;
+            let d = x[i] - scale * l;
+            err += w_at(i) * d * d;
+        }
+        if err < best_err {
+            best_err = err;
+            best_scale = scale;
+        }
+    }
+    if best_scale == 0.0 {
+        // Degenerate: fall back to naive.
+        best_scale = max / -(nmax as f32);
+    }
+    let inv = if best_scale != 0.0 { 1.0 / best_scale } else { 0.0 };
+    for i in 0..n {
+        let l = nearest_int(inv * x[i]).clamp(-nmax, nmax - 1);
+        out[i] = (l + nmax) as u8;
+    }
+    best_scale
+}
+
+/// Asymmetric (scale, min) search: find `(scale, min)` such that
+/// `q_i = clamp(round((x_i + min) / scale), 0, nmax)` minimizes
+/// `Σ w_i (x_i - (scale·q_i - min))²`. Writes codes into `out`, returns
+/// `(scale, min)` with `min ≥ 0` (k-quants store the *negated* minimum,
+/// i.e. reconstruction is `d·q - m`).
+///
+/// Mirrors llama.cpp `make_qkx2_quants`: candidate inverse scales around
+/// `nmax / (max - min)` plus an exact least-squares (scale, min) re-fit
+/// per candidate rounding.
+pub fn make_qkx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [u8]) -> (f32, f32) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let mut vmin = x[0];
+    let mut vmax = x[0];
+    for &v in x {
+        vmin = vmin.min(v);
+        vmax = vmax.max(v);
+    }
+    if vmax <= vmin + 1e-30 {
+        // Constant block. The stored min is constrained to be ≥ 0
+        // (reconstruction is d·q − m with m ≥ 0), so a positive constant
+        // must go through the scale path (q = nmax), while a negative
+        // constant goes through the min path (q = 0).
+        if vmin >= 0.0 {
+            out.iter_mut().for_each(|o| *o = nmax as u8);
+            return (vmin / nmax as f32, 0.0);
+        }
+        out.iter_mut().for_each(|o| *o = 0);
+        return (0.0, -vmin);
+    }
+    if vmin > 0.0 {
+        vmin = 0.0; // k-quants constrain min ≥ 0 in stored (negated) form
+    }
+    let w_at = |i: usize| weights.map_or(default_weight(x[i]), |w| w[i] + 1e-10);
+
+    let mut best = (vmax - vmin) / nmax as f32;
+    let mut best_min = -vmin;
+    let mut best_err = f32::INFINITY;
+    for step in -5i32..=8 {
+        let iscale = (0.1f32 * step as f32 + nmax as f32) / (vmax - vmin);
+        // Round with the candidate scale, then solve the 2-parameter
+        // weighted least squares for (scale, min) exactly.
+        let mut sum_w = 0f32;
+        let mut sum_x = 0f32;
+        let mut sum_l = 0f32;
+        let mut sum_l2 = 0f32;
+        let mut sum_xl = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * (x[i] - vmin)).clamp(0, nmax) as f32;
+            let w = w_at(i);
+            sum_w += w;
+            sum_x += w * x[i];
+            sum_l += w * l;
+            sum_l2 += w * l * l;
+            sum_xl += w * x[i] * l;
+        }
+        let det = sum_w * sum_l2 - sum_l * sum_l;
+        if det <= 0.0 {
+            continue;
+        }
+        let mut scale = (sum_w * sum_xl - sum_x * sum_l) / det;
+        let mut minv = (sum_l2 * sum_x - sum_l * sum_xl) / det;
+        if minv > 0.0 {
+            // Constrained fit: min must be ≤ 0 (stored negated ≥ 0).
+            minv = 0.0;
+            scale = if sum_l2 > 0.0 { sum_xl / sum_l2 } else { scale };
+        }
+        if scale <= 0.0 {
+            continue;
+        }
+        let mut err = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * (x[i] - vmin)).clamp(0, nmax) as f32;
+            let d = x[i] - (scale * l + minv);
+            err += w_at(i) * d * d;
+        }
+        if err < best_err {
+            best_err = err;
+            best = scale;
+            best_min = -minv;
+        }
+    }
+    let inv = if best > 0.0 { 1.0 / best } else { 0.0 };
+    for i in 0..n {
+        out[i] = nearest_int(inv * (x[i] + best_min)).clamp(0, nmax) as u8;
+    }
+    (best, best_min)
+}
+
+/// Read a little-endian f16 at `bytes[off..off+2]`.
+#[inline]
+pub fn get_f16(bytes: &[u8], off: usize) -> f32 {
+    let bits = u16::from_le_bytes([bytes[off], bytes[off + 1]]);
+    crate::util::f16::f16_bits_to_f32(bits)
+}
+
+/// Write `v` as little-endian f16 at `bytes[off..off+2]`.
+#[inline]
+pub fn put_f16(bytes: &mut [u8], off: usize, v: f32) {
+    let bits = crate::util::f16::f32_to_f16_bits(v);
+    bytes[off..off + 2].copy_from_slice(&bits.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mse(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len() as f32
+    }
+
+    #[test]
+    fn qx_reconstructs_linear_ramp() {
+        // A ramp exactly representable with 6-bit symmetric codes.
+        let x: Vec<f32> = (-32..32).map(|i| i as f32 * 0.5).collect();
+        let mut codes = vec![0u8; x.len()];
+        let scale = make_qx_quants(&x, 32, None, &mut codes);
+        let recon: Vec<f32> = codes.iter().map(|&c| scale * (c as f32 - 32.0)).collect();
+        assert!(mse(&x, &recon) < 1e-8, "mse={}", mse(&x, &recon));
+    }
+
+    #[test]
+    fn qx_zero_block() {
+        let x = vec![0f32; 16];
+        let mut codes = vec![0u8; 16];
+        let scale = make_qx_quants(&x, 4, None, &mut codes);
+        assert_eq!(scale, 0.0);
+        let recon: Vec<f32> = codes.iter().map(|&c| scale * (c as f32 - 4.0)).collect();
+        assert_eq!(recon, x);
+    }
+
+    #[test]
+    fn qkx_reconstructs_shifted_ramp() {
+        let x: Vec<f32> = (0..32).map(|i| 3.0 + i as f32 * 0.25).collect();
+        let mut codes = vec![0u8; x.len()];
+        let (scale, min) = make_qkx_quants(&x, 31, None, &mut codes);
+        let recon: Vec<f32> = codes.iter().map(|&c| scale * c as f32 - min).collect();
+        assert!(mse(&x, &recon) < 0.02, "mse={}", mse(&x, &recon));
+    }
+
+    #[test]
+    fn qkx_constant_block() {
+        let x = vec![-1.5f32; 32];
+        let mut codes = vec![0u8; 32];
+        let (scale, min) = make_qkx_quants(&x, 15, None, &mut codes);
+        let recon: Vec<f32> = codes.iter().map(|&c| scale * c as f32 - min).collect();
+        for v in recon {
+            assert!((v - -1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn importance_shifts_rounding() {
+        // A block with one huge-importance element: its reconstruction
+        // error must not exceed the unweighted case.
+        let mut x = vec![0.1f32; 32];
+        x[7] = 0.9;
+        let mut w = vec![1.0f32; 32];
+        w[7] = 1e6;
+        let mut codes_u = vec![0u8; 32];
+        let mut codes_w = vec![0u8; 32];
+        let s_u = make_qx_quants(&x, 4, None, &mut codes_u);
+        let s_w = make_qx_quants(&x, 4, Some(&w), &mut codes_w);
+        let err_u = (x[7] - s_u * (codes_u[7] as f32 - 4.0)).abs();
+        let err_w = (x[7] - s_w * (codes_w[7] as f32 - 4.0)).abs();
+        assert!(err_w <= err_u + 1e-6, "err_w={err_w} err_u={err_u}");
+    }
+
+    #[test]
+    fn f16_helpers_roundtrip() {
+        let mut buf = [0u8; 4];
+        put_f16(&mut buf, 1, 0.625);
+        assert_eq!(get_f16(&buf, 1), 0.625);
+    }
+}

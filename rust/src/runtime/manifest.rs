@@ -1,0 +1,188 @@
+//! Artifact manifests: the contract between `python/compile/aot.py`
+//! (which emits them next to each HLO file) and the runtime (which
+//! marshals buffers in exactly this order).
+
+use crate::util::json::{self, Value};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "u8" => Dtype::U8,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Tokens,
+    Lengths,
+    Token,
+    Pos,
+    CacheKv,
+    CacheK,
+    CacheV,
+    Weight,
+    Logits,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "tokens" => Role::Tokens,
+            "lengths" => Role::Lengths,
+            "token" => Role::Token,
+            "pos" => Role::Pos,
+            "cache_kv" => Role::CacheKv,
+            "cache_k" => Role::CacheK,
+            "cache_v" => Role::CacheV,
+            "weight" => Role::Weight,
+            "logits" => Role::Logits,
+            other => bail!("unknown role {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub role: Role,
+    /// Tensor name (weights only).
+    pub name: Option<String>,
+    /// Quant format name (weights only).
+    pub format: Option<String>,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model_name: String,
+    pub scheme: String,
+    pub phase: String,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_ctx: usize,
+    pub vocab: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+fn io_spec(v: &Value) -> Result<IoSpec> {
+    Ok(IoSpec {
+        role: Role::parse(v.req("role")?.as_str()?)?,
+        name: match v.get("name") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            _ => None,
+        },
+        format: match v.get("format") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            _ => None,
+        },
+        shape: v
+            .req("buf_shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<_>>()?,
+        dtype: Dtype::parse(v.req("dtype")?.as_str()?)?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let inputs = v
+            .req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(io_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(io_spec)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model_name: v.req("model")?.req("name")?.as_str()?.to_string(),
+            scheme: v.req("scheme")?.as_str()?.to_string(),
+            phase: v.req("phase")?.as_str()?.to_string(),
+            batch: v.req("batch")?.as_usize()?,
+            prompt_len: v.req("prompt_len")?.as_usize()?,
+            max_ctx: v.req("max_ctx")?.as_usize()?,
+            vocab: v.req("vocab")?.as_usize()?,
+            inputs,
+            outputs,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Names of all weight inputs, in order.
+    pub fn weight_names(&self) -> Vec<&str> {
+        self.inputs
+            .iter()
+            .filter(|i| i.role == Role::Weight)
+            .filter_map(|i| i.name.as_deref())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"name": "tiny-moe"},
+      "scheme": "dq3_k_m", "phase": "prefill",
+      "batch": 16, "prompt_len": 16, "max_ctx": 24, "vocab": 512,
+      "inputs": [
+        {"role": "tokens", "buf_shape": [16, 16], "dtype": "i32"},
+        {"role": "lengths", "buf_shape": [16], "dtype": "i32"},
+        {"role": "weight", "name": "token_embd.weight", "format": "q4_k",
+         "buf_shape": [512, 144], "dtype": "u8"}
+      ],
+      "outputs": [
+        {"role": "logits", "buf_shape": [16, 512], "dtype": "f32"},
+        {"role": "cache_kv", "buf_shape": [6, 16, 24, 288], "dtype": "f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model_name, "tiny-moe");
+        assert_eq!(m.batch, 16);
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[2].role, Role::Weight);
+        assert_eq!(m.inputs[2].format.as_deref(), Some("q4_k"));
+        assert_eq!(m.weight_names(), vec!["token_embd.weight"]);
+        assert_eq!(m.outputs[1].shape, vec![6, 16, 24, 288]);
+    }
+
+    #[test]
+    fn rejects_bad_role() {
+        let bad = SAMPLE.replace("\"tokens\"", "\"bogus\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

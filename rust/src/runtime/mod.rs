@@ -1,0 +1,241 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! Python is never on this path — the artifacts under `artifacts/hlo/`
+//! are compiled once at build time (`make artifacts`); this module
+//! loads the HLO **text** (`HloModuleProto::from_text_file`; serialized
+//! protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1), compiles
+//! it on the PJRT CPU client, marshals `.dsq` container payloads into
+//! input literals in the manifest-declared order, and runs
+//! prefill/decode steps.
+
+pub mod manifest;
+
+use crate::container::Container;
+use anyhow::{anyhow, bail, Context, Result};
+use manifest::{Dtype, Manifest, Role};
+use std::path::Path;
+
+/// A compiled (model, scheme) serving engine: prefill + decode
+/// executables plus the weight literals from the checkpoint.
+pub struct Engine {
+    pub client: std::sync::Arc<xla::PjRtClient>,
+    pub prefill: Phase,
+    pub decode: Phase,
+    pub model_name: String,
+    pub scheme_name: String,
+}
+
+/// One compiled phase and its manifest.
+pub struct Phase {
+    pub manifest: Manifest,
+    pub exe: xla::PjRtLoadedExecutable,
+    /// Weight literals in manifest input order.
+    weights: Vec<xla::Literal>,
+}
+
+fn elem_ty(d: Dtype) -> xla::ElementType {
+    match d {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::U8 => xla::ElementType::U8,
+        Dtype::I32 => xla::ElementType::S32,
+    }
+}
+
+/// Build a literal from raw bytes + manifest spec.
+fn literal(dtype: Dtype, shape: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(elem_ty(dtype), shape, bytes)
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+}
+
+fn i32_literal(shape: &[usize], vals: &[i32]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    literal(Dtype::I32, shape, &bytes)
+}
+
+fn f32_zeros(shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    literal(Dtype::F32, shape, &vec![0u8; n * 4])
+}
+
+impl Phase {
+    fn load(
+        client: &xla::PjRtClient,
+        hlo_path: &Path,
+        manifest_path: &Path,
+        ckpt: &Container,
+    ) -> Result<Phase> {
+        let manifest = Manifest::load(manifest_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", hlo_path.display()))?;
+
+        // Prepare weight literals in manifest order, validating the
+        // container against the manifest's expectations.
+        let mut weights = Vec::new();
+        for spec in &manifest.inputs {
+            if spec.role != Role::Weight {
+                continue;
+            }
+            let name = spec.name.as_deref().expect("weight inputs carry names");
+            let entry = ckpt
+                .tensor(name)
+                .with_context(|| format!("checkpoint {}", ckpt.scheme_name))?;
+            if entry.format.name() != spec.format.as_deref().unwrap_or("f32") {
+                bail!(
+                    "tensor {name}: container format {} != manifest {}; \
+                     re-run `dsq quantize` with the matching scheme",
+                    entry.format.name(),
+                    spec.format.as_deref().unwrap_or("?")
+                );
+            }
+            let expect: usize = spec.shape.iter().product::<usize>() * spec.dtype.size();
+            let bytes = ckpt.bytes(entry);
+            if bytes.len() != expect {
+                bail!(
+                    "tensor {name}: payload {} bytes != manifest expectation {expect}",
+                    bytes.len()
+                );
+            }
+            weights.push(literal(spec.dtype, &spec.shape, bytes)?);
+        }
+        Ok(Phase { manifest, exe, weights })
+    }
+
+    /// Execute with the given leading (non-weight) inputs.
+    fn run(&self, lead: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let n_lead = self
+            .manifest
+            .inputs
+            .iter()
+            .filter(|i| i.role != Role::Weight)
+            .count();
+        if lead.len() != n_lead {
+            bail!(
+                "phase {}: expected {n_lead} leading inputs, got {}",
+                self.manifest.phase,
+                lead.len()
+            );
+        }
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(lead.len() + self.weights.len());
+        inputs.extend(lead.iter());
+        inputs.extend(self.weights.iter());
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback failed: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untuple failed: {e:?}"))
+    }
+}
+
+/// Result of a prefill/decode step.
+pub struct StepOutput {
+    /// Row-major [batch, vocab].
+    pub logits: Vec<f32>,
+    /// Opaque cache literals threaded into the next decode.
+    pub cache: Vec<xla::Literal>,
+}
+
+impl Engine {
+    /// Load a serving engine.
+    ///
+    /// `hlo_dir` holds `{model}_{scheme}_{phase}.hlo.txt` + manifests
+    /// (from `make artifacts`); `ckpt_path` is the quantized container
+    /// produced by `dsq quantize` (or the f32 training checkpoint).
+    pub fn load(hlo_dir: &Path, ckpt_path: &Path) -> Result<Engine> {
+        let ckpt = Container::open(ckpt_path)?;
+        let model_name = ckpt.model.name.clone();
+        let scheme_name = ckpt.scheme_name.clone();
+        let client = std::sync::Arc::new(
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?,
+        );
+        let stem = |phase: &str| format!("{model_name}_{scheme_name}_{phase}");
+        let prefill = Phase::load(
+            &client,
+            &hlo_dir.join(format!("{}.hlo.txt", stem("prefill"))),
+            &hlo_dir.join(format!("{}.manifest.json", stem("prefill"))),
+            &ckpt,
+        )?;
+        let decode = Phase::load(
+            &client,
+            &hlo_dir.join(format!("{}.hlo.txt", stem("decode"))),
+            &hlo_dir.join(format!("{}.manifest.json", stem("decode"))),
+            &ckpt,
+        )?;
+        Ok(Engine { client, prefill, decode, model_name, scheme_name })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.prefill.manifest.batch
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prefill.manifest.prompt_len
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.prefill.manifest.max_ctx
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.prefill.manifest.vocab
+    }
+
+    /// Run prefill over a padded prompt batch.
+    ///
+    /// `tokens`: row-major [batch, prompt_len]; `lengths`: [batch] with
+    /// values in 1..=prompt_len (pad unused slots with length 1).
+    pub fn run_prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<StepOutput> {
+        let (b, t) = (self.batch(), self.prompt_len());
+        if tokens.len() != b * t || lengths.len() != b {
+            bail!("prefill input shape mismatch");
+        }
+        let lead = vec![i32_literal(&[b, t], tokens)?, i32_literal(&[b], lengths)?];
+        let mut out = self.prefill.run(&lead)?;
+        let logits = out.remove(0);
+        Ok(StepOutput {
+            logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            cache: out,
+        })
+    }
+
+    /// Run one decode step: `token`/`pos` are [batch]; `cache` from the
+    /// previous step.
+    pub fn run_decode(
+        &self,
+        token: &[i32],
+        pos: &[i32],
+        cache: Vec<xla::Literal>,
+    ) -> Result<StepOutput> {
+        let b = self.batch();
+        if token.len() != b || pos.len() != b {
+            bail!("decode input shape mismatch");
+        }
+        let mut lead = vec![i32_literal(&[b], token)?, i32_literal(&[b], pos)?];
+        lead.extend(cache);
+        let mut out = self.decode.run(&lead)?;
+        let logits = out.remove(0);
+        Ok(StepOutput {
+            logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            cache: out,
+        })
+    }
+
+    /// An empty cache of the right shape (useful for tests).
+    pub fn empty_cache(&self) -> Result<Vec<xla::Literal>> {
+        self.decode
+            .manifest
+            .inputs
+            .iter()
+            .filter(|i| matches!(i.role, Role::CacheKv | Role::CacheK | Role::CacheV))
+            .map(|i| f32_zeros(&i.shape))
+            .collect()
+    }
+}

@@ -1,0 +1,80 @@
+//! Built-in schemes, embedded from `configs/schemes/*.json` at compile
+//! time. The Python AOT pipeline (`python/compile/aot.py`) reads the
+//! same files, so recipes cannot drift between the two sides.
+
+use super::Scheme;
+use anyhow::{bail, Result};
+
+macro_rules! embedded {
+    ($($name:literal),* $(,)?) => {
+        /// `(name, json_text)` pairs for every embedded scheme.
+        pub const EMBEDDED: &[(&str, &str)] = &[
+            $(($name, include_str!(concat!("../../../configs/schemes/", $name, ".json")))),*
+        ];
+    };
+}
+
+embedded!(
+    "f32",
+    "q8_0",
+    "q4_k_m",
+    "q4_k",
+    "q3_k_m",
+    "q3_k",
+    "dq3_k_m",
+    "q2_k_l",
+    "ud_q2_k_xl",
+);
+
+/// Names of all built-in schemes, most precise first.
+pub fn names() -> Vec<&'static str> {
+    EMBEDDED.iter().map(|(n, _)| *n).collect()
+}
+
+/// Load a built-in scheme by name.
+pub fn scheme(name: &str) -> Result<Scheme> {
+    for (n, text) in EMBEDDED {
+        if *n == name {
+            return Scheme::parse_str(text);
+        }
+    }
+    bail!(
+        "unknown scheme {name:?} (available: {})",
+        names().join(", ")
+    )
+}
+
+/// All built-in schemes.
+pub fn all() -> Vec<Scheme> {
+    EMBEDDED
+        .iter()
+        .map(|(_, text)| Scheme::parse_str(text).expect("embedded scheme must parse"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_embedded_schemes_parse() {
+        let schemes = all();
+        assert_eq!(schemes.len(), EMBEDDED.len());
+        for s in &schemes {
+            assert!(!s.display.is_empty());
+        }
+    }
+
+    #[test]
+    fn names_match_json_name_field() {
+        for (n, text) in EMBEDDED {
+            let s = Scheme::parse_str(text).unwrap();
+            assert_eq!(&s.name, n, "file name and JSON name field must agree");
+        }
+    }
+
+    #[test]
+    fn unknown_scheme_errors() {
+        assert!(scheme("q9_z").is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! Quantization recipe ("scheme") engine.
+//!
+//! A scheme maps every tensor of a model to a [`QuantFormat`] via
+//! per-module rules — this is the machinery behind Table 7 of the paper,
+//! including the paper's contribution **DQ3_K_M** (dynamic layer-indexed
+//! bit allocation inside `ffn_down_exps`).
+//!
+//! Schemes are defined in `configs/schemes/*.json` (embedded at compile
+//! time; the Python AOT pipeline reads the same files, making the JSON
+//! the single source of truth). Three rule kinds exist:
+//!
+//! - `{"module": "...", "format": "q4_k"}` — fixed format.
+//! - `{"module": "...", "more_bits": {"high": "q6_k", "low": "q4_k"}}` —
+//!   llama.cpp's `use_more_bits(i_layer, n_layer)` mix: high precision
+//!   for the first ⅛ and last ⅛ of layers plus every third layer in the
+//!   middle band. This reproduces Q4_K_M's published 53.4%/46.6%
+//!   `ffn_down_exps` split on the 61-layer 671B model.
+//! - `{"module": "...", "dynamic": {...}}` — the DQ3_K_M rule: the first
+//!   `first_moe` MoE layers get `first_format`, every `period`-th
+//!   absolute layer gets `period_format`, the rest `default`. With
+//!   `first_moe=2, period=5` on 58 MoE layers this yields the paper's
+//!   3.4% q6_k / 20.7% q4_k / 75.9% q3_k split (Appendix A.1).
+//!
+//! Norms and the MoE router (`ffn_gate_inp`) always stay f32.
+
+pub mod builtin;
+
+use crate::model::{ModelConfig, ModuleClass, TensorInfo};
+use crate::quant::QuantFormat;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+
+/// llama.cpp's `use_more_bits`: layers that get the higher-precision
+/// format in mixed `ffn_down` quantization.
+pub fn use_more_bits(i_layer: usize, n_layer: usize) -> bool {
+    i_layer < n_layer / 8 || i_layer >= 7 * n_layer / 8 || (i_layer - n_layer / 8) % 3 == 2
+}
+
+/// One per-module rule.
+#[derive(Debug, Clone)]
+pub enum RuleKind {
+    Fixed(QuantFormat),
+    MoreBits { high: QuantFormat, low: QuantFormat },
+    Dynamic {
+        first_moe: usize,
+        first_format: QuantFormat,
+        period: usize,
+        period_format: QuantFormat,
+        default: QuantFormat,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub module: ModuleClass,
+    pub kind: RuleKind,
+}
+
+/// A quantization scheme (recipe).
+#[derive(Debug, Clone)]
+pub struct Scheme {
+    pub name: String,
+    pub display: String,
+    pub source: String,
+    pub default: QuantFormat,
+    pub rules: Vec<Rule>,
+}
+
+impl Scheme {
+    /// Parse a scheme from its JSON definition.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let name = v.req("name")?.as_str()?.to_string();
+        let display = v.req("display")?.as_str()?.to_string();
+        let source = v.req("source")?.as_str()?.to_string();
+        let default = QuantFormat::parse(v.req("default")?.as_str()?)?;
+        let mut rules = Vec::new();
+        for rv in v.req("rules")?.as_arr()? {
+            let module_name = rv.req("module")?.as_str()?;
+            let module = ModuleClass::parse(module_name)
+                .with_context(|| format!("unknown module class {module_name:?}"))?;
+            let kind = if let Some(f) = rv.get("format") {
+                RuleKind::Fixed(QuantFormat::parse(f.as_str()?)?)
+            } else if let Some(mb) = rv.get("more_bits") {
+                RuleKind::MoreBits {
+                    high: QuantFormat::parse(mb.req("high")?.as_str()?)?,
+                    low: QuantFormat::parse(mb.req("low")?.as_str()?)?,
+                }
+            } else if let Some(dy) = rv.get("dynamic") {
+                RuleKind::Dynamic {
+                    first_moe: dy.req("first_moe")?.as_usize()?,
+                    first_format: QuantFormat::parse(dy.req("first_format")?.as_str()?)?,
+                    period: dy.req("period")?.as_usize()?,
+                    period_format: QuantFormat::parse(dy.req("period_format")?.as_str()?)?,
+                    default: QuantFormat::parse(dy.req("default")?.as_str()?)?,
+                }
+            } else {
+                bail!("rule for {module_name} has no format/more_bits/dynamic");
+            };
+            rules.push(Rule { module, kind });
+        }
+        Ok(Scheme { name, display, source, default, rules })
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// The format assigned to tensor `t` of model `cfg`.
+    pub fn assign(&self, t: &TensorInfo, cfg: &ModelConfig) -> QuantFormat {
+        if !t.class.quantizable() {
+            return QuantFormat::F32;
+        }
+        let rule = self.rules.iter().find(|r| r.module == t.class);
+        let fmt = match rule.map(|r| &r.kind) {
+            None => self.default,
+            Some(RuleKind::Fixed(f)) => *f,
+            Some(RuleKind::MoreBits { high, low }) => {
+                let layer = t.layer.unwrap_or(0);
+                if use_more_bits(layer, cfg.n_layers) {
+                    *high
+                } else {
+                    *low
+                }
+            }
+            Some(RuleKind::Dynamic {
+                first_moe,
+                first_format,
+                period,
+                period_format,
+                default,
+            }) => {
+                let layer = t.layer.unwrap_or(0);
+                let moe_idx = layer.saturating_sub(cfg.first_dense);
+                if moe_idx < *first_moe {
+                    *first_format
+                } else if *period > 0 && layer % *period == 0 {
+                    *period_format
+                } else {
+                    *default
+                }
+            }
+        };
+        // A block format only applies if the tensor's rows are a multiple
+        // of the block size; otherwise fall back to f16 (mirrors
+        // llama.cpp's fallback for incompatible tensors).
+        if t.row_len() % fmt.block_weights() != 0 || t.n_params() as usize % fmt.block_weights() != 0
+        {
+            QuantFormat::F16
+        } else {
+            fmt
+        }
+    }
+
+    /// Total quantized bytes for a model under this scheme.
+    pub fn model_bytes(&self, cfg: &ModelConfig) -> u64 {
+        cfg.census()
+            .iter()
+            .map(|t| {
+                let fmt = self.assign(t, cfg);
+                (t.n_params() as f64 * fmt.bits_per_weight() / 8.0) as u64
+            })
+            .sum()
+    }
+
+    /// Average bits per weight across the whole model (the "Avg Quants"
+    /// row of Table 1).
+    pub fn avg_bits(&self, cfg: &ModelConfig) -> f64 {
+        let census = cfg.census();
+        let total_params: u64 = census.iter().map(|t| t.n_params()).sum();
+        let total_bits: f64 = census
+            .iter()
+            .map(|t| t.n_params() as f64 * self.assign(t, cfg).bits_per_weight())
+            .sum();
+        total_bits / total_params as f64
+    }
+
+    /// Per-module-class format breakdown: for each class present in the
+    /// model, the parameter-weighted fraction per format (the cell
+    /// contents of Table 7).
+    pub fn breakdown(&self, cfg: &ModelConfig) -> Vec<(ModuleClass, Vec<(QuantFormat, f64)>)> {
+        let census = cfg.census();
+        let mut out = Vec::new();
+        for class in ModuleClass::ALL {
+            let tensors: Vec<&TensorInfo> =
+                census.iter().filter(|t| t.class == class).collect();
+            if tensors.is_empty() {
+                continue;
+            }
+            let total: u64 = tensors.iter().map(|t| t.n_params()).sum();
+            let mut per_fmt: Vec<(QuantFormat, u64)> = Vec::new();
+            for t in &tensors {
+                let f = self.assign(t, cfg);
+                match per_fmt.iter_mut().find(|(pf, _)| *pf == f) {
+                    Some((_, n)) => *n += t.n_params(),
+                    None => per_fmt.push((f, t.n_params())),
+                }
+            }
+            per_fmt.sort_by(|a, b| b.1.cmp(&a.1));
+            out.push((
+                class,
+                per_fmt
+                    .into_iter()
+                    .map(|(f, n)| (f, n as f64 / total as f64))
+                    .collect(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn use_more_bits_matches_llama_cpp_on_61_layers() {
+        // On n=61: high-precision layers are i<7, i>=53, and the middle
+        // band every 3rd. ffn_down_exps lives on layers 3..61 → 27 of 58
+        // MoE layers get q6_k = 46.6% (Table 7's published split).
+        let n = 61;
+        let moe_high = (3..61).filter(|&i| use_more_bits(i, n)).count();
+        assert_eq!(moe_high, 27);
+        // Dense layers 0..3 are all in the first eighth.
+        assert!((0..3).all(|i| use_more_bits(i, n)));
+    }
+
+    #[test]
+    fn dq3_dynamic_split_matches_paper() {
+        // first_moe=2 → layers 3,4 get q6_k (2/58 = 3.4%); period=5 →
+        // layers 5,10,…,60 get q4_k (12/58 = 20.7%); rest q3_k (75.9%).
+        let cfg = ModelConfig::deepseek_v3_671b();
+        let scheme = builtin::scheme("dq3_k_m").unwrap();
+        let census = cfg.census();
+        let mut q3 = 0;
+        let mut q4 = 0;
+        let mut q6 = 0;
+        for t in census.iter().filter(|t| t.class == ModuleClass::FfnDownExps) {
+            match scheme.assign(t, &cfg) {
+                QuantFormat::Q3K => q3 += 1,
+                QuantFormat::Q4K => q4 += 1,
+                QuantFormat::Q6K => q6 += 1,
+                f => panic!("unexpected format {f}"),
+            }
+        }
+        assert_eq!((q3, q4, q6), (44, 12, 2));
+    }
+
+    #[test]
+    fn norms_and_router_stay_f32() {
+        let cfg = ModelConfig::deepseek_v3_671b();
+        for name in ["q4_k_m", "q2_k_l", "dq3_k_m"] {
+            let scheme = builtin::scheme(name).unwrap();
+            for t in cfg.census() {
+                if !t.class.quantizable() {
+                    assert_eq!(scheme.assign(&t, &cfg), QuantFormat::F32, "{}", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_rows_fall_back_to_f16() {
+        // A hypothetical tensor with a non-256-multiple row under q4_k.
+        let cfg = ModelConfig::tiny_moe();
+        let t = TensorInfo {
+            name: "blk.0.weird.weight".into(),
+            class: ModuleClass::AttnOutput,
+            layer: Some(0),
+            shape: vec![100, 100],
+        };
+        let scheme = builtin::scheme("q4_k_m").unwrap();
+        assert_eq!(scheme.assign(&t, &cfg), QuantFormat::F16);
+    }
+
+    #[test]
+    fn avg_bits_monotone_across_schemes() {
+        let cfg = ModelConfig::deepseek_v3_671b();
+        let names = ["q4_k_m", "q3_k_m", "dq3_k_m", "q2_k_l", "ud_q2_k_xl"];
+        let bits: Vec<f64> = names
+            .iter()
+            .map(|n| builtin::scheme(n).unwrap().avg_bits(&cfg))
+            .collect();
+        // Table 1 ordering: 4.82 > 3.81 > 3.59 > 2.91 > 2.70.
+        for w in bits.windows(2) {
+            assert!(w[0] > w[1], "ordering violated: {bits:?}");
+        }
+    }
+
+    #[test]
+    fn table1_avg_bits_match_paper() {
+        // The headline reproduction: avg bits per weight on DeepSeek-R1
+        // 671B must match Table 1 to within 0.03 bits.
+        let cfg = ModelConfig::deepseek_v3_671b();
+        let expect = [
+            ("q4_k_m", 4.82),
+            ("q3_k_m", 3.81),
+            ("dq3_k_m", 3.59),
+            ("q2_k_l", 2.91),
+            ("ud_q2_k_xl", 2.70),
+        ];
+        for (name, paper) in expect {
+            let got = builtin::scheme(name).unwrap().avg_bits(&cfg);
+            assert!(
+                (got - paper).abs() < 0.03,
+                "{name}: computed {got:.3} vs paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn table1_model_sizes_match_paper() {
+        // Model sizes in GiB (paper's "G"): 377 / 298 / 281 / 228 / 212.
+        let cfg = ModelConfig::deepseek_v3_671b();
+        let expect = [
+            ("q4_k_m", 377.0),
+            ("q3_k_m", 298.0),
+            ("dq3_k_m", 281.0),
+            ("q2_k_l", 228.0),
+            ("ud_q2_k_xl", 212.0),
+        ];
+        for (name, paper) in expect {
+            let bytes = builtin::scheme(name).unwrap().model_bytes(&cfg);
+            let gib = bytes as f64 / (1u64 << 30) as f64;
+            assert!(
+                (gib - paper).abs() < 3.0,
+                "{name}: computed {gib:.1}G vs paper {paper}G"
+            );
+        }
+    }
+}

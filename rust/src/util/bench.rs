@@ -1,0 +1,188 @@
+//! Micro-benchmark harness (offline replacement for `criterion`).
+//!
+//! Provides warm-up, adaptive iteration-count calibration, and robust
+//! statistics (median / p10 / p90 over timed batches). Bench targets in
+//! `benches/` use [`Bench`] with `harness = false`, printing one line per
+//! benchmark in a stable, grep-able format:
+//!
+//! ```text
+//! bench <name> ... median 12.34 µs/iter (p10 11.9, p90 13.0, 160 iters × 32 batches) [thrpt: 1.2 GiB/s]
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// A single benchmark runner.
+pub struct Bench {
+    /// Target wall-clock time per measurement batch.
+    pub batch_target: Duration,
+    /// Number of measured batches.
+    pub batches: usize,
+    /// Warm-up time before calibration.
+    pub warmup: Duration,
+    /// Optional multiplier: bytes processed per iteration (enables
+    /// throughput reporting).
+    pub bytes_per_iter: Option<u64>,
+    /// Optional multiplier: items processed per iteration.
+    pub items_per_iter: Option<u64>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            batch_target: Duration::from_millis(20),
+            batches: 32,
+            warmup: Duration::from_millis(100),
+            bytes_per_iter: None,
+            items_per_iter: None,
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters_per_batch: u64,
+    pub batches: usize,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+/// Pretty time formatting with unit auto-selection.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bench {
+            batch_target: Duration::from_millis(50),
+            batches: 8,
+            warmup: Duration::from_millis(50),
+            ..Default::default()
+        }
+    }
+
+    pub fn throughput_bytes(mut self, bytes: u64) -> Self {
+        self.bytes_per_iter = Some(bytes);
+        self
+    }
+
+    pub fn throughput_items(mut self, items: u64) -> Self {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Run `f` repeatedly and report statistics. The closure's return
+    /// value is passed through `std::hint::black_box` to defeat DCE.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warm-up and single-shot estimate.
+        let wstart = Instant::now();
+        let mut one = Duration::ZERO;
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup || warm_iters == 0 {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            one = t.elapsed();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        // Calibrate iterations per batch from the last single-shot time.
+        let per_iter_ns = one.as_nanos().max(1) as u64;
+        let iters = (self.batch_target.as_nanos() as u64 / per_iter_ns).clamp(1, 10_000_000);
+
+        let mut samples = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| -> f64 {
+            let idx = (p * (samples.len() - 1) as f64).round() as usize;
+            samples[idx]
+        };
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: q(0.5),
+            p10_ns: q(0.1),
+            p90_ns: q(0.9),
+            iters_per_batch: iters,
+            batches: self.batches,
+        };
+        let mut extra = String::new();
+        if let Some(bytes) = self.bytes_per_iter {
+            let gibps = bytes as f64 / res.median_ns * 1e9 / (1u64 << 30) as f64;
+            extra.push_str(&format!(" [thrpt: {gibps:.2} GiB/s]"));
+        }
+        if let Some(items) = self.items_per_iter {
+            let mips = items as f64 / res.median_ns * 1e9 / 1e6;
+            extra.push_str(&format!(" [thrpt: {mips:.2} Mitem/s]"));
+        }
+        println!(
+            "bench {:<44} median {:>10}/iter (p10 {}, p90 {}, {} iters × {} batches){}",
+            res.name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.p10_ns),
+            fmt_ns(res.p90_ns),
+            res.iters_per_batch,
+            res.batches,
+            extra
+        );
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            batch_target: Duration::from_micros(200),
+            batches: 4,
+            warmup: Duration::from_micros(100),
+            ..Default::default()
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn format_units() {
+        assert_eq!(fmt_ns(500.0), "500.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

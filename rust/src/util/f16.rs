@@ -1,0 +1,163 @@
+//! IEEE 754 binary16 conversion (replaces the `half` crate in this
+//! offline build).
+//!
+//! Conversion uses round-to-nearest-even, matching hardware and the
+//! `half` crate, so the stored scales are identical to what llama.cpp's
+//! `GGML_FP32_TO_FP16` produces on x86.
+
+/// Convert f32 → f16 bits (round to nearest even, IEEE semantics
+/// including denormals, infinities and NaN).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xFF) as i32;
+    let man = x & 0x007F_FFFF;
+
+    if exp == 255 {
+        if man == 0 {
+            return sign | 0x7C00; // infinity
+        }
+        // NaN: truncate the payload, force the quiet bit so it stays NaN.
+        return sign | 0x7E00 | ((man >> 13) as u16 & 0x01FF);
+    }
+
+    // Re-bias: f32 exp-127 + 15.
+    let unbiased = exp - 127;
+    if unbiased < -24 {
+        // Underflows to signed zero (too small even for denormal).
+        return sign;
+    }
+    if unbiased < -14 {
+        // Denormal half: mantissa with implicit bit, shifted.
+        let shift = (-14 - unbiased) as u32; // 1..=10
+        let full = man | 0x0080_0000; // implicit leading 1
+        let half_man = full >> (13 + shift);
+        // Round to nearest even on the dropped bits.
+        let dropped = full & ((1u32 << (13 + shift)) - 1);
+        let halfway = 1u32 << (12 + shift);
+        let mut h = half_man as u16;
+        if dropped > halfway || (dropped == halfway && (h & 1) == 1) {
+            h += 1;
+        }
+        return sign | h;
+    }
+    if unbiased > 15 {
+        // Overflows to infinity.
+        return sign | 0x7C00;
+    }
+    let hexp = ((unbiased + 15) as u16) << 10;
+    let mut h = sign | hexp | ((man >> 13) as u16);
+    // Round to nearest even on the 13 dropped bits.
+    let dropped = man & 0x1FFF;
+    if dropped > 0x1000 || (dropped == 0x1000 && (h & 1) == 1) {
+        h = h.wrapping_add(1); // may carry into exponent — that's correct
+    }
+    h
+}
+
+/// Convert f16 bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Denormal: normalize.
+            let mut e = -1i32;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e += 1;
+            }
+            let m = (m & 0x03FF) << 13;
+            let e = (127 - 15 - e) as u32;
+            sign | (e << 23) | m
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (man << 13) // Inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision.
+#[inline]
+pub fn round_f16(v: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 0.625, 2.0, 65504.0, -65504.0] {
+            assert_eq!(round_f16(v), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00); // overflow → inf
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn denormals_roundtrip() {
+        // Smallest positive half denormal = 2^-24.
+        let tiny = f32::powi(2.0, -24);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+        assert_eq!(f16_bits_to_f32(0x0001), tiny);
+        // Below half the smallest denormal → rounds to zero.
+        assert_eq!(f32_to_f16_bits(tiny / 4.0), 0x0000);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10;
+        // nearest-even picks 1.0 (mantissa even).
+        let v = 1.0 + f32::powi(2.0, -11);
+        assert_eq!(round_f16(v), 1.0);
+        // 1 + 3·2^-11 is halfway between 1+2^-10 and 1+2^-9 → picks even.
+        let v = 1.0 + 3.0 * f32::powi(2.0, -11);
+        assert_eq!(round_f16(v), 1.0 + f32::powi(2.0, -9));
+    }
+
+    #[test]
+    fn exhaustive_f16_to_f32_to_f16() {
+        // Every finite half value must survive a roundtrip through f32.
+        for bits in 0u16..=0xFFFF {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 31 {
+                continue; // inf/nan payloads not bit-stable by design
+            }
+            let f = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(f), bits, "bits {bits:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn monotone_on_positives() {
+        let mut prev = -1.0f32;
+        for bits in 0u16..0x7C00 {
+            let f = f16_bits_to_f32(bits);
+            assert!(f > prev, "bits {bits:#06x}");
+            prev = f;
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! Minimal JSON parser/serializer (offline replacement for `serde_json`).
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escape
+//! sequences incl. `\uXXXX`, numbers, booleans, null). Object key order
+//! is preserved (`Vec<(String, Value)>`) so emitted configs diff cleanly.
+//! Used for `configs/schemes/*.json`, `configs/models/*.json`,
+//! checkpoint manifests and benchmark reports.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n > u64::MAX as f64 {
+            bail!("expected unsigned integer, got {n}");
+        }
+        Ok(n as u64)
+    }
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+    pub fn as_obj(&self) -> Result<&[(String, Value)]> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            _ => bail!("expected object, got {self:?}"),
+        }
+    }
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(o) => o.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    /// Object field lookup that errors with the key name.
+    pub fn req(&self, key: &str) -> Result<&Value> {
+        self.get(key).ok_or_else(|| anyhow!("missing field {key:?}"))
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Value> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { b: bytes, i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != bytes.len() {
+        bail!("trailing characters at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+/// Parse the JSON file at `path`.
+pub fn parse_file(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!(
+                "expected {:?} at offset {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected character {:?} at offset {}", c as char, self.i),
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at offset {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(fields));
+                }
+                c => bail!("expected ',' or '}}' at offset {}, found {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(items));
+                }
+                c => bail!("expected ',' or ']' at offset {}, found {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            // Surrogate pairs.
+                            if (0xD800..0xDC00).contains(&cp) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate at offset {}", self.i);
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(char::from_u32(c).ok_or_else(|| anyhow!("bad codepoint"))?);
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                bail!("unpaired low surrogate at offset {}", self.i);
+                            } else {
+                                out.push(char::from_u32(cp).ok_or_else(|| anyhow!("bad codepoint"))?);
+                            }
+                        }
+                        c => bail!("invalid escape {:?} at offset {}", c as char, self.i),
+                    }
+                }
+                c if c < 0x20 => bail!("unescaped control character at offset {}", self.i - 1),
+                c => {
+                    // Re-assemble UTF-8 multibyte sequences verbatim.
+                    let len = match c {
+                        0x00..=0x7F => 1,
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => bail!("invalid UTF-8 byte at offset {}", self.i - 1),
+                    };
+                    let start = self.i - 1;
+                    self.i = start + len;
+                    if self.i > self.b.len() {
+                        bail!("truncated UTF-8 sequence");
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|_| anyhow!("invalid UTF-8 at offset {start}"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let v = u32::from_str_radix(s, 16).context("invalid \\u escape")?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Value::Num(s.parse::<f64>().context("invalid number")?))
+    }
+}
+
+/// Serialize with 2-space indentation.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut s = String::new();
+    write_value(v, 0, true, &mut s);
+    s
+}
+
+/// Serialize compactly.
+pub fn to_string(v: &Value) -> String {
+    let mut s = String::new();
+    write_value(v, 0, false, &mut s);
+    s
+}
+
+fn write_value(v: &Value, indent: usize, pretty: bool, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Value::Str(s) => write_string(s, out),
+        Value::Arr(a) => {
+            if a.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if pretty {
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                }
+                write_value(item, indent + 1, pretty, out);
+            }
+            if pretty {
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            if o.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if pretty {
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                }
+                write_string(k, out);
+                out.push(':');
+                if pretty {
+                    out.push(' ');
+                }
+                write_value(val, indent + 1, pretty, out);
+            }
+            if pretty {
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience builders.
+pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+pub fn num(n: f64) -> Value {
+    Value::Num(n)
+}
+pub fn str_(s: &str) -> Value {
+    Value::Str(s.to_string())
+}
+pub fn arr(items: Vec<Value>) -> Value {
+    Value::Arr(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("-1.5e3").unwrap(), Value::Num(-1500.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.req("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.req("c").unwrap().as_str().unwrap(), "x");
+        assert_eq!(
+            v.req("a").unwrap().as_arr().unwrap()[2].req("b").unwrap(),
+            &Value::Null
+        );
+    }
+
+    #[test]
+    fn parse_escapes() {
+        let v = parse(r#""a\n\t\"\\Aé""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\n\t\"\\Aé");
+    }
+
+    #[test]
+    fn parse_surrogate_pair() {
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn parse_utf8_passthrough() {
+        let v = parse(r#"{"名": "值"}"#).unwrap();
+        assert_eq!(v.req("名").unwrap().as_str().unwrap(), "值");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("01a").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn roundtrip_pretty_and_compact() {
+        let src = r#"{"name":"dq3_k_m","rules":[{"re":"ffn_down_exps","fmt":"q3_k","every":4}],"frac":0.759,"ok":true,"none":null}"#;
+        let v = parse(src).unwrap();
+        let compact = to_string(&v);
+        assert_eq!(parse(&compact).unwrap(), v);
+        let pretty = to_string_pretty(&v);
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn key_order_preserved() {
+        let v = parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        let keys: Vec<&str> = v.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["z", "a", "m"]);
+    }
+
+    #[test]
+    fn integers_serialized_without_dot() {
+        assert_eq!(to_string(&Value::Num(32768.0)), "32768");
+        assert_eq!(to_string(&Value::Num(0.5)), "0.5");
+    }
+}

@@ -1,0 +1,47 @@
+//! Small shared utilities: deterministic RNG (mirrored in Python),
+//! formatting helpers.
+
+pub mod bench;
+pub mod f16;
+pub mod json;
+pub mod rng;
+
+/// Format a byte count the way the paper's tables do (GiB, labelled "G"
+/// / "GB" — the paper's 377G for Q4_K_M R1 is 377 GiB).
+pub fn fmt_gib(bytes: u64) -> String {
+    format!("{:.0}G", bytes as f64 / (1u64 << 30) as f64)
+}
+
+/// Format GiB with one decimal.
+pub fn fmt_gib1(bytes: u64) -> String {
+    format!("{:.1}GiB", bytes as f64 / (1u64 << 30) as f64)
+}
+
+/// Mean and (population) standard deviation of a sample.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gib_formatting() {
+        assert_eq!(fmt_gib(377 * (1u64 << 30)), "377G");
+        assert_eq!(fmt_gib1(3 * (1u64 << 29)), "1.5GiB");
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+}

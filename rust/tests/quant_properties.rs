@@ -1,0 +1,211 @@
+//! Property-style randomized tests over the codec + scheme + container
+//! stack (in-tree deterministic RNG substitutes for `proptest`, which is
+//! unavailable offline — each test sweeps hundreds of random cases and
+//! prints the failing seed on assertion).
+
+use dsq::container::{quantize_container, Container, Writer};
+use dsq::model::{ModelConfig, ModuleClass, TensorInfo};
+use dsq::quant::{self, error::rel_rmse, QuantFormat};
+use dsq::scheme::builtin;
+use dsq::util::rng::Pcg;
+
+const KQ: [QuantFormat; 6] = [
+    QuantFormat::Q8_0,
+    QuantFormat::Q6K,
+    QuantFormat::Q5K,
+    QuantFormat::Q4K,
+    QuantFormat::Q3K,
+    QuantFormat::Q2K,
+];
+
+/// Error bounds (relative RMSE on unit gaussian) per format — generous
+/// versions of the theoretical uniform-quantizer error.
+fn bound(fmt: QuantFormat) -> f64 {
+    match fmt {
+        QuantFormat::Q8_0 => 0.01,
+        QuantFormat::Q6K => 0.025,
+        QuantFormat::Q5K => 0.055,
+        QuantFormat::Q4K => 0.10,
+        QuantFormat::Q3K => 0.19,
+        QuantFormat::Q2K => 0.40,
+        _ => 0.0,
+    }
+}
+
+#[test]
+fn prop_roundtrip_error_bounded_across_distributions() {
+    for case in 0..60u64 {
+        let mut rng = Pcg::new(1000 + case);
+        let n = 256 * (1 + rng.next_below(6) as usize);
+        let scale = 10f32.powi(rng.next_below(7) as i32 - 3); // 1e-3..1e3
+        let shift = if case % 3 == 0 { scale * 0.5 } else { 0.0 };
+        let data: Vec<f32> = (0..n)
+            .map(|_| rng.next_normal() * scale + shift)
+            .collect();
+        for fmt in KQ {
+            let rt = quant::roundtrip(fmt, &data, None).unwrap();
+            let err = rel_rmse(&data, &rt);
+            // Shifted data is harder for symmetric formats; relax 2×.
+            let b = bound(fmt) * if shift != 0.0 { 2.0 } else { 1.0 };
+            assert!(
+                err < b,
+                "case {case} fmt {fmt} scale {scale} shift {shift}: err {err} > {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_error_monotone_in_bits() {
+    // More bits must not give (meaningfully) worse reconstruction.
+    for case in 0..30u64 {
+        let mut rng = Pcg::new(2000 + case);
+        let n = 512;
+        let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let errs: Vec<f64> = KQ
+            .iter()
+            .map(|&f| rel_rmse(&data, &quant::roundtrip(f, &data, None).unwrap()))
+            .collect();
+        for w in errs.windows(2) {
+            assert!(
+                w[0] <= w[1] * 1.15 + 1e-6,
+                "case {case}: error ordering violated: {errs:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_deterministic() {
+    let mut rng = Pcg::new(7);
+    let data: Vec<f32> = (0..1024).map(|_| rng.next_normal()).collect();
+    for fmt in KQ {
+        let a = quant::quantize(fmt, &data, None).unwrap();
+        let b = quant::quantize(fmt, &data, None).unwrap();
+        assert_eq!(a, b, "{fmt} must be deterministic");
+    }
+}
+
+#[test]
+fn prop_dequantize_total_on_random_bytes() {
+    // Any byte pattern must decode without panicking (formats are
+    // total); NaN/Inf only from f16 scale fields.
+    for case in 0..40u64 {
+        let mut rng = Pcg::new(3000 + case);
+        for fmt in KQ {
+            let n = fmt.block_weights() * 4;
+            let nb = fmt.row_bytes(n).unwrap();
+            let bytes: Vec<u8> = (0..nb).map(|_| rng.next_u64() as u8).collect();
+            let out = quant::dequantize(fmt, &bytes, n).unwrap();
+            assert_eq!(out.len(), n);
+        }
+    }
+}
+
+#[test]
+fn prop_container_roundtrip_random_models() {
+    // Random tensor sets through write → read → quantize → read.
+    for case in 0..10u64 {
+        let mut rng = Pcg::new(4000 + case);
+        let cfg = ModelConfig::tiny_dense();
+        let mut w = Writer::new(cfg.clone(), "f32");
+        let mut names = Vec::new();
+        for i in 0..(3 + rng.next_below(5)) {
+            let rows = 1 + rng.next_below(4) as usize;
+            let cols = 256 * (1 + rng.next_below(3) as usize);
+            let name = format!("blk.{i}.t{case}.weight");
+            let vals: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal()).collect();
+            let payload = quant::quantize(QuantFormat::F32, &vals, None).unwrap();
+            w.add_tensor(
+                &name,
+                ModuleClass::AttnOutput,
+                Some(i as usize),
+                &[rows, cols],
+                QuantFormat::F32,
+                &payload,
+            )
+            .unwrap();
+            names.push((name, vals));
+        }
+        let c = Container::from_bytes(w.to_bytes()).unwrap();
+        for (name, vals) in &names {
+            let t = c.tensor(name).unwrap();
+            assert_eq!(&c.dequantize(t).unwrap(), vals);
+        }
+        let q = quantize_container(&c, &builtin::scheme("q4_k_m").unwrap(), None).unwrap();
+        let qc = Container::from_bytes(q.to_bytes()).unwrap();
+        for (name, vals) in &names {
+            let t = qc.tensor(name).unwrap();
+            let rt = qc.dequantize(t).unwrap();
+            let err = rel_rmse(vals, &rt);
+            assert!(err < 0.12, "case {case} {name}: err {err}");
+        }
+    }
+}
+
+#[test]
+fn prop_scheme_assignment_total_and_valid() {
+    // Every scheme assigns a representable format to every tensor of
+    // every model (fallback to f16 where blocks don't fit).
+    let models = [
+        ModelConfig::deepseek_v3_671b(),
+        ModelConfig::distill_qwen_32b(),
+        ModelConfig::tiny_moe(),
+        ModelConfig::tiny_dense(),
+    ];
+    for cfg in &models {
+        for scheme in builtin::all() {
+            for t in cfg.census() {
+                let fmt = scheme.assign(&t, cfg);
+                let info = TensorInfo {
+                    name: t.name.clone(),
+                    class: t.class,
+                    layer: t.layer,
+                    shape: t.shape.clone(),
+                };
+                assert_eq!(
+                    info.row_len() % fmt.block_weights(),
+                    0,
+                    "{}: {} assigned {} with row {}",
+                    scheme.name,
+                    t.name,
+                    fmt,
+                    info.row_len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_imatrix_never_hurts_weighted_error() {
+    // With importance supplied, importance-weighted MSE must not exceed
+    // the unweighted quantizer's importance-weighted MSE (averaged over
+    // cases — per-block ties can flip individual cases).
+    let mut worse = 0;
+    let cases = 20;
+    for case in 0..cases {
+        let mut rng = Pcg::new(5000 + case);
+        let n = 512;
+        let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let imp: Vec<f32> = (0..n)
+            .map(|_| if rng.next_f32() < 0.1 { 50.0 } else { 1.0 })
+            .collect();
+        let wmse = |recon: &[f32]| -> f64 {
+            data.iter()
+                .zip(recon)
+                .zip(&imp)
+                .map(|((a, b), w)| (*w as f64) * ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let plain = quant::roundtrip(QuantFormat::Q3K, &data, None).unwrap();
+        let guided = quant::roundtrip(QuantFormat::Q3K, &data, Some(&imp)).unwrap();
+        if wmse(&guided) > wmse(&plain) {
+            worse += 1;
+        }
+    }
+    assert!(
+        worse <= cases / 4,
+        "imatrix made weighted error worse in {worse}/{cases} cases"
+    );
+}
