@@ -1,18 +1,26 @@
-//! Codec micro-benchmarks: quantize + dequantize throughput per format,
-//! with and without importance weighting. This is the L3-side hot path
-//! of `dsq quantize` (the serving hot path dequantizes inside XLA).
+//! Codec micro-benchmarks: quantize + dequantize throughput per format
+//! through the zero-copy `BlockCodec` entry points, serial vs
+//! block-parallel, with and without importance weighting — plus the
+//! headline container benchmark: multi-tensor Q4_K container
+//! quantization, serial vs tensor-parallel (the `dsq quantize` hot
+//! path; the serving hot path dequantizes inside XLA).
 
-use dsq::quant::{self, QuantFormat};
+use dsq::container::{quantize_container_with, synthetic_f32_container};
+use dsq::model::ModelConfig;
+use dsq::quant::{self, parallel, QuantFormat};
+use dsq::scheme::builtin;
 use dsq::util::bench::Bench;
 use dsq::util::rng::Pcg;
+use std::time::Instant;
 
-fn main() {
-    let n = 256 * 256; // 64K weights ≈ one tiny-moe expert matrix
+fn main() -> anyhow::Result<()> {
+    let n = 256 * 1024; // 256K weights ≈ a large expert matrix slice
     let mut rng = Pcg::new(1);
     let data: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
     let importance: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+    let cores = parallel::max_threads();
 
-    println!("# codec throughput, {n} weights/iter\n");
+    println!("# codec throughput, {n} weights/iter, {cores} cores\n");
     for fmt in [
         QuantFormat::Q8_0,
         QuantFormat::Q6K,
@@ -22,21 +30,68 @@ fn main() {
         QuantFormat::Q2K,
     ] {
         let bytes = (n * 4) as u64;
+        let mut packed = vec![0u8; fmt.row_bytes(n)?];
         Bench::new()
             .throughput_bytes(bytes)
-            .run(&format!("quantize/{}", fmt.name()), || {
-                quant::quantize(fmt, &data, None).unwrap()
+            .run(&format!("quantize-serial/{}", fmt.name()), || {
+                quant::quantize_into_with(fmt, &data, None, &mut packed, 1).unwrap()
             });
         Bench::new()
             .throughput_bytes(bytes)
-            .run(&format!("quantize-imatrix/{}", fmt.name()), || {
-                quant::quantize(fmt, &data, Some(&importance)).unwrap()
+            .run(&format!("quantize-par{cores}/{}", fmt.name()), || {
+                quant::quantize_into_with(fmt, &data, None, &mut packed, cores).unwrap()
             });
-        let packed = quant::quantize(fmt, &data, None).unwrap();
+        // Pinned to 1 thread so the imatrix overhead reads directly
+        // against the quantize-serial row above.
+        Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("quantize-imatrix-serial/{}", fmt.name()), || {
+                quant::quantize_into_with(fmt, &data, Some(&importance), &mut packed, 1).unwrap()
+            });
+        quant::quantize_into(fmt, &data, None, &mut packed)?;
+        let mut decoded = vec![0f32; n];
         Bench::new()
             .throughput_bytes(bytes)
             .run(&format!("dequantize/{}", fmt.name()), || {
-                quant::dequantize(fmt, &packed, n).unwrap()
+                quant::dequantize_into(fmt, &packed, &mut decoded).unwrap()
             });
     }
+
+    // --- the acceptance benchmark: multi-tensor Q4_K container ---
+    // Serial (1 thread) vs tensor-parallel (all cores) quantization of a
+    // deterministic tiny-moe f32 checkpoint under the pure-Q4_K scheme.
+    // On a multi-core host the parallel path must be ≥2× faster; both
+    // paths produce byte-identical containers (verified below).
+    let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 99)?;
+    let scheme = builtin::scheme("q4_k")?;
+    println!(
+        "\n# container quantization: {} tensors, {:.1} MiB f32, scheme q4_k",
+        src.tensors.len(),
+        src.data_bytes() as f64 / (1 << 20) as f64
+    );
+
+    let time_best_of = |threads: usize, reps: usize| -> anyhow::Result<(f64, Vec<u8>)> {
+        let mut best = f64::INFINITY;
+        let mut bytes = Vec::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let out = quantize_container_with(&src, &scheme, None, threads)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+            }
+            bytes = out.to_bytes();
+        }
+        Ok((best, bytes))
+    };
+    let (serial_s, serial_bytes) = time_best_of(1, 3)?;
+    let (par_s, par_bytes) = time_best_of(cores, 3)?;
+    assert_eq!(serial_bytes, par_bytes, "parallel container must be byte-identical");
+    println!(
+        "bench container-quantize/q4_k/serial        {serial_s:>8.3} s\n\
+         bench container-quantize/q4_k/parallel-{cores:<3} {par_s:>8.3} s\n\
+         speedup: {:.2}x on {cores} cores (byte-identical output)",
+        serial_s / par_s
+    );
+    Ok(())
 }

@@ -30,12 +30,14 @@
 //! `dsq quantize` (Rust) and `python/compile/train.py` (f32 checkpoints);
 //! both sides are covered by cross-format tests.
 
-use crate::model::{ModelConfig, ModuleClass};
+use crate::model::{ModelConfig, ModuleClass, TensorInfo};
 use crate::quant::QuantFormat;
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 pub const MAGIC: &[u8; 4] = b"DSQ1";
 pub const DATA_ALIGN: usize = 4096;
@@ -143,6 +145,26 @@ impl Container {
     /// Dequantize a tensor to f32.
     pub fn dequantize(&self, t: &TensorEntry) -> Result<Vec<f32>> {
         crate::quant::dequantize(t.format, self.bytes(t), t.n_elems())
+    }
+
+    /// Dequantize a tensor into a reusable scratch buffer (resized to
+    /// exactly `t.n_elems()`), auto-parallelizing over blocks for large
+    /// tensors. The zero-allocation path of the error sweep; the
+    /// container quantization pipeline pins its own thread counts
+    /// instead of using this.
+    pub fn dequantize_into(&self, t: &TensorEntry, out: &mut Vec<f32>) -> Result<()> {
+        out.resize(t.n_elems(), 0.0);
+        crate::quant::dequantize_into(t.format, self.bytes(t), out)
+    }
+
+    /// [`TensorInfo`] view of an entry (what the scheme engine consumes).
+    pub fn tensor_info(&self, t: &TensorEntry) -> TensorInfo {
+        TensorInfo {
+            name: t.name.clone(),
+            class: t.class,
+            layer: t.layer,
+            shape: t.shape.clone(),
+        }
     }
 
     /// Total data-section bytes.
@@ -267,30 +289,120 @@ impl Writer {
     }
 }
 
+/// Build a deterministic random-weight f32 container for `cfg` — the
+/// shared fixture behind `dsq selfcheck`, `benches/codec.rs`, and the
+/// parallel-vs-serial property tests (same seed → same bytes).
+pub fn synthetic_f32_container(cfg: &ModelConfig, seed: u64) -> Result<Container> {
+    let mut w = Writer::new(cfg.clone(), "f32");
+    let mut rng = crate::util::rng::Pcg::new(seed);
+    for t in cfg.census() {
+        let n: usize = t.shape.iter().product();
+        let vals: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
+        let payload = crate::quant::quantize(QuantFormat::F32, &vals, None)?;
+        w.add_tensor(&t.name, t.class, t.layer, &t.shape, QuantFormat::F32, &payload)?;
+    }
+    Container::from_bytes(w.to_bytes())
+}
+
 /// Quantize an f32 container under `scheme`, returning the new container
 /// bytes. `importance` optionally maps tensor name → per-element
 /// importance (from calibration).
+///
+/// Tensors are quantized in parallel across all cores; the result is
+/// byte-identical to the serial pipeline (each tensor's payload is a
+/// pure function of its values, its planned format and its importance,
+/// and payloads are assembled in source order either way).
 pub fn quantize_container(
     src: &Container,
     scheme: &crate::scheme::Scheme,
     importance: Option<&std::collections::HashMap<String, Vec<f32>>>,
 ) -> Result<Writer> {
-    let mut w = Writer::new(src.model.clone(), &scheme.name);
-    w.set_meta(src.meta.clone());
+    quantize_container_with(src, scheme, importance, crate::quant::parallel::max_threads())
+}
+
+/// [`quantize_container`] with an explicit worker count. `threads == 1`
+/// runs the streaming serial pipeline (one reused dequantize scratch and
+/// one reused payload buffer, no per-tensor allocation); `threads > 1`
+/// fans tensors out over scoped worker threads pulling from a shared
+/// work queue, each with its own scratch.
+pub fn quantize_container_with(
+    src: &Container,
+    scheme: &crate::scheme::Scheme,
+    importance: Option<&std::collections::HashMap<String, Vec<f32>>>,
+    threads: usize,
+) -> Result<Writer> {
     for t in &src.tensors {
         if t.format != QuantFormat::F32 {
             bail!("quantize_container expects an f32 source, found {} in {}", t.format, t.name);
         }
-        let values = src.dequantize(t)?;
-        let info = crate::model::TensorInfo {
-            name: t.name.clone(),
-            class: t.class,
-            layer: t.layer,
-            shape: t.shape.clone(),
-        };
-        let fmt = scheme.assign(&info, &src.model);
-        let imp = importance.and_then(|m| m.get(&t.name)).map(|v| v.as_slice());
-        let payload = crate::quant::quantize(fmt, &values, imp)?;
+    }
+    // Precompute the whole format plan up front (rule dispatch is not
+    // part of the parallel stage).
+    let infos: Vec<TensorInfo> = src.tensors.iter().map(|t| src.tensor_info(t)).collect();
+    let plan = scheme.plan(&infos, &src.model);
+
+    let mut w = Writer::new(src.model.clone(), &scheme.name);
+    w.set_meta(src.meta.clone());
+    let n = src.tensors.len();
+    let threads = threads.clamp(1, n.max(1));
+
+    if threads == 1 {
+        // Streaming pipeline: dequantize → quantize → append, with both
+        // scratch buffers reused across tensors. Inner codec calls pin
+        // 1 thread so this baseline is genuinely serial.
+        let mut values: Vec<f32> = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        for (t, &fmt) in src.tensors.iter().zip(&plan.formats) {
+            values.resize(t.n_elems(), 0.0);
+            crate::quant::dequantize_into_with(t.format, src.bytes(t), &mut values, 1)?;
+            let imp = importance.and_then(|m| m.get(&t.name)).map(|v| v.as_slice());
+            payload.resize(fmt.row_bytes(values.len())?, 0);
+            crate::quant::quantize_into_with(fmt, &values, imp, &mut payload, 1)
+                .with_context(|| format!("quantizing tensor {}", t.name))?;
+            w.add_tensor(&t.name, t.class, t.layer, &t.shape, fmt, &payload)?;
+        }
+        return Ok(w);
+    }
+
+    // Parallel stage: workers claim tensor indices from a shared atomic
+    // cursor (sizes vary wildly, so a queue load-balances better than
+    // static chunking) and drop finished payloads into per-tensor slots.
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Result<Vec<u8>>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut values: Vec<f32> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let t = &src.tensors[i];
+                    let fmt = plan.formats[i];
+                    let r = (|| -> Result<Vec<u8>> {
+                        // Serial inner decode/encode: parallelism lives
+                        // at the tensor level here — nesting the block
+                        // splitter would oversubscribe the machine.
+                        values.resize(t.n_elems(), 0.0);
+                        crate::quant::dequantize_into_with(t.format, src.bytes(t), &mut values, 1)?;
+                        let imp = importance.and_then(|m| m.get(&t.name)).map(|v| v.as_slice());
+                        let mut payload = vec![0u8; fmt.row_bytes(values.len())?];
+                        crate::quant::quantize_into_with(fmt, &values, imp, &mut payload, 1)?;
+                        Ok(payload)
+                    })();
+                    *results[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+
+    // Assemble in source order → identical offsets/bytes to serial.
+    for (i, (t, &fmt)) in src.tensors.iter().zip(&plan.formats).enumerate() {
+        let slot = results[i].lock().unwrap().take();
+        let payload = slot
+            .unwrap_or_else(|| Err(anyhow!("tensor was never processed")))
+            .with_context(|| format!("quantizing tensor {}", t.name))?;
         w.add_tensor(&t.name, t.class, t.layer, &t.shape, fmt, &payload)?;
     }
     Ok(w)
@@ -354,6 +466,26 @@ mod tests {
         // Quantized container must be much smaller than f32.
         assert!(qc.data_bytes() * 4 < src.data_bytes() * 2, "compression missing");
         let _ = cfg;
+    }
+
+    #[test]
+    fn parallel_quantization_bitwise_identical() {
+        // Full-scheme sweep lives in tests/quant_properties.rs; this is
+        // the in-module smoke check on the paper's headline scheme.
+        let src = Container::from_bytes(tiny_f32_container().to_bytes()).unwrap();
+        let scheme = builtin::scheme("dq3_k_m").unwrap();
+        let serial = quantize_container_with(&src, &scheme, None, 1).unwrap().to_bytes();
+        let par = quantize_container_with(&src, &scheme, None, 8).unwrap().to_bytes();
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn dequantize_into_matches_allocating_path() {
+        let c = Container::from_bytes(tiny_f32_container().to_bytes()).unwrap();
+        let t = c.tensor("blk.1.ffn_down_exps.weight").unwrap();
+        let mut scratch = vec![0f32; 3]; // wrong size on purpose
+        c.dequantize_into(t, &mut scratch).unwrap();
+        assert_eq!(scratch, c.dequantize(t).unwrap());
     }
 
     #[test]

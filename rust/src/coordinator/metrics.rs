@@ -9,6 +9,11 @@ pub struct Metrics {
     pub generated_tokens: u64,
     pub prefill_calls: u64,
     pub decode_calls: u64,
+    /// Sequences prefetched across all prefill calls.
+    pub prefill_slots: u64,
+    /// Live slot-steps across all decode calls (a decode step that only
+    /// three of sixteen batch slots still need counts as 3, not 16).
+    pub decode_slot_steps: u64,
     prefill_ms: Vec<f64>,
     decode_ms: Vec<f64>,
     wave_ms: Vec<f64>,
@@ -43,14 +48,29 @@ fn summarize(xs: &[f64]) -> Summary {
 }
 
 impl Metrics {
-    pub fn record_prefill(&mut self, d: Duration, _n: usize) {
+    /// Record a prefill call covering `n` live sequences.
+    pub fn record_prefill(&mut self, d: Duration, n: usize) {
         self.prefill_calls += 1;
+        self.prefill_slots += n as u64;
         self.prefill_ms.push(d.as_secs_f64() * 1e3);
     }
 
-    pub fn record_decode(&mut self, d: Duration, _n: usize) {
+    /// Record a decode step that `n` slots were still live for.
+    pub fn record_decode(&mut self, d: Duration, n: usize) {
         self.decode_calls += 1;
+        self.decode_slot_steps += n as u64;
         self.decode_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    /// Live slot-steps per second of decode time — the honest per-slot
+    /// decode throughput (excludes finished slots riding in the batch).
+    pub fn decode_slot_steps_per_sec(&self) -> f64 {
+        let total_s: f64 = self.decode_ms.iter().sum::<f64>() / 1e3;
+        if total_s == 0.0 {
+            0.0
+        } else {
+            self.decode_slot_steps as f64 / total_s
+        }
     }
 
     pub fn record_wave(&mut self, d: Duration, responses: &[super::Response]) {
@@ -98,23 +118,26 @@ impl Metrics {
         let w = self.wave_summary();
         format!(
             "waves {} | requests {} | gen tokens {}\n\
-             prefill: {} calls, median {:.1} ms, p90 {:.1} ms\n\
-             decode:  {} calls, median {:.1} ms, p90 {:.1} ms\n\
+             prefill: {} calls ({} seqs), median {:.1} ms, p90 {:.1} ms\n\
+             decode:  {} calls ({} live slot-steps), median {:.1} ms, p90 {:.1} ms\n\
              wave:    median {:.1} ms, p90 {:.1} ms\n\
-             throughput: {:.1} tok/s, {:.2} req/s",
+             throughput: {:.1} tok/s, {:.2} req/s, {:.1} live slot-steps/s",
             self.waves,
             self.requests,
             self.generated_tokens,
             self.prefill_calls,
+            self.prefill_slots,
             p.median,
             p.p90,
             self.decode_calls,
+            self.decode_slot_steps,
             d.median,
             d.p90,
             w.median,
             w.p90,
             self.tokens_per_sec(),
-            self.requests_per_sec()
+            self.requests_per_sec(),
+            self.decode_slot_steps_per_sec()
         )
     }
 }
@@ -131,6 +154,8 @@ mod tests {
         }
         let s = m.decode_summary();
         assert_eq!(m.decode_calls, 10);
+        assert_eq!(m.decode_slot_steps, 40, "4 live slots × 10 steps");
+        assert!(m.decode_slot_steps_per_sec() > 0.0);
         assert!((s.mean - 5.5).abs() < 1e-9);
         assert!(s.median >= 5.0 && s.median <= 6.0);
         assert!(s.p90 >= 9.0);

@@ -146,9 +146,13 @@ impl Coordinator {
             if done[..n].iter().all(|&d| d) {
                 break;
             }
+            // Only slots still generating consume this decode step —
+            // charging all n wave slots would inflate the reported
+            // per-slot decode throughput once early slots hit EOS.
+            let live = done[..n].iter().filter(|&&d| !d).count();
             let decode_start = Instant::now();
             step = self.engine.run_decode(&next, &pos, step.cache)?;
-            self.metrics.record_decode(decode_start.elapsed(), n);
+            self.metrics.record_decode(decode_start.elapsed(), live);
             for p in pos.iter_mut() {
                 *p += 1;
             }

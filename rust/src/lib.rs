@@ -7,16 +7,27 @@
 //!
 //! - [`quant`] — the llama.cpp k-quant codec family (`q2_k` … `q6_k`,
 //!   `q8_0`) implemented from scratch with byte-layout-faithful block
-//!   formats and importance-weighted scale search.
+//!   formats and importance-weighted scale search. Every format is a
+//!   [`quant::BlockCodec`] behind the [`quant::codec`] registry; the
+//!   zero-copy entry points `quantize_into` / `dequantize_into` encode
+//!   into caller-provided buffers and split large tensors across
+//!   threads at block granularity with byte-identical output (see the
+//!   `quant::parallel` module for the threading contract, and
+//!   `dsq selfcheck` for the on-host proof).
 //! - [`scheme`] — the quantization *recipe* engine: per-module format
 //!   rules (Table 7 of the paper) including the paper's contribution,
-//!   **DQ3_K_M** dynamic 3-bit allocation.
+//!   **DQ3_K_M** dynamic 3-bit allocation. [`scheme::Scheme::plan`]
+//!   precomputes the per-tensor [`scheme::FormatPlan`] the container
+//!   pipeline consumes.
 //! - [`model`] — architecture census for DeepSeek-V3/R1 (671B),
 //!   R1-distill-Qwen-32B, and the tiny proxy models used for end-to-end
 //!   accuracy evaluation.
 //! - [`memory`] — the analytic memory-usage model behind Tables 1 and 6.
 //! - [`container`] — the `.dsq` tensor container (mmap-able, 4 KiB
 //!   aligned) used to ship both FP32 and quantized checkpoints.
+//!   `quantize_container` re-quantizes a checkpoint with all tensors
+//!   fanned out across cores (`quantize_container_with` pins the worker
+//!   count; `threads == 1` is the streaming scratch-reusing pipeline).
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
 //!   artifacts and executes them (Python is never on the request path).
 //! - [`coordinator`] — the serving layer: request router, continuous

@@ -4,12 +4,13 @@
 //! ```text
 //! dsq table 1|6|7|8 [--paper]            regenerate resource tables
 //! dsq table 2|3|4|5 [--hlo D --ckpt-dir D]  accuracy tables (needs artifacts)
-//! dsq quantize IN.dsq --scheme S --output OUT.dsq [--imatrix F]
+//! dsq quantize IN.dsq --scheme S --output OUT.dsq [--imatrix F] [--threads N]
 //! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json]
 //! dsq serve --hlo D --ckpt F --requests N   (serving smoke/throughput)
 //! dsq memory --model M --scheme S [--ctx N] [--seqs N]
 //! dsq recommend --model M               §4.4 device recommendations
 //! dsq sweep-error --input CKPT.dsq      bpw ↔ reconstruction error (E10)
+//! dsq selfcheck [--threads N]           parallel codec byte-identity check
 //! dsq testvec --out DIR                 cross-language codec vectors
 //! dsq inspect FILE.dsq
 //! dsq schemes                           list built-in schemes
@@ -17,7 +18,9 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use dsq::cli::Args;
-use dsq::container::{quantize_container, Container};
+use dsq::container::{
+    quantize_container, quantize_container_with, synthetic_f32_container, Container,
+};
 use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
 use dsq::eval::{self, report, suites};
 use dsq::memory::{self, devices};
@@ -53,12 +56,13 @@ dsq — DeepSeek quantization analysis (paper reproduction)
 
 Commands:
   table <1-8>        regenerate a paper table (2-5 need artifacts)
-  quantize IN.dsq --scheme S --output OUT.dsq
+  quantize IN.dsq --scheme S --output OUT.dsq [--threads N]
   eval --hlo DIR --ckpt FILE [--out results.json] [--full-size]
   serve --hlo DIR --ckpt FILE [--requests N]
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
+  selfcheck [--threads N]
   testvec --out DIR
   fidelity --tag r1 [--schemes a,b,c]
   inspect FILE.dsq
@@ -74,6 +78,7 @@ fn run(args: &Args) -> Result<()> {
         "memory" => cmd_memory(args),
         "recommend" => cmd_recommend(args),
         "sweep-error" => cmd_sweep_error(args),
+        "selfcheck" => cmd_selfcheck(args),
         "testvec" => cmd_testvec(args),
         "fidelity" => cmd_fidelity(args),
         "inspect" => cmd_inspect(args),
@@ -218,21 +223,27 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.positional_at(0).or_else(|_| args.require("input"))?);
     let scheme = builtin::scheme(args.require("scheme")?)?;
     let output = PathBuf::from(args.require("output")?);
+    let threads = match args.flag_parse("threads", 0usize)? {
+        0 => quant::parallel::max_threads(),
+        t => t,
+    };
     let src = Container::open(&input)?;
     let imatrix = match args.flag("imatrix") {
         Some(p) => Some(load_imatrix(Path::new(p))?),
         None => None,
     };
     let t0 = std::time::Instant::now();
-    let w = quantize_container(&src, &scheme, imatrix.as_ref())?;
+    let w = quantize_container_with(&src, &scheme, imatrix.as_ref(), threads)?;
     w.write(&output)?;
+    let elapsed = t0.elapsed().as_secs_f64();
     let out = Container::open(&output)?;
     println!(
-        "quantized {} ({} tensors) with {} in {:.2}s: {} → {} bytes ({:.2}×)",
+        "quantized {} ({} tensors) with {} on {threads} threads in {elapsed:.2}s \
+         ({:.1} MiB/s in): {} → {} bytes ({:.2}×)",
         input.display(),
         out.tensors.len(),
         scheme.name,
-        t0.elapsed().as_secs_f64(),
+        src.data_bytes() as f64 / (1 << 20) as f64 / elapsed.max(1e-9),
         src.data_bytes(),
         out.data_bytes(),
         src.data_bytes() as f64 / out.data_bytes() as f64
@@ -382,6 +393,11 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
         src.model.name
     );
     println!("{:<8} {:>7} {:>12} {:>12}", "format", "bpw", "rel RMSE", "max |err|");
+    // Scratch reused across every (format, tensor) pair — the sweep
+    // allocates nothing inside the loop.
+    let mut vals: Vec<f32> = Vec::new();
+    let mut packed: Vec<u8> = Vec::new();
+    let mut rt: Vec<f32> = Vec::new();
     for fmt in [
         QuantFormat::Q8_0,
         QuantFormat::Q6K,
@@ -397,8 +413,9 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
             if !t.class.quantizable() || t.n_elems() % fmt.block_weights() != 0 {
                 continue;
             }
-            let vals = src.dequantize(t)?;
-            let rt = quant::roundtrip(fmt, &vals, None)?;
+            src.dequantize_into(t, &mut vals)?;
+            rt.resize(vals.len(), 0.0);
+            quant::roundtrip_into(fmt, &vals, None, &mut packed, &mut rt)?;
             for (a, b) in vals.iter().zip(&rt) {
                 let d = (*a - *b) as f64;
                 num += d * d;
@@ -414,6 +431,77 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
             max_err
         );
     }
+    Ok(())
+}
+
+/// `dsq selfcheck` — prove the parallel codec paths on *this* host.
+///
+/// For every format: quantize the same data serially and with N worker
+/// threads and require byte-identical packings (then the same for
+/// decode). For every builtin scheme: quantize a deterministic tiny-moe
+/// checkpoint through the serial and the tensor-parallel container
+/// pipelines and require byte-identical containers. Exits non-zero on
+/// any mismatch.
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let threads = match args.flag_parse("threads", 0usize)? {
+        0 => quant::parallel::max_threads(),
+        t => t,
+    };
+    println!("# codec selfcheck: serial vs {threads} threads\n");
+    let mut failures = 0usize;
+
+    for fmt in QuantFormat::ALL {
+        for nblocks in [1usize, 3, 17] {
+            let n = fmt.block_weights() * nblocks;
+            let mut rng = Pcg::new(0xC0DEC ^ ((n as u64) << 8) ^ fmt.block_bytes() as u64);
+            let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let imp: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+            let nbytes = fmt.row_bytes(n)?;
+            let mut serial = vec![0u8; nbytes];
+            let mut par = vec![0u8; nbytes];
+            quant::quantize_into_with(fmt, &data, Some(&imp), &mut serial, 1)?;
+            quant::quantize_into_with(fmt, &data, Some(&imp), &mut par, threads)?;
+            let mut dec_serial = vec![0f32; n];
+            let mut dec_par = vec![0f32; n];
+            quant::dequantize_into_with(fmt, &serial, &mut dec_serial, 1)?;
+            quant::dequantize_into_with(fmt, &par, &mut dec_par, threads)?;
+            let ok = serial == par && dec_serial == dec_par;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "  {:<6} {:>4} blocks ({:>8} weights): {}",
+                fmt.name(),
+                nblocks,
+                n,
+                if ok { "identical" } else { "MISMATCH" }
+            );
+        }
+    }
+
+    // Container level: serial vs tensor-parallel pipeline per scheme.
+    let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0x5E1F)?;
+    println!();
+    for scheme in builtin::all() {
+        let serial = quantize_container_with(&src, &scheme, None, 1)?.to_bytes();
+        let par = quantize_container_with(&src, &scheme, None, threads)?.to_bytes();
+        let ok = serial == par;
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "  container/{:<12} ({} tensors, {} bytes): {}",
+            scheme.name,
+            src.tensors.len(),
+            serial.len(),
+            if ok { "identical" } else { "MISMATCH" }
+        );
+    }
+
+    if failures > 0 {
+        bail!("selfcheck FAILED: {failures} mismatching case(s)");
+    }
+    println!("\nselfcheck passed: parallel encoding is byte-identical to serial");
     Ok(())
 }
 

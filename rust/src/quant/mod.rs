@@ -7,6 +7,24 @@
 //! by the JAX/Pallas dequantization kernels in
 //! `python/compile/kernels/` (cross-checked via shared test vectors).
 //!
+//! ## Architecture
+//!
+//! Every format implements the [`BlockCodec`] trait — a block-oriented
+//! encode/decode interface (`encode_block` / `decode_block`, plus the
+//! batch `encode_blocks` / `decode_blocks` that each format overrides
+//! with its tight loop). [`codec`] is the per-format registry returning
+//! the `&'static dyn BlockCodec` for a [`QuantFormat`].
+//!
+//! The crate-facing entry points are **zero-copy**:
+//! [`quantize_into`] / [`dequantize_into`] encode into caller-provided
+//! buffers (no allocation per call), and both automatically split large
+//! tensors across threads at super-block granularity
+//! ([`parallel`]). Because every block is encoded independently into a
+//! disjoint output range, the parallel result is **byte-identical** to
+//! the serial one (asserted by `tests/quant_properties.rs` and
+//! `dsq selfcheck`). [`quantize`] / [`dequantize`] are thin allocating
+//! wrappers kept for convenience.
+//!
 //! ## Format summary
 //!
 //! | format | block | bytes/block | bits/weight | structure |
@@ -35,12 +53,14 @@
 //! calibration data can steer the rounding.
 
 pub mod error;
+pub mod parallel;
 pub mod q2k;
 pub mod q3k;
 pub mod q4k;
 pub mod q5k;
 pub mod q6k;
 pub mod q8_0;
+pub mod raw;
 pub mod scalar;
 
 use anyhow::{bail, Result};
@@ -94,12 +114,12 @@ impl QuantFormat {
         match self {
             QuantFormat::F32 => 4,
             QuantFormat::F16 => 2,
-            QuantFormat::Q8_0 => 34,
-            QuantFormat::Q6K => 210,
-            QuantFormat::Q5K => 176,
-            QuantFormat::Q4K => 144,
-            QuantFormat::Q3K => 110,
-            QuantFormat::Q2K => 84,
+            QuantFormat::Q8_0 => q8_0::BLOCK_BYTES,
+            QuantFormat::Q6K => q6k::BLOCK_BYTES,
+            QuantFormat::Q5K => q5k::BLOCK_BYTES,
+            QuantFormat::Q4K => q4k::BLOCK_BYTES,
+            QuantFormat::Q3K => q3k::BLOCK_BYTES,
+            QuantFormat::Q2K => q2k::BLOCK_BYTES,
         }
     }
 
@@ -161,13 +181,113 @@ impl std::str::FromStr for QuantFormat {
     }
 }
 
-/// Quantize `src` into `fmt`'s packed byte representation.
+/// A block quantization codec.
 ///
-/// `importance`, when given, must have the same length as `src` and holds
-/// per-weight importance (e.g. mean squared activations from
-/// calibration); the scale search minimizes importance-weighted squared
-/// reconstruction error.
-pub fn quantize(fmt: QuantFormat, src: &[f32], importance: Option<&[f32]>) -> Result<Vec<u8>> {
+/// One implementation per [`QuantFormat`], registered in [`codec`].
+/// The contract every implementation upholds:
+///
+/// - `encode_block` consumes exactly `block_weights()` weights (and the
+///   matching importance slice, when given) and writes exactly
+///   `block_bytes()` bytes. It depends on nothing but its inputs —
+///   no shared state — which is what makes block-parallel encoding
+///   byte-identical to serial encoding.
+/// - `decode_block` is the exact inverse byte layout.
+/// - `encode_blocks` / `decode_blocks` process a whole run of blocks;
+///   the default implementations loop over the single-block methods,
+///   and every format overrides them with its fused loop (virtual
+///   dispatch then happens once per *run*, not once per block).
+pub trait BlockCodec: Sync {
+    /// The format this codec implements.
+    fn format(&self) -> QuantFormat;
+
+    /// Weights per block.
+    fn block_weights(&self) -> usize {
+        self.format().block_weights()
+    }
+
+    /// Packed bytes per block.
+    fn block_bytes(&self) -> usize {
+        self.format().block_bytes()
+    }
+
+    /// Encode one block (`src.len() == block_weights()`,
+    /// `out.len() == block_bytes()`).
+    fn encode_block(&self, src: &[f32], importance: Option<&[f32]>, out: &mut [u8]);
+
+    /// Decode one block (`bytes.len() == block_bytes()`,
+    /// `out.len() == block_weights()`).
+    fn decode_block(&self, bytes: &[u8], out: &mut [f32]);
+
+    /// Encode a run of whole blocks.
+    fn encode_blocks(&self, src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+        let bw = self.block_weights();
+        let bb = self.block_bytes();
+        for (bi, (xb, ob)) in src.chunks_exact(bw).zip(out.chunks_exact_mut(bb)).enumerate() {
+            let imp = importance.map(|w| &w[bi * bw..(bi + 1) * bw]);
+            self.encode_block(xb, imp, ob);
+        }
+    }
+
+    /// Decode a run of whole blocks.
+    fn decode_blocks(&self, bytes: &[u8], out: &mut [f32]) {
+        let bw = self.block_weights();
+        let bb = self.block_bytes();
+        for (ob, xb) in bytes.chunks_exact(bb).zip(out.chunks_exact_mut(bw)) {
+            self.decode_block(ob, xb);
+        }
+    }
+}
+
+/// Implement [`BlockCodec`] for a format module whose slice-level
+/// `quantize(src, importance, out)` / `dequantize(bytes, out)` already
+/// loop over whole blocks (the module invokes this once; single-block
+/// calls just hit those loops with exactly one block).
+macro_rules! impl_block_codec {
+    ($fmt:expr) => {
+        /// [`BlockCodec`](crate::quant::BlockCodec) registration for
+        /// this module's format.
+        pub struct Codec;
+
+        impl crate::quant::BlockCodec for Codec {
+            fn format(&self) -> crate::quant::QuantFormat {
+                $fmt
+            }
+
+            fn encode_block(&self, src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+                quantize(src, importance, out);
+            }
+
+            fn decode_block(&self, bytes: &[u8], out: &mut [f32]) {
+                dequantize(bytes, out);
+            }
+
+            fn encode_blocks(&self, src: &[f32], importance: Option<&[f32]>, out: &mut [u8]) {
+                quantize(src, importance, out);
+            }
+
+            fn decode_blocks(&self, bytes: &[u8], out: &mut [f32]) {
+                dequantize(bytes, out);
+            }
+        }
+    };
+}
+pub(crate) use impl_block_codec;
+
+/// The per-format codec registry.
+pub fn codec(fmt: QuantFormat) -> &'static dyn BlockCodec {
+    match fmt {
+        QuantFormat::F32 => &raw::F32Codec,
+        QuantFormat::F16 => &raw::F16Codec,
+        QuantFormat::Q8_0 => &q8_0::Codec,
+        QuantFormat::Q6K => &q6k::Codec,
+        QuantFormat::Q5K => &q5k::Codec,
+        QuantFormat::Q4K => &q4k::Codec,
+        QuantFormat::Q3K => &q3k::Codec,
+        QuantFormat::Q2K => &q2k::Codec,
+    }
+}
+
+fn check_importance(src: &[f32], importance: Option<&[f32]>) -> Result<()> {
     if let Some(w) = importance {
         if w.len() != src.len() {
             bail!(
@@ -177,57 +297,90 @@ pub fn quantize(fmt: QuantFormat, src: &[f32], importance: Option<&[f32]>) -> Re
             );
         }
     }
+    Ok(())
+}
+
+/// Quantize `src` into `fmt`'s packed representation, writing into the
+/// caller-provided `out` buffer (which must be exactly
+/// `fmt.row_bytes(src.len())` long). Returns the bytes written.
+///
+/// Large tensors are split across threads at block granularity; the
+/// output is byte-identical to the serial encoding.
+pub fn quantize_into(
+    fmt: QuantFormat,
+    src: &[f32],
+    importance: Option<&[f32]>,
+    out: &mut [u8],
+) -> Result<usize> {
+    quantize_into_with(fmt, src, importance, out, parallel::auto_threads(src.len()))
+}
+
+/// [`quantize_into`] with an explicit worker-thread count (`1` forces
+/// the serial path; used by the byte-identity tests and by the
+/// container pipeline, which parallelizes across tensors instead).
+pub fn quantize_into_with(
+    fmt: QuantFormat,
+    src: &[f32],
+    importance: Option<&[f32]>,
+    out: &mut [u8],
+    threads: usize,
+) -> Result<usize> {
+    check_importance(src, importance)?;
     let nbytes = fmt.row_bytes(src.len())?;
-    let mut out = vec![0u8; nbytes];
-    match fmt {
-        QuantFormat::F32 => {
-            for (o, v) in out.chunks_exact_mut(4).zip(src) {
-                o.copy_from_slice(&v.to_le_bytes());
-            }
-        }
-        QuantFormat::F16 => {
-            for (o, v) in out.chunks_exact_mut(2).zip(src) {
-                o.copy_from_slice(&crate::util::f16::f32_to_f16_bits(*v).to_le_bytes());
-            }
-        }
-        QuantFormat::Q8_0 => q8_0::quantize(src, importance, &mut out),
-        QuantFormat::Q6K => q6k::quantize(src, importance, &mut out),
-        QuantFormat::Q5K => q5k::quantize(src, importance, &mut out),
-        QuantFormat::Q4K => q4k::quantize(src, importance, &mut out),
-        QuantFormat::Q3K => q3k::quantize(src, importance, &mut out),
-        QuantFormat::Q2K => q2k::quantize(src, importance, &mut out),
+    if out.len() != nbytes {
+        bail!(
+            "{fmt}: output buffer {} bytes, expected {nbytes} for {} weights",
+            out.len(),
+            src.len()
+        );
     }
+    parallel::encode_chunked(codec(fmt), src, importance, out, threads);
+    Ok(nbytes)
+}
+
+/// Dequantize `fmt`-packed `bytes` into the caller-provided `out`
+/// buffer (`bytes.len()` must equal `fmt.row_bytes(out.len())`).
+pub fn dequantize_into(fmt: QuantFormat, bytes: &[u8], out: &mut [f32]) -> Result<()> {
+    dequantize_into_with(fmt, bytes, out, parallel::auto_threads(out.len()))
+}
+
+/// [`dequantize_into`] with an explicit worker-thread count.
+pub fn dequantize_into_with(
+    fmt: QuantFormat,
+    bytes: &[u8],
+    out: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let expect = fmt.row_bytes(out.len())?;
+    if bytes.len() != expect {
+        bail!(
+            "{fmt}: byte length {} does not match expected {expect} for {} weights",
+            bytes.len(),
+            out.len()
+        );
+    }
+    parallel::decode_chunked(codec(fmt), bytes, out, threads);
+    Ok(())
+}
+
+/// Quantize `src` into `fmt`'s packed byte representation (allocating
+/// wrapper around [`quantize_into`]).
+///
+/// `importance`, when given, must have the same length as `src` and holds
+/// per-weight importance (e.g. mean squared activations from
+/// calibration); the scale search minimizes importance-weighted squared
+/// reconstruction error.
+pub fn quantize(fmt: QuantFormat, src: &[f32], importance: Option<&[f32]>) -> Result<Vec<u8>> {
+    let mut out = vec![0u8; fmt.row_bytes(src.len())?];
+    quantize_into(fmt, src, importance, &mut out)?;
     Ok(out)
 }
 
-/// Dequantize `n` weights from `fmt`-packed `bytes`.
+/// Dequantize `n` weights from `fmt`-packed `bytes` (allocating wrapper
+/// around [`dequantize_into`]).
 pub fn dequantize(fmt: QuantFormat, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
-    let expect = fmt.row_bytes(n)?;
-    if bytes.len() != expect {
-        bail!(
-            "{fmt}: byte length {} does not match expected {expect} for {n} weights",
-            bytes.len()
-        );
-    }
     let mut out = vec![0f32; n];
-    match fmt {
-        QuantFormat::F32 => {
-            for (o, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
-                *o = f32::from_le_bytes(b.try_into().unwrap());
-            }
-        }
-        QuantFormat::F16 => {
-            for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
-                *o = crate::util::f16::f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
-            }
-        }
-        QuantFormat::Q8_0 => q8_0::dequantize(bytes, &mut out),
-        QuantFormat::Q6K => q6k::dequantize(bytes, &mut out),
-        QuantFormat::Q5K => q5k::dequantize(bytes, &mut out),
-        QuantFormat::Q4K => q4k::dequantize(bytes, &mut out),
-        QuantFormat::Q3K => q3k::dequantize(bytes, &mut out),
-        QuantFormat::Q2K => q2k::dequantize(bytes, &mut out),
-    }
+    dequantize_into(fmt, bytes, &mut out)?;
     Ok(out)
 }
 
@@ -236,6 +389,21 @@ pub fn dequantize(fmt: QuantFormat, bytes: &[u8], n: usize) -> Result<Vec<f32>> 
 pub fn roundtrip(fmt: QuantFormat, src: &[f32], importance: Option<&[f32]>) -> Result<Vec<f32>> {
     let bytes = quantize(fmt, src, importance)?;
     dequantize(fmt, &bytes, src.len())
+}
+
+/// Round trip into caller-owned scratch: packs into `packed` (resized as
+/// needed) and decodes into `out` (`out.len() == src.len()`). This is
+/// the zero-allocation hot path of the bpw↔error sweep.
+pub fn roundtrip_into(
+    fmt: QuantFormat,
+    src: &[f32],
+    importance: Option<&[f32]>,
+    packed: &mut Vec<u8>,
+    out: &mut [f32],
+) -> Result<()> {
+    packed.resize(fmt.row_bytes(src.len())?, 0);
+    quantize_into(fmt, src, importance, packed)?;
+    dequantize_into(fmt, packed, out)
 }
 
 #[cfg(test)]
@@ -262,6 +430,16 @@ mod tests {
     }
 
     #[test]
+    fn registry_agrees_with_format() {
+        for fmt in QuantFormat::ALL {
+            let c = codec(fmt);
+            assert_eq!(c.format(), fmt);
+            assert_eq!(c.block_weights(), fmt.block_weights());
+            assert_eq!(c.block_bytes(), fmt.block_bytes());
+        }
+    }
+
+    #[test]
     fn row_bytes_rejects_ragged() {
         assert!(QuantFormat::Q4K.row_bytes(100).is_err());
         assert_eq!(QuantFormat::Q4K.row_bytes(512).unwrap(), 288);
@@ -284,5 +462,32 @@ mod tests {
         let src = vec![0.5f32; QK_K];
         let w = vec![1.0f32; QK_K - 1];
         assert!(quantize(QuantFormat::Q4K, &src, Some(&w)).is_err());
+    }
+
+    #[test]
+    fn into_buffers_validated() {
+        let src = vec![0.5f32; QK_K];
+        let mut short = vec![0u8; 10];
+        assert!(quantize_into(QuantFormat::Q4K, &src, None, &mut short).is_err());
+        let packed = quantize(QuantFormat::Q4K, &src, None).unwrap();
+        let mut out = vec![0f32; QK_K - 1]; // ragged target length
+        assert!(dequantize_into(QuantFormat::Q4K, &packed, &mut out).is_err());
+    }
+
+    #[test]
+    fn single_block_codec_matches_slice_path() {
+        let mut rng = crate::util::rng::Pcg::new(91);
+        for fmt in QuantFormat::ALL {
+            let n = fmt.block_weights();
+            let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let c = codec(fmt);
+            let mut via_block = vec![0u8; fmt.block_bytes()];
+            c.encode_block(&data, None, &mut via_block);
+            let via_slice = quantize(fmt, &data, None).unwrap();
+            assert_eq!(via_block, via_slice, "{fmt}");
+            let mut decoded = vec![0f32; n];
+            c.decode_block(&via_block, &mut decoded);
+            assert_eq!(decoded, dequantize(fmt, &via_slice, n).unwrap(), "{fmt}");
+        }
     }
 }

@@ -1,0 +1,147 @@
+//! Block-parallel codec execution.
+//!
+//! Every block format encodes each block independently into a disjoint
+//! output range, so a tensor can be split into runs of whole blocks and
+//! encoded on separate threads with **byte-identical** results — the
+//! same per-block arithmetic runs either way, only the loop ownership
+//! changes. This module provides that splitting over `std::thread::scope`
+//! (no external thread-pool dependency).
+//!
+//! Two knobs:
+//! - [`auto_threads`] — the default policy: serial below
+//!   [`PAR_MIN_WEIGHTS`] (thread spawn costs more than it saves on small
+//!   tensors), one thread per core above it.
+//! - the explicit `threads` parameter on the `*_with` entry points in
+//!   [`super`] — used by tests (to pin serial vs parallel) and by
+//!   [`crate::container::quantize_container_with`], which parallelizes
+//!   across tensors and therefore forces `threads = 1` per tensor.
+
+use super::BlockCodec;
+
+/// Minimum tensor size (in weights) before block-level threading is
+/// worth the spawn overhead. One 256-weight super-block costs ~1µs to
+/// encode; a thread spawn costs ~10µs, so the break-even run is a few
+/// hundred blocks per worker.
+pub const PAR_MIN_WEIGHTS: usize = 64 * 1024;
+
+/// Worker threads this machine supports (≥ 1).
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Default thread count for an `n`-weight tensor.
+pub fn auto_threads(n: usize) -> usize {
+    if n < PAR_MIN_WEIGHTS {
+        1
+    } else {
+        max_threads()
+    }
+}
+
+/// Encode `src` into `out`, splitting whole blocks across up to
+/// `threads` scoped threads. Caller guarantees `src.len()` is a
+/// multiple of the block size and `out` is sized exactly.
+pub(crate) fn encode_chunked(
+    codec: &dyn BlockCodec,
+    src: &[f32],
+    importance: Option<&[f32]>,
+    out: &mut [u8],
+    threads: usize,
+) {
+    let bw = codec.block_weights();
+    let bb = codec.block_bytes();
+    let nblocks = src.len() / bw;
+    let threads = threads.clamp(1, nblocks.max(1));
+    if threads == 1 {
+        codec.encode_blocks(src, importance, out);
+        return;
+    }
+    let per = nblocks.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut src = src;
+        let mut imp = importance;
+        let mut out: &mut [u8] = out;
+        while !src.is_empty() {
+            let nb = (src.len() / bw).min(per);
+            let (src_head, src_tail) = src.split_at(nb * bw);
+            let (imp_head, imp_tail) = match imp {
+                Some(w) => {
+                    let (a, b) = w.split_at(nb * bw);
+                    (Some(a), Some(b))
+                }
+                None => (None, None),
+            };
+            let (out_head, out_tail) = std::mem::take(&mut out).split_at_mut(nb * bb);
+            src = src_tail;
+            imp = imp_tail;
+            out = out_tail;
+            scope.spawn(move || codec.encode_blocks(src_head, imp_head, out_head));
+        }
+    });
+}
+
+/// Decode `bytes` into `out`, splitting whole blocks across up to
+/// `threads` scoped threads. Caller guarantees sizes match.
+pub(crate) fn decode_chunked(
+    codec: &dyn BlockCodec,
+    bytes: &[u8],
+    out: &mut [f32],
+    threads: usize,
+) {
+    let bw = codec.block_weights();
+    let bb = codec.block_bytes();
+    let nblocks = out.len() / bw;
+    let threads = threads.clamp(1, nblocks.max(1));
+    if threads == 1 {
+        codec.decode_blocks(bytes, out);
+        return;
+    }
+    let per = nblocks.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut bytes = bytes;
+        let mut out: &mut [f32] = out;
+        while !out.is_empty() {
+            let nb = (out.len() / bw).min(per);
+            let (bytes_head, bytes_tail) = bytes.split_at(nb * bb);
+            let (out_head, out_tail) = std::mem::take(&mut out).split_at_mut(nb * bw);
+            bytes = bytes_tail;
+            out = out_tail;
+            scope.spawn(move || codec.decode_blocks(bytes_head, out_head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{codec, QuantFormat};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn thread_policy_sane() {
+        assert!(max_threads() >= 1);
+        assert_eq!(auto_threads(16), 1);
+        assert!(auto_threads(PAR_MIN_WEIGHTS) >= 1);
+    }
+
+    #[test]
+    fn chunked_encode_decode_identical_to_serial() {
+        // Covered exhaustively by tests/quant_properties.rs; this is the
+        // fast in-module smoke check (q4_k, odd block count > threads).
+        let fmt = QuantFormat::Q4K;
+        let n = fmt.block_weights() * 7;
+        let mut rng = Pcg::new(53);
+        let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let c = codec(fmt);
+        let mut serial = vec![0u8; fmt.row_bytes(n).unwrap()];
+        let mut par = serial.clone();
+        encode_chunked(c, &data, None, &mut serial, 1);
+        encode_chunked(c, &data, None, &mut par, 3);
+        assert_eq!(serial, par);
+        let mut out_serial = vec![0f32; n];
+        let mut out_par = vec![0f32; n];
+        decode_chunked(c, &serial, &mut out_serial, 1);
+        decode_chunked(c, &par, &mut out_par, 3);
+        assert_eq!(out_serial, out_par);
+    }
+}

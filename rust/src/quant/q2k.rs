@@ -92,6 +92,8 @@ pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
     }
 }
 
+crate::quant::impl_block_codec!(crate::quant::QuantFormat::Q2K);
+
 #[cfg(test)]
 mod tests {
     use crate::quant::error::rel_rmse;

@@ -127,6 +127,8 @@ pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
     }
 }
 
+crate::quant::impl_block_codec!(crate::quant::QuantFormat::Q3K);
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -163,6 +163,8 @@ pub(crate) fn dequantize_impl(
     }
 }
 
+crate::quant::impl_block_codec!(crate::quant::QuantFormat::Q4K);
+
 #[cfg(test)]
 mod tests {
     use super::*;

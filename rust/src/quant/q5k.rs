@@ -25,6 +25,8 @@ pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
     dequantize_impl(bytes, out, BLOCK_BYTES, 48, true);
 }
 
+crate::quant::impl_block_codec!(crate::quant::QuantFormat::Q5K);
+
 #[cfg(test)]
 mod tests {
     use crate::quant::error::rel_rmse;

@@ -90,6 +90,8 @@ pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
     }
 }
 
+crate::quant::impl_block_codec!(crate::quant::QuantFormat::Q6K);
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -42,6 +42,8 @@ pub fn dequantize(bytes: &[u8], out: &mut [f32]) {
     }
 }
 
+crate::quant::impl_block_codec!(crate::quant::QuantFormat::Q8_0);
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,97 @@
+//! `F32` / `F16` pass-through codecs (block size 1).
+//!
+//! These exist so the raw formats ride the same [`BlockCodec`] registry,
+//! buffer contract, and block-parallel splitting as the k-quants —
+//! `quantize_into(F32, …)` on a large tensor is a parallel `memcpy`-like
+//! transpose into little-endian bytes, and `F16` is a parallel
+//! round-to-half.
+
+use super::{BlockCodec, QuantFormat};
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// Identity codec: 4 little-endian bytes per weight.
+pub struct F32Codec;
+
+impl BlockCodec for F32Codec {
+    fn format(&self) -> QuantFormat {
+        QuantFormat::F32
+    }
+
+    fn encode_block(&self, src: &[f32], _importance: Option<&[f32]>, out: &mut [u8]) {
+        out.copy_from_slice(&src[0].to_le_bytes());
+    }
+
+    fn decode_block(&self, bytes: &[u8], out: &mut [f32]) {
+        out[0] = f32::from_le_bytes(bytes.try_into().unwrap());
+    }
+
+    fn encode_blocks(&self, src: &[f32], _importance: Option<&[f32]>, out: &mut [u8]) {
+        for (o, v) in out.chunks_exact_mut(4).zip(src) {
+            o.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn decode_blocks(&self, bytes: &[u8], out: &mut [f32]) {
+        for (o, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+            *o = f32::from_le_bytes(b.try_into().unwrap());
+        }
+    }
+}
+
+/// IEEE half-precision codec: 2 little-endian bytes per weight.
+pub struct F16Codec;
+
+impl BlockCodec for F16Codec {
+    fn format(&self) -> QuantFormat {
+        QuantFormat::F16
+    }
+
+    fn encode_block(&self, src: &[f32], _importance: Option<&[f32]>, out: &mut [u8]) {
+        out.copy_from_slice(&f32_to_f16_bits(src[0]).to_le_bytes());
+    }
+
+    fn decode_block(&self, bytes: &[u8], out: &mut [f32]) {
+        out[0] = f16_bits_to_f32(u16::from_le_bytes(bytes.try_into().unwrap()));
+    }
+
+    fn encode_blocks(&self, src: &[f32], _importance: Option<&[f32]>, out: &mut [u8]) {
+        for (o, v) in out.chunks_exact_mut(2).zip(src) {
+            o.copy_from_slice(&f32_to_f16_bits(*v).to_le_bytes());
+        }
+    }
+
+    fn decode_blocks(&self, bytes: &[u8], out: &mut [f32]) {
+        for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+            *o = f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_block_roundtrip_exact() {
+        let c = F32Codec;
+        let src = [-1234.5678f32];
+        let mut bytes = [0u8; 4];
+        c.encode_block(&src, None, &mut bytes);
+        let mut back = [0f32; 1];
+        c.decode_block(&bytes, &mut back);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn f16_block_roundtrip_halves() {
+        let c = F16Codec;
+        // Exactly representable halves survive the trip bit-for-bit.
+        for v in [0.0f32, 1.0, -2.5, 0.625, 65504.0] {
+            let mut bytes = [0u8; 2];
+            c.encode_block(&[v], None, &mut bytes);
+            let mut back = [0f32; 1];
+            c.decode_block(&bytes, &mut back);
+            assert_eq!(back[0], v, "{v}");
+        }
+    }
+}

@@ -151,15 +151,23 @@ impl Scheme {
         }
     }
 
+    /// Precompute the per-tensor format plan for a tensor list.
+    ///
+    /// The container quantization pipeline consumes this instead of
+    /// calling [`Scheme::assign`] inline, so rule dispatch happens once
+    /// up front and the (embarrassingly parallel) per-tensor encode
+    /// stage works from a plain `Vec<QuantFormat>`.
+    pub fn plan(&self, tensors: &[TensorInfo], cfg: &ModelConfig) -> FormatPlan {
+        FormatPlan {
+            scheme: self.name.clone(),
+            formats: tensors.iter().map(|t| self.assign(t, cfg)).collect(),
+        }
+    }
+
     /// Total quantized bytes for a model under this scheme.
     pub fn model_bytes(&self, cfg: &ModelConfig) -> u64 {
-        cfg.census()
-            .iter()
-            .map(|t| {
-                let fmt = self.assign(t, cfg);
-                (t.n_params() as f64 * fmt.bits_per_weight() / 8.0) as u64
-            })
-            .sum()
+        let census = cfg.census();
+        self.plan(&census, cfg).packed_bytes(&census)
     }
 
     /// Average bits per weight across the whole model (the "Avg Quants"
@@ -205,6 +213,28 @@ impl Scheme {
             ));
         }
         out
+    }
+}
+
+/// A precomputed per-tensor format assignment (one entry per tensor of
+/// the list [`Scheme::plan`] was built from, in the same order).
+#[derive(Debug, Clone)]
+pub struct FormatPlan {
+    /// Name of the scheme that produced the plan.
+    pub scheme: String,
+    /// Assigned format per tensor.
+    pub formats: Vec<QuantFormat>,
+}
+
+impl FormatPlan {
+    /// Packed bytes the planned tensors will occupy (payloads only,
+    /// without container alignment padding).
+    pub fn packed_bytes(&self, tensors: &[TensorInfo]) -> u64 {
+        tensors
+            .iter()
+            .zip(&self.formats)
+            .map(|(t, f)| (t.n_params() as f64 * f.bits_per_weight() / 8.0) as u64)
+            .sum()
     }
 }
 
@@ -304,6 +334,22 @@ mod tests {
                 (got - paper).abs() < 0.03,
                 "{name}: computed {got:.3} vs paper {paper}"
             );
+        }
+    }
+
+    #[test]
+    fn plan_matches_inline_assignment() {
+        let cfg = ModelConfig::tiny_moe();
+        let census = cfg.census();
+        for scheme in builtin::all() {
+            let plan = scheme.plan(&census, &cfg);
+            assert_eq!(plan.scheme, scheme.name);
+            assert_eq!(plan.formats.len(), census.len());
+            for (t, &f) in census.iter().zip(&plan.formats) {
+                assert_eq!(f, scheme.assign(t, &cfg), "{} / {}", scheme.name, t.name);
+            }
+            // Byte accounting must agree with the model-level helper.
+            assert_eq!(plan.packed_bytes(&census), scheme.model_bytes(&cfg));
         }
     }
 

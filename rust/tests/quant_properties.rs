@@ -3,11 +3,14 @@
 //! unavailable offline — each test sweeps hundreds of random cases and
 //! prints the failing seed on assertion).
 
-use dsq::container::{quantize_container, Container, Writer};
+use dsq::container::{
+    quantize_container, quantize_container_with, synthetic_f32_container, Container, Writer,
+};
 use dsq::model::{ModelConfig, ModuleClass, TensorInfo};
 use dsq::quant::{self, error::rel_rmse, QuantFormat};
 use dsq::scheme::builtin;
 use dsq::util::rng::Pcg;
+use std::collections::HashMap;
 
 const KQ: [QuantFormat; 6] = [
     QuantFormat::Q8_0,
@@ -100,6 +103,106 @@ fn prop_dequantize_total_on_random_bytes() {
             assert_eq!(out.len(), n);
         }
     }
+}
+
+#[test]
+fn prop_parallel_quantize_bitwise_identical_all_formats() {
+    // The BlockCodec contract: splitting a tensor across threads must
+    // not change a single bit, for every format, with and without an
+    // imatrix, at edge block counts (one block, fewer blocks than
+    // threads, non-divisible multiples).
+    for fmt in QuantFormat::ALL {
+        for nblocks in [1usize, 2, 7, 33] {
+            let n = fmt.block_weights() * nblocks;
+            let mut rng = Pcg::new(7000 + n as u64 + fmt.block_bytes() as u64);
+            let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let imp: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+            for importance in [None, Some(imp.as_slice())] {
+                let nbytes = fmt.row_bytes(n).unwrap();
+                let mut serial = vec![0u8; nbytes];
+                let mut par = vec![0u8; nbytes];
+                quant::quantize_into_with(fmt, &data, importance, &mut serial, 1).unwrap();
+                quant::quantize_into_with(fmt, &data, importance, &mut par, 4).unwrap();
+                assert_eq!(
+                    serial, par,
+                    "{fmt} nblocks={nblocks} imatrix={}",
+                    importance.is_some()
+                );
+                let mut dec_serial = vec![0f32; n];
+                let mut dec_par = vec![0f32; n];
+                quant::dequantize_into_with(fmt, &serial, &mut dec_serial, 1).unwrap();
+                quant::dequantize_into_with(fmt, &par, &mut dec_par, 4).unwrap();
+                assert_eq!(dec_serial, dec_par, "{fmt} nblocks={nblocks} decode");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_into_matches_quantize() {
+    // The zero-copy entry points must agree with the allocating wrappers
+    // at every edge size: one block, a handful, and larger multiples.
+    for fmt in QuantFormat::ALL {
+        for nblocks in [1usize, 3, 16] {
+            let n = fmt.block_weights() * nblocks;
+            let mut rng = Pcg::new(8000 + n as u64 + fmt.block_bytes() as u64);
+            let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let alloc = quant::quantize(fmt, &data, None).unwrap();
+            let mut into = vec![0u8; fmt.row_bytes(n).unwrap()];
+            let written = quant::quantize_into(fmt, &data, None, &mut into).unwrap();
+            assert_eq!(written, alloc.len(), "{fmt} nblocks={nblocks}");
+            assert_eq!(into, alloc, "{fmt} nblocks={nblocks}");
+            let dec_alloc = quant::dequantize(fmt, &alloc, n).unwrap();
+            let mut dec_into = vec![0f32; n];
+            quant::dequantize_into(fmt, &into, &mut dec_into).unwrap();
+            assert_eq!(dec_into, dec_alloc, "{fmt} nblocks={nblocks} decode");
+            // And the scratch-reusing roundtrip helper.
+            let mut packed = Vec::new();
+            let mut rt = vec![0f32; n];
+            quant::roundtrip_into(fmt, &data, None, &mut packed, &mut rt).unwrap();
+            assert_eq!(rt, dec_alloc, "{fmt} nblocks={nblocks} roundtrip_into");
+        }
+    }
+}
+
+fn tiny_moe_f32_container(seed: u64) -> Container {
+    synthetic_f32_container(&ModelConfig::tiny_moe(), seed).unwrap()
+}
+
+#[test]
+fn prop_parallel_container_bitwise_identical_all_schemes() {
+    // Acceptance gate: for every builtin scheme the tensor-parallel
+    // container pipeline must reproduce the serial container exactly —
+    // same header, same offsets, same payload bytes.
+    let src = tiny_moe_f32_container(4242);
+    for scheme in builtin::all() {
+        let serial = quantize_container_with(&src, &scheme, None, 1).unwrap().to_bytes();
+        let par = quantize_container_with(&src, &scheme, None, 4).unwrap().to_bytes();
+        assert_eq!(serial, par, "scheme {}", scheme.name);
+        // Default (auto-threaded) entry point too.
+        let auto = quantize_container(&src, &scheme, None).unwrap().to_bytes();
+        assert_eq!(serial, auto, "scheme {} (auto)", scheme.name);
+    }
+}
+
+#[test]
+fn prop_parallel_container_identical_with_imatrix() {
+    // Importance maps flow through the parallel pipeline unchanged.
+    let src = tiny_moe_f32_container(777);
+    let mut rng = Pcg::new(778);
+    let mut imatrix: HashMap<String, Vec<f32>> = HashMap::new();
+    for t in &src.tensors {
+        let n: usize = t.shape.iter().product();
+        imatrix.insert(t.name.clone(), (0..n).map(|_| rng.next_f32() + 0.05).collect());
+    }
+    let scheme = builtin::scheme("q4_k_m").unwrap();
+    let serial = quantize_container_with(&src, &scheme, Some(&imatrix), 1)
+        .unwrap()
+        .to_bytes();
+    let par = quantize_container_with(&src, &scheme, Some(&imatrix), 4)
+        .unwrap()
+        .to_bytes();
+    assert_eq!(serial, par);
 }
 
 #[test]
