@@ -1,19 +1,182 @@
 //! Codec micro-benchmarks: quantize + dequantize throughput per format
 //! through the zero-copy `BlockCodec` entry points, serial vs
 //! block-parallel, with and without importance weighting — plus the
+//! scale-search benchmark (PR-1 two-pass baseline vs the current
+//! single-pass lane-chunked search for the Q3_K/Q4_K hot paths) and the
 //! headline container benchmark: multi-tensor Q4_K container
 //! quantization, serial vs tensor-parallel (the `dsq quantize` hot
-//! path; the serving hot path dequantizes inside XLA).
+//! path; the serving hot path dequantizes at load or inside XLA).
+//!
+//! Pass `--json PATH` to additionally write every measurement (and the
+//! speedup summary) as a JSON report — CI uploads it as an artifact.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container};
 use dsq::model::ModelConfig;
-use dsq::quant::{self, parallel, QuantFormat};
+use dsq::quant::{self, parallel, scalar, QuantFormat};
 use dsq::scheme::builtin;
-use dsq::util::bench::Bench;
+use dsq::util::bench::{Bench, BenchResult};
+use dsq::util::json;
 use dsq::util::rng::Pcg;
 use std::time::Instant;
 
+// --- PR-1 scale-search baseline (two passes per candidate, closure
+// weight lookup) — kept verbatim here so the speedup of the current
+// single-pass lane-chunked search stays measurable against it. ---
+
+fn nearest_int(x: f32) -> i32 {
+    x.round() as i32
+}
+
+fn baseline_make_qx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [u8]) -> f32 {
+    let n = x.len();
+    let mut amax = 0f32;
+    let mut max = 0f32;
+    for &v in x {
+        if v.abs() > amax {
+            amax = v.abs();
+            max = v;
+        }
+    }
+    if amax < 1e-30 {
+        out.iter_mut().for_each(|o| *o = nmax as u8);
+        return 0.0;
+    }
+    let mut best_scale = 0f32;
+    let mut best_err = f32::INFINITY;
+    let w_at = |i: usize| weights.map_or(x[i] * x[i] + 1e-8, |w| w[i] + 1e-10);
+    for is in -9i32..=9 {
+        let iscale = -(nmax as f32 + 0.1f32 * is as f32) / max;
+        let mut sumlx = 0f32;
+        let mut suml2 = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * x[i]).clamp(-nmax, nmax - 1) as f32;
+            let w = w_at(i);
+            sumlx += w * x[i] * l;
+            suml2 += w * l * l;
+        }
+        if suml2 <= 0.0 {
+            continue;
+        }
+        let scale = sumlx / suml2;
+        let mut err = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * x[i]).clamp(-nmax, nmax - 1) as f32;
+            let d = x[i] - scale * l;
+            err += w_at(i) * d * d;
+        }
+        if err < best_err {
+            best_err = err;
+            best_scale = scale;
+        }
+    }
+    if best_scale == 0.0 {
+        best_scale = max / -(nmax as f32);
+    }
+    let inv = if best_scale != 0.0 { 1.0 / best_scale } else { 0.0 };
+    for i in 0..n {
+        let l = nearest_int(inv * x[i]).clamp(-nmax, nmax - 1);
+        out[i] = (l + nmax) as u8;
+    }
+    best_scale
+}
+
+fn baseline_make_qkx_quants(
+    x: &[f32],
+    nmax: i32,
+    weights: Option<&[f32]>,
+    out: &mut [u8],
+) -> (f32, f32) {
+    let n = x.len();
+    let mut vmin = x[0];
+    let mut vmax = x[0];
+    for &v in x {
+        vmin = vmin.min(v);
+        vmax = vmax.max(v);
+    }
+    if vmax <= vmin + 1e-30 {
+        if vmin >= 0.0 {
+            out.iter_mut().for_each(|o| *o = nmax as u8);
+            return (vmin / nmax as f32, 0.0);
+        }
+        out.iter_mut().for_each(|o| *o = 0);
+        return (0.0, -vmin);
+    }
+    if vmin > 0.0 {
+        vmin = 0.0;
+    }
+    let w_at = |i: usize| weights.map_or(x[i] * x[i] + 1e-8, |w| w[i] + 1e-10);
+    let mut best = (vmax - vmin) / nmax as f32;
+    let mut best_min = -vmin;
+    let mut best_err = f32::INFINITY;
+    for step in -5i32..=8 {
+        let iscale = (0.1f32 * step as f32 + nmax as f32) / (vmax - vmin);
+        let mut sum_w = 0f32;
+        let mut sum_x = 0f32;
+        let mut sum_l = 0f32;
+        let mut sum_l2 = 0f32;
+        let mut sum_xl = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * (x[i] - vmin)).clamp(0, nmax) as f32;
+            let w = w_at(i);
+            sum_w += w;
+            sum_x += w * x[i];
+            sum_l += w * l;
+            sum_l2 += w * l * l;
+            sum_xl += w * x[i] * l;
+        }
+        let det = sum_w * sum_l2 - sum_l * sum_l;
+        if det <= 0.0 {
+            continue;
+        }
+        let mut scale = (sum_w * sum_xl - sum_x * sum_l) / det;
+        let mut minv = (sum_l2 * sum_x - sum_l * sum_xl) / det;
+        if minv > 0.0 {
+            minv = 0.0;
+            scale = if sum_l2 > 0.0 { sum_xl / sum_l2 } else { scale };
+        }
+        if scale <= 0.0 {
+            continue;
+        }
+        let mut err = 0f32;
+        for i in 0..n {
+            let l = nearest_int(iscale * (x[i] - vmin)).clamp(0, nmax) as f32;
+            let d = x[i] - (scale * l + minv);
+            err += w_at(i) * d * d;
+        }
+        if err < best_err {
+            best_err = err;
+            best = scale;
+            best_min = -minv;
+        }
+    }
+    let inv = if best > 0.0 { 1.0 / best } else { 0.0 };
+    for i in 0..n {
+        out[i] = nearest_int(inv * (x[i] + best_min)).clamp(0, nmax) as u8;
+    }
+    (best, best_min)
+}
+
+fn result_json(r: &BenchResult) -> json::Value {
+    json::obj(vec![
+        ("name", json::str_(&r.name)),
+        ("median_ns", json::num(r.median_ns)),
+        ("p10_ns", json::num(r.p10_ns)),
+        ("p90_ns", json::num(r.p90_ns)),
+        ("iters_per_batch", json::num(r.iters_per_batch as f64)),
+        ("batches", json::num(r.batches as f64)),
+    ])
+}
+
 fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let mut report: Vec<json::Value> = Vec::new();
+    let mut summary: Vec<(String, f64)> = Vec::new();
+
     let n = 256 * 1024; // 256K weights ≈ a large expert matrix slice
     let mut rng = Pcg::new(1);
     let data: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
@@ -31,31 +194,85 @@ fn main() -> anyhow::Result<()> {
     ] {
         let bytes = (n * 4) as u64;
         let mut packed = vec![0u8; fmt.row_bytes(n)?];
-        Bench::new()
-            .throughput_bytes(bytes)
-            .run(&format!("quantize-serial/{}", fmt.name()), || {
-                quant::quantize_into_with(fmt, &data, None, &mut packed, 1).unwrap()
-            });
-        Bench::new()
-            .throughput_bytes(bytes)
-            .run(&format!("quantize-par{cores}/{}", fmt.name()), || {
-                quant::quantize_into_with(fmt, &data, None, &mut packed, cores).unwrap()
-            });
+        report.push(result_json(
+            &Bench::new()
+                .throughput_bytes(bytes)
+                .run(&format!("quantize-serial/{}", fmt.name()), || {
+                    quant::quantize_into_with(fmt, &data, None, &mut packed, 1).unwrap()
+                }),
+        ));
+        report.push(result_json(
+            &Bench::new()
+                .throughput_bytes(bytes)
+                .run(&format!("quantize-par{cores}/{}", fmt.name()), || {
+                    quant::quantize_into_with(fmt, &data, None, &mut packed, cores).unwrap()
+                }),
+        ));
         // Pinned to 1 thread so the imatrix overhead reads directly
         // against the quantize-serial row above.
-        Bench::new()
-            .throughput_bytes(bytes)
-            .run(&format!("quantize-imatrix-serial/{}", fmt.name()), || {
-                quant::quantize_into_with(fmt, &data, Some(&importance), &mut packed, 1).unwrap()
-            });
+        report.push(result_json(
+            &Bench::new()
+                .throughput_bytes(bytes)
+                .run(&format!("quantize-imatrix-serial/{}", fmt.name()), || {
+                    quant::quantize_into_with(fmt, &data, Some(&importance), &mut packed, 1)
+                        .unwrap()
+                }),
+        ));
         quant::quantize_into(fmt, &data, None, &mut packed)?;
         let mut decoded = vec![0f32; n];
-        Bench::new()
-            .throughput_bytes(bytes)
-            .run(&format!("dequantize/{}", fmt.name()), || {
-                quant::dequantize_into(fmt, &packed, &mut decoded).unwrap()
-            });
+        report.push(result_json(
+            &Bench::new()
+                .throughput_bytes(bytes)
+                .run(&format!("dequantize/{}", fmt.name()), || {
+                    quant::dequantize_into(fmt, &packed, &mut decoded).unwrap()
+                }),
+        ));
     }
+
+    // --- scale search: PR-1 baseline vs current, on the Q3_K (16-weight
+    // symmetric) and Q4_K (32-weight asymmetric) sub-block shapes. The
+    // acceptance bar is ≥1.5× on each.
+    println!("\n# scale search, {n} weights/iter as sub-block sweeps\n");
+    let mut codes = vec![0u8; n];
+    let qx_base = Bench::new().throughput_items(n as u64).run("scale-search-qx16-baseline", || {
+        let mut acc = 0f32;
+        for (xs, os) in data.chunks_exact(16).zip(codes.chunks_exact_mut(16)) {
+            acc += baseline_make_qx_quants(xs, 4, None, os);
+        }
+        acc
+    });
+    let qx_new = Bench::new().throughput_items(n as u64).run("scale-search-qx16-current", || {
+        let mut acc = 0f32;
+        for (xs, os) in data.chunks_exact(16).zip(codes.chunks_exact_mut(16)) {
+            acc += scalar::make_qx_quants(xs, 4, None, os);
+        }
+        acc
+    });
+    let qkx_base = Bench::new().throughput_items(n as u64).run("scale-search-qkx32-baseline", || {
+        let mut acc = 0f32;
+        for (xs, os) in data.chunks_exact(32).zip(codes.chunks_exact_mut(32)) {
+            acc += baseline_make_qkx_quants(xs, 15, None, os).0;
+        }
+        acc
+    });
+    let qkx_new = Bench::new().throughput_items(n as u64).run("scale-search-qkx32-current", || {
+        let mut acc = 0f32;
+        for (xs, os) in data.chunks_exact(32).zip(codes.chunks_exact_mut(32)) {
+            acc += scalar::make_qkx_quants(xs, 15, None, os).0;
+        }
+        acc
+    });
+    let qx_speedup = qx_base.median_ns / qx_new.median_ns;
+    let qkx_speedup = qkx_base.median_ns / qkx_new.median_ns;
+    println!(
+        "speedup scale-search qx16 (Q3_K/Q6_K path): {qx_speedup:.2}x vs PR-1 baseline\n\
+         speedup scale-search qkx32 (Q4_K/Q5_K path): {qkx_speedup:.2}x vs PR-1 baseline"
+    );
+    for r in [&qx_base, &qx_new, &qkx_base, &qkx_new] {
+        report.push(result_json(r));
+    }
+    summary.push(("qx16_speedup".to_string(), qx_speedup));
+    summary.push(("qkx32_speedup".to_string(), qkx_speedup));
 
     // --- the acceptance benchmark: multi-tensor Q4_K container ---
     // Serial (1 thread) vs tensor-parallel (all cores) quantization of a
@@ -93,5 +310,24 @@ fn main() -> anyhow::Result<()> {
          speedup: {:.2}x on {cores} cores (byte-identical output)",
         serial_s / par_s
     );
+    summary.push(("container_q4k_serial_s".to_string(), serial_s));
+    summary.push(("container_q4k_parallel_s".to_string(), par_s));
+    summary.push(("container_q4k_speedup".to_string(), serial_s / par_s));
+
+    if let Some(path) = json_path {
+        let summary_fields: Vec<(&str, json::Value)> = summary
+            .iter()
+            .map(|(k, v)| (k.as_str(), json::num(*v)))
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", json::str_("codec")),
+            ("cores", json::num(cores as f64)),
+            ("weights_per_iter", json::num(n as f64)),
+            ("results", json::Value::Arr(report)),
+            ("summary", json::obj(summary_fields)),
+        ]);
+        std::fs::write(&path, json::to_string_pretty(&doc))?;
+        eprintln!("wrote bench JSON → {path}");
+    }
     Ok(())
 }

@@ -7,7 +7,8 @@
 use dsq::container::{quantize_container, Container};
 use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
 use dsq::eval::{suites, tasks};
-use dsq::runtime::Engine;
+use dsq::quant::parallel;
+use dsq::runtime::{loader, Engine};
 use dsq::scheme::builtin;
 use std::path::PathBuf;
 
@@ -23,6 +24,33 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     };
     println!("# serving bench on checkpoint {tag}\n");
+
+    // Weight-loader decode bench (artifact-free): prepare f32 literal
+    // payloads from a quantized container, serial vs fanned-out.
+    {
+        let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
+        let src = Container::open(&f32_path)?;
+        let q = Container::from_bytes(
+            quantize_container(&src, &builtin::scheme("dq3_k_m")?, None)?.to_bytes(),
+        )?;
+        let manifest = loader::f32_weight_manifest(&q);
+        let cores = parallel::max_threads();
+        let time = |threads: usize| -> anyhow::Result<f64> {
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(loader::prepare_weights(&manifest, &q, threads)?);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            Ok(best)
+        };
+        let serial = time(1)?;
+        let par = time(cores)?;
+        println!(
+            "bench loader-decode/dq3_k_m serial {serial:>8.4} s | parallel-{cores} {par:>8.4} s | {:.2}x\n",
+            serial / par
+        );
+    }
     for scheme in ["f32", "q4_k_m", "dq3_k_m", "q2_k_l"] {
         let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
         let path = if scheme == "f32" {

@@ -74,6 +74,15 @@ impl Args {
         self.switches.iter().any(|s| s == name)
     }
 
+    /// Parse the shared `--threads N` flag: `0` or absent means "auto"
+    /// (the caller passes its auto value, typically all cores).
+    pub fn threads_flag(&self, auto: usize) -> Result<usize> {
+        match self.flag_parse("threads", 0usize)? {
+            0 => Ok(auto),
+            t => Ok(t),
+        }
+    }
+
     pub fn require(&self, name: &str) -> Result<&str> {
         self.flag(name)
             .ok_or_else(|| anyhow!("missing required flag --{name}"))
@@ -132,5 +141,17 @@ mod tests {
         let a = Args::parse(&argv("memory --ctx 4096")).unwrap();
         assert_eq!(a.flag_parse("ctx", 0usize).unwrap(), 4096);
         assert_eq!(a.flag_parse("nope", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn threads_flag_zero_and_absent_mean_auto() {
+        let a = Args::parse(&argv("serve --threads 3")).unwrap();
+        assert_eq!(a.threads_flag(16).unwrap(), 3);
+        let a = Args::parse(&argv("serve --threads 0")).unwrap();
+        assert_eq!(a.threads_flag(16).unwrap(), 16);
+        let a = Args::parse(&argv("serve")).unwrap();
+        assert_eq!(a.threads_flag(16).unwrap(), 16);
+        let a = Args::parse(&argv("serve --threads nope")).unwrap();
+        assert!(a.threads_flag(16).is_err());
     }
 }

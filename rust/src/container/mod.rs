@@ -36,8 +36,6 @@ use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 pub const MAGIC: &[u8; 4] = b"DSQ1";
 pub const DATA_ALIGN: usize = 4096;
@@ -364,45 +362,31 @@ pub fn quantize_container_with(
         return Ok(w);
     }
 
-    // Parallel stage: workers claim tensor indices from a shared atomic
-    // cursor (sizes vary wildly, so a queue load-balances better than
-    // static chunking) and drop finished payloads into per-tensor slots.
-    let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<Result<Vec<u8>>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                let mut values: Vec<f32> = Vec::new();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let t = &src.tensors[i];
-                    let fmt = plan.formats[i];
-                    let r = (|| -> Result<Vec<u8>> {
-                        // Serial inner decode/encode: parallelism lives
-                        // at the tensor level here — nesting the block
-                        // splitter would oversubscribe the machine.
-                        values.resize(t.n_elems(), 0.0);
-                        crate::quant::dequantize_into_with(t.format, src.bytes(t), &mut values, 1)?;
-                        let imp = importance.and_then(|m| m.get(&t.name)).map(|v| v.as_slice());
-                        let mut payload = vec![0u8; fmt.row_bytes(values.len())?];
-                        crate::quant::quantize_into_with(fmt, &values, imp, &mut payload, 1)?;
-                        Ok(payload)
-                    })();
-                    *results[i].lock().unwrap() = Some(r);
-                }
-            });
-        }
-    });
+    // Parallel stage: tensor-level work queue over scoped threads (the
+    // shared `quant::parallel::run_queue` helper, also used by the
+    // serving weight loader), with a per-worker dequantize scratch.
+    let results = crate::quant::parallel::run_queue(
+        n,
+        threads,
+        Vec::new,
+        |values: &mut Vec<f32>, i: usize| -> Result<Vec<u8>> {
+            let t = &src.tensors[i];
+            let fmt = plan.formats[i];
+            // Serial inner decode/encode: parallelism lives at the
+            // tensor level here — nesting the block splitter would
+            // oversubscribe the machine.
+            values.resize(t.n_elems(), 0.0);
+            crate::quant::dequantize_into_with(t.format, src.bytes(t), values, 1)?;
+            let imp = importance.and_then(|m| m.get(&t.name)).map(|v| v.as_slice());
+            let mut payload = vec![0u8; fmt.row_bytes(values.len())?];
+            crate::quant::quantize_into_with(fmt, values, imp, &mut payload, 1)?;
+            Ok(payload)
+        },
+    );
 
     // Assemble in source order → identical offsets/bytes to serial.
-    for (i, (t, &fmt)) in src.tensors.iter().zip(&plan.formats).enumerate() {
-        let slot = results[i].lock().unwrap().take();
-        let payload = slot
-            .unwrap_or_else(|| Err(anyhow!("tensor was never processed")))
-            .with_context(|| format!("quantizing tensor {}", t.name))?;
+    for ((t, &fmt), r) in src.tensors.iter().zip(&plan.formats).zip(results) {
+        let payload = r.with_context(|| format!("quantizing tensor {}", t.name))?;
         w.add_tensor(&t.name, t.class, t.layer, &t.shape, fmt, &payload)?;
     }
     Ok(w)

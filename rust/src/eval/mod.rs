@@ -274,6 +274,45 @@ mod tests {
     }
 
     #[test]
+    fn samples_for_divisor_larger_than_samples_clamps_to_one() {
+        // A divisor bigger than any suite's sample count must still run
+        // one pass per suite, never zero.
+        let p = Protocol { sample_divisor: 1000, ..Protocol::default() };
+        for suite in suites::SUITES {
+            assert_eq!(p.samples_for(suite), 1, "suite {}", suite.name);
+        }
+        // Exactly-equal divisor also lands on one pass.
+        let aime = suites::by_name("AIME 2024").unwrap();
+        let p = Protocol { sample_divisor: aime.samples, ..p };
+        assert_eq!(p.samples_for(aime), 1);
+    }
+
+    #[test]
+    fn suite_result_mean_std_edge_cases() {
+        let mk = |scores: Vec<f64>| SuiteResult {
+            suite: suites::SUITES[0].name,
+            weight: 1.0,
+            sample_scores: scores,
+            n_questions: 4,
+        };
+        // Single-pass suites report no spread.
+        let single = mk(vec![70.0]);
+        assert_eq!(single.mean(), 70.0);
+        assert_eq!(single.std(), None);
+        // Degenerate empty score list: mean 0, no spread (not NaN).
+        let empty = mk(vec![]);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.std(), None);
+        // Two passes: population std.
+        let two = mk(vec![40.0, 60.0]);
+        assert_eq!(two.mean(), 50.0);
+        assert!((two.std().unwrap() - 10.0).abs() < 1e-12);
+        // Constant passes: zero std, Some(_) not None.
+        let flat = mk(vec![55.0, 55.0, 55.0]);
+        assert_eq!(flat.std(), Some(0.0));
+    }
+
+    #[test]
     fn eval_result_aggregation() {
         let mk = |name: &str, scores: Vec<f64>| SuiteResult {
             suite: suites::by_name(name).unwrap().name,

@@ -30,6 +30,11 @@
 //!   count; `threads == 1` is the streaming scratch-reusing pipeline).
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO text
 //!   artifacts and executes them (Python is never on the request path).
+//!   `runtime::loader` prepares weight literals from `.dsq` payloads —
+//!   dequantizing at load time when the manifest asks for f32 weights,
+//!   fanned out across tensors and blocks with byte-identical results
+//!   at any thread count; `runtime::xla` is the offline PJRT stub that
+//!   keeps the crate buildable without the native backend.
 //! - [`coordinator`] — the serving layer: request router, continuous
 //!   batcher, KV-cache sessions, sampler, metrics.
 //! - [`eval`] — the benchmark harness reproducing Tables 2–5: nine proxy

@@ -57,8 +57,8 @@ dsq — DeepSeek quantization analysis (paper reproduction)
 Commands:
   table <1-8>        regenerate a paper table (2-5 need artifacts)
   quantize IN.dsq --scheme S --output OUT.dsq [--threads N]
-  eval --hlo DIR --ckpt FILE [--out results.json] [--full-size]
-  serve --hlo DIR --ckpt FILE [--requests N]
+  eval --hlo DIR --ckpt FILE [--out results.json] [--full-size] [--threads N]
+  serve --hlo DIR --ckpt FILE [--requests N] [--threads N]
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
@@ -223,10 +223,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.positional_at(0).or_else(|_| args.require("input"))?);
     let scheme = builtin::scheme(args.require("scheme")?)?;
     let output = PathBuf::from(args.require("output")?);
-    let threads = match args.flag_parse("threads", 0usize)? {
-        0 => quant::parallel::max_threads(),
-        t => t,
-    };
+    let threads = args.threads_flag(quant::parallel::max_threads())?;
     let src = Container::open(&input)?;
     let imatrix = match args.flag("imatrix") {
         Some(p) => Some(load_imatrix(Path::new(p))?),
@@ -265,7 +262,8 @@ fn load_imatrix(path: &Path) -> Result<std::collections::HashMap<String, Vec<f32
 fn cmd_eval(args: &Args) -> Result<()> {
     let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
     let ckpt = PathBuf::from(args.require("ckpt")?);
-    let engine = Engine::load(&hlo, &ckpt)?;
+    let threads = args.threads_flag(quant::parallel::max_threads())?;
+    let engine = Engine::load_with(&hlo, &ckpt, threads)?;
     let mut coord = Coordinator::new(engine);
     let protocol = protocol_from_args(args);
     let result = match args.flag("suite") {
@@ -293,7 +291,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let n: usize = args.flag_parse("requests", 64usize)?;
-    let engine = Engine::load(&hlo, &ckpt)?;
+    let threads = args.threads_flag(quant::parallel::max_threads())?;
+    let engine = Engine::load_with(&hlo, &ckpt, threads)?;
     let mut coord = Coordinator::new(engine);
     // Mixed request stream drawn from the benchmark distribution.
     let mut made = 0u64;
@@ -440,13 +439,12 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
 /// threads and require byte-identical packings (then the same for
 /// decode). For every builtin scheme: quantize a deterministic tiny-moe
 /// checkpoint through the serial and the tensor-parallel container
-/// pipelines and require byte-identical containers. Exits non-zero on
-/// any mismatch.
+/// pipelines and require byte-identical containers. Finally, the
+/// serving weight loader's decode direction: preparing f32 weight
+/// payloads from a quantized checkpoint must be byte-identical at every
+/// thread count. Exits non-zero on any mismatch.
 fn cmd_selfcheck(args: &Args) -> Result<()> {
-    let threads = match args.flag_parse("threads", 0usize)? {
-        0 => quant::parallel::max_threads(),
-        t => t,
-    };
+    let threads = args.threads_flag(quant::parallel::max_threads())?;
     println!("# codec selfcheck: serial vs {threads} threads\n");
     let mut failures = 0usize;
 
@@ -498,10 +496,40 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         );
     }
 
+    // Decode direction: the serving weight loader over a quantized
+    // checkpoint (tensor-level fan-out + block-level splits inside a
+    // tensor) must reproduce the serial decode byte-for-byte.
+    println!();
+    for scheme_name in ["dq3_k_m", "q4_k_m"] {
+        let scheme = builtin::scheme(scheme_name)?;
+        let q = Container::from_bytes(
+            quantize_container_with(&src, &scheme, None, 1)?.to_bytes(),
+        )?;
+        let manifest = dsq::runtime::loader::f32_weight_manifest(&q);
+        let serial = dsq::runtime::loader::prepare_weights(&manifest, &q, 1)?;
+        let par = dsq::runtime::loader::prepare_weights(&manifest, &q, threads)?;
+        let ok = serial.len() == par.len()
+            && serial
+                .iter()
+                .zip(&par)
+                .all(|(a, b)| a.as_slice() == b.as_slice());
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "  loader-decode/{:<12} ({} tensors → f32 literals): {}",
+            scheme_name,
+            q.tensors.len(),
+            if ok { "identical" } else { "MISMATCH" }
+        );
+    }
+
     if failures > 0 {
         bail!("selfcheck FAILED: {failures} mismatching case(s)");
     }
-    println!("\nselfcheck passed: parallel encoding is byte-identical to serial");
+    println!(
+        "\nselfcheck passed: parallel encode and loader decode are byte-identical to serial"
+    );
     Ok(())
 }
 

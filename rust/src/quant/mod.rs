@@ -45,12 +45,19 @@
 //! ## Quantization quality
 //!
 //! Scale search follows the same strategy as `llama.cpp`:
-//! symmetric formats (`Q3_K`, `Q6_K`, `Q8_0`) use a weighted grid search
+//! symmetric formats (`Q3_K`, `Q6_K`) use a weighted grid search
 //! around `max|x| / qmax` ([`scalar::make_qx_quants`]); asymmetric
 //! formats (`Q2_K`, `Q4_K`, `Q5_K`) use iterative weighted min/max
-//! refinement ([`scalar::make_qkx_quants`]). All entry points accept an
-//! optional importance vector (the "imatrix" in llama.cpp terms) so that
-//! calibration data can steer the rounding.
+//! refinement ([`scalar::make_qkx_quants`]); `Q8_0` uses plain absmax.
+//! All entry points accept an optional importance vector (the "imatrix"
+//! in llama.cpp terms) so that calibration data can steer the rounding.
+//!
+//! The search inner loops are single-pass and lane-chunked: per-format
+//! specialization stays behind [`BlockCodec`], while the per-candidate
+//! weighted sums run through the explicitly vectorizable kernels in
+//! [`simd`] (scalar reference in [`scalar`], selected at runtime via
+//! `DSQ_SCALAR_SEARCH`; both arms are byte-identical by construction —
+//! see `tests/golden_vectors.rs`).
 
 pub mod error;
 pub mod parallel;
@@ -62,6 +69,7 @@ pub mod q6k;
 pub mod q8_0;
 pub mod raw;
 pub mod scalar;
+pub mod simd;
 
 use anyhow::{bail, Result};
 

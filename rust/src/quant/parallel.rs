@@ -17,6 +17,8 @@
 //!   across tensors and therefore forces `threads = 1` per tensor.
 
 use super::BlockCodec;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Minimum tensor size (in weights) before block-level threading is
 /// worth the spawn overhead. One 256-weight super-block costs ~1µs to
@@ -36,6 +38,65 @@ pub fn auto_threads(n: usize) -> usize {
     } else {
         max_threads()
     }
+}
+
+/// Split a thread budget between `jobs` outer tasks and per-task block
+/// threading: returns `(workers, inner)` with `workers ≤ jobs` and
+/// `workers · inner ≤ threads`. Many small jobs get one thread each
+/// (`inner == 1`); a single giant job gets the whole budget as block
+/// parallelism — the policy the runtime weight loader uses so that both
+/// a many-tensor checkpoint and one huge expert matrix split.
+pub fn fan_out(threads: usize, jobs: usize) -> (usize, usize) {
+    let threads = threads.max(1);
+    if jobs == 0 {
+        return (1, threads);
+    }
+    let workers = threads.min(jobs);
+    (workers, (threads / workers).max(1))
+}
+
+/// Run `jobs` indexed tasks over up to `workers` scoped threads pulling
+/// from a shared cursor (sizes vary wildly in practice, so a queue
+/// load-balances better than static chunking), collecting results in
+/// index order. `init` builds one per-worker scratch value reused
+/// across that worker's jobs; `run` executes job `i` with it.
+///
+/// `workers <= 1` (or a single job) runs inline on the caller's thread
+/// with the same per-job arithmetic, so results are identical either
+/// way. Every slot is guaranteed filled on return: the cursor visits
+/// each index exactly once and worker panics re-raise at scope exit.
+/// This is the one ordered work-queue shared by
+/// `container::quantize_container_with` and `runtime::loader`.
+pub fn run_queue<R, S, I, F>(jobs: usize, workers: usize, init: I, run: F) -> Vec<R>
+where
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> R + Sync,
+{
+    if workers <= 1 || jobs <= 1 {
+        let mut scratch = init();
+        return (0..jobs).map(|i| run(&mut scratch, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..jobs).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(jobs) {
+            scope.spawn(|| {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = Some(run(&mut scratch, i));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("work-queue slot unfilled"))
+        .collect()
 }
 
 /// Encode `src` into `out`, splitting whole blocks across up to
@@ -122,6 +183,28 @@ mod tests {
         assert!(max_threads() >= 1);
         assert_eq!(auto_threads(16), 1);
         assert!(auto_threads(PAR_MIN_WEIGHTS) >= 1);
+    }
+
+    #[test]
+    fn run_queue_ordered_and_complete() {
+        for workers in [1usize, 3, 8] {
+            let out = run_queue(17, workers, || 0u32, |scratch, i| {
+                *scratch += 1; // per-worker scratch is writable
+                i * i
+            });
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "workers={workers}");
+        }
+        assert!(run_queue(0, 4, || (), |_, _| ()).is_empty());
+    }
+
+    #[test]
+    fn fan_out_policy() {
+        assert_eq!(fan_out(8, 1), (1, 8)); // one giant tensor: all block-parallel
+        assert_eq!(fan_out(8, 100), (8, 1)); // many tensors: one thread each
+        assert_eq!(fan_out(8, 3), (3, 2)); // leftover budget nests
+        assert_eq!(fan_out(1, 42), (1, 1));
+        assert_eq!(fan_out(0, 0), (1, 1));
+        assert_eq!(fan_out(4, 0), (1, 4));
     }
 
     #[test]

@@ -4,6 +4,28 @@
 //! `make_qkx2_quants`: start from the naive min-max scale and refine it
 //! with a small deterministic search that minimizes (importance-)weighted
 //! squared reconstruction error.
+//!
+//! ## Accumulation order and the SIMD dispatch
+//!
+//! Since PR 2 the canonical arithmetic is **lane-chunked**: per-candidate
+//! weighted sums accumulate into [`simd::LANES`] parallel f32 lanes
+//! (element `i` → lane `i % LANES`, sequential within a lane, reduced by
+//! the shared [`simd::hsum`] fold), and each candidate is scored from its
+//! sums in closed form — one pass per candidate instead of the historic
+//! two. Two implementations of that one spec exist:
+//!
+//! - `qx_sums_ref` / `qkx_sums_ref` here — the plain-loop **scalar
+//!   reference**;
+//! - `simd::qx_sums` / `simd::qkx_sums` — the explicitly vectorizable
+//!   chunked kernels.
+//!
+//! [`make_qx_quants`] / [`make_qkx_quants`] select the lane kernels at
+//! runtime (scalar reference under `DSQ_SCALAR_SEARCH=1` or for
+//! sub-lane inputs). Both arms are **byte-identical** — same lane
+//! assignment, same per-lane order, same reduction, no implicit FMA —
+//! which `tests/golden_vectors.rs` and the in-module tests pin.
+
+use super::simd::{self, qround, QkxSums};
 
 /// Round-to-nearest, ties away from zero (matches llama.cpp's
 /// `nearest_int` behaviour for the value ranges we use).
@@ -12,12 +34,74 @@ pub fn nearest_int(x: f32) -> i32 {
     x.round() as i32
 }
 
-/// Default importance weight when no imatrix is supplied: `x²` biases the
-/// search toward preserving large-magnitude weights, mirroring
-/// llama.cpp's `quantize_row_*_impl` fallback (`weight = x*x`).
+/// Scalar reference for [`simd::qx_sums`] — the same lane-ordered sums
+/// written as one plain indexed loop.
+pub(crate) fn qx_sums_ref(
+    x: &[f32],
+    weights: Option<&[f32]>,
+    iscale: f32,
+    lo: f32,
+    hi: f32,
+) -> (f32, f32) {
+    let mut sumlx = [0.0f32; simd::LANES];
+    let mut suml2 = [0.0f32; simd::LANES];
+    for (i, &xv) in x.iter().enumerate() {
+        let q = qround(iscale * xv, lo, hi);
+        let w = match weights {
+            Some(w) => w[i] + 1e-10,
+            // Default importance: x² biases the fit toward preserving
+            // large-magnitude weights (llama.cpp's `weight = x*x`).
+            None => xv * xv + 1e-8,
+        };
+        let lane = i % simd::LANES;
+        sumlx[lane] += w * xv * q;
+        suml2[lane] += w * q * q;
+    }
+    (simd::hsum(&sumlx), simd::hsum(&suml2))
+}
+
+/// Scalar reference for [`simd::qkx_sums`].
+pub(crate) fn qkx_sums_ref(
+    x: &[f32],
+    weights: Option<&[f32]>,
+    iscale: f32,
+    vmin: f32,
+    hi: f32,
+) -> QkxSums {
+    let mut sw = [0.0f32; simd::LANES];
+    let mut sx = [0.0f32; simd::LANES];
+    let mut sl = [0.0f32; simd::LANES];
+    let mut sl2 = [0.0f32; simd::LANES];
+    let mut sxl = [0.0f32; simd::LANES];
+    for (i, &xv) in x.iter().enumerate() {
+        let q = qround(iscale * (xv - vmin), 0.0, hi);
+        let w = match weights {
+            Some(w) => w[i] + 1e-10,
+            None => xv * xv + 1e-8,
+        };
+        let lane = i % simd::LANES;
+        sw[lane] += w;
+        sx[lane] += w * xv;
+        sl[lane] += w * q;
+        sl2[lane] += w * q * q;
+        sxl[lane] += w * xv * q;
+    }
+    QkxSums {
+        w: simd::hsum(&sw),
+        x: simd::hsum(&sx),
+        l: simd::hsum(&sl),
+        l2: simd::hsum(&sl2),
+        xl: simd::hsum(&sxl),
+    }
+}
+
+/// Candidate error relative to the (constant) `Σ w·x²` term, evaluated
+/// in closed form from the one-pass sums:
+/// `err' = s²·Σwl² + 2sm·Σwl + m²·Σw − 2s·Σwxl − 2m·Σwx`
+/// for reconstruction `x̂ = s·l + m`. Shared by both dispatch arms.
 #[inline]
-fn default_weight(x: f32) -> f32 {
-    x * x + 1e-8
+fn qkx_err(s: f32, m: f32, sums: &QkxSums) -> f32 {
+    s * s * sums.l2 + 2.0 * s * m * sums.l + m * m * sums.w - 2.0 * s * sums.xl - 2.0 * m * sums.x
 }
 
 /// Symmetric scale search: find `scale` such that
@@ -29,11 +113,25 @@ fn default_weight(x: f32) -> f32 {
 /// (`q ∈ [-4, 3]`), 32 for 6-bit (`q ∈ [-32, 31]`).
 ///
 /// The search mirrors llama.cpp `make_qx_quants(..., rmse_type=1)`:
-/// evaluate the least-squares-optimal scale for the roundings induced by
-/// 19 candidate scales around `-nmax / max|x|` and keep the best.
+/// for each of 19 candidate inverse scales around `-nmax / max|x|`,
+/// re-fit the least-squares-optimal scale for the induced rounding and
+/// keep the candidate maximizing `Σwxq²/Σwq²` (equivalently minimizing
+/// the weighted error — the constant `Σwx²` term cancels).
 pub fn make_qx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [u8]) -> f32 {
+    let use_lanes = simd::lanes_enabled() && x.len() >= simd::LANES;
+    make_qx_quants_impl(x, nmax, weights, out, use_lanes)
+}
+
+/// [`make_qx_quants`] with the dispatch arm pinned — the seam the
+/// cross-arm identity tests use (runtime dispatch is process-global).
+fn make_qx_quants_impl(
+    x: &[f32],
+    nmax: i32,
+    weights: Option<&[f32]>,
+    out: &mut [u8],
+    use_lanes: bool,
+) -> f32 {
     debug_assert_eq!(x.len(), out.len());
-    let n = x.len();
     let mut amax = 0f32;
     let mut max = 0f32;
     for &v in x {
@@ -46,35 +144,28 @@ pub fn make_qx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [
         out.iter_mut().for_each(|o| *o = nmax as u8);
         return 0.0;
     }
+    let (lo, hi) = (-(nmax as f32), (nmax - 1) as f32);
     // llama.cpp anchors the initial inverse scale on the signed max so
     // that the extreme value maps exactly to ±nmax.
     let mut best_scale = 0f32;
-    let mut best_err = f32::INFINITY;
-    let w_at = |i: usize| weights.map_or(default_weight(x[i]), |w| w[i] + 1e-10);
+    let mut best_metric = 0f32;
     for is in -9i32..=9 {
         let iscale = -(nmax as f32 + 0.1f32 * is as f32) / max;
-        // Least-squares re-fit of the scale for this rounding: given
-        // q_i fixed, optimal scale = Σ w x q / Σ w q².
-        let mut sumlx = 0f32;
-        let mut suml2 = 0f32;
-        for i in 0..n {
-            let l = nearest_int(iscale * x[i]).clamp(-nmax, nmax - 1) as f32;
-            let w = w_at(i);
-            sumlx += w * x[i] * l;
-            suml2 += w * l * l;
-        }
+        let (sumlx, suml2) = if use_lanes {
+            simd::qx_sums(x, weights, iscale, lo, hi)
+        } else {
+            qx_sums_ref(x, weights, iscale, lo, hi)
+        };
         if suml2 <= 0.0 {
             continue;
         }
+        // Least-squares re-fit of the scale for this rounding: given
+        // q_i fixed, optimal scale = Σwxq / Σwq², with weighted error
+        // Σwx² − (Σwxq)²/Σwq² — so maximize scale·Σwxq.
         let scale = sumlx / suml2;
-        let mut err = 0f32;
-        for i in 0..n {
-            let l = nearest_int(iscale * x[i]).clamp(-nmax, nmax - 1) as f32;
-            let d = x[i] - scale * l;
-            err += w_at(i) * d * d;
-        }
-        if err < best_err {
-            best_err = err;
+        let metric = scale * sumlx;
+        if metric > best_metric {
+            best_metric = metric;
             best_scale = scale;
         }
     }
@@ -83,9 +174,9 @@ pub fn make_qx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [
         best_scale = max / -(nmax as f32);
     }
     let inv = if best_scale != 0.0 { 1.0 / best_scale } else { 0.0 };
-    for i in 0..n {
-        let l = nearest_int(inv * x[i]).clamp(-nmax, nmax - 1);
-        out[i] = (l + nmax) as u8;
+    for (i, &xv) in x.iter().enumerate() {
+        let q = qround(inv * xv, lo, hi);
+        out[i] = (q as i32 + nmax) as u8;
     }
     best_scale
 }
@@ -98,10 +189,22 @@ pub fn make_qx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [
 ///
 /// Mirrors llama.cpp `make_qkx2_quants`: candidate inverse scales around
 /// `nmax / (max - min)` plus an exact least-squares (scale, min) re-fit
-/// per candidate rounding.
+/// per candidate rounding, scored in closed form from one-pass sums.
 pub fn make_qkx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut [u8]) -> (f32, f32) {
+    let use_lanes = simd::lanes_enabled() && x.len() >= simd::LANES;
+    make_qkx_quants_impl(x, nmax, weights, out, use_lanes)
+}
+
+/// [`make_qkx_quants`] with the dispatch arm pinned (see
+/// `make_qx_quants_impl`).
+fn make_qkx_quants_impl(
+    x: &[f32],
+    nmax: i32,
+    weights: Option<&[f32]>,
+    out: &mut [u8],
+    use_lanes: bool,
+) -> (f32, f32) {
     debug_assert_eq!(x.len(), out.len());
-    let n = x.len();
     let mut vmin = x[0];
     let mut vmax = x[0];
     for &v in x {
@@ -123,7 +226,7 @@ pub fn make_qkx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut 
     if vmin > 0.0 {
         vmin = 0.0; // k-quants constrain min ≥ 0 in stored (negated) form
     }
-    let w_at = |i: usize| weights.map_or(default_weight(x[i]), |w| w[i] + 1e-10);
+    let hi = nmax as f32;
 
     let mut best = (vmax - vmin) / nmax as f32;
     let mut best_min = -vmin;
@@ -132,40 +235,26 @@ pub fn make_qkx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut 
         let iscale = (0.1f32 * step as f32 + nmax as f32) / (vmax - vmin);
         // Round with the candidate scale, then solve the 2-parameter
         // weighted least squares for (scale, min) exactly.
-        let mut sum_w = 0f32;
-        let mut sum_x = 0f32;
-        let mut sum_l = 0f32;
-        let mut sum_l2 = 0f32;
-        let mut sum_xl = 0f32;
-        for i in 0..n {
-            let l = nearest_int(iscale * (x[i] - vmin)).clamp(0, nmax) as f32;
-            let w = w_at(i);
-            sum_w += w;
-            sum_x += w * x[i];
-            sum_l += w * l;
-            sum_l2 += w * l * l;
-            sum_xl += w * x[i] * l;
-        }
-        let det = sum_w * sum_l2 - sum_l * sum_l;
+        let s = if use_lanes {
+            simd::qkx_sums(x, weights, iscale, vmin, hi)
+        } else {
+            qkx_sums_ref(x, weights, iscale, vmin, hi)
+        };
+        let det = s.w * s.l2 - s.l * s.l;
         if det <= 0.0 {
             continue;
         }
-        let mut scale = (sum_w * sum_xl - sum_x * sum_l) / det;
-        let mut minv = (sum_l2 * sum_x - sum_l * sum_xl) / det;
+        let mut scale = (s.w * s.xl - s.x * s.l) / det;
+        let mut minv = (s.l2 * s.x - s.l * s.xl) / det;
         if minv > 0.0 {
             // Constrained fit: min must be ≤ 0 (stored negated ≥ 0).
             minv = 0.0;
-            scale = if sum_l2 > 0.0 { sum_xl / sum_l2 } else { scale };
+            scale = if s.l2 > 0.0 { s.xl / s.l2 } else { scale };
         }
         if scale <= 0.0 {
             continue;
         }
-        let mut err = 0f32;
-        for i in 0..n {
-            let l = nearest_int(iscale * (x[i] - vmin)).clamp(0, nmax) as f32;
-            let d = x[i] - (scale * l + minv);
-            err += w_at(i) * d * d;
-        }
+        let err = qkx_err(scale, minv, &s);
         if err < best_err {
             best_err = err;
             best = scale;
@@ -173,8 +262,8 @@ pub fn make_qkx_quants(x: &[f32], nmax: i32, weights: Option<&[f32]>, out: &mut 
         }
     }
     let inv = if best > 0.0 { 1.0 / best } else { 0.0 };
-    for i in 0..n {
-        out[i] = nearest_int(inv * (x[i] + best_min)).clamp(0, nmax) as u8;
+    for (i, &xv) in x.iter().enumerate() {
+        out[i] = qround(inv * (xv + best_min), 0.0, hi) as u8;
     }
     (best, best_min)
 }
@@ -196,6 +285,7 @@ pub fn put_f16(bytes: &mut [u8], off: usize, v: f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg;
 
     fn mse(a: &[f32], b: &[f32]) -> f32 {
         a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>() / a.len() as f32
@@ -263,5 +353,73 @@ mod tests {
         let mut buf = [0u8; 4];
         put_f16(&mut buf, 1, 0.625);
         assert_eq!(get_f16(&buf, 1), 0.625);
+    }
+
+    #[test]
+    fn qx_search_identical_across_dispatch_arms() {
+        // The runtime dispatch is process-global (env var read once),
+        // so the identity test pins the arm through the `_impl` seam.
+        for seed in 0..300u64 {
+            let mut rng = Pcg::new(6100 + seed);
+            let n = [16usize, 32][seed as usize % 2];
+            let scale = 10f32.powi(rng.next_below(7) as i32 - 3);
+            let x: Vec<f32> = (0..n).map(|_| rng.next_normal() * scale).collect();
+            let w: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.05).collect();
+            for &nmax in &[4i32, 32] {
+                for weights in [None, Some(w.as_slice())] {
+                    let mut a = vec![0u8; n];
+                    let mut b = vec![0u8; n];
+                    let sa = make_qx_quants_impl(&x, nmax, weights, &mut a, true);
+                    let sb = make_qx_quants_impl(&x, nmax, weights, &mut b, false);
+                    assert_eq!(sa.to_bits(), sb.to_bits(), "seed {seed} nmax {nmax}");
+                    assert_eq!(a, b, "seed {seed} nmax {nmax}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qkx_search_identical_across_dispatch_arms() {
+        for seed in 0..300u64 {
+            let mut rng = Pcg::new(6400 + seed);
+            let n = [16usize, 32][seed as usize % 2];
+            let scale = 10f32.powi(rng.next_below(7) as i32 - 3);
+            let shift = if seed % 3 == 0 { scale * 0.7 } else { 0.0 };
+            let x: Vec<f32> = (0..n).map(|_| rng.next_normal() * scale + shift).collect();
+            let w: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.05).collect();
+            for &nmax in &[3i32, 15, 31] {
+                for weights in [None, Some(w.as_slice())] {
+                    let mut a = vec![0u8; n];
+                    let mut b = vec![0u8; n];
+                    let (sa, ma) = make_qkx_quants_impl(&x, nmax, weights, &mut a, true);
+                    let (sb, mb) = make_qkx_quants_impl(&x, nmax, weights, &mut b, false);
+                    assert_eq!(
+                        (sa.to_bits(), ma.to_bits()),
+                        (sb.to_bits(), mb.to_bits()),
+                        "seed {seed} nmax {nmax}"
+                    );
+                    assert_eq!(a, b, "seed {seed} nmax {nmax}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn public_entry_matches_pinned_arm() {
+        // Whatever arm the process-global dispatch selected, the public
+        // functions must agree with the `_impl` seam pinned to it.
+        let lanes = simd::lanes_enabled();
+        let mut rng = Pcg::new(77);
+        let x: Vec<f32> = (0..32).map(|_| rng.next_normal()).collect();
+        let mut a = vec![0u8; 32];
+        let mut b = vec![0u8; 32];
+        let sa = make_qx_quants(&x, 32, None, &mut a);
+        let sb = make_qx_quants_impl(&x, 32, None, &mut b, lanes);
+        assert_eq!(sa.to_bits(), sb.to_bits());
+        assert_eq!(a, b);
+        let (ka, kma) = make_qkx_quants(&x, 15, None, &mut a);
+        let (kb, kmb) = make_qkx_quants_impl(&x, 15, None, &mut b, lanes);
+        assert_eq!((ka.to_bits(), kma.to_bits()), (kb.to_bits(), kmb.to_bits()));
+        assert_eq!(a, b);
     }
 }

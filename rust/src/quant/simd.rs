@@ -1,0 +1,303 @@
+//! Lane-chunked scale-search kernels.
+//!
+//! The inner loops of [`super::scalar::make_qx_quants`] /
+//! [`super::scalar::make_qkx_quants`] dominate encode time (they run
+//! once per candidate scale per 16/32-weight sub-block). This module
+//! holds the **explicitly vectorizable** versions: the input is walked
+//! in fixed chunks of [`LANES`] elements, partial sums live in
+//! `[f32; LANES]` arrays, and the per-element math is branch-free
+//! (`round` + float `max`/`min` clamps), which lets the autovectorizer
+//! lower the chunk body to SIMD in release builds.
+//!
+//! ## The byte-identity contract
+//!
+//! The scalar reference in [`super::scalar`] computes the *same* sums in
+//! the *same* order: element `i` accumulates into lane `i % LANES`, each
+//! lane is a sequential f32 sum, and the horizontal reduction is the
+//! shared `hsum` fold. Because f32 addition order is fixed and Rust
+//! never contracts `a*b + c` into an FMA implicitly, the lane kernels
+//! and the reference produce bit-identical sums — and therefore
+//! bit-identical codec output. `tests` below and
+//! `tests/golden_vectors.rs` assert this; CI additionally runs the
+//! golden suite with `DSQ_SCALAR_SEARCH=1` to pin both dispatch arms to
+//! the same fixtures.
+
+use std::sync::OnceLock;
+
+/// Accumulator width. Eight f32 lanes = one AVX register / two NEON
+/// registers; wide enough to hide the add latency, small enough that
+/// the five-accumulator `qkx` kernel still fits the register file.
+pub const LANES: usize = 8;
+
+/// Whether the lane kernels are active. Default on; set
+/// `DSQ_SCALAR_SEARCH=1` to force the scalar reference (the two paths
+/// are byte-identical — the switch exists for benchmarking and for
+/// pinning CI drift tests to either arm). Read once per process.
+pub fn lanes_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !matches!(
+            std::env::var("DSQ_SCALAR_SEARCH").as_deref(),
+            Ok("1") | Ok("true") | Ok("yes")
+        )
+    })
+}
+
+/// Round to nearest (ties away from zero) and clamp to `[lo, hi]`, in
+/// float domain. Shared by the lane kernels, the scalar reference and
+/// the final code-emission passes so every path rounds identically.
+#[inline(always)]
+pub(crate) fn qround(v: f32, lo: f32, hi: f32) -> f32 {
+    v.round().max(lo).min(hi)
+}
+
+/// Horizontal sum of a lane accumulator — a fixed sequential fold, so
+/// every caller reduces in the same order.
+#[inline(always)]
+pub(crate) fn hsum(acc: &[f32; LANES]) -> f32 {
+    let mut s = 0.0f32;
+    for &v in acc.iter() {
+        s += v;
+    }
+    s
+}
+
+/// Weighted sums for one symmetric candidate scale:
+/// `(Σ w·x·q, Σ w·q²)` with `q = qround(iscale·x, lo, hi)` and
+/// `w = x² + 1e-8` (no imatrix) or `w_i + 1e-10`.
+#[inline]
+pub(crate) fn qx_sums(
+    x: &[f32],
+    weights: Option<&[f32]>,
+    iscale: f32,
+    lo: f32,
+    hi: f32,
+) -> (f32, f32) {
+    let mut sumlx = [0.0f32; LANES];
+    let mut suml2 = [0.0f32; LANES];
+    let head = x.len() / LANES * LANES;
+    match weights {
+        None => {
+            for c in x[..head].chunks_exact(LANES) {
+                for l in 0..LANES {
+                    let xv = c[l];
+                    let q = qround(iscale * xv, lo, hi);
+                    let w = xv * xv + 1e-8;
+                    sumlx[l] += w * xv * q;
+                    suml2[l] += w * q * q;
+                }
+            }
+            for (l, &xv) in x[head..].iter().enumerate() {
+                let q = qround(iscale * xv, lo, hi);
+                let w = xv * xv + 1e-8;
+                sumlx[l] += w * xv * q;
+                suml2[l] += w * q * q;
+            }
+        }
+        Some(ws) => {
+            for (c, wc) in x[..head]
+                .chunks_exact(LANES)
+                .zip(ws[..head].chunks_exact(LANES))
+            {
+                for l in 0..LANES {
+                    let xv = c[l];
+                    let q = qround(iscale * xv, lo, hi);
+                    let w = wc[l] + 1e-10;
+                    sumlx[l] += w * xv * q;
+                    suml2[l] += w * q * q;
+                }
+            }
+            for (l, (&xv, &wv)) in x[head..].iter().zip(ws[head..].iter()).enumerate() {
+                let q = qround(iscale * xv, lo, hi);
+                let w = wv + 1e-10;
+                sumlx[l] += w * xv * q;
+                suml2[l] += w * q * q;
+            }
+        }
+    }
+    (hsum(&sumlx), hsum(&suml2))
+}
+
+/// The five weighted sums the asymmetric (scale, min) least-squares fit
+/// needs, gathered in one pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct QkxSums {
+    pub w: f32,
+    pub x: f32,
+    pub l: f32,
+    pub l2: f32,
+    pub xl: f32,
+}
+
+/// One-pass weighted sums for one asymmetric candidate scale:
+/// `q = qround(iscale·(x − vmin), 0, nmax)`.
+#[inline]
+pub(crate) fn qkx_sums(
+    x: &[f32],
+    weights: Option<&[f32]>,
+    iscale: f32,
+    vmin: f32,
+    hi: f32,
+) -> QkxSums {
+    let mut sw = [0.0f32; LANES];
+    let mut sx = [0.0f32; LANES];
+    let mut sl = [0.0f32; LANES];
+    let mut sl2 = [0.0f32; LANES];
+    let mut sxl = [0.0f32; LANES];
+    let head = x.len() / LANES * LANES;
+    match weights {
+        None => {
+            for c in x[..head].chunks_exact(LANES) {
+                for l in 0..LANES {
+                    let xv = c[l];
+                    let q = qround(iscale * (xv - vmin), 0.0, hi);
+                    let w = xv * xv + 1e-8;
+                    sw[l] += w;
+                    sx[l] += w * xv;
+                    sl[l] += w * q;
+                    sl2[l] += w * q * q;
+                    sxl[l] += w * xv * q;
+                }
+            }
+            for (l, &xv) in x[head..].iter().enumerate() {
+                let q = qround(iscale * (xv - vmin), 0.0, hi);
+                let w = xv * xv + 1e-8;
+                sw[l] += w;
+                sx[l] += w * xv;
+                sl[l] += w * q;
+                sl2[l] += w * q * q;
+                sxl[l] += w * xv * q;
+            }
+        }
+        Some(ws) => {
+            for (c, wc) in x[..head]
+                .chunks_exact(LANES)
+                .zip(ws[..head].chunks_exact(LANES))
+            {
+                for l in 0..LANES {
+                    let xv = c[l];
+                    let q = qround(iscale * (xv - vmin), 0.0, hi);
+                    let w = wc[l] + 1e-10;
+                    sw[l] += w;
+                    sx[l] += w * xv;
+                    sl[l] += w * q;
+                    sl2[l] += w * q * q;
+                    sxl[l] += w * xv * q;
+                }
+            }
+            for (l, (&xv, &wv)) in x[head..].iter().zip(ws[head..].iter()).enumerate() {
+                let q = qround(iscale * (xv - vmin), 0.0, hi);
+                let w = wv + 1e-10;
+                sw[l] += w;
+                sx[l] += w * xv;
+                sl[l] += w * q;
+                sl2[l] += w * q * q;
+                sxl[l] += w * xv * q;
+            }
+        }
+    }
+    QkxSums {
+        w: hsum(&sw),
+        x: hsum(&sx),
+        l: hsum(&sl),
+        l2: hsum(&sl2),
+        xl: hsum(&sxl),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scalar::{qkx_sums_ref, qx_sums_ref};
+    use crate::util::rng::Pcg;
+
+    fn random_case(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg::new(seed);
+        let scale = 10f32.powi(rng.next_below(7) as i32 - 3);
+        let mut x: Vec<f32> = (0..n).map(|_| rng.next_normal() * scale).collect();
+        if n > 2 {
+            x[0] = 0.0; // exact zero
+            x[n / 2] = -x[n / 2].abs() * 3.0; // outlier
+        }
+        let w: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.05).collect();
+        (x, w)
+    }
+
+    #[test]
+    fn qx_sums_lanes_bit_identical_to_reference() {
+        for seed in 0..200u64 {
+            // Sizes straddle the lane width: remainders, exact
+            // multiples, sub-lane inputs.
+            for &n in &[1usize, 5, 8, 15, 16, 24, 32, 33] {
+                let (x, w) = random_case(9100 + seed, n);
+                for &nmax in &[4i32, 32] {
+                    let (lo, hi) = (-(nmax as f32), (nmax - 1) as f32);
+                    let iscale = -(nmax as f32 + 0.1 * (seed % 19) as f32 - 0.9)
+                        / x.iter().fold(0.1f32, |a, &v| a.max(v.abs()));
+                    for weights in [None, Some(w.as_slice())] {
+                        let a = qx_sums(&x, weights, iscale, lo, hi);
+                        let b = qx_sums_ref(&x, weights, iscale, lo, hi);
+                        assert_eq!(
+                            (a.0.to_bits(), a.1.to_bits()),
+                            (b.0.to_bits(), b.1.to_bits()),
+                            "seed {seed} n {n} nmax {nmax} im {}",
+                            weights.is_some()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qkx_sums_lanes_bit_identical_to_reference() {
+        for seed in 0..200u64 {
+            for &n in &[1usize, 5, 8, 15, 16, 24, 32, 33] {
+                let (x, w) = random_case(9700 + seed, n);
+                let vmin = x.iter().cloned().fold(f32::INFINITY, f32::min).min(0.0);
+                let vmax = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                for &nmax in &[3i32, 15, 31] {
+                    let iscale =
+                        (0.1 * (seed % 14) as f32 - 0.5 + nmax as f32) / (vmax - vmin).max(1e-6);
+                    for weights in [None, Some(w.as_slice())] {
+                        let a = qkx_sums(&x, weights, iscale, vmin, nmax as f32);
+                        let b = qkx_sums_ref(&x, weights, iscale, vmin, nmax as f32);
+                        let bits = |s: &QkxSums| {
+                            [
+                                s.w.to_bits(),
+                                s.x.to_bits(),
+                                s.l.to_bits(),
+                                s.l2.to_bits(),
+                                s.xl.to_bits(),
+                            ]
+                        };
+                        assert_eq!(
+                            bits(&a),
+                            bits(&b),
+                            "seed {seed} n {n} nmax {nmax} im {}",
+                            weights.is_some()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qround_matches_int_rounding_path() {
+        // The float clamp must agree with the historical
+        // `nearest_int(v).clamp(lo, hi)` integer path on finite inputs
+        // (up to the sign of zero: qround keeps -0.0, which the
+        // accumulators and `as i32`/`as u8` casts treat as 0).
+        let mut rng = Pcg::new(55);
+        for _ in 0..10_000 {
+            let v = (rng.next_f32() - 0.5) * 200.0;
+            let got = qround(v, -32.0, 31.0);
+            let want = (v.round() as i32).clamp(-32, 31) as f32;
+            assert_eq!(got, want, "v={v}");
+        }
+        assert_eq!(qround(1e30, -4.0, 3.0), 3.0);
+        assert_eq!(qround(-1e30, -4.0, 3.0), -4.0);
+        assert_eq!(qround(-0.3, -4.0, 3.0) as i32, 0);
+    }
+}

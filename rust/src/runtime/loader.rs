@@ -1,0 +1,274 @@
+//! Weight-payload preparation for the serving engine — the
+//! checkpoint→literal decode path of `Phase::load`, kept free of any
+//! PJRT types so it is testable without compiled artifacts.
+//!
+//! For every manifest weight input the loader either
+//!
+//! - **passes the container payload through** when the container's
+//!   stored format already matches what the manifest declares (packed
+//!   quantized bytes the HLO graph dequantizes in-kernel, or raw f32),
+//!   or
+//! - **decodes to f32 at load time** when the manifest wants `f32`
+//!   weights (`dtype: f32`, no/`"f32"` format field) but the container
+//!   stores a quantized payload.
+//!
+//! Decoding fans out over the same scoped-thread work-queue pattern as
+//! `container::quantize_container`: workers claim tensors from an
+//! atomic cursor, keep per-worker scratch, and results are assembled in
+//! manifest order, so the output is byte-identical at any thread count.
+//! The thread budget is split by [`crate::quant::parallel::fan_out`] —
+//! many tensors get one worker each, while a single giant tensor is
+//! split at *block* granularity through
+//! [`crate::quant::dequantize_into_with`], so the 671B-census case
+//! (few, huge expert matrices) also scales.
+
+use crate::container::Container;
+use crate::quant::{self, parallel, QuantFormat};
+use crate::runtime::manifest::{Dtype, IoSpec, Manifest, Role};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One prepared weight payload, in manifest weight-input order.
+pub enum WeightBytes<'a> {
+    /// Container payload used as-is (format matches the manifest).
+    Raw(&'a [u8]),
+    /// Payload decoded to little-endian f32 at load time.
+    Decoded(Vec<u8>),
+}
+
+impl WeightBytes<'_> {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            WeightBytes::Raw(b) => b,
+            WeightBytes::Decoded(v) => v,
+        }
+    }
+}
+
+/// The format a weight spec declares; absent means raw `"f32"`.
+fn spec_format(spec: &IoSpec) -> &str {
+    spec.format.as_deref().unwrap_or("f32")
+}
+
+/// The container/manifest format-mismatch error. One message for every
+/// arm — the manifest default is reported as `f32`, never `"?"`.
+pub fn format_mismatch(name: &str, container_fmt: &str, manifest_fmt: &str) -> String {
+    format!(
+        "tensor {name}: container format {container_fmt} != manifest {manifest_fmt}; \
+         re-run `dsq quantize` with the matching scheme"
+    )
+}
+
+struct Job<'a> {
+    name: &'a str,
+    bytes: &'a [u8],
+    /// `Some((format, n_elems))` when the payload must be decoded to
+    /// f32; `None` for raw passthrough.
+    decode: Option<(QuantFormat, usize)>,
+}
+
+fn decode_one(job: &Job<'_>, inner_threads: usize, scratch: &mut Vec<f32>) -> Result<Vec<u8>> {
+    let (fmt, n) = job.decode.expect("decode_one called on a raw job");
+    scratch.resize(n, 0.0);
+    quant::dequantize_into_with(fmt, job.bytes, scratch, inner_threads)
+        .with_context(|| format!("decoding tensor {}", job.name))?;
+    let mut out = vec![0u8; n * 4];
+    for (dst, v) in out.chunks_exact_mut(4).zip(scratch.iter()) {
+        dst.copy_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Validate the manifest's weight inputs against `ckpt` and produce
+/// their payload bytes in manifest order, decoding quantized tensors to
+/// f32 where the manifest asks for it. `threads` bounds the total
+/// worker budget (tensor-level × block-level); the result is
+/// byte-identical for every thread count.
+pub fn prepare_weights<'a>(
+    manifest: &Manifest,
+    ckpt: &'a Container,
+    threads: usize,
+) -> Result<Vec<WeightBytes<'a>>> {
+    // Validation pass (serial, cheap): classify every weight input.
+    let mut jobs: Vec<Job<'a>> = Vec::new();
+    for spec in manifest.inputs.iter().filter(|s| s.role == Role::Weight) {
+        let spec_name = spec
+            .name
+            .as_deref()
+            .ok_or_else(|| anyhow!("weight input without a name in {} manifest", manifest.phase))?;
+        let entry = ckpt
+            .tensor(spec_name)
+            .with_context(|| format!("checkpoint {}", ckpt.scheme_name))?;
+        // Borrow the name from the container entry so the job outlives
+        // the manifest borrow.
+        let name: &'a str = entry.name.as_str();
+        let want = spec_format(spec);
+        let bytes = ckpt.bytes(entry);
+        if entry.format.name() == want {
+            let expect: usize = spec.shape.iter().product::<usize>() * spec.dtype.size();
+            if bytes.len() != expect {
+                bail!(
+                    "tensor {name}: payload {} bytes != manifest expectation {expect}",
+                    bytes.len()
+                );
+            }
+            jobs.push(Job { name, bytes, decode: None });
+        } else if want == "f32" && spec.dtype == Dtype::F32 {
+            // Manifest wants dequantized weights; decode at load time.
+            let n: usize = spec.shape.iter().product();
+            if n != entry.n_elems() {
+                bail!(
+                    "tensor {name}: manifest shape {:?} ({n} elems) != container element count {}",
+                    spec.shape,
+                    entry.n_elems()
+                );
+            }
+            jobs.push(Job { name, bytes, decode: Some((entry.format, n)) });
+        } else {
+            bail!(format_mismatch(name, entry.format.name(), want));
+        }
+    }
+
+    // Decode fan-out: tensor-level work queue (shared with the
+    // container pipeline — `parallel::run_queue`), block-level split
+    // inside each worker when the budget allows.
+    let decode_idx: Vec<usize> = jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| j.decode.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    let mut decoded: Vec<Option<Vec<u8>>> = (0..jobs.len()).map(|_| None).collect();
+    if !decode_idx.is_empty() {
+        let (workers, inner) = parallel::fan_out(threads, decode_idx.len());
+        let results = parallel::run_queue(
+            decode_idx.len(),
+            workers,
+            Vec::new,
+            |scratch: &mut Vec<f32>, k: usize| decode_one(&jobs[decode_idx[k]], inner, scratch),
+        );
+        // Assemble in manifest order — identical bytes at any count.
+        for (k, r) in results.into_iter().enumerate() {
+            decoded[decode_idx[k]] = Some(r?);
+        }
+    }
+
+    Ok(jobs
+        .iter()
+        .zip(decoded.iter_mut())
+        .map(|(job, d)| match d.take() {
+            Some(v) => WeightBytes::Decoded(v),
+            None => WeightBytes::Raw(job.bytes),
+        })
+        .collect())
+}
+
+/// A synthetic manifest declaring every tensor of `ckpt` as an f32
+/// weight input — the decode-direction fixture used by `dsq selfcheck`
+/// and the loader property tests (no compiled artifacts needed).
+pub fn f32_weight_manifest(ckpt: &Container) -> Manifest {
+    let inputs = ckpt
+        .tensors
+        .iter()
+        .map(|t| IoSpec {
+            role: Role::Weight,
+            name: Some(t.name.clone()),
+            format: None,
+            shape: t.shape.clone(),
+            dtype: Dtype::F32,
+        })
+        .collect();
+    Manifest {
+        model_name: ckpt.model.name.clone(),
+        scheme: ckpt.scheme_name.clone(),
+        phase: "selfcheck".to_string(),
+        batch: 1,
+        prompt_len: 1,
+        max_ctx: 1,
+        vocab: 1,
+        inputs,
+        outputs: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{quantize_container_with, synthetic_f32_container};
+    use crate::model::ModelConfig;
+    use crate::scheme::builtin;
+
+    fn quantized_tiny_moe() -> Container {
+        let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0x10AD).unwrap();
+        let scheme = builtin::scheme("dq3_k_m").unwrap();
+        Container::from_bytes(
+            quantize_container_with(&src, &scheme, None, 1)
+                .unwrap()
+                .to_bytes(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn decode_direction_matches_container_dequantize() {
+        let q = quantized_tiny_moe();
+        let manifest = f32_weight_manifest(&q);
+        let payloads = prepare_weights(&manifest, &q, 1).unwrap();
+        assert_eq!(payloads.len(), q.tensors.len());
+        for (t, p) in q.tensors.iter().zip(&payloads) {
+            let want = q.dequantize(t).unwrap();
+            let got: Vec<f32> = p
+                .as_slice()
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            assert_eq!(got, want, "tensor {}", t.name);
+            // f32 tensors pass through without copying.
+            if t.format == QuantFormat::F32 {
+                assert!(matches!(p, WeightBytes::Raw(_)), "tensor {}", t.name);
+            } else {
+                assert!(matches!(p, WeightBytes::Decoded(_)), "tensor {}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mismatch_message_consistent_for_default_and_explicit_formats() {
+        let q = quantized_tiny_moe();
+        // Find a quantized tensor and ask for it with a wrong dtype so
+        // the default-format arm trips.
+        let t = q
+            .tensors
+            .iter()
+            .find(|t| t.format != QuantFormat::F32)
+            .unwrap();
+        let mut manifest = f32_weight_manifest(&q);
+        manifest.inputs.retain(|s| s.name.as_deref() == Some(t.name.as_str()));
+        manifest.inputs[0].dtype = Dtype::U8;
+        let e = prepare_weights(&manifest, &q, 1).err().unwrap();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("!= manifest f32"),
+            "default format must be reported as f32, got: {msg}"
+        );
+        assert!(!msg.contains("manifest ?"), "got: {msg}");
+
+        // Explicit wrong format reports that format.
+        let other = if t.format.name() == "q6_k" { "q4_k" } else { "q6_k" };
+        manifest.inputs[0].dtype = Dtype::U8;
+        manifest.inputs[0].format = Some(other.to_string());
+        let e = prepare_weights(&manifest, &q, 1).err().unwrap();
+        assert!(format!("{e:#}").contains(&format!("!= manifest {other}")));
+    }
+
+    #[test]
+    fn missing_tensor_and_bad_shape_rejected() {
+        let q = quantized_tiny_moe();
+        let mut manifest = f32_weight_manifest(&q);
+        manifest.inputs[0].name = Some("no.such.tensor".to_string());
+        assert!(prepare_weights(&manifest, &q, 1).is_err());
+
+        let mut manifest = f32_weight_manifest(&q);
+        manifest.inputs[0].shape = vec![1, 7]; // wrong element count
+        assert!(prepare_weights(&manifest, &q, 2).is_err());
+    }
+}

@@ -66,7 +66,11 @@ pub struct IoSpec {
     pub role: Role,
     /// Tensor name (weights only).
     pub name: Option<String>,
-    /// Quant format name (weights only).
+    /// Quant format name (weights only). Absent means `"f32"`. A weight
+    /// spec with `dtype: f32` and format `"f32"` over a *quantized*
+    /// container tensor asks the loader to dequantize that payload at
+    /// load time (see `runtime::loader`); any other disagreement
+    /// between container and manifest formats is an error.
     pub format: Option<String>,
     pub shape: Vec<usize>,
     pub dtype: Dtype,

@@ -7,11 +7,27 @@
 //! it on the PJRT CPU client, marshals `.dsq` container payloads into
 //! input literals in the manifest-declared order, and runs
 //! prefill/decode steps.
+//!
+//! Weight marshalling goes through [`loader`]: payloads whose container
+//! format matches the manifest pass through zero-copy, while manifests
+//! that declare `f32` weights over a quantized checkpoint are decoded
+//! at load time — fanned out across tensors *and* across blocks inside
+//! a tensor (`Engine::load_with` pins the thread budget; `dsq serve
+//! --threads N` / `dsq eval --threads N` plumb it from the CLI). The
+//! decode result is byte-identical at every thread count (see
+//! `tests/loader_roundtrip.rs` and `dsq selfcheck`).
+//!
+//! This tree builds against the offline [`xla`] stub (the native
+//! `xla_extension` backend is not vendorable here): literals and the
+//! whole loader path are real, while `compile`/`execute` report the
+//! missing backend gracefully.
 
+pub mod loader;
 pub mod manifest;
+pub mod xla;
 
 use crate::container::Container;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 use manifest::{Dtype, Manifest, Role};
 use std::path::Path;
 
@@ -63,6 +79,7 @@ impl Phase {
         hlo_path: &Path,
         manifest_path: &Path,
         ckpt: &Container,
+        threads: usize,
     ) -> Result<Phase> {
         let manifest = Manifest::load(manifest_path)?;
         let proto = xla::HloModuleProto::from_text_file(
@@ -74,34 +91,18 @@ impl Phase {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", hlo_path.display()))?;
 
-        // Prepare weight literals in manifest order, validating the
-        // container against the manifest's expectations.
-        let mut weights = Vec::new();
-        for spec in &manifest.inputs {
-            if spec.role != Role::Weight {
-                continue;
-            }
-            let name = spec.name.as_deref().expect("weight inputs carry names");
-            let entry = ckpt
-                .tensor(name)
-                .with_context(|| format!("checkpoint {}", ckpt.scheme_name))?;
-            if entry.format.name() != spec.format.as_deref().unwrap_or("f32") {
-                bail!(
-                    "tensor {name}: container format {} != manifest {}; \
-                     re-run `dsq quantize` with the matching scheme",
-                    entry.format.name(),
-                    spec.format.as_deref().unwrap_or("?")
-                );
-            }
-            let expect: usize = spec.shape.iter().product::<usize>() * spec.dtype.size();
-            let bytes = ckpt.bytes(entry);
-            if bytes.len() != expect {
-                bail!(
-                    "tensor {name}: payload {} bytes != manifest expectation {expect}",
-                    bytes.len()
-                );
-            }
-            weights.push(literal(spec.dtype, &spec.shape, bytes)?);
+        // Validate + decode + marshal the weight payloads (fanned out
+        // across tensors and blocks), then build literals in manifest
+        // order.
+        let payloads = loader::prepare_weights(&manifest, ckpt, threads)?;
+        let mut weights = Vec::with_capacity(payloads.len());
+        for (spec, payload) in manifest
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Weight)
+            .zip(payloads.iter())
+        {
+            weights.push(literal(spec.dtype, &spec.shape, payload.as_slice())?);
         }
         Ok(Phase { manifest, exe, weights })
     }
@@ -144,12 +145,20 @@ pub struct StepOutput {
 }
 
 impl Engine {
-    /// Load a serving engine.
+    /// Load a serving engine with the default weight-loader thread
+    /// budget (all cores).
     ///
     /// `hlo_dir` holds `{model}_{scheme}_{phase}.hlo.txt` + manifests
     /// (from `make artifacts`); `ckpt_path` is the quantized container
     /// produced by `dsq quantize` (or the f32 training checkpoint).
     pub fn load(hlo_dir: &Path, ckpt_path: &Path) -> Result<Engine> {
+        Self::load_with(hlo_dir, ckpt_path, crate::quant::parallel::max_threads())
+    }
+
+    /// [`Engine::load`] with an explicit weight-loader thread count
+    /// (`1` forces the serial decode path; the loaded weights are
+    /// byte-identical either way).
+    pub fn load_with(hlo_dir: &Path, ckpt_path: &Path, threads: usize) -> Result<Engine> {
         let ckpt = Container::open(ckpt_path)?;
         let model_name = ckpt.model.name.clone();
         let scheme_name = ckpt.scheme_name.clone();
@@ -162,12 +171,14 @@ impl Engine {
             &hlo_dir.join(format!("{}.hlo.txt", stem("prefill"))),
             &hlo_dir.join(format!("{}.manifest.json", stem("prefill"))),
             &ckpt,
+            threads,
         )?;
         let decode = Phase::load(
             &client,
             &hlo_dir.join(format!("{}.hlo.txt", stem("decode"))),
             &hlo_dir.join(format!("{}.manifest.json", stem("decode"))),
             &ckpt,
+            threads,
         )?;
         Ok(Engine { client, prefill, decode, model_name, scheme_name })
     }

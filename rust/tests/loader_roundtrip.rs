@@ -1,0 +1,112 @@
+//! Property tests for the serving weight-loader decode path
+//! (`runtime::loader`) — the quantize → loader-dequantize round trip,
+//! swept across thread counts {1, 2, 8}. These need no compiled HLO
+//! artifacts: the loader is exercised directly through a synthetic
+//! manifest over in-memory containers.
+
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container, Writer};
+use dsq::model::{ModelConfig, ModuleClass};
+use dsq::quant::{self, parallel, QuantFormat};
+use dsq::runtime::loader::{self, WeightBytes};
+use dsq::scheme::builtin;
+use dsq::util::rng::Pcg;
+
+fn le_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect()
+}
+
+#[test]
+fn loader_decode_identical_across_thread_counts() {
+    let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0xD0C).unwrap();
+    for scheme_name in ["dq3_k_m", "q4_k_m", "q2_k_l"] {
+        let scheme = builtin::scheme(scheme_name).unwrap();
+        let q = Container::from_bytes(
+            quantize_container_with(&src, &scheme, None, 1)
+                .unwrap()
+                .to_bytes(),
+        )
+        .unwrap();
+        let manifest = loader::f32_weight_manifest(&q);
+        let base = loader::prepare_weights(&manifest, &q, 1).unwrap();
+        for threads in [2usize, 8] {
+            let other = loader::prepare_weights(&manifest, &q, threads).unwrap();
+            assert_eq!(base.len(), other.len());
+            for ((t, a), b) in q.tensors.iter().zip(&base).zip(&other) {
+                assert_eq!(
+                    a.as_slice(),
+                    b.as_slice(),
+                    "scheme {scheme_name} tensor {} threads={threads}",
+                    t.name
+                );
+            }
+        }
+        // Decoded literals must equal the container's own dequantize.
+        for (t, p) in q.tensors.iter().zip(&base) {
+            assert_eq!(
+                le_f32(p.as_slice()),
+                q.dequantize(t).unwrap(),
+                "scheme {scheme_name} tensor {}",
+                t.name
+            );
+        }
+    }
+}
+
+#[test]
+fn loader_splits_single_giant_tensor_across_blocks() {
+    // One tensor bigger than the block-threading threshold: the fan-out
+    // gives all threads to block-level dequantize inside the single
+    // decode job, and the result must match the serial bytes exactly.
+    let cfg = ModelConfig::tiny_dense();
+    let n = 4 * parallel::PAR_MIN_WEIGHTS;
+    let mut rng = Pcg::new(0xB1607);
+    let vals: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
+    let payload = quant::quantize(QuantFormat::Q4K, &vals, None).unwrap();
+    let mut w = Writer::new(cfg, "q4_k");
+    w.add_tensor(
+        "blk.0.attn_output.weight",
+        ModuleClass::AttnOutput,
+        Some(0),
+        &[256, n / 256],
+        QuantFormat::Q4K,
+        &payload,
+    )
+    .unwrap();
+    let q = Container::from_bytes(w.to_bytes()).unwrap();
+    let manifest = loader::f32_weight_manifest(&q);
+    let base = loader::prepare_weights(&manifest, &q, 1).unwrap();
+    assert!(matches!(base[0], WeightBytes::Decoded(_)));
+    for threads in [2usize, 8] {
+        let other = loader::prepare_weights(&manifest, &q, threads).unwrap();
+        assert_eq!(base[0].as_slice(), other[0].as_slice(), "threads={threads}");
+    }
+    assert_eq!(le_f32(base[0].as_slice()), q.dequantize(&q.tensors[0]).unwrap());
+}
+
+#[test]
+fn loader_passthrough_when_formats_match() {
+    // A manifest that declares the container's own (quantized) formats
+    // gets raw payload passthrough — no decode, bytes borrowed as-is.
+    let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0xFACE).unwrap();
+    let scheme = builtin::scheme("q4_k_m").unwrap();
+    let q = Container::from_bytes(
+        quantize_container_with(&src, &scheme, None, 1)
+            .unwrap()
+            .to_bytes(),
+    )
+    .unwrap();
+    let mut manifest = loader::f32_weight_manifest(&q);
+    for (spec, t) in manifest.inputs.iter_mut().zip(&q.tensors) {
+        spec.format = Some(t.format.name().to_string());
+        spec.dtype = dsq::runtime::manifest::Dtype::U8;
+        spec.shape = vec![t.nbytes];
+    }
+    let payloads = loader::prepare_weights(&manifest, &q, 4).unwrap();
+    for (t, p) in q.tensors.iter().zip(&payloads) {
+        assert!(matches!(p, WeightBytes::Raw(_)), "tensor {}", t.name);
+        assert_eq!(p.as_slice(), q.bytes(t), "tensor {}", t.name);
+    }
+}
