@@ -2,17 +2,23 @@
 //! through the zero-copy `BlockCodec` entry points, serial vs
 //! block-parallel, with and without importance weighting — plus the
 //! scale-search benchmark (PR-1 two-pass baseline vs the current
-//! single-pass lane-chunked search for the Q3_K/Q4_K hot paths) and the
-//! headline container benchmark: multi-tensor Q4_K container
-//! quantization, serial vs tensor-parallel (the `dsq quantize` hot
-//! path; the serving hot path dequantizes at load or inside XLA).
+//! single-pass lane-chunked search for the Q3_K/Q4_K hot paths), the
+//! **decode-path benchmarks** (PR-2 scalar `decode_blocks` baseline vs
+//! the PR-3 lane kernels, per format and over a whole DQ3_K_M
+//! container, so the encode/decode asymmetry is visible in one run),
+//! the **fused `vec_dot_rows` vs dequantize-then-dot** comparison on a
+//! 7168-wide row batch (the serving matvec shape), and the headline
+//! container benchmark: multi-tensor Q4_K container quantization,
+//! serial vs tensor-parallel (the `dsq quantize` hot path).
 //!
 //! Pass `--json PATH` to additionally write every measurement (and the
 //! speedup summary) as a JSON report — CI uploads it as an artifact.
+//! Pass `--json-decode PATH` to also write the decode-side measurements
+//! alone (CI's `BENCH_decode.json`, seeding the decode perf trajectory).
 
-use dsq::container::{quantize_container_with, synthetic_f32_container};
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::model::ModelConfig;
-use dsq::quant::{self, parallel, scalar, QuantFormat};
+use dsq::quant::{self, kernels, parallel, scalar, QuantFormat};
 use dsq::scheme::builtin;
 use dsq::util::bench::{Bench, BenchResult};
 use dsq::util::json;
@@ -174,8 +180,15 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--json")
         .and_then(|i| argv.get(i + 1))
         .cloned();
+    let json_decode_path = argv
+        .iter()
+        .position(|a| a == "--json-decode")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let mut report: Vec<json::Value> = Vec::new();
     let mut summary: Vec<(String, f64)> = Vec::new();
+    let mut decode_report: Vec<json::Value> = Vec::new();
+    let mut decode_summary: Vec<(String, f64)> = Vec::new();
 
     let n = 256 * 1024; // 256K weights ≈ a large expert matrix slice
     let mut rng = Pcg::new(1);
@@ -274,6 +287,94 @@ fn main() -> anyhow::Result<()> {
     summary.push(("qx16_speedup".to_string(), qx_speedup));
     summary.push(("qkx32_speedup".to_string(), qkx_speedup));
 
+    // --- decode kernels (PR 3): the PR-2 scalar `decode_blocks` loops
+    // vs the lane-chunked batch kernels, pinned per arm so the numbers
+    // measure the kernels and not the dispatch. Throughput is GB/s of
+    // decoded f32, the unit the serving loader sees. The acceptance bar
+    // is ≥2× on Q4_K (and on the DQ3_K_M container below).
+    println!("\n# decode kernels: scalar reference vs lane kernels, {n} weights/iter\n");
+    let gibps = |bytes: u64, r: &BenchResult| bytes as f64 / r.median_ns * 1e9 / (1u64 << 30) as f64;
+    for fmt in [
+        QuantFormat::Q8_0,
+        QuantFormat::Q6K,
+        QuantFormat::Q5K,
+        QuantFormat::Q4K,
+        QuantFormat::Q3K,
+        QuantFormat::Q2K,
+    ] {
+        let mut packed = vec![0u8; fmt.row_bytes(n)?];
+        quant::quantize_into_with(fmt, &data, None, &mut packed, cores)?;
+        let mut decoded = vec![0f32; n];
+        let bytes = (n * 4) as u64;
+        let scalar_arm = Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("decode-scalar/{}", fmt.name()), || {
+                kernels::decode_blocks_pinned(fmt, &packed, &mut decoded, false)
+            });
+        let lane_arm = Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("decode-lanes/{}", fmt.name()), || {
+                kernels::decode_blocks_pinned(fmt, &packed, &mut decoded, true)
+            });
+        let speedup = scalar_arm.median_ns / lane_arm.median_ns;
+        println!(
+            "decode {:<5} scalar {:>6.2} GiB/s → lanes {:>6.2} GiB/s  ({speedup:.2}x)",
+            fmt.name(),
+            gibps(bytes, &scalar_arm),
+            gibps(bytes, &lane_arm),
+        );
+        decode_report.push(result_json(&scalar_arm));
+        decode_report.push(result_json(&lane_arm));
+        decode_summary.push((format!("decode_{}_speedup", fmt.name()), speedup));
+    }
+
+    // --- fused vec_dot_rows vs dequantize-then-dot on the serving
+    // matvec shape: 7168-wide rows (the 671B hidden size). The fused
+    // path must win — it reads packed bytes once and never materializes
+    // the f32 matrix.
+    let hidden = 7168usize;
+    let rows = 128usize;
+    println!("\n# fused quantized matvec: {rows} rows × {hidden} weights\n");
+    for fmt in [QuantFormat::Q4K, QuantFormat::Q3K] {
+        let mut rng = Pcg::new(0xD07 + fmt.block_bytes() as u64);
+        let wdata: Vec<f32> = (0..rows * hidden).map(|_| rng.next_normal() * 0.05).collect();
+        let x: Vec<f32> = (0..hidden).map(|_| rng.next_normal()).collect();
+        let mut packed = vec![0u8; fmt.row_bytes(rows * hidden)?];
+        quant::quantize_into_with(fmt, &wdata, None, &mut packed, cores)?;
+        let packed_bytes = packed.len() as u64;
+        let mut out = vec![0f32; rows];
+        let fused = Bench::new()
+            .throughput_bytes(packed_bytes)
+            .run(&format!("vec_dot_rows/{}", fmt.name()), || {
+                quant::vec_dot_rows_with(fmt, &packed, &x, &mut out, 1).unwrap()
+            });
+        let fused_par = Bench::new()
+            .throughput_bytes(packed_bytes)
+            .run(&format!("vec_dot_rows-par{cores}/{}", fmt.name()), || {
+                quant::vec_dot_rows_with(fmt, &packed, &x, &mut out, cores).unwrap()
+            });
+        let mut w = vec![0f32; rows * hidden];
+        let dequant_dot = Bench::new()
+            .throughput_bytes(packed_bytes)
+            .run(&format!("dequant-then-dot/{}", fmt.name()), || {
+                quant::dequantize_into_with(fmt, &packed, &mut w, 1).unwrap();
+                for (o, row) in out.iter_mut().zip(w.chunks_exact(hidden)) {
+                    *o = kernels::dot_lanes(row, &x);
+                }
+            });
+        let speedup = dequant_dot.median_ns / fused.median_ns;
+        println!(
+            "matvec {:<5} fused beats dequantize-then-dot by {speedup:.2}x \
+             (parallel fused: {:.2}x over serial fused)",
+            fmt.name(),
+            fused.median_ns / fused_par.median_ns,
+        );
+        decode_report.push(result_json(&fused));
+        decode_report.push(result_json(&fused_par));
+        decode_report.push(result_json(&dequant_dot));
+        decode_summary.push((format!("vecdot_vs_dequant_dot_{}", fmt.name()), speedup));
+    }
+
     // --- the acceptance benchmark: multi-tensor Q4_K container ---
     // Serial (1 thread) vs tensor-parallel (all cores) quantization of a
     // deterministic tiny-moe f32 checkpoint under the pure-Q4_K scheme.
@@ -313,6 +414,67 @@ fn main() -> anyhow::Result<()> {
     summary.push(("container_q4k_serial_s".to_string(), serial_s));
     summary.push(("container_q4k_parallel_s".to_string(), par_s));
     summary.push(("container_q4k_speedup".to_string(), serial_s / par_s));
+
+    // --- whole-container decode under the paper's DQ3_K_M recipe: the
+    // mixed q6_k/q4_k/q3_k payloads the serving loader actually walks,
+    // decoded tensor by tensor on each pinned arm.
+    let dq3 = Container::from_bytes(
+        quantize_container_with(&src, &builtin::scheme("dq3_k_m")?, None, cores)?.to_bytes(),
+    )?;
+    let total_weights: usize = dq3.tensors.iter().map(|t| t.n_elems()).sum();
+    let max_weights = dq3.tensors.iter().map(|t| t.n_elems()).max().unwrap_or(0);
+    let mut scratch = vec![0f32; max_weights];
+    println!(
+        "\n# container decode: dq3_k_m tiny-moe ({} tensors, {total_weights} weights)\n",
+        dq3.tensors.len()
+    );
+    let bytes = (total_weights * 4) as u64;
+    let mut arm_results = Vec::new();
+    for (arm, label) in [(false, "scalar"), (true, "lanes")] {
+        let r = Bench::new()
+            .throughput_bytes(bytes)
+            .run(&format!("container-decode-{label}/dq3_k_m"), || {
+                for t in &dq3.tensors {
+                    kernels::decode_blocks_pinned(
+                        t.format,
+                        dq3.bytes(t),
+                        &mut scratch[..t.n_elems()],
+                        arm,
+                    );
+                }
+            });
+        arm_results.push(r);
+    }
+    let dq3_speedup = arm_results[0].median_ns / arm_results[1].median_ns;
+    println!(
+        "decode dq3_k_m container: scalar {:>6.2} GiB/s → lanes {:>6.2} GiB/s  ({dq3_speedup:.2}x)",
+        gibps(bytes, &arm_results[0]),
+        gibps(bytes, &arm_results[1]),
+    );
+    for r in &arm_results {
+        decode_report.push(result_json(r));
+    }
+    decode_summary.push(("decode_dq3_k_m_speedup".to_string(), dq3_speedup));
+
+    // Decode measurements ride the main report too.
+    report.extend(decode_report.iter().cloned());
+    summary.extend(decode_summary.iter().cloned());
+
+    if let Some(path) = json_decode_path {
+        let fields: Vec<(&str, json::Value)> = decode_summary
+            .iter()
+            .map(|(k, v)| (k.as_str(), json::num(*v)))
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", json::str_("codec-decode")),
+            ("cores", json::num(cores as f64)),
+            ("weights_per_iter", json::num(n as f64)),
+            ("results", json::Value::Arr(decode_report.clone())),
+            ("summary", json::obj(fields)),
+        ]);
+        std::fs::write(&path, json::to_string_pretty(&doc))?;
+        eprintln!("wrote decode bench JSON → {path}");
+    }
 
     if let Some(path) = json_path {
         let summary_fields: Vec<(&str, json::Value)> = summary

@@ -1,0 +1,1050 @@
+#!/usr/bin/env python3
+"""Offline golden-fixture blessing for `rust/tests/golden/`.
+
+`tests/golden_vectors.rs` blesses its fixtures on first run, which needs
+a Rust toolchain. This tool produces the *identical* bytes from Python —
+a bit-exact mirror of the Rust encode pipeline — so the fixtures can be
+blessed (and the CI byte-drift gate armed) from a toolchain-less host.
+
+The authoritative path remains `cargo test --release --test
+golden_vectors`: if this mirror and the Rust encoder ever disagree, the
+golden test fails and the fixtures must be re-blessed from Rust (delete
++ rerun). The mirror reproduces, operation for operation in IEEE f32:
+
+- `util::rng::Pcg` (splitmix64; next_f32 / next_f64 / next_normal),
+- `util::f16` (round-to-nearest-even f32→f16, exact f16→f32),
+- the lane-chunked scale searches `make_qx_quants` / `make_qkx_quants`
+  (element `i` → lane `i % 8`, sequential per-lane f32 sums, `hsum`
+  fold, `qround` ties-away clamp — see `rust/src/quant/scalar.rs`),
+- every block packer (`q2_k` … `q8_0`, raw `f32`/`f16`),
+- `synthetic_f32_container` + `Scheme::plan` + the `.dsq` writer
+  (compact JSON, 64-byte tensor / 4096-byte data alignment).
+
+Every fixture is additionally cross-checked against the *independent*
+mirrors that already live in `python/compile/` (quants.py dequantizer,
+schemes.py assignment, container.py reader), and the vectorized search
+is verified sub-block-by-sub-block against a second, scalar
+transcription of the Rust code before anything is written.
+
+Usage:  python3 python/tools/bless_goldens.py [--check-only]
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "python"))
+
+from compile import quants as pyquants  # noqa: E402
+from compile import schemes as pyschemes  # noqa: E402
+
+GOLDEN_DIR = REPO / "rust" / "tests" / "golden"
+
+F32 = np.float32
+MASK64 = (1 << 64) - 1
+LANES = 8
+
+# ---------------------------------------------------------------------------
+# util::rng::Pcg — exact splitmix64 mirror (see rust/src/util/rng.rs)
+# ---------------------------------------------------------------------------
+
+
+class Pcg:
+    GAMMA = 0x9E3779B97F4A7C15
+
+    def __init__(self, seed: int):
+        self.state = (seed + self.GAMMA) & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + self.GAMMA) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_f32(self) -> np.float32:
+        # (u >> 40) as f32 / (1 << 24) as f32 — both conversions exact.
+        return F32(F32(self.next_u64() >> 40) / F32(16777216.0))
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) / 9007199254740992.0
+
+    def next_normal(self) -> np.float32:
+        # ((-2·ln u1).sqrt() · cos(2π·u2)) as f32, all in f64 libm —
+        # CPython's math.log/cos call the same libm as Rust's f64 ops.
+        u1 = max(self.next_f64(), 1e-12)
+        u2 = self.next_f64()
+        return F32(math.sqrt(-2.0 * math.log(u1)) * math.cos((2.0 * math.pi) * u2))
+
+    def normals(self, n: int, scale: float) -> np.ndarray:
+        s = F32(scale)
+        return np.array([F32(self.next_normal() * s) for _ in range(n)], dtype=F32)
+
+
+# ---------------------------------------------------------------------------
+# util::f16 — exact integer-algorithm port (round to nearest even)
+# ---------------------------------------------------------------------------
+
+
+def f32_to_f16_bits(v: np.ndarray) -> np.ndarray:
+    """Vectorized port of `f32_to_f16_bits` (rust/src/util/f16.rs)."""
+    x = np.ascontiguousarray(v, dtype=F32).view(np.uint32)
+    sign = ((x >> 16) & 0x8000).astype(np.uint32)
+    exp = ((x >> 23) & 0xFF).astype(np.int64)
+    man = (x & 0x007FFFFF).astype(np.uint32)
+    out = np.zeros(x.shape, dtype=np.uint32)
+
+    unbiased = exp - 127
+    # Normal range.
+    norm = (exp != 255) & (unbiased >= -14) & (unbiased <= 15)
+    h = sign | (((unbiased + 15).astype(np.uint32) << 10) & 0xFFFF) | (man >> 13)
+    dropped = man & 0x1FFF
+    h = h + (((dropped > 0x1000) | ((dropped == 0x1000) & ((h & 1) == 1)))).astype(
+        np.uint32
+    )
+    out = np.where(norm, h, out)
+    # Denormal halves.
+    den = (exp != 255) & (unbiased >= -24) & (unbiased < -14)
+    shift = np.where(den, (-14 - unbiased), 0).astype(np.uint32)
+    full = man | 0x00800000
+    half_man = full >> (13 + shift)
+    dmask = (np.uint64(1) << (13 + shift).astype(np.uint64)) - np.uint64(1)
+    ddropped = full.astype(np.uint64) & dmask
+    halfway = np.uint64(1) << (12 + shift).astype(np.uint64)
+    hd = half_man + (
+        (ddropped > halfway) | ((ddropped == halfway) & ((half_man & 1) == 1))
+    ).astype(np.uint32)
+    out = np.where(den, sign | hd, out)
+    # Underflow to signed zero / overflow to inf / inf-nan inputs.
+    out = np.where((exp != 255) & (unbiased < -24), sign, out)
+    out = np.where((exp != 255) & (unbiased > 15), sign | 0x7C00, out)
+    out = np.where((exp == 255) & (man == 0), sign | 0x7C00, out)
+    out = np.where(
+        (exp == 255) & (man != 0), sign | 0x7E00 | ((man >> 13) & 0x01FF), out
+    )
+    return (out & 0xFFFF).astype(np.uint16)
+
+
+def f16_bits_to_f32(bits: np.ndarray) -> np.ndarray:
+    # IEEE widening is exact; numpy's view+astype implements it exactly.
+    return np.asarray(bits, dtype=np.uint16).view(np.float16).astype(F32)
+
+
+def round_f16(v: np.ndarray) -> np.ndarray:
+    """get_f16(put_f16(v)) — the stored-scale roundtrip."""
+    return f16_bits_to_f32(f32_to_f16_bits(v))
+
+
+# ---------------------------------------------------------------------------
+# quant::simd / quant::scalar — qround, lane sums, scale searches
+# ---------------------------------------------------------------------------
+
+
+def qround(v: np.ndarray, lo: float, hi: float) -> np.ndarray:
+    """`v.round().max(lo).min(hi)` — f32 round, ties away from zero.
+    (Rust f32::max/min ignore NaN operands, so a NaN input yields `lo`.)"""
+    v64 = np.asarray(v, dtype=np.float64)
+    r = np.where(v64 >= 0.0, np.floor(v64 + 0.5), np.ceil(v64 - 0.5)).astype(F32)
+    r = np.where(np.isnan(v64), F32(lo), r)
+    return np.minimum(np.maximum(r, F32(lo)), F32(hi))
+
+
+def nearest_int(v: np.ndarray) -> np.ndarray:
+    """`x.round() as i32` — ties away from zero, with Rust's saturating
+    float→int cast semantics (±inf clamp to i32 bounds, NaN → 0)."""
+    v64 = np.asarray(v, dtype=np.float64)
+    r = np.where(v64 >= 0.0, np.floor(v64 + 0.5), np.ceil(v64 - 0.5))
+    r = np.where(np.isnan(r), 0.0, np.clip(r, -2147483648.0, 2147483647.0))
+    return r.astype(np.int64)
+
+
+def _lane_hsum(acc):
+    """simd::hsum — sequential fold over the 8 lanes."""
+    s = acc[..., 0]
+    for lane in range(1, LANES):
+        s = s + acc[..., lane]
+    return s
+
+
+def _lane_sums(terms):
+    """Accumulate [S, n] f32 term arrays in the canonical lane order:
+    element i → lane i%8, sequential per-lane sums, hsum fold.
+    Returns one [S] f32 array per input term array."""
+    out = []
+    for t in terms:
+        sblocks, n = t.shape
+        chunks = t.reshape(sblocks, n // LANES, LANES)
+        acc = np.zeros((sblocks, LANES), dtype=F32)
+        for c in range(n // LANES):
+            acc = acc + chunks[:, c, :]
+        out.append(_lane_hsum(acc))
+    return out
+
+
+def make_qx_quants_scales(x: np.ndarray, nmax: int, weights) -> np.ndarray:
+    """Vectorized `make_qx_quants` over [S, n] sub-blocks, returning the
+    per-sub-block scale. (The emitted codes are re-rounded by every
+    caller against the quantized scale, so only the scale matters.)"""
+    S, n = x.shape
+    absx = np.abs(x)
+    amax = np.max(absx, axis=1)
+    # Signed value at the first index attaining the max |x| (the Rust
+    # fold only replaces on strictly-greater).
+    maxv = x[np.arange(S), np.argmax(absx, axis=1)]
+    degenerate = amax < F32(1e-30)
+    safe_max = np.where(degenerate, F32(1.0), maxv)
+
+    lo, hi = -float(nmax), float(nmax - 1)
+    if weights is None:
+        w = x * x + F32(1e-8)
+    else:
+        w = weights + F32(1e-10)
+
+    best_scale = np.zeros(S, dtype=F32)
+    best_metric = np.zeros(S, dtype=F32)
+    nmax_f = F32(float(nmax))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        for step in range(-9, 10):
+            cand = F32(nmax_f + F32(F32(0.1) * F32(float(step))))
+            iscale = (-cand) / safe_max
+            q = qround(iscale[:, None] * x, lo, hi)
+            sumlx, suml2 = _lane_sums([(w * x) * q, (w * q) * q])
+            skip = suml2 <= 0.0
+            scale = sumlx / suml2
+            metric = scale * sumlx
+            better = (~skip) & (metric > best_metric)
+            best_metric = np.where(better, metric, best_metric)
+            best_scale = np.where(better, scale, best_scale)
+    fallback = best_scale == 0.0
+    best_scale = np.where(fallback, maxv / (-nmax_f), best_scale)
+    return np.where(degenerate, F32(0.0), best_scale).astype(F32)
+
+
+def make_qkx_quants_scales(x: np.ndarray, nmax: int, weights):
+    """Vectorized `make_qkx_quants` over [S, n] sub-blocks, returning
+    per-sub-block `(scale, min)` (codes are re-rounded by callers)."""
+    S, n = x.shape
+    vmin0 = np.min(x, axis=1)
+    vmax = np.max(x, axis=1)
+    degenerate = vmax <= (vmin0 + F32(1e-30))
+    deg_scale = np.where(vmin0 >= 0.0, vmin0 / F32(float(nmax)), F32(0.0))
+    deg_min = np.where(vmin0 >= 0.0, F32(0.0), -vmin0)
+
+    vmin = np.where(vmin0 > 0.0, F32(0.0), vmin0)
+    span = vmax - vmin
+    safe_span = np.where(degenerate, F32(1.0), span)
+    hi = float(nmax)
+    if weights is None:
+        w = x * x + F32(1e-8)
+    else:
+        w = weights + F32(1e-10)
+
+    nmax_f = F32(float(nmax))
+    best = span / nmax_f
+    best_min = -vmin
+    best_err = np.full(S, np.inf, dtype=F32)
+    two = F32(2.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        for step in range(-5, 9):
+            cand = F32(F32(F32(0.1) * F32(float(step))) + nmax_f)
+            iscale = cand / safe_span
+            q = qround(iscale[:, None] * (x - vmin[:, None]), 0.0, hi)
+            sw, sx, sl, sl2, sxl = _lane_sums(
+                [w, w * x, w * q, (w * q) * q, (w * x) * q]
+            )
+            det = (sw * sl2) - (sl * sl)
+            skip = det <= 0.0
+            scale = ((sw * sxl) - (sx * sl)) / det
+            minv = ((sl2 * sx) - (sl * sxl)) / det
+            pos = minv > 0.0
+            alt = np.where(sl2 > 0.0, sxl / sl2, scale)
+            scale = np.where(pos, alt, scale)
+            minv = np.where(pos, F32(0.0), minv)
+            skip = skip | (scale <= 0.0)
+            err = (
+                ((scale * scale) * sl2)
+                + (((two * scale) * minv) * sl)
+                + ((minv * minv) * sw)
+                - ((two * scale) * sxl)
+                - ((two * minv) * sx)
+            )
+            better = (~skip) & (err < best_err)
+            best = np.where(better, scale, best)
+            best_min = np.where(better, -minv, best_min)
+            best_err = np.where(better, err, best_err)
+    scale = np.where(degenerate, deg_scale, best).astype(F32)
+    mn = np.where(degenerate, deg_min, best_min).astype(F32)
+    return scale, mn
+
+
+# --- scalar transcription (independent check of the vectorized search) ---
+
+
+def _hsum_scalar(acc):
+    s = F32(0.0)
+    for v in acc:
+        s = F32(s + v)
+    return s
+
+
+def _qround_scalar(v, lo, hi):
+    vv = float(v)
+    r = math.floor(vv + 0.5) if vv >= 0.0 else math.ceil(vv - 0.5)
+    return F32(min(max(F32(r), F32(lo)), F32(hi)))
+
+
+def make_qx_quants_scalar(x, nmax, weights):
+    amax = F32(0.0)
+    maxv = F32(0.0)
+    for v in x:
+        if abs(v) > amax:
+            amax = abs(v)
+            maxv = v
+    if amax < F32(1e-30):
+        return F32(0.0)
+    lo, hi = -float(nmax), float(nmax - 1)
+    best_scale = F32(0.0)
+    best_metric = F32(0.0)
+    for step in range(-9, 10):
+        iscale = F32(-F32(F32(float(nmax)) + F32(F32(0.1) * F32(float(step)))) / maxv)
+        sumlx = [F32(0.0)] * LANES
+        suml2 = [F32(0.0)] * LANES
+        for i, xv in enumerate(x):
+            q = _qround_scalar(F32(iscale * xv), lo, hi)
+            w = (
+                F32(F32(xv * xv) + F32(1e-8))
+                if weights is None
+                else F32(weights[i] + F32(1e-10))
+            )
+            lane = i % LANES
+            sumlx[lane] = F32(sumlx[lane] + F32(F32(w * xv) * q))
+            suml2[lane] = F32(suml2[lane] + F32(F32(w * q) * q))
+        slx, sl2 = _hsum_scalar(sumlx), _hsum_scalar(suml2)
+        if sl2 <= 0.0:
+            continue
+        scale = F32(slx / sl2)
+        metric = F32(scale * slx)
+        if metric > best_metric:
+            best_metric = metric
+            best_scale = scale
+    if best_scale == 0.0:
+        best_scale = F32(maxv / -F32(float(nmax)))
+    return best_scale
+
+
+def make_qkx_quants_scalar(x, nmax, weights):
+    vmin = x[0]
+    vmax = x[0]
+    for v in x:
+        vmin = min(vmin, v)
+        vmax = max(vmax, v)
+    if vmax <= F32(vmin + F32(1e-30)):
+        if vmin >= 0.0:
+            return F32(vmin / F32(float(nmax))), F32(0.0)
+        return F32(0.0), F32(-vmin)
+    if vmin > 0.0:
+        vmin = F32(0.0)
+    hi = float(nmax)
+    best = F32(F32(vmax - vmin) / F32(float(nmax)))
+    best_min = F32(-vmin)
+    best_err = F32(np.inf)
+    for step in range(-5, 9):
+        iscale = F32(
+            F32(F32(F32(0.1) * F32(float(step))) + F32(float(nmax))) / F32(vmax - vmin)
+        )
+        sw = [F32(0.0)] * LANES
+        sx = [F32(0.0)] * LANES
+        sl = [F32(0.0)] * LANES
+        sl2 = [F32(0.0)] * LANES
+        sxl = [F32(0.0)] * LANES
+        for i, xv in enumerate(x):
+            q = _qround_scalar(F32(iscale * F32(xv - vmin)), 0.0, hi)
+            w = (
+                F32(F32(xv * xv) + F32(1e-8))
+                if weights is None
+                else F32(weights[i] + F32(1e-10))
+            )
+            lane = i % LANES
+            sw[lane] = F32(sw[lane] + w)
+            sx[lane] = F32(sx[lane] + F32(w * xv))
+            sl[lane] = F32(sl[lane] + F32(w * q))
+            sl2[lane] = F32(sl2[lane] + F32(F32(w * q) * q))
+            sxl[lane] = F32(sxl[lane] + F32(F32(w * xv) * q))
+        s_w, s_x, s_l, s_l2, s_xl = (
+            _hsum_scalar(sw),
+            _hsum_scalar(sx),
+            _hsum_scalar(sl),
+            _hsum_scalar(sl2),
+            _hsum_scalar(sxl),
+        )
+        det = F32(F32(s_w * s_l2) - F32(s_l * s_l))
+        if det <= 0.0:
+            continue
+        scale = F32(F32(F32(s_w * s_xl) - F32(s_x * s_l)) / det)
+        minv = F32(F32(F32(s_l2 * s_x) - F32(s_l * s_xl)) / det)
+        if minv > 0.0:
+            minv = F32(0.0)
+            scale = F32(s_xl / s_l2) if s_l2 > 0.0 else scale
+        if scale <= 0.0:
+            continue
+        err = F32(
+            F32(
+                F32(
+                    F32(F32(F32(scale * scale) * s_l2))
+                    + F32(F32(F32(F32(2.0) * scale) * minv) * s_l)
+                )
+                + F32(F32(minv * minv) * s_w)
+            )
+            - F32(F32(F32(2.0) * scale) * s_xl)
+        )
+        err = F32(err - F32(F32(F32(2.0) * minv) * s_x))
+        if err < best_err:
+            best_err = err
+            best = scale
+            best_min = F32(-minv)
+    return best, best_min
+
+
+# ---------------------------------------------------------------------------
+# Block packers (mirrors of rust/src/quant/{q2k,q3k,q4k,q5k,q6k,q8_0,raw}.rs)
+# ---------------------------------------------------------------------------
+
+QK_K = 256
+QK8_0 = 32
+
+
+def _sub(x: np.ndarray, sub: int) -> np.ndarray:
+    """[nblocks, 256] → [nblocks·(256/sub), sub] sub-block view."""
+    return x.reshape(-1, sub)
+
+
+def encode_q8_0(x: np.ndarray, _imp) -> np.ndarray:
+    xb = x.reshape(-1, QK8_0)
+    nb = xb.shape[0]
+    amax = np.max(np.abs(xb), axis=1)
+    d = amax / F32(127.0)
+    inv0 = np.where(d > 0.0, F32(1.0) / np.where(d > 0.0, d, F32(1.0)), F32(0.0))
+    dbits = f32_to_f16_bits(d)
+    ds = f16_bits_to_f32(dbits)
+    inv = np.where(ds > 0.0, F32(1.0) / np.where(ds > 0.0, ds, F32(1.0)), inv0)
+    codes = np.clip(nearest_int(xb * inv[:, None]), -127, 127).astype(np.int8)
+    out = np.zeros((nb, 34), dtype=np.uint8)
+    out[:, 0] = (dbits & 0xFF).astype(np.uint8)
+    out[:, 1] = (dbits >> 8).astype(np.uint8)
+    out[:, 2:] = codes.view(np.uint8)
+    return out.reshape(-1)
+
+
+def _qkx_format(x, imp, nmax, nsc):
+    """Shared q2k/q4k/q5k head: per-sub-block (scale, min) search, f16
+    super-scales (`max/nsc`), quantized sub-scales, re-rounded codes.
+    Returns (d, dmin, sc, mn, codes[nb, 256])."""
+    sub = QK_K // (16 if nmax == 3 else 8)
+    xs = _sub(x, sub)
+    ws = None if imp is None else _sub(imp, sub)
+    scales, mins = make_qkx_quants_scales(xs, nmax, ws)
+    nsub = QK_K // sub
+    scales = scales.reshape(-1, nsub)
+    mins = mins.reshape(-1, nsub)
+    max_scale = np.max(scales, axis=1)
+    max_min = np.max(mins, axis=1)
+    d_raw = np.where(max_scale > 0.0, max_scale / F32(float(nsc)), F32(0.0))
+    dmin_raw = np.where(max_min > 0.0, max_min / F32(float(nsc)), F32(0.0))
+    dbits = f32_to_f16_bits(d_raw)
+    dminbits = f32_to_f16_bits(dmin_raw)
+    d = f16_bits_to_f32(dbits)
+    dmin = f16_bits_to_f32(dminbits)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sc = np.where(
+            (d > 0.0)[:, None],
+            np.clip(nearest_int(scales / np.where(d > 0.0, d, F32(1.0))[:, None]), 0, nsc),
+            0,
+        ).astype(np.uint8)
+        mn = np.where(
+            (dmin > 0.0)[:, None],
+            np.clip(
+                nearest_int(mins / np.where(dmin > 0.0, dmin, F32(1.0))[:, None]), 0, nsc
+            ),
+            0,
+        ).astype(np.uint8)
+    sd = d[:, None] * sc.astype(F32)  # [nb, nsub]
+    sm = dmin[:, None] * mn.astype(F32)
+    xb = x.reshape(-1, nsub, sub)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        codes = np.clip(
+            nearest_int((xb + sm[:, :, None]) / sd[:, :, None]), 0, nmax
+        ).astype(np.uint8)
+    codes = np.where((sd > 0.0)[:, :, None], codes, np.uint8(0)).reshape(-1, QK_K)
+    return dbits, dminbits, sc, mn, codes
+
+
+def _pack_scale_min_6(sc, mn):
+    """q4k::pack_scale_min_6 — [nb, 8]+[nb, 8] 6-bit values → [nb, 12]."""
+    nb = sc.shape[0]
+    out = np.zeros((nb, 12), dtype=np.uint8)
+    out[:, :8] = (sc & 0x3F) | ((mn & 0x03) << 6)
+    for k in range(4):
+        out[:, 8 + k] = (mn[:, 2 * k] >> 2) | ((mn[:, 2 * k + 1] >> 2) << 4)
+    return out
+
+
+def encode_q4k_q5k(x, imp, nmax, block_bytes, qs_off, high_bit):
+    dbits, dminbits, sc, mn, codes = _qkx_format(x, imp, nmax, 63)
+    nb = codes.shape[0]
+    out = np.zeros((nb, block_bytes), dtype=np.uint8)
+    out[:, 0] = (dbits & 0xFF).astype(np.uint8)
+    out[:, 1] = (dbits >> 8).astype(np.uint8)
+    out[:, 2] = (dminbits & 0xFF).astype(np.uint8)
+    out[:, 3] = (dminbits >> 8).astype(np.uint8)
+    out[:, 4:16] = _pack_scale_min_6(sc, mn)
+    lo = codes & 0x0F
+    out[:, qs_off : qs_off + 128] = lo[:, 0::2] | (lo[:, 1::2] << 4)
+    if high_bit:
+        hi = (codes >> 4) & 1
+        qh = np.zeros((nb, 32), dtype=np.uint8)
+        for bit in range(8):
+            qh |= hi[:, bit::8] << bit
+        out[:, 16:48] = qh
+    return out.reshape(-1)
+
+
+def encode_q4k(x, imp):
+    return encode_q4k_q5k(x, imp, 15, 144, 16, False)
+
+
+def encode_q5k(x, imp):
+    return encode_q4k_q5k(x, imp, 31, 176, 48, True)
+
+
+def encode_q2k(x, imp):
+    dbits, dminbits, sc, mn, codes = _qkx_format(x, imp, 3, 15)
+    nb = codes.shape[0]
+    out = np.zeros((nb, 84), dtype=np.uint8)
+    out[:, :16] = sc | (mn << 4)
+    lo = codes & 0x03
+    out[:, 16:80] = lo[:, 0::4] | (lo[:, 1::4] << 2) | (lo[:, 2::4] << 4) | (lo[:, 3::4] << 6)
+    out[:, 80] = (dbits & 0xFF).astype(np.uint8)
+    out[:, 81] = (dbits >> 8).astype(np.uint8)
+    out[:, 82] = (dminbits & 0xFF).astype(np.uint8)
+    out[:, 83] = (dminbits >> 8).astype(np.uint8)
+    return out.reshape(-1)
+
+
+def _qx_format(x, imp, nmax):
+    """Shared q3k/q6k head: symmetric per-sub-block scale search.
+    Returns [nb, 16] scales (f32)."""
+    xs = _sub(x, 16)
+    ws = None if imp is None else _sub(imp, 16)
+    scales = make_qx_quants_scales(xs, nmax, ws)
+    return scales.reshape(-1, 16)
+
+
+def _pack_scales_6x16(sc):
+    """q3k::pack_scales_6x16 — [nb, 16] 6-bit values → [nb, 12]."""
+    nb = sc.shape[0]
+    out = np.zeros((nb, 12), dtype=np.uint8)
+    for j in range(8):
+        out[:, j] = (sc[:, j] & 0x0F) | ((sc[:, 8 + j] & 0x0F) << 4)
+    for k in range(4):
+        b = np.zeros(nb, dtype=np.uint8)
+        for t in range(4):
+            b |= ((sc[:, 4 * t + k] >> 4) & 0x03) << (2 * t)
+        out[:, 8 + k] = b
+    return out
+
+
+def _pack_codes_q3k(codes):
+    nb = codes.shape[0]
+    out = np.zeros((nb, 96), dtype=np.uint8)  # [12..108) = hmask32 + qs64
+    lo = codes & 0x03
+    hi = (codes >> 2) & 0x01
+    hm = np.zeros((nb, 32), dtype=np.uint8)
+    for bit in range(8):
+        hm |= hi[:, bit::8] << bit
+    qs = lo[:, 0::4] | (lo[:, 1::4] << 2) | (lo[:, 2::4] << 4) | (lo[:, 3::4] << 6)
+    out[:, 0:32] = hm
+    out[:, 32:96] = qs
+    return out
+
+
+def encode_q3k(x, imp):
+    scales = _qx_format(x, imp, 4)  # [nb, 16]
+    nb = scales.shape[0]
+    max_abs = np.max(np.abs(scales), axis=1)
+    out = np.zeros((nb, 110), dtype=np.uint8)
+    zero = max_abs < F32(1e-30)
+    d_raw = max_abs / F32(31.0)
+    dbits = f32_to_f16_bits(d_raw)
+    d = f16_bits_to_f32(dbits)
+    invd = np.where(d > 0.0, F32(1.0) / np.where(d > 0.0, d, F32(1.0)), F32(0.0))
+    isc = np.clip(nearest_int(scales * invd[:, None]), -32, 31)
+    sc6 = (isc + 32).astype(np.uint8)
+    sd = d[:, None] * isc.astype(F32)  # [nb, 16]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = np.where(sd != 0.0, F32(1.0) / np.where(sd != 0.0, sd, F32(1.0)), F32(0.0))
+    xb = x.reshape(-1, 16, 16)
+    codes = np.clip(nearest_int(xb * inv[:, :, None]), -4, 3) + 4
+    codes = np.where((sd != 0.0)[:, :, None], codes, 4).astype(np.uint8).reshape(-1, QK_K)
+    # Degenerate all-zero super-blocks: sc = 32, codes = 4.
+    sc6 = np.where(zero[:, None], np.uint8(32), sc6)
+    codes = np.where(zero[:, None], np.uint8(4), codes)
+    dbits = np.where(zero, np.uint16(0), dbits)
+    out[:, 0:12] = _pack_scales_6x16(sc6)
+    out[:, 12:108] = _pack_codes_q3k(codes)
+    out[:, 108] = (dbits & 0xFF).astype(np.uint8)
+    out[:, 109] = (dbits >> 8).astype(np.uint8)
+    return out.reshape(-1)
+
+
+def encode_q6k(x, imp):
+    scales = _qx_format(x, imp, 32)  # [nb, 16]
+    nb = scales.shape[0]
+    max_abs = np.max(np.abs(scales), axis=1)
+    zero = max_abs < F32(1e-30)
+    d_raw = max_abs / F32(127.0)
+    dbits = f32_to_f16_bits(d_raw)
+    d = f16_bits_to_f32(dbits)
+    invd = np.where(d > 0.0, F32(1.0) / np.where(d > 0.0, d, F32(1.0)), F32(0.0))
+    isc = np.clip(nearest_int(scales * invd[:, None]), -127, 127)
+    sd = d[:, None] * isc.astype(F32)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = np.where(sd != 0.0, F32(1.0) / np.where(sd != 0.0, sd, F32(1.0)), F32(0.0))
+    xb = x.reshape(-1, 16, 16)
+    codes = np.clip(nearest_int(xb * inv[:, :, None]), -32, 31) + 32
+    codes = np.where((sd != 0.0)[:, :, None], codes, 32).astype(np.uint8).reshape(-1, QK_K)
+    out = np.zeros((nb, 210), dtype=np.uint8)
+    lo = codes & 0x0F
+    hi = (codes >> 4) & 0x03
+    out[:, 0:128] = lo[:, 0::2] | (lo[:, 1::2] << 4)
+    out[:, 128:192] = (
+        hi[:, 0::4] | (hi[:, 1::4] << 2) | (hi[:, 2::4] << 4) | (hi[:, 3::4] << 6)
+    )
+    out[:, 192:208] = isc.astype(np.int8).view(np.uint8)
+    out[:, 208] = (dbits & 0xFF).astype(np.uint8)
+    out[:, 209] = (dbits >> 8).astype(np.uint8)
+    # Degenerate super-blocks are entirely zeroed (`ob.fill(0)`).
+    out[zero] = 0
+    return out.reshape(-1)
+
+
+def encode_f32(x, _imp):
+    return np.ascontiguousarray(x, dtype=F32).view(np.uint8).copy()
+
+
+def encode_f16(x, _imp):
+    return f32_to_f16_bits(x).view(np.uint8).copy()
+
+
+ENCODERS = {
+    "f32": encode_f32,
+    "f16": encode_f16,
+    "q8_0": encode_q8_0,
+    "q6_k": encode_q6k,
+    "q5_k": encode_q5k,
+    "q4_k": encode_q4k,
+    "q3_k": encode_q3k,
+    "q2_k": encode_q2k,
+}
+
+BLOCK_BYTES = pyquants.BLOCK_BYTES
+BLOCK_WEIGHTS = dict(pyquants.BLOCK_WEIGHTS)
+BLOCK_WEIGHTS["f16"] = 1  # quants.py's table entry is a quirky `2 // 2`
+
+
+def quantize(fmt: str, data: np.ndarray, imp=None) -> np.ndarray:
+    payload = ENCODERS[fmt](data, imp)
+    expect = pyquants.row_bytes(fmt, data.size)
+    assert payload.size == expect, (fmt, payload.size, expect)
+    return payload
+
+
+# ---------------------------------------------------------------------------
+# Fixture generation (mirrors tests/golden_vectors.rs)
+# ---------------------------------------------------------------------------
+
+NBLOCKS = 3
+FORMATS = ["f32", "f16", "q8_0", "q6_k", "q5_k", "q4_k", "q3_k", "q2_k"]
+
+
+def golden_input(fmt: str):
+    n = BLOCK_WEIGHTS[fmt] * NBLOCKS
+    rng = Pcg(0x601D ^ (BLOCK_BYTES[fmt] << 16))
+    data = rng.normals(n, 0.1)
+    data[0] = F32(0.0)
+    if n >= 8:
+        data[5] = F32(1.5)
+        data[6] = F32(-2.25)
+        data[7] = F32(0.0)
+    imp = np.array([F32(rng.next_f32() + F32(0.1)) for _ in range(n)], dtype=F32)
+    return data, imp
+
+
+def hex_fixture(payload: np.ndarray) -> str:
+    b = bytes(payload)
+    lines = []
+    for i in range(0, len(b), 32):
+        lines.append(b[i : i + 32].hex())
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Container golden (mirrors synthetic_f32_container + quantize_container)
+# ---------------------------------------------------------------------------
+
+TINY_MOE = dict(
+    name="tiny-moe",
+    kind="mla_moe",
+    vocab_size=512,
+    hidden_size=256,
+    n_layers=6,
+    first_dense=1,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=0,
+    q_lora_rank=256,
+    kv_lora_rank=256,
+    qk_nope_head_dim=32,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    intermediate_size=512,
+    moe_intermediate_size=256,
+    n_routed_experts=8,
+    n_shared_experts=1,
+    n_active_experts=2,
+)
+
+
+def tiny_moe_census():
+    """Mirror of ModelConfig::census for the MLA+MoE tiny model."""
+    c = TINY_MOE
+    out = [("token_embd.weight", "token_embd", None, [c["vocab_size"], c["hidden_size"]])]
+    h = c["hidden_size"]
+    for i in range(c["n_layers"]):
+        blk = lambda stem: f"blk.{i}.{stem}.weight"  # noqa: E731
+        out.append((blk("attn_norm"), "norm", i, [h]))
+        qk_head = c["qk_nope_head_dim"] + c["qk_rope_head_dim"]
+        out.append((blk("attn_q_a"), "attn_q_a", i, [c["q_lora_rank"], h]))
+        out.append((blk("attn_q_a_norm"), "norm", i, [c["q_lora_rank"]]))
+        out.append((blk("attn_q_b"), "attn_q_b", i, [c["n_heads"] * qk_head, c["q_lora_rank"]]))
+        out.append(
+            (
+                blk("attn_kv_a_mqa"),
+                "attn_kv_a_mqa",
+                i,
+                [c["kv_lora_rank"] + c["qk_rope_head_dim"], h],
+            )
+        )
+        out.append((blk("attn_kv_a_norm"), "norm", i, [c["kv_lora_rank"]]))
+        out.append(
+            (
+                blk("attn_kv_b"),
+                "attn_kv_b",
+                i,
+                [c["n_heads"] * (c["qk_nope_head_dim"] + c["v_head_dim"]), c["kv_lora_rank"]],
+            )
+        )
+        out.append((blk("attn_output"), "attn_output", i, [h, c["n_heads"] * c["v_head_dim"]]))
+        out.append((blk("ffn_norm"), "norm", i, [h]))
+        if i >= c["first_dense"]:
+            mi = c["moe_intermediate_size"]
+            out.append((blk("ffn_gate_inp"), "ffn_gate_inp", i, [c["n_routed_experts"], h]))
+            out.append((blk("ffn_gate_exps"), "ffn_gate_exps", i, [c["n_routed_experts"], mi, h]))
+            out.append((blk("ffn_up_exps"), "ffn_up_exps", i, [c["n_routed_experts"], mi, h]))
+            out.append((blk("ffn_down_exps"), "ffn_down_exps", i, [c["n_routed_experts"], h, mi]))
+            sh = c["n_shared_experts"] * mi
+            out.append((blk("ffn_gate_shexp"), "ffn_gate_shexp", i, [sh, h]))
+            out.append((blk("ffn_up_shexp"), "ffn_up_shexp", i, [sh, h]))
+            out.append((blk("ffn_down_shexp"), "ffn_down_shexp", i, [h, sh]))
+        else:
+            out.append((blk("ffn_gate"), "ffn_gate", i, [c["intermediate_size"], h]))
+            out.append((blk("ffn_up"), "ffn_up", i, [c["intermediate_size"], h]))
+            out.append((blk("ffn_down"), "ffn_down", i, [h, c["intermediate_size"]]))
+    out.append(("output_norm.weight", "norm", None, [h]))
+    out.append(("output.weight", "output", None, [c["vocab_size"], c["hidden_size"]]))
+    return out
+
+
+def load_scheme(name: str) -> dict:
+    return json.loads((REPO / "configs" / "schemes" / f"{name}.json").read_text())
+
+
+def use_more_bits(i_layer: int, n_layer: int) -> bool:
+    return (
+        i_layer < n_layer // 8
+        or i_layer >= 7 * n_layer // 8
+        or (i_layer - n_layer // 8) % 3 == 2
+    )
+
+
+def assign(scheme: dict, cls: str, layer, shape) -> str:
+    """Mirror of Scheme::assign (incl. the ragged-row f16 fallback)."""
+    if cls in ("norm", "ffn_gate_inp"):
+        return "f32"
+    rule = next((r for r in scheme["rules"] if r["module"] == cls), None)
+    if rule is None:
+        fmt = scheme["default"]
+    elif "format" in rule:
+        fmt = rule["format"]
+    elif "more_bits" in rule:
+        li = layer if layer is not None else 0
+        fmt = rule["more_bits"]["high" if use_more_bits(li, TINY_MOE["n_layers"]) else "low"]
+    else:
+        dy = rule["dynamic"]
+        li = layer if layer is not None else 0
+        moe_idx = max(0, li - TINY_MOE["first_dense"])
+        if moe_idx < dy["first_moe"]:
+            fmt = dy["first_format"]
+        elif dy["period"] > 0 and li % dy["period"] == 0:
+            fmt = dy["period_format"]
+        else:
+            fmt = dy["default"]
+    bw = BLOCK_WEIGHTS[fmt]
+    n_params = int(np.prod(shape))
+    if shape[-1] % bw != 0 or n_params % bw != 0:
+        return "f16"
+    return fmt
+
+
+def model_json_text() -> str:
+    # Exact field order of ModelConfig::to_json.
+    return json.dumps(TINY_MOE, separators=(",", ":"))
+
+
+def build_container(scheme_name: str, tensor_values: dict) -> bytes:
+    """Serialize the quantized container exactly as the Rust Writer."""
+    scheme = load_scheme(scheme_name)
+    census = tiny_moe_census()
+    entries = []
+    data = bytearray()
+    for name, cls, layer, shape in census:
+        fmt = assign(scheme, cls, layer, shape)
+        payload = bytes(quantize(fmt, tensor_values[name]))
+        aligned = -(-len(data) // 64) * 64
+        data.extend(b"\0" * (aligned - len(data)))
+        entries.append(
+            {
+                "name": name,
+                "class": cls,
+                "layer": layer,
+                "shape": shape,
+                "format": fmt,
+                "offset": aligned,
+                "nbytes": len(payload),
+            }
+        )
+        data.extend(payload)
+    header = json.dumps(
+        {
+            "version": 1,
+            "model": TINY_MOE,
+            "scheme": scheme_name,
+            "meta": {},
+            "tensors": entries,
+        },
+        separators=(",", ":"),
+    ).encode()
+    data_start = -(-(8 + len(header)) // 4096) * 4096
+    out = bytearray()
+    out += b"DSQ1"
+    out += len(header).to_bytes(4, "little")
+    out += header
+    out += b"\0" * (data_start - len(out))
+    out += data
+    return bytes(out)
+
+
+def fnv64(b: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for byte in b:
+        h ^= byte
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Cross-checks
+# ---------------------------------------------------------------------------
+
+
+def check_pcg():
+    from compile import tasks
+
+    theirs = tasks.Pcg(42)
+    mine = Pcg(42)
+    for _ in range(64):
+        assert mine.next_u64() == theirs.next_u64(), "Pcg mirror drift vs tasks.py"
+
+
+def check_f16():
+    rng = np.random.default_rng(0)
+    samples = rng.integers(0, 1 << 32, size=1_000_000, dtype=np.uint64).astype(np.uint32)
+    v = samples.view(F32)
+    finite = np.isfinite(v)
+    mine = f32_to_f16_bits(v[finite])
+    with np.errstate(over="ignore"):
+        numpy_bits = v[finite].astype(np.float16).view(np.uint16)
+    # util::f16 flushes |x| < 2^-24 to signed zero (its `unbiased < -24`
+    # early-out), including the (2^-25, 2^-24) sliver that strict
+    # round-to-nearest takes up to the smallest denormal — the mirror
+    # must match the Rust code, not IEEE, there.
+    sliver = np.abs(v[finite].astype(np.float64)) < 2.0**-24
+    agree = mine == numpy_bits
+    assert np.all(agree | sliver), "f16 conversion mismatch vs numpy"
+    assert np.all((mine[sliver] & 0x7FFF) == 0), "f16 sliver must flush to zero"
+
+
+def check_search_scalar_vs_vector():
+    rng = Pcg(0xC0FFEE)
+    for n, nmax_list in [(16, [3, 4, 32]), (32, [15, 31])]:
+        for case in range(40):
+            scale = F32(10.0) ** (int(rng.next_u64() % 7) - 3)
+            x = rng.normals(n, 1.0) * scale
+            if case % 4 == 0:
+                x[0] = F32(0.0)
+            if case % 5 == 0:
+                x[:] = F32(abs(float(x[1])) + 1.0)  # constant block
+            w = np.array([F32(rng.next_f32() + F32(0.05)) for _ in range(n)], dtype=F32)
+            for nmax in nmax_list:
+                for weights in (None, w):
+                    if n == 16 and nmax in (4, 32):
+                        a = make_qx_quants_scales(x.reshape(1, n), nmax, None if weights is None else weights.reshape(1, n))[0]
+                        b = make_qx_quants_scalar(x, nmax, weights)
+                        assert F32(a).tobytes() == F32(b).tobytes(), (
+                            "qx scalar/vector drift",
+                            n,
+                            nmax,
+                            case,
+                        )
+                    a_s, a_m = make_qkx_quants_scales(
+                        x.reshape(1, n), nmax, None if weights is None else weights.reshape(1, n)
+                    )
+                    b_s, b_m = make_qkx_quants_scalar(x, nmax, weights)
+                    assert (
+                        F32(a_s[0]).tobytes() == F32(b_s).tobytes()
+                        and F32(a_m[0]).tobytes() == F32(b_m).tobytes()
+                    ), ("qkx scalar/vector drift", n, nmax, case)
+
+
+def check_roundtrip(fmt: str, data: np.ndarray, payload: np.ndarray, label: str):
+    """Decode through the independent python/compile/quants.py mirror."""
+    if fmt == "f32":
+        deq = payload.view(F32)
+    else:
+        deq = pyquants.dequantize(fmt, payload, data.size)
+    if fmt in ("f32", "f16"):
+        atol = 0.0 if fmt == "f32" else None
+        if fmt == "f32":
+            assert np.array_equal(deq, data), label
+        else:
+            assert np.allclose(deq, data, rtol=1e-3, atol=1e-6), label
+        return
+    num = float(np.mean((data.astype(np.float64) - deq.astype(np.float64)) ** 2))
+    den = float(np.mean(data.astype(np.float64) ** 2))
+    rel = math.sqrt(num / den) if den > 0 else 0.0
+    # Looser than the gaussian-only unit-test bounds: the golden input
+    # deliberately mixes ±20σ outliers into 0.1-scale bulk.
+    bound = {"q8_0": 0.02, "q6_k": 0.06, "q5_k": 0.09, "q4_k": 0.15, "q3_k": 0.25, "q2_k": 0.45}[fmt]
+    assert rel < bound, (label, rel, bound)
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main():
+    check_only = "--check-only" in sys.argv
+    print("· cross-checking Pcg against python/compile/tasks.py")
+    check_pcg()
+    print("· cross-checking f16 conversion against numpy (1M samples)")
+    check_f16()
+    print("· cross-checking vectorized search against scalar transcription")
+    check_search_scalar_vs_vector()
+
+    outputs: dict[str, bytes | str] = {}
+
+    # Per-format fixtures.
+    for fmt in FORMATS:
+        data, imp = golden_input(fmt)
+        for variant, weights in (("plain", None), ("imatrix", imp)):
+            payload = quantize(fmt, data, weights)
+            check_roundtrip(fmt, data, payload, f"{fmt}.{variant}")
+            outputs[f"{fmt}.{variant}.hex"] = hex_fixture(payload)
+    print(f"· encoded {len(FORMATS)}×2 format fixtures (roundtrip-checked)")
+
+    # Container checksums.
+    census = tiny_moe_census()
+    rng = Pcg(0x601D)
+    tensor_values = {}
+    for name, _cls, _layer, shape in census:
+        n = int(np.prod(shape))
+        tensor_values[name] = rng.normals(n, 0.05)
+    print(f"· generated synthetic tiny-moe weights ({sum(v.size for v in tensor_values.values())} f32)")
+
+    for scheme_name in ("dq3_k_m", "q4_k_m"):
+        # Cross-check assignment against the independent schemes.py mirror.
+        scheme = load_scheme(scheme_name)
+
+        class _Cfg:
+            n_layers = TINY_MOE["n_layers"]
+            first_dense = TINY_MOE["first_dense"]
+
+        for name, cls, layer, shape in census:
+            mine = assign(scheme, cls, layer, shape)
+            theirs = pyschemes.assign(
+                scheme, cls, layer, shape[-1], int(np.prod(shape)), _Cfg
+            )
+            assert mine == theirs, (scheme_name, name, mine, theirs)
+
+        blob = build_container(scheme_name, tensor_values)
+        # Sanity: parse with the independent container reader + decode spot
+        # tensors through the independent dequantizer.
+        from compile import container as pycontainer
+
+        tmp = GOLDEN_DIR / f".tmp.{scheme_name}.dsq"
+        tmp.write_bytes(blob)
+        try:
+            c = pycontainer.Container.open(tmp)
+            assert c.scheme == scheme_name and c.model["name"] == "tiny-moe"
+            for e in c.entries[:: max(1, len(c.entries) // 7)]:
+                deq = c.dequantize(e).reshape(-1)
+                src = tensor_values[e.name]
+                if e.fmt == "f32":
+                    assert np.array_equal(deq, src), e.name
+                else:
+                    num = float(np.mean((src.astype(np.float64) - deq.astype(np.float64)) ** 2))
+                    den = float(np.mean(src.astype(np.float64) ** 2))
+                    assert math.sqrt(num / den) < 0.45, (e.name, e.fmt)
+        finally:
+            tmp.unlink(missing_ok=True)
+        line = f"{fnv64(blob):016x} {len(blob)}\n"
+        outputs[f"container.{scheme_name}.fnv64"] = line
+        print(f"· container {scheme_name}: {len(blob)} bytes, fnv64 {line.split()[0]}")
+
+    if check_only:
+        drift = []
+        for fname, content in outputs.items():
+            path = GOLDEN_DIR / fname
+            if not path.exists() or path.read_text() != content:
+                drift.append(fname)
+        if drift:
+            print(f"DRIFT vs committed fixtures: {drift}")
+            sys.exit(1)
+        print("all committed fixtures match the mirror")
+        return
+
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for fname, content in outputs.items():
+        (GOLDEN_DIR / fname).write_text(content)
+        print(f"  blessed {fname}")
+    print(f"wrote {len(outputs)} fixtures → {GOLDEN_DIR}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ const SWITCHES: &[&str] = &[
     "no-imatrix",
     "json",
     "paper",
+    "native",
 ];
 
 impl Args {

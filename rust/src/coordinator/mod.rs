@@ -15,6 +15,13 @@
 //! wave ends as soon as all slots finish. (Slot-level continuous
 //! batching would require per-slot KV-cache splicing across PJRT
 //! literals; see DESIGN.md §Perf for the measured trade-off.)
+//!
+//! The coordinator is backend-agnostic: it drives the same wave loop
+//! whether the engine holds compiled PJRT executables or the native
+//! CPU matvec backend (`Engine::load_native`), which executes decode
+//! steps directly on quantized container payloads through the fused
+//! `quant::kernels` vec_dot path — `tests/native_engine.rs` runs a
+//! full wave over DQ3_K_M weights that way, with no HLO artifacts.
 
 pub mod metrics;
 pub mod sampler;

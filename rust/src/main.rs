@@ -5,8 +5,8 @@
 //! dsq table 1|6|7|8 [--paper]            regenerate resource tables
 //! dsq table 2|3|4|5 [--hlo D --ckpt-dir D]  accuracy tables (needs artifacts)
 //! dsq quantize IN.dsq --scheme S --output OUT.dsq [--imatrix F] [--threads N]
-//! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json]
-//! dsq serve --hlo D --ckpt F --requests N   (serving smoke/throughput)
+//! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json] [--native]
+//! dsq serve --hlo D --ckpt F --requests N [--native]   (serving smoke/throughput)
 //! dsq memory --model M --scheme S [--ctx N] [--seqs N]
 //! dsq recommend --model M               §4.4 device recommendations
 //! dsq sweep-error --input CKPT.dsq      bpw ↔ reconstruction error (E10)
@@ -57,8 +57,8 @@ dsq — DeepSeek quantization analysis (paper reproduction)
 Commands:
   table <1-8>        regenerate a paper table (2-5 need artifacts)
   quantize IN.dsq --scheme S --output OUT.dsq [--threads N]
-  eval --hlo DIR --ckpt FILE [--out results.json] [--full-size] [--threads N]
-  serve --hlo DIR --ckpt FILE [--requests N] [--threads N]
+  eval --hlo DIR --ckpt FILE [--out results.json] [--full-size] [--threads N] [--native]
+  serve --hlo DIR --ckpt FILE [--requests N] [--threads N] [--native]
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
@@ -263,7 +263,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let threads = args.threads_flag(quant::parallel::max_threads())?;
-    let engine = Engine::load_with(&hlo, &ckpt, threads)?;
+    let engine = if args.switch("native") {
+        Engine::load_native(&ckpt, threads)?
+    } else {
+        Engine::load_with(&hlo, &ckpt, threads)?
+    };
     let mut coord = Coordinator::new(engine);
     let protocol = protocol_from_args(args);
     let result = match args.flag("suite") {
@@ -292,7 +296,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ckpt = PathBuf::from(args.require("ckpt")?);
     let n: usize = args.flag_parse("requests", 64usize)?;
     let threads = args.threads_flag(quant::parallel::max_threads())?;
-    let engine = Engine::load_with(&hlo, &ckpt, threads)?;
+    let engine = if args.switch("native") {
+        Engine::load_native(&ckpt, threads)?
+    } else {
+        Engine::load_with(&hlo, &ckpt, threads)?
+    };
     let mut coord = Coordinator::new(engine);
     // Mixed request stream drawn from the benchmark distribution.
     let mut made = 0u64;
@@ -439,10 +447,13 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
 /// threads and require byte-identical packings (then the same for
 /// decode). For every builtin scheme: quantize a deterministic tiny-moe
 /// checkpoint through the serial and the tensor-parallel container
-/// pipelines and require byte-identical containers. Finally, the
+/// pipelines and require byte-identical containers. Then the
 /// serving weight loader's decode direction: preparing f32 weight
 /// payloads from a quantized checkpoint must be byte-identical at every
-/// thread count. Exits non-zero on any mismatch.
+/// thread count. Finally, the vec_dot identity: for every format the
+/// fused `vec_dot(q, x)` must equal the same-reduction-order lane dot
+/// over `decode_blocks(q)` bit-for-bit, on *both* dispatch arms (lane
+/// kernels and scalar reference). Exits non-zero on any mismatch.
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let threads = args.threads_flag(quant::parallel::max_threads())?;
     println!("# codec selfcheck: serial vs {threads} threads\n");
@@ -524,11 +535,54 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         );
     }
 
+    // vec_dot identity: the fused kernels must reproduce the canonical
+    // decode-then-lane-dot reduction exactly, on both dispatch arms and
+    // through the row-parallel matvec entry point.
+    println!();
+    for fmt in QuantFormat::ALL {
+        let rows = 4usize;
+        let n = fmt.block_weights().max(64);
+        let mut rng = Pcg::new(0xD07 ^ ((n as u64) << 4) ^ fmt.block_bytes() as u64);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let packed = quant::quantize(fmt, &data, None)?;
+        let rb = fmt.row_bytes(n)?;
+        let mut ok = true;
+        let mut decoded = vec![0f32; n];
+        for fast in [false, true] {
+            for row in packed.chunks_exact(rb) {
+                quant::kernels::decode_blocks_pinned(fmt, row, &mut decoded, fast);
+                let want = quant::kernels::dot_lanes(&decoded, &x);
+                let got = quant::kernels::vec_dot_pinned(fmt, row, &x, fast);
+                ok &= got.to_bits() == want.to_bits();
+            }
+        }
+        // Row-parallel matvec at 1 vs N threads, through the public
+        // dispatch-selected entry point.
+        let mut serial = vec![0f32; rows];
+        let mut par = vec![0f32; rows];
+        quant::vec_dot_rows_with(fmt, &packed, &x, &mut serial, 1)?;
+        quant::vec_dot_rows_with(fmt, &packed, &x, &mut par, threads)?;
+        ok &= serial
+            .iter()
+            .zip(&par)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "  vec_dot/{:<6} ({rows} rows × {n} weights, both arms): {}",
+            fmt.name(),
+            if ok { "identical" } else { "MISMATCH" }
+        );
+    }
+
     if failures > 0 {
         bail!("selfcheck FAILED: {failures} mismatching case(s)");
     }
     println!(
-        "\nselfcheck passed: parallel encode and loader decode are byte-identical to serial"
+        "\nselfcheck passed: parallel encode, loader decode and fused vec_dot \
+         are bit-identical to their serial/scalar references"
     );
     Ok(())
 }

@@ -1,0 +1,475 @@
+//! Decode-side lane kernels: batch block decoding and fused
+//! quantized-dot (`vec_dot`) for every builtin format.
+//!
+//! PR 2 made the *write* side fast (SIMD-specialized scale search); this
+//! module is the matching *read* side. Two things live here:
+//!
+//! - **Batch decode kernels** (`decode_blocks_*`): the per-format
+//!   `dequantize` loops in the format modules recompute sub-block
+//!   scales once per *element* (a division, an unpack and two f16
+//!   loads per weight). The kernels here hoist all per-sub-block work
+//!   out of the inner loop and walk the code planes byte-by-byte with
+//!   branch-free nibble/bit extraction, which the autovectorizer can
+//!   lower in release builds. The hoisting is algebraically a no-op:
+//!   each element still evaluates the exact same f32 expression in the
+//!   same order (e.g. `(d·sc)·c − (dmin·m)` for `Q4_K`), so the fast
+//!   kernels are **bit-identical** to the module loops.
+//! - **Fused `vec_dot` kernels**: dot products computed directly on
+//!   encoded blocks — each super-block is decoded into a stack buffer
+//!   (never touching main memory) and multiplied into eight persistent
+//!   f32 accumulator lanes. `vec_dot(q, x)` is defined to equal
+//!   [`dot_lanes`]`(decode_blocks(q), x)` **bit-for-bit**.
+//!
+//! ## The reduction-order contract
+//!
+//! [`dot_lanes`] is the one canonical dot product of the crate: element
+//! `i` accumulates into lane `i % LANES` (the shared
+//! [`super::simd::LANES`] = 8), each lane is a sequential f32 sum, and
+//! the horizontal reduction is the shared `simd::hsum` fold.
+//! No implicit FMA exists anywhere on the path (Rust never contracts
+//! `a*b + c`). Every arm — the fused kernels, the scalar reference
+//! ([`vec_dot_ref`]: scalar block decode + lane dot), and every
+//! row-parallel thread count — therefore produces the same bits.
+//!
+//! ## Dispatch
+//!
+//! Mirroring the encode side's `DSQ_SCALAR_SEARCH`, the env var
+//! `DSQ_SCALAR_DECODE=1` pins the decode/vec_dot paths to the scalar
+//! reference arm (the format modules' plain loops). Default is the lane
+//! kernels. Both arms are pinned to the same golden fixtures in CI and
+//! cross-checked by `dsq selfcheck` and `tests/decode_kernels.rs`.
+
+use super::simd::{hsum, LANES};
+use super::{codec, q2k, q3k, q4k, q5k, q6k, q8_0, raw, BlockCodec, QuantFormat, QK8_0, QK_K};
+use crate::quant::scalar::get_f16;
+use std::sync::OnceLock;
+
+/// Whether the decode-side lane kernels are active. Default on; set
+/// `DSQ_SCALAR_DECODE=1` to force the scalar reference loops (both
+/// arms are bit-identical — the switch exists for benchmarking and for
+/// pinning CI drift tests to either arm). Read once per process.
+pub fn decode_kernels_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !matches!(
+            std::env::var("DSQ_SCALAR_DECODE").as_deref(),
+            Ok("1") | Ok("true") | Ok("yes")
+        )
+    })
+}
+
+/// The canonical lane-ordered dot product: element `i` → lane
+/// `i % LANES`, sequential sums per lane, `simd::hsum` fold. This is the
+/// reduction order `vec_dot` is contractually bit-identical to.
+pub fn dot_lanes(w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    let mut acc = [0f32; LANES];
+    let head = w.len() / LANES * LANES;
+    for (wc, xc) in w[..head].chunks_exact(LANES).zip(x[..head].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += wc[l] * xc[l];
+        }
+    }
+    for (l, (&wv, &xv)) in w[head..].iter().zip(x[head..].iter()).enumerate() {
+        acc[l] += wv * xv;
+    }
+    hsum(&acc)
+}
+
+/// Multiply one decoded run (a multiple of `LANES` long) into the
+/// persistent accumulator lanes, preserving the global lane order.
+#[inline(always)]
+fn accumulate(acc: &mut [f32; LANES], w: &[f32], x: &[f32]) {
+    for (wc, xc) in w.chunks_exact(LANES).zip(x.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += wc[l] * xc[l];
+        }
+    }
+}
+
+// --- per-block fast decoders (bit-identical to the module loops) ---
+
+fn block_q8_0(ob: &[u8], xb: &mut [f32]) {
+    let d = get_f16(ob, 0);
+    for (x, &q) in xb.iter_mut().zip(&ob[2..2 + QK8_0]) {
+        *x = d * (q as i8) as f32;
+    }
+}
+
+fn block_q2k(ob: &[u8], xb: &mut [f32]) {
+    let d = get_f16(ob, 80);
+    let dmin = get_f16(ob, 82);
+    for j in 0..16 {
+        let sd = d * (ob[j] & 0x0F) as f32;
+        let sm = dmin * (ob[j] >> 4) as f32;
+        let qs = &ob[16 + 4 * j..16 + 4 * j + 4];
+        let xs = &mut xb[16 * j..16 * j + 16];
+        for (&b, xq) in qs.iter().zip(xs.chunks_exact_mut(4)) {
+            xq[0] = sd * (b & 0x03) as f32 - sm;
+            xq[1] = sd * ((b >> 2) & 0x03) as f32 - sm;
+            xq[2] = sd * ((b >> 4) & 0x03) as f32 - sm;
+            xq[3] = sd * (b >> 6) as f32 - sm;
+        }
+    }
+}
+
+fn block_q3k(ob: &[u8], xb: &mut [f32]) {
+    let d = get_f16(ob, 108);
+    for j in 0..16 {
+        let sc = q3k::unpack_scales_6x16(&ob[0..12], j) as i32 - 32;
+        let ds = d * sc as f32;
+        let qs = &ob[44 + 4 * j..44 + 4 * j + 4];
+        let hm = &ob[12 + 2 * j..12 + 2 * j + 2];
+        let xs = &mut xb[16 * j..16 * j + 16];
+        for (t, xq) in xs.chunks_exact_mut(4).enumerate() {
+            let b = qs[t];
+            let h = hm[t >> 1];
+            for (u, x) in xq.iter_mut().enumerate() {
+                let k = 4 * t + u;
+                let lo = (b >> (2 * u)) & 0x03;
+                let hi = (h >> (k & 7)) & 0x01;
+                *x = ds * ((lo | (hi << 2)) as i32 - 4) as f32;
+            }
+        }
+    }
+}
+
+/// Shared `Q4_K` / `Q5_K` fast decoder (`qs_off` = 4-bit plane offset,
+/// `high_bit` = fifth code bit in the 32-byte plane at offset 16).
+fn block_q45k(ob: &[u8], xb: &mut [f32], qs_off: usize, high_bit: bool) {
+    let d = get_f16(ob, 0);
+    let dmin = get_f16(ob, 2);
+    for j in 0..8 {
+        let (sc, mn) = q4k::unpack_scale_min_6(&ob[4..16], j);
+        let sd = d * sc as f32;
+        let sm = dmin * mn as f32;
+        let qs = &ob[qs_off + 16 * j..qs_off + 16 * j + 16];
+        let xs = &mut xb[32 * j..32 * j + 32];
+        if high_bit {
+            let qh = &ob[16 + 4 * j..16 + 4 * j + 4];
+            for (k2, xq) in xs.chunks_exact_mut(2).enumerate() {
+                let b = qs[k2];
+                let h = qh[k2 >> 2];
+                let k = 2 * k2;
+                let h0 = ((h >> (k & 7)) & 1) << 4;
+                let h1 = ((h >> ((k + 1) & 7)) & 1) << 4;
+                xq[0] = sd * ((b & 0x0F) | h0) as f32 - sm;
+                xq[1] = sd * ((b >> 4) | h1) as f32 - sm;
+            }
+        } else {
+            for (&b, xq) in qs.iter().zip(xs.chunks_exact_mut(2)) {
+                xq[0] = sd * (b & 0x0F) as f32 - sm;
+                xq[1] = sd * (b >> 4) as f32 - sm;
+            }
+        }
+    }
+}
+
+fn block_q6k(ob: &[u8], xb: &mut [f32]) {
+    let d = get_f16(ob, 208);
+    for j in 0..16 {
+        let dsc = d * (ob[192 + j] as i8) as f32;
+        let ql = &ob[8 * j..8 * j + 8];
+        let qh = &ob[128 + 4 * j..128 + 4 * j + 4];
+        let xs = &mut xb[16 * j..16 * j + 16];
+        for (k2, xq) in xs.chunks_exact_mut(2).enumerate() {
+            let b = ql[k2];
+            let h = qh[k2 >> 1];
+            let k = 2 * k2;
+            let hi0 = (h >> (2 * (k & 3))) & 0x03;
+            let hi1 = (h >> (2 * ((k + 1) & 3))) & 0x03;
+            xq[0] = dsc * (((b & 0x0F) | (hi0 << 4)) as i32 - 32) as f32;
+            xq[1] = dsc * (((b >> 4) | (hi1 << 4)) as i32 - 32) as f32;
+        }
+    }
+}
+
+fn block_q5k(ob: &[u8], xb: &mut [f32]) {
+    block_q45k(ob, xb, 48, true)
+}
+
+fn block_q4k(ob: &[u8], xb: &mut [f32]) {
+    block_q45k(ob, xb, 16, false)
+}
+
+/// The fast per-block decoder for one k-quant/`Q8_0` format — the one
+/// seam both [`decode_blocks_fast`] and [`vec_dot_fast`] select
+/// through, so a new block format needs exactly one registration here.
+fn fast_block_decoder(fmt: QuantFormat) -> fn(&[u8], &mut [f32]) {
+    match fmt {
+        QuantFormat::Q8_0 => block_q8_0,
+        QuantFormat::Q6K => block_q6k,
+        QuantFormat::Q5K => block_q5k,
+        QuantFormat::Q4K => block_q4k,
+        QuantFormat::Q3K => block_q3k,
+        QuantFormat::Q2K => block_q2k,
+        QuantFormat::F32 | QuantFormat::F16 => unreachable!("raw formats handled in dispatch"),
+    }
+}
+
+/// The fast batch decoder for one k-quant/`Q8_0` format. Caller
+/// guarantees whole blocks and exactly-sized buffers.
+fn decode_blocks_fast(fmt: QuantFormat, bytes: &[u8], out: &mut [f32]) {
+    let bb = fmt.block_bytes();
+    let bw = fmt.block_weights();
+    let decode = fast_block_decoder(fmt);
+    for (ob, xb) in bytes.chunks_exact(bb).zip(out.chunks_exact_mut(bw)) {
+        decode(ob, xb);
+    }
+}
+
+/// Batch decode with the dispatch arm pinned (`fast == true` selects
+/// the lane kernels, `false` the format modules' scalar loops). The
+/// seam the cross-arm identity tests and `dsq selfcheck` use; both
+/// arms are bit-identical.
+pub fn decode_blocks_pinned(fmt: QuantFormat, bytes: &[u8], out: &mut [f32], fast: bool) {
+    match fmt {
+        // Raw formats have a single (already optimal) decode loop.
+        QuantFormat::F32 => raw::F32Codec.decode_blocks(bytes, out),
+        QuantFormat::F16 => raw::F16Codec.decode_blocks(bytes, out),
+        _ if fast => decode_blocks_fast(fmt, bytes, out),
+        QuantFormat::Q8_0 => q8_0::dequantize(bytes, out),
+        QuantFormat::Q6K => q6k::dequantize(bytes, out),
+        QuantFormat::Q5K => q5k::dequantize(bytes, out),
+        QuantFormat::Q4K => q4k::dequantize(bytes, out),
+        QuantFormat::Q3K => q3k::dequantize(bytes, out),
+        QuantFormat::Q2K => q2k::dequantize(bytes, out),
+    }
+}
+
+/// Runtime-dispatched batch decode (the `BlockCodec::decode_blocks`
+/// body for every block format).
+pub(crate) fn decode_blocks_auto(fmt: QuantFormat, bytes: &[u8], out: &mut [f32]) {
+    decode_blocks_pinned(fmt, bytes, out, decode_kernels_enabled());
+}
+
+// --- fused vec_dot ---
+
+/// Fused dot over the fast per-block decoders: each block is decoded
+/// into a stack buffer and multiplied straight into the lanes.
+fn vec_dot_fast(fmt: QuantFormat, bytes: &[u8], x: &[f32]) -> f32 {
+    let bb = fmt.block_bytes();
+    let bw = fmt.block_weights();
+    let decode = fast_block_decoder(fmt);
+    let mut acc = [0f32; LANES];
+    let mut buf = [0f32; QK_K];
+    for (ob, xs) in bytes.chunks_exact(bb).zip(x.chunks_exact(bw)) {
+        let wb = &mut buf[..bw];
+        decode(ob, wb);
+        accumulate(&mut acc, wb, xs);
+    }
+    hsum(&acc)
+}
+
+/// Fused dot for raw little-endian f32 payloads.
+pub(crate) fn vec_dot_f32(bytes: &[u8], x: &[f32]) -> f32 {
+    let mut acc = [0f32; LANES];
+    let head = x.len() / LANES * LANES;
+    for (bc, xc) in bytes[..head * 4]
+        .chunks_exact(4 * LANES)
+        .zip(x[..head].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            let w = f32::from_le_bytes(bc[4 * l..4 * l + 4].try_into().unwrap());
+            acc[l] += w * xc[l];
+        }
+    }
+    for (l, (bc, &xv)) in bytes[head * 4..]
+        .chunks_exact(4)
+        .zip(x[head..].iter())
+        .enumerate()
+    {
+        acc[l] += f32::from_le_bytes(bc.try_into().unwrap()) * xv;
+    }
+    hsum(&acc)
+}
+
+/// Fused dot for raw little-endian f16 payloads.
+pub(crate) fn vec_dot_f16(bytes: &[u8], x: &[f32]) -> f32 {
+    let mut acc = [0f32; LANES];
+    let head = x.len() / LANES * LANES;
+    for (bc, xc) in bytes[..head * 2]
+        .chunks_exact(2 * LANES)
+        .zip(x[..head].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            let bits = u16::from_le_bytes([bc[2 * l], bc[2 * l + 1]]);
+            acc[l] += crate::util::f16::f16_bits_to_f32(bits) * xc[l];
+        }
+    }
+    for (l, (bc, &xv)) in bytes[head * 2..]
+        .chunks_exact(2)
+        .zip(x[head..].iter())
+        .enumerate()
+    {
+        let bits = u16::from_le_bytes([bc[0], bc[1]]);
+        acc[l] += crate::util::f16::f16_bits_to_f32(bits) * xv;
+    }
+    hsum(&acc)
+}
+
+/// The scalar-reference fused dot: decode each block with the codec's
+/// (scalar) `decode_block` into a stack buffer and accumulate in the
+/// canonical lane order. This is both the `DSQ_SCALAR_DECODE=1` arm
+/// and the default [`BlockCodec::vec_dot`] implementation; the lane
+/// kernels are bit-identical to it by construction.
+pub fn vec_dot_ref<C: BlockCodec + ?Sized>(c: &C, bytes: &[u8], x: &[f32]) -> f32 {
+    let bw = c.block_weights();
+    let bb = c.block_bytes();
+    let mut acc = [0f32; LANES];
+    let mut buf = [0f32; QK_K];
+    if bw % LANES != 0 {
+        // Raw formats (block of one weight): keep the global lane order.
+        for (i, (ob, &xv)) in bytes.chunks_exact(bb).zip(x.iter()).enumerate() {
+            c.decode_block(ob, &mut buf[..bw]);
+            acc[i % LANES] += buf[0] * xv;
+        }
+        return hsum(&acc);
+    }
+    for (ob, xs) in bytes.chunks_exact(bb).zip(x.chunks_exact(bw)) {
+        let wb = &mut buf[..bw];
+        c.decode_block(ob, wb);
+        accumulate(&mut acc, wb, xs);
+    }
+    hsum(&acc)
+}
+
+/// Fused dot with the dispatch arm pinned (see
+/// [`decode_blocks_pinned`]). Caller guarantees
+/// `bytes.len() == fmt.row_bytes(x.len())`.
+pub fn vec_dot_pinned(fmt: QuantFormat, bytes: &[u8], x: &[f32], fast: bool) -> f32 {
+    match fmt {
+        // Raw formats: one code path for both arms (the "decode" is a
+        // plain byte load either way).
+        QuantFormat::F32 => vec_dot_f32(bytes, x),
+        QuantFormat::F16 => vec_dot_f16(bytes, x),
+        _ if fast => vec_dot_fast(fmt, bytes, x),
+        _ => vec_dot_ref(codec(fmt), bytes, x),
+    }
+}
+
+/// Runtime-dispatched fused dot (the `BlockCodec::vec_dot` body for
+/// every block format).
+pub(crate) fn vec_dot_auto(fmt: QuantFormat, bytes: &[u8], x: &[f32]) -> f32 {
+    vec_dot_pinned(fmt, bytes, x, decode_kernels_enabled())
+}
+
+/// Shared body of the per-format in-module identity tests (q2k … q8_0
+/// each pin their own seed): the fast and scalar decode arms are
+/// bit-identical, and both `vec_dot` arms equal the canonical
+/// decode-then-lane-dot reduction.
+#[cfg(test)]
+pub(crate) fn assert_decode_and_vec_dot_identity(fmt: QuantFormat, seed: u64) {
+    let n = fmt.block_weights() * 3;
+    let mut rng = crate::util::rng::Pcg::new(seed);
+    let src: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+    let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+    let packed = super::quantize(fmt, &src, None).unwrap();
+    let mut fast = vec![0f32; n];
+    let mut scalar = vec![0f32; n];
+    decode_blocks_pinned(fmt, &packed, &mut fast, true);
+    decode_blocks_pinned(fmt, &packed, &mut scalar, false);
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&fast), bits(&scalar), "{fmt} decode arms");
+    let want = dot_lanes(&scalar, &x);
+    for arm in [false, true] {
+        let got = vec_dot_pinned(fmt, &packed, &x, arm);
+        assert_eq!(got.to_bits(), want.to_bits(), "{fmt} vec_dot fast={arm}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, quantize};
+    use crate::util::rng::Pcg;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn decode_arms_bit_identical_every_format() {
+        for fmt in QuantFormat::ALL {
+            for nblocks in [1usize, 3, 9] {
+                let n = fmt.block_weights() * nblocks;
+                let mut rng = Pcg::new(0xDEC0 + fmt.block_bytes() as u64 + nblocks as u64);
+                let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+                let packed = quantize(fmt, &data, None).unwrap();
+                let mut fast = vec![0f32; n];
+                let mut scalar = vec![0f32; n];
+                decode_blocks_pinned(fmt, &packed, &mut fast, true);
+                decode_blocks_pinned(fmt, &packed, &mut scalar, false);
+                assert_eq!(bits(&fast), bits(&scalar), "{fmt} nblocks={nblocks}");
+            }
+        }
+    }
+
+    #[test]
+    fn vec_dot_arms_match_decode_then_dot() {
+        for fmt in QuantFormat::ALL {
+            let n = fmt.block_weights() * 5;
+            let mut rng = Pcg::new(0xD07 + fmt.block_bytes() as u64);
+            let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let packed = quantize(fmt, &data, None).unwrap();
+            let mut decoded = vec![0f32; n];
+            decode_blocks_pinned(fmt, &packed, &mut decoded, false);
+            let want = dot_lanes(&decoded, &x);
+            for fast in [false, true] {
+                let got = vec_dot_pinned(fmt, &packed, &x, fast);
+                assert_eq!(got.to_bits(), want.to_bits(), "{fmt} fast={fast}");
+            }
+        }
+    }
+
+    #[test]
+    fn vec_dot_raw_handles_ragged_lengths() {
+        // f32/f16 rows need not be lane multiples; the remainder lanes
+        // must still follow the global `i % LANES` order.
+        for &n in &[1usize, 5, 8, 13, 16, 31] {
+            let mut rng = Pcg::new(0xA6 + n as u64);
+            let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            for fmt in [QuantFormat::F32, QuantFormat::F16] {
+                let packed = quantize(fmt, &data, None).unwrap();
+                let decoded = quant::dequantize(fmt, &packed, n).unwrap();
+                let want = dot_lanes(&decoded, &x);
+                for fast in [false, true] {
+                    let got = vec_dot_pinned(fmt, &packed, &x, fast);
+                    assert_eq!(got.to_bits(), want.to_bits(), "{fmt} n={n} fast={fast}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_lanes_matches_plain_lane_loop() {
+        for &n in &[1usize, 7, 8, 9, 64, 100] {
+            let mut rng = Pcg::new(0x1A + n as u64);
+            let w: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let mut acc = [0f32; LANES];
+            for (i, (&wv, &xv)) in w.iter().zip(&x).enumerate() {
+                acc[i % LANES] += wv * xv;
+            }
+            assert_eq!(dot_lanes(&w, &x).to_bits(), hsum(&acc).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn fast_decode_total_on_random_bytes() {
+        // Arbitrary byte patterns must decode without panicking through
+        // the fast arm too (mirrors the scalar totality property test).
+        let mut rng = Pcg::new(0xBAD);
+        for fmt in QuantFormat::ALL {
+            let n = fmt.block_weights() * 4;
+            let nb = fmt.row_bytes(n).unwrap();
+            let bytes: Vec<u8> = (0..nb).map(|_| rng.next_u64() as u8).collect();
+            let mut out = vec![0f32; n];
+            decode_blocks_pinned(fmt, &bytes, &mut out, true);
+            let x = vec![1.0f32; n];
+            let _ = vec_dot_pinned(fmt, &bytes, &x, true);
+        }
+    }
+}

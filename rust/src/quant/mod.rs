@@ -58,8 +58,31 @@
 //! [`simd`] (scalar reference in [`scalar`], selected at runtime via
 //! `DSQ_SCALAR_SEARCH`; both arms are byte-identical by construction —
 //! see `tests/golden_vectors.rs`).
+//!
+//! ## The read side: decode kernels and fused `vec_dot`
+//!
+//! The serving path consumes encoded blocks far more often than it
+//! produces them, so the decode direction mirrors the encode dual-arm
+//! design. [`kernels`] holds lane-chunked, branch-free batch decoders
+//! (sub-block scales hoisted out of the inner loop) and fused
+//! [`BlockCodec::vec_dot`] kernels that compute dot products directly
+//! on encoded bytes without materializing f32 weights; the format
+//! modules' plain `dequantize` loops are the scalar reference arm,
+//! selected at runtime with `DSQ_SCALAR_DECODE=1`.
+//!
+//! **The `vec_dot` contract:** `vec_dot(bytes, x)` is bit-identical to
+//! [`kernels::dot_lanes`]`(decoded, x)` where `decoded` is the output
+//! of `decode_blocks(bytes)` — element `i` accumulates into lane
+//! `i % `[`simd::LANES`], each lane is a sequential f32 sum, the
+//! horizontal reduction is the shared `hsum` fold, and no step may use
+//! an FMA contraction (Rust never emits one implicitly). Because the
+//! reduction order is fixed, the lane kernels, the scalar reference,
+//! and every `vec_dot_rows` thread count agree bit-for-bit — asserted
+//! by `tests/decode_kernels.rs`, the golden suite under both env arms
+//! in CI, and `dsq selfcheck` on the deployment host.
 
 pub mod error;
+pub mod kernels;
 pub mod parallel;
 pub mod q2k;
 pub mod q3k;
@@ -244,6 +267,35 @@ pub trait BlockCodec: Sync {
             self.decode_block(ob, xb);
         }
     }
+
+    /// Fused dot product of a run of encoded blocks with `x`
+    /// (`bytes.len() == row_bytes(x.len())`), without materializing the
+    /// decoded weights. Contract: bit-identical to
+    /// [`kernels::dot_lanes`] over `decode_blocks(bytes)` — see the
+    /// module docs for the fixed reduction order. The default decodes
+    /// block-by-block into a stack buffer (the scalar reference);
+    /// formats override with their fused lane kernel.
+    fn vec_dot(&self, bytes: &[u8], x: &[f32]) -> f32 {
+        kernels::vec_dot_ref(self, bytes, x)
+    }
+
+    /// Row-major quantized matrix × f32 vector:
+    /// `out[r] = vec_dot(row_r, x)` for `out.len()` rows of `x.len()`
+    /// weights each (`bytes.len() == out.len() * row_bytes(x.len())`;
+    /// like the other batch methods, the caller guarantees whole
+    /// blocks — the validated entry point is [`vec_dot_rows_with`]).
+    /// Rows are independent, which is what makes the row-parallel entry
+    /// point bit-identical at any thread count.
+    fn vec_dot_rows(&self, bytes: &[u8], x: &[f32], out: &mut [f32]) {
+        let rb = x.len() / self.block_weights() * self.block_bytes();
+        if rb == 0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, row) in out.iter_mut().zip(bytes.chunks_exact(rb)) {
+            *o = self.vec_dot(row, x);
+        }
+    }
 }
 
 /// Implement [`BlockCodec`] for a format module whose slice-level
@@ -274,7 +326,14 @@ macro_rules! impl_block_codec {
             }
 
             fn decode_blocks(&self, bytes: &[u8], out: &mut [f32]) {
-                dequantize(bytes, out);
+                // Runtime-dispatched: lane kernels by default, this
+                // module's `dequantize` loop under `DSQ_SCALAR_DECODE=1`
+                // (bit-identical either way).
+                crate::quant::kernels::decode_blocks_auto($fmt, bytes, out);
+            }
+
+            fn vec_dot(&self, bytes: &[u8], x: &[f32]) -> f32 {
+                crate::quant::kernels::vec_dot_auto($fmt, bytes, x)
             }
         }
     };
@@ -368,6 +427,56 @@ pub fn dequantize_into_with(
         );
     }
     parallel::decode_chunked(codec(fmt), bytes, out, threads);
+    Ok(())
+}
+
+/// Fused dot product of a `fmt`-packed row with `x` (`bytes.len()` must
+/// equal `fmt.row_bytes(x.len())`), computed directly on the encoded
+/// blocks. Bit-identical to [`kernels::dot_lanes`] over the decoded
+/// row — see the module docs for the reduction-order contract.
+pub fn vec_dot(fmt: QuantFormat, bytes: &[u8], x: &[f32]) -> Result<f32> {
+    let expect = fmt.row_bytes(x.len())?;
+    if bytes.len() != expect {
+        bail!(
+            "{fmt}: byte length {} does not match expected {expect} for {} weights",
+            bytes.len(),
+            x.len()
+        );
+    }
+    Ok(codec(fmt).vec_dot(bytes, x))
+}
+
+/// Quantized matrix × f32 vector: `out[r]` = fused dot of row `r` of
+/// the row-major `fmt`-packed matrix `bytes` with `x`
+/// (`bytes.len() == out.len() * fmt.row_bytes(x.len())`). Rows are
+/// split across threads; the result is bit-identical at any count.
+pub fn vec_dot_rows(fmt: QuantFormat, bytes: &[u8], x: &[f32], out: &mut [f32]) -> Result<()> {
+    let threads = parallel::auto_threads(out.len().saturating_mul(x.len()));
+    vec_dot_rows_with(fmt, bytes, x, out, threads)
+}
+
+/// [`vec_dot_rows`] with an explicit worker-thread count (`1` forces
+/// the serial path; used by the identity tests and benches).
+pub fn vec_dot_rows_with(
+    fmt: QuantFormat,
+    bytes: &[u8],
+    x: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let rb = fmt.row_bytes(x.len())?;
+    if bytes.len() != rb * out.len() {
+        bail!(
+            "{fmt}: matrix byte length {} does not match {} rows × {rb} bytes",
+            bytes.len(),
+            out.len()
+        );
+    }
+    if rb == 0 {
+        out.fill(0.0);
+        return Ok(());
+    }
+    parallel::vec_dot_rows_chunked(codec(fmt), bytes, x, out, rb, threads);
     Ok(())
 }
 

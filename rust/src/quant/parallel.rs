@@ -172,6 +172,41 @@ pub(crate) fn decode_chunked(
     });
 }
 
+/// Compute `out[r] = vec_dot(row_r, x)` for a row-major quantized
+/// matrix, splitting rows across up to `threads` scoped threads. Rows
+/// write disjoint output slots and share no state, so the result is
+/// bit-identical to the serial loop. Caller passes the already
+/// validated row stride `rb` (non-zero) with
+/// `bytes.len() == out.len() * rb`.
+pub(crate) fn vec_dot_rows_chunked(
+    codec: &dyn BlockCodec,
+    bytes: &[u8],
+    x: &[f32],
+    out: &mut [f32],
+    rb: usize,
+    threads: usize,
+) {
+    let rows = out.len();
+    let threads = threads.clamp(1, rows.max(1));
+    if threads == 1 {
+        codec.vec_dot_rows(bytes, x, out);
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut bytes = bytes;
+        let mut out: &mut [f32] = out;
+        while !out.is_empty() {
+            let nr = out.len().min(per);
+            let (bytes_head, bytes_tail) = bytes.split_at(nr * rb);
+            let (out_head, out_tail) = std::mem::take(&mut out).split_at_mut(nr);
+            bytes = bytes_tail;
+            out = out_tail;
+            scope.spawn(move || codec.vec_dot_rows(bytes_head, x, out_head));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,5 +261,27 @@ mod tests {
         decode_chunked(c, &serial, &mut out_serial, 1);
         decode_chunked(c, &par, &mut out_par, 3);
         assert_eq!(out_serial, out_par);
+    }
+
+    #[test]
+    fn chunked_vec_dot_rows_identical_to_serial() {
+        // Row-parallel quantized matvec: 7 rows over 3 threads (ragged
+        // split) must match the serial loop bit-for-bit.
+        let fmt = QuantFormat::Q4K;
+        let n = fmt.block_weights() * 2;
+        let rows = 7;
+        let mut rng = Pcg::new(59);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let c = codec(fmt);
+        let mut packed = vec![0u8; fmt.row_bytes(rows * n).unwrap()];
+        encode_chunked(c, &data, None, &mut packed, 1);
+        let rb = fmt.row_bytes(n).unwrap();
+        let mut serial = vec![0f32; rows];
+        let mut par = vec![0f32; rows];
+        vec_dot_rows_chunked(c, &packed, &x, &mut serial, rb, 1);
+        vec_dot_rows_chunked(c, &packed, &x, &mut par, rb, 3);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&serial), bits(&par));
     }
 }

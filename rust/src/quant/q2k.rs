@@ -127,4 +127,12 @@ mod tests {
             assert!((v - 0.75).abs() < 0.01, "got {v}");
         }
     }
+
+    #[test]
+    fn q2k_decode_kernel_and_vec_dot_bit_identical() {
+        crate::quant::kernels::assert_decode_and_vec_dot_identity(
+            crate::quant::QuantFormat::Q2K,
+            0x2D,
+        );
+    }
 }

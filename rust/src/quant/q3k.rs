@@ -169,6 +169,14 @@ mod tests {
     }
 
     #[test]
+    fn q3k_decode_kernel_and_vec_dot_bit_identical() {
+        crate::quant::kernels::assert_decode_and_vec_dot_identity(
+            crate::quant::QuantFormat::Q3K,
+            0x3D,
+        );
+    }
+
+    #[test]
     fn monotone_error_q3_worse_than_q4() {
         let mut rng = Pcg::new(37);
         let src: Vec<f32> = (0..QK_K * 8).map(|_| rng.next_normal()).collect();

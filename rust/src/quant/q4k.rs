@@ -208,6 +208,14 @@ mod tests {
     }
 
     #[test]
+    fn q4k_decode_kernel_and_vec_dot_bit_identical() {
+        crate::quant::kernels::assert_decode_and_vec_dot_identity(
+            crate::quant::QuantFormat::Q4K,
+            0x4D,
+        );
+    }
+
+    #[test]
     fn q4k_positive_shift_handled() {
         // All-positive data exercises the min path.
         let mut rng = Pcg::new(17);

@@ -57,4 +57,12 @@ mod tests {
         let rt = roundtrip(QuantFormat::Q5K, &src, None).unwrap();
         assert_eq!(rt, src);
     }
+
+    #[test]
+    fn q5k_decode_kernel_and_vec_dot_bit_identical() {
+        crate::quant::kernels::assert_decode_and_vec_dot_identity(
+            crate::quant::QuantFormat::Q5K,
+            0x5D,
+        );
+    }
 }

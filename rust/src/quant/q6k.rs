@@ -116,6 +116,14 @@ mod tests {
     }
 
     #[test]
+    fn q6k_decode_kernel_and_vec_dot_bit_identical() {
+        crate::quant::kernels::assert_decode_and_vec_dot_identity(
+            crate::quant::QuantFormat::Q6K,
+            0x6D,
+        );
+    }
+
+    #[test]
     fn q6k_code_packing_roundtrips() {
         let mut codes = [0u8; QK_K];
         let mut rng = Pcg::new(3);

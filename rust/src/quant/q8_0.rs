@@ -67,4 +67,12 @@ mod tests {
         let rt = roundtrip(QuantFormat::Q8_0, &src, None).unwrap();
         assert_eq!(rt, src);
     }
+
+    #[test]
+    fn q8_0_decode_kernel_and_vec_dot_bit_identical() {
+        crate::quant::kernels::assert_decode_and_vec_dot_identity(
+            crate::quant::QuantFormat::Q8_0,
+            0x8D,
+        );
+    }
 }

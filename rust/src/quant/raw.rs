@@ -36,6 +36,10 @@ impl BlockCodec for F32Codec {
             *o = f32::from_le_bytes(b.try_into().unwrap());
         }
     }
+
+    fn vec_dot(&self, bytes: &[u8], x: &[f32]) -> f32 {
+        super::kernels::vec_dot_f32(bytes, x)
+    }
 }
 
 /// IEEE half-precision codec: 2 little-endian bytes per weight.
@@ -64,6 +68,10 @@ impl BlockCodec for F16Codec {
         for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
             *o = f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap()));
         }
+    }
+
+    fn vec_dot(&self, bytes: &[u8], x: &[f32]) -> f32 {
+        super::kernels::vec_dot_f16(bytes, x)
     }
 }
 

@@ -24,6 +24,11 @@
 //! sub-lane inputs). Both arms are **byte-identical** — same lane
 //! assignment, same per-lane order, same reduction, no implicit FMA —
 //! which `tests/golden_vectors.rs` and the in-module tests pin.
+//!
+//! The *decode* direction has the same dual-arm shape: the format
+//! modules' plain `dequantize` loops are the scalar reference, and the
+//! lane-chunked batch decoders / fused `vec_dot` live in
+//! [`super::kernels`] (dispatched via `DSQ_SCALAR_DECODE`).
 
 use super::simd::{self, qround, QkxSums};
 

@@ -27,6 +27,9 @@ use std::sync::OnceLock;
 /// Accumulator width. Eight f32 lanes = one AVX register / two NEON
 /// registers; wide enough to hide the add latency, small enough that
 /// the five-accumulator `qkx` kernel still fits the register file.
+/// The decode-side kernels ([`super::kernels`]) share this width and
+/// the `hsum` fold, so encode search and fused `vec_dot` follow one
+/// reduction-order contract.
 pub const LANES: usize = 8;
 
 /// Whether the lane kernels are active. Default on; set

@@ -16,6 +16,11 @@
 //! `container::quantize_container`: workers claim tensors from an
 //! atomic cursor, keep per-worker scratch, and results are assembled in
 //! manifest order, so the output is byte-identical at any thread count.
+//! Inside each worker the per-block decode runs through the
+//! lane-chunked batch kernels in `quant::kernels` (scalar reference
+//! under `DSQ_SCALAR_DECODE=1` — bit-identical either way), so
+//! load-time dequantization rides the same fast read path as the fused
+//! serving matvec.
 //! The thread budget is split by [`crate::quant::parallel::fan_out`] —
 //! many tensors get one worker each, while a single giant tensor is
 //! split at *block* granularity through

@@ -21,9 +21,18 @@
 //! `xla_extension` backend is not vendorable here): literals and the
 //! whole loader path are real, while `compile`/`execute` report the
 //! missing backend gracefully.
+//!
+//! Since PR 3 the engine also has a **native CPU matvec backend**
+//! ([`native`], `Engine::load_native`, `dsq serve|eval --native`): an
+//! embed → unembed step computed directly on the container's quantized
+//! payloads through the fused `quant::kernels` vec_dot path, so the
+//! coordinator can execute prefill/decode waves offline — no HLO
+//! artifacts, no PJRT — while exercising the same read-side hot path
+//! the compiled graphs dequantize in-kernel.
 
 pub mod loader;
 pub mod manifest;
+pub mod native;
 pub mod xla;
 
 use crate::container::Container;
@@ -31,14 +40,26 @@ use anyhow::{anyhow, bail, Result};
 use manifest::{Dtype, Manifest, Role};
 use std::path::Path;
 
-/// A compiled (model, scheme) serving engine: prefill + decode
-/// executables plus the weight literals from the checkpoint.
+/// A (model, scheme) serving engine behind one of two backends:
+/// compiled PJRT prefill/decode executables with weight literals from
+/// the checkpoint ([`Engine::load`]), or the native CPU matvec
+/// fallback that executes steps directly on the quantized container
+/// through the fused `vec_dot` kernels ([`Engine::load_native`] — no
+/// HLO artifacts or PJRT backend needed).
 pub struct Engine {
-    pub client: std::sync::Arc<xla::PjRtClient>,
-    pub prefill: Phase,
-    pub decode: Phase,
+    backend: Backend,
     pub model_name: String,
     pub scheme_name: String,
+}
+
+enum Backend {
+    Pjrt {
+        /// Keeps the PJRT client alive for the executables' lifetime.
+        _client: std::sync::Arc<xla::PjRtClient>,
+        prefill: Phase,
+        decode: Phase,
+    },
+    Native(native::NativeMatvec),
 }
 
 /// One compiled phase and its manifest.
@@ -180,23 +201,59 @@ impl Engine {
             &ckpt,
             threads,
         )?;
-        Ok(Engine { client, prefill, decode, model_name, scheme_name })
+        Ok(Engine {
+            backend: Backend::Pjrt { _client: client, prefill, decode },
+            model_name,
+            scheme_name,
+        })
+    }
+
+    /// Load the native CPU matvec backend from a checkpoint alone — no
+    /// HLO artifacts, no PJRT. Steps execute on the container's
+    /// quantized payloads through the fused `vec_dot` kernels (see
+    /// [`native`]); `threads` bounds the per-step row fan-out.
+    pub fn load_native(ckpt_path: &Path, threads: usize) -> Result<Engine> {
+        Self::native_from_container(Container::open(ckpt_path)?, threads)
+    }
+
+    /// [`Engine::load_native`] over an already-open container (taken
+    /// over whole — the backend serves from its payloads in place).
+    pub fn native_from_container(ckpt: Container, threads: usize) -> Result<Engine> {
+        let model_name = ckpt.model.name.clone();
+        let scheme_name = ckpt.scheme_name.clone();
+        Ok(Engine {
+            backend: Backend::Native(native::NativeMatvec::from_container(ckpt, threads)?),
+            model_name,
+            scheme_name,
+        })
     }
 
     pub fn batch(&self) -> usize {
-        self.prefill.manifest.batch
+        match &self.backend {
+            Backend::Pjrt { prefill, .. } => prefill.manifest.batch,
+            Backend::Native(m) => m.batch(),
+        }
     }
 
     pub fn prompt_len(&self) -> usize {
-        self.prefill.manifest.prompt_len
+        match &self.backend {
+            Backend::Pjrt { prefill, .. } => prefill.manifest.prompt_len,
+            Backend::Native(m) => m.prompt_len(),
+        }
     }
 
     pub fn max_ctx(&self) -> usize {
-        self.prefill.manifest.max_ctx
+        match &self.backend {
+            Backend::Pjrt { prefill, .. } => prefill.manifest.max_ctx,
+            Backend::Native(m) => m.max_ctx(),
+        }
     }
 
     pub fn vocab(&self) -> usize {
-        self.prefill.manifest.vocab
+        match &self.backend {
+            Backend::Pjrt { prefill, .. } => prefill.manifest.vocab,
+            Backend::Native(m) => m.vocab(),
+        }
     }
 
     /// Run prefill over a padded prompt batch.
@@ -208,13 +265,29 @@ impl Engine {
         if tokens.len() != b * t || lengths.len() != b {
             bail!("prefill input shape mismatch");
         }
-        let lead = vec![i32_literal(&[b, t], tokens)?, i32_literal(&[b], lengths)?];
-        let mut out = self.prefill.run(&lead)?;
-        let logits = out.remove(0);
-        Ok(StepOutput {
-            logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            cache: out,
-        })
+        match &self.backend {
+            Backend::Pjrt { prefill, .. } => {
+                let lead = vec![i32_literal(&[b, t], tokens)?, i32_literal(&[b], lengths)?];
+                let mut out = prefill.run(&lead)?;
+                let logits = out.remove(0);
+                Ok(StepOutput {
+                    logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                    cache: out,
+                })
+            }
+            Backend::Native(m) => {
+                // Prefill collapses to the last prompt token per slot.
+                let last: Vec<i32> = lengths
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &l)| {
+                        let l = (l.max(1) as usize).min(t);
+                        tokens[i * t + l - 1]
+                    })
+                    .collect();
+                Ok(StepOutput { logits: m.step_logits(&last)?, cache: Vec::new() })
+            }
+        }
     }
 
     /// Run one decode step: `token`/`pos` are [batch]; `cache` from the
@@ -229,24 +302,34 @@ impl Engine {
         if token.len() != b || pos.len() != b {
             bail!("decode input shape mismatch");
         }
-        let mut lead = vec![i32_literal(&[b], token)?, i32_literal(&[b], pos)?];
-        lead.extend(cache);
-        let mut out = self.decode.run(&lead)?;
-        let logits = out.remove(0);
-        Ok(StepOutput {
-            logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            cache: out,
-        })
+        match &self.backend {
+            Backend::Pjrt { decode, .. } => {
+                let mut lead = vec![i32_literal(&[b], token)?, i32_literal(&[b], pos)?];
+                lead.extend(cache);
+                let mut out = decode.run(&lead)?;
+                let logits = out.remove(0);
+                Ok(StepOutput {
+                    logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                    cache: out,
+                })
+            }
+            Backend::Native(m) => {
+                Ok(StepOutput { logits: m.step_logits(token)?, cache: Vec::new() })
+            }
+        }
     }
 
     /// An empty cache of the right shape (useful for tests).
     pub fn empty_cache(&self) -> Result<Vec<xla::Literal>> {
-        self.decode
-            .manifest
-            .inputs
-            .iter()
-            .filter(|i| matches!(i.role, Role::CacheKv | Role::CacheK | Role::CacheV))
-            .map(|i| f32_zeros(&i.shape))
-            .collect()
+        match &self.backend {
+            Backend::Pjrt { decode, .. } => decode
+                .manifest
+                .inputs
+                .iter()
+                .filter(|i| matches!(i.role, Role::CacheKv | Role::CacheK | Role::CacheV))
+                .map(|i| f32_zeros(&i.shape))
+                .collect(),
+            Backend::Native(_) => Ok(Vec::new()),
+        }
     }
 }

@@ -16,6 +16,11 @@
 //!   bindings back in is a one-line change (replace this module with
 //!   the `xla` crate dependency); nothing else in `runtime` needs to
 //!   move.
+//! - **Execution has a CPU fallback**: hosts without PJRT can still
+//!   serve through [`super::native`] (`Engine::load_native`), which
+//!   runs decode steps directly on quantized container payloads via
+//!   the fused `quant::kernels` matvec — the compile error below
+//!   points there.
 
 use std::fmt;
 use std::path::Path;
@@ -195,7 +200,8 @@ pub struct PjRtClient {
 pub const BACKEND_UNAVAILABLE: &str =
     "PJRT backend unavailable: this build uses the offline xla stub \
      (rust/src/runtime/xla.rs); install the xla_extension bindings and swap \
-     the stub for the real crate to execute HLO artifacts";
+     the stub for the real crate to execute HLO artifacts, or serve with \
+     the native CPU matvec backend (`dsq serve --native`)";
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient, XlaError> {

@@ -1,0 +1,141 @@
+//! Decode-kernel property suite: the lane-chunked batch decoders and
+//! fused `vec_dot` kernels (`quant::kernels`) against their scalar
+//! references, across dispatch arms and thread counts.
+//!
+//! The contract under test (see `quant/mod.rs` module docs):
+//!
+//! - `decode_blocks` is **bit-identical** between the lane-kernel arm
+//!   and the format modules' scalar loops, at every thread count;
+//! - `vec_dot(q, x)` equals `kernels::dot_lanes(decode_blocks(q), x)`
+//!   bit-for-bit on both arms (fixed 8-lane reduction order, no FMA);
+//! - `vec_dot_rows` is bit-identical at thread counts {1, 2, 8} and
+//!   equals the per-row `vec_dot` loop.
+//!
+//! The runtime dispatch itself (`DSQ_SCALAR_DECODE`) is process-global,
+//! so cross-arm assertions go through the pinned seams
+//! (`decode_blocks_pinned` / `vec_dot_pinned`); CI additionally reruns
+//! the whole suite under `DSQ_SCALAR_DECODE=1` so the env-selected path
+//! is exercised on both arms too.
+
+use dsq::quant::{self, kernels, QuantFormat};
+use dsq::util::rng::Pcg;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn seeded(fmt: QuantFormat, nblocks: usize, salt: u64) -> (Vec<f32>, Vec<u8>) {
+    let n = fmt.block_weights() * nblocks;
+    let mut rng = Pcg::new(salt ^ ((fmt.block_bytes() as u64) << 8) ^ nblocks as u64);
+    let data: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+    let packed = quant::quantize(fmt, &data, None).unwrap();
+    (data, packed)
+}
+
+#[test]
+fn decode_arms_bit_identical_across_thread_counts() {
+    for fmt in QuantFormat::ALL {
+        for nblocks in [1usize, 4, 9] {
+            let (data, packed) = seeded(fmt, nblocks, 0xDECD);
+            let n = data.len();
+            let mut fast = vec![0f32; n];
+            let mut scalar = vec![0f32; n];
+            kernels::decode_blocks_pinned(fmt, &packed, &mut fast, true);
+            kernels::decode_blocks_pinned(fmt, &packed, &mut scalar, false);
+            assert_eq!(bits(&fast), bits(&scalar), "{fmt} nblocks={nblocks} arms");
+            // The dispatch-selected parallel path must land on the same
+            // bits at every thread count.
+            for threads in [1usize, 2, 8] {
+                let mut out = vec![0f32; n];
+                quant::dequantize_into_with(fmt, &packed, &mut out, threads).unwrap();
+                assert_eq!(bits(&out), bits(&fast), "{fmt} nblocks={nblocks} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vec_dot_matches_decode_then_dot_on_both_arms() {
+    for fmt in QuantFormat::ALL {
+        let (data, packed) = seeded(fmt, 5, 0xD07D);
+        let n = data.len();
+        let mut rng = Pcg::new(0xAC71 ^ fmt.block_bytes() as u64);
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let mut decoded = vec![0f32; n];
+        kernels::decode_blocks_pinned(fmt, &packed, &mut decoded, false);
+        let want = kernels::dot_lanes(&decoded, &x);
+        for fast in [false, true] {
+            let got = kernels::vec_dot_pinned(fmt, &packed, &x, fast);
+            assert_eq!(got.to_bits(), want.to_bits(), "{fmt} fast={fast}");
+        }
+        // Public dispatch-selected entry point agrees too.
+        let got = quant::vec_dot(fmt, &packed, &x).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits(), "{fmt} dispatch");
+    }
+}
+
+#[test]
+fn vec_dot_rows_bit_identical_across_thread_counts() {
+    for fmt in QuantFormat::ALL {
+        let rows = 13usize;
+        let n = fmt.block_weights().max(64) * 2;
+        let mut rng = Pcg::new(0x505 ^ fmt.block_bytes() as u64);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let packed = quant::quantize(fmt, &data, None).unwrap();
+        let mut base = vec![0f32; rows];
+        quant::vec_dot_rows_with(fmt, &packed, &x, &mut base, 1).unwrap();
+        // Serial result is exactly the per-row fused dot.
+        let rb = fmt.row_bytes(n).unwrap();
+        for (r, row) in packed.chunks_exact(rb).enumerate() {
+            let want = quant::vec_dot(fmt, row, &x).unwrap();
+            assert_eq!(base[r].to_bits(), want.to_bits(), "{fmt} row {r}");
+        }
+        for threads in [2usize, 8] {
+            let mut out = vec![0f32; rows];
+            quant::vec_dot_rows_with(fmt, &packed, &x, &mut out, threads).unwrap();
+            assert_eq!(bits(&out), bits(&base), "{fmt} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn fused_matvec_equals_dequantize_then_matvec() {
+    // The end-to-end identity the native serving backend relies on:
+    // fused vec_dot_rows over encoded rows == decode the whole matrix,
+    // then the canonical lane dot per row — bit for bit.
+    for fmt in [QuantFormat::Q4K, QuantFormat::Q3K, QuantFormat::Q8_0] {
+        let rows = 16usize;
+        let n = 1024usize;
+        let mut rng = Pcg::new(0xFA57 ^ fmt.block_bytes() as u64);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        let packed = quant::quantize(fmt, &data, None).unwrap();
+        let mut fused = vec![0f32; rows];
+        quant::vec_dot_rows(fmt, &packed, &x, &mut fused).unwrap();
+        let decoded = quant::dequantize(fmt, &packed, rows * n).unwrap();
+        let reference: Vec<f32> = decoded
+            .chunks_exact(n)
+            .map(|row| kernels::dot_lanes(row, &x))
+            .collect();
+        assert_eq!(bits(&fused), bits(&reference), "{fmt}");
+    }
+}
+
+#[test]
+fn decode_and_vec_dot_total_on_arbitrary_bytes() {
+    // Decoders are total: any byte pattern decodes (and dots) without
+    // panicking through both arms — the loader may see corrupt input.
+    let mut rng = Pcg::new(0xB1D);
+    for fmt in QuantFormat::ALL {
+        let n = fmt.block_weights() * 3;
+        let nb = fmt.row_bytes(n).unwrap();
+        let bytes: Vec<u8> = (0..nb).map(|_| rng.next_u64() as u8).collect();
+        let x = vec![1.0f32; n];
+        let mut out = vec![0f32; n];
+        for fast in [false, true] {
+            kernels::decode_blocks_pinned(fmt, &bytes, &mut out, fast);
+            let _ = kernels::vec_dot_pinned(fmt, &bytes, &x, fast);
+        }
+    }
+}
