@@ -14,11 +14,17 @@
 //! Pass `--json PATH` to additionally write every measurement (and the
 //! speedup summary) as a JSON report — CI uploads it as an artifact.
 //! Pass `--json-decode PATH` to also write the decode-side measurements
-//! alone (CI's `BENCH_decode.json`, seeding the decode perf trajectory).
+//! alone (CI's `BENCH_decode.json`, seeding the decode perf trajectory),
+//! and `--json-forward PATH` for the **native forward-pass tokens/s**
+//! section alone (CI's `BENCH_forward.json`): prefill + greedy decode
+//! through the full MLA+MoE step on encoded DQ3_K_M / Q4_K_M weights,
+//! serial vs row-parallel matvecs.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::model::ModelConfig;
 use dsq::quant::{self, kernels, parallel, scalar, QuantFormat};
+use dsq::runtime::forward::{ForwardPass, MatvecMode};
+use dsq::runtime::native::NATIVE_MAX_CTX;
 use dsq::scheme::builtin;
 use dsq::util::bench::{Bench, BenchResult};
 use dsq::util::json;
@@ -185,10 +191,17 @@ fn main() -> anyhow::Result<()> {
         .position(|a| a == "--json-decode")
         .and_then(|i| argv.get(i + 1))
         .cloned();
+    let json_forward_path = argv
+        .iter()
+        .position(|a| a == "--json-forward")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let mut report: Vec<json::Value> = Vec::new();
     let mut summary: Vec<(String, f64)> = Vec::new();
     let mut decode_report: Vec<json::Value> = Vec::new();
     let mut decode_summary: Vec<(String, f64)> = Vec::new();
+    let mut forward_report: Vec<json::Value> = Vec::new();
+    let mut forward_summary: Vec<(String, f64)> = Vec::new();
 
     let n = 256 * 1024; // 256K weights ≈ a large expert matrix slice
     let mut rng = Pcg::new(1);
@@ -456,9 +469,67 @@ fn main() -> anyhow::Result<()> {
     }
     decode_summary.push(("decode_dq3_k_m_speedup".to_string(), dq3_speedup));
 
-    // Decode measurements ride the main report too.
+    // --- native forward pass (PR 4): tokens/s through the full
+    // MLA+MoE step on encoded weights — prefill an 8-token prompt and
+    // greedily decode 8 more, per scheme, serial vs row-parallel
+    // matvecs. This is the `dsq eval --native` per-token cost.
+    println!("\n# native forward pass: tiny-moe prefill(8) + greedy decode(8)\n");
+    let prompt = [1i32, 17, 300, 42, 511, 7, 5, 260];
+    let decode_steps = 8usize;
+    let total_tokens = (prompt.len() + decode_steps) as f64;
+    for scheme_name in ["dq3_k_m", "q4_k_m"] {
+        let qbytes = quantize_container_with(&src, &builtin::scheme(scheme_name)?, None, cores)?
+            .to_bytes();
+        let mut tok_s = Vec::new();
+        // On a 1-core host the parallel arm is the serial arm — skip
+        // the duplicate measurement (and the meaningless speedup row).
+        let mut thread_counts = vec![1usize];
+        if cores > 1 {
+            thread_counts.push(cores);
+        }
+        let mut fwd = ForwardPass::new(Container::from_bytes(qbytes)?, 1, NATIVE_MAX_CTX)?;
+        for &threads in &thread_counts {
+            fwd.set_mode(MatvecMode::Threads(threads));
+            let mut logits = vec![0f32; fwd.vocab()];
+            // `quick` preset: one iteration is a whole 16-token wave.
+            let r = Bench::quick().throughput_items(total_tokens as u64).run(
+                &format!("forward-tokens/{scheme_name}/threads{threads}"),
+                || {
+                    let mut cache = fwd.new_cache();
+                    for (j, &t) in prompt.iter().enumerate() {
+                        let want =
+                            if j + 1 == prompt.len() { Some(&mut logits[..]) } else { None };
+                        fwd.forward_token(t, &mut cache, want).unwrap();
+                    }
+                    for _ in 0..decode_steps {
+                        let tok = dsq::coordinator::sampler::argmax(&logits);
+                        fwd.forward_token(tok, &mut cache, Some(&mut logits)).unwrap();
+                    }
+                    logits[0]
+                },
+            );
+            let tps = total_tokens / (r.median_ns / 1e9);
+            println!(
+                "forward {scheme_name:<8} threads {threads:>2}: {tps:>8.1} tokens/s \
+                 ({:.2} ms/token)",
+                r.median_ns / 1e6 / total_tokens
+            );
+            forward_report.push(result_json(&r));
+            forward_summary
+                .push((format!("forward_{scheme_name}_t{threads}_tokens_per_s"), tps));
+            tok_s.push(tps);
+        }
+        if tok_s.len() == 2 {
+            forward_summary
+                .push((format!("forward_{scheme_name}_parallel_speedup"), tok_s[1] / tok_s[0]));
+        }
+    }
+
+    // Decode + forward measurements ride the main report too.
     report.extend(decode_report.iter().cloned());
     summary.extend(decode_summary.iter().cloned());
+    report.extend(forward_report.iter().cloned());
+    summary.extend(forward_summary.iter().cloned());
 
     if let Some(path) = json_decode_path {
         let fields: Vec<(&str, json::Value)> = decode_summary
@@ -474,6 +545,23 @@ fn main() -> anyhow::Result<()> {
         ]);
         std::fs::write(&path, json::to_string_pretty(&doc))?;
         eprintln!("wrote decode bench JSON → {path}");
+    }
+
+    if let Some(path) = json_forward_path {
+        let fields: Vec<(&str, json::Value)> = forward_summary
+            .iter()
+            .map(|(k, v)| (k.as_str(), json::num(*v)))
+            .collect();
+        let doc = json::obj(vec![
+            ("bench", json::str_("codec-forward")),
+            ("cores", json::num(cores as f64)),
+            ("prompt_tokens", json::num(prompt.len() as f64)),
+            ("decode_tokens", json::num(decode_steps as f64)),
+            ("results", json::Value::Arr(forward_report.clone())),
+            ("summary", json::obj(fields)),
+        ]);
+        std::fs::write(&path, json::to_string_pretty(&doc))?;
+        eprintln!("wrote forward bench JSON → {path}");
     }
 
     if let Some(path) = json_path {

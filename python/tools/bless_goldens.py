@@ -18,7 +18,15 @@ golden test fails and the fixtures must be re-blessed from Rust (delete
   fold, `qround` ties-away clamp — see `rust/src/quant/scalar.rs`),
 - every block packer (`q2_k` … `q8_0`, raw `f32`/`f16`),
 - `synthetic_f32_container` + `Scheme::plan` + the `.dsq` writer
-  (compact JSON, 64-byte tensor / 4096-byte data alignment).
+  (compact JSON, 64-byte tensor / 4096-byte data alignment),
+- the native **tiny-MoE forward pass** (`rust/src/runtime/forward.rs`):
+  the deterministic f32 transcendentals of `util::math` (exp / sin /
+  cos / softmax / silu), the lane-ordered matvecs and RMSNorm sums, MLA
+  attention with the compressed-latent KV cache, RoPE via the
+  angle-addition recurrence, and top-k expert routing — producing the
+  `forward.*.fnv64` golden-logits checksums for the DQ3_K_M and Q4_K_M
+  containers (cross-checked against an independent float64 numpy
+  forward before anything is written).
 
 Every fixture is additionally cross-checked against the *independent*
 mirrors that already live in `python/compile/` (quants.py dequantizer,
@@ -816,24 +824,42 @@ def model_json_text() -> str:
     return json.dumps(TINY_MOE, separators=(",", ":"))
 
 
-def build_container(scheme_name: str, tensor_values: dict) -> bytes:
-    """Serialize the quantized container exactly as the Rust Writer."""
+def quantize_census(scheme_name: str, tensor_values: dict) -> list[dict]:
+    """Quantize every census tensor under `scheme_name`, returning
+    per-tensor dicts with the encoded payload (shared by the container
+    serializer and the forward-pass mirror)."""
     scheme = load_scheme(scheme_name)
-    census = tiny_moe_census()
-    entries = []
-    data = bytearray()
-    for name, cls, layer, shape in census:
+    out = []
+    for name, cls, layer, shape in tiny_moe_census():
         fmt = assign(scheme, cls, layer, shape)
-        payload = bytes(quantize(fmt, tensor_values[name]))
-        aligned = -(-len(data) // 64) * 64
-        data.extend(b"\0" * (aligned - len(data)))
-        entries.append(
+        out.append(
             {
                 "name": name,
                 "class": cls,
                 "layer": layer,
                 "shape": shape,
                 "format": fmt,
+                "payload": quantize(fmt, tensor_values[name]),
+            }
+        )
+    return out
+
+
+def build_container(scheme_name: str, quantized: list[dict]) -> bytes:
+    """Serialize the quantized container exactly as the Rust Writer."""
+    entries = []
+    data = bytearray()
+    for q in quantized:
+        payload = bytes(q["payload"])
+        aligned = -(-len(data) // 64) * 64
+        data.extend(b"\0" * (aligned - len(data)))
+        entries.append(
+            {
+                "name": q["name"],
+                "class": q["class"],
+                "layer": q["layer"],
+                "shape": q["shape"],
+                "format": q["format"],
                 "offset": aligned,
                 "nbytes": len(payload),
             }
@@ -865,6 +891,370 @@ def fnv64(b: bytes) -> int:
         h ^= byte
         h = (h * 0x100000001B3) & MASK64
     return h
+
+
+# ---------------------------------------------------------------------------
+# util::math mirror — deterministic f32 transcendentals
+# (see rust/src/util/math.rs; every op below is a single-rounded f32
+# add/mul/div/sqrt or a bit manipulation, replayed in np.float32)
+# ---------------------------------------------------------------------------
+
+_LOG2E = F32("1.4426950408889634")
+_LN2_HI = F32("0.693359375")
+_LN2_LO = F32("-0.00021219444")
+_EXP_P = [
+    F32(c)
+    for c in (
+        "1.0",
+        "1.0",
+        "0.5",
+        "0.16666667",
+        "0.041666667",
+        "0.0083333333",
+        "0.0013888889",
+        "0.00019841270",
+    )
+]
+_SIN_P = [F32(c) for c in ("-0.16666667", "0.0083333333", "-0.00019841270", "0.0000027557319")]
+_COS_P = [F32(c) for c in ("-0.5", "0.041666667", "-0.0013888889", "0.000024801587")]
+_ROPE_LN = F32("9.2103404")  # ln(10000)
+_RMS_EPS = F32("1e-6")
+
+
+def _round_ties_away(v: np.ndarray) -> np.ndarray:
+    """f32::round — ties away from zero (same trick as qround)."""
+    v64 = np.asarray(v, dtype=np.float64)
+    return np.where(v64 >= 0.0, np.floor(v64 + 0.5), np.ceil(v64 - 0.5)).astype(F32)
+
+
+def exp_f32(x) -> np.ndarray:
+    """Vectorized mirror of util::math::exp_f32."""
+    x = np.minimum(np.maximum(np.asarray(x, dtype=F32), F32(-87.0)), F32(88.0))
+    n = _round_ties_away(x * _LOG2E)
+    r = (x - n * _LN2_HI) - n * _LN2_LO
+    p = np.full_like(r, _EXP_P[7])
+    for k in range(6, -1, -1):
+        p = p * r + _EXP_P[k]
+    scale = ((n.astype(np.int64) + 127).astype(np.uint32) << np.uint32(23)).view(F32)
+    return p * scale
+
+
+def _sin_small(x: np.float32) -> np.float32:
+    t = F32(x * x)
+    p = _SIN_P[3]
+    for k in (2, 1, 0):
+        p = F32(F32(p * t) + _SIN_P[k])
+    return F32(x + F32(F32(x * t) * p))
+
+
+def _cos_small(x: np.float32) -> np.float32:
+    t = F32(x * x)
+    p = _COS_P[3]
+    for k in (2, 1, 0):
+        p = F32(F32(p * t) + _COS_P[k])
+    return F32(F32(1.0) + F32(t * p))
+
+
+def softmax_f32(x: np.ndarray) -> np.ndarray:
+    """Mirror of util::math::softmax_in_place: front-to-back max fold,
+    exp+sum in index order, then divide."""
+    m = np.max(x)  # exact max — order-independent
+    e = exp_f32(x - m)
+    s = F32(0.0)
+    for v in e:
+        s = F32(s + v)
+    return e / s
+
+
+# ---------------------------------------------------------------------------
+# runtime::forward mirror — the tiny-MoE forward pass on decoded blocks
+# ---------------------------------------------------------------------------
+#
+# The Rust engine computes every matvec with the fused vec_dot kernels,
+# whose contract is bit-identity with `dot_lanes` over the decoded
+# blocks; python/compile/quants.py decodes bit-exactly (same op order
+# as the Rust format modules), so the mirror decodes each tensor once
+# and replays the canonical lane reduction: element i → lane i%8,
+# sequential per-lane f32 sums, hsum fold starting from +0.0.
+
+
+def lane_matvec(w: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """[rows, n]·[n] in the canonical lane order (n % 8 == 0 on every
+    forward-pass shape)."""
+    prods = w * x[None, :]
+    rows, n = prods.shape
+    chunks = prods.reshape(rows, n // LANES, LANES)
+    acc = np.zeros((rows, LANES), dtype=F32)
+    for c in range(n // LANES):
+        acc = acc + chunks[:, c, :]
+    s = np.zeros(rows, dtype=F32)  # hsum starts from +0.0
+    for lane in range(LANES):
+        s = s + acc[:, lane]
+    return s
+
+
+def lane_dot(a: np.ndarray, b: np.ndarray) -> np.float32:
+    return lane_matvec(a.reshape(1, -1), b)[0]
+
+
+def rms_norm_f32(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    ss = lane_dot(x, x)
+    ms = F32(F32(ss / F32(float(x.size))) + _RMS_EPS)
+    scale = F32(F32(1.0) / np.float32(np.sqrt(ms)))
+    return (x * scale) * w
+
+
+class RopeMirror:
+    """Mirror of runtime::forward::RopeTable."""
+
+    def __init__(self, dim: int, max_ctx: int):
+        half = dim // 2
+        self.half = half
+        self.cos = np.zeros((max_ctx, half), dtype=F32)
+        self.sin = np.zeros((max_ctx, half), dtype=F32)
+        for i in range(half):
+            a = F32(F32(float(2 * i)) / F32(float(dim)))
+            theta = F32(exp_f32(np.array([F32(-F32(a * _ROPE_LN))], dtype=F32))[0])
+            c1, s1 = _cos_small(theta), _sin_small(theta)
+            c, s = F32(1.0), F32(0.0)
+            for p in range(max_ctx):
+                self.cos[p, i] = c
+                self.sin[p, i] = s
+                cn = F32(F32(c * c1) - F32(s * s1))
+                sn = F32(F32(s * c1) + F32(c * s1))
+                c, s = cn, sn
+
+    def apply(self, x: np.ndarray, pos: int) -> np.ndarray:
+        a, b = x[0::2], x[1::2]
+        c, s = self.cos[pos], self.sin[pos]
+        out = np.empty_like(x)
+        out[0::2] = a * c - b * s
+        out[1::2] = a * s + b * c
+        return out
+
+
+class ForwardMirror:
+    """Bit-exact mirror of runtime::forward::ForwardPass over the
+    quantized tiny-moe census (weights decoded once via the
+    python/compile/quants.py unpackers)."""
+
+    def __init__(self, quantized: list[dict], max_ctx: int = 24):
+        self.c = TINY_MOE
+        self.max_ctx = max_ctx
+        self.w = {}
+        for q in quantized:
+            n = int(np.prod(q["shape"]))
+            raw = np.frombuffer(bytes(q["payload"]), dtype=np.uint8)
+            self.w[q["name"]] = pyquants.dequantize(q["format"], raw, n).reshape(q["shape"])
+        self.rope = RopeMirror(self.c["qk_rope_head_dim"], max_ctx)
+
+    def _lw(self, li: int, stem: str) -> np.ndarray:
+        return self.w[f"blk.{li}.{stem}.weight"]
+
+    def _mlp(self, gate_w, up_w, down_w, xn):
+        g = lane_matvec(gate_w, xn)
+        u = lane_matvec(up_w, xn)
+        sig = F32(1.0) / (F32(1.0) + exp_f32(-g))  # sigmoid via exp_f32
+        a = (g * sig) * u  # silu(g) · u, in the Rust op order
+        return lane_matvec(down_w, a)
+
+    def _attention(self, li, xn, cache, pos):
+        c = self.c
+        nope, rope_d, vh = c["qk_nope_head_dim"], c["qk_rope_head_dim"], c["v_head_dim"]
+        qk_head = nope + rope_d
+        kv_rank = c["kv_lora_rank"]
+        q_a = lane_matvec(self._lw(li, "attn_q_a"), xn)
+        q_an = rms_norm_f32(q_a, self._lw(li, "attn_q_a_norm"))
+        q = lane_matvec(self._lw(li, "attn_q_b"), q_an)
+        kv_a = lane_matvec(self._lw(li, "attn_kv_a_mqa"), xn)
+        cache[pos, :kv_rank] = rms_norm_f32(kv_a[:kv_rank], self._lw(li, "attn_kv_a_norm"))
+        cache[pos, kv_rank:] = self.rope.apply(kv_a[kv_rank:], pos)
+        ctx = pos + 1
+        kvb_w = c["n_heads"] * (nope + vh)
+        kvb = np.zeros((ctx, kvb_w), dtype=F32)
+        w_kvb = self._lw(li, "attn_kv_b")
+        for p in range(ctx):
+            kvb[p] = lane_matvec(w_kvb, cache[p, :kv_rank])
+        inv = F32(F32(1.0) / np.float32(np.sqrt(F32(float(qk_head)))))
+        heads = np.zeros(c["n_heads"] * vh, dtype=F32)
+        for hd in range(c["n_heads"]):
+            qh = q[hd * qk_head : (hd + 1) * qk_head].copy()
+            qh[nope:] = self.rope.apply(qh[nope:], pos)
+            scores = np.zeros(ctx, dtype=F32)
+            for p in range(ctx):
+                kn = kvb[p, hd * (nope + vh) : hd * (nope + vh) + nope]
+                s = F32(lane_dot(qh[:nope], kn) + lane_dot(qh[nope:], cache[p, kv_rank:]))
+                scores[p] = F32(s * inv)
+            scores = softmax_f32(scores)
+            oh = heads[hd * vh : (hd + 1) * vh]
+            for p in range(ctx):
+                v = kvb[p, hd * (nope + vh) + nope : hd * (nope + vh) + nope + vh]
+                oh += v * scores[p]
+        return lane_matvec(self._lw(li, "attn_output"), heads)
+
+    def _ffn(self, li, xn):
+        c = self.c
+        if li < c["first_dense"]:
+            return self._mlp(
+                self._lw(li, "ffn_gate"), self._lw(li, "ffn_up"), self._lw(li, "ffn_down"), xn
+            )
+        probs = softmax_f32(lane_matvec(self._lw(li, "ffn_gate_inp"), xn))
+        picked = sorted(
+            range(c["n_routed_experts"]), key=lambda i: (-float(probs[i]), i)
+        )[: c["n_active_experts"]]
+        picked.sort()
+        z = F32(0.0)
+        for e in picked:
+            z = F32(z + probs[e])
+        out = self._mlp(
+            self._lw(li, "ffn_gate_shexp"),
+            self._lw(li, "ffn_up_shexp"),
+            self._lw(li, "ffn_down_shexp"),
+            xn,
+        )
+        for e in picked:
+            w = F32(probs[e] / z)
+            y = self._mlp(
+                self._lw(li, "ffn_gate_exps")[e],
+                self._lw(li, "ffn_up_exps")[e],
+                self._lw(li, "ffn_down_exps")[e],
+                xn,
+            )
+            out = out + y * w
+        return out
+
+    def _step(self, tok, caches, pos, want_logits):
+        c = self.c
+        h = self.w["token_embd.weight"][tok % c["vocab_size"]].copy()
+        for li in range(c["n_layers"]):
+            xn = rms_norm_f32(h, self._lw(li, "attn_norm"))
+            h = h + self._attention(li, xn, caches[li], pos)
+            xn = rms_norm_f32(h, self._lw(li, "ffn_norm"))
+            h = h + self._ffn(li, xn)
+        if not want_logits:
+            return None
+        xn = rms_norm_f32(h, self.w["output_norm.weight"])
+        return lane_matvec(self.w["output.weight"], xn)
+
+    def run(self, prompt: list[int], n_decode: int) -> list[np.ndarray]:
+        """Prefill `prompt`, then `n_decode` greedy steps; returns the
+        last-prompt-token logits followed by each decode step's logits
+        (the exact rows the forward.*.fnv64 fixtures hash)."""
+        c = self.c
+        caches = [
+            np.zeros((self.max_ctx, c["kv_lora_rank"] + c["qk_rope_head_dim"]), dtype=F32)
+            for _ in range(c["n_layers"])
+        ]
+        rows = []
+        pos = 0
+        out = None
+        for j, tok in enumerate(prompt):
+            out = self._step(tok, caches, pos, j + 1 == len(prompt))
+            pos += 1
+        rows.append(out)
+        for _ in range(n_decode):
+            tok = int(np.argmax(out))
+            out = self._step(tok, caches, pos, True)
+            pos += 1
+            rows.append(out)
+        return rows
+
+
+# The forward-golden script (mirrored verbatim by the Rust suite in
+# rust/tests/native_forward.rs): prefill this prompt on the seed-0x601D
+# tiny-moe container, then 4 greedy decode steps; hash the last-prompt
+# logits row plus each decode row.
+FORWARD_PROMPT = [1, 17, 300, 42, 511, 7, 5, 260]
+FORWARD_DECODE_STEPS = 4
+
+
+def forward_reference_f64(weights: dict, prompt, step_tokens, max_ctx=24):
+    """Independent plain-numpy float64 forward (np.dot reductions, libm
+    exp/sin/cos) used to sanity-check the bit-exact mirror: structural
+    agreement within float tolerance, no shared reduction code."""
+    c = TINY_MOE
+    nope, rope_d, vh = c["qk_nope_head_dim"], c["qk_rope_head_dim"], c["v_head_dim"]
+    kv_rank = c["kv_lora_rank"]
+    qk_head = nope + rope_d
+    w = {k: np.asarray(v, dtype=np.float64) for k, v in weights.items()}
+    inv_freq = 10000.0 ** (-np.arange(0, rope_d, 2) / rope_d)
+
+    def rope(x, pos):
+        ang = pos * inv_freq
+        co, si = np.cos(ang), np.sin(ang)
+        out = np.empty_like(x)
+        out[0::2] = x[0::2] * co - x[1::2] * si
+        out[1::2] = x[0::2] * si + x[1::2] * co
+        return out
+
+    def norm(x, g):
+        return x / np.sqrt(np.mean(x * x) + 1e-6) * g
+
+    def softmax(x):
+        e = np.exp(x - np.max(x))
+        return e / e.sum()
+
+    def mlp(li, stem_g, stem_u, stem_d, xn, e=None):
+        gw, uw, dw = (w[f"blk.{li}.{s}.weight"] for s in (stem_g, stem_u, stem_d))
+        if e is not None:
+            gw, uw, dw = gw[e], uw[e], dw[e]
+        g = gw @ xn
+        a = g / (1.0 + np.exp(-g)) * (uw @ xn)
+        return dw @ a
+
+    caches = [np.zeros((max_ctx, kv_rank + rope_d)) for _ in range(c["n_layers"])]
+    rows = []
+    for pos, tok in enumerate(list(prompt) + list(step_tokens)):
+        h = w["token_embd.weight"][tok % c["vocab_size"]].copy()
+        for li in range(c["n_layers"]):
+            xn = norm(h, w[f"blk.{li}.attn_norm.weight"])
+            q = w[f"blk.{li}.attn_q_b.weight"] @ norm(
+                w[f"blk.{li}.attn_q_a.weight"] @ xn, w[f"blk.{li}.attn_q_a_norm.weight"]
+            )
+            kv_a = w[f"blk.{li}.attn_kv_a_mqa.weight"] @ xn
+            caches[li][pos, :kv_rank] = norm(
+                kv_a[:kv_rank], w[f"blk.{li}.attn_kv_a_norm.weight"]
+            )
+            caches[li][pos, kv_rank:] = rope(kv_a[kv_rank:], pos)
+            ctx = pos + 1
+            kvb = caches[li][:ctx, :kv_rank] @ w[f"blk.{li}.attn_kv_b.weight"].T
+            heads = np.zeros(c["n_heads"] * vh)
+            for hd in range(c["n_heads"]):
+                qh = q[hd * qk_head : (hd + 1) * qk_head].copy()
+                qh[nope:] = rope(qh[nope:], pos)
+                kn = kvb[:, hd * (nope + vh) : hd * (nope + vh) + nope]
+                vv = kvb[:, hd * (nope + vh) + nope : hd * (nope + vh) + nope + vh]
+                sc = (kn @ qh[:nope] + caches[li][:ctx, kv_rank:] @ qh[nope:]) / np.sqrt(
+                    qk_head
+                )
+                heads[hd * vh : (hd + 1) * vh] = softmax(sc) @ vv
+            h = h + w[f"blk.{li}.attn_output.weight"] @ heads
+            xn = norm(h, w[f"blk.{li}.ffn_norm.weight"])
+            if li < c["first_dense"]:
+                h = h + mlp(li, "ffn_gate", "ffn_up", "ffn_down", xn)
+            else:
+                probs = softmax(w[f"blk.{li}.ffn_gate_inp.weight"] @ xn)
+                picked = sorted(
+                    range(c["n_routed_experts"]), key=lambda i: (-probs[i], i)
+                )[: c["n_active_experts"]]
+                picked.sort()
+                z = probs[picked].sum()
+                y = mlp(li, "ffn_gate_shexp", "ffn_up_shexp", "ffn_down_shexp", xn)
+                for e in picked:
+                    y = y + probs[e] / z * mlp(
+                        li, "ffn_gate_exps", "ffn_up_exps", "ffn_down_exps", xn, e
+                    )
+                h = h + y
+        if pos >= len(prompt) - 1:
+            xn = norm(h, w["output_norm.weight"])
+            rows.append(w["output.weight"] @ xn)
+    return rows
+
+
+def rel_l2(a, b) -> float:
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30))
 
 
 # ---------------------------------------------------------------------------
@@ -1002,7 +1392,8 @@ def main():
             )
             assert mine == theirs, (scheme_name, name, mine, theirs)
 
-        blob = build_container(scheme_name, tensor_values)
+        quantized = quantize_census(scheme_name, tensor_values)
+        blob = build_container(scheme_name, quantized)
         # Sanity: parse with the independent container reader + decode spot
         # tensors through the independent dequantizer.
         from compile import container as pycontainer
@@ -1026,6 +1417,39 @@ def main():
         line = f"{fnv64(blob):016x} {len(blob)}\n"
         outputs[f"container.{scheme_name}.fnv64"] = line
         print(f"· container {scheme_name}: {len(blob)} bytes, fnv64 {line.split()[0]}")
+
+        # Forward-pass golden: the bit-exact mirror of the native
+        # tiny-MoE forward over this scheme's encoded weights (prefill
+        # FORWARD_PROMPT + greedy decode; hash every emitted logits row).
+        fwd = ForwardMirror(quantized)
+        rows = fwd.run(FORWARD_PROMPT, FORWARD_DECODE_STEPS)
+        fwd_blob = b"".join(np.ascontiguousarray(r, dtype=F32).tobytes() for r in rows)
+        fwd_line = f"{fnv64(fwd_blob):016x} {len(fwd_blob)}\n"
+        outputs[f"forward.{scheme_name}.fnv64"] = fwd_line
+        print(
+            f"· forward {scheme_name}: {len(rows)} logits rows, fnv64 {fwd_line.split()[0]}"
+        )
+
+        # Independent structural check: a plain-numpy float64 forward
+        # (np.dot reductions, libm transcendentals — no shared code)
+        # over the same decoded weights must agree within float
+        # tolerance; and over the f32 source weights within the
+        # quantization-error band (reported for the Rust differential
+        # suite's thresholds).
+        step_toks = [int(np.argmax(rows[i])) for i in range(FORWARD_DECODE_STEPS)]
+        ref_rows = forward_reference_f64(fwd.w, FORWARD_PROMPT, step_toks)
+        worst = max(rel_l2(a, b) for a, b in zip(rows, ref_rows))
+        assert worst < 2e-3, f"mirror vs f64 reference drift: {worst}"
+        src_w = {
+            name: tensor_values[name].reshape(shape)
+            for name, _cls, _layer, shape in census
+        }
+        src_rows = forward_reference_f64(src_w, FORWARD_PROMPT, step_toks)
+        qerr = max(rel_l2(a, b) for a, b in zip(rows, src_rows))
+        print(
+            f"  forward {scheme_name}: f64-reference rel-L2 {worst:.2e}, "
+            f"quantization rel-L2 vs f32 weights {qerr:.3f}"
+        )
 
     if check_only:
         drift = []

@@ -18,10 +18,21 @@
 //!
 //! The coordinator is backend-agnostic: it drives the same wave loop
 //! whether the engine holds compiled PJRT executables or the native
-//! CPU matvec backend (`Engine::load_native`), which executes decode
-//! steps directly on quantized container payloads through the fused
-//! `quant::kernels` vec_dot path — `tests/native_engine.rs` runs a
-//! full wave over DQ3_K_M weights that way, with no HLO artifacts.
+//! CPU backend (`Engine::load_native`), which executes the full
+//! tiny-MoE forward pass (MLA attention + routed experts) directly on
+//! quantized container payloads through the fused `quant::kernels`
+//! vec_dot path — `tests/native_engine.rs` runs a full wave over
+//! DQ3_K_M weights that way, with no HLO artifacts. Per-wave state
+//! (PJRT cache literals or native per-slot KV caches) is threaded
+//! through `StepOutput::state`; finished and unused slots are marked
+//! inactive with a negative position so the native backend skips their
+//! forward passes entirely.
+//!
+//! Admission control happens at `submit` time: a prompt that does not
+//! fit the engine's compiled prompt length, or that could not generate
+//! a single token within the engine's max context (`NATIVE_MAX_CTX`
+//! for the native backend), is rejected with a clear error instead of
+//! failing mid-wave with a KV-cache overflow.
 
 pub mod metrics;
 pub mod sampler;
@@ -74,13 +85,28 @@ impl Coordinator {
         &self.engine
     }
 
-    /// Enqueue a request.
+    /// Enqueue a request. Rejected here — not mid-wave — when the
+    /// prompt exceeds the engine's compiled prompt length or leaves no
+    /// room to generate within its max context (the per-slot KV caches
+    /// of the native backend are hard-bounded by `NATIVE_MAX_CTX`; a
+    /// prompt at or past that bound would only surface as a KV-cache
+    /// overflow in the middle of a batch wave).
     pub fn submit(&mut self, req: Request) -> Result<()> {
         if req.prompt.is_empty() || req.prompt.len() > self.engine.prompt_len() {
             bail!(
                 "prompt length {} out of range 1..={}",
                 req.prompt.len(),
                 self.engine.prompt_len()
+            );
+        }
+        let max_ctx = self.engine.max_ctx();
+        if req.prompt.len() >= max_ctx {
+            bail!(
+                "prompt length {} leaves no room to generate within the engine's \
+                 max context {max_ctx}: a wave would overflow the per-slot KV cache; \
+                 submit at most {} prompt tokens",
+                req.prompt.len(),
+                max_ctx.saturating_sub(1)
             );
         }
         self.queue.push_back(req);
@@ -113,9 +139,11 @@ impl Coordinator {
         let wave: Vec<Request> = self.queue.drain(..n).collect();
         let start = Instant::now();
 
-        // Pack prompts into the fixed batch (unused slots get length 1).
+        // Pack prompts into the fixed batch. Unused slots get length 0
+        // — the native backend skips their prefill forward passes
+        // entirely (the PJRT backend clamps to the compiled shape).
         let mut tokens = vec![PAD; b * t];
-        let mut lengths = vec![1i32; b];
+        let mut lengths = vec![0i32; b];
         for (i, req) in wave.iter().enumerate() {
             tokens[i * t..i * t + req.prompt.len()].copy_from_slice(&req.prompt);
             lengths[i] = req.prompt.len() as i32;
@@ -128,14 +156,21 @@ impl Coordinator {
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); n];
         let mut done = vec![false; n];
         let mut pos: Vec<i32> = lengths.clone();
+        // Every slot's KV cache holds at most its prompt plus `budget`
+        // generated tokens; capping at `max_ctx` minus the wave's
+        // longest prompt keeps every slot inside the per-slot bound
+        // without under-budgeting short-prompt waves on engines whose
+        // compiled prompt length exceeds the context bound. (`submit`
+        // already rejected prompts with no generation room at all.)
+        let max_prompt = lengths[..n].iter().copied().max().unwrap_or(1).max(1) as usize;
         let budget = wave
             .iter()
             .map(|r| r.params.max_new_tokens)
             .max()
             .unwrap_or(0)
-            .min(max_ctx - t);
+            .min(max_ctx.saturating_sub(max_prompt).max(1));
 
-        for _ in 0..budget {
+        for step_i in 0..budget {
             // Sample the next token for every live slot.
             let mut next = vec![PAD; b];
             for i in 0..n {
@@ -150,15 +185,24 @@ impl Coordinator {
                 }
                 next[i] = tok;
             }
-            if done[..n].iter().all(|&d| d) {
+            // No decode after the final sample: its logits would never
+            // be consumed, and since PR 4 a decode step is a full
+            // batch-wide attention+MoE pass, not a cheap matvec.
+            if step_i + 1 == budget || done[..n].iter().all(|&d| d) {
                 break;
             }
+            // Finished and unused slots are marked inactive (pos −1):
+            // the native backend skips their forward passes entirely
+            // instead of burning a full attention+MoE step on PAD.
+            let step_pos: Vec<i32> = (0..b)
+                .map(|i| if i < n && !done[i] { pos[i] } else { -1 })
+                .collect();
             // Only slots still generating consume this decode step —
             // charging all n wave slots would inflate the reported
             // per-slot decode throughput once early slots hit EOS.
             let live = done[..n].iter().filter(|&&d| !d).count();
             let decode_start = Instant::now();
-            step = self.engine.run_decode(&next, &pos, step.cache)?;
+            step = self.engine.run_decode(&next, &step_pos, step.state)?;
             self.metrics.record_decode(decode_start.elapsed(), live);
             for p in pos.iter_mut() {
                 *p += 1;

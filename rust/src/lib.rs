@@ -34,7 +34,13 @@
 //!   dequantizing at load time when the manifest asks for f32 weights,
 //!   fanned out across tensors and blocks with byte-identical results
 //!   at any thread count; `runtime::xla` is the offline PJRT stub that
-//!   keeps the crate buildable without the native backend.
+//!   keeps the crate buildable without the native backend. The offline
+//!   serving path is `runtime::native` + `runtime::forward`: the full
+//!   tiny-MoE transformer forward pass (RMSNorm, MLA attention with
+//!   per-slot KV caches, top-k routed experts, unembed) executed
+//!   directly on container-encoded weights through the fused `vec_dot`
+//!   kernels, bit-identical at every thread count and pinned by the
+//!   `tests/golden/forward.*.fnv64` checksums.
 //! - [`coordinator`] — the serving layer: request router, continuous
 //!   batcher, KV-cache sessions, sampler, metrics.
 //! - [`eval`] — the benchmark harness reproducing Tables 2–5: nine proxy

@@ -450,10 +450,13 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
 /// pipelines and require byte-identical containers. Then the
 /// serving weight loader's decode direction: preparing f32 weight
 /// payloads from a quantized checkpoint must be byte-identical at every
-/// thread count. Finally, the vec_dot identity: for every format the
+/// thread count. Then the vec_dot identity: for every format the
 /// fused `vec_dot(q, x)` must equal the same-reduction-order lane dot
 /// over `decode_blocks(q)` bit-for-bit, on *both* dispatch arms (lane
-/// kernels and scalar reference). Exits non-zero on any mismatch.
+/// kernels and scalar reference). Finally the native forward pass: the
+/// full MLA+MoE step over encoded DQ3_K_M / Q4_K_M containers must
+/// yield bit-identical logits across matvec thread counts and across
+/// both pinned dispatch arms. Exits non-zero on any mismatch.
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let threads = args.threads_flag(quant::parallel::max_threads())?;
     println!("# codec selfcheck: serial vs {threads} threads\n");
@@ -577,12 +580,55 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         );
     }
 
+    // Forward-pass identity: the full native tiny-MoE forward (MLA
+    // attention + routed experts on encoded blocks) must produce
+    // bit-identical logits across matvec thread counts AND across both
+    // pinned vec_dot dispatch arms (lane kernels vs scalar reference).
+    println!();
+    {
+        use dsq::runtime::forward::{ForwardPass, MatvecMode};
+        let toks = [1i32, 17, 300, 42, 511];
+        for scheme_name in ["dq3_k_m", "q4_k_m"] {
+            let scheme = builtin::scheme(scheme_name)?;
+            let qbytes = quantize_container_with(&src, &scheme, None, threads)?.to_bytes();
+            let run = |mode: MatvecMode| -> Result<Vec<u32>> {
+                let q = Container::from_bytes(qbytes.clone())?;
+                let mut fwd =
+                    ForwardPass::new(q, 1, dsq::runtime::native::NATIVE_MAX_CTX)?;
+                fwd.set_mode(mode);
+                let mut cache = fwd.new_cache();
+                let mut logits = vec![0f32; fwd.vocab()];
+                let mut bits = Vec::new();
+                for &t in &toks {
+                    fwd.forward_token(t, &mut cache, Some(&mut logits))?;
+                    bits.extend(logits.iter().map(|v| v.to_bits()));
+                }
+                Ok(bits)
+            };
+            let serial = run(MatvecMode::Threads(1))?;
+            let par = run(MatvecMode::Threads(threads))?;
+            let lanes = run(MatvecMode::Pinned(true))?;
+            let scalar = run(MatvecMode::Pinned(false))?;
+            let ok = serial == par && serial == lanes && serial == scalar;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "  forward/{:<12} ({} steps × {} logits, 1 vs {threads} threads + both arms): {}",
+                scheme_name,
+                toks.len(),
+                serial.len() / toks.len(),
+                if ok { "identical" } else { "MISMATCH" }
+            );
+        }
+    }
+
     if failures > 0 {
         bail!("selfcheck FAILED: {failures} mismatching case(s)");
     }
     println!(
-        "\nselfcheck passed: parallel encode, loader decode and fused vec_dot \
-         are bit-identical to their serial/scalar references"
+        "\nselfcheck passed: parallel encode, loader decode, fused vec_dot and \
+         the native forward pass are bit-identical to their serial/scalar references"
     );
     Ok(())
 }

@@ -184,6 +184,19 @@ impl ModelConfig {
         self.kind == ModelKind::MlaMoe && i >= self.first_dense
     }
 
+    /// Per-head query dimension for MLA models (`nope + rope` parts).
+    pub fn qk_head_dim(&self) -> usize {
+        self.qk_nope_head_dim + self.qk_rope_head_dim
+    }
+
+    /// Floats cached per (layer, token) by the MLA runtime: the
+    /// compressed KV latent plus the shared post-RoPE rope key. This is
+    /// the width of every `runtime::forward::KvCache` row (and the
+    /// out-dimension of `attn_kv_a_mqa`).
+    pub fn kv_cache_width(&self) -> usize {
+        self.kv_lora_rank + self.qk_rope_head_dim
+    }
+
     /// MLA KV-cache bytes per token (compressed latent + rope key),
     /// stored in f16: `(kv_lora_rank + qk_rope_head_dim) · n_layers · 2`.
     /// Dense GQA caches full K/V heads instead.
@@ -210,6 +223,11 @@ mod tests {
         assert!(c.is_moe_layer(3));
         // MLA cache: (512 + 64) · 61 · 2 bytes ≈ 70.3 KB/token.
         assert_eq!(c.kv_bytes_per_token(), (512 + 64) * 61 * 2);
+        assert_eq!(c.qk_head_dim(), 128 + 64);
+        assert_eq!(c.kv_cache_width(), 512 + 64);
+        // The runtime cache width is exactly what kv_bytes_per_token
+        // accounts (f16 storage in the analytic model).
+        assert_eq!(c.kv_bytes_per_token(), c.kv_cache_width() * c.n_layers * 2);
     }
 
     #[test]

@@ -1,0 +1,664 @@
+//! The tiny-MoE transformer forward pass, executed **directly on
+//! container-encoded weights**.
+//!
+//! This is the computation `dsq serve|eval --native` runs: a complete
+//! DeepSeek-V3-shaped decoder step — RMSNorm, MLA attention with a
+//! compressed-latent KV cache, top-k routed + shared expert FFNs, and
+//! the final unembedding — where **every matrix–vector product goes
+//! through the fused [`crate::quant::vec_dot_rows_with`] kernels on the
+//! container's packed payloads**. No weight matrix is ever materialized
+//! as a resident f32 table; only the per-layer norm vectors (f32 in
+//! every scheme, a few KiB total) are decoded at load time.
+//!
+//! ## Layer map
+//!
+//! Weights are resolved from the container by the GGUF-style names the
+//! [`crate::model::ModelConfig::census`] declares, and every shape is
+//! validated against the config before serving:
+//!
+//! ```text
+//! token_embd.weight                  [vocab, hidden]     one row decoded per token
+//! blk.{i}.attn_norm.weight           [hidden]            f32, decoded at load
+//! blk.{i}.attn_q_a.weight            [q_rank, hidden]    fused matvec
+//! blk.{i}.attn_q_a_norm.weight       [q_rank]            f32, decoded at load
+//! blk.{i}.attn_q_b.weight            [heads·(nope+rope), q_rank]
+//! blk.{i}.attn_kv_a_mqa.weight       [kv_rank+rope, hidden]
+//! blk.{i}.attn_kv_a_norm.weight      [kv_rank]
+//! blk.{i}.attn_kv_b.weight           [heads·(nope+v), kv_rank]
+//! blk.{i}.attn_output.weight         [hidden, heads·v]
+//! blk.{i}.ffn_norm.weight            [hidden]
+//! dense layers (i < first_dense):    ffn_gate / ffn_up / ffn_down
+//! MoE layers:                        ffn_gate_inp (f32 router) +
+//!                                    ffn_{gate,up,down}_exps [n_exp, ..] +
+//!                                    ffn_{gate,up,down}_shexp
+//! output_norm.weight                 [hidden]
+//! output.weight                      [vocab, hidden]     fused matvec per step
+//! ```
+//!
+//! ## MLA attention
+//!
+//! The cache stores, per layer and position, the **compressed** state
+//! MLA is designed around: the RMS-normed KV latent (`kv_lora_rank`
+//! floats) plus the shared post-RoPE rope key (`qk_rope_head_dim`
+//! floats) — `kv_lora_rank + qk_rope_head_dim` floats per layer-token,
+//! exactly the footprint [`crate::model::ModelConfig::kv_bytes_per_token`]
+//! accounts. At each step the per-head no-position keys and values are
+//! re-expanded from the cached latents through the (encoded)
+//! `attn_kv_b` matvec. The cache is hard-bounded: a token forwarded at
+//! `position ≥ max_ctx` is an error, raised *before* any state changes.
+//!
+//! ## Determinism contract
+//!
+//! Identical to the PR-3 `vec_dot` contract, extended end to end: every
+//! dot product — quantized matvecs, attention scores, the RMSNorm sum
+//! of squares — reduces in the canonical 8-lane order
+//! ([`crate::quant::kernels::dot_lanes`]); every nonlinearity uses the
+//! deterministic [`crate::util::math`] kernels; softmaxes, weighted-sum
+//! folds and expert combines walk fixed sequential orders. Consequently
+//! the logits are **bit-identical** across matvec thread counts and
+//! across the `DSQ_SCALAR_DECODE` dispatch arms, and are mirrored
+//! bit-exactly by `python/tools/bless_goldens.py` (the committed
+//! `rust/tests/golden/forward.*.fnv64` checksums pin both sides).
+
+use crate::container::{Container, TensorEntry};
+use crate::model::{ModelConfig, ModelKind};
+use crate::quant::{self, kernels, QuantFormat};
+use crate::util::math;
+use anyhow::{bail, Context, Result};
+
+/// RMSNorm epsilon (matches the proxy training configuration).
+pub const RMS_EPS: f32 = 1e-6;
+/// RoPE frequency base (`θ_i = BASE^(−2i/d)`).
+pub const ROPE_BASE_LN: f32 = 9.2103404; // ln(10000)
+
+/// How the per-matvec dot products are executed.
+#[derive(Debug, Clone, Copy)]
+pub enum MatvecMode {
+    /// Row-parallel fused matvec over up to N threads, runtime-selected
+    /// dispatch arm (the serving default; bit-identical for every N).
+    Threads(usize),
+    /// Serial matvec with the dispatch arm pinned (`true` = lane
+    /// kernels, `false` = scalar reference) — the seam `dsq selfcheck`
+    /// and the arm-identity tests use.
+    Pinned(bool),
+}
+
+/// Per-slot KV cache: `[n_layers][max_ctx][kv_rank + rope]` f32, filled
+/// front to back; `len` positions are valid in every layer.
+pub struct KvCache {
+    data: Vec<f32>,
+    len: usize,
+    width: usize,
+    max_ctx: usize,
+}
+
+impl KvCache {
+    fn new(n_layers: usize, width: usize, max_ctx: usize) -> Self {
+        KvCache { data: vec![0.0; n_layers * max_ctx * width], len: 0, width, max_ctx }
+    }
+
+    /// Tokens cached so far (== the next token's position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.max_ctx
+    }
+
+    fn row(&self, layer: usize, pos: usize) -> &[f32] {
+        let at = (layer * self.max_ctx + pos) * self.width;
+        &self.data[at..at + self.width]
+    }
+
+    fn row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
+        let at = (layer * self.max_ctx + pos) * self.width;
+        &mut self.data[at..at + self.width]
+    }
+}
+
+/// One layer's resolved weights: encoded entries for everything the
+/// fused matvec consumes, decoded f32 vectors for the (tiny) norms.
+struct LayerWeights {
+    attn_norm: Vec<f32>,
+    q_a: TensorEntry,
+    q_a_norm: Vec<f32>,
+    q_b: TensorEntry,
+    kv_a: TensorEntry,
+    kv_a_norm: Vec<f32>,
+    kv_b: TensorEntry,
+    attn_output: TensorEntry,
+    ffn_norm: Vec<f32>,
+    ffn: LayerFfn,
+}
+
+enum LayerFfn {
+    Dense {
+        gate: TensorEntry,
+        up: TensorEntry,
+        down: TensorEntry,
+    },
+    Moe {
+        router: TensorEntry,
+        gate_exps: TensorEntry,
+        up_exps: TensorEntry,
+        down_exps: TensorEntry,
+        gate_shexp: TensorEntry,
+        up_shexp: TensorEntry,
+        down_shexp: TensorEntry,
+    },
+}
+
+/// Precomputed rotary table: `cos/sin(pos · θ_i)` for every position
+/// below `max_ctx` and every frequency `θ_i = BASE^(−2i/d)`.
+///
+/// Built from [`math::exp_f32`] (frequencies), [`math::sin_small`] /
+/// [`math::cos_small`] (the ≤ 1-radian per-step angles) and the
+/// exactly-rounded angle-addition recurrence — no libm, so the table is
+/// reproducible bit-for-bit anywhere (including the Python mirror).
+struct RopeTable {
+    half: usize,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl RopeTable {
+    fn new(dim: usize, max_ctx: usize) -> Self {
+        let half = dim / 2;
+        let mut cos = vec![0.0f32; max_ctx * half];
+        let mut sin = vec![0.0f32; max_ctx * half];
+        for i in 0..half {
+            let a = (2 * i) as f32 / dim as f32;
+            let theta = math::exp_f32(-(a * ROPE_BASE_LN));
+            let (c1, s1) = (math::cos_small(theta), math::sin_small(theta));
+            let (mut c, mut s) = (1.0f32, 0.0f32);
+            for p in 0..max_ctx {
+                cos[p * half + i] = c;
+                sin[p * half + i] = s;
+                let (cn, sn) = (c * c1 - s * s1, s * c1 + c * s1);
+                c = cn;
+                s = sn;
+            }
+        }
+        RopeTable { half, cos, sin }
+    }
+
+    /// Rotate consecutive pairs `(x[2i], x[2i+1])` by `pos · θ_i`.
+    fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), 2 * self.half);
+        for i in 0..self.half {
+            let c = self.cos[pos * self.half + i];
+            let s = self.sin[pos * self.half + i];
+            let (a, b) = (x[2 * i], x[2 * i + 1]);
+            x[2 * i] = a * c - b * s;
+            x[2 * i + 1] = a * s + b * c;
+        }
+    }
+}
+
+/// RMSNorm with the canonical lane-ordered sum of squares:
+/// `out[i] = (x[i] · rsqrt(mean(x²) + ε)) · w[i]`.
+pub fn rms_norm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    debug_assert!(x.len() == w.len() && x.len() == out.len());
+    let ss = kernels::dot_lanes(x, x);
+    let scale = 1.0 / (ss / x.len() as f32 + RMS_EPS).sqrt();
+    for ((o, &xv), &wv) in out.iter_mut().zip(x).zip(w) {
+        *o = (xv * scale) * wv;
+    }
+}
+
+/// The forward-pass model over an opened (quantized or f32) container.
+pub struct ForwardPass {
+    cfg: ModelConfig,
+    ckpt: Container,
+    token_embd: TensorEntry,
+    embd_row_bytes: usize,
+    layers: Vec<LayerWeights>,
+    output_norm: Vec<f32>,
+    output: TensorEntry,
+    rope: RopeTable,
+    max_ctx: usize,
+    mode: MatvecMode,
+}
+
+impl ForwardPass {
+    /// Resolve and validate the full layer map from `ckpt` (taken over
+    /// whole; payloads are served in place). `threads` bounds the
+    /// row-parallel matvec fan-out; `max_ctx` bounds every
+    /// [`KvCache`] this model creates.
+    pub fn new(ckpt: Container, threads: usize, max_ctx: usize) -> Result<Self> {
+        let cfg = ckpt.model.clone();
+        if cfg.kind != ModelKind::MlaMoe {
+            bail!(
+                "native forward pass supports MLA+MoE models; container model {:?} is {:?}",
+                cfg.name,
+                cfg.kind
+            );
+        }
+        if max_ctx == 0 {
+            bail!("native forward pass needs max_ctx ≥ 1");
+        }
+        let entry = |name: &str, shape: &[usize]| -> Result<TensorEntry> {
+            let t = ckpt.tensor(name).context("native forward layer map")?;
+            if t.shape != shape {
+                bail!("tensor {name}: shape {:?} does not match config {:?}", t.shape, shape);
+            }
+            // Fused matvecs consume whole rows of blocks.
+            t.format
+                .row_bytes(*shape.last().unwrap())
+                .with_context(|| format!("tensor {name}: rows not block-aligned"))?;
+            Ok(t.clone())
+        };
+        let norm = |name: &str, len: usize| -> Result<Vec<f32>> {
+            let t = entry(name, &[len])?;
+            ckpt.dequantize(&t)
+        };
+
+        let (h, qk_head) = (cfg.hidden_size, cfg.qk_head_dim());
+        let token_embd = entry("token_embd.weight", &[cfg.vocab_size, h])?;
+        let embd_row_bytes = token_embd.format.row_bytes(h)?;
+        let output = entry("output.weight", &[cfg.vocab_size, h])?;
+        let output_norm = norm("output_norm.weight", h)?;
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let blk = |stem: &str| format!("blk.{i}.{stem}.weight");
+            let ffn = if cfg.is_moe_layer(i) {
+                let mi = cfg.moe_intermediate_size;
+                let sh = cfg.n_shared_experts * mi;
+                LayerFfn::Moe {
+                    router: entry(&blk("ffn_gate_inp"), &[cfg.n_routed_experts, h])?,
+                    gate_exps: entry(&blk("ffn_gate_exps"), &[cfg.n_routed_experts, mi, h])?,
+                    up_exps: entry(&blk("ffn_up_exps"), &[cfg.n_routed_experts, mi, h])?,
+                    down_exps: entry(&blk("ffn_down_exps"), &[cfg.n_routed_experts, h, mi])?,
+                    gate_shexp: entry(&blk("ffn_gate_shexp"), &[sh, h])?,
+                    up_shexp: entry(&blk("ffn_up_shexp"), &[sh, h])?,
+                    down_shexp: entry(&blk("ffn_down_shexp"), &[h, sh])?,
+                }
+            } else {
+                LayerFfn::Dense {
+                    gate: entry(&blk("ffn_gate"), &[cfg.intermediate_size, h])?,
+                    up: entry(&blk("ffn_up"), &[cfg.intermediate_size, h])?,
+                    down: entry(&blk("ffn_down"), &[h, cfg.intermediate_size])?,
+                }
+            };
+            layers.push(LayerWeights {
+                attn_norm: norm(&blk("attn_norm"), h)?,
+                q_a: entry(&blk("attn_q_a"), &[cfg.q_lora_rank, h])?,
+                q_a_norm: norm(&blk("attn_q_a_norm"), cfg.q_lora_rank)?,
+                q_b: entry(&blk("attn_q_b"), &[cfg.n_heads * qk_head, cfg.q_lora_rank])?,
+                kv_a: entry(&blk("attn_kv_a_mqa"), &[cfg.kv_cache_width(), h])?,
+                kv_a_norm: norm(&blk("attn_kv_a_norm"), cfg.kv_lora_rank)?,
+                kv_b: entry(
+                    &blk("attn_kv_b"),
+                    &[cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), cfg.kv_lora_rank],
+                )?,
+                attn_output: entry(&blk("attn_output"), &[h, cfg.n_heads * cfg.v_head_dim])?,
+                ffn_norm: norm(&blk("ffn_norm"), h)?,
+                ffn,
+            });
+        }
+        let rope = RopeTable::new(cfg.qk_rope_head_dim, max_ctx);
+        Ok(ForwardPass {
+            cfg,
+            ckpt,
+            token_embd,
+            embd_row_bytes,
+            layers,
+            output_norm,
+            output,
+            rope,
+            max_ctx,
+            mode: MatvecMode::Threads(threads.max(1)),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Scheme name of the underlying container.
+    pub fn scheme_name(&self) -> &str {
+        &self.ckpt.scheme_name
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab_size
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.max_ctx
+    }
+
+    /// The stored format of the unembedding matrix (what the per-step
+    /// vocab-wide fused matvec runs on).
+    pub fn output_format(&self) -> QuantFormat {
+        self.output.format
+    }
+
+    /// Override the matvec execution mode (thread count or pinned
+    /// dispatch arm). Logits are bit-identical under every mode — that
+    /// is the point of the seam (`dsq selfcheck`, arm-identity tests).
+    pub fn set_mode(&mut self, mode: MatvecMode) {
+        self.mode = mode;
+    }
+
+    /// A fresh, empty per-slot cache bounded by this model's `max_ctx`.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), self.max_ctx)
+    }
+
+    /// Quantized matvec `out[r] = row_r · x` on encoded bytes, under
+    /// the active [`MatvecMode`].
+    fn matvec_bytes(
+        &self,
+        fmt: QuantFormat,
+        bytes: &[u8],
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        match self.mode {
+            MatvecMode::Threads(n) => quant::vec_dot_rows_with(fmt, bytes, x, out, n),
+            MatvecMode::Pinned(fast) => {
+                let rb = fmt.row_bytes(x.len())?;
+                if bytes.len() != rb * out.len() {
+                    bail!("pinned matvec: {} bytes != {} rows × {rb}", bytes.len(), out.len());
+                }
+                for (o, row) in out.iter_mut().zip(bytes.chunks_exact(rb)) {
+                    *o = kernels::vec_dot_pinned(fmt, row, x, fast);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn matvec(&self, t: &TensorEntry, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.matvec_bytes(t.format, self.ckpt.bytes(t), x, out)
+    }
+
+    /// The encoded rows of expert `e` inside a `[n_exp, out, in]`
+    /// expert-stacked tensor.
+    fn expert_bytes(&self, t: &TensorEntry, e: usize) -> Result<&[u8]> {
+        let per = t.format.row_bytes(t.shape[2])? * t.shape[1];
+        Ok(&self.ckpt.bytes(t)[e * per..(e + 1) * per])
+    }
+
+    /// Decode one embedding row (`token_embd.weight[t]`) into `h`.
+    /// Out-of-range ids wrap into the vocabulary (padding slots send
+    /// `PAD`, and sampled ids are always in range).
+    fn embed(&self, tok: i32, h: &mut [f32]) -> Result<()> {
+        let t = tok.rem_euclid(self.cfg.vocab_size as i32) as usize;
+        let bytes = self.ckpt.bytes(&self.token_embd);
+        let row = &bytes[t * self.embd_row_bytes..(t + 1) * self.embd_row_bytes];
+        quant::dequantize_into(self.token_embd.format, row, h)
+    }
+
+    /// `down(silu(gate(x)) · up(x))` with all three projections fused
+    /// on encoded rows.
+    fn mlp(
+        &self,
+        gate: (QuantFormat, &[u8]),
+        up: (QuantFormat, &[u8]),
+        down: (QuantFormat, &[u8]),
+        inter: usize,
+        x: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let mut g = vec![0f32; inter];
+        let mut u = vec![0f32; inter];
+        self.matvec_bytes(gate.0, gate.1, x, &mut g)?;
+        self.matvec_bytes(up.0, up.1, x, &mut u)?;
+        for (gv, &uv) in g.iter_mut().zip(&u) {
+            *gv = math::silu(*gv) * uv;
+        }
+        self.matvec_bytes(down.0, down.1, &g, out)
+    }
+
+    /// MLA attention for one layer at `pos` (appends this token's
+    /// latent + rope key to the cache row first).
+    fn attention(
+        &self,
+        li: usize,
+        lw: &LayerWeights,
+        xn: &[f32],
+        cache: &mut KvCache,
+        pos: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let (nope, rope_d, vh) = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim);
+        let qk_head = nope + rope_d;
+        let kv_rank = cfg.kv_lora_rank;
+
+        // Query path: hidden → q_lora_rank → heads·(nope+rope).
+        let mut q_a = vec![0f32; cfg.q_lora_rank];
+        self.matvec(&lw.q_a, xn, &mut q_a)?;
+        let mut q_an = vec![0f32; cfg.q_lora_rank];
+        rms_norm(&q_a, &lw.q_a_norm, &mut q_an);
+        let mut q = vec![0f32; cfg.n_heads * qk_head];
+        self.matvec(&lw.q_b, &q_an, &mut q)?;
+
+        // KV path: hidden → (latent, rope key); the cache row stores the
+        // RMS-normed latent and the post-RoPE shared key.
+        let mut kv_a = vec![0f32; cfg.kv_cache_width()];
+        self.matvec(&lw.kv_a, xn, &mut kv_a)?;
+        {
+            let row = cache.row_mut(li, pos);
+            rms_norm(&kv_a[..kv_rank], &lw.kv_a_norm, &mut row[..kv_rank]);
+            row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
+            self.rope.apply(&mut row[kv_rank..], pos);
+        }
+
+        // Re-expand per-head k_nope/v for every cached position from the
+        // compressed latents (the encoded kv_b matvec).
+        let ctx = pos + 1;
+        let kvb_w = cfg.n_heads * (nope + vh);
+        let mut kvb = vec![0f32; ctx * kvb_w];
+        for p in 0..ctx {
+            let latent = &cache.row(li, p)[..kv_rank];
+            // Split borrow: `kvb` rows are disjoint per position.
+            let dst = &mut kvb[p * kvb_w..(p + 1) * kvb_w];
+            self.matvec(&lw.kv_b, latent, dst)?;
+        }
+
+        let inv_scale = 1.0 / (qk_head as f32).sqrt();
+        let mut heads_out = vec![0f32; cfg.n_heads * vh];
+        let mut scores = vec![0f32; ctx];
+        for hd in 0..cfg.n_heads {
+            let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
+            self.rope.apply(&mut qh[nope..], pos);
+            for (p, sc) in scores.iter_mut().enumerate() {
+                let k_nope = &kvb[p * kvb_w + hd * (nope + vh)..][..nope];
+                let k_rope = &cache.row(li, p)[kv_rank..];
+                let s = kernels::dot_lanes(&qh[..nope], k_nope)
+                    + kernels::dot_lanes(&qh[nope..], k_rope);
+                *sc = s * inv_scale;
+            }
+            math::softmax_in_place(&mut scores);
+            let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
+            for (p, &w) in scores.iter().enumerate() {
+                let v = &kvb[p * kvb_w + hd * (nope + vh) + nope..][..vh];
+                for (o, &vv) in oh.iter_mut().zip(v) {
+                    *o += w * vv;
+                }
+            }
+        }
+        self.matvec(&lw.attn_output, &heads_out, out)
+    }
+
+    /// FFN for one layer: dense SwiGLU, or router → top-k routed
+    /// experts + shared expert. The combine order is fixed (shared
+    /// expert first, then selected experts in ascending index), so the
+    /// output is a pure function of the inputs.
+    fn ffn(&self, lw: &LayerWeights, xn: &[f32], out: &mut [f32]) -> Result<()> {
+        let cfg = &self.cfg;
+        let fb = |t: &TensorEntry| (t.format, self.ckpt.bytes(t));
+        match &lw.ffn {
+            LayerFfn::Dense { gate, up, down } => {
+                self.mlp(fb(gate), fb(up), fb(down), cfg.intermediate_size, xn, out)
+            }
+            LayerFfn::Moe {
+                router,
+                gate_exps,
+                up_exps,
+                down_exps,
+                gate_shexp,
+                up_shexp,
+                down_shexp,
+            } => {
+                let ne = cfg.n_routed_experts;
+                let mut probs = vec![0f32; ne];
+                self.matvec(router, xn, &mut probs)?;
+                math::softmax_in_place(&mut probs);
+                // Top-k selection: highest probability first, ties to
+                // the lower expert index; combined in ascending index.
+                let mut idx: Vec<usize> = (0..ne).collect();
+                idx.sort_by(|&a, &b| {
+                    probs[b].partial_cmp(&probs[a]).expect("softmax is NaN-free").then(a.cmp(&b))
+                });
+                idx.truncate(cfg.n_active_experts);
+                idx.sort_unstable();
+                let mut z = 0f32;
+                for &e in &idx {
+                    z += probs[e];
+                }
+                // Shared expert contributes with weight 1.
+                let sh_inter = cfg.n_shared_experts * cfg.moe_intermediate_size;
+                self.mlp(fb(gate_shexp), fb(up_shexp), fb(down_shexp), sh_inter, xn, out)?;
+                let mut y = vec![0f32; cfg.hidden_size];
+                for &e in &idx {
+                    let w = probs[e] / z;
+                    self.mlp(
+                        (gate_exps.format, self.expert_bytes(gate_exps, e)?),
+                        (up_exps.format, self.expert_bytes(up_exps, e)?),
+                        (down_exps.format, self.expert_bytes(down_exps, e)?),
+                        cfg.moe_intermediate_size,
+                        xn,
+                        &mut y,
+                    )?;
+                    for (o, &yv) in out.iter_mut().zip(&y) {
+                        *o += w * yv;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Run one token through the full stack at the cache's next
+    /// position. When `logits` is given it receives the vocab-wide
+    /// unembedding of the final hidden state (`logits.len() == vocab`);
+    /// prefill steps that only need to advance the cache pass `None`
+    /// and skip the vocab matvec.
+    pub fn forward_token(
+        &self,
+        tok: i32,
+        cache: &mut KvCache,
+        logits: Option<&mut [f32]>,
+    ) -> Result<()> {
+        let pos = cache.len;
+        if pos >= cache.max_ctx {
+            bail!(
+                "KV cache full: token at position {pos} exceeds the engine's configured \
+                 max context {}",
+                cache.max_ctx
+            );
+        }
+        if let Some(out) = &logits {
+            if out.len() != self.cfg.vocab_size {
+                bail!("logits buffer {} != vocab {}", out.len(), self.cfg.vocab_size);
+            }
+        }
+        let h_dim = self.cfg.hidden_size;
+        let mut h = vec![0f32; h_dim];
+        self.embed(tok, &mut h)?;
+        let mut xn = vec![0f32; h_dim];
+        let mut delta = vec![0f32; h_dim];
+        for (li, lw) in self.layers.iter().enumerate() {
+            rms_norm(&h, &lw.attn_norm, &mut xn);
+            self.attention(li, lw, &xn, cache, pos, &mut delta)?;
+            for (hv, &dv) in h.iter_mut().zip(&delta) {
+                *hv += dv;
+            }
+            rms_norm(&h, &lw.ffn_norm, &mut xn);
+            self.ffn(lw, &xn, &mut delta)?;
+            for (hv, &dv) in h.iter_mut().zip(&delta) {
+                *hv += dv;
+            }
+        }
+        cache.len = pos + 1;
+        if let Some(out) = logits {
+            rms_norm(&h, &self.output_norm, &mut xn);
+            self.matvec(&self.output, &xn, out)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{quantize_container_with, synthetic_f32_container};
+    use crate::scheme::builtin;
+
+    fn tiny_forward(scheme: &str, threads: usize, max_ctx: usize) -> ForwardPass {
+        // One shared quantized container (q4_k_m is the only scheme
+        // these in-module tests use; the cross-scheme coverage lives in
+        // tests/native_forward.rs).
+        static Q4: std::sync::OnceLock<Vec<u8>> = std::sync::OnceLock::new();
+        assert_eq!(scheme, "q4_k_m");
+        let bytes = Q4.get_or_init(|| {
+            let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0xF052).unwrap();
+            quantize_container_with(&src, &builtin::scheme(scheme).unwrap(), None, 1)
+                .unwrap()
+                .to_bytes()
+        });
+        ForwardPass::new(Container::from_bytes(bytes.clone()).unwrap(), threads, max_ctx).unwrap()
+    }
+
+    #[test]
+    fn cache_overflow_is_a_clean_error_before_any_state_change() {
+        let fwd = tiny_forward("q4_k_m", 1, 2);
+        let mut cache = fwd.new_cache();
+        fwd.forward_token(1, &mut cache, None).unwrap();
+        fwd.forward_token(2, &mut cache, None).unwrap();
+        assert_eq!(cache.len(), 2);
+        let err = fwd.forward_token(3, &mut cache, None).unwrap_err();
+        assert!(err.to_string().contains("max context"), "{err}");
+        assert_eq!(cache.len(), 2, "failed append must not consume a slot");
+    }
+
+    #[test]
+    fn dense_gqa_containers_are_rejected_with_a_clear_error() {
+        let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 7).unwrap();
+        let err = ForwardPass::new(src, 1, 8).unwrap_err();
+        assert!(err.to_string().contains("MLA+MoE"), "{err}");
+    }
+
+    #[test]
+    fn logits_buffer_must_match_vocab() {
+        let fwd = tiny_forward("q4_k_m", 1, 4);
+        let mut cache = fwd.new_cache();
+        let mut short = vec![0f32; 3];
+        assert!(fwd.forward_token(1, &mut cache, Some(&mut short)).is_err());
+    }
+
+    #[test]
+    fn rope_table_rows_are_unit_rotations() {
+        let t = RopeTable::new(32, 24);
+        for p in 0..24 {
+            for i in 0..16 {
+                let (c, s) = (t.cos[p * 16 + i], t.sin[p * 16 + i]);
+                let n = (c as f64).hypot(s as f64);
+                assert!((n - 1.0).abs() < 1e-4, "pos {p} freq {i}: |({c},{s})| = {n}");
+            }
+        }
+        // Position 0 is the identity rotation for every frequency.
+        assert!(t.cos[..16].iter().all(|&c| c == 1.0));
+        assert!(t.sin[..16].iter().all(|&s| s == 0.0));
+    }
+}

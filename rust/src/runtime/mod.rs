@@ -22,14 +22,20 @@
 //! whole loader path are real, while `compile`/`execute` report the
 //! missing backend gracefully.
 //!
-//! Since PR 3 the engine also has a **native CPU matvec backend**
-//! ([`native`], `Engine::load_native`, `dsq serve|eval --native`): an
-//! embed → unembed step computed directly on the container's quantized
-//! payloads through the fused `quant::kernels` vec_dot path, so the
-//! coordinator can execute prefill/decode waves offline — no HLO
-//! artifacts, no PJRT — while exercising the same read-side hot path
-//! the compiled graphs dequantize in-kernel.
+//! Since PR 3 the engine also has a **native CPU backend** ([`native`],
+//! `Engine::load_native`, `dsq serve|eval --native`), and since PR 4
+//! that backend executes the **complete tiny-MoE forward pass**
+//! ([`forward`]: RMSNorm, MLA attention over per-slot KV caches, top-k
+//! routed + shared experts, unembed) directly on the container's
+//! quantized payloads through the fused `quant::kernels` vec_dot path —
+//! so the coordinator can execute prefill/decode waves offline, no HLO
+//! artifacts, no PJRT, with logits bit-identical at every thread count.
+//! Per-wave mutable state (PJRT cache literals or native per-slot KV
+//! caches) is threaded through [`StepOutput::state`] as a
+//! backend-tagged [`StepState`], keeping the engine itself immutable
+//! between steps.
 
+pub mod forward;
 pub mod loader;
 pub mod manifest;
 pub mod native;
@@ -42,10 +48,10 @@ use std::path::Path;
 
 /// A (model, scheme) serving engine behind one of two backends:
 /// compiled PJRT prefill/decode executables with weight literals from
-/// the checkpoint ([`Engine::load`]), or the native CPU matvec
-/// fallback that executes steps directly on the quantized container
-/// through the fused `vec_dot` kernels ([`Engine::load_native`] — no
-/// HLO artifacts or PJRT backend needed).
+/// the checkpoint ([`Engine::load`]), or the native CPU backend that
+/// executes the full tiny-MoE forward pass directly on the quantized
+/// container through the fused `vec_dot` kernels
+/// ([`Engine::load_native`] — no HLO artifacts or PJRT backend needed).
 pub struct Engine {
     backend: Backend,
     pub model_name: String,
@@ -59,7 +65,7 @@ enum Backend {
         prefill: Phase,
         decode: Phase,
     },
-    Native(native::NativeMatvec),
+    Native(native::NativeEngine),
 }
 
 /// One compiled phase and its manifest.
@@ -157,12 +163,20 @@ impl Phase {
     }
 }
 
+/// Backend-tagged per-wave state threaded from one step into the next:
+/// PJRT cache literals for compiled graphs, per-slot KV caches for the
+/// native forward pass. The coordinator treats it as opaque.
+pub enum StepState {
+    Pjrt(Vec<xla::Literal>),
+    Native(native::BatchKv),
+}
+
 /// Result of a prefill/decode step.
 pub struct StepOutput {
     /// Row-major [batch, vocab].
     pub logits: Vec<f32>,
-    /// Opaque cache literals threaded into the next decode.
-    pub cache: Vec<xla::Literal>,
+    /// Wave state to thread into the next decode step.
+    pub state: StepState,
 }
 
 impl Engine {
@@ -208,10 +222,11 @@ impl Engine {
         })
     }
 
-    /// Load the native CPU matvec backend from a checkpoint alone — no
-    /// HLO artifacts, no PJRT. Steps execute on the container's
-    /// quantized payloads through the fused `vec_dot` kernels (see
-    /// [`native`]); `threads` bounds the per-step row fan-out.
+    /// Load the native CPU backend from a checkpoint alone — no HLO
+    /// artifacts, no PJRT. Steps execute the full tiny-MoE forward pass
+    /// on the container's quantized payloads through the fused
+    /// `vec_dot` kernels (see [`native`] / [`forward`]); `threads`
+    /// bounds the per-matvec row fan-out.
     pub fn load_native(ckpt_path: &Path, threads: usize) -> Result<Engine> {
         Self::native_from_container(Container::open(ckpt_path)?, threads)
     }
@@ -219,13 +234,16 @@ impl Engine {
     /// [`Engine::load_native`] over an already-open container (taken
     /// over whole — the backend serves from its payloads in place).
     pub fn native_from_container(ckpt: Container, threads: usize) -> Result<Engine> {
-        let model_name = ckpt.model.name.clone();
-        let scheme_name = ckpt.scheme_name.clone();
-        Ok(Engine {
-            backend: Backend::Native(native::NativeMatvec::from_container(ckpt, threads)?),
-            model_name,
-            scheme_name,
-        })
+        Self::from_native(native::NativeEngine::from_container(ckpt, threads)?)
+    }
+
+    /// Wrap an already-built native backend (tests and benches use this
+    /// with [`native::NativeEngine::with_limits`] to pin small serving
+    /// shapes).
+    pub fn from_native(native: native::NativeEngine) -> Result<Engine> {
+        let model_name = native.forward().config().name.clone();
+        let scheme_name = native.forward().scheme_name().to_string();
+        Ok(Engine { backend: Backend::Native(native), model_name, scheme_name })
     }
 
     pub fn batch(&self) -> usize {
@@ -259,7 +277,13 @@ impl Engine {
     /// Run prefill over a padded prompt batch.
     ///
     /// `tokens`: row-major [batch, prompt_len]; `lengths`: [batch] with
-    /// values in 1..=prompt_len (pad unused slots with length 1).
+    /// values in 1..=prompt_len. A non-positive `lengths[i]` marks an
+    /// unused slot: the native backend skips its forward pass entirely
+    /// (zero logits row, empty cache); the PJRT backend clamps the
+    /// value to 1 so the compiled graph sees its historical input
+    /// shape. The native backend forwards each used slot's actual
+    /// prompt token by token and fills fresh per-slot KV caches
+    /// (returned in [`StepOutput::state`]).
     pub fn run_prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<StepOutput> {
         let (b, t) = (self.batch(), self.prompt_len());
         if tokens.len() != b * t || lengths.len() != b {
@@ -267,69 +291,65 @@ impl Engine {
         }
         match &self.backend {
             Backend::Pjrt { prefill, .. } => {
-                let lead = vec![i32_literal(&[b, t], tokens)?, i32_literal(&[b], lengths)?];
+                let clamped: Vec<i32> = lengths.iter().map(|&l| l.max(1)).collect();
+                let lead = vec![i32_literal(&[b, t], tokens)?, i32_literal(&[b], &clamped)?];
                 let mut out = prefill.run(&lead)?;
                 let logits = out.remove(0);
                 Ok(StepOutput {
                     logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-                    cache: out,
+                    state: StepState::Pjrt(out),
                 })
             }
             Backend::Native(m) => {
-                // Prefill collapses to the last prompt token per slot.
-                let last: Vec<i32> = lengths
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &l)| {
-                        let l = (l.max(1) as usize).min(t);
-                        tokens[i * t + l - 1]
-                    })
-                    .collect();
-                Ok(StepOutput { logits: m.step_logits(&last)?, cache: Vec::new() })
+                let (logits, kv) = m.prefill(tokens, lengths)?;
+                Ok(StepOutput { logits, state: StepState::Native(kv) })
             }
         }
     }
 
-    /// Run one decode step: `token`/`pos` are [batch]; `cache` from the
-    /// previous step.
-    pub fn run_decode(
-        &self,
-        token: &[i32],
-        pos: &[i32],
-        cache: Vec<xla::Literal>,
-    ) -> Result<StepOutput> {
+    /// Run one decode step: `token`/`pos` are [batch]; `state` from the
+    /// previous step. A negative `pos[i]` marks an inactive slot
+    /// (finished or unused): the native backend skips it entirely
+    /// (zero logits row, cache untouched); the PJRT backend clamps the
+    /// value to 0 so the compiled graph sees its historical input shape.
+    pub fn run_decode(&self, token: &[i32], pos: &[i32], state: StepState) -> Result<StepOutput> {
         let b = self.batch();
         if token.len() != b || pos.len() != b {
             bail!("decode input shape mismatch");
         }
-        match &self.backend {
-            Backend::Pjrt { decode, .. } => {
-                let mut lead = vec![i32_literal(&[b], token)?, i32_literal(&[b], pos)?];
+        match (&self.backend, state) {
+            (Backend::Pjrt { decode, .. }, StepState::Pjrt(cache)) => {
+                let clamped: Vec<i32> = pos.iter().map(|&p| p.max(0)).collect();
+                let mut lead = vec![i32_literal(&[b], token)?, i32_literal(&[b], &clamped)?];
                 lead.extend(cache);
                 let mut out = decode.run(&lead)?;
                 let logits = out.remove(0);
                 Ok(StepOutput {
                     logits: logits.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-                    cache: out,
+                    state: StepState::Pjrt(out),
                 })
             }
-            Backend::Native(m) => {
-                Ok(StepOutput { logits: m.step_logits(token)?, cache: Vec::new() })
+            (Backend::Native(m), StepState::Native(mut kv)) => {
+                let logits = m.decode(token, pos, &mut kv)?;
+                Ok(StepOutput { logits, state: StepState::Native(kv) })
             }
+            _ => bail!("step state does not match the engine backend"),
         }
     }
 
-    /// An empty cache of the right shape (useful for tests).
-    pub fn empty_cache(&self) -> Result<Vec<xla::Literal>> {
+    /// A fresh wave state of the right backend shape (useful for tests).
+    pub fn initial_state(&self) -> Result<StepState> {
         match &self.backend {
-            Backend::Pjrt { decode, .. } => decode
-                .manifest
-                .inputs
-                .iter()
-                .filter(|i| matches!(i.role, Role::CacheKv | Role::CacheK | Role::CacheV))
-                .map(|i| f32_zeros(&i.shape))
-                .collect(),
-            Backend::Native(_) => Ok(Vec::new()),
+            Backend::Pjrt { decode, .. } => Ok(StepState::Pjrt(
+                decode
+                    .manifest
+                    .inputs
+                    .iter()
+                    .filter(|i| matches!(i.role, Role::CacheKv | Role::CacheK | Role::CacheV))
+                    .map(|i| f32_zeros(&i.shape))
+                    .collect::<Result<Vec<_>>>()?,
+            )),
+            Backend::Native(m) => Ok(StepState::Native(m.new_batch_kv())),
         }
     }
 }

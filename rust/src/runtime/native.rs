@@ -1,155 +1,178 @@
-//! Native CPU matvec serving backend — the offline fallback that lets
-//! [`super::Engine`] and the coordinator actually execute prefill and
-//! decode steps on **quantized** weights without the PJRT backend or
-//! AOT HLO artifacts.
+//! Native CPU serving backend — the offline engine that lets
+//! [`super::Engine`] and the coordinator execute prefill and decode
+//! steps on **quantized** weights without the PJRT backend or AOT HLO
+//! artifacts.
 //!
-//! This is *not* the trained proxy model (that computation lives in the
-//! compiled HLO graphs). It is the smallest honest serving computation
-//! over real checkpoint tensors: an embed → unembed step,
+//! Since PR 4 this is no longer an embed→unembed stub: each slot runs
+//! the **complete tiny-MoE transformer forward pass** in
+//! [`super::forward`] — RMSNorm, MLA attention over a per-slot
+//! compressed-latent KV cache bounded by [`NATIVE_MAX_CTX`], top-k
+//! routed + shared expert FFNs, and the final unembedding — with every
+//! matvec fused on the container's encoded payloads
+//! ([`crate::quant::vec_dot_rows_with`]; no resident f32 weight
+//! tables). Prefill feeds each slot's actual prompt token by token
+//! (padding slots cost one token); decode advances one token per live
+//! slot, and slots marked inactive (`pos < 0`) are skipped entirely.
 //!
-//! ```text
-//! h         = token_embd.weight[last_token]   (one row, decoded per step)
-//! logits[v] = vec_dot(output.weight row v, h) (fused, on encoded blocks)
-//! ```
-//!
-//! **Both** matrices stay in their **container-encoded form** (`q6_k`,
-//! `q4_k`, … per the scheme): the embedding side decodes exactly one
-//! block-aligned row per unique step token through the batch decode
-//! kernels (a resident f32 table would cost vocab×hidden×4 bytes —
-//! ~3.7 GB at 671B scale, in a repo whose point is *not* paying that),
-//! and every step's logits are computed with the fused
-//! [`crate::quant::vec_dot_rows_with`] kernels — so `dsq serve
-//! --native` / `dsq eval --native` drive the exact read-side hot path
-//! the decode kernels exist for, end to end through the coordinator.
-//! Determinism: the row decode and the row-parallel matvec are
-//! bit-identical at every thread count, so two native engines over the
-//! same container always produce the same logits (asserted by
-//! `tests/native_engine.rs`).
+//! Determinism: the PR-3 contract extends through the whole pass — the
+//! same 8-lane reduction order at every thread count and on both
+//! `DSQ_SCALAR_DECODE` dispatch arms, so two native engines over the
+//! same container produce bit-identical logits (asserted by
+//! `tests/native_engine.rs` / `tests/native_forward.rs`, pinned by the
+//! committed `rust/tests/golden/forward.*.fnv64` checksums, and proven
+//! on the deployment host by `dsq selfcheck`).
 
-use crate::container::{Container, TensorEntry};
-use crate::quant::{self, QuantFormat};
-use anyhow::{bail, Context, Result};
+use super::forward::{ForwardPass, KvCache};
+use crate::container::Container;
+use crate::quant::QuantFormat;
+use anyhow::{bail, Result};
 
 /// Batch slots the native backend serves per wave (mirrors the tiny
 /// AOT manifests so coordinator behaviour matches the PJRT path).
 pub const NATIVE_BATCH: usize = 16;
 /// Compiled prompt length of the native backend.
 pub const NATIVE_PROMPT_LEN: usize = 16;
-/// Context bound: prompt plus an 8-token generation budget.
+/// Context bound: prompt plus an 8-token generation budget. Every
+/// per-slot KV cache is hard-bounded by this; `Coordinator::submit`
+/// rejects prompts that could not generate within it.
 pub const NATIVE_MAX_CTX: usize = 24;
 
-/// The native backend's state: the opened container (payloads stay
-/// exactly as encoded, never copied) plus the two weight entries the
-/// embed → unembed step reads.
-pub struct NativeMatvec {
-    vocab: usize,
-    hidden: usize,
-    ckpt: Container,
-    /// `token_embd.weight`; one block-aligned row is decoded per
-    /// unique step token.
-    embd: TensorEntry,
-    /// Encoded bytes per embedding row (`format.row_bytes(hidden)`).
-    embd_row_bytes: usize,
-    /// `output.weight`, consumed in place by the fused matvec.
-    out: TensorEntry,
-    /// Worker budget for the per-step row-parallel matvec.
-    threads: usize,
+/// Per-wave mutable state: one [`KvCache`] per batch slot. Threaded
+/// through [`super::StepOutput`] exactly like the PJRT cache literals,
+/// so the engine itself stays immutable between steps.
+pub struct BatchKv {
+    slots: Vec<KvCache>,
 }
 
-impl NativeMatvec {
-    /// Build the backend from an opened container (taken over whole —
-    /// the weight payloads are sliced in place, not copied). `threads`
-    /// bounds the per-step matvec fan-out; results are bit-identical
-    /// for every count.
-    pub fn from_container(ckpt: Container, threads: usize) -> Result<Self> {
-        let embd = ckpt.tensor("token_embd.weight").context("native backend")?.clone();
-        let out = ckpt.tensor("output.weight").context("native backend")?.clone();
-        if embd.shape.len() != 2 || out.shape.len() != 2 {
-            bail!("native backend expects 2-D embedding/output tensors");
-        }
-        let (vocab, hidden) = (embd.shape[0], embd.shape[1]);
-        if vocab == 0 || hidden == 0 {
-            bail!("native backend: token_embd has a zero dimension ([{vocab}, {hidden}])");
-        }
-        if out.shape != [vocab, hidden] {
-            bail!(
-                "output.weight shape {:?} != token_embd shape [{vocab}, {hidden}]",
-                out.shape
-            );
-        }
-        // Rows must be whole runs of blocks for per-row decode (every
-        // quantizable census tensor guarantees this; f32/f16 trivially).
-        let embd_row_bytes = embd
-            .format
-            .row_bytes(hidden)
-            .context("native backend: token_embd rows not block-aligned")?;
-        Ok(NativeMatvec { vocab, hidden, ckpt, embd, embd_row_bytes, out, threads: threads.max(1) })
+impl BatchKv {
+    /// Tokens cached in slot `i` (the next decode position).
+    pub fn slot_len(&self, i: usize) -> usize {
+        self.slots[i].len()
     }
 
-    /// Decode one embedding row (`token_embd.weight[t]`) into `h`.
-    fn embed_row(&self, t: usize, h: &mut [f32]) -> Result<()> {
-        let bytes = self.ckpt.bytes(&self.embd);
-        let row = &bytes[t * self.embd_row_bytes..(t + 1) * self.embd_row_bytes];
-        quant::dequantize_into(self.embd.format, row, h)
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// The native backend: the forward-pass model over the opened container
+/// plus the serving shape (batch/prompt/context bounds).
+pub struct NativeEngine {
+    fwd: ForwardPass,
+    batch: usize,
+    prompt_len: usize,
+    max_ctx: usize,
+}
+
+impl NativeEngine {
+    /// Build the backend from an opened container (taken over whole —
+    /// the weight payloads are served in place) with the default
+    /// serving shape. `threads` bounds the per-matvec row fan-out;
+    /// logits are bit-identical for every count.
+    pub fn from_container(ckpt: Container, threads: usize) -> Result<Self> {
+        Self::with_limits(ckpt, threads, NATIVE_BATCH, NATIVE_PROMPT_LEN, NATIVE_MAX_CTX)
+    }
+
+    /// [`NativeEngine::from_container`] with an explicit serving shape —
+    /// used by tests and benches to exercise the context-bound
+    /// validation paths with small limits.
+    pub fn with_limits(
+        ckpt: Container,
+        threads: usize,
+        batch: usize,
+        prompt_len: usize,
+        max_ctx: usize,
+    ) -> Result<Self> {
+        if batch == 0 || prompt_len == 0 {
+            bail!("native backend needs batch ≥ 1 and prompt_len ≥ 1");
+        }
+        let fwd = ForwardPass::new(ckpt, threads, max_ctx)?;
+        Ok(NativeEngine { fwd, batch, prompt_len, max_ctx })
     }
 
     pub fn batch(&self) -> usize {
-        NATIVE_BATCH
+        self.batch
     }
 
     pub fn prompt_len(&self) -> usize {
-        NATIVE_PROMPT_LEN
+        self.prompt_len
     }
 
     pub fn max_ctx(&self) -> usize {
-        NATIVE_MAX_CTX
+        self.max_ctx
     }
 
     pub fn vocab(&self) -> usize {
-        self.vocab
+        self.fwd.vocab()
     }
 
     pub fn hidden(&self) -> usize {
-        self.hidden
+        self.fwd.config().hidden_size
     }
 
-    /// The stored format of the unembedding matrix (what the fused
-    /// matvec actually runs on).
+    /// The stored format of the unembedding matrix (what the per-step
+    /// vocab-wide fused matvec runs on).
     pub fn output_format(&self) -> QuantFormat {
-        self.out.format
+        self.fwd.output_format()
     }
 
-    /// One step: for every slot, unembed the embedding of its token.
-    /// Returns row-major `[tokens.len(), vocab]` logits. Out-of-range
-    /// token ids wrap into the vocabulary (padding slots send `PAD`).
+    /// Direct access to the forward-pass model (tests, selfcheck).
+    pub fn forward(&self) -> &ForwardPass {
+        &self.fwd
+    }
+
+    /// Fresh per-slot caches for one wave.
+    pub fn new_batch_kv(&self) -> BatchKv {
+        BatchKv { slots: (0..self.batch).map(|_| self.fwd.new_cache()).collect() }
+    }
+
+    /// Prefill: run each slot's actual prompt (`lengths[i]` tokens of
+    /// row `i`, clamped to `1..=prompt_len`) through the forward pass,
+    /// returning the last-token logits per slot (row-major
+    /// `[batch, vocab]`) and the filled per-slot caches.
     ///
-    /// The vocab-wide fused matvec runs once per *unique* token in the
-    /// step — during a wave tail most slots are finished and all send
-    /// `PAD`, so their identical logits row is computed once and copied
-    /// into the remaining slots instead of redone per slot.
-    pub fn step_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let mut logits = vec![0f32; tokens.len() * self.vocab];
-        let mut h = vec![0f32; self.hidden];
-        let mut first_slot: std::collections::HashMap<usize, usize> =
-            std::collections::HashMap::with_capacity(tokens.len());
-        for (slot, &tok) in tokens.iter().enumerate() {
-            let t = tok.rem_euclid(self.vocab as i32) as usize;
-            if let Some(&src) = first_slot.get(&t) {
-                let (head, tail) = logits.split_at_mut(slot * self.vocab);
-                tail[..self.vocab]
-                    .copy_from_slice(&head[src * self.vocab..(src + 1) * self.vocab]);
+    /// `lengths[i] <= 0` marks an **unused** slot: it is skipped
+    /// entirely (zero logits row, empty cache) instead of burning a
+    /// full attention+MoE pass on padding — the prefill counterpart of
+    /// decode's `pos < 0` contract.
+    pub fn prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<(Vec<f32>, BatchKv)> {
+        let (b, t, v) = (self.batch, self.prompt_len, self.vocab());
+        if tokens.len() != b * t || lengths.len() != b {
+            bail!("prefill input shape mismatch");
+        }
+        let mut kv = self.new_batch_kv();
+        let mut logits = vec![0f32; b * v];
+        for (slot, cache) in kv.slots.iter_mut().enumerate() {
+            if lengths[slot] <= 0 {
                 continue;
             }
-            first_slot.insert(t, slot);
-            self.embed_row(t, &mut h)?;
-            let row = &mut logits[slot * self.vocab..(slot + 1) * self.vocab];
-            quant::vec_dot_rows_with(
-                self.out.format,
-                self.ckpt.bytes(&self.out),
-                &h,
-                row,
-                self.threads,
-            )?;
+            let l = (lengths[slot] as usize).min(t);
+            let prompt = &tokens[slot * t..slot * t + l];
+            let row = &mut logits[slot * v..(slot + 1) * v];
+            for (j, &tok) in prompt.iter().enumerate() {
+                let want = if j + 1 == l { Some(&mut *row) } else { None };
+                self.fwd.forward_token(tok, cache, want)?;
+            }
+        }
+        Ok((logits, kv))
+    }
+
+    /// One decode step: advance every **active** slot by one token
+    /// (`pos[i] < 0` marks an inactive slot — finished or unused — whose
+    /// logits row is zeroed and whose cache is left untouched). Returns
+    /// row-major `[batch, vocab]` logits.
+    pub fn decode(&self, token: &[i32], pos: &[i32], kv: &mut BatchKv) -> Result<Vec<f32>> {
+        let (b, v) = (self.batch, self.vocab());
+        if token.len() != b || pos.len() != b || kv.slots.len() != b {
+            bail!("decode input shape mismatch");
+        }
+        let mut logits = vec![0f32; b * v];
+        for (slot, cache) in kv.slots.iter_mut().enumerate() {
+            if pos[slot] < 0 {
+                continue;
+            }
+            let row = &mut logits[slot * v..(slot + 1) * v];
+            self.fwd.forward_token(token[slot], cache, Some(row))?;
         }
         Ok(logits)
     }
@@ -160,73 +183,73 @@ mod tests {
     use super::*;
     use crate::container::{quantize_container_with, synthetic_f32_container};
     use crate::model::ModelConfig;
-    use crate::quant::kernels;
     use crate::scheme::builtin;
 
-    fn native(scheme: &str, threads: usize) -> NativeMatvec {
-        let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0xA17E).unwrap();
-        let q = Container::from_bytes(
+    fn native(scheme: &str, threads: usize) -> NativeEngine {
+        // Quantize once per scheme — serial container quantization is
+        // the slow part of these tests in debug builds.
+        static DQ3: std::sync::OnceLock<Vec<u8>> = std::sync::OnceLock::new();
+        static Q4: std::sync::OnceLock<Vec<u8>> = std::sync::OnceLock::new();
+        let cell = match scheme {
+            "dq3_k_m" => &DQ3,
+            "q4_k_m" => &Q4,
+            other => panic!("unexpected scheme {other}"),
+        };
+        let bytes = cell.get_or_init(|| {
+            let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0xA17E).unwrap();
             quantize_container_with(&src, &builtin::scheme(scheme).unwrap(), None, 1)
                 .unwrap()
-                .to_bytes(),
-        )
-        .unwrap();
-        NativeMatvec::from_container(q, threads).unwrap()
+                .to_bytes()
+        });
+        let q = Container::from_bytes(bytes.clone()).unwrap();
+        NativeEngine::with_limits(q, threads, 3, 4, 8).unwrap()
     }
 
     #[test]
-    fn logits_match_decode_then_dot_reference() {
+    fn prefill_fills_only_the_actual_prompt_per_slot() {
         let m = native("dq3_k_m", 1);
-        let logits = m.step_logits(&[7, 0, 511]).unwrap();
+        let tokens = vec![5i32; 3 * 4];
+        let (logits, kv) = m.prefill(&tokens, &[2, 4, 0]).unwrap();
         assert_eq!(logits.len(), 3 * m.vocab());
-        // Reference: decode the whole output matrix, then the canonical
-        // lane dot per row — must match the fused path bit-for-bit.
-        let n = m.vocab * m.hidden;
-        let mut w = vec![0f32; n];
-        quant::dequantize_into_with(m.out.format, m.ckpt.bytes(&m.out), &mut w, 1).unwrap();
-        let mut h = vec![0f32; m.hidden];
-        for (s, &tok) in [7i32, 0, 511].iter().enumerate() {
-            let t = tok.rem_euclid(m.vocab as i32) as usize;
-            m.embed_row(t, &mut h).unwrap();
-            for v in 0..m.vocab {
-                let want = kernels::dot_lanes(&w[v * m.hidden..(v + 1) * m.hidden], &h);
-                let got = logits[s * m.vocab + v];
-                assert_eq!(got.to_bits(), want.to_bits(), "slot {s} vocab row {v}");
-            }
-        }
+        // Length 0 marks an unused slot: no forward pass, empty cache,
+        // zeroed logits row.
+        assert_eq!([kv.slot_len(0), kv.slot_len(1), kv.slot_len(2)], [2, 4, 0]);
+        let v = m.vocab();
+        assert!(logits[..2 * v].iter().all(|x| x.is_finite()));
+        assert!(logits[2 * v..].iter().all(|&x| x == 0.0), "unused slot row must be zero");
+        assert!(logits[..v].iter().any(|&x| x != 0.0));
     }
 
     #[test]
-    fn thread_counts_bit_identical() {
-        let a = native("q4_k_m", 1);
-        let b = native("q4_k_m", 8);
-        let toks: Vec<i32> = (0..16).collect();
-        let la = a.step_logits(&toks).unwrap();
-        let lb = b.step_logits(&toks).unwrap();
-        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
-        assert_eq!(bits(&la), bits(&lb));
-    }
-
-    #[test]
-    fn duplicate_tokens_share_one_matvec_row() {
-        // Wave tails send PAD from every finished slot; the deduped
-        // step must return exactly the rows the per-slot loop would.
+    fn decode_skips_inactive_slots() {
         let m = native("q4_k_m", 2);
-        let toks = [5i32, 0, 5, 0, 0, 9];
-        let logits = m.step_logits(&toks).unwrap();
-        for (s, &tok) in toks.iter().enumerate() {
-            let solo = m.step_logits(&[tok]).unwrap();
-            let row = &logits[s * m.vocab..(s + 1) * m.vocab];
-            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
-            assert_eq!(bits(row), bits(&solo), "slot {s}");
-        }
+        let tokens = vec![7i32; 3 * 4];
+        let (_, mut kv) = m.prefill(&tokens, &[1, 1, 1]).unwrap();
+        let logits = m.decode(&[3, 0, 9], &[1, -1, 1], &mut kv).unwrap();
+        let v = m.vocab();
+        assert!(logits[v..2 * v].iter().all(|&x| x == 0.0), "inactive slot must zero");
+        assert!(logits[..v].iter().any(|&x| x != 0.0));
+        assert_eq!(kv.slot_len(0), 2);
+        assert_eq!(kv.slot_len(1), 1, "inactive slot cache untouched");
+        assert_eq!(kv.slot_len(2), 2);
     }
 
     #[test]
-    fn quantized_output_matrix_stays_encoded() {
+    fn decode_beyond_max_ctx_errors_cleanly() {
+        let m = native("q4_k_m", 1);
+        let tokens = vec![1i32; 3 * 4];
+        let (_, mut kv) = m.prefill(&tokens, &[4, 1, 1]).unwrap();
+        // Slot 0 has 4 cached tokens; max_ctx is 8 → 4 more fit.
+        for step in 0..4 {
+            m.decode(&[2, 2, 2], &[4 + step, -1, -1], &mut kv).unwrap();
+        }
+        let err = m.decode(&[2, 2, 2], &[8, -1, -1], &mut kv).unwrap_err();
+        assert!(err.to_string().contains("max context"), "{err}");
+    }
+
+    #[test]
+    fn quantized_weights_stay_encoded() {
         let m = native("dq3_k_m", 1);
         assert_ne!(m.output_format(), QuantFormat::F32, "scheme should quantize output");
-        let logits = m.step_logits(&[3]).unwrap();
-        assert!(logits.iter().all(|v| v.is_finite()));
     }
 }

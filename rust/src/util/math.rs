@@ -1,0 +1,187 @@
+//! Deterministic f32 transcendentals for the native forward pass.
+//!
+//! The native serving backend's determinism contract ("two engines over
+//! the same container produce bit-identical logits") extends beyond the
+//! quantized matvecs to every nonlinearity on the path. IEEE add, mul,
+//! div and sqrt are exactly rounded and therefore reproducible anywhere,
+//! but `exp`/`sin`/`cos` come from libm and are **not** — different
+//! platforms (and different languages, which matters for the bit-exact
+//! Python golden mirror in `python/tools/bless_goldens.py`) round them
+//! differently. This module re-implements the few transcendentals the
+//! forward pass needs from exactly-rounded primitives only:
+//!
+//! - [`exp_f32`] — Cephes-style range reduction (`x = n·ln2 + r`, with
+//!   the two-constant ln2 split) plus a degree-7 Taylor polynomial in
+//!   Horner form, scaled by an exponent-bit-constructed `2^n`. Relative
+//!   error ≤ ~3e-7 over the clamped domain.
+//! - [`sin_small`] / [`cos_small`] — Taylor polynomials valid on
+//!   `|x| ≤ 1`, used only to seed the RoPE angle recurrence (per-step
+//!   rotary angles are all ≤ 1 radian; larger positions are reached by
+//!   the exactly-rounded angle-addition recurrence in
+//!   `runtime::forward`).
+//! - [`sigmoid`] / [`silu`] and the sequential-order [`softmax_in_place`]
+//!   built on top of `exp_f32`.
+//!
+//! Every operation here is a single-rounded f32 add/mul/div/sqrt or a
+//! bit manipulation; the Python mirror replays the identical sequence in
+//! `np.float32` and lands on the same bits. Do not "simplify" an
+//! expression into an algebraically equal form — that changes rounding
+//! and breaks the committed `forward.*.fnv64` golden checksums.
+
+/// Inputs below this produce 0.0 (keeps the exponent construction in
+/// normal range: `n ≥ -126`).
+pub const EXP_LO: f32 = -87.0;
+/// Inputs above this saturate (keeps `n ≤ 127`).
+pub const EXP_HI: f32 = 88.0;
+
+const LOG2E: f32 = 1.4426950408889634;
+/// ln2 split: `LN2_HI` carries the high bits exactly (0.693359375 is a
+/// dyadic rational), `LN2_LO` the remainder, so `x − n·LN2_HI` is exact
+/// for the n range reduction produces.
+const LN2_HI: f32 = 0.693359375;
+const LN2_LO: f32 = -0.00021219444;
+
+/// Taylor coefficients 1/k! for k = 0..=7, Horner-evaluated.
+const EXP_P: [f32; 8] = [
+    1.0,
+    1.0,
+    0.5,
+    0.16666667,
+    0.041666667,
+    0.0083333333,
+    0.0013888889,
+    0.00019841270,
+];
+
+/// Deterministic `e^x` in pure f32 arithmetic (see module docs).
+/// Clamps to `[EXP_LO, EXP_HI]`; never returns NaN for finite input.
+pub fn exp_f32(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    let n = (x * LOG2E).round();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    let mut p = EXP_P[7];
+    for k in (0..7).rev() {
+        p = p * r + EXP_P[k];
+    }
+    // 2^n constructed directly in the exponent field; n ∈ [-126, 127]
+    // by the clamp above, so the result is a normal number.
+    let scale = f32::from_bits(((n as i32 + 127) as u32) << 23);
+    p * scale
+}
+
+/// Deterministic logistic function `1 / (1 + e^{−x})`.
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + exp_f32(-x))
+}
+
+/// Deterministic SiLU / swish: `x · sigmoid(x)` — the MoE FFN
+/// activation (DeepSeek-V3 uses SwiGLU: `down(silu(gate(x)) · up(x))`).
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// Taylor sine, valid (≤ ~1e-8 abs error) for `|x| ≤ 1`.
+pub fn sin_small(x: f32) -> f32 {
+    const S: [f32; 4] = [-0.16666667, 0.0083333333, -0.00019841270, 0.0000027557319];
+    let t = x * x;
+    let mut p = S[3];
+    for k in (0..3).rev() {
+        p = p * t + S[k];
+    }
+    x + (x * t) * p
+}
+
+/// Taylor cosine, valid (≤ ~1e-8 abs error) for `|x| ≤ 1`.
+pub fn cos_small(x: f32) -> f32 {
+    const C: [f32; 4] = [-0.5, 0.041666667, -0.0013888889, 0.000024801587];
+    let t = x * x;
+    let mut p = C[3];
+    for k in (0..3).rev() {
+        p = p * t + C[k];
+    }
+    1.0 + t * p
+}
+
+/// In-place max-subtracted softmax with a **fixed sequential reduction
+/// order**: the max fold, the exp+sum loop and the divide all walk the
+/// slice front to back, so the result is a pure function of the input
+/// bits (attention weights and router probabilities both ride this).
+pub fn softmax_in_place(xs: &mut [f32]) {
+    let mut m = f32::NEG_INFINITY;
+    for &v in xs.iter() {
+        m = m.max(v);
+    }
+    let mut s = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = exp_f32(*v - m);
+        s += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn exp_matches_libm_within_3e7() {
+        let mut rng = Pcg::new(0xE4B);
+        for _ in 0..20_000 {
+            let x = (rng.next_f32() - 0.5) * 60.0;
+            let got = exp_f32(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 3e-7, "x={x}: got {got}, want {want} (rel {rel:.2e})");
+        }
+        assert_eq!(exp_f32(0.0), 1.0);
+    }
+
+    #[test]
+    fn exp_saturates_cleanly() {
+        assert!(exp_f32(1000.0).is_finite());
+        assert!(exp_f32(-1000.0) > 0.0, "clamped low end stays normal");
+        assert!(exp_f32(f32::NEG_INFINITY).is_finite());
+        assert_eq!(exp_f32(EXP_LO).to_bits(), exp_f32(-500.0).to_bits());
+    }
+
+    #[test]
+    fn sin_cos_match_libm_on_unit_interval() {
+        for k in 0..=1000 {
+            let x = k as f32 / 1000.0;
+            assert!((sin_small(x) as f64 - (x as f64).sin()).abs() < 1e-6, "sin {x}");
+            assert!((cos_small(x) as f64 - (x as f64).cos()).abs() < 1e-6, "cos {x}");
+        }
+    }
+
+    #[test]
+    fn silu_shape() {
+        assert_eq!(silu(0.0), 0.0);
+        assert!((silu(5.0) - 5.0).abs() < 0.04);
+        assert!(silu(-5.0).abs() < 0.04);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_deterministic() {
+        let mut a = vec![0.5f32, -1.0, 3.25, 0.0, 2.0];
+        let mut b = a.clone();
+        softmax_in_place(&mut a);
+        softmax_in_place(&mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let s: f32 = a.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(a[2] > a[4] && a[4] > a[0]);
+        // Shift invariance up to the shared max-subtraction.
+        let mut c = vec![100.5f32, 99.0, 103.25, 100.0, 102.0];
+        softmax_in_place(&mut c);
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

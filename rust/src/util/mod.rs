@@ -1,9 +1,11 @@
-//! Small shared utilities: deterministic RNG (mirrored in Python),
-//! formatting helpers.
+//! Small shared utilities: deterministic RNG and deterministic f32
+//! transcendentals (both mirrored bit-exactly in Python), formatting
+//! helpers.
 
 pub mod bench;
 pub mod f16;
 pub mod json;
+pub mod math;
 pub mod rng;
 
 /// Format a byte count the way the paper's tables do (GiB, labelled "G"
@@ -15,6 +17,18 @@ pub fn fmt_gib(bytes: u64) -> String {
 /// Format GiB with one decimal.
 pub fn fmt_gib1(bytes: u64) -> String {
     format!("{:.1}GiB", bytes as f64 / (1u64 << 30) as f64)
+}
+
+/// FNV-1a 64-bit fold — the checksum behind the committed golden
+/// fixtures (`container.*.fnv64`, `forward.*.fnv64`), mirrored
+/// byte-for-byte in `python/tools/bless_goldens.py`.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 /// Mean and (population) standard deviation of a sample.
@@ -35,6 +49,14 @@ mod tests {
     fn gib_formatting() {
         assert_eq!(fmt_gib(377 * (1u64 << 30)), "377G");
         assert_eq!(fmt_gib1(3 * (1u64 << 29)), "1.5GiB");
+    }
+
+    #[test]
+    fn fnv64_known_values() {
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        // FNV-1a("a") — published reference value.
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv64(b"ab"), fnv64(b"ba"));
     }
 
     #[test]

@@ -16,6 +16,7 @@
 use dsq::container::{quantize_container_with, synthetic_f32_container};
 use dsq::model::ModelConfig;
 use dsq::quant::{self, parallel, QuantFormat};
+use dsq::util::fnv64;
 use dsq::util::rng::Pcg;
 use std::path::PathBuf;
 
@@ -97,15 +98,6 @@ fn golden_vectors_every_builtin_format() {
             );
         }
     }
-}
-
-fn fnv64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 /// Scheme-level golden: the whole quantized container (header + every

@@ -83,7 +83,7 @@ fn engine_prefill_decode_shapes() {
     assert!(out.logits.iter().all(|v| v.is_finite()));
     let next = vec![5i32; b];
     let pos = vec![4i32; b];
-    let out2 = engine.run_decode(&next, &pos, out.cache).unwrap();
+    let out2 = engine.run_decode(&next, &pos, out.state).unwrap();
     assert_eq!(out2.logits.len(), b * engine.vocab());
 }
 

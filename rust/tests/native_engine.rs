@@ -1,87 +1,119 @@
-//! Native CPU matvec backend, end to end: `Engine::load_native`-style
-//! construction (via `Engine::native_from_container`), step determinism
-//! across thread counts, and a full `Coordinator` wave over quantized
-//! weights — no HLO artifacts, no PJRT.
+//! Native CPU backend, end to end: `Engine::load_native`-style
+//! construction (via `Engine::native_from_container` /
+//! `Engine::from_native`), step determinism across thread counts, and a
+//! full `Coordinator` wave over quantized weights — no HLO artifacts,
+//! no PJRT.
 //!
-//! This is the serving path the fused `quant::kernels::vec_dot` work
-//! exists for: the unembedding matrix stays container-encoded and every
-//! decode step's logits are computed directly on the packed bytes.
+//! Since PR 4 every step is the complete tiny-MoE forward pass (MLA
+//! attention over per-slot KV caches + routed experts) fused on the
+//! encoded container payloads; the per-step numeric properties live in
+//! `tests/native_forward.rs`, this file covers the serving plumbing:
+//! prefill/decode state threading, inactive-slot skipping, and the
+//! submit-time admission checks against the engine's context bound.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
 use dsq::model::ModelConfig;
-use dsq::runtime::Engine;
-use dsq::scheme::builtin;
+use dsq::runtime::native::{NativeEngine, NATIVE_BATCH, NATIVE_MAX_CTX, NATIVE_PROMPT_LEN};
+use dsq::runtime::{Engine, StepState};
+use std::sync::OnceLock;
 
-fn quantized_container(scheme: &str) -> Container {
-    let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0x1A7E).unwrap();
-    let writer =
-        quantize_container_with(&src, &builtin::scheme(scheme).unwrap(), None, 1).unwrap();
-    Container::from_bytes(writer.to_bytes()).unwrap()
+/// Quantized tiny-moe container bytes, built once per scheme (serial
+/// container quantization is the slow part of these tests in debug).
+fn qbytes(scheme: &str) -> &'static [u8] {
+    static DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    let cell = match scheme {
+        "dq3_k_m" => &DQ3,
+        "q4_k_m" => &Q4,
+        other => panic!("unexpected scheme {other}"),
+    };
+    cell.get_or_init(|| {
+        let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0x1A7E).unwrap();
+        let scheme = dsq::scheme::builtin::scheme(scheme).unwrap();
+        quantize_container_with(&src, &scheme, None, 1).unwrap().to_bytes()
+    })
 }
 
-fn native_engine(scheme: &str, threads: usize) -> Engine {
-    Engine::native_from_container(quantized_container(scheme), threads).unwrap()
+fn quantized_container(scheme: &str) -> Container {
+    Container::from_bytes(qbytes(scheme).to_vec()).unwrap()
+}
+
+/// A small serving shape so debug-mode waves stay fast; the default
+/// NATIVE_* shape is covered by `native_engine_reports_serving_shapes`.
+fn small_engine(scheme: &str, threads: usize) -> Engine {
+    Engine::from_native(
+        NativeEngine::with_limits(quantized_container(scheme), threads, 3, 6, 10).unwrap(),
+    )
+    .unwrap()
 }
 
 #[test]
 fn native_engine_reports_serving_shapes() {
-    let engine = native_engine("dq3_k_m", 1);
+    let engine = Engine::native_from_container(quantized_container("dq3_k_m"), 1).unwrap();
     assert_eq!(engine.model_name, "tiny-moe");
     assert_eq!(engine.scheme_name, "dq3_k_m");
     assert_eq!(engine.vocab(), 512);
-    assert!(engine.batch() > 0 && engine.prompt_len() > 0);
+    assert_eq!(engine.batch(), NATIVE_BATCH);
+    assert_eq!(engine.prompt_len(), NATIVE_PROMPT_LEN);
+    assert_eq!(engine.max_ctx(), NATIVE_MAX_CTX);
     assert!(engine.max_ctx() > engine.prompt_len());
 }
 
 #[test]
 fn native_steps_bit_identical_across_thread_counts() {
-    let a = native_engine("q4_k_m", 1);
-    let b = native_engine("q4_k_m", 8);
+    let a = small_engine("q4_k_m", 1);
+    let b = small_engine("q4_k_m", 8);
     let (bt, t) = (a.batch(), a.prompt_len());
-    let tokens: Vec<i32> = (0..(bt * t) as i32).map(|i| i % 512).collect();
+    let tokens: Vec<i32> = (0..(bt * t) as i32).map(|i| (i * 37) % 512).collect();
     let lengths: Vec<i32> = (0..bt as i32).map(|i| 1 + i % t as i32).collect();
     let pa = a.run_prefill(&tokens, &lengths).unwrap();
     let pb = b.run_prefill(&tokens, &lengths).unwrap();
     let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
     assert_eq!(bits(&pa.logits), bits(&pb.logits), "prefill");
     let step: Vec<i32> = (0..bt as i32).map(|i| (7 * i + 3) % 512).collect();
-    let pos = vec![1i32; bt];
-    let da = a.run_decode(&step, &pos, pa.cache).unwrap();
-    let db = b.run_decode(&step, &pos, pb.cache).unwrap();
+    let pos: Vec<i32> = lengths.clone();
+    let da = a.run_decode(&step, &pos, pa.state).unwrap();
+    let db = b.run_decode(&step, &pos, pb.state).unwrap();
     assert_eq!(bits(&da.logits), bits(&db.logits), "decode");
 }
 
 #[test]
 fn native_logits_have_serving_shape_and_are_finite() {
-    let engine = native_engine("dq3_k_m", 2);
+    let engine = small_engine("dq3_k_m", 2);
     let (b, t, v) = (engine.batch(), engine.prompt_len(), engine.vocab());
     let tokens = vec![1i32; b * t];
-    let lengths = vec![t as i32; b];
+    let lengths = vec![1i32; b];
     let out = engine.run_prefill(&tokens, &lengths).unwrap();
     assert_eq!(out.logits.len(), b * v);
     assert!(out.logits.iter().all(|x| x.is_finite()));
-    // Native backend carries no PJRT cache literals.
-    assert!(out.cache.is_empty());
-    assert!(engine.empty_cache().unwrap().is_empty());
+    // The native backend threads per-slot KV caches, not PJRT literals.
+    match out.state {
+        StepState::Native(kv) => {
+            assert_eq!(kv.n_slots(), b);
+            assert!((0..b).all(|i| kv.slot_len(i) == 1));
+        }
+        StepState::Pjrt(_) => panic!("native engine must carry native state"),
+    }
+    assert!(matches!(engine.initial_state().unwrap(), StepState::Native(_)));
 }
 
 #[test]
 fn coordinator_serves_a_wave_on_quantized_weights() {
     let run = || {
-        let mut coord = Coordinator::new(native_engine("dq3_k_m", 4));
-        for i in 0..5u64 {
+        let mut coord = Coordinator::new(small_engine("dq3_k_m", 4));
+        for i in 0..3u64 {
             coord
                 .submit(Request {
                     id: i,
-                    prompt: vec![(3 + i as i32) % 512; 4 + i as usize],
+                    prompt: vec![(3 + i as i32) % 512; 3 + i as usize],
                     params: SamplingParams::paper(),
                     seed: 1000 + i,
                 })
                 .unwrap();
         }
         let responses = coord.run_to_completion().unwrap();
-        assert_eq!(responses.len(), 5);
+        assert_eq!(responses.len(), 3);
         for r in &responses {
             assert!(!r.tokens.is_empty(), "request {} generated nothing", r.id);
             assert_eq!(r.n_generated, r.tokens.len());
@@ -96,7 +128,7 @@ fn coordinator_serves_a_wave_on_quantized_weights() {
 
 #[test]
 fn oversized_prompt_rejected_before_reaching_the_engine() {
-    let mut coord = Coordinator::new(native_engine("q4_k_m", 1));
+    let mut coord = Coordinator::new(small_engine("q4_k_m", 1));
     let too_long = coord.engine().prompt_len() + 1;
     let err = coord.submit(Request {
         id: 0,
@@ -105,4 +137,43 @@ fn oversized_prompt_rejected_before_reaching_the_engine() {
         seed: 1,
     });
     assert!(err.is_err());
+}
+
+#[test]
+fn prompt_overrunning_max_ctx_rejected_at_submit_not_mid_wave() {
+    // An engine whose compiled prompt length exceeds its context bound:
+    // an 7-token prompt packs fine (≤ prompt_len = 8) but could never
+    // generate inside max_ctx = 6 — the old coordinator accepted it and
+    // only failed once the per-slot KV cache overflowed mid-wave.
+    let engine = Engine::from_native(
+        NativeEngine::with_limits(quantized_container("q4_k_m"), 1, 2, 8, 6).unwrap(),
+    )
+    .unwrap();
+    let mut coord = Coordinator::new(engine);
+    let err = coord
+        .submit(Request {
+            id: 0,
+            prompt: vec![1; 7],
+            params: SamplingParams::greedy(),
+            seed: 1,
+        })
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("max context"), "error must name the bound: {msg}");
+    assert!(msg.contains('7') && msg.contains('6'), "error must give the numbers: {msg}");
+    assert_eq!(coord.pending(), 0, "rejected request must not be queued");
+
+    // A prompt that leaves generation room is admitted and the wave
+    // completes without ever hitting the KV bound.
+    coord
+        .submit(Request {
+            id: 1,
+            prompt: vec![1; 5],
+            params: SamplingParams::greedy(),
+            seed: 2,
+        })
+        .unwrap();
+    let responses = coord.run_to_completion().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert!(!responses[0].tokens.is_empty());
 }

@@ -1,0 +1,409 @@
+//! Differential + property suite for the native tiny-MoE forward pass
+//! (`runtime::forward`), the computation behind `dsq eval --native`.
+//!
+//! Four locks, mirroring the codec golden suite one level up:
+//!
+//! 1. **Golden logits** — the shared script (prefill [`PROMPT`] on the
+//!    seed-`0x601D` tiny-moe container, then greedy decode) must hash
+//!    to the committed `tests/golden/forward.*.fnv64` checksums for the
+//!    DQ3_K_M and Q4_K_M schemes. The committed fixtures were produced
+//!    by the bit-exact Python mirror in `python/tools/bless_goldens.py`,
+//!    so this test is also the Rust↔Python cross-language gate.
+//! 2. **Differential vs an in-test f64 reference** — an independent
+//!    plain-loop float64 forward (libm transcendentals, natural-order
+//!    sums, no shared code with the engine) must agree to ~1e-4 on the
+//!    *same* decoded weights, and within the per-scheme quantization
+//!    tolerance on the f32 *source* weights (measured rel-L2 ≈ 0.11 for
+//!    DQ3_K_M / 0.12 for Q4_K_M on this fixture).
+//! 3. **Bit identity** — logits are identical across matvec thread
+//!    counts {1, 2, 8} and across both pinned vec_dot dispatch arms;
+//!    CI reruns this whole suite under `DSQ_SCALAR_DECODE=1` so the
+//!    env-selected scalar arm is pinned to the same fixtures.
+//! 4. **KV-cache coherence** — incremental decode (logits requested at
+//!    every step) is bit-identical to a fresh full prefill of the same
+//!    token prefix, and attention state actually matters (the same
+//!    token at different positions produces different logits).
+
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
+use dsq::coordinator::sampler::argmax;
+use dsq::model::ModelConfig;
+use dsq::runtime::forward::{ForwardPass, MatvecMode};
+use dsq::runtime::native::NATIVE_MAX_CTX;
+use dsq::util::fnv64;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// The golden script, mirrored verbatim by `bless_goldens.py`.
+const PROMPT: [i32; 8] = [1, 17, 300, 42, 511, 7, 5, 260];
+const DECODE_STEPS: usize = 4;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn golden_src() -> Container {
+    synthetic_f32_container(&ModelConfig::tiny_moe(), 0x601D).unwrap()
+}
+
+/// Quantized golden-container bytes, built once per scheme.
+fn qbytes(scheme: &str) -> &'static [u8] {
+    static DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    let cell = match scheme {
+        "dq3_k_m" => &DQ3,
+        "q4_k_m" => &Q4,
+        other => panic!("unexpected scheme {other}"),
+    };
+    cell.get_or_init(|| {
+        let scheme = dsq::scheme::builtin::scheme(scheme).unwrap();
+        quantize_container_with(&golden_src(), &scheme, None, 1).unwrap().to_bytes()
+    })
+}
+
+fn forward(scheme: &str, threads: usize) -> ForwardPass {
+    let ckpt = Container::from_bytes(qbytes(scheme).to_vec()).unwrap();
+    ForwardPass::new(ckpt, threads, NATIVE_MAX_CTX).unwrap()
+}
+
+/// Run the golden script: prefill `PROMPT` (logits at the last prompt
+/// token only), then `DECODE_STEPS` greedy steps. Returns the emitted
+/// logits rows (1 + DECODE_STEPS of them).
+fn run_script(fwd: &ForwardPass) -> Vec<Vec<f32>> {
+    let mut cache = fwd.new_cache();
+    let mut logits = vec![0f32; fwd.vocab()];
+    for (j, &t) in PROMPT.iter().enumerate() {
+        let want = if j + 1 == PROMPT.len() { Some(&mut logits[..]) } else { None };
+        fwd.forward_token(t, &mut cache, want).unwrap();
+    }
+    let mut rows = vec![logits.clone()];
+    for _ in 0..DECODE_STEPS {
+        let tok = argmax(rows.last().unwrap());
+        fwd.forward_token(tok, &mut cache, Some(&mut logits)).unwrap();
+        rows.push(logits.clone());
+    }
+    rows
+}
+
+fn bits(rows: &[Vec<f32>]) -> Vec<u32> {
+    rows.iter().flatten().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn golden_forward_logits_checksums() {
+    for scheme in ["dq3_k_m", "q4_k_m"] {
+        let rows = run_script(&forward(scheme, 1));
+        let mut blob = Vec::with_capacity(rows.len() * rows[0].len() * 4);
+        for r in &rows {
+            for v in r {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let line = format!("{:016x} {}\n", fnv64(&blob), blob.len());
+        let path = golden_dir().join(format!("forward.{scheme}.fnv64"));
+        if !path.exists() {
+            std::fs::write(&path, &line).unwrap();
+            eprintln!("[golden] blessed new fixture {} — commit it", path.display());
+            continue;
+        }
+        let expect = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            expect.trim(),
+            line.trim(),
+            "forward logits for scheme {scheme} drifted from {}; if the change is \
+             intentional, re-bless from python/tools/bless_goldens.py (or delete + rerun) \
+             and call it out in the PR",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn logits_bit_identical_across_threads_and_dispatch_arms() {
+    let base = bits(&run_script(&forward("dq3_k_m", 1)));
+    for (label, mode) in [
+        ("threads=2", MatvecMode::Threads(2)),
+        ("threads=8", MatvecMode::Threads(8)),
+        ("pinned scalar arm", MatvecMode::Pinned(false)),
+        ("pinned lane arm", MatvecMode::Pinned(true)),
+    ] {
+        let mut fwd = forward("dq3_k_m", 1);
+        fwd.set_mode(mode);
+        assert_eq!(base, bits(&run_script(&fwd)), "{label}");
+    }
+}
+
+#[test]
+fn incremental_decode_equals_full_prefill() {
+    let fwd = forward("q4_k_m", 2);
+    let toks = [1i32, 9, 300, 42, 77, 5];
+    // Incremental: one cache, logits requested at every step.
+    let mut cache = fwd.new_cache();
+    let mut logits = vec![0f32; fwd.vocab()];
+    let mut per_step: Vec<Vec<u32>> = Vec::new();
+    for &t in &toks {
+        fwd.forward_token(t, &mut cache, Some(&mut logits)).unwrap();
+        per_step.push(logits.iter().map(|v| v.to_bits()).collect());
+    }
+    // Fresh prefills of each prefix (logits only at the final token)
+    // must land on the same bits: requesting logits mid-stream does not
+    // perturb the cache, and the cache replays exactly.
+    for k in [1usize, 3, 6] {
+        let mut c2 = fwd.new_cache();
+        for (j, &t) in toks[..k].iter().enumerate() {
+            let want = if j + 1 == k { Some(&mut logits[..]) } else { None };
+            fwd.forward_token(t, &mut c2, want).unwrap();
+        }
+        let got: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, per_step[k - 1], "prefix length {k}");
+        assert_eq!(c2.len(), k);
+    }
+}
+
+#[test]
+fn attention_state_makes_positions_distinct() {
+    let fwd = forward("q4_k_m", 1);
+    let mut cache = fwd.new_cache();
+    let mut first = vec![0f32; fwd.vocab()];
+    let mut second = vec![0f32; fwd.vocab()];
+    fwd.forward_token(42, &mut cache, Some(&mut first)).unwrap();
+    fwd.forward_token(42, &mut cache, Some(&mut second)).unwrap();
+    assert_ne!(
+        bits(&[first]),
+        bits(&[second]),
+        "same token at positions 0 and 1 must see different attention state"
+    );
+}
+
+// --- the independent f64 reference forward -------------------------------
+
+/// Every tensor of a container decoded to f64 (shape kept).
+fn decode_all(c: &Container) -> HashMap<String, (Vec<usize>, Vec<f64>)> {
+    c.tensors
+        .iter()
+        .map(|t| {
+            let vals: Vec<f64> = c.dequantize(t).unwrap().iter().map(|&v| v as f64).collect();
+            (t.name.clone(), (t.shape.clone(), vals))
+        })
+        .collect()
+}
+
+struct RefForward<'a> {
+    w: &'a HashMap<String, (Vec<usize>, Vec<f64>)>,
+    cfg: ModelConfig,
+}
+
+impl RefForward<'_> {
+    fn get(&self, name: &str) -> (&[usize], &[f64]) {
+        let (shape, vals) = self.w.get(name).unwrap_or_else(|| panic!("missing {name}"));
+        (shape.as_slice(), vals.as_slice())
+    }
+
+    fn blk(&self, li: usize, stem: &str) -> (&[usize], &[f64]) {
+        self.get(&format!("blk.{li}.{stem}.weight"))
+    }
+
+    fn matvec(&self, (shape, vals): (&[usize], &[f64]), x: &[f64]) -> Vec<f64> {
+        let n = *shape.last().unwrap();
+        assert_eq!(n, x.len());
+        vals.chunks_exact(n)
+            .map(|row| row.iter().zip(x).map(|(&a, &b)| a * b).sum::<f64>())
+            .collect()
+    }
+
+    fn norm(&self, x: &[f64], g: &[f64]) -> Vec<f64> {
+        let ms = x.iter().map(|v| v * v).sum::<f64>() / x.len() as f64;
+        let s = 1.0 / (ms + 1e-6).sqrt();
+        x.iter().zip(g).map(|(&v, &gv)| v * s * gv).collect()
+    }
+
+    fn rope(&self, x: &mut [f64], pos: usize) {
+        let d = self.cfg.qk_rope_head_dim as f64;
+        for i in 0..x.len() / 2 {
+            let ang = pos as f64 * 10000f64.powf(-(2 * i) as f64 / d);
+            let (s, c) = ang.sin_cos();
+            let (a, b) = (x[2 * i], x[2 * i + 1]);
+            x[2 * i] = a * c - b * s;
+            x[2 * i + 1] = a * s + b * c;
+        }
+    }
+
+    fn softmax(&self, x: &mut [f64]) {
+        let m = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut s = 0.0;
+        for v in x.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        for v in x.iter_mut() {
+            *v /= s;
+        }
+    }
+
+    fn mlp(&self, li: usize, stems: [&str; 3], x: &[f64], expert: Option<usize>) -> Vec<f64> {
+        let slice = |(shape, vals): (&[usize], &[f64])| -> (Vec<usize>, Vec<f64>) {
+            match expert {
+                None => (shape.to_vec(), vals.to_vec()),
+                Some(e) => {
+                    let per = shape[1] * shape[2];
+                    (vec![shape[1], shape[2]], vals[e * per..(e + 1) * per].to_vec())
+                }
+            }
+        };
+        let (gs, gv) = slice(self.blk(li, stems[0]));
+        let (us, uv) = slice(self.blk(li, stems[1]));
+        let (ds, dv) = slice(self.blk(li, stems[2]));
+        let g = self.matvec((&gs, &gv), x);
+        let u = self.matvec((&us, &uv), x);
+        let a: Vec<f64> = g
+            .iter()
+            .zip(&u)
+            .map(|(&gv, &uv)| gv / (1.0 + (-gv).exp()) * uv)
+            .collect();
+        self.matvec((&ds, &dv), &a)
+    }
+
+    /// Forward `tokens`, returning logits rows for every position at or
+    /// past `want_from`.
+    fn run(&self, tokens: &[i32], want_from: usize) -> Vec<Vec<f64>> {
+        let cfg = &self.cfg;
+        let (nope, vh) = (cfg.qk_nope_head_dim, cfg.v_head_dim);
+        let (qk_head, kv_rank) = (cfg.qk_head_dim(), cfg.kv_lora_rank);
+        let mut caches: Vec<Vec<Vec<f64>>> = vec![Vec::new(); cfg.n_layers];
+        let mut rows = Vec::new();
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let (es, ev) = self.get("token_embd.weight");
+            let t = tok.rem_euclid(es[0] as i32) as usize;
+            let mut h: Vec<f64> = ev[t * es[1]..(t + 1) * es[1]].to_vec();
+            for li in 0..cfg.n_layers {
+                let xn = self.norm(&h, self.blk(li, "attn_norm").1);
+                let q_a = self.matvec(self.blk(li, "attn_q_a"), &xn);
+                let q_an = self.norm(&q_a, self.blk(li, "attn_q_a_norm").1);
+                let q = self.matvec(self.blk(li, "attn_q_b"), &q_an);
+                let kv_a = self.matvec(self.blk(li, "attn_kv_a_mqa"), &xn);
+                let mut row = self.norm(&kv_a[..kv_rank], self.blk(li, "attn_kv_a_norm").1);
+                let mut k_rope = kv_a[kv_rank..].to_vec();
+                self.rope(&mut k_rope, pos);
+                row.extend_from_slice(&k_rope);
+                caches[li].push(row);
+                let ctx = pos + 1;
+                let kvb: Vec<Vec<f64>> = (0..ctx)
+                    .map(|p| self.matvec(self.blk(li, "attn_kv_b"), &caches[li][p][..kv_rank]))
+                    .collect();
+                let mut heads = vec![0f64; cfg.n_heads * vh];
+                for hd in 0..cfg.n_heads {
+                    let mut qh = q[hd * qk_head..(hd + 1) * qk_head].to_vec();
+                    let (q_nope, q_rope) = qh.split_at_mut(nope);
+                    self.rope(q_rope, pos);
+                    let mut sc: Vec<f64> = (0..ctx)
+                        .map(|p| {
+                            let kn = &kvb[p][hd * (nope + vh)..hd * (nope + vh) + nope];
+                            let kr = &caches[li][p][kv_rank..];
+                            let s = q_nope.iter().zip(kn).map(|(&a, &b)| a * b).sum::<f64>()
+                                + q_rope.iter().zip(kr).map(|(&a, &b)| a * b).sum::<f64>();
+                            s / (qk_head as f64).sqrt()
+                        })
+                        .collect();
+                    self.softmax(&mut sc);
+                    for (p, &w) in sc.iter().enumerate() {
+                        let v = &kvb[p][hd * (nope + vh) + nope..hd * (nope + vh) + nope + vh];
+                        for (o, &vv) in heads[hd * vh..(hd + 1) * vh].iter_mut().zip(v) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+                let attn = self.matvec(self.blk(li, "attn_output"), &heads);
+                for (hv, av) in h.iter_mut().zip(&attn) {
+                    *hv += av;
+                }
+                let xn = self.norm(&h, self.blk(li, "ffn_norm").1);
+                let ffn = if !cfg.is_moe_layer(li) {
+                    self.mlp(li, ["ffn_gate", "ffn_up", "ffn_down"], &xn, None)
+                } else {
+                    let mut probs = self.matvec(self.blk(li, "ffn_gate_inp"), &xn);
+                    self.softmax(&mut probs);
+                    let mut idx: Vec<usize> = (0..cfg.n_routed_experts).collect();
+                    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap().then(a.cmp(&b)));
+                    idx.truncate(cfg.n_active_experts);
+                    idx.sort_unstable();
+                    let z: f64 = idx.iter().map(|&e| probs[e]).sum();
+                    let sh = ["ffn_gate_shexp", "ffn_up_shexp", "ffn_down_shexp"];
+                    let mut out = self.mlp(li, sh, &xn, None);
+                    for &e in &idx {
+                        let y = self.mlp(
+                            li,
+                            ["ffn_gate_exps", "ffn_up_exps", "ffn_down_exps"],
+                            &xn,
+                            Some(e),
+                        );
+                        for (o, yv) in out.iter_mut().zip(&y) {
+                            *o += probs[e] / z * yv;
+                        }
+                    }
+                    out
+                };
+                for (hv, fv) in h.iter_mut().zip(&ffn) {
+                    *hv += fv;
+                }
+            }
+            if pos >= want_from {
+                let xn = self.norm(&h, self.get("output_norm.weight").1);
+                rows.push(self.matvec(self.get("output.weight"), &xn));
+            }
+        }
+        rows
+    }
+}
+
+fn rel_l2(a: &[f32], b: &[f64]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(&x, &y)| (x as f64 - y) * (x as f64 - y)).sum();
+    let den: f64 = b.iter().map(|&y| y * y).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// The differential lock: the engine's quantized forward vs the f64
+/// reference on the same decoded weights (arithmetic-order differences
+/// only — measured ~2e-7) and vs the reference on the f32 source
+/// weights (quantization error — measured rel-L2 ≈ 0.11 for DQ3_K_M,
+/// ≈ 0.12 for Q4_K_M on this fixture; bounded per scheme).
+#[test]
+fn quantized_forward_tracks_f32_reference_within_per_format_tolerance() {
+    let src_weights = decode_all(&golden_src());
+    for (scheme, qtol) in [("dq3_k_m", 0.35), ("q4_k_m", 0.35)] {
+        let fwd = forward(scheme, 1);
+        let rows = run_script(&fwd);
+        // The exact token sequence the engine ran (prompt + its greedy
+        // choices), replayed through the references.
+        let mut toks: Vec<i32> = PROMPT.to_vec();
+        for r in &rows[..DECODE_STEPS] {
+            toks.push(argmax(r));
+        }
+        let want_from = PROMPT.len() - 1;
+
+        let qc = Container::from_bytes(qbytes(scheme).to_vec()).unwrap();
+        let q_weights = decode_all(&qc);
+        let same = RefForward { w: &q_weights, cfg: ModelConfig::tiny_moe() }
+            .run(&toks, want_from);
+        assert_eq!(same.len(), rows.len());
+        for (i, (got, want)) in rows.iter().zip(&same).enumerate() {
+            let d = rel_l2(got, want);
+            assert!(d < 1e-4, "{scheme} row {i}: engine vs same-weights f64 reference {d:.2e}");
+        }
+
+        let srcref = RefForward { w: &src_weights, cfg: ModelConfig::tiny_moe() }
+            .run(&toks, want_from);
+        let worst = rows
+            .iter()
+            .zip(&srcref)
+            .map(|(got, want)| rel_l2(got, want))
+            .fold(0.0f64, f64::max);
+        assert!(
+            worst < qtol,
+            "{scheme}: quantized logits drift {worst:.3} exceeds per-scheme tolerance {qtol}"
+        );
+        assert!(
+            worst > 1e-4,
+            "{scheme}: quantization should measurably perturb logits (got {worst:.2e})"
+        );
+    }
+}
