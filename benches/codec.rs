@@ -17,8 +17,11 @@
 //! alone (CI's `BENCH_decode.json`, seeding the decode perf trajectory),
 //! and `--json-forward PATH` for the **native forward-pass tokens/s**
 //! section alone (CI's `BENCH_forward.json`): prefill + greedy decode
-//! through the full MLA+MoE step on encoded DQ3_K_M / Q4_K_M weights,
-//! serial vs row-parallel matvecs.
+//! through the full step on encoded DQ3_K_M / Q4_K_M weights — the
+//! MLA+MoE tiny-moe series plus, since PR 5, a tiny-dense (GQA,
+//! Table 5) series — serial vs row-parallel matvecs, with per-phase
+//! heap-allocation counts (prefill pays the lazy KV buffer; decode
+//! must report 0 allocations per token).
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::model::ModelConfig;
@@ -29,7 +32,42 @@ use dsq::scheme::builtin;
 use dsq::util::bench::{Bench, BenchResult};
 use dsq::util::json;
 use dsq::util::rng::Pcg;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+// --- allocation counter for the forward-pass discipline report ---
+// The decode loop must be allocation-free (per-slot scratch reuse +
+// lazy KV buffers); the bench counts allocation events around prefill
+// and decode and reports both in BENCH_forward.json.
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 // --- PR-1 scale-search baseline (two passes per candidate, closure
 // weight lookup) — kept verbatim here so the speedup of the current
@@ -469,59 +507,100 @@ fn main() -> anyhow::Result<()> {
     }
     decode_summary.push(("decode_dq3_k_m_speedup".to_string(), dq3_speedup));
 
-    // --- native forward pass (PR 4): tokens/s through the full
-    // MLA+MoE step on encoded weights — prefill an 8-token prompt and
-    // greedily decode 8 more, per scheme, serial vs row-parallel
-    // matvecs. This is the `dsq eval --native` per-token cost.
-    println!("\n# native forward pass: tiny-moe prefill(8) + greedy decode(8)\n");
+    // --- native forward pass (PR 4, dense since PR 5): tokens/s
+    // through the full step on encoded weights — the MLA+MoE tiny-moe
+    // and the dense-GQA tiny-dense (Table 5) proxies, prefilling an
+    // 8-token prompt and greedily decoding 8 more, per scheme, serial
+    // vs row-parallel matvecs. This is the `dsq eval --native`
+    // per-token cost. Alongside the throughput, the bench counts heap
+    // allocation events: prefill pays a handful (the lazy per-slot KV
+    // buffer), decode must be allocation-free (scratch reuse).
+    println!("\n# native forward pass: prefill(8) + greedy decode(8), both model kinds\n");
     let prompt = [1i32, 17, 300, 42, 511, 7, 5, 260];
     let decode_steps = 8usize;
     let total_tokens = (prompt.len() + decode_steps) as f64;
-    for scheme_name in ["dq3_k_m", "q4_k_m"] {
-        let qbytes = quantize_container_with(&src, &builtin::scheme(scheme_name)?, None, cores)?
-            .to_bytes();
-        let mut tok_s = Vec::new();
-        // On a 1-core host the parallel arm is the serial arm — skip
-        // the duplicate measurement (and the meaningless speedup row).
-        let mut thread_counts = vec![1usize];
-        if cores > 1 {
-            thread_counts.push(cores);
-        }
-        let mut fwd = ForwardPass::new(Container::from_bytes(qbytes)?, 1, NATIVE_MAX_CTX)?;
-        for &threads in &thread_counts {
-            fwd.set_mode(MatvecMode::Threads(threads));
+    let dense_src = synthetic_f32_container(&ModelConfig::tiny_dense(), 99)?;
+    for (model_tag, model_src) in [("", &src), ("tiny_dense/", &dense_src)] {
+        for scheme_name in ["dq3_k_m", "q4_k_m"] {
+            let qbytes =
+                quantize_container_with(model_src, &builtin::scheme(scheme_name)?, None, cores)?
+                    .to_bytes();
+            let mut tok_s = Vec::new();
+            // On a 1-core host the parallel arm is the serial arm — skip
+            // the duplicate measurement (and the meaningless speedup row).
+            let mut thread_counts = vec![1usize];
+            if cores > 1 {
+                thread_counts.push(cores);
+            }
+            // Summary keys: tiny-moe keeps its PR-4 names so the perf
+            // trajectory stays comparable; tiny-dense rows are new.
+            let key = |suffix: &str| {
+                format!("forward_{}{scheme_name}_{suffix}", model_tag.replace('/', "_"))
+            };
+            let mut fwd = ForwardPass::new(Container::from_bytes(qbytes)?, 1, NATIVE_MAX_CTX)?;
+            for &threads in &thread_counts {
+                fwd.set_mode(MatvecMode::Threads(threads));
+                let mut logits = vec![0f32; fwd.vocab()];
+                let mut scratch = fwd.new_scratch();
+                // `quick` preset: one iteration is a whole 16-token wave.
+                let r = Bench::quick().throughput_items(total_tokens as u64).run(
+                    &format!("forward-tokens/{model_tag}{scheme_name}/threads{threads}"),
+                    || {
+                        let mut cache = fwd.new_cache();
+                        for (j, &t) in prompt.iter().enumerate() {
+                            let want =
+                                if j + 1 == prompt.len() { Some(&mut logits[..]) } else { None };
+                            fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
+                        }
+                        for _ in 0..decode_steps {
+                            let tok = dsq::coordinator::sampler::argmax(&logits);
+                            fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits))
+                                .unwrap();
+                        }
+                        logits[0]
+                    },
+                );
+                let tps = total_tokens / (r.median_ns / 1e9);
+                println!(
+                    "forward {model_tag}{scheme_name:<8} threads {threads:>2}: \
+                     {tps:>8.1} tokens/s ({:.2} ms/token)",
+                    r.median_ns / 1e6 / total_tokens
+                );
+                forward_report.push(result_json(&r));
+                forward_summary.push((key(&format!("t{threads}_tokens_per_s")), tps));
+                tok_s.push(tps);
+            }
+            if tok_s.len() == 2 {
+                forward_summary.push((key("parallel_speedup"), tok_s[1] / tok_s[0]));
+            }
+            // Allocation discipline, measured outside the timing loop:
+            // prefill allocates once per slot (the lazy KV buffer);
+            // each decoded token must allocate nothing.
+            fwd.set_mode(MatvecMode::Threads(1));
+            let mut cache = fwd.new_cache();
+            let mut scratch = fwd.new_scratch();
             let mut logits = vec![0f32; fwd.vocab()];
-            // `quick` preset: one iteration is a whole 16-token wave.
-            let r = Bench::quick().throughput_items(total_tokens as u64).run(
-                &format!("forward-tokens/{scheme_name}/threads{threads}"),
-                || {
-                    let mut cache = fwd.new_cache();
-                    for (j, &t) in prompt.iter().enumerate() {
-                        let want =
-                            if j + 1 == prompt.len() { Some(&mut logits[..]) } else { None };
-                        fwd.forward_token(t, &mut cache, want).unwrap();
-                    }
-                    for _ in 0..decode_steps {
-                        let tok = dsq::coordinator::sampler::argmax(&logits);
-                        fwd.forward_token(tok, &mut cache, Some(&mut logits)).unwrap();
-                    }
-                    logits[0]
-                },
-            );
-            let tps = total_tokens / (r.median_ns / 1e9);
+            let a0 = ALLOC_EVENTS.load(Ordering::Relaxed);
+            for (j, &t) in prompt.iter().enumerate() {
+                let want = if j + 1 == prompt.len() { Some(&mut logits[..]) } else { None };
+                fwd.forward_token(t, &mut cache, &mut scratch, want)?;
+            }
+            let prefill_allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - a0;
+            let a1 = ALLOC_EVENTS.load(Ordering::Relaxed);
+            for _ in 0..decode_steps {
+                let tok = dsq::coordinator::sampler::argmax(&logits);
+                fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits))?;
+            }
+            let decode_allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - a1;
             println!(
-                "forward {scheme_name:<8} threads {threads:>2}: {tps:>8.1} tokens/s \
-                 ({:.2} ms/token)",
-                r.median_ns / 1e6 / total_tokens
+                "forward {model_tag}{scheme_name:<8} allocs: prefill {prefill_allocs} \
+                 (lazy KV), decode {decode_allocs} over {decode_steps} tokens"
             );
-            forward_report.push(result_json(&r));
-            forward_summary
-                .push((format!("forward_{scheme_name}_t{threads}_tokens_per_s"), tps));
-            tok_s.push(tps);
-        }
-        if tok_s.len() == 2 {
-            forward_summary
-                .push((format!("forward_{scheme_name}_parallel_speedup"), tok_s[1] / tok_s[0]));
+            forward_summary.push((key("prefill_allocs"), prefill_allocs as f64));
+            forward_summary.push((
+                key("decode_allocs_per_token"),
+                decode_allocs as f64 / decode_steps as f64,
+            ));
         }
     }
 

@@ -60,6 +60,9 @@ class Config:
     n_routed_experts: int
     n_shared_experts: int
     n_active_experts: int
+    # RoPE frequency base; Qwen-style dense configs declare 1000000.
+    # Optional with the classic default so pre-existing configs load.
+    rope_base: float = 10000.0
 
     @classmethod
     def load(cls, name: str) -> "Config":
@@ -67,7 +70,13 @@ class Config:
             return cls(**json.load(f))
 
     def to_dict(self) -> dict:
-        return dict(self.__dict__)
+        d = dict(self.__dict__)
+        # Mirror rust ModelConfig::to_json: the default base stays
+        # implicit so container headers written before the base became
+        # configurable keep their exact bytes.
+        if d.get("rope_base") == 10000.0:
+            del d["rope_base"]
+        return d
 
     def is_moe_layer(self, i: int) -> bool:
         return self.kind == "mla_moe" and i >= self.first_dense
@@ -191,7 +200,9 @@ def mla_attention(cfg: Config, weights, i, x, positions, cache_kv, mask):
     q = rms_norm(q, _blk(weights, i, "attn_q_a_norm").data)
     q = linear(q, _blk(weights, i, "attn_q_b")).reshape(b, t, h, nope + rp)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
-    q_rope = rope(q_rope.transpose(0, 2, 1, 3), positions[:, None, :]).transpose(0, 2, 1, 3)
+    q_rope = rope(
+        q_rope.transpose(0, 2, 1, 3), positions[:, None, :], base=cfg.rope_base
+    ).transpose(0, 2, 1, 3)
 
     c_kv = cache_kv[..., : cfg.kv_lora_rank]  # [B, C, kv_lora] (normed)
     k_rope = cache_kv[..., cfg.kv_lora_rank :]  # [B, C, rope] (roped)
@@ -213,7 +224,7 @@ def mla_compress(cfg: Config, weights, i, x, positions):
     """Produce the cacheable compressed KV for a chunk: [B, T, kv_lora+rope]."""
     ckv = linear(x, _blk(weights, i, "attn_kv_a_mqa"))
     c_kv = rms_norm(ckv[..., : cfg.kv_lora_rank], _blk(weights, i, "attn_kv_a_norm").data)
-    k_rope = rope(ckv[..., cfg.kv_lora_rank :], positions)
+    k_rope = rope(ckv[..., cfg.kv_lora_rank :], positions, base=cfg.rope_base)
     return jnp.concatenate([c_kv, k_rope], axis=-1)
 
 
@@ -225,7 +236,9 @@ def gqa_attention(cfg: Config, weights, i, x, positions, cache_k, cache_v, mask)
     rep = h // kvh
 
     q = linear(x, _blk(weights, i, "attn_q")).reshape(b, t, h, hd)
-    q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :]).transpose(0, 2, 1, 3)
+    q = rope(
+        q.transpose(0, 2, 1, 3), positions[:, None, :], base=cfg.rope_base
+    ).transpose(0, 2, 1, 3)
     k = cache_k.reshape(b, c, kvh, hd)
     v = cache_v.reshape(b, c, kvh, hd)
     k = jnp.repeat(k, rep, axis=2)
@@ -243,7 +256,9 @@ def gqa_compress(cfg: Config, weights, i, x, positions):
     b, t, _ = x.shape
     kvh, hd = cfg.n_kv_heads, cfg.head_dim
     k = linear(x, _blk(weights, i, "attn_k")).reshape(b, t, kvh, hd)
-    k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :]).transpose(0, 2, 1, 3)
+    k = rope(
+        k.transpose(0, 2, 1, 3), positions[:, None, :], base=cfg.rope_base
+    ).transpose(0, 2, 1, 3)
     v = linear(x, _blk(weights, i, "attn_v"))
     return k.reshape(b, t, kvh * hd), v
 

@@ -19,14 +19,16 @@ golden test fails and the fixtures must be re-blessed from Rust (delete
 - every block packer (`q2_k` … `q8_0`, raw `f32`/`f16`),
 - `synthetic_f32_container` + `Scheme::plan` + the `.dsq` writer
   (compact JSON, 64-byte tensor / 4096-byte data alignment),
-- the native **tiny-MoE forward pass** (`rust/src/runtime/forward.rs`):
-  the deterministic f32 transcendentals of `util::math` (exp / sin /
-  cos / softmax / silu), the lane-ordered matvecs and RMSNorm sums, MLA
-  attention with the compressed-latent KV cache, RoPE via the
-  angle-addition recurrence, and top-k expert routing — producing the
-  `forward.*.fnv64` golden-logits checksums for the DQ3_K_M and Q4_K_M
-  containers (cross-checked against an independent float64 numpy
-  forward before anything is written).
+- the native **forward pass** (`rust/src/runtime/forward.rs`) for both
+  model kinds: the deterministic f32 transcendentals of `util::math`
+  (exp / ln / sin / cos / softmax / silu), the lane-ordered matvecs and
+  RMSNorm sums, MLA attention with the compressed-latent KV cache and
+  top-k expert routing (tiny-moe) **and** dense grouped-query attention
+  with the conventional per-head K/V cache (tiny-dense, Qwen-style
+  θ=1000000 RoPE base) — producing the `forward.*.fnv64` and
+  `forward.tiny_dense.*.fnv64` golden-logits checksums for the DQ3_K_M
+  and Q4_K_M containers (each cross-checked against an independent
+  float64 numpy forward before anything is written).
 
 Every fixture is additionally cross-checked against the *independent*
 mirrors that already live in `python/compile/` (quants.py dequantizer,
@@ -41,6 +43,7 @@ from __future__ import annotations
 
 import json
 import math
+import struct
 import sys
 from pathlib import Path
 
@@ -778,6 +781,51 @@ def tiny_moe_census():
     return out
 
 
+TINY_DENSE = dict(
+    name="tiny-dense",
+    kind="dense_gqa",
+    vocab_size=512,
+    hidden_size=256,
+    n_layers=3,
+    first_dense=3,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    q_lora_rank=0,
+    kv_lora_rank=0,
+    qk_nope_head_dim=0,
+    qk_rope_head_dim=0,
+    v_head_dim=0,
+    intermediate_size=512,
+    moe_intermediate_size=0,
+    n_routed_experts=0,
+    n_shared_experts=0,
+    n_active_experts=0,
+    rope_base=1000000,
+)
+
+
+def tiny_dense_census():
+    """Mirror of ModelConfig::census for the dense-GQA tiny model."""
+    c = TINY_DENSE
+    h = c["hidden_size"]
+    out = [("token_embd.weight", "token_embd", None, [c["vocab_size"], h])]
+    for i in range(c["n_layers"]):
+        blk = lambda stem: f"blk.{i}.{stem}.weight"  # noqa: E731
+        out.append((blk("attn_norm"), "norm", i, [h]))
+        out.append((blk("attn_q"), "attn_q", i, [c["n_heads"] * c["head_dim"], h]))
+        out.append((blk("attn_k"), "attn_k", i, [c["n_kv_heads"] * c["head_dim"], h]))
+        out.append((blk("attn_v"), "attn_v", i, [c["n_kv_heads"] * c["head_dim"], h]))
+        out.append((blk("attn_output"), "attn_output", i, [h, c["n_heads"] * c["head_dim"]]))
+        out.append((blk("ffn_norm"), "norm", i, [h]))
+        out.append((blk("ffn_gate"), "ffn_gate", i, [c["intermediate_size"], h]))
+        out.append((blk("ffn_up"), "ffn_up", i, [c["intermediate_size"], h]))
+        out.append((blk("ffn_down"), "ffn_down", i, [h, c["intermediate_size"]]))
+    out.append(("output_norm.weight", "norm", None, [h]))
+    out.append(("output.weight", "output", None, [c["vocab_size"], c["hidden_size"]]))
+    return out
+
+
 def load_scheme(name: str) -> dict:
     return json.loads((REPO / "configs" / "schemes" / f"{name}.json").read_text())
 
@@ -790,7 +838,7 @@ def use_more_bits(i_layer: int, n_layer: int) -> bool:
     )
 
 
-def assign(scheme: dict, cls: str, layer, shape) -> str:
+def assign(scheme: dict, cls: str, layer, shape, model=TINY_MOE) -> str:
     """Mirror of Scheme::assign (incl. the ragged-row f16 fallback)."""
     if cls in ("norm", "ffn_gate_inp"):
         return "f32"
@@ -801,11 +849,11 @@ def assign(scheme: dict, cls: str, layer, shape) -> str:
         fmt = rule["format"]
     elif "more_bits" in rule:
         li = layer if layer is not None else 0
-        fmt = rule["more_bits"]["high" if use_more_bits(li, TINY_MOE["n_layers"]) else "low"]
+        fmt = rule["more_bits"]["high" if use_more_bits(li, model["n_layers"]) else "low"]
     else:
         dy = rule["dynamic"]
         li = layer if layer is not None else 0
-        moe_idx = max(0, li - TINY_MOE["first_dense"])
+        moe_idx = max(0, li - model["first_dense"])
         if moe_idx < dy["first_moe"]:
             fmt = dy["first_format"]
         elif dy["period"] > 0 and li % dy["period"] == 0:
@@ -819,19 +867,14 @@ def assign(scheme: dict, cls: str, layer, shape) -> str:
     return fmt
 
 
-def model_json_text() -> str:
-    # Exact field order of ModelConfig::to_json.
-    return json.dumps(TINY_MOE, separators=(",", ":"))
-
-
-def quantize_census(scheme_name: str, tensor_values: dict) -> list[dict]:
+def quantize_census(scheme_name: str, tensor_values: dict, census=None, model=TINY_MOE) -> list[dict]:
     """Quantize every census tensor under `scheme_name`, returning
     per-tensor dicts with the encoded payload (shared by the container
     serializer and the forward-pass mirror)."""
     scheme = load_scheme(scheme_name)
     out = []
-    for name, cls, layer, shape in tiny_moe_census():
-        fmt = assign(scheme, cls, layer, shape)
+    for name, cls, layer, shape in census if census is not None else tiny_moe_census():
+        fmt = assign(scheme, cls, layer, shape, model)
         out.append(
             {
                 "name": name,
@@ -845,8 +888,13 @@ def quantize_census(scheme_name: str, tensor_values: dict) -> list[dict]:
     return out
 
 
-def build_container(scheme_name: str, quantized: list[dict]) -> bytes:
-    """Serialize the quantized container exactly as the Rust Writer."""
+def build_container(scheme_name: str, quantized: list[dict], model=TINY_MOE) -> bytes:
+    """Serialize the quantized container exactly as the Rust Writer.
+
+    `model` must mirror ModelConfig::to_json field-for-field — note the
+    Rust side **omits** `rope_base` at the default θ=10000 (TINY_MOE
+    accordingly has no such key) and appends it last otherwise
+    (TINY_DENSE carries `rope_base=1000000` as its final key)."""
     entries = []
     data = bytearray()
     for q in quantized:
@@ -868,7 +916,7 @@ def build_container(scheme_name: str, quantized: list[dict]) -> bytes:
     header = json.dumps(
         {
             "version": 1,
-            "model": TINY_MOE,
+            "model": model,
             "scheme": scheme_name,
             "meta": {},
             "tensors": entries,
@@ -917,8 +965,31 @@ _EXP_P = [
 ]
 _SIN_P = [F32(c) for c in ("-0.16666667", "0.0083333333", "-0.00019841270", "0.0000027557319")]
 _COS_P = [F32(c) for c in ("-0.5", "0.041666667", "-0.0013888889", "0.000024801587")]
-_ROPE_LN = F32("9.2103404")  # ln(10000)
 _RMS_EPS = F32("1e-6")
+# Exact f64 constants of rust std (sqrt 2 / ln 2, correctly rounded).
+_SQRT2_F64 = float.fromhex("0x1.6a09e667f3bcdp+0")
+_LN2_F64 = float.fromhex("0x1.62e42fefa39efp-1")
+
+
+def ln_f32(x: float) -> np.float32:
+    """Bit-exact mirror of util::math::ln_f32 — every operation below is
+    an IEEE-double add/mul/div (CPython floats), identical to the Rust
+    f64 sequence, so both sides produce the same f32 bits."""
+    bits = struct.unpack("<Q", struct.pack("<d", float(x)))[0]
+    e = ((bits >> 52) & 0x7FF) - 1023
+    m = struct.unpack(
+        "<d", struct.pack("<Q", (bits & 0x000F_FFFF_FFFF_FFFF) | (1023 << 52))
+    )[0]
+    if m > _SQRT2_F64:
+        m *= 0.5
+        e += 1
+    s = (m - 1.0) / (m + 1.0)
+    s2 = s * s
+    p = 0.0
+    for k in range(12, 0, -1):
+        p = p * s2 + 1.0 / (2 * k + 1)
+    ln_m = 2.0 * s * (1.0 + s2 * p)
+    return F32(e * _LN2_F64 + ln_m)
 
 
 def _round_ties_away(v: np.ndarray) -> np.ndarray:
@@ -1005,16 +1076,17 @@ def rms_norm_f32(x: np.ndarray, w: np.ndarray) -> np.ndarray:
 
 
 class RopeMirror:
-    """Mirror of runtime::forward::RopeTable."""
+    """Mirror of runtime::forward::RopeTable (frequencies from the
+    model's rope_base via the bit-exact ln_f32 mirror)."""
 
-    def __init__(self, dim: int, max_ctx: int):
+    def __init__(self, dim: int, max_ctx: int, base_ln: np.float32):
         half = dim // 2
         self.half = half
         self.cos = np.zeros((max_ctx, half), dtype=F32)
         self.sin = np.zeros((max_ctx, half), dtype=F32)
         for i in range(half):
             a = F32(F32(float(2 * i)) / F32(float(dim)))
-            theta = F32(exp_f32(np.array([F32(-F32(a * _ROPE_LN))], dtype=F32))[0])
+            theta = F32(exp_f32(np.array([F32(-F32(a * base_ln))], dtype=F32))[0])
             c1, s1 = _cos_small(theta), _sin_small(theta)
             c, s = F32(1.0), F32(0.0)
             for p in range(max_ctx):
@@ -1034,19 +1106,28 @@ class RopeMirror:
 
 
 class ForwardMirror:
-    """Bit-exact mirror of runtime::forward::ForwardPass over the
-    quantized tiny-moe census (weights decoded once via the
-    python/compile/quants.py unpackers)."""
+    """Bit-exact mirror of runtime::forward::ForwardPass over a
+    quantized tiny-model census — MLA+MoE (tiny-moe) or dense GQA
+    (tiny-dense) — with weights decoded once via the
+    python/compile/quants.py unpackers."""
 
-    def __init__(self, quantized: list[dict], max_ctx: int = 24):
-        self.c = TINY_MOE
+    def __init__(self, quantized: list[dict], model=TINY_MOE, max_ctx: int = 24):
+        self.c = model
         self.max_ctx = max_ctx
         self.w = {}
         for q in quantized:
             n = int(np.prod(q["shape"]))
             raw = np.frombuffer(bytes(q["payload"]), dtype=np.uint8)
             self.w[q["name"]] = pyquants.dequantize(q["format"], raw, n).reshape(q["shape"])
-        self.rope = RopeMirror(self.c["qk_rope_head_dim"], max_ctx)
+        rope_dim = (
+            model["head_dim"] if model["kind"] == "dense_gqa" else model["qk_rope_head_dim"]
+        )
+        self.rope = RopeMirror(rope_dim, max_ctx, ln_f32(model.get("rope_base", 10000)))
+
+    def kv_width(self) -> int:
+        if self.c["kind"] == "dense_gqa":
+            return 2 * self.c["n_kv_heads"] * self.c["head_dim"]
+        return self.c["kv_lora_rank"] + self.c["qk_rope_head_dim"]
 
     def _lw(self, li: int, stem: str) -> np.ndarray:
         return self.w[f"blk.{li}.{stem}.weight"]
@@ -1059,6 +1140,41 @@ class ForwardMirror:
         return lane_matvec(down_w, a)
 
     def _attention(self, li, xn, cache, pos):
+        if self.c["kind"] == "dense_gqa":
+            return self._attention_gqa(li, xn, cache, pos)
+        return self._attention_mla(li, xn, cache, pos)
+
+    def _attention_gqa(self, li, xn, cache, pos):
+        """Mirror of ForwardPass::attention_gqa: conventional per-head
+        K/V cache (post-RoPE K then V), query-head groups sharing each
+        KV head, RoPE over the full head dimension."""
+        c = self.c
+        hd, n_kv, nh = c["head_dim"], c["n_kv_heads"], c["n_heads"]
+        kd = n_kv * hd
+        group = nh // n_kv
+        q = lane_matvec(self._lw(li, "attn_q"), xn)
+        k = lane_matvec(self._lw(li, "attn_k"), xn)
+        v = lane_matvec(self._lw(li, "attn_v"), xn)
+        for kh in range(n_kv):
+            k[kh * hd : (kh + 1) * hd] = self.rope.apply(k[kh * hd : (kh + 1) * hd], pos)
+        cache[pos, :kd] = k
+        cache[pos, kd:] = v
+        ctx = pos + 1
+        inv = F32(F32(1.0) / np.float32(np.sqrt(F32(float(hd)))))
+        heads = np.zeros(nh * hd, dtype=F32)
+        for h in range(nh):
+            qh = self.rope.apply(q[h * hd : (h + 1) * hd].copy(), pos)
+            kh = h // group
+            scores = np.zeros(ctx, dtype=F32)
+            for p in range(ctx):
+                scores[p] = F32(lane_dot(qh, cache[p, kh * hd : (kh + 1) * hd]) * inv)
+            scores = softmax_f32(scores)
+            oh = heads[h * hd : (h + 1) * hd]
+            for p in range(ctx):
+                oh += cache[p, kd + kh * hd : kd + (kh + 1) * hd] * scores[p]
+        return lane_matvec(self._lw(li, "attn_output"), heads)
+
+    def _attention_mla(self, li, xn, cache, pos):
         c = self.c
         nope, rope_d, vh = c["qk_nope_head_dim"], c["qk_rope_head_dim"], c["v_head_dim"]
         qk_head = nope + rope_d
@@ -1142,8 +1258,7 @@ class ForwardMirror:
         (the exact rows the forward.*.fnv64 fixtures hash)."""
         c = self.c
         caches = [
-            np.zeros((self.max_ctx, c["kv_lora_rank"] + c["qk_rope_head_dim"]), dtype=F32)
-            for _ in range(c["n_layers"])
+            np.zeros((self.max_ctx, self.kv_width()), dtype=F32) for _ in range(c["n_layers"])
         ]
         rows = []
         pos = 0
@@ -1245,6 +1360,65 @@ def forward_reference_f64(weights: dict, prompt, step_tokens, max_ctx=24):
                         li, "ffn_gate_exps", "ffn_up_exps", "ffn_down_exps", xn, e
                     )
                 h = h + y
+        if pos >= len(prompt) - 1:
+            xn = norm(h, w["output_norm.weight"])
+            rows.append(w["output.weight"] @ xn)
+    return rows
+
+
+def forward_reference_f64_dense(weights: dict, prompt, step_tokens, max_ctx=24):
+    """Independent plain-numpy float64 dense-GQA forward (np.dot
+    reductions, libm exp/sin/cos, rope via powers of the configured
+    base) used to sanity-check the bit-exact dense mirror."""
+    c = TINY_DENSE
+    hd, n_kv, nh = c["head_dim"], c["n_kv_heads"], c["n_heads"]
+    kd = n_kv * hd
+    group = nh // n_kv
+    w = {k: np.asarray(v, dtype=np.float64) for k, v in weights.items()}
+    inv_freq = float(c["rope_base"]) ** (-np.arange(0, hd, 2) / hd)
+
+    def rope(x, pos):
+        ang = pos * inv_freq
+        co, si = np.cos(ang), np.sin(ang)
+        out = np.empty_like(x)
+        out[0::2] = x[0::2] * co - x[1::2] * si
+        out[1::2] = x[0::2] * si + x[1::2] * co
+        return out
+
+    def norm(x, g):
+        return x / np.sqrt(np.mean(x * x) + 1e-6) * g
+
+    def softmax(x):
+        e = np.exp(x - np.max(x))
+        return e / e.sum()
+
+    caches = [np.zeros((max_ctx, 2 * kd)) for _ in range(c["n_layers"])]
+    rows = []
+    for pos, tok in enumerate(list(prompt) + list(step_tokens)):
+        h = w["token_embd.weight"][tok % c["vocab_size"]].copy()
+        for li in range(c["n_layers"]):
+            xn = norm(h, w[f"blk.{li}.attn_norm.weight"])
+            q = w[f"blk.{li}.attn_q.weight"] @ xn
+            k = w[f"blk.{li}.attn_k.weight"] @ xn
+            v = w[f"blk.{li}.attn_v.weight"] @ xn
+            for kh in range(n_kv):
+                k[kh * hd : (kh + 1) * hd] = rope(k[kh * hd : (kh + 1) * hd], pos)
+            caches[li][pos, :kd] = k
+            caches[li][pos, kd:] = v
+            ctx = pos + 1
+            heads = np.zeros(nh * hd)
+            for head in range(nh):
+                qh = rope(q[head * hd : (head + 1) * hd], pos)
+                kh = head // group
+                ks = caches[li][:ctx, kh * hd : (kh + 1) * hd]
+                vs = caches[li][:ctx, kd + kh * hd : kd + (kh + 1) * hd]
+                sc = softmax(ks @ qh / np.sqrt(hd))
+                heads[head * hd : (head + 1) * hd] = sc @ vs
+            h = h + w[f"blk.{li}.attn_output.weight"] @ heads
+            xn = norm(h, w[f"blk.{li}.ffn_norm.weight"])
+            g = w[f"blk.{li}.ffn_gate.weight"] @ xn
+            a = g / (1.0 + np.exp(-g)) * (w[f"blk.{li}.ffn_up.weight"] @ xn)
+            h = h + w[f"blk.{li}.ffn_down.weight"] @ a
         if pos >= len(prompt) - 1:
             xn = norm(h, w["output_norm.weight"])
             rows.append(w["output.weight"] @ xn)
@@ -1448,6 +1622,66 @@ def main():
         qerr = max(rel_l2(a, b) for a, b in zip(rows, src_rows))
         print(
             f"  forward {scheme_name}: f64-reference rel-L2 {worst:.2e}, "
+            f"quantization rel-L2 vs f32 weights {qerr:.3f}"
+        )
+
+    # Dense-GQA forward goldens (the Table-5 tiny-dense proxy): the
+    # same seed's synthetic weights over the dense census, quantized per
+    # scheme and run through the GQA branch of the bit-exact mirror —
+    # producing the forward.tiny_dense.*.fnv64 fixtures that pin the
+    # Rust dense forward pass cross-language.
+    dense_census = tiny_dense_census()
+    rng = Pcg(0x601D)
+    dense_values = {}
+    for name, _cls, _layer, shape in dense_census:
+        n = int(np.prod(shape))
+        dense_values[name] = rng.normals(n, 0.05)
+    print(
+        "· generated synthetic tiny-dense weights "
+        f"({sum(v.size for v in dense_values.values())} f32)"
+    )
+
+    for scheme_name in ("dq3_k_m", "q4_k_m"):
+        scheme = load_scheme(scheme_name)
+
+        class _DenseCfg:
+            n_layers = TINY_DENSE["n_layers"]
+            first_dense = TINY_DENSE["first_dense"]
+
+        for name, cls, layer, shape in dense_census:
+            mine = assign(scheme, cls, layer, shape, TINY_DENSE)
+            theirs = pyschemes.assign(
+                scheme, cls, layer, shape[-1], int(np.prod(shape)), _DenseCfg
+            )
+            assert mine == theirs, (scheme_name, name, mine, theirs)
+
+        quantized = quantize_census(scheme_name, dense_values, dense_census, TINY_DENSE)
+        fwd = ForwardMirror(quantized, TINY_DENSE)
+        rows = fwd.run(FORWARD_PROMPT, FORWARD_DECODE_STEPS)
+        fwd_blob = b"".join(np.ascontiguousarray(r, dtype=F32).tobytes() for r in rows)
+        fwd_line = f"{fnv64(fwd_blob):016x} {len(fwd_blob)}\n"
+        outputs[f"forward.tiny_dense.{scheme_name}.fnv64"] = fwd_line
+        print(
+            f"· forward tiny-dense {scheme_name}: {len(rows)} logits rows, "
+            f"fnv64 {fwd_line.split()[0]}"
+        )
+
+        # Independent structural check, exactly as for tiny-moe: a
+        # plain-numpy float64 GQA forward over the same decoded weights
+        # must agree within float tolerance, and the drift vs the f32
+        # source weights must sit in the quantization-error band.
+        step_toks = [int(np.argmax(rows[i])) for i in range(FORWARD_DECODE_STEPS)]
+        ref_rows = forward_reference_f64_dense(fwd.w, FORWARD_PROMPT, step_toks)
+        worst = max(rel_l2(a, b) for a, b in zip(rows, ref_rows))
+        assert worst < 2e-3, f"dense mirror vs f64 reference drift: {worst}"
+        src_w = {
+            name: dense_values[name].reshape(shape)
+            for name, _cls, _layer, shape in dense_census
+        }
+        src_rows = forward_reference_f64_dense(src_w, FORWARD_PROMPT, step_toks)
+        qerr = max(rel_l2(a, b) for a, b in zip(rows, src_rows))
+        print(
+            f"  forward tiny-dense {scheme_name}: f64-reference rel-L2 {worst:.2e}, "
             f"quantization rel-L2 vs f32 weights {qerr:.3f}"
         )
 

@@ -19,14 +19,17 @@
 //! The coordinator is backend-agnostic: it drives the same wave loop
 //! whether the engine holds compiled PJRT executables or the native
 //! CPU backend (`Engine::load_native`), which executes the full
-//! tiny-MoE forward pass (MLA attention + routed experts) directly on
-//! quantized container payloads through the fused `quant::kernels`
-//! vec_dot path — `tests/native_engine.rs` runs a full wave over
-//! DQ3_K_M weights that way, with no HLO artifacts. Per-wave state
-//! (PJRT cache literals or native per-slot KV caches) is threaded
+//! forward pass — MLA attention + routed experts for the MoE shapes,
+//! grouped-query attention + dense FFNs for the distill (Table 5)
+//! shapes — directly on quantized container payloads through the fused
+//! `quant::kernels` vec_dot path; `tests/native_engine.rs` runs full
+//! waves over DQ3_K_M weights of both model kinds that way, with no
+//! HLO artifacts. Per-wave state (PJRT cache literals or native
+//! per-slot KV caches plus one reused forward scratch) is threaded
 //! through `StepOutput::state`; finished and unused slots are marked
 //! inactive with a negative position so the native backend skips their
-//! forward passes entirely.
+//! forward passes entirely — such slots never even allocate their KV
+//! backing buffers.
 //!
 //! Admission control happens at `submit` time: a prompt that does not
 //! fit the engine's compiled prompt length, or that could not generate

@@ -6,7 +6,9 @@
 //! dsq table 2|3|4|5 [--hlo D --ckpt-dir D]  accuracy tables (needs artifacts)
 //! dsq quantize IN.dsq --scheme S --output OUT.dsq [--imatrix F] [--threads N]
 //! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json] [--native]
+//! dsq eval --native [--model M] [--scheme S]   (synthetic container, no artifacts)
 //! dsq serve --hlo D --ckpt F --requests N [--native]   (serving smoke/throughput)
+//! dsq serve --native [--model M] [--scheme S] [--requests N]   (no artifacts)
 //! dsq memory --model M --scheme S [--ctx N] [--seqs N]
 //! dsq recommend --model M               §4.4 device recommendations
 //! dsq sweep-error --input CKPT.dsq      bpw ↔ reconstruction error (E10)
@@ -58,7 +60,9 @@ Commands:
   table <1-8>        regenerate a paper table (2-5 need artifacts)
   quantize IN.dsq --scheme S --output OUT.dsq [--threads N]
   eval --hlo DIR --ckpt FILE [--out results.json] [--full-size] [--threads N] [--native]
+  eval --native [--model M] [--scheme S]    (synthetic container — works for tiny-dense too)
   serve --hlo DIR --ckpt FILE [--requests N] [--threads N] [--native]
+  serve --native [--model M] [--scheme S] [--requests N]   (synthetic container)
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
@@ -259,15 +263,47 @@ fn load_imatrix(path: &Path) -> Result<std::collections::HashMap<String, Vec<f32
     Ok(map)
 }
 
+/// Resolve the serving engine for `eval`/`serve`: `--ckpt FILE` serves
+/// a checkpoint from disk (native or PJRT per `--native`); `--native`
+/// **without** `--ckpt` synthesizes a deterministic quantized container
+/// in memory from `--model M` (default tiny-moe) and `--scheme S`
+/// (default dq3_k_m), so both model kinds — tiny-moe and the Table-5
+/// tiny-dense proxy — can be served end to end with zero artifacts:
+/// `dsq eval --native --model tiny-dense`.
+fn load_engine_from_args(args: &Args, hlo: &Path, threads: usize) -> Result<Engine> {
+    match (args.flag("ckpt"), args.switch("native")) {
+        (Some(ckpt), true) => Engine::load_native(Path::new(ckpt), threads),
+        (Some(ckpt), false) => Engine::load_with(hlo, Path::new(ckpt), threads),
+        (None, true) => {
+            let model = ModelConfig::by_name(&args.flag_or("model", "tiny-moe"))?;
+            let scheme_name = args.flag_or("scheme", "dq3_k_m");
+            let src = synthetic_f32_container(&model, 0x601D)?;
+            let ckpt = if scheme_name == "f32" {
+                src
+            } else {
+                let scheme = builtin::scheme(&scheme_name)?;
+                Container::from_bytes(
+                    quantize_container_with(&src, &scheme, None, threads)?.to_bytes(),
+                )?
+            };
+            eprintln!(
+                "[native] no --ckpt given: serving a synthetic {} container quantized \
+                 with {scheme_name}",
+                model.name
+            );
+            Engine::native_from_container(ckpt, threads)
+        }
+        (None, false) => bail!(
+            "missing required flag --ckpt (or pass --native with --model M to serve a \
+             synthetic container)"
+        ),
+    }
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
-    let ckpt = PathBuf::from(args.require("ckpt")?);
     let threads = args.threads_flag(quant::parallel::max_threads())?;
-    let engine = if args.switch("native") {
-        Engine::load_native(&ckpt, threads)?
-    } else {
-        Engine::load_with(&hlo, &ckpt, threads)?
-    };
+    let engine = load_engine_from_args(args, &hlo, threads)?;
     let mut coord = Coordinator::new(engine);
     let protocol = protocol_from_args(args);
     let result = match args.flag("suite") {
@@ -293,14 +329,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let hlo = PathBuf::from(args.flag_or("hlo", "artifacts/hlo"));
-    let ckpt = PathBuf::from(args.require("ckpt")?);
     let n: usize = args.flag_parse("requests", 64usize)?;
     let threads = args.threads_flag(quant::parallel::max_threads())?;
-    let engine = if args.switch("native") {
-        Engine::load_native(&ckpt, threads)?
-    } else {
-        Engine::load_with(&hlo, &ckpt, threads)?
-    };
+    let engine = load_engine_from_args(args, &hlo, threads)?;
     let mut coord = Coordinator::new(engine);
     // Mixed request stream drawn from the benchmark distribution.
     let mut made = 0u64;
@@ -580,46 +611,53 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         );
     }
 
-    // Forward-pass identity: the full native tiny-MoE forward (MLA
-    // attention + routed experts on encoded blocks) must produce
-    // bit-identical logits across matvec thread counts AND across both
-    // pinned vec_dot dispatch arms (lane kernels vs scalar reference).
+    // Forward-pass identity: the full native forward — the MLA+MoE
+    // step on tiny-moe AND the dense-GQA step on tiny-dense — must
+    // produce bit-identical logits across matvec thread counts AND
+    // across both pinned vec_dot dispatch arms (lane kernels vs scalar
+    // reference).
     println!();
     {
         use dsq::runtime::forward::{ForwardPass, MatvecMode};
         let toks = [1i32, 17, 300, 42, 511];
-        for scheme_name in ["dq3_k_m", "q4_k_m"] {
-            let scheme = builtin::scheme(scheme_name)?;
-            let qbytes = quantize_container_with(&src, &scheme, None, threads)?.to_bytes();
-            let run = |mode: MatvecMode| -> Result<Vec<u32>> {
-                let q = Container::from_bytes(qbytes.clone())?;
-                let mut fwd =
-                    ForwardPass::new(q, 1, dsq::runtime::native::NATIVE_MAX_CTX)?;
-                fwd.set_mode(mode);
-                let mut cache = fwd.new_cache();
-                let mut logits = vec![0f32; fwd.vocab()];
-                let mut bits = Vec::new();
-                for &t in &toks {
-                    fwd.forward_token(t, &mut cache, Some(&mut logits))?;
-                    bits.extend(logits.iter().map(|v| v.to_bits()));
+        let dense_src = synthetic_f32_container(&ModelConfig::tiny_dense(), 0x5E1F)?;
+        for (model_src, model_name) in [(&src, "tiny-moe"), (&dense_src, "tiny-dense")] {
+            for scheme_name in ["dq3_k_m", "q4_k_m"] {
+                let scheme = builtin::scheme(scheme_name)?;
+                let qbytes = quantize_container_with(model_src, &scheme, None, threads)?
+                    .to_bytes();
+                let run = |mode: MatvecMode| -> Result<Vec<u32>> {
+                    let q = Container::from_bytes(qbytes.clone())?;
+                    let mut fwd =
+                        ForwardPass::new(q, 1, dsq::runtime::native::NATIVE_MAX_CTX)?;
+                    fwd.set_mode(mode);
+                    let mut cache = fwd.new_cache();
+                    let mut scratch = fwd.new_scratch();
+                    let mut logits = vec![0f32; fwd.vocab()];
+                    let mut bits = Vec::new();
+                    for &t in &toks {
+                        fwd.forward_token(t, &mut cache, &mut scratch, Some(&mut logits))?;
+                        bits.extend(logits.iter().map(|v| v.to_bits()));
+                    }
+                    Ok(bits)
+                };
+                let serial = run(MatvecMode::Threads(1))?;
+                let par = run(MatvecMode::Threads(threads))?;
+                let lanes = run(MatvecMode::Pinned(true))?;
+                let scalar = run(MatvecMode::Pinned(false))?;
+                let ok = serial == par && serial == lanes && serial == scalar;
+                if !ok {
+                    failures += 1;
                 }
-                Ok(bits)
-            };
-            let serial = run(MatvecMode::Threads(1))?;
-            let par = run(MatvecMode::Threads(threads))?;
-            let lanes = run(MatvecMode::Pinned(true))?;
-            let scalar = run(MatvecMode::Pinned(false))?;
-            let ok = serial == par && serial == lanes && serial == scalar;
-            if !ok {
-                failures += 1;
+                println!(
+                    "  forward/{model_name}/{:<8} ({} steps × {} logits, 1 vs {threads} \
+                     threads + both arms): {}",
+                    scheme_name,
+                    toks.len(),
+                    serial.len() / toks.len(),
+                    if ok { "identical" } else { "MISMATCH" }
+                );
             }
-            println!(
-                "  forward/{:<12} ({} steps × {} logits, 1 vs {threads} threads + both arms): {}",
-                scheme_name,
-                toks.len(),
-                serial.len() / toks.len(),
-                if ok { "identical" } else { "MISMATCH" }
-            );
         }
     }
 

@@ -13,6 +13,13 @@ pub enum ModelKind {
     DenseGqa,
 }
 
+/// RoPE frequency base assumed when a config (or a container header
+/// written before the base became configurable) does not declare one:
+/// the classic `θ = 10000` of the original RoPE paper and DeepSeek-V3.
+/// [`ModelConfig::to_json`] omits `rope_base` at this value so legacy
+/// container bytes (and their golden checksums) stay byte-identical.
+pub const DEFAULT_ROPE_BASE: f64 = 10000.0;
+
 /// Full architecture description.
 ///
 /// For [`ModelKind::DenseGqa`], the MLA/MoE fields are ignored
@@ -31,6 +38,12 @@ pub struct ModelConfig {
     pub n_kv_heads: usize,
     /// Per-head dim for dense models.
     pub head_dim: usize,
+    /// RoPE frequency base `θ` (`θ_i = rope_base^(−2i/d)`). DeepSeek-V3
+    /// style models use 10000; Qwen2.5-style dense models (the distill
+    /// shapes) use 1000000 — serving one with the other's base computes
+    /// every rotary frequency wrong, which is why this lives in the
+    /// config instead of a hard-coded constant.
+    pub rope_base: f64,
     // --- MLA ---
     pub q_lora_rank: usize,
     pub kv_lora_rank: usize,
@@ -62,6 +75,7 @@ impl ModelConfig {
             n_heads: 128,
             n_kv_heads: 128,
             head_dim: 0,
+            rope_base: DEFAULT_ROPE_BASE,
             q_lora_rank: 1536,
             kv_lora_rank: 512,
             qk_nope_head_dim: 128,
@@ -87,6 +101,7 @@ impl ModelConfig {
             n_heads: 40,
             n_kv_heads: 8,
             head_dim: 128,
+            rope_base: 1_000_000.0,
             q_lora_rank: 0,
             kv_lora_rank: 0,
             qk_nope_head_dim: 0,
@@ -115,6 +130,7 @@ impl ModelConfig {
             n_heads: 4,
             n_kv_heads: 4,
             head_dim: 0,
+            rope_base: DEFAULT_ROPE_BASE,
             q_lora_rank: 256,
             kv_lora_rank: 256,
             qk_nope_head_dim: 32,
@@ -141,6 +157,7 @@ impl ModelConfig {
             n_heads: 4,
             n_kv_heads: 2,
             head_dim: 64,
+            rope_base: 1_000_000.0,
             q_lora_rank: 0,
             kv_lora_rank: 0,
             qk_nope_head_dim: 0,
@@ -189,12 +206,18 @@ impl ModelConfig {
         self.qk_nope_head_dim + self.qk_rope_head_dim
     }
 
-    /// Floats cached per (layer, token) by the MLA runtime: the
-    /// compressed KV latent plus the shared post-RoPE rope key. This is
-    /// the width of every `runtime::forward::KvCache` row (and the
-    /// out-dimension of `attn_kv_a_mqa`).
+    /// Floats cached per (layer, token) by the native runtime — the
+    /// width of every `runtime::forward::KvCache` row:
+    ///
+    /// - MLA: the compressed KV latent plus the shared post-RoPE rope
+    ///   key (also the out-dimension of `attn_kv_a_mqa`);
+    /// - dense GQA: the conventional per-head state, post-RoPE keys
+    ///   followed by values (`2 · n_kv_heads · head_dim`).
     pub fn kv_cache_width(&self) -> usize {
-        self.kv_lora_rank + self.qk_rope_head_dim
+        match self.kind {
+            ModelKind::MlaMoe => self.kv_lora_rank + self.qk_rope_head_dim,
+            ModelKind::DenseGqa => 2 * self.n_kv_heads * self.head_dim,
+        }
     }
 
     /// MLA KV-cache bytes per token (compressed latent + rope key),
@@ -231,6 +254,28 @@ mod tests {
     }
 
     #[test]
+    fn dense_kv_cache_is_full_per_head_state() {
+        // GQA caches post-RoPE K plus V per kv head — the footprint
+        // kv_bytes_per_token has always accounted for DenseGqa.
+        let c = ModelConfig::tiny_dense();
+        assert_eq!(c.kv_cache_width(), 2 * 2 * 64);
+        assert_eq!(c.kv_bytes_per_token(), c.kv_cache_width() * c.n_layers * 2);
+        let d = ModelConfig::distill_qwen_32b();
+        assert_eq!(d.kv_cache_width(), 2 * 8 * 128);
+        assert_eq!(d.kv_bytes_per_token(), d.kv_cache_width() * d.n_layers * 2);
+    }
+
+    #[test]
+    fn rope_base_matches_the_architecture_family() {
+        // DeepSeek-V3 keeps the classic θ=10000; the Qwen2.5-style
+        // distill shapes use θ=1000000 (Qwen2.5 config.json rope_theta).
+        assert_eq!(ModelConfig::deepseek_v3_671b().rope_base, DEFAULT_ROPE_BASE);
+        assert_eq!(ModelConfig::tiny_moe().rope_base, DEFAULT_ROPE_BASE);
+        assert_eq!(ModelConfig::distill_qwen_32b().rope_base, 1_000_000.0);
+        assert_eq!(ModelConfig::tiny_dense().rope_base, 1_000_000.0);
+    }
+
+    #[test]
     fn lookup_by_name() {
         assert!(ModelConfig::by_name("deepseek-r1-671b").is_ok());
         assert!(ModelConfig::by_name("tiny-moe").is_ok());
@@ -258,8 +303,14 @@ use crate::util::json::{self, Value};
 impl ModelConfig {
     /// Serialize to the JSON object stored in `.dsq` headers and
     /// `configs/models/*.json`.
+    ///
+    /// `rope_base` is omitted at [`DEFAULT_ROPE_BASE`] so containers of
+    /// θ=10000 models keep the exact header bytes they had before the
+    /// base became configurable (the committed `container.*.fnv64`
+    /// golden checksums pin those bytes); [`ModelConfig::from_json`]
+    /// defaults a missing field to the same value.
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
+        let mut fields = vec![
             ("name", json::str_(&self.name)),
             (
                 "kind",
@@ -285,7 +336,11 @@ impl ModelConfig {
             ("n_routed_experts", json::num(self.n_routed_experts as f64)),
             ("n_shared_experts", json::num(self.n_shared_experts as f64)),
             ("n_active_experts", json::num(self.n_active_experts as f64)),
-        ])
+        ];
+        if self.rope_base != DEFAULT_ROPE_BASE {
+            fields.push(("rope_base", json::num(self.rope_base)));
+        }
+        json::obj(fields)
     }
 
     /// Inverse of [`ModelConfig::to_json`].
@@ -296,9 +351,20 @@ impl ModelConfig {
             other => bail!("unknown model kind {other:?}"),
         };
         let u = |k: &str| -> Result<usize> { v.req(k)?.as_usize() };
+        let rope_base = match v.get("rope_base") {
+            None => DEFAULT_ROPE_BASE,
+            Some(b) => {
+                let b = b.as_f64()?;
+                if !b.is_finite() || b <= 1.0 {
+                    bail!("rope_base must be a finite number > 1, got {b}");
+                }
+                b
+            }
+        };
         Ok(ModelConfig {
             name: v.req("name")?.as_str()?.to_string(),
             kind,
+            rope_base,
             vocab_size: u("vocab_size")?,
             hidden_size: u("hidden_size")?,
             n_layers: u("n_layers")?,
@@ -351,5 +417,21 @@ mod json_tests {
             let back = ModelConfig::from_json(&v).unwrap();
             assert_eq!(format!("{cfg:?}"), format!("{back:?}"));
         }
+    }
+
+    #[test]
+    fn rope_base_json_is_defaulted_omitted_and_validated() {
+        // Default-θ configs omit the field (legacy container headers
+        // stay byte-identical) and re-parse to the default.
+        let v = ModelConfig::tiny_moe().to_json();
+        assert!(v.get("rope_base").is_none(), "θ=10000 must serialize implicitly");
+        assert_eq!(ModelConfig::from_json(&v).unwrap().rope_base, DEFAULT_ROPE_BASE);
+        // Non-default bases round-trip explicitly.
+        let v = ModelConfig::tiny_dense().to_json();
+        assert_eq!(v.req("rope_base").unwrap().as_f64().unwrap(), 1_000_000.0);
+        // Degenerate bases are rejected at parse time.
+        let mut cfg = ModelConfig::tiny_dense();
+        cfg.rope_base = 0.5;
+        assert!(ModelConfig::from_json(&cfg.to_json()).is_err());
     }
 }

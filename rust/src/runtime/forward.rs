@@ -1,14 +1,23 @@
-//! The tiny-MoE transformer forward pass, executed **directly on
-//! container-encoded weights**.
+//! The native transformer forward pass, executed **directly on
+//! container-encoded weights** — for both architecture families the
+//! paper evaluates.
 //!
 //! This is the computation `dsq serve|eval --native` runs: a complete
-//! DeepSeek-V3-shaped decoder step — RMSNorm, MLA attention with a
-//! compressed-latent KV cache, top-k routed + shared expert FFNs, and
-//! the final unembedding — where **every matrix–vector product goes
-//! through the fused [`crate::quant::vec_dot_rows_with`] kernels on the
-//! container's packed payloads**. No weight matrix is ever materialized
-//! as a resident f32 table; only the per-layer norm vectors (f32 in
-//! every scheme, a few KiB total) are decoded at load time.
+//! decoder step — RMSNorm, attention, FFN, and the final unembedding —
+//! where **every matrix–vector product goes through the fused
+//! [`crate::quant::vec_dot_rows_with`] kernels on the container's
+//! packed payloads**. No weight matrix is ever materialized as a
+//! resident f32 table; only the per-layer norm vectors (f32 in every
+//! scheme, a few KiB total) are decoded at load time. Two
+//! [`crate::model::ModelKind`]s are served:
+//!
+//! - [`ModelKind::MlaMoe`] — the DeepSeek-V3-shaped step: MLA attention
+//!   with a compressed-latent KV cache, top-k routed + shared expert
+//!   FFNs (Tables 2–4 shapes, `tiny-moe`).
+//! - [`ModelKind::DenseGqa`] — the Qwen2.5-shaped step of the
+//!   R1-distill models: grouped-query attention with a conventional
+//!   per-head K/V cache and dense SwiGLU FFNs (Table 5 shapes,
+//!   `tiny-dense` / `distill-qwen-32b`).
 //!
 //! ## Layer map
 //!
@@ -17,8 +26,13 @@
 //! validated against the config before serving:
 //!
 //! ```text
+//! ── shared ─────────────────────────────────────────────────────────
 //! token_embd.weight                  [vocab, hidden]     one row decoded per token
 //! blk.{i}.attn_norm.weight           [hidden]            f32, decoded at load
+//! blk.{i}.ffn_norm.weight            [hidden]
+//! output_norm.weight                 [hidden]
+//! output.weight                      [vocab, hidden]     fused matvec per step
+//! ── MlaMoe attention ───────────────────────────────────────────────
 //! blk.{i}.attn_q_a.weight            [q_rank, hidden]    fused matvec
 //! blk.{i}.attn_q_a_norm.weight       [q_rank]            f32, decoded at load
 //! blk.{i}.attn_q_b.weight            [heads·(nope+rope), q_rank]
@@ -26,26 +40,57 @@
 //! blk.{i}.attn_kv_a_norm.weight      [kv_rank]
 //! blk.{i}.attn_kv_b.weight           [heads·(nope+v), kv_rank]
 //! blk.{i}.attn_output.weight         [hidden, heads·v]
-//! blk.{i}.ffn_norm.weight            [hidden]
+//! ── MlaMoe FFN ─────────────────────────────────────────────────────
 //! dense layers (i < first_dense):    ffn_gate / ffn_up / ffn_down
 //! MoE layers:                        ffn_gate_inp (f32 router) +
 //!                                    ffn_{gate,up,down}_exps [n_exp, ..] +
 //!                                    ffn_{gate,up,down}_shexp
-//! output_norm.weight                 [hidden]
-//! output.weight                      [vocab, hidden]     fused matvec per step
+//! ── DenseGqa ───────────────────────────────────────────────────────
+//! blk.{i}.attn_q.weight              [heads·head_dim, hidden]
+//! blk.{i}.attn_k.weight              [kv_heads·head_dim, hidden]
+//! blk.{i}.attn_v.weight              [kv_heads·head_dim, hidden]
+//! blk.{i}.attn_output.weight         [hidden, heads·head_dim]
+//! every layer:                       ffn_gate / ffn_up / ffn_down
 //! ```
 //!
-//! ## MLA attention
+//! ## KV caches
 //!
-//! The cache stores, per layer and position, the **compressed** state
-//! MLA is designed around: the RMS-normed KV latent (`kv_lora_rank`
-//! floats) plus the shared post-RoPE rope key (`qk_rope_head_dim`
-//! floats) — `kv_lora_rank + qk_rope_head_dim` floats per layer-token,
-//! exactly the footprint [`crate::model::ModelConfig::kv_bytes_per_token`]
-//! accounts. At each step the per-head no-position keys and values are
-//! re-expanded from the cached latents through the (encoded)
-//! `attn_kv_b` matvec. The cache is hard-bounded: a token forwarded at
-//! `position ≥ max_ctx` is an error, raised *before* any state changes.
+//! Per slot and layer the [`KvCache`] row stores exactly the state
+//! [`crate::model::ModelConfig::kv_cache_width`] declares (the
+//! footprint `kv_bytes_per_token` accounts for both kinds):
+//!
+//! - **MLA**: the RMS-normed compressed latent plus the shared
+//!   post-RoPE rope key (`kv_lora_rank + qk_rope_head_dim` floats);
+//!   per-head keys/values are re-expanded from the latents through the
+//!   encoded `attn_kv_b` matvec each step.
+//! - **GQA**: the conventional per-head state — post-RoPE keys followed
+//!   by values (`2 · n_kv_heads · head_dim` floats); query heads share
+//!   each KV head in groups of `n_heads / n_kv_heads`.
+//!
+//! The cache is hard-bounded: a token forwarded at `position ≥ max_ctx`
+//! is an error, raised *before* any state changes. The backing buffer
+//! is allocated **lazily on the first forwarded token**, so the unused
+//! batch slots a wave skips (length 0 at prefill, `pos < 0` at decode)
+//! never pay `n_layers × max_ctx × width` floats of idle memory.
+//!
+//! ## RoPE
+//!
+//! Rotary frequencies are `θ_i = rope_base^(−2i/d)` with the base taken
+//! from [`ModelConfig::rope_base`] (10000 for the DeepSeek shapes,
+//! 1000000 for the Qwen-style distill shapes — a hard-coded base would
+//! silently compute every dense-model frequency wrong). The table is
+//! built from [`crate::util::math::ln_f32`] / [`math::exp_f32`] and the
+//! exactly-rounded angle-addition recurrence — no libm, so it is
+//! reproducible bit-for-bit anywhere, including the Python mirror.
+//!
+//! ## Scratch reuse
+//!
+//! All per-token intermediates live in a caller-owned [`Scratch`]
+//! (created once per slot/wave via [`ForwardPass::new_scratch`]), so
+//! [`ForwardPass::forward_token`] performs **zero heap allocations per
+//! decoded token** — both architectures share the same allocation-free
+//! decode loop (asserted by a counting-allocator test in
+//! `tests/native_forward.rs` and reported by `benches/codec.rs`).
 //!
 //! ## Determinism contract
 //!
@@ -58,7 +103,8 @@
 //! the logits are **bit-identical** across matvec thread counts and
 //! across the `DSQ_SCALAR_DECODE` dispatch arms, and are mirrored
 //! bit-exactly by `python/tools/bless_goldens.py` (the committed
-//! `rust/tests/golden/forward.*.fnv64` checksums pin both sides).
+//! `rust/tests/golden/forward.*.fnv64` and
+//! `forward.tiny_dense.*.fnv64` checksums pin both sides).
 
 use crate::container::{Container, TensorEntry};
 use crate::model::{ModelConfig, ModelKind};
@@ -68,8 +114,11 @@ use anyhow::{bail, Context, Result};
 
 /// RMSNorm epsilon (matches the proxy training configuration).
 pub const RMS_EPS: f32 = 1e-6;
-/// RoPE frequency base (`θ_i = BASE^(−2i/d)`).
-pub const ROPE_BASE_LN: f32 = 9.2103404; // ln(10000)
+
+/// The [`ModelKind`]s this backend serves, spelled out for rejection
+/// messages.
+pub const SUPPORTED_KINDS: &str =
+    "MlaMoe (MLA attention + MoE FFNs), DenseGqa (grouped-query attention + dense FFNs)";
 
 /// How the per-matvec dot products are executed.
 #[derive(Debug, Clone, Copy)]
@@ -83,18 +132,26 @@ pub enum MatvecMode {
     Pinned(bool),
 }
 
-/// Per-slot KV cache: `[n_layers][max_ctx][kv_rank + rope]` f32, filled
-/// front to back; `len` positions are valid in every layer.
+/// Per-slot KV cache: `[n_layers][max_ctx][width]` f32, filled front to
+/// back; `len` positions are valid in every layer. The row width is
+/// [`ModelConfig::kv_cache_width`] (compressed latent + rope key for
+/// MLA, per-head K then V for GQA).
+///
+/// The backing buffer is **lazily allocated** on the first forwarded
+/// token: a cache created for a batch slot that never sees a token
+/// (skipped at prefill, inactive at decode) costs a few machine words,
+/// not `n_layers × max_ctx × width` floats.
 pub struct KvCache {
     data: Vec<f32>,
     len: usize,
     width: usize,
     max_ctx: usize,
+    n_layers: usize,
 }
 
 impl KvCache {
     fn new(n_layers: usize, width: usize, max_ctx: usize) -> Self {
-        KvCache { data: vec![0.0; n_layers * max_ctx * width], len: 0, width, max_ctx }
+        KvCache { data: Vec::new(), len: 0, width, max_ctx, n_layers }
     }
 
     /// Tokens cached so far (== the next token's position).
@@ -108,6 +165,20 @@ impl KvCache {
 
     pub fn max_ctx(&self) -> usize {
         self.max_ctx
+    }
+
+    /// Whether the backing buffer has been allocated yet (it is, lazily,
+    /// by the first forwarded token — the skipped-slot regression tests
+    /// assert it stays `false` for slots a wave never touches).
+    pub fn is_allocated(&self) -> bool {
+        !self.data.is_empty()
+    }
+
+    /// Allocate the backing buffer on first use.
+    fn ensure_allocated(&mut self) {
+        if self.data.is_empty() {
+            self.data = vec![0.0; self.n_layers * self.max_ctx * self.width];
+        }
     }
 
     fn row(&self, layer: usize, pos: usize) -> &[f32] {
@@ -125,15 +196,29 @@ impl KvCache {
 /// fused matvec consumes, decoded f32 vectors for the (tiny) norms.
 struct LayerWeights {
     attn_norm: Vec<f32>,
-    q_a: TensorEntry,
-    q_a_norm: Vec<f32>,
-    q_b: TensorEntry,
-    kv_a: TensorEntry,
-    kv_a_norm: Vec<f32>,
-    kv_b: TensorEntry,
+    attn: LayerAttn,
     attn_output: TensorEntry,
     ffn_norm: Vec<f32>,
     ffn: LayerFfn,
+}
+
+/// The attention projections, by architecture family.
+enum LayerAttn {
+    /// Multi-head latent attention (DeepSeek-V3 style).
+    Mla {
+        q_a: TensorEntry,
+        q_a_norm: Vec<f32>,
+        q_b: TensorEntry,
+        kv_a: TensorEntry,
+        kv_a_norm: Vec<f32>,
+        kv_b: TensorEntry,
+    },
+    /// Grouped-query attention (Qwen2.5 style, the distill shapes).
+    Gqa {
+        q: TensorEntry,
+        k: TensorEntry,
+        v: TensorEntry,
+    },
 }
 
 enum LayerFfn {
@@ -154,12 +239,13 @@ enum LayerFfn {
 }
 
 /// Precomputed rotary table: `cos/sin(pos · θ_i)` for every position
-/// below `max_ctx` and every frequency `θ_i = BASE^(−2i/d)`.
+/// below `max_ctx` and every frequency `θ_i = base^(−2i/d)`.
 ///
-/// Built from [`math::exp_f32`] (frequencies), [`math::sin_small`] /
-/// [`math::cos_small`] (the ≤ 1-radian per-step angles) and the
-/// exactly-rounded angle-addition recurrence — no libm, so the table is
-/// reproducible bit-for-bit anywhere (including the Python mirror).
+/// Built from [`math::ln_f32`] (the base), [`math::exp_f32`]
+/// (frequencies), [`math::sin_small`] / [`math::cos_small`] (the
+/// ≤ 1-radian per-step angles) and the exactly-rounded angle-addition
+/// recurrence — no libm, so the table is reproducible bit-for-bit
+/// anywhere (including the Python mirror).
 struct RopeTable {
     half: usize,
     cos: Vec<f32>,
@@ -167,13 +253,14 @@ struct RopeTable {
 }
 
 impl RopeTable {
-    fn new(dim: usize, max_ctx: usize) -> Self {
+    /// `base_ln` is `ln(rope_base)` as computed by [`math::ln_f32`].
+    fn new(dim: usize, max_ctx: usize, base_ln: f32) -> Self {
         let half = dim / 2;
         let mut cos = vec![0.0f32; max_ctx * half];
         let mut sin = vec![0.0f32; max_ctx * half];
         for i in 0..half {
             let a = (2 * i) as f32 / dim as f32;
-            let theta = math::exp_f32(-(a * ROPE_BASE_LN));
+            let theta = math::exp_f32(-(a * base_ln));
             let (c1, s1) = (math::cos_small(theta), math::sin_small(theta));
             let (mut c, mut s) = (1.0f32, 0.0f32);
             for p in 0..max_ctx {
@@ -211,6 +298,52 @@ pub fn rms_norm(x: &[f32], w: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Reusable per-slot scratch for [`ForwardPass::forward_token`]: every
+/// per-token intermediate, allocated once (sized to the model and
+/// `max_ctx`) and fully overwritten each use, so the decode loop itself
+/// never touches the heap. Create with [`ForwardPass::new_scratch`].
+pub struct Scratch {
+    /// Residual stream.
+    h: Vec<f32>,
+    /// Normed input to attention/FFN (and the final output norm).
+    xn: Vec<f32>,
+    /// Attention/FFN output before the residual add.
+    delta: Vec<f32>,
+    attn: AttnScratch,
+    ffn: FfnScratch,
+}
+
+struct AttnScratch {
+    /// Per-head query projections (`heads·(nope+rope)` for MLA,
+    /// `heads·head_dim` for GQA), rotated in place.
+    q: Vec<f32>,
+    /// MLA: pre-norm query latent.
+    q_a: Vec<f32>,
+    /// MLA: RMS-normed query latent.
+    q_an: Vec<f32>,
+    /// MLA: joint (latent, rope-key) projection before the cache write.
+    kv_a: Vec<f32>,
+    /// MLA: per-position re-expanded `k_nope|v` rows, `max_ctx · kvb_w`.
+    kvb: Vec<f32>,
+    /// Per-head attention outputs before `attn_output`.
+    heads_out: Vec<f32>,
+    /// Attention scores over the cached context, `max_ctx`.
+    scores: Vec<f32>,
+}
+
+struct FfnScratch {
+    /// SwiGLU gate projection (becomes `silu(g)·u` in place).
+    g: Vec<f32>,
+    /// SwiGLU up projection.
+    u: Vec<f32>,
+    /// MoE: one routed expert's output before the weighted combine.
+    y: Vec<f32>,
+    /// MoE: router probabilities.
+    probs: Vec<f32>,
+    /// MoE: expert ordering for the top-k selection.
+    idx: Vec<usize>,
+}
+
 /// The forward-pass model over an opened (quantized or f32) container.
 pub struct ForwardPass {
     cfg: ModelConfig,
@@ -225,6 +358,42 @@ pub struct ForwardPass {
     mode: MatvecMode,
 }
 
+/// Kind-specific config dims the forward pass depends on must be usable
+/// before any tensor is resolved; the rejection names the model and
+/// lists what this backend *can* serve.
+fn validate_kind(cfg: &ModelConfig) -> Result<()> {
+    let reject = |why: &str| -> Result<()> {
+        bail!(
+            "native forward pass cannot serve container model {:?} (kind {:?}): {why}; \
+             supported kinds: {SUPPORTED_KINDS}",
+            cfg.name,
+            cfg.kind
+        )
+    };
+    if !cfg.rope_base.is_finite() || cfg.rope_base <= 1.0 {
+        return reject(&format!("rope_base {} is not a finite base > 1", cfg.rope_base));
+    }
+    match cfg.kind {
+        ModelKind::MlaMoe => {
+            if cfg.q_lora_rank == 0 || cfg.kv_lora_rank == 0 {
+                return reject("MLA needs q_lora_rank and kv_lora_rank > 0");
+            }
+            if cfg.qk_rope_head_dim == 0 || cfg.qk_rope_head_dim % 2 != 0 {
+                return reject("MLA needs a positive, even qk_rope_head_dim for RoPE pairs");
+            }
+        }
+        ModelKind::DenseGqa => {
+            if cfg.head_dim == 0 || cfg.head_dim % 2 != 0 {
+                return reject("GQA needs a positive, even head_dim for RoPE pairs");
+            }
+            if cfg.n_kv_heads == 0 || cfg.n_heads % cfg.n_kv_heads != 0 {
+                return reject("GQA needs n_heads divisible by a positive n_kv_heads");
+            }
+        }
+    }
+    Ok(())
+}
+
 impl ForwardPass {
     /// Resolve and validate the full layer map from `ckpt` (taken over
     /// whole; payloads are served in place). `threads` bounds the
@@ -232,20 +401,21 @@ impl ForwardPass {
     /// [`KvCache`] this model creates.
     pub fn new(ckpt: Container, threads: usize, max_ctx: usize) -> Result<Self> {
         let cfg = ckpt.model.clone();
-        if cfg.kind != ModelKind::MlaMoe {
-            bail!(
-                "native forward pass supports MLA+MoE models; container model {:?} is {:?}",
-                cfg.name,
-                cfg.kind
-            );
-        }
+        validate_kind(&cfg)?;
         if max_ctx == 0 {
             bail!("native forward pass needs max_ctx ≥ 1");
         }
         let entry = |name: &str, shape: &[usize]| -> Result<TensorEntry> {
             let t = ckpt.tensor(name).context("native forward layer map")?;
             if t.shape != shape {
-                bail!("tensor {name}: shape {:?} does not match config {:?}", t.shape, shape);
+                bail!(
+                    "model {:?} ({:?}): tensor {name}: shape {:?} does not match the \
+                     config's expected {:?}",
+                    cfg.name,
+                    cfg.kind,
+                    t.shape,
+                    shape
+                );
             }
             // Fused matvecs consume whole rows of blocks.
             t.format
@@ -258,7 +428,7 @@ impl ForwardPass {
             ckpt.dequantize(&t)
         };
 
-        let (h, qk_head) = (cfg.hidden_size, cfg.qk_head_dim());
+        let h = cfg.hidden_size;
         let token_embd = entry("token_embd.weight", &[cfg.vocab_size, h])?;
         let embd_row_bytes = token_embd.format.row_bytes(h)?;
         let output = entry("output.weight", &[cfg.vocab_size, h])?;
@@ -267,6 +437,37 @@ impl ForwardPass {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let blk = |stem: &str| format!("blk.{i}.{stem}.weight");
+            let (attn, attn_output) = match cfg.kind {
+                ModelKind::MlaMoe => {
+                    let qk_head = cfg.qk_head_dim();
+                    let attn = LayerAttn::Mla {
+                        q_a: entry(&blk("attn_q_a"), &[cfg.q_lora_rank, h])?,
+                        q_a_norm: norm(&blk("attn_q_a_norm"), cfg.q_lora_rank)?,
+                        q_b: entry(&blk("attn_q_b"), &[cfg.n_heads * qk_head, cfg.q_lora_rank])?,
+                        kv_a: entry(&blk("attn_kv_a_mqa"), &[cfg.kv_cache_width(), h])?,
+                        kv_a_norm: norm(&blk("attn_kv_a_norm"), cfg.kv_lora_rank)?,
+                        kv_b: entry(
+                            &blk("attn_kv_b"),
+                            &[
+                                cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+                                cfg.kv_lora_rank,
+                            ],
+                        )?,
+                    };
+                    let out = entry(&blk("attn_output"), &[h, cfg.n_heads * cfg.v_head_dim])?;
+                    (attn, out)
+                }
+                ModelKind::DenseGqa => {
+                    let kd = cfg.n_kv_heads * cfg.head_dim;
+                    let attn = LayerAttn::Gqa {
+                        q: entry(&blk("attn_q"), &[cfg.n_heads * cfg.head_dim, h])?,
+                        k: entry(&blk("attn_k"), &[kd, h])?,
+                        v: entry(&blk("attn_v"), &[kd, h])?,
+                    };
+                    let out = entry(&blk("attn_output"), &[h, cfg.n_heads * cfg.head_dim])?;
+                    (attn, out)
+                }
+            };
             let ffn = if cfg.is_moe_layer(i) {
                 let mi = cfg.moe_intermediate_size;
                 let sh = cfg.n_shared_experts * mi;
@@ -288,21 +489,17 @@ impl ForwardPass {
             };
             layers.push(LayerWeights {
                 attn_norm: norm(&blk("attn_norm"), h)?,
-                q_a: entry(&blk("attn_q_a"), &[cfg.q_lora_rank, h])?,
-                q_a_norm: norm(&blk("attn_q_a_norm"), cfg.q_lora_rank)?,
-                q_b: entry(&blk("attn_q_b"), &[cfg.n_heads * qk_head, cfg.q_lora_rank])?,
-                kv_a: entry(&blk("attn_kv_a_mqa"), &[cfg.kv_cache_width(), h])?,
-                kv_a_norm: norm(&blk("attn_kv_a_norm"), cfg.kv_lora_rank)?,
-                kv_b: entry(
-                    &blk("attn_kv_b"),
-                    &[cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim), cfg.kv_lora_rank],
-                )?,
-                attn_output: entry(&blk("attn_output"), &[h, cfg.n_heads * cfg.v_head_dim])?,
+                attn,
+                attn_output,
                 ffn_norm: norm(&blk("ffn_norm"), h)?,
                 ffn,
             });
         }
-        let rope = RopeTable::new(cfg.qk_rope_head_dim, max_ctx);
+        let rope_dim = match cfg.kind {
+            ModelKind::MlaMoe => cfg.qk_rope_head_dim,
+            ModelKind::DenseGqa => cfg.head_dim,
+        };
+        let rope = RopeTable::new(rope_dim, max_ctx, math::ln_f32(cfg.rope_base));
         Ok(ForwardPass {
             cfg,
             ckpt,
@@ -348,8 +545,55 @@ impl ForwardPass {
     }
 
     /// A fresh, empty per-slot cache bounded by this model's `max_ctx`.
+    /// The backing buffer is allocated lazily on the first forwarded
+    /// token, so idle batch slots stay (almost) free.
     pub fn new_cache(&self) -> KvCache {
         KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), self.max_ctx)
+    }
+
+    /// A scratch sized for this model and context bound. One per slot
+    /// (or per serving thread) is enough; [`ForwardPass::forward_token`]
+    /// fully overwrites every buffer it reads.
+    pub fn new_scratch(&self) -> Scratch {
+        let cfg = &self.cfg;
+        let (q_len, heads_len, q_rank, kv_a_len, kvb_len) = match cfg.kind {
+            ModelKind::MlaMoe => (
+                cfg.n_heads * cfg.qk_head_dim(),
+                cfg.n_heads * cfg.v_head_dim,
+                cfg.q_lora_rank,
+                cfg.kv_cache_width(),
+                self.max_ctx * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+            ),
+            ModelKind::DenseGqa => {
+                let hd = cfg.n_heads * cfg.head_dim;
+                (hd, hd, 0, 0, 0)
+            }
+        };
+        let inter_max = cfg
+            .intermediate_size
+            .max(cfg.moe_intermediate_size)
+            .max(cfg.n_shared_experts * cfg.moe_intermediate_size);
+        Scratch {
+            h: vec![0.0; cfg.hidden_size],
+            xn: vec![0.0; cfg.hidden_size],
+            delta: vec![0.0; cfg.hidden_size],
+            attn: AttnScratch {
+                q: vec![0.0; q_len],
+                q_a: vec![0.0; q_rank],
+                q_an: vec![0.0; q_rank],
+                kv_a: vec![0.0; kv_a_len],
+                kvb: vec![0.0; kvb_len],
+                heads_out: vec![0.0; heads_len],
+                scores: vec![0.0; self.max_ctx],
+            },
+            ffn: FfnScratch {
+                g: vec![0.0; inter_max],
+                u: vec![0.0; inter_max],
+                y: vec![0.0; cfg.hidden_size],
+                probs: vec![0.0; cfg.n_routed_experts],
+                idx: Vec::with_capacity(cfg.n_routed_experts),
+            },
+        }
     }
 
     /// Quantized matvec `out[r] = row_r · x` on encoded bytes, under
@@ -398,7 +642,8 @@ impl ForwardPass {
     }
 
     /// `down(silu(gate(x)) · up(x))` with all three projections fused
-    /// on encoded rows.
+    /// on encoded rows; `g_buf`/`u_buf` are the scratch projections.
+    #[allow(clippy::too_many_arguments)]
     fn mlp(
         &self,
         gate: (QuantFormat, &[u8]),
@@ -407,19 +652,22 @@ impl ForwardPass {
         inter: usize,
         x: &[f32],
         out: &mut [f32],
+        g_buf: &mut [f32],
+        u_buf: &mut [f32],
     ) -> Result<()> {
-        let mut g = vec![0f32; inter];
-        let mut u = vec![0f32; inter];
-        self.matvec_bytes(gate.0, gate.1, x, &mut g)?;
-        self.matvec_bytes(up.0, up.1, x, &mut u)?;
-        for (gv, &uv) in g.iter_mut().zip(&u) {
+        let g = &mut g_buf[..inter];
+        let u = &mut u_buf[..inter];
+        self.matvec_bytes(gate.0, gate.1, x, g)?;
+        self.matvec_bytes(up.0, up.1, x, u)?;
+        for (gv, &uv) in g.iter_mut().zip(&*u) {
             *gv = math::silu(*gv) * uv;
         }
-        self.matvec_bytes(down.0, down.1, &g, out)
+        self.matvec_bytes(down.0, down.1, g, out)
     }
 
-    /// MLA attention for one layer at `pos` (appends this token's
-    /// latent + rope key to the cache row first).
+    /// Attention for one layer at `pos` (appends this token's K/V state
+    /// to the cache row first), dispatched by architecture family.
+    #[allow(clippy::too_many_arguments)]
     fn attention(
         &self,
         li: usize,
@@ -428,27 +676,66 @@ impl ForwardPass {
         cache: &mut KvCache,
         pos: usize,
         out: &mut [f32],
+        s: &mut AttnScratch,
+    ) -> Result<()> {
+        match &lw.attn {
+            LayerAttn::Mla { q_a, q_a_norm, q_b, kv_a, kv_a_norm, kv_b } => self.attention_mla(
+                li,
+                (q_a, q_a_norm.as_slice(), q_b, kv_a, kv_a_norm.as_slice(), kv_b),
+                &lw.attn_output,
+                xn,
+                cache,
+                pos,
+                out,
+                s,
+            ),
+            LayerAttn::Gqa { q, k, v } => {
+                self.attention_gqa(li, (q, k, v), &lw.attn_output, xn, cache, pos, out, s)
+            }
+        }
+    }
+
+    /// MLA attention: compressed-latent cache, per-step re-expansion of
+    /// the per-head keys/values through the encoded `kv_b` matvec.
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    fn attention_mla(
+        &self,
+        li: usize,
+        (q_a_w, q_a_norm, q_b_w, kv_a_w, kv_a_norm, kv_b_w): (
+            &TensorEntry,
+            &[f32],
+            &TensorEntry,
+            &TensorEntry,
+            &[f32],
+            &TensorEntry,
+        ),
+        attn_output: &TensorEntry,
+        xn: &[f32],
+        cache: &mut KvCache,
+        pos: usize,
+        out: &mut [f32],
+        s: &mut AttnScratch,
     ) -> Result<()> {
         let cfg = &self.cfg;
-        let (nope, rope_d, vh) = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim);
-        let qk_head = nope + rope_d;
+        let (nope, vh) = (cfg.qk_nope_head_dim, cfg.v_head_dim);
+        let qk_head = nope + cfg.qk_rope_head_dim;
         let kv_rank = cfg.kv_lora_rank;
 
         // Query path: hidden → q_lora_rank → heads·(nope+rope).
-        let mut q_a = vec![0f32; cfg.q_lora_rank];
-        self.matvec(&lw.q_a, xn, &mut q_a)?;
-        let mut q_an = vec![0f32; cfg.q_lora_rank];
-        rms_norm(&q_a, &lw.q_a_norm, &mut q_an);
-        let mut q = vec![0f32; cfg.n_heads * qk_head];
-        self.matvec(&lw.q_b, &q_an, &mut q)?;
+        let q_a = &mut s.q_a[..cfg.q_lora_rank];
+        self.matvec(q_a_w, xn, q_a)?;
+        let q_an = &mut s.q_an[..cfg.q_lora_rank];
+        rms_norm(q_a, q_a_norm, q_an);
+        let q = &mut s.q[..cfg.n_heads * qk_head];
+        self.matvec(q_b_w, q_an, q)?;
 
         // KV path: hidden → (latent, rope key); the cache row stores the
         // RMS-normed latent and the post-RoPE shared key.
-        let mut kv_a = vec![0f32; cfg.kv_cache_width()];
-        self.matvec(&lw.kv_a, xn, &mut kv_a)?;
+        let kv_a = &mut s.kv_a[..cfg.kv_cache_width()];
+        self.matvec(kv_a_w, xn, kv_a)?;
         {
             let row = cache.row_mut(li, pos);
-            rms_norm(&kv_a[..kv_rank], &lw.kv_a_norm, &mut row[..kv_rank]);
+            rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
             row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
             self.rope.apply(&mut row[kv_rank..], pos);
         }
@@ -457,28 +744,29 @@ impl ForwardPass {
         // compressed latents (the encoded kv_b matvec).
         let ctx = pos + 1;
         let kvb_w = cfg.n_heads * (nope + vh);
-        let mut kvb = vec![0f32; ctx * kvb_w];
+        let kvb = &mut s.kvb[..ctx * kvb_w];
         for p in 0..ctx {
             let latent = &cache.row(li, p)[..kv_rank];
             // Split borrow: `kvb` rows are disjoint per position.
             let dst = &mut kvb[p * kvb_w..(p + 1) * kvb_w];
-            self.matvec(&lw.kv_b, latent, dst)?;
+            self.matvec(kv_b_w, latent, dst)?;
         }
 
         let inv_scale = 1.0 / (qk_head as f32).sqrt();
-        let mut heads_out = vec![0f32; cfg.n_heads * vh];
-        let mut scores = vec![0f32; ctx];
+        let heads_out = &mut s.heads_out[..cfg.n_heads * vh];
+        heads_out.fill(0.0);
+        let scores = &mut s.scores[..ctx];
         for hd in 0..cfg.n_heads {
             let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
             self.rope.apply(&mut qh[nope..], pos);
             for (p, sc) in scores.iter_mut().enumerate() {
                 let k_nope = &kvb[p * kvb_w + hd * (nope + vh)..][..nope];
                 let k_rope = &cache.row(li, p)[kv_rank..];
-                let s = kernels::dot_lanes(&qh[..nope], k_nope)
+                let sv = kernels::dot_lanes(&qh[..nope], k_nope)
                     + kernels::dot_lanes(&qh[nope..], k_rope);
-                *sc = s * inv_scale;
+                *sc = sv * inv_scale;
             }
-            math::softmax_in_place(&mut scores);
+            math::softmax_in_place(scores);
             let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
             for (p, &w) in scores.iter().enumerate() {
                 let v = &kvb[p * kvb_w + hd * (nope + vh) + nope..][..vh];
@@ -487,20 +775,91 @@ impl ForwardPass {
                 }
             }
         }
-        self.matvec(&lw.attn_output, &heads_out, out)
+        self.matvec(attn_output, heads_out, out)
+    }
+
+    /// Grouped-query attention: conventional per-head K/V cache, query
+    /// heads share each KV head in groups of `n_heads / n_kv_heads`.
+    /// K and V project **straight into the cache row** (no staging
+    /// buffer); RoPE rotates the full head dimension, Qwen2.5 style.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_gqa(
+        &self,
+        li: usize,
+        (q_w, k_w, v_w): (&TensorEntry, &TensorEntry, &TensorEntry),
+        attn_output: &TensorEntry,
+        xn: &[f32],
+        cache: &mut KvCache,
+        pos: usize,
+        out: &mut [f32],
+        s: &mut AttnScratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let hd = cfg.head_dim;
+        let kd = cfg.n_kv_heads * hd;
+        let group = cfg.n_heads / cfg.n_kv_heads;
+
+        let q = &mut s.q[..cfg.n_heads * hd];
+        self.matvec(q_w, xn, q)?;
+        {
+            let row = cache.row_mut(li, pos);
+            let (krow, vrow) = row.split_at_mut(kd);
+            self.matvec(k_w, xn, krow)?;
+            self.matvec(v_w, xn, vrow)?;
+            for kh in 0..cfg.n_kv_heads {
+                self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+            }
+        }
+
+        let ctx = pos + 1;
+        let inv_scale = 1.0 / (hd as f32).sqrt();
+        let heads_out = &mut s.heads_out[..cfg.n_heads * hd];
+        heads_out.fill(0.0);
+        let scores = &mut s.scores[..ctx];
+        for h in 0..cfg.n_heads {
+            let qh = &mut q[h * hd..(h + 1) * hd];
+            self.rope.apply(qh, pos);
+            let kh = h / group;
+            for (p, sc) in scores.iter_mut().enumerate() {
+                let k = &cache.row(li, p)[kh * hd..(kh + 1) * hd];
+                *sc = kernels::dot_lanes(qh, k) * inv_scale;
+            }
+            math::softmax_in_place(scores);
+            let oh = &mut heads_out[h * hd..(h + 1) * hd];
+            for (p, &w) in scores.iter().enumerate() {
+                let v = &cache.row(li, p)[kd + kh * hd..][..hd];
+                for (o, &vv) in oh.iter_mut().zip(v) {
+                    *o += w * vv;
+                }
+            }
+        }
+        self.matvec(attn_output, heads_out, out)
     }
 
     /// FFN for one layer: dense SwiGLU, or router → top-k routed
     /// experts + shared expert. The combine order is fixed (shared
     /// expert first, then selected experts in ascending index), so the
     /// output is a pure function of the inputs.
-    fn ffn(&self, lw: &LayerWeights, xn: &[f32], out: &mut [f32]) -> Result<()> {
+    fn ffn(
+        &self,
+        lw: &LayerWeights,
+        xn: &[f32],
+        out: &mut [f32],
+        s: &mut FfnScratch,
+    ) -> Result<()> {
         let cfg = &self.cfg;
         let fb = |t: &TensorEntry| (t.format, self.ckpt.bytes(t));
         match &lw.ffn {
-            LayerFfn::Dense { gate, up, down } => {
-                self.mlp(fb(gate), fb(up), fb(down), cfg.intermediate_size, xn, out)
-            }
+            LayerFfn::Dense { gate, up, down } => self.mlp(
+                fb(gate),
+                fb(up),
+                fb(down),
+                cfg.intermediate_size,
+                xn,
+                out,
+                &mut s.g,
+                &mut s.u,
+            ),
             LayerFfn::Moe {
                 router,
                 gate_exps,
@@ -511,26 +870,38 @@ impl ForwardPass {
                 down_shexp,
             } => {
                 let ne = cfg.n_routed_experts;
-                let mut probs = vec![0f32; ne];
-                self.matvec(router, xn, &mut probs)?;
-                math::softmax_in_place(&mut probs);
+                let probs = &mut s.probs[..ne];
+                self.matvec(router, xn, probs)?;
+                math::softmax_in_place(probs);
                 // Top-k selection: highest probability first, ties to
                 // the lower expert index; combined in ascending index.
-                let mut idx: Vec<usize> = (0..ne).collect();
-                idx.sort_by(|&a, &b| {
+                // (Keys are distinct — probability ties break on the
+                // unique index — so the unstable sort is deterministic.)
+                s.idx.clear();
+                s.idx.extend(0..ne);
+                s.idx.sort_unstable_by(|&a, &b| {
                     probs[b].partial_cmp(&probs[a]).expect("softmax is NaN-free").then(a.cmp(&b))
                 });
-                idx.truncate(cfg.n_active_experts);
-                idx.sort_unstable();
+                s.idx.truncate(cfg.n_active_experts);
+                s.idx.sort_unstable();
                 let mut z = 0f32;
-                for &e in &idx {
+                for &e in &s.idx {
                     z += probs[e];
                 }
                 // Shared expert contributes with weight 1.
                 let sh_inter = cfg.n_shared_experts * cfg.moe_intermediate_size;
-                self.mlp(fb(gate_shexp), fb(up_shexp), fb(down_shexp), sh_inter, xn, out)?;
-                let mut y = vec![0f32; cfg.hidden_size];
-                for &e in &idx {
+                self.mlp(
+                    fb(gate_shexp),
+                    fb(up_shexp),
+                    fb(down_shexp),
+                    sh_inter,
+                    xn,
+                    out,
+                    &mut s.g,
+                    &mut s.u,
+                )?;
+                let y = &mut s.y[..cfg.hidden_size];
+                for &e in &s.idx {
                     let w = probs[e] / z;
                     self.mlp(
                         (gate_exps.format, self.expert_bytes(gate_exps, e)?),
@@ -538,9 +909,11 @@ impl ForwardPass {
                         (down_exps.format, self.expert_bytes(down_exps, e)?),
                         cfg.moe_intermediate_size,
                         xn,
-                        &mut y,
+                        y,
+                        &mut s.g,
+                        &mut s.u,
                     )?;
-                    for (o, &yv) in out.iter_mut().zip(&y) {
+                    for (o, &yv) in out.iter_mut().zip(&*y) {
                         *o += w * yv;
                     }
                 }
@@ -554,10 +927,16 @@ impl ForwardPass {
     /// unembedding of the final hidden state (`logits.len() == vocab`);
     /// prefill steps that only need to advance the cache pass `None`
     /// and skip the vocab matvec.
+    ///
+    /// All intermediates live in the caller's `scratch`
+    /// ([`ForwardPass::new_scratch`]); after the cache's first token has
+    /// forced its lazy allocation, this function performs **no heap
+    /// allocation** on the success path.
     pub fn forward_token(
         &self,
         tok: i32,
         cache: &mut KvCache,
+        scratch: &mut Scratch,
         logits: Option<&mut [f32]>,
     ) -> Result<()> {
         let pos = cache.len;
@@ -573,27 +952,25 @@ impl ForwardPass {
                 bail!("logits buffer {} != vocab {}", out.len(), self.cfg.vocab_size);
             }
         }
-        let h_dim = self.cfg.hidden_size;
-        let mut h = vec![0f32; h_dim];
-        self.embed(tok, &mut h)?;
-        let mut xn = vec![0f32; h_dim];
-        let mut delta = vec![0f32; h_dim];
+        cache.ensure_allocated();
+        let Scratch { h, xn, delta, attn, ffn } = scratch;
+        self.embed(tok, h)?;
         for (li, lw) in self.layers.iter().enumerate() {
-            rms_norm(&h, &lw.attn_norm, &mut xn);
-            self.attention(li, lw, &xn, cache, pos, &mut delta)?;
-            for (hv, &dv) in h.iter_mut().zip(&delta) {
+            rms_norm(h, &lw.attn_norm, xn);
+            self.attention(li, lw, xn, cache, pos, delta, attn)?;
+            for (hv, &dv) in h.iter_mut().zip(&*delta) {
                 *hv += dv;
             }
-            rms_norm(&h, &lw.ffn_norm, &mut xn);
-            self.ffn(lw, &xn, &mut delta)?;
-            for (hv, &dv) in h.iter_mut().zip(&delta) {
+            rms_norm(h, &lw.ffn_norm, xn);
+            self.ffn(lw, xn, delta, ffn)?;
+            for (hv, &dv) in h.iter_mut().zip(&*delta) {
                 *hv += dv;
             }
         }
         cache.len = pos + 1;
         if let Some(out) = logits {
-            rms_norm(&h, &self.output_norm, &mut xn);
-            self.matvec(&self.output, &xn, out)?;
+            rms_norm(h, &self.output_norm, xn);
+            self.matvec(&self.output, xn, out)?;
         }
         Ok(())
     }
@@ -624,32 +1001,77 @@ mod tests {
     fn cache_overflow_is_a_clean_error_before_any_state_change() {
         let fwd = tiny_forward("q4_k_m", 1, 2);
         let mut cache = fwd.new_cache();
-        fwd.forward_token(1, &mut cache, None).unwrap();
-        fwd.forward_token(2, &mut cache, None).unwrap();
+        let mut scratch = fwd.new_scratch();
+        fwd.forward_token(1, &mut cache, &mut scratch, None).unwrap();
+        fwd.forward_token(2, &mut cache, &mut scratch, None).unwrap();
         assert_eq!(cache.len(), 2);
-        let err = fwd.forward_token(3, &mut cache, None).unwrap_err();
+        let err = fwd.forward_token(3, &mut cache, &mut scratch, None).unwrap_err();
         assert!(err.to_string().contains("max context"), "{err}");
         assert_eq!(cache.len(), 2, "failed append must not consume a slot");
     }
 
     #[test]
-    fn dense_gqa_containers_are_rejected_with_a_clear_error() {
+    fn dense_gqa_containers_are_served_not_rejected() {
+        // Before PR 5 every non-MLA container was bailed on; the dense
+        // tiny proxy now resolves a full GQA layer map.
         let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 7).unwrap();
-        let err = ForwardPass::new(src, 1, 8).unwrap_err();
-        assert!(err.to_string().contains("MLA+MoE"), "{err}");
+        let fwd = ForwardPass::new(src, 1, 8).unwrap();
+        let mut cache = fwd.new_cache();
+        let mut scratch = fwd.new_scratch();
+        let mut logits = vec![0f32; fwd.vocab()];
+        fwd.forward_token(3, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(logits.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn unusable_kind_dims_are_rejected_listing_supported_kinds() {
+        // A DenseGqa config whose GQA dims are unusable is the
+        // genuinely-unsupported case left after PR 5.
+        let mut src = synthetic_f32_container(&ModelConfig::tiny_dense(), 7).unwrap();
+        src.model.head_dim = 0;
+        let err = ForwardPass::new(src, 1, 8).unwrap_err().to_string();
+        assert!(err.contains("tiny-dense"), "{err}");
+        assert!(err.contains("DenseGqa"), "{err}");
+        assert!(err.contains(SUPPORTED_KINDS), "must list supported kinds: {err}");
+    }
+
+    #[test]
+    fn shape_mismatch_names_the_model_and_kind() {
+        // Doctor the config so a resolved tensor no longer matches the
+        // expectation derived from it; the error must say which model
+        // (and kind) was being validated.
+        let mut src = synthetic_f32_container(&ModelConfig::tiny_dense(), 7).unwrap();
+        src.model.intermediate_size = 768;
+        let err = ForwardPass::new(src, 1, 8).unwrap_err().to_string();
+        assert!(err.contains("tiny-dense"), "{err}");
+        assert!(err.contains("DenseGqa"), "{err}");
+        assert!(err.contains("ffn_gate"), "{err}");
     }
 
     #[test]
     fn logits_buffer_must_match_vocab() {
         let fwd = tiny_forward("q4_k_m", 1, 4);
         let mut cache = fwd.new_cache();
+        let mut scratch = fwd.new_scratch();
         let mut short = vec![0f32; 3];
-        assert!(fwd.forward_token(1, &mut cache, Some(&mut short)).is_err());
+        assert!(fwd.forward_token(1, &mut cache, &mut scratch, Some(&mut short)).is_err());
+    }
+
+    #[test]
+    fn kv_cache_allocates_lazily_on_first_token() {
+        let fwd = tiny_forward("q4_k_m", 1, 4);
+        let mut cache = fwd.new_cache();
+        assert!(!cache.is_allocated(), "fresh caches must not allocate");
+        let mut scratch = fwd.new_scratch();
+        fwd.forward_token(1, &mut cache, &mut scratch, None).unwrap();
+        assert!(cache.is_allocated());
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]
     fn rope_table_rows_are_unit_rotations() {
-        let t = RopeTable::new(32, 24);
+        let t = RopeTable::new(32, 24, math::ln_f32(10000.0));
         for p in 0..24 {
             for i in 0..16 {
                 let (c, s) = (t.cos[p * 16 + i], t.sin[p * 16 + i]);
@@ -660,5 +1082,19 @@ mod tests {
         // Position 0 is the identity rotation for every frequency.
         assert!(t.cos[..16].iter().all(|&c| c == 1.0));
         assert!(t.sin[..16].iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn rope_base_changes_the_frequencies() {
+        // The satellite bug this PR fixes: a Qwen-style θ=1000000 model
+        // computed with the old hard-coded ln(10000) would get these
+        // exact tables instead of its own.
+        let a = RopeTable::new(64, 8, math::ln_f32(10000.0));
+        let b = RopeTable::new(64, 8, math::ln_f32(1_000_000.0));
+        assert_ne!(
+            a.cos[32..64],
+            b.cos[32..64],
+            "different bases must rotate differently from position 1 on"
+        );
     }
 }

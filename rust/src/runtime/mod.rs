@@ -23,17 +23,20 @@
 //! missing backend gracefully.
 //!
 //! Since PR 3 the engine also has a **native CPU backend** ([`native`],
-//! `Engine::load_native`, `dsq serve|eval --native`), and since PR 4
-//! that backend executes the **complete tiny-MoE forward pass**
-//! ([`forward`]: RMSNorm, MLA attention over per-slot KV caches, top-k
-//! routed + shared experts, unembed) directly on the container's
-//! quantized payloads through the fused `quant::kernels` vec_dot path —
-//! so the coordinator can execute prefill/decode waves offline, no HLO
-//! artifacts, no PJRT, with logits bit-identical at every thread count.
-//! Per-wave mutable state (PJRT cache literals or native per-slot KV
-//! caches) is threaded through [`StepOutput::state`] as a
-//! backend-tagged [`StepState`], keeping the engine itself immutable
-//! between steps.
+//! `Engine::load_native`, `dsq serve|eval --native`); since PR 4 that
+//! backend executes a **complete transformer forward pass**
+//! ([`forward`]) directly on the container's quantized payloads through
+//! the fused `quant::kernels` vec_dot path, and since PR 5 it serves
+//! **both architecture families** the paper evaluates: the
+//! DeepSeek-shaped MLA+MoE step (tiny-moe, Tables 2–4) and the
+//! Qwen2.5-shaped dense-GQA step of the distill models (tiny-dense /
+//! distill-qwen-32b, Table 5) — so the coordinator can execute
+//! prefill/decode waves offline, no HLO artifacts, no PJRT, with
+//! logits bit-identical at every thread count. Per-wave mutable state
+//! (PJRT cache literals or native per-slot KV caches plus the wave's
+//! reused forward scratch) is threaded through [`StepOutput::state`]
+//! as a backend-tagged [`StepState`], keeping the engine itself
+//! immutable between steps.
 
 pub mod forward;
 pub mod loader;

@@ -4,15 +4,22 @@
 //! artifacts.
 //!
 //! Since PR 4 this is no longer an embed→unembed stub: each slot runs
-//! the **complete tiny-MoE transformer forward pass** in
-//! [`super::forward`] — RMSNorm, MLA attention over a per-slot
-//! compressed-latent KV cache bounded by [`NATIVE_MAX_CTX`], top-k
-//! routed + shared expert FFNs, and the final unembedding — with every
-//! matvec fused on the container's encoded payloads
+//! a **complete transformer forward pass** in [`super::forward`] —
+//! RMSNorm, attention over a per-slot KV cache bounded by
+//! [`NATIVE_MAX_CTX`], the FFN stack, and the final unembedding — with
+//! every matvec fused on the container's encoded payloads
 //! ([`crate::quant::vec_dot_rows_with`]; no resident f32 weight
-//! tables). Prefill feeds each slot's actual prompt token by token
-//! (padding slots cost one token); decode advances one token per live
-//! slot, and slots marked inactive (`pos < 0`) are skipped entirely.
+//! tables). Since PR 5 **both architecture families** are served: the
+//! tiny-MoE step (MLA attention + top-k routed experts, Tables 2–4)
+//! and the dense-GQA step of the distill shapes (grouped-query
+//! attention + dense SwiGLU, Table 5 — `tiny-dense` /
+//! `distill-qwen-32b`). Prefill feeds each slot's actual prompt token
+//! by token; decode advances one token per live slot, and slots marked
+//! inactive (`pos < 0`) are skipped entirely. Unused slots never even
+//! allocate their KV backing buffer ([`KvCache`] allocates lazily on
+//! the first forwarded token), and all per-token intermediates live in
+//! one reused [`Scratch`] per wave, so the decode loop is
+//! allocation-free.
 //!
 //! Determinism: the PR-3 contract extends through the whole pass — the
 //! same 8-lane reduction order at every thread count and on both
@@ -22,7 +29,7 @@
 //! committed `rust/tests/golden/forward.*.fnv64` checksums, and proven
 //! on the deployment host by `dsq selfcheck`).
 
-use super::forward::{ForwardPass, KvCache};
+use super::forward::{ForwardPass, KvCache, Scratch};
 use crate::container::Container;
 use crate::quant::QuantFormat;
 use anyhow::{bail, Result};
@@ -37,11 +44,15 @@ pub const NATIVE_PROMPT_LEN: usize = 16;
 /// rejects prompts that could not generate within it.
 pub const NATIVE_MAX_CTX: usize = 24;
 
-/// Per-wave mutable state: one [`KvCache`] per batch slot. Threaded
-/// through [`super::StepOutput`] exactly like the PJRT cache literals,
-/// so the engine itself stays immutable between steps.
+/// Per-wave mutable state: one [`KvCache`] per batch slot plus the
+/// wave's shared forward-pass [`Scratch`] (slots step sequentially, so
+/// one scratch serves them all and every per-token intermediate is
+/// reused instead of reallocated). Threaded through
+/// [`super::StepOutput`] exactly like the PJRT cache literals, so the
+/// engine itself stays immutable between steps.
 pub struct BatchKv {
     slots: Vec<KvCache>,
+    scratch: Scratch,
 }
 
 impl BatchKv {
@@ -52,6 +63,13 @@ impl BatchKv {
 
     pub fn n_slots(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Whether slot `i` has allocated its KV backing buffer (false for
+    /// slots a wave never forwarded a token through — the lazy-alloc
+    /// regression tests assert skipped slots stay unallocated).
+    pub fn slot_allocated(&self, i: usize) -> bool {
+        self.slots[i].is_allocated()
     }
 }
 
@@ -121,9 +139,14 @@ impl NativeEngine {
         &self.fwd
     }
 
-    /// Fresh per-slot caches for one wave.
+    /// Fresh per-slot caches (and the wave's reused scratch) for one
+    /// wave. Nothing is heap-allocated per slot beyond the cache
+    /// handles themselves: KV buffers appear lazily on first use.
     pub fn new_batch_kv(&self) -> BatchKv {
-        BatchKv { slots: (0..self.batch).map(|_| self.fwd.new_cache()).collect() }
+        BatchKv {
+            slots: (0..self.batch).map(|_| self.fwd.new_cache()).collect(),
+            scratch: self.fwd.new_scratch(),
+        }
     }
 
     /// Prefill: run each slot's actual prompt (`lengths[i]` tokens of
@@ -151,7 +174,7 @@ impl NativeEngine {
             let row = &mut logits[slot * v..(slot + 1) * v];
             for (j, &tok) in prompt.iter().enumerate() {
                 let want = if j + 1 == l { Some(&mut *row) } else { None };
-                self.fwd.forward_token(tok, cache, want)?;
+                self.fwd.forward_token(tok, cache, &mut kv.scratch, want)?;
             }
         }
         Ok((logits, kv))
@@ -172,7 +195,7 @@ impl NativeEngine {
                 continue;
             }
             let row = &mut logits[slot * v..(slot + 1) * v];
-            self.fwd.forward_token(token[slot], cache, Some(row))?;
+            self.fwd.forward_token(token[slot], cache, &mut kv.scratch, Some(row))?;
         }
         Ok(logits)
     }
@@ -212,8 +235,10 @@ mod tests {
         let (logits, kv) = m.prefill(&tokens, &[2, 4, 0]).unwrap();
         assert_eq!(logits.len(), 3 * m.vocab());
         // Length 0 marks an unused slot: no forward pass, empty cache,
-        // zeroed logits row.
+        // zeroed logits row — and no KV backing allocation at all.
         assert_eq!([kv.slot_len(0), kv.slot_len(1), kv.slot_len(2)], [2, 4, 0]);
+        assert!(kv.slot_allocated(0) && kv.slot_allocated(1));
+        assert!(!kv.slot_allocated(2), "skipped slot must not allocate its KV buffer");
         let v = m.vocab();
         assert!(logits[..2 * v].iter().all(|x| x.is_finite()));
         assert!(logits[2 * v..].iter().all(|&x| x == 0.0), "unused slot row must be zero");
@@ -251,5 +276,24 @@ mod tests {
     fn quantized_weights_stay_encoded() {
         let m = native("dq3_k_m", 1);
         assert_ne!(m.output_format(), QuantFormat::F32, "scheme should quantize output");
+    }
+
+    #[test]
+    fn dense_gqa_engine_serves_prefill_and_decode() {
+        // Table-5 coverage: the tiny-dense proxy rides the same serving
+        // plumbing as tiny-moe (fuller numeric coverage lives in
+        // tests/native_forward.rs; the wave test in native_engine.rs).
+        let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 0xA17E).unwrap();
+        let q = quantize_container_with(&src, &builtin::scheme("q4_k_m").unwrap(), None, 1)
+            .unwrap()
+            .to_bytes();
+        let m = NativeEngine::with_limits(Container::from_bytes(q).unwrap(), 1, 2, 4, 8).unwrap();
+        let (logits, mut kv) = m.prefill(&[1, 2, 3, 4, 9, 8, 7, 6], &[3, 0]).unwrap();
+        let v = m.vocab();
+        assert!(logits[..v].iter().any(|&x| x != 0.0));
+        assert!(!kv.slot_allocated(1), "unused dense slot stays unallocated");
+        let step = m.decode(&[5, 0], &[3, -1], &mut kv).unwrap();
+        assert!(step[..v].iter().all(|x| x.is_finite()));
+        assert_eq!(kv.slot_len(0), 4);
     }
 }

@@ -102,6 +102,54 @@ pub fn cos_small(x: f32) -> f32 {
     1.0 + t * p
 }
 
+/// `sqrt(2)` to f64 precision (bits `0x3FF6A09E667F3BCD`) — the
+/// mantissa-range pivot of [`ln_f32`]'s reduction.
+const SQRT2: f64 = std::f64::consts::SQRT_2;
+/// `ln(2)` to f64 precision (bits `0x3FE62E42FEFA39EF`).
+const LN2_F64: f64 = std::f64::consts::LN_2;
+
+/// Deterministic natural logarithm of a positive, finite, **normal**
+/// f64, rounded to f32 — used once per model load to turn
+/// [`crate::model::ModelConfig::rope_base`] into the `ln θ_base` the
+/// RoPE frequency table needs (`θ_i = exp(−(2i/d)·ln base)`).
+///
+/// libm's `ln` is not guaranteed to round identically across platforms
+/// (or across languages — the Python golden mirror must land on the
+/// same bits), so this reimplements it from exactly-rounded f64
+/// primitives only: split `x = m·2^e` with `m ∈ (√2/2, √2]` by bit
+/// manipulation, then `ln m = 2·atanh(s)` for `s = (m−1)/(m+1)` via a
+/// fixed 13-term odd series (|s| ≤ 0.172, so the truncation error is
+/// ~1e-17 relative), and `ln x = e·ln2 + ln m`. Every step is a
+/// single-rounded f64 add/mul/div, replayed identically by
+/// `python/tools/bless_goldens.py`. The f64→f32 cast at the end absorbs
+/// the few-ulp f64 error, so the result is the correctly rounded f32
+/// log for every practical base (`ln_f32(10000.0)` reproduces the
+/// historical `ROPE_BASE_LN` constant bit-for-bit — tested).
+pub fn ln_f32(x: f64) -> f32 {
+    assert!(
+        x.is_finite() && x >= f64::MIN_POSITIVE,
+        "ln_f32 needs a positive normal input, got {x:e}"
+    );
+    let bits = x.to_bits();
+    let mut e = ((bits >> 52) & 0x7FF) as i64 - 1023;
+    let mut m = f64::from_bits((bits & 0x000F_FFFF_FFFF_FFFF) | (1023u64 << 52));
+    if m > SQRT2 {
+        m *= 0.5; // exact: pure exponent decrement
+        e += 1;
+    }
+    let s = (m - 1.0) / (m + 1.0);
+    let s2 = s * s;
+    // Horner over 1/(2k+1) for k = 12..=1; ln m = 2s·(1 + s²·p).
+    let mut p = 0.0f64;
+    let mut k = 12i64;
+    while k >= 1 {
+        p = p * s2 + 1.0 / (2 * k + 1) as f64;
+        k -= 1;
+    }
+    let ln_m = 2.0 * s * (1.0 + s2 * p);
+    (e as f64 * LN2_F64 + ln_m) as f32
+}
+
 /// In-place max-subtracted softmax with a **fixed sequential reduction
 /// order**: the max fold, the exp+sum loop and the divide all walk the
 /// slice front to back, so the result is a pure function of the input
@@ -162,6 +210,29 @@ mod tests {
         assert!((silu(5.0) - 5.0).abs() < 0.04);
         assert!(silu(-5.0).abs() < 0.04);
         assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ln_reproduces_the_historical_rope_constant_and_tracks_libm() {
+        // The RoPE table was seeded from the literal 9.2103404 (ln 10⁴)
+        // before the base moved into ModelConfig; the tiny-moe forward
+        // goldens stay byte-identical only if ln_f32 lands on the same
+        // bits.
+        assert_eq!(ln_f32(10000.0).to_bits(), 9.210_340_4_f32.to_bits());
+        let mut rng = Pcg::new(0x106);
+        for _ in 0..20_000 {
+            let x = (rng.next_f64() * 20.0 - 10.0).exp2() * (1.0 + rng.next_f64());
+            let got = ln_f32(x) as f64;
+            let want = x.ln();
+            assert!(
+                (got - want).abs() <= want.abs().max(1.0) * 1e-7,
+                "ln({x}): got {got}, want {want}"
+            );
+        }
+        assert_eq!(ln_f32(1.0), 0.0);
+        // Exact powers of two reduce to e·ln2 with m = 1.
+        assert_eq!(ln_f32(2.0), std::f64::consts::LN_2 as f32);
+        assert_eq!(ln_f32(1024.0), (10.0 * std::f64::consts::LN_2) as f32);
     }
 
     #[test]

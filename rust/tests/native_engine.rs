@@ -4,12 +4,15 @@
 //! full `Coordinator` wave over quantized weights — no HLO artifacts,
 //! no PJRT.
 //!
-//! Since PR 4 every step is the complete tiny-MoE forward pass (MLA
-//! attention over per-slot KV caches + routed experts) fused on the
-//! encoded container payloads; the per-step numeric properties live in
-//! `tests/native_forward.rs`, this file covers the serving plumbing:
-//! prefill/decode state threading, inactive-slot skipping, and the
-//! submit-time admission checks against the engine's context bound.
+//! Since PR 4 every step is a complete forward pass fused on the
+//! encoded container payloads (MLA attention + routed experts for the
+//! MoE shapes; since PR 5, grouped-query attention + dense FFNs for
+//! the Table-5 tiny-dense proxy too); the per-step numeric properties
+//! live in `tests/native_forward.rs`, this file covers the serving
+//! plumbing: prefill/decode state threading, inactive-slot skipping
+//! (including that skipped slots never allocate KV backing memory),
+//! and the submit-time admission checks against the engine's context
+//! bound.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
@@ -124,6 +127,65 @@ fn coordinator_serves_a_wave_on_quantized_weights() {
     // The whole serve path is deterministic: same engine + seeds ⇒ the
     // same sampled tokens, independent of the matvec thread fan-out.
     assert_eq!(run(), run());
+}
+
+#[test]
+fn coordinator_serves_a_dense_gqa_wave_on_quantized_weights() {
+    // The Table-5 workload end to end: tiny-dense on a DQ3_K_M
+    // container through the same coordinator loop, deterministic
+    // across runs and thread counts.
+    let dense_engine = |threads: usize| {
+        let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 0x1A7E).unwrap();
+        let scheme = dsq::scheme::builtin::scheme("dq3_k_m").unwrap();
+        let q = Container::from_bytes(
+            quantize_container_with(&src, &scheme, None, 1).unwrap().to_bytes(),
+        )
+        .unwrap();
+        Engine::from_native(NativeEngine::with_limits(q, threads, 3, 6, 10).unwrap()).unwrap()
+    };
+    let run = |threads: usize| {
+        let mut coord = Coordinator::new(dense_engine(threads));
+        assert_eq!(coord.engine().model_name, "tiny-dense");
+        for i in 0..2u64 {
+            coord
+                .submit(Request {
+                    id: i,
+                    prompt: vec![(3 + i as i32) % 512; 3 + i as usize],
+                    params: SamplingParams::paper(),
+                    seed: 2000 + i,
+                })
+                .unwrap();
+        }
+        let responses = coord.run_to_completion().unwrap();
+        assert_eq!(responses.len(), 2);
+        for r in &responses {
+            assert!(!r.tokens.is_empty(), "request {} generated nothing", r.id);
+        }
+        responses.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(run(1), run(4), "dense wave must be thread-count independent");
+}
+
+#[test]
+fn skipped_slots_never_allocate_kv_memory() {
+    // The eager-allocation defect this PR fixes: a 3-slot engine
+    // serving one request used to allocate all three full KV buffers.
+    let engine = small_engine("q4_k_m", 1);
+    let (b, t) = (engine.batch(), engine.prompt_len());
+    let mut tokens = vec![0i32; b * t];
+    tokens[..3].copy_from_slice(&[5, 6, 7]);
+    let mut lengths = vec![0i32; b];
+    lengths[0] = 3;
+    let out = engine.run_prefill(&tokens, &lengths).unwrap();
+    match out.state {
+        StepState::Native(kv) => {
+            assert!(kv.slot_allocated(0), "live slot allocates on first token");
+            for i in 1..b {
+                assert!(!kv.slot_allocated(i), "skipped slot {i} must stay unallocated");
+            }
+        }
+        StepState::Pjrt(_) => panic!("native engine must carry native state"),
+    }
 }
 
 #[test]

@@ -1,20 +1,23 @@
-//! Differential + property suite for the native tiny-MoE forward pass
-//! (`runtime::forward`), the computation behind `dsq eval --native`.
+//! Differential + property suite for the native forward pass
+//! (`runtime::forward`), the computation behind `dsq eval --native` —
+//! covering **both architecture families**: the MLA+MoE step (tiny-moe,
+//! Tables 2–4) and the dense-GQA step of the distill shapes
+//! (tiny-dense, Table 5).
 //!
-//! Four locks, mirroring the codec golden suite one level up:
+//! Five locks, mirroring the codec golden suite one level up:
 //!
 //! 1. **Golden logits** — the shared script (prefill [`PROMPT`] on the
-//!    seed-`0x601D` tiny-moe container, then greedy decode) must hash
-//!    to the committed `tests/golden/forward.*.fnv64` checksums for the
-//!    DQ3_K_M and Q4_K_M schemes. The committed fixtures were produced
-//!    by the bit-exact Python mirror in `python/tools/bless_goldens.py`,
-//!    so this test is also the Rust↔Python cross-language gate.
+//!    seed-`0x601D` container, then greedy decode) must hash to the
+//!    committed `tests/golden/forward.*.fnv64` (tiny-moe) and
+//!    `forward.tiny_dense.*.fnv64` checksums for the DQ3_K_M and
+//!    Q4_K_M schemes. The committed fixtures were produced by the
+//!    bit-exact Python mirror in `python/tools/bless_goldens.py`, so
+//!    this test is also the Rust↔Python cross-language gate.
 //! 2. **Differential vs an in-test f64 reference** — an independent
 //!    plain-loop float64 forward (libm transcendentals, natural-order
 //!    sums, no shared code with the engine) must agree to ~1e-4 on the
 //!    *same* decoded weights, and within the per-scheme quantization
-//!    tolerance on the f32 *source* weights (measured rel-L2 ≈ 0.11 for
-//!    DQ3_K_M / 0.12 for Q4_K_M on this fixture).
+//!    tolerance on the f32 *source* weights.
 //! 3. **Bit identity** — logits are identical across matvec thread
 //!    counts {1, 2, 8} and across both pinned vec_dot dispatch arms;
 //!    CI reruns this whole suite under `DSQ_SCALAR_DECODE=1` so the
@@ -23,10 +26,14 @@
 //!    every step) is bit-identical to a fresh full prefill of the same
 //!    token prefix, and attention state actually matters (the same
 //!    token at different positions produces different logits).
+//! 5. **Allocation discipline** — `forward_token` performs zero heap
+//!    allocations per decoded token (counted by the test binary's
+//!    global allocator), scratch reuse does not perturb logits, and
+//!    untouched KV caches never allocate their backing buffer.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::coordinator::sampler::argmax;
-use dsq::model::ModelConfig;
+use dsq::model::{ModelConfig, ModelKind};
 use dsq::runtime::forward::{ForwardPass, MatvecMode};
 use dsq::runtime::native::NATIVE_MAX_CTX;
 use dsq::util::fnv64;
@@ -34,35 +41,99 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
+// --- counting allocator (lock 5) -----------------------------------------
+//
+// Counts allocation *events* per thread; matvecs run in
+// `MatvecMode::Threads(1)` during the zero-alloc assertion, so the
+// measuring thread sees every allocation the decode loop makes. The
+// counter is thread-local (const-initialized — no lazy TLS allocation
+// inside the allocator), so concurrently running tests in this binary
+// don't perturb the measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, n)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+// --- shared fixtures ------------------------------------------------------
+
 /// The golden script, mirrored verbatim by `bless_goldens.py`.
 const PROMPT: [i32; 8] = [1, 17, 300, 42, 511, 7, 5, 260];
 const DECODE_STEPS: usize = 4;
+
+/// Both tiny proxies ride the same suite.
+const MODELS: [&str; 2] = ["tiny-moe", "tiny-dense"];
 
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
 }
 
-fn golden_src() -> Container {
-    synthetic_f32_container(&ModelConfig::tiny_moe(), 0x601D).unwrap()
+fn golden_src(model: &str) -> Container {
+    synthetic_f32_container(&ModelConfig::by_name(model).unwrap(), 0x601D).unwrap()
 }
 
-/// Quantized golden-container bytes, built once per scheme.
-fn qbytes(scheme: &str) -> &'static [u8] {
-    static DQ3: OnceLock<Vec<u8>> = OnceLock::new();
-    static Q4: OnceLock<Vec<u8>> = OnceLock::new();
-    let cell = match scheme {
-        "dq3_k_m" => &DQ3,
-        "q4_k_m" => &Q4,
-        other => panic!("unexpected scheme {other}"),
+/// Fixture file for a (model, scheme) pair — tiny-moe keeps its PR-4
+/// names, the dense fixtures carry the model in the name.
+fn fixture_name(model: &str, scheme: &str) -> String {
+    match model {
+        "tiny-moe" => format!("forward.{scheme}.fnv64"),
+        "tiny-dense" => format!("forward.tiny_dense.{scheme}.fnv64"),
+        other => panic!("unexpected model {other}"),
+    }
+}
+
+/// Quantized golden-container bytes, built once per (model, scheme).
+fn qbytes(model: &str, scheme: &str) -> &'static [u8] {
+    static MOE_DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static MOE_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    static DENSE_DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static DENSE_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    let cell = match (model, scheme) {
+        ("tiny-moe", "dq3_k_m") => &MOE_DQ3,
+        ("tiny-moe", "q4_k_m") => &MOE_Q4,
+        ("tiny-dense", "dq3_k_m") => &DENSE_DQ3,
+        ("tiny-dense", "q4_k_m") => &DENSE_Q4,
+        other => panic!("unexpected combination {other:?}"),
     };
     cell.get_or_init(|| {
         let scheme = dsq::scheme::builtin::scheme(scheme).unwrap();
-        quantize_container_with(&golden_src(), &scheme, None, 1).unwrap().to_bytes()
+        quantize_container_with(&golden_src(model), &scheme, None, 1).unwrap().to_bytes()
     })
 }
 
-fn forward(scheme: &str, threads: usize) -> ForwardPass {
-    let ckpt = Container::from_bytes(qbytes(scheme).to_vec()).unwrap();
+fn forward(model: &str, scheme: &str, threads: usize) -> ForwardPass {
+    let ckpt = Container::from_bytes(qbytes(model, scheme).to_vec()).unwrap();
     ForwardPass::new(ckpt, threads, NATIVE_MAX_CTX).unwrap()
 }
 
@@ -71,15 +142,16 @@ fn forward(scheme: &str, threads: usize) -> ForwardPass {
 /// logits rows (1 + DECODE_STEPS of them).
 fn run_script(fwd: &ForwardPass) -> Vec<Vec<f32>> {
     let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
     let mut logits = vec![0f32; fwd.vocab()];
     for (j, &t) in PROMPT.iter().enumerate() {
         let want = if j + 1 == PROMPT.len() { Some(&mut logits[..]) } else { None };
-        fwd.forward_token(t, &mut cache, want).unwrap();
+        fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
     }
     let mut rows = vec![logits.clone()];
     for _ in 0..DECODE_STEPS {
         let tok = argmax(rows.last().unwrap());
-        fwd.forward_token(tok, &mut cache, Some(&mut logits)).unwrap();
+        fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
         rows.push(logits.clone());
     }
     rows
@@ -91,88 +163,162 @@ fn bits(rows: &[Vec<f32>]) -> Vec<u32> {
 
 #[test]
 fn golden_forward_logits_checksums() {
-    for scheme in ["dq3_k_m", "q4_k_m"] {
-        let rows = run_script(&forward(scheme, 1));
-        let mut blob = Vec::with_capacity(rows.len() * rows[0].len() * 4);
-        for r in &rows {
-            for v in r {
-                blob.extend_from_slice(&v.to_le_bytes());
+    for model in MODELS {
+        for scheme in ["dq3_k_m", "q4_k_m"] {
+            let rows = run_script(&forward(model, scheme, 1));
+            let mut blob = Vec::with_capacity(rows.len() * rows[0].len() * 4);
+            for r in &rows {
+                for v in r {
+                    blob.extend_from_slice(&v.to_le_bytes());
+                }
             }
+            let line = format!("{:016x} {}\n", fnv64(&blob), blob.len());
+            let path = golden_dir().join(fixture_name(model, scheme));
+            if !path.exists() {
+                std::fs::write(&path, &line).unwrap();
+                eprintln!("[golden] blessed new fixture {} — commit it", path.display());
+                continue;
+            }
+            let expect = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                expect.trim(),
+                line.trim(),
+                "forward logits for {model}/{scheme} drifted from {}; if the change is \
+                 intentional, re-bless from python/tools/bless_goldens.py (or delete + rerun) \
+                 and call it out in the PR",
+                path.display()
+            );
         }
-        let line = format!("{:016x} {}\n", fnv64(&blob), blob.len());
-        let path = golden_dir().join(format!("forward.{scheme}.fnv64"));
-        if !path.exists() {
-            std::fs::write(&path, &line).unwrap();
-            eprintln!("[golden] blessed new fixture {} — commit it", path.display());
-            continue;
-        }
-        let expect = std::fs::read_to_string(&path).unwrap();
-        assert_eq!(
-            expect.trim(),
-            line.trim(),
-            "forward logits for scheme {scheme} drifted from {}; if the change is \
-             intentional, re-bless from python/tools/bless_goldens.py (or delete + rerun) \
-             and call it out in the PR",
-            path.display()
-        );
     }
 }
 
 #[test]
 fn logits_bit_identical_across_threads_and_dispatch_arms() {
-    let base = bits(&run_script(&forward("dq3_k_m", 1)));
-    for (label, mode) in [
-        ("threads=2", MatvecMode::Threads(2)),
-        ("threads=8", MatvecMode::Threads(8)),
-        ("pinned scalar arm", MatvecMode::Pinned(false)),
-        ("pinned lane arm", MatvecMode::Pinned(true)),
-    ] {
-        let mut fwd = forward("dq3_k_m", 1);
-        fwd.set_mode(mode);
-        assert_eq!(base, bits(&run_script(&fwd)), "{label}");
+    for model in MODELS {
+        let base = bits(&run_script(&forward(model, "dq3_k_m", 1)));
+        for (label, mode) in [
+            ("threads=2", MatvecMode::Threads(2)),
+            ("threads=8", MatvecMode::Threads(8)),
+            ("pinned scalar arm", MatvecMode::Pinned(false)),
+            ("pinned lane arm", MatvecMode::Pinned(true)),
+        ] {
+            let mut fwd = forward(model, "dq3_k_m", 1);
+            fwd.set_mode(mode);
+            assert_eq!(base, bits(&run_script(&fwd)), "{model}: {label}");
+        }
     }
 }
 
 #[test]
 fn incremental_decode_equals_full_prefill() {
-    let fwd = forward("q4_k_m", 2);
-    let toks = [1i32, 9, 300, 42, 77, 5];
-    // Incremental: one cache, logits requested at every step.
-    let mut cache = fwd.new_cache();
-    let mut logits = vec![0f32; fwd.vocab()];
-    let mut per_step: Vec<Vec<u32>> = Vec::new();
-    for &t in &toks {
-        fwd.forward_token(t, &mut cache, Some(&mut logits)).unwrap();
-        per_step.push(logits.iter().map(|v| v.to_bits()).collect());
-    }
-    // Fresh prefills of each prefix (logits only at the final token)
-    // must land on the same bits: requesting logits mid-stream does not
-    // perturb the cache, and the cache replays exactly.
-    for k in [1usize, 3, 6] {
-        let mut c2 = fwd.new_cache();
-        for (j, &t) in toks[..k].iter().enumerate() {
-            let want = if j + 1 == k { Some(&mut logits[..]) } else { None };
-            fwd.forward_token(t, &mut c2, want).unwrap();
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 2);
+        let toks = [1i32, 9, 300, 42, 77, 5];
+        // Incremental: one cache, logits requested at every step.
+        let mut cache = fwd.new_cache();
+        let mut scratch = fwd.new_scratch();
+        let mut logits = vec![0f32; fwd.vocab()];
+        let mut per_step: Vec<Vec<u32>> = Vec::new();
+        for &t in &toks {
+            fwd.forward_token(t, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+            per_step.push(logits.iter().map(|v| v.to_bits()).collect());
         }
-        let got: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
-        assert_eq!(got, per_step[k - 1], "prefix length {k}");
-        assert_eq!(c2.len(), k);
+        // Fresh prefills of each prefix (logits only at the final token)
+        // must land on the same bits: requesting logits mid-stream does
+        // not perturb the cache, and the cache replays exactly.
+        for k in [1usize, 3, 6] {
+            let mut c2 = fwd.new_cache();
+            let mut s2 = fwd.new_scratch();
+            for (j, &t) in toks[..k].iter().enumerate() {
+                let want = if j + 1 == k { Some(&mut logits[..]) } else { None };
+                fwd.forward_token(t, &mut c2, &mut s2, want).unwrap();
+            }
+            let got: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, per_step[k - 1], "{model}: prefix length {k}");
+            assert_eq!(c2.len(), k);
+        }
     }
 }
 
 #[test]
 fn attention_state_makes_positions_distinct() {
-    let fwd = forward("q4_k_m", 1);
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 1);
+        let mut cache = fwd.new_cache();
+        let mut scratch = fwd.new_scratch();
+        let mut first = vec![0f32; fwd.vocab()];
+        let mut second = vec![0f32; fwd.vocab()];
+        fwd.forward_token(42, &mut cache, &mut scratch, Some(&mut first)).unwrap();
+        fwd.forward_token(42, &mut cache, &mut scratch, Some(&mut second)).unwrap();
+        assert_ne!(
+            bits(&[first]),
+            bits(&[second]),
+            "{model}: same token at positions 0 and 1 must see different attention state"
+        );
+    }
+}
+
+/// The scratch-reuse lock: a scratch recycled across every token (the
+/// serving configuration) produces the same bits as a freshly allocated
+/// scratch per token — i.e. no intermediate leaks across steps. The
+/// committed moe goldens additionally pin that the scratch refactor
+/// changed nothing relative to the PR-4 allocate-per-call code.
+#[test]
+fn fresh_and_reused_scratch_produce_identical_logits() {
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 1);
+        let toks = [3i32, 150, 42, 509, 8];
+        let mut reused = fwd.new_scratch();
+        let mut cache_a = fwd.new_cache();
+        let mut cache_b = fwd.new_cache();
+        let mut la = vec![0f32; fwd.vocab()];
+        let mut lb = vec![0f32; fwd.vocab()];
+        for &t in &toks {
+            fwd.forward_token(t, &mut cache_a, &mut reused, Some(&mut la)).unwrap();
+            let mut fresh = fwd.new_scratch();
+            fwd.forward_token(t, &mut cache_b, &mut fresh, Some(&mut lb)).unwrap();
+            assert_eq!(
+                la.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                lb.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{model}: reused scratch diverged at token {t}"
+            );
+        }
+    }
+}
+
+/// The acceptance lock for the per-token allocation defect: after the
+/// cache's lazy KV buffer exists, a decoded token touches the heap
+/// exactly zero times — for both architectures, logits included.
+#[test]
+fn forward_token_decode_is_allocation_free() {
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 1);
+        let mut cache = fwd.new_cache();
+        let mut scratch = fwd.new_scratch();
+        let mut logits = vec![0f32; fwd.vocab()];
+        // Warm up: the first token forces the cache's lazy allocation
+        // (and the dispatch arm's one-time env lookup).
+        fwd.forward_token(1, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        let before = thread_allocs();
+        for t in [17i32, 300, 42] {
+            fwd.forward_token(t, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        }
+        let allocs = thread_allocs() - before;
+        assert_eq!(allocs, 0, "{model}: decode made {allocs} heap allocations in 3 tokens");
+    }
+}
+
+#[test]
+fn untouched_caches_never_allocate() {
+    let fwd = forward("tiny-dense", "q4_k_m", 1);
+    let cache = fwd.new_cache();
+    assert!(!cache.is_allocated(), "fresh cache must not allocate eagerly");
+    drop(cache);
+    // And the first token allocates exactly once (the KV buffer).
     let mut cache = fwd.new_cache();
-    let mut first = vec![0f32; fwd.vocab()];
-    let mut second = vec![0f32; fwd.vocab()];
-    fwd.forward_token(42, &mut cache, Some(&mut first)).unwrap();
-    fwd.forward_token(42, &mut cache, Some(&mut second)).unwrap();
-    assert_ne!(
-        bits(&[first]),
-        bits(&[second]),
-        "same token at positions 0 and 1 must see different attention state"
-    );
+    let mut scratch = fwd.new_scratch();
+    fwd.forward_token(1, &mut cache, &mut scratch, None).unwrap();
+    assert!(cache.is_allocated());
 }
 
 // --- the independent f64 reference forward -------------------------------
@@ -217,10 +363,11 @@ impl RefForward<'_> {
         x.iter().zip(g).map(|(&v, &gv)| v * s * gv).collect()
     }
 
-    fn rope(&self, x: &mut [f64], pos: usize) {
-        let d = self.cfg.qk_rope_head_dim as f64;
+    /// Rotate consecutive pairs with `θ_i = rope_base^(−2i/d)` — `d` is
+    /// the rotated span (rope head dim for MLA, full head dim for GQA).
+    fn rope(&self, x: &mut [f64], pos: usize, d: usize) {
         for i in 0..x.len() / 2 {
-            let ang = pos as f64 * 10000f64.powf(-(2 * i) as f64 / d);
+            let ang = pos as f64 * self.cfg.rope_base.powf(-(2 * i) as f64 / d as f64);
             let (s, c) = ang.sin_cos();
             let (a, b) = (x[2 * i], x[2 * i + 1]);
             x[2 * i] = a * c - b * s;
@@ -263,12 +410,104 @@ impl RefForward<'_> {
         self.matvec((&ds, &dv), &a)
     }
 
+    /// One layer of MLA attention over the per-layer latent cache.
+    fn attention_mla(
+        &self,
+        li: usize,
+        xn: &[f64],
+        cache: &mut Vec<Vec<f64>>,
+        pos: usize,
+    ) -> Vec<f64> {
+        let cfg = &self.cfg;
+        let (nope, vh) = (cfg.qk_nope_head_dim, cfg.v_head_dim);
+        let (qk_head, kv_rank) = (cfg.qk_head_dim(), cfg.kv_lora_rank);
+        let rope_d = cfg.qk_rope_head_dim;
+        let q_a = self.matvec(self.blk(li, "attn_q_a"), xn);
+        let q_an = self.norm(&q_a, self.blk(li, "attn_q_a_norm").1);
+        let q = self.matvec(self.blk(li, "attn_q_b"), &q_an);
+        let kv_a = self.matvec(self.blk(li, "attn_kv_a_mqa"), xn);
+        let mut row = self.norm(&kv_a[..kv_rank], self.blk(li, "attn_kv_a_norm").1);
+        let mut k_rope = kv_a[kv_rank..].to_vec();
+        self.rope(&mut k_rope, pos, rope_d);
+        row.extend_from_slice(&k_rope);
+        cache.push(row);
+        let ctx = pos + 1;
+        let kvb: Vec<Vec<f64>> = (0..ctx)
+            .map(|p| self.matvec(self.blk(li, "attn_kv_b"), &cache[p][..kv_rank]))
+            .collect();
+        let mut heads = vec![0f64; cfg.n_heads * vh];
+        for hd in 0..cfg.n_heads {
+            let mut qh = q[hd * qk_head..(hd + 1) * qk_head].to_vec();
+            let (q_nope, q_rope) = qh.split_at_mut(nope);
+            self.rope(q_rope, pos, rope_d);
+            let mut sc: Vec<f64> = (0..ctx)
+                .map(|p| {
+                    let kn = &kvb[p][hd * (nope + vh)..hd * (nope + vh) + nope];
+                    let kr = &cache[p][kv_rank..];
+                    let s = q_nope.iter().zip(kn).map(|(&a, &b)| a * b).sum::<f64>()
+                        + q_rope.iter().zip(kr).map(|(&a, &b)| a * b).sum::<f64>();
+                    s / (qk_head as f64).sqrt()
+                })
+                .collect();
+            self.softmax(&mut sc);
+            for (p, &w) in sc.iter().enumerate() {
+                let v = &kvb[p][hd * (nope + vh) + nope..hd * (nope + vh) + nope + vh];
+                for (o, &vv) in heads[hd * vh..(hd + 1) * vh].iter_mut().zip(v) {
+                    *o += w * vv;
+                }
+            }
+        }
+        self.matvec(self.blk(li, "attn_output"), &heads)
+    }
+
+    /// One layer of grouped-query attention over a conventional
+    /// per-head K/V cache (rows of `[post-RoPE K | V]`).
+    fn attention_gqa(
+        &self,
+        li: usize,
+        xn: &[f64],
+        cache: &mut Vec<Vec<f64>>,
+        pos: usize,
+    ) -> Vec<f64> {
+        let cfg = &self.cfg;
+        let hd = cfg.head_dim;
+        let kd = cfg.n_kv_heads * hd;
+        let group = cfg.n_heads / cfg.n_kv_heads;
+        let q = self.matvec(self.blk(li, "attn_q"), xn);
+        let mut k = self.matvec(self.blk(li, "attn_k"), xn);
+        let v = self.matvec(self.blk(li, "attn_v"), xn);
+        for kh in 0..cfg.n_kv_heads {
+            self.rope(&mut k[kh * hd..(kh + 1) * hd], pos, hd);
+        }
+        k.extend_from_slice(&v);
+        cache.push(k);
+        let ctx = pos + 1;
+        let mut heads = vec![0f64; cfg.n_heads * hd];
+        for head in 0..cfg.n_heads {
+            let mut qh = q[head * hd..(head + 1) * hd].to_vec();
+            self.rope(&mut qh, pos, hd);
+            let kh = head / group;
+            let mut sc: Vec<f64> = (0..ctx)
+                .map(|p| {
+                    let kr = &cache[p][kh * hd..(kh + 1) * hd];
+                    qh.iter().zip(kr).map(|(&a, &b)| a * b).sum::<f64>() / (hd as f64).sqrt()
+                })
+                .collect();
+            self.softmax(&mut sc);
+            for (p, &w) in sc.iter().enumerate() {
+                let vr = &cache[p][kd + kh * hd..kd + (kh + 1) * hd];
+                for (o, &vv) in heads[head * hd..(head + 1) * hd].iter_mut().zip(vr) {
+                    *o += w * vv;
+                }
+            }
+        }
+        self.matvec(self.blk(li, "attn_output"), &heads)
+    }
+
     /// Forward `tokens`, returning logits rows for every position at or
     /// past `want_from`.
     fn run(&self, tokens: &[i32], want_from: usize) -> Vec<Vec<f64>> {
         let cfg = &self.cfg;
-        let (nope, vh) = (cfg.qk_nope_head_dim, cfg.v_head_dim);
-        let (qk_head, kv_rank) = (cfg.qk_head_dim(), cfg.kv_lora_rank);
         let mut caches: Vec<Vec<Vec<f64>>> = vec![Vec::new(); cfg.n_layers];
         let mut rows = Vec::new();
         for (pos, &tok) in tokens.iter().enumerate() {
@@ -277,42 +516,10 @@ impl RefForward<'_> {
             let mut h: Vec<f64> = ev[t * es[1]..(t + 1) * es[1]].to_vec();
             for li in 0..cfg.n_layers {
                 let xn = self.norm(&h, self.blk(li, "attn_norm").1);
-                let q_a = self.matvec(self.blk(li, "attn_q_a"), &xn);
-                let q_an = self.norm(&q_a, self.blk(li, "attn_q_a_norm").1);
-                let q = self.matvec(self.blk(li, "attn_q_b"), &q_an);
-                let kv_a = self.matvec(self.blk(li, "attn_kv_a_mqa"), &xn);
-                let mut row = self.norm(&kv_a[..kv_rank], self.blk(li, "attn_kv_a_norm").1);
-                let mut k_rope = kv_a[kv_rank..].to_vec();
-                self.rope(&mut k_rope, pos);
-                row.extend_from_slice(&k_rope);
-                caches[li].push(row);
-                let ctx = pos + 1;
-                let kvb: Vec<Vec<f64>> = (0..ctx)
-                    .map(|p| self.matvec(self.blk(li, "attn_kv_b"), &caches[li][p][..kv_rank]))
-                    .collect();
-                let mut heads = vec![0f64; cfg.n_heads * vh];
-                for hd in 0..cfg.n_heads {
-                    let mut qh = q[hd * qk_head..(hd + 1) * qk_head].to_vec();
-                    let (q_nope, q_rope) = qh.split_at_mut(nope);
-                    self.rope(q_rope, pos);
-                    let mut sc: Vec<f64> = (0..ctx)
-                        .map(|p| {
-                            let kn = &kvb[p][hd * (nope + vh)..hd * (nope + vh) + nope];
-                            let kr = &caches[li][p][kv_rank..];
-                            let s = q_nope.iter().zip(kn).map(|(&a, &b)| a * b).sum::<f64>()
-                                + q_rope.iter().zip(kr).map(|(&a, &b)| a * b).sum::<f64>();
-                            s / (qk_head as f64).sqrt()
-                        })
-                        .collect();
-                    self.softmax(&mut sc);
-                    for (p, &w) in sc.iter().enumerate() {
-                        let v = &kvb[p][hd * (nope + vh) + nope..hd * (nope + vh) + nope + vh];
-                        for (o, &vv) in heads[hd * vh..(hd + 1) * vh].iter_mut().zip(v) {
-                            *o += w * vv;
-                        }
-                    }
-                }
-                let attn = self.matvec(self.blk(li, "attn_output"), &heads);
+                let attn = match cfg.kind {
+                    ModelKind::MlaMoe => self.attention_mla(li, &xn, &mut caches[li], pos),
+                    ModelKind::DenseGqa => self.attention_gqa(li, &xn, &mut caches[li], pos),
+                };
                 for (hv, av) in h.iter_mut().zip(&attn) {
                     *hv += av;
                 }
@@ -361,49 +568,54 @@ fn rel_l2(a: &[f32], b: &[f64]) -> f64 {
     (num / den.max(1e-30)).sqrt()
 }
 
-/// The differential lock: the engine's quantized forward vs the f64
-/// reference on the same decoded weights (arithmetic-order differences
-/// only — measured ~2e-7) and vs the reference on the f32 source
-/// weights (quantization error — measured rel-L2 ≈ 0.11 for DQ3_K_M,
-/// ≈ 0.12 for Q4_K_M on this fixture; bounded per scheme).
+/// The differential lock, for both model kinds: the engine's quantized
+/// forward vs the f64 reference on the same decoded weights
+/// (arithmetic-order differences only — measured ~2e-7) and vs the
+/// reference on the f32 source weights (quantization error — measured
+/// rel-L2 ≈ 0.11–0.13 on these fixtures; bounded per scheme).
 #[test]
 fn quantized_forward_tracks_f32_reference_within_per_format_tolerance() {
-    let src_weights = decode_all(&golden_src());
-    for (scheme, qtol) in [("dq3_k_m", 0.35), ("q4_k_m", 0.35)] {
-        let fwd = forward(scheme, 1);
-        let rows = run_script(&fwd);
-        // The exact token sequence the engine ran (prompt + its greedy
-        // choices), replayed through the references.
-        let mut toks: Vec<i32> = PROMPT.to_vec();
-        for r in &rows[..DECODE_STEPS] {
-            toks.push(argmax(r));
-        }
-        let want_from = PROMPT.len() - 1;
+    for model in MODELS {
+        let cfg = ModelConfig::by_name(model).unwrap();
+        let src_weights = decode_all(&golden_src(model));
+        for (scheme, qtol) in [("dq3_k_m", 0.35), ("q4_k_m", 0.35)] {
+            let fwd = forward(model, scheme, 1);
+            let rows = run_script(&fwd);
+            // The exact token sequence the engine ran (prompt + its
+            // greedy choices), replayed through the references.
+            let mut toks: Vec<i32> = PROMPT.to_vec();
+            for r in &rows[..DECODE_STEPS] {
+                toks.push(argmax(r));
+            }
+            let want_from = PROMPT.len() - 1;
 
-        let qc = Container::from_bytes(qbytes(scheme).to_vec()).unwrap();
-        let q_weights = decode_all(&qc);
-        let same = RefForward { w: &q_weights, cfg: ModelConfig::tiny_moe() }
-            .run(&toks, want_from);
-        assert_eq!(same.len(), rows.len());
-        for (i, (got, want)) in rows.iter().zip(&same).enumerate() {
-            let d = rel_l2(got, want);
-            assert!(d < 1e-4, "{scheme} row {i}: engine vs same-weights f64 reference {d:.2e}");
-        }
+            let qc = Container::from_bytes(qbytes(model, scheme).to_vec()).unwrap();
+            let q_weights = decode_all(&qc);
+            let same = RefForward { w: &q_weights, cfg: cfg.clone() }.run(&toks, want_from);
+            assert_eq!(same.len(), rows.len());
+            for (i, (got, want)) in rows.iter().zip(&same).enumerate() {
+                let d = rel_l2(got, want);
+                assert!(
+                    d < 1e-4,
+                    "{model}/{scheme} row {i}: engine vs same-weights f64 reference {d:.2e}"
+                );
+            }
 
-        let srcref = RefForward { w: &src_weights, cfg: ModelConfig::tiny_moe() }
-            .run(&toks, want_from);
-        let worst = rows
-            .iter()
-            .zip(&srcref)
-            .map(|(got, want)| rel_l2(got, want))
-            .fold(0.0f64, f64::max);
-        assert!(
-            worst < qtol,
-            "{scheme}: quantized logits drift {worst:.3} exceeds per-scheme tolerance {qtol}"
-        );
-        assert!(
-            worst > 1e-4,
-            "{scheme}: quantization should measurably perturb logits (got {worst:.2e})"
-        );
+            let srcref = RefForward { w: &src_weights, cfg: cfg.clone() }.run(&toks, want_from);
+            let worst = rows
+                .iter()
+                .zip(&srcref)
+                .map(|(got, want)| rel_l2(got, want))
+                .fold(0.0f64, f64::max);
+            assert!(
+                worst < qtol,
+                "{model}/{scheme}: quantized logits drift {worst:.3} exceeds tolerance {qtol}"
+            );
+            assert!(
+                worst > 1e-4,
+                "{model}/{scheme}: quantization should measurably perturb logits \
+                 (got {worst:.2e})"
+            );
+        }
     }
 }
