@@ -21,7 +21,10 @@
 //! MLA+MoE tiny-moe series plus, since PR 5, a tiny-dense (GQA,
 //! Table 5) series — serial vs row-parallel matvecs, with per-phase
 //! heap-allocation counts (prefill pays the lazy KV buffer; decode
-//! must report 0 allocations per token).
+//! must report 0 allocations per token). Since PR 6 the forward
+//! section also measures **panel prefill**: a 64-token prompt through
+//! the quantized-GEMM `forward_tokens` pass vs the per-token loop,
+//! with the speedup ratio in the summary (`prefill_*_panel_speedup`).
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::model::ModelConfig;
@@ -604,6 +607,65 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- panel prefill (PR 6): a 64-token prompt pushed through the
+    // quantized-GEMM panel pass (`forward_tokens`) vs the per-token
+    // baseline loop, per model kind and scheme, both in the serial
+    // matvec mode so the comparison isolates decode-once panel reuse.
+    // The acceptance bar is ≥3× prefill tokens/s; the two paths are
+    // bit-identical (locked by tests/native_forward.rs), so the speedup
+    // is pure arithmetic reuse, not a numerics trade.
+    println!("\n# panel prefill: 64-token prompt, GEMM panel vs per-token loop\n");
+    let prefill_len = 64usize;
+    let mut rng_p = Pcg::new(0x6E64);
+    let long_prompt: Vec<i32> =
+        (0..prefill_len).map(|_| (rng_p.next_u64() % 512) as i32).collect();
+    for (model_tag, model_src) in [("", &src), ("tiny_dense/", &dense_src)] {
+        for scheme_name in ["dq3_k_m", "q4_k_m"] {
+            let qbytes =
+                quantize_container_with(model_src, &builtin::scheme(scheme_name)?, None, cores)?
+                    .to_bytes();
+            let fwd = ForwardPass::new(Container::from_bytes(qbytes)?, 1, prefill_len + 8)?;
+            let key = |suffix: &str| {
+                format!("prefill_{}{scheme_name}_{suffix}", model_tag.replace('/', "_"))
+            };
+            let mut logits = vec![0f32; fwd.vocab()];
+            let mut scratch = fwd.new_scratch();
+            let token_loop = Bench::quick().throughput_items(prefill_len as u64).run(
+                &format!("prefill-token-loop/{model_tag}{scheme_name}"),
+                || {
+                    let mut cache = fwd.new_cache();
+                    for (j, &t) in long_prompt.iter().enumerate() {
+                        let want =
+                            if j + 1 == prefill_len { Some(&mut logits[..]) } else { None };
+                        fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
+                    }
+                    logits[0]
+                },
+            );
+            let panel = Bench::quick().throughput_items(prefill_len as u64).run(
+                &format!("prefill-panel/{model_tag}{scheme_name}"),
+                || {
+                    let mut cache = fwd.new_cache();
+                    fwd.forward_tokens(&long_prompt, &mut cache, &mut scratch, Some(&mut logits))
+                        .unwrap();
+                    logits[0]
+                },
+            );
+            let tps_loop = prefill_len as f64 / (token_loop.median_ns / 1e9);
+            let tps_panel = prefill_len as f64 / (panel.median_ns / 1e9);
+            let speedup = token_loop.median_ns / panel.median_ns;
+            println!(
+                "prefill {model_tag}{scheme_name:<8}: token loop {tps_loop:>8.1} tok/s → \
+                 panel {tps_panel:>8.1} tok/s  ({speedup:.2}x)"
+            );
+            forward_report.push(result_json(&token_loop));
+            forward_report.push(result_json(&panel));
+            forward_summary.push((key("token_loop_tokens_per_s"), tps_loop));
+            forward_summary.push((key("panel_tokens_per_s"), tps_panel));
+            forward_summary.push((key("panel_speedup"), speedup));
+        }
+    }
+
     // Decode + forward measurements ride the main report too.
     report.extend(decode_report.iter().cloned());
     summary.extend(decode_summary.iter().cloned());
@@ -636,6 +698,7 @@ fn main() -> anyhow::Result<()> {
             ("cores", json::num(cores as f64)),
             ("prompt_tokens", json::num(prompt.len() as f64)),
             ("decode_tokens", json::num(decode_steps as f64)),
+            ("panel_prompt_tokens", json::num(prefill_len as f64)),
             ("results", json::Value::Arr(forward_report.clone())),
             ("summary", json::obj(fields)),
         ]);

@@ -11,6 +11,9 @@ pub struct Metrics {
     pub decode_calls: u64,
     /// Sequences prefetched across all prefill calls.
     pub prefill_slots: u64,
+    /// Prompt tokens pushed through prefill across all calls (the
+    /// denominator panel-prefill throughput is measured in).
+    pub prefill_tokens: u64,
     /// Live slot-steps across all decode calls (a decode step that only
     /// three of sixteen batch slots still need counts as 3, not 16).
     pub decode_slot_steps: u64,
@@ -48,11 +51,24 @@ fn summarize(xs: &[f64]) -> Summary {
 }
 
 impl Metrics {
-    /// Record a prefill call covering `n` live sequences.
-    pub fn record_prefill(&mut self, d: Duration, n: usize) {
+    /// Record a prefill call covering `n` live sequences totalling
+    /// `tokens` prompt tokens.
+    pub fn record_prefill(&mut self, d: Duration, n: usize, tokens: usize) {
         self.prefill_calls += 1;
         self.prefill_slots += n as u64;
+        self.prefill_tokens += tokens as u64;
         self.prefill_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    /// Prompt tokens per second of prefill time — the throughput the
+    /// panel-prefill GEMM path is measured in.
+    pub fn prefill_tokens_per_sec(&self) -> f64 {
+        let total_s: f64 = self.prefill_ms.iter().sum::<f64>() / 1e3;
+        if total_s == 0.0 {
+            0.0
+        } else {
+            self.prefill_tokens as f64 / total_s
+        }
     }
 
     /// Record a decode step that `n` slots were still live for.
@@ -118,15 +134,17 @@ impl Metrics {
         let w = self.wave_summary();
         format!(
             "waves {} | requests {} | gen tokens {}\n\
-             prefill: {} calls ({} seqs), median {:.1} ms, p90 {:.1} ms\n\
+             prefill: {} calls ({} seqs, {} prompt tokens), median {:.1} ms, p90 {:.1} ms\n\
              decode:  {} calls ({} live slot-steps), median {:.1} ms, p90 {:.1} ms\n\
              wave:    median {:.1} ms, p90 {:.1} ms\n\
-             throughput: {:.1} tok/s, {:.2} req/s, {:.1} live slot-steps/s",
+             throughput: {:.1} tok/s, {:.2} req/s, {:.1} live slot-steps/s, \
+             {:.1} prefill tok/s",
             self.waves,
             self.requests,
             self.generated_tokens,
             self.prefill_calls,
             self.prefill_slots,
+            self.prefill_tokens,
             p.median,
             p.p90,
             self.decode_calls,
@@ -137,7 +155,8 @@ impl Metrics {
             w.p90,
             self.tokens_per_sec(),
             self.requests_per_sec(),
-            self.decode_slot_steps_per_sec()
+            self.decode_slot_steps_per_sec(),
+            self.prefill_tokens_per_sec()
         )
     }
 }
@@ -162,9 +181,25 @@ mod tests {
     }
 
     #[test]
+    fn prefill_token_totals_and_throughput() {
+        let mut m = Metrics::default();
+        m.record_prefill(Duration::from_millis(10), 3, 24);
+        m.record_prefill(Duration::from_millis(10), 1, 8);
+        assert_eq!(m.prefill_calls, 2);
+        assert_eq!(m.prefill_slots, 4);
+        assert_eq!(m.prefill_tokens, 32, "prompt-token totals accumulate across calls");
+        // 32 tokens over 20 ms of prefill time → 1600 tok/s.
+        assert!((m.prefill_tokens_per_sec() - 1600.0).abs() < 1.0);
+        let report = m.report();
+        assert!(report.contains("32 prompt tokens"), "{report}");
+        assert!(report.contains("prefill tok/s"), "{report}");
+    }
+
+    #[test]
     fn empty_metrics_are_zero() {
         let m = Metrics::default();
         assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.prefill_tokens_per_sec(), 0.0);
         assert_eq!(m.wave_summary().median, 0.0);
     }
 }

@@ -151,9 +151,10 @@ impl Coordinator {
             tokens[i * t..i * t + req.prompt.len()].copy_from_slice(&req.prompt);
             lengths[i] = req.prompt.len() as i32;
         }
+        let prompt_tokens: usize = lengths[..n].iter().map(|&l| l as usize).sum();
         let prefill_start = Instant::now();
         let mut step = self.engine.run_prefill(&tokens, &lengths)?;
-        self.metrics.record_prefill(prefill_start.elapsed(), n);
+        self.metrics.record_prefill(prefill_start.elapsed(), n, prompt_tokens);
 
         let mut rngs: Vec<Pcg> = wave.iter().map(|r| Pcg::new(r.seed)).collect();
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); n];

@@ -483,11 +483,15 @@ fn cmd_sweep_error(args: &Args) -> Result<()> {
 /// payloads from a quantized checkpoint must be byte-identical at every
 /// thread count. Then the vec_dot identity: for every format the
 /// fused `vec_dot(q, x)` must equal the same-reduction-order lane dot
-/// over `decode_blocks(q)` bit-for-bit, on *both* dispatch arms (lane
-/// kernels and scalar reference). Finally the native forward pass: the
-/// full MLA+MoE step over encoded DQ3_K_M / Q4_K_M containers must
-/// yield bit-identical logits across matvec thread counts and across
-/// both pinned dispatch arms. Exits non-zero on any mismatch.
+/// over `decode_blocks(q)` bit-for-bit, on *every* dispatch arm
+/// available on this host (scalar reference, lane kernels, AVX2/NEON
+/// intrinsics). Then the GEMM identity: `vec_dot_mat` over a T-column
+/// panel must equal T independent `vec_dot` calls bit-for-bit, per
+/// arm and at 1 vs N row-parallel threads. Finally the native forward
+/// pass: the full MLA+MoE and dense-GQA steps over encoded DQ3_K_M /
+/// Q4_K_M containers must yield bit-identical logits across matvec
+/// thread counts, across every pinned dispatch arm, and across
+/// panel-GEMM vs per-token prefill. Exits non-zero on any mismatch.
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let threads = args.threads_flag(quant::parallel::max_threads())?;
     println!("# codec selfcheck: serial vs {threads} threads\n");
@@ -570,9 +574,14 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     }
 
     // vec_dot identity: the fused kernels must reproduce the canonical
-    // decode-then-lane-dot reduction exactly, on both dispatch arms and
-    // through the row-parallel matvec entry point.
+    // decode-then-lane-dot reduction exactly, on every available
+    // dispatch arm (scalar reference, lane kernels, AVX2/NEON
+    // intrinsics) and through the row-parallel matvec entry point.
     println!();
+    let arms: Vec<quant::kernels::DispatchArm> = quant::kernels::DispatchArm::ALL
+        .into_iter()
+        .filter(|a| a.available())
+        .collect();
     for fmt in QuantFormat::ALL {
         let rows = 4usize;
         let n = fmt.block_weights().max(64);
@@ -583,11 +592,11 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         let rb = fmt.row_bytes(n)?;
         let mut ok = true;
         let mut decoded = vec![0f32; n];
-        for fast in [false, true] {
+        for &arm in &arms {
             for row in packed.chunks_exact(rb) {
-                quant::kernels::decode_blocks_pinned(fmt, row, &mut decoded, fast);
+                quant::kernels::decode_blocks_arm(fmt, row, &mut decoded, arm);
                 let want = quant::kernels::dot_lanes(&decoded, &x);
-                let got = quant::kernels::vec_dot_pinned(fmt, row, &x, fast);
+                let got = quant::kernels::vec_dot_arm(fmt, row, &x, arm);
                 ok &= got.to_bits() == want.to_bits();
             }
         }
@@ -605,17 +614,66 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
             failures += 1;
         }
         println!(
-            "  vec_dot/{:<6} ({rows} rows × {n} weights, both arms): {}",
+            "  vec_dot/{:<6} ({rows} rows × {n} weights, {} arms): {}",
             fmt.name(),
+            arms.len(),
+            if ok { "identical" } else { "MISMATCH" }
+        );
+    }
+
+    // GEMM identity: the decode-once vec_dot_mat panel kernels must
+    // reproduce T independent single-column dots bit-for-bit — per
+    // format, on every available arm, and through the row-parallel
+    // GEMM entry point at 1 vs N threads.
+    println!();
+    for fmt in QuantFormat::ALL {
+        let (rows, t) = (4usize, 5usize);
+        let n = fmt.block_weights().max(64);
+        let mut rng = Pcg::new(0x6E33 ^ ((n as u64) << 4) ^ fmt.block_bytes() as u64);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let xs: Vec<f32> = (0..t * n).map(|_| rng.next_normal()).collect();
+        let packed = quant::quantize(fmt, &data, None)?;
+        let rb = fmt.row_bytes(n)?;
+        let mut ok = true;
+        let mut out = vec![0f32; t];
+        for &arm in &arms {
+            for row in packed.chunks_exact(rb) {
+                quant::kernels::vec_dot_mat_arm(fmt, row, &xs, n, &mut out, arm);
+                for (c, &got) in out.iter().enumerate() {
+                    let want = quant::kernels::vec_dot_arm(fmt, row, &xs[c * n..(c + 1) * n], arm);
+                    ok &= got.to_bits() == want.to_bits();
+                }
+            }
+        }
+        // Row-parallel GEMM at 1 vs N threads vs the per-column matvec.
+        let mut serial = vec![0f32; rows * t];
+        let mut par = vec![0f32; rows * t];
+        quant::vec_dot_rows_mat_with(fmt, &packed, &xs, n, t, &mut serial, 1)?;
+        quant::vec_dot_rows_mat_with(fmt, &packed, &xs, n, t, &mut par, threads)?;
+        ok &= serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits());
+        let mut col = vec![0f32; rows];
+        for c in 0..t {
+            quant::vec_dot_rows_with(fmt, &packed, &xs[c * n..(c + 1) * n], &mut col, 1)?;
+            for (r, &want) in col.iter().enumerate() {
+                ok &= serial[r * t + c].to_bits() == want.to_bits();
+            }
+        }
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "  vec_dot_mat/{:<6} ({rows} rows × {t} cols × {n} weights, {} arms): {}",
+            fmt.name(),
+            arms.len(),
             if ok { "identical" } else { "MISMATCH" }
         );
     }
 
     // Forward-pass identity: the full native forward — the MLA+MoE
     // step on tiny-moe AND the dense-GQA step on tiny-dense — must
-    // produce bit-identical logits across matvec thread counts AND
-    // across both pinned vec_dot dispatch arms (lane kernels vs scalar
-    // reference).
+    // produce bit-identical logits across matvec thread counts, across
+    // every available pinned dispatch arm, and across panel-GEMM vs
+    // per-token prefill.
     println!();
     {
         use dsq::runtime::forward::{ForwardPass, MatvecMode};
@@ -643,18 +701,33 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
                 };
                 let serial = run(MatvecMode::Threads(1))?;
                 let par = run(MatvecMode::Threads(threads))?;
-                let lanes = run(MatvecMode::Pinned(true))?;
-                let scalar = run(MatvecMode::Pinned(false))?;
-                let ok = serial == par && serial == lanes && serial == scalar;
+                let mut ok = serial == par;
+                for &arm in &arms {
+                    ok &= run(MatvecMode::Pinned(arm))? == serial;
+                }
+                // Panel prefill: the whole prompt in one GEMM pass must
+                // leave the same last-step logits and KV planes as the
+                // per-token loop above.
+                {
+                    let q = Container::from_bytes(qbytes.clone())?;
+                    let fwd = ForwardPass::new(q, 1, dsq::runtime::native::NATIVE_MAX_CTX)?;
+                    let mut cache = fwd.new_cache();
+                    let mut scratch = fwd.new_scratch();
+                    let mut logits = vec![0f32; fwd.vocab()];
+                    fwd.forward_tokens(&toks, &mut cache, &mut scratch, Some(&mut logits))?;
+                    let last = &serial[serial.len() - fwd.vocab()..];
+                    ok &= logits.iter().map(|v| v.to_bits()).eq(last.iter().copied());
+                }
                 if !ok {
                     failures += 1;
                 }
                 println!(
                     "  forward/{model_name}/{:<8} ({} steps × {} logits, 1 vs {threads} \
-                     threads + both arms): {}",
+                     threads + {} arms + panel prefill): {}",
                     scheme_name,
                     toks.len(),
                     serial.len() / toks.len(),
+                    arms.len(),
                     if ok { "identical" } else { "MISMATCH" }
                 );
             }
@@ -665,8 +738,9 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         bail!("selfcheck FAILED: {failures} mismatching case(s)");
     }
     println!(
-        "\nselfcheck passed: parallel encode, loader decode, fused vec_dot and \
-         the native forward pass are bit-identical to their serial/scalar references"
+        "\nselfcheck passed: parallel encode, loader decode, fused vec_dot, the \
+         vec_dot_mat GEMM panels and the native forward pass are bit-identical \
+         to their serial/scalar references on every available dispatch arm"
     );
     Ok(())
 }

@@ -19,6 +19,12 @@
 //!   (never touching main memory) and multiplied into eight persistent
 //!   f32 accumulator lanes. `vec_dot(q, x)` is defined to equal
 //!   [`dot_lanes`]`(decode_blocks(q), x)` **bit-for-bit**.
+//! - **GEMM `vec_dot_mat` kernels** (PR 6): one encoded row against a
+//!   `T`-column activation panel. Each quantized block is decoded
+//!   **once per [`MAT_COLS`] columns** instead of once per column and
+//!   accumulated against every column through the same lane
+//!   accumulator, so `out[c]` is bit-identical to `vec_dot(q, col_c)`
+//!   — the prefill path batches a whole prompt through this.
 //!
 //! ## The reduction-order contract
 //!
@@ -33,11 +39,27 @@
 //!
 //! ## Dispatch
 //!
-//! Mirroring the encode side's `DSQ_SCALAR_SEARCH`, the env var
-//! `DSQ_SCALAR_DECODE=1` pins the decode/vec_dot paths to the scalar
-//! reference arm (the format modules' plain loops). Default is the lane
-//! kernels. Both arms are pinned to the same golden fixtures in CI and
-//! cross-checked by `dsq selfcheck` and `tests/decode_kernels.rs`.
+//! Three [`DispatchArm`]s share the seams, all bit-identical:
+//!
+//! | arm      | what runs                                   | exists on            |
+//! |----------|---------------------------------------------|----------------------|
+//! | `scalar` | format modules' reference loops             | every target         |
+//! | `lanes`  | lane-chunked kernels (autovectorized)       | every target         |
+//! | `simd`   | hand-written AVX2 / NEON intrinsic bodies   | `x86_64`+AVX2, `aarch64` |
+//!
+//! The `simd` arm carries intrinsic decoders for the hot formats
+//! (`Q8_0`, `Q4_K`) plus the shared `vec_dot`/`vec_dot_mat` lane
+//! accumulator; formats without an intrinsic body fall back to the
+//! `lanes` decoder *within* the arm. Raw `F32`/`F16` rows use one code
+//! path on every arm (their "decode" is a plain byte load).
+//!
+//! Selection ([`active_arm`], read once per process): `DSQ_FORCE_ARM=
+//! {scalar,lanes,simd}` pins an arm (`simd` degrades to `lanes` where
+//! unsupported); otherwise `DSQ_SCALAR_DECODE=1` keeps its PR-3
+//! meaning (scalar reference), and the default is the fastest
+//! available arm. Every arm is pinned to the same golden fixtures in
+//! CI (the `DSQ_FORCE_ARM` matrix) and cross-checked by
+//! `dsq selfcheck` and `tests/decode_kernels.rs`.
 
 use super::simd::{hsum, LANES};
 use super::{codec, q2k, q3k, q4k, q5k, q6k, q8_0, raw, BlockCodec, QuantFormat, QK8_0, QK_K};
@@ -55,6 +77,81 @@ pub fn decode_kernels_enabled() -> bool {
             std::env::var("DSQ_SCALAR_DECODE").as_deref(),
             Ok("1") | Ok("true") | Ok("yes")
         )
+    })
+}
+
+/// One decode/`vec_dot` implementation family (see the module-level
+/// dispatch table). All arms are **bit-identical** — element `i` still
+/// lands in lane `i % LANES` and every f32 op happens in the same
+/// order — so the choice is purely a throughput knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchArm {
+    /// The format modules' plain reference loops.
+    Scalar,
+    /// Lane-chunked kernels the autovectorizer lowers.
+    Lanes,
+    /// Hand-written AVX2 (x86_64) / NEON (aarch64) intrinsic bodies.
+    Simd,
+}
+
+impl DispatchArm {
+    /// Every arm, reference-most first.
+    pub const ALL: [DispatchArm; 3] =
+        [DispatchArm::Scalar, DispatchArm::Lanes, DispatchArm::Simd];
+
+    /// The `DSQ_FORCE_ARM` spelling of this arm.
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchArm::Scalar => "scalar",
+            DispatchArm::Lanes => "lanes",
+            DispatchArm::Simd => "simd",
+        }
+    }
+
+    /// Whether this arm can run on the current host (`simd` needs AVX2
+    /// on x86_64; NEON is part of the aarch64 baseline). The identity
+    /// sweeps iterate `ALL.filter(available)`.
+    pub fn available(self) -> bool {
+        match self {
+            DispatchArm::Simd => simd_available(),
+            _ => true,
+        }
+    }
+}
+
+/// Whether the hand-written intrinsic arm exists *and* the CPU supports
+/// it. Selecting [`DispatchArm::Simd`] anywhere it does not degrades to
+/// the `lanes` kernels, so every entry point stays total.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// The runtime-selected dispatch arm, read once per process.
+/// `DSQ_FORCE_ARM={scalar,lanes,simd}` pins it (any other value is
+/// ignored; `simd` falls back to `lanes` where unavailable); otherwise
+/// `DSQ_SCALAR_DECODE=1` keeps its historical meaning (scalar), and
+/// the default is the fastest available arm.
+pub fn active_arm() -> DispatchArm {
+    static ARM: OnceLock<DispatchArm> = OnceLock::new();
+    *ARM.get_or_init(|| match std::env::var("DSQ_FORCE_ARM").as_deref() {
+        Ok("scalar") => DispatchArm::Scalar,
+        Ok("lanes") => DispatchArm::Lanes,
+        Ok("simd") if simd_available() => DispatchArm::Simd,
+        Ok("simd") => DispatchArm::Lanes,
+        _ if !decode_kernels_enabled() => DispatchArm::Scalar,
+        _ if simd_available() => DispatchArm::Simd,
+        _ => DispatchArm::Lanes,
     })
 }
 
@@ -207,58 +304,341 @@ fn fast_block_decoder(fmt: QuantFormat) -> fn(&[u8], &mut [f32]) {
     }
 }
 
-/// The fast batch decoder for one k-quant/`Q8_0` format. Caller
-/// guarantees whole blocks and exactly-sized buffers.
-fn decode_blocks_fast(fmt: QuantFormat, bytes: &[u8], out: &mut [f32]) {
-    let bb = fmt.block_bytes();
-    let bw = fmt.block_weights();
-    let decode = fast_block_decoder(fmt);
-    for (ob, xb) in bytes.chunks_exact(bb).zip(out.chunks_exact_mut(bw)) {
-        decode(ob, xb);
+// --- the hand-written SIMD arm (AVX2 / NEON) ---
+//
+// Every body below computes, per element, the exact same f32 expression
+// as its `lanes` counterpart — unpack/widen the integer codes, one
+// multiply, one add or subtract — so the outputs are bit-identical
+// (elementwise IEEE f32 ops have no ordering freedom). The shared
+// accumulator uses separate mul + add intrinsics, never an FMA: the
+// crate's reduction contract is FMA-free.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{q4k, LANES, QK8_0};
+    use crate::quant::scalar::get_f16;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller verified AVX2 support; `w`/`x` have equal lengths that
+    /// are a multiple of `LANES`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate(acc: &mut [f32; LANES], w: &[f32], x: &[f32]) {
+        let mut a = _mm256_loadu_ps(acc.as_ptr());
+        for (wc, xc) in w.chunks_exact(LANES).zip(x.chunks_exact(LANES)) {
+            let wv = _mm256_loadu_ps(wc.as_ptr());
+            let xv = _mm256_loadu_ps(xc.as_ptr());
+            // Separate mul + add — never `_mm256_fmadd_ps` — so the
+            // lane sums round exactly like the scalar loop.
+            a = _mm256_add_ps(a, _mm256_mul_ps(wv, xv));
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr(), a);
+    }
+
+    /// # Safety
+    /// Caller verified AVX2 support; `ob` is one whole `Q8_0` block
+    /// (34 bytes), `xb` exactly 32 elements.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_q8_0(ob: &[u8], xb: &mut [f32]) {
+        let d = _mm256_set1_ps(get_f16(ob, 0));
+        for k in (0..QK8_0).step_by(8) {
+            let q = _mm_loadl_epi64(ob.as_ptr().add(2 + k) as *const __m128i);
+            let w = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(q));
+            _mm256_storeu_ps(xb.as_mut_ptr().add(k), _mm256_mul_ps(d, w));
+        }
+    }
+
+    /// # Safety
+    /// Caller verified AVX2 support; `ob` is one whole `Q4_K`
+    /// super-block (144 bytes), `xb` exactly 256 elements.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_q4k(ob: &[u8], xb: &mut [f32]) {
+        let d = get_f16(ob, 0);
+        let dmin = get_f16(ob, 2);
+        let mask = _mm_set1_epi8(0x0F);
+        for j in 0..8 {
+            let (sc, mn) = q4k::unpack_scale_min_6(&ob[4..16], j);
+            let sd = _mm256_set1_ps(d * sc as f32);
+            let sm = _mm256_set1_ps(dmin * mn as f32);
+            let qs = _mm_loadu_si128(ob.as_ptr().add(16 + 16 * j) as *const __m128i);
+            let lo = _mm_and_si128(qs, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(qs), mask);
+            // Interleaving restores the scalar output order
+            // (lo0, hi0, lo1, hi1, …): codes 0..16, then 16..32.
+            let parts = [_mm_unpacklo_epi8(lo, hi), _mm_unpackhi_epi8(lo, hi)];
+            let out = xb.as_mut_ptr().add(32 * j);
+            for (h, &v) in parts.iter().enumerate() {
+                let f0 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(v));
+                let f1 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(v)));
+                let o = out.add(16 * h);
+                _mm256_storeu_ps(o, _mm256_sub_ps(_mm256_mul_ps(sd, f0), sm));
+                _mm256_storeu_ps(o.add(8), _mm256_sub_ps(_mm256_mul_ps(sd, f1), sm));
+            }
+        }
     }
 }
 
-/// Batch decode with the dispatch arm pinned (`fast == true` selects
-/// the lane kernels, `false` the format modules' scalar loops). The
-/// seam the cross-arm identity tests and `dsq selfcheck` use; both
-/// arms are bit-identical.
-pub fn decode_blocks_pinned(fmt: QuantFormat, bytes: &[u8], out: &mut [f32], fast: bool) {
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{q4k, LANES, QK8_0};
+    use crate::quant::scalar::get_f16;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// `w`/`x` have equal lengths that are a multiple of `LANES`
+    /// (NEON itself is baseline on aarch64).
+    pub unsafe fn accumulate(acc: &mut [f32; LANES], w: &[f32], x: &[f32]) {
+        let mut a0 = vld1q_f32(acc.as_ptr());
+        let mut a1 = vld1q_f32(acc.as_ptr().add(4));
+        for (wc, xc) in w.chunks_exact(LANES).zip(x.chunks_exact(LANES)) {
+            let w0 = vld1q_f32(wc.as_ptr());
+            let w1 = vld1q_f32(wc.as_ptr().add(4));
+            let x0 = vld1q_f32(xc.as_ptr());
+            let x1 = vld1q_f32(xc.as_ptr().add(4));
+            // Separate mul + add — never `vfmaq_f32` — so the lane
+            // sums round exactly like the scalar loop.
+            a0 = vaddq_f32(a0, vmulq_f32(w0, x0));
+            a1 = vaddq_f32(a1, vmulq_f32(w1, x1));
+        }
+        vst1q_f32(acc.as_mut_ptr(), a0);
+        vst1q_f32(acc.as_mut_ptr().add(4), a1);
+    }
+
+    /// # Safety
+    /// `ob` is one whole `Q8_0` block (34 bytes), `xb` exactly 32
+    /// elements.
+    pub unsafe fn block_q8_0(ob: &[u8], xb: &mut [f32]) {
+        let d = vdupq_n_f32(get_f16(ob, 0));
+        for k in (0..QK8_0).step_by(8) {
+            let q = vmovl_s8(vld1_s8(ob.as_ptr().add(2 + k) as *const i8));
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(q)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(q)));
+            vst1q_f32(xb.as_mut_ptr().add(k), vmulq_f32(d, lo));
+            vst1q_f32(xb.as_mut_ptr().add(k + 4), vmulq_f32(d, hi));
+        }
+    }
+
+    /// # Safety
+    /// `ob` is one whole `Q4_K` super-block (144 bytes), `xb` exactly
+    /// 256 elements.
+    pub unsafe fn block_q4k(ob: &[u8], xb: &mut [f32]) {
+        let d = get_f16(ob, 0);
+        let dmin = get_f16(ob, 2);
+        let mask = vdupq_n_u8(0x0F);
+        for j in 0..8 {
+            let (sc, mn) = q4k::unpack_scale_min_6(&ob[4..16], j);
+            let sd = vdupq_n_f32(d * sc as f32);
+            let sm = vdupq_n_f32(dmin * mn as f32);
+            let qs = vld1q_u8(ob.as_ptr().add(16 + 16 * j));
+            let lo = vandq_u8(qs, mask);
+            let hi = vshrq_n_u8::<4>(qs);
+            // Interleaving restores the scalar output order
+            // (lo0, hi0, lo1, hi1, …): codes 0..16, then 16..32.
+            let parts = [vzip1q_u8(lo, hi), vzip2q_u8(lo, hi)];
+            let out = xb.as_mut_ptr().add(32 * j);
+            for (h, &v) in parts.iter().enumerate() {
+                let halves = [vmovl_u8(vget_low_u8(v)), vmovl_u8(vget_high_u8(v))];
+                for (g, &w16) in halves.iter().enumerate() {
+                    let f0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(w16)));
+                    let f1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(w16)));
+                    let o = out.add(16 * h + 8 * g);
+                    vst1q_f32(o, vsubq_f32(vmulq_f32(sd, f0), sm));
+                    vst1q_f32(o.add(4), vsubq_f32(vmulq_f32(sd, f1), sm));
+                }
+            }
+        }
+    }
+}
+
+/// A per-block decoder and a lane accumulator — the two function
+/// pointers one dispatch arm plugs into the shared kernels.
+type BlockDecoder = fn(&[u8], &mut [f32]);
+type Accumulator = fn(&mut [f32; LANES], &[f32], &[f32]);
+
+// Safe wrappers over the intrinsic bodies: the `simd` arm is only ever
+// selected after [`simd_available`] returned true (enforced in
+// [`arm_kernels`] / [`decode_blocks_arm`]), which is exactly the
+// intrinsics' safety requirement; slice-shape preconditions match the
+// `lanes` kernels the callers already uphold.
+#[cfg(target_arch = "x86_64")]
+fn accumulate_simd(acc: &mut [f32; LANES], w: &[f32], x: &[f32]) {
+    unsafe { avx2::accumulate(acc, w, x) }
+}
+#[cfg(target_arch = "x86_64")]
+fn block_q8_0_simd(ob: &[u8], xb: &mut [f32]) {
+    unsafe { avx2::block_q8_0(ob, xb) }
+}
+#[cfg(target_arch = "x86_64")]
+fn block_q4k_simd(ob: &[u8], xb: &mut [f32]) {
+    unsafe { avx2::block_q4k(ob, xb) }
+}
+#[cfg(target_arch = "aarch64")]
+fn accumulate_simd(acc: &mut [f32; LANES], w: &[f32], x: &[f32]) {
+    unsafe { neon::accumulate(acc, w, x) }
+}
+#[cfg(target_arch = "aarch64")]
+fn block_q8_0_simd(ob: &[u8], xb: &mut [f32]) {
+    unsafe { neon::block_q8_0(ob, xb) }
+}
+#[cfg(target_arch = "aarch64")]
+fn block_q4k_simd(ob: &[u8], xb: &mut [f32]) {
+    unsafe { neon::block_q4k(ob, xb) }
+}
+
+/// The intrinsic per-block decoder for `fmt` on this target, if one
+/// exists. `None` falls back to the `lanes` decoder *inside* the
+/// `simd` arm (still bit-identical, just not hand-scheduled) — the
+/// per-arch coverage is documented in `quant/mod.rs`.
+fn simd_block_decoder(fmt: QuantFormat) -> Option<BlockDecoder> {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    {
+        match fmt {
+            QuantFormat::Q8_0 => Some(block_q8_0_simd),
+            QuantFormat::Q4K => Some(block_q4k_simd),
+            _ => None,
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = fmt;
+        None
+    }
+}
+
+/// The (block decoder, lane accumulator) pair for a *non-raw* format
+/// under one arm. `Scalar` never reaches here (callers route it to the
+/// format modules / [`vec_dot_ref`]); a `simd` request on a host
+/// without support degrades to the `lanes` pair, keeping every entry
+/// point total.
+fn arm_kernels(fmt: QuantFormat, arm: DispatchArm) -> (BlockDecoder, Accumulator) {
+    if matches!(arm, DispatchArm::Simd) && simd_available() {
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        {
+            let decode = simd_block_decoder(fmt).unwrap_or_else(|| fast_block_decoder(fmt));
+            return (decode, accumulate_simd);
+        }
+    }
+    (fast_block_decoder(fmt), accumulate)
+}
+
+/// The scalar-arm batch decode: the format modules' reference loops.
+fn decode_blocks_scalar(fmt: QuantFormat, bytes: &[u8], out: &mut [f32]) {
     match fmt {
-        // Raw formats have a single (already optimal) decode loop.
-        QuantFormat::F32 => raw::F32Codec.decode_blocks(bytes, out),
-        QuantFormat::F16 => raw::F16Codec.decode_blocks(bytes, out),
-        _ if fast => decode_blocks_fast(fmt, bytes, out),
         QuantFormat::Q8_0 => q8_0::dequantize(bytes, out),
         QuantFormat::Q6K => q6k::dequantize(bytes, out),
         QuantFormat::Q5K => q5k::dequantize(bytes, out),
         QuantFormat::Q4K => q4k::dequantize(bytes, out),
         QuantFormat::Q3K => q3k::dequantize(bytes, out),
         QuantFormat::Q2K => q2k::dequantize(bytes, out),
+        QuantFormat::F32 | QuantFormat::F16 => unreachable!("raw formats handled in dispatch"),
     }
+}
+
+/// Batch decode with an explicitly pinned [`DispatchArm`] — the seam
+/// the cross-arm identity tests, `dsq selfcheck` and the forward
+/// pass's pinned mode use. All arms are bit-identical; caller
+/// guarantees whole blocks and exactly-sized buffers.
+pub fn decode_blocks_arm(fmt: QuantFormat, bytes: &[u8], out: &mut [f32], arm: DispatchArm) {
+    match fmt {
+        // Raw formats have a single (already optimal) decode loop.
+        QuantFormat::F32 => raw::F32Codec.decode_blocks(bytes, out),
+        QuantFormat::F16 => raw::F16Codec.decode_blocks(bytes, out),
+        _ => match arm {
+            DispatchArm::Scalar => decode_blocks_scalar(fmt, bytes, out),
+            arm => {
+                let (decode, _) = arm_kernels(fmt, arm);
+                let bb = fmt.block_bytes();
+                let bw = fmt.block_weights();
+                for (ob, xb) in bytes.chunks_exact(bb).zip(out.chunks_exact_mut(bw)) {
+                    decode(ob, xb);
+                }
+            }
+        },
+    }
+}
+
+/// Batch decode with the dispatch arm pinned two-ways (`fast == true`
+/// selects the lane kernels, `false` the format modules' scalar
+/// loops). Kept as the PR-3 seam; [`decode_blocks_arm`] is the
+/// three-arm generalization.
+pub fn decode_blocks_pinned(fmt: QuantFormat, bytes: &[u8], out: &mut [f32], fast: bool) {
+    let arm = if fast { DispatchArm::Lanes } else { DispatchArm::Scalar };
+    decode_blocks_arm(fmt, bytes, out, arm);
 }
 
 /// Runtime-dispatched batch decode (the `BlockCodec::decode_blocks`
 /// body for every block format).
 pub(crate) fn decode_blocks_auto(fmt: QuantFormat, bytes: &[u8], out: &mut [f32]) {
-    decode_blocks_pinned(fmt, bytes, out, decode_kernels_enabled());
+    decode_blocks_arm(fmt, bytes, out, active_arm());
 }
 
-// --- fused vec_dot ---
+// --- fused vec_dot / vec_dot_mat ---
 
-/// Fused dot over the fast per-block decoders: each block is decoded
-/// into a stack buffer and multiplied straight into the lanes.
-fn vec_dot_fast(fmt: QuantFormat, bytes: &[u8], x: &[f32]) -> f32 {
+/// Fused dot over one (decoder, accumulator) kernel pair: each block
+/// is decoded into a stack buffer and multiplied straight into the
+/// lanes.
+fn vec_dot_kernel(
+    fmt: QuantFormat,
+    kern: (BlockDecoder, Accumulator),
+    bytes: &[u8],
+    x: &[f32],
+) -> f32 {
     let bb = fmt.block_bytes();
     let bw = fmt.block_weights();
-    let decode = fast_block_decoder(fmt);
+    let (decode, acc_fn) = kern;
     let mut acc = [0f32; LANES];
     let mut buf = [0f32; QK_K];
     for (ob, xs) in bytes.chunks_exact(bb).zip(x.chunks_exact(bw)) {
         let wb = &mut buf[..bw];
         decode(ob, wb);
-        accumulate(&mut acc, wb, xs);
+        acc_fn(&mut acc, wb, xs);
     }
     hsum(&acc)
+}
+
+/// Column-panel width of the GEMM kernel: each decoded block is
+/// amortized over up to this many activation columns while the
+/// per-column accumulators (`MAT_COLS × LANES` f32, 512 bytes) stay on
+/// the stack.
+pub const MAT_COLS: usize = 16;
+
+/// GEMM kernel for one encoded row against a `[t][n]` activation panel
+/// (`t = out.len()` contiguous columns of `n` weights each): decode
+/// each block **once per [`MAT_COLS`] columns** and run the canonical
+/// lane accumulation per column, so `out[c]` is bit-identical to the
+/// fused dot of `bytes` with column `c` alone — the accumulate calls
+/// any single column sees happen in exactly the per-column order.
+fn vec_dot_mat_kernel(
+    fmt: QuantFormat,
+    kern: (BlockDecoder, Accumulator),
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    let bb = fmt.block_bytes();
+    let bw = fmt.block_weights();
+    let (decode, acc_fn) = kern;
+    let t = out.len();
+    let mut buf = [0f32; QK_K];
+    let mut c0 = 0usize;
+    while c0 < t {
+        let tc = (t - c0).min(MAT_COLS);
+        let mut acc = [[0f32; LANES]; MAT_COLS];
+        for (bi, ob) in bytes.chunks_exact(bb).enumerate() {
+            let wb = &mut buf[..bw];
+            decode(ob, wb);
+            let off = bi * bw;
+            for (c, a) in acc[..tc].iter_mut().enumerate() {
+                let col = &xs[(c0 + c) * n + off..(c0 + c) * n + off + bw];
+                acc_fn(a, wb, col);
+            }
+        }
+        for (c, a) in acc[..tc].iter().enumerate() {
+            out[c0 + c] = hsum(a);
+        }
+        c0 += tc;
+    }
 }
 
 /// Fused dot for raw little-endian f32 payloads.
@@ -334,30 +714,95 @@ pub fn vec_dot_ref<C: BlockCodec + ?Sized>(c: &C, bytes: &[u8], x: &[f32]) -> f3
     hsum(&acc)
 }
 
-/// Fused dot with the dispatch arm pinned (see
-/// [`decode_blocks_pinned`]). Caller guarantees
-/// `bytes.len() == fmt.row_bytes(x.len())`.
-pub fn vec_dot_pinned(fmt: QuantFormat, bytes: &[u8], x: &[f32], fast: bool) -> f32 {
+/// Fused dot with an explicitly pinned [`DispatchArm`]. Caller
+/// guarantees `bytes.len() == fmt.row_bytes(x.len())`.
+pub fn vec_dot_arm(fmt: QuantFormat, bytes: &[u8], x: &[f32], arm: DispatchArm) -> f32 {
     match fmt {
-        // Raw formats: one code path for both arms (the "decode" is a
+        // Raw formats: one code path for every arm (the "decode" is a
         // plain byte load either way).
         QuantFormat::F32 => vec_dot_f32(bytes, x),
         QuantFormat::F16 => vec_dot_f16(bytes, x),
-        _ if fast => vec_dot_fast(fmt, bytes, x),
-        _ => vec_dot_ref(codec(fmt), bytes, x),
+        _ => match arm {
+            DispatchArm::Scalar => vec_dot_ref(codec(fmt), bytes, x),
+            arm => vec_dot_kernel(fmt, arm_kernels(fmt, arm), bytes, x),
+        },
     }
+}
+
+/// Fused dot with the dispatch arm pinned two-ways (see
+/// [`decode_blocks_pinned`]); [`vec_dot_arm`] is the three-arm
+/// generalization.
+pub fn vec_dot_pinned(fmt: QuantFormat, bytes: &[u8], x: &[f32], fast: bool) -> f32 {
+    let arm = if fast { DispatchArm::Lanes } else { DispatchArm::Scalar };
+    vec_dot_arm(fmt, bytes, x, arm)
 }
 
 /// Runtime-dispatched fused dot (the `BlockCodec::vec_dot` body for
 /// every block format).
 pub(crate) fn vec_dot_auto(fmt: QuantFormat, bytes: &[u8], x: &[f32]) -> f32 {
-    vec_dot_pinned(fmt, bytes, x, decode_kernels_enabled())
+    vec_dot_arm(fmt, bytes, x, active_arm())
+}
+
+/// GEMM row-panel dot with an explicitly pinned arm:
+/// `out[c] = vec_dot(bytes, xs[c·n .. (c+1)·n])` bit-for-bit for each
+/// of the `out.len()` columns, with each quantized block decoded once
+/// per [`MAT_COLS`] columns instead of once per column. The scalar arm
+/// and the raw formats run the per-column fused dots directly (nothing
+/// to amortize there). Caller guarantees
+/// `bytes.len() == fmt.row_bytes(n)` and `xs.len() == n · out.len()`.
+pub fn vec_dot_mat_arm(
+    fmt: QuantFormat,
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    out: &mut [f32],
+    arm: DispatchArm,
+) {
+    debug_assert_eq!(xs.len(), n * out.len());
+    if n == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match fmt {
+        QuantFormat::F32 => {
+            for (o, col) in out.iter_mut().zip(xs.chunks_exact(n)) {
+                *o = vec_dot_f32(bytes, col);
+            }
+        }
+        QuantFormat::F16 => {
+            for (o, col) in out.iter_mut().zip(xs.chunks_exact(n)) {
+                *o = vec_dot_f16(bytes, col);
+            }
+        }
+        _ => match arm {
+            DispatchArm::Scalar => {
+                let c = codec(fmt);
+                for (o, col) in out.iter_mut().zip(xs.chunks_exact(n)) {
+                    *o = vec_dot_ref(c, bytes, col);
+                }
+            }
+            arm => vec_dot_mat_kernel(fmt, arm_kernels(fmt, arm), bytes, xs, n, out),
+        },
+    }
+}
+
+/// Runtime-dispatched GEMM row-panel dot (the `BlockCodec::vec_dot_mat`
+/// body for every block format).
+pub(crate) fn vec_dot_mat_auto(
+    fmt: QuantFormat,
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    vec_dot_mat_arm(fmt, bytes, xs, n, out, active_arm());
 }
 
 /// Shared body of the per-format in-module identity tests (q2k … q8_0
-/// each pin their own seed): the fast and scalar decode arms are
-/// bit-identical, and both `vec_dot` arms equal the canonical
-/// decode-then-lane-dot reduction.
+/// each pin their own seed): every available decode arm is
+/// bit-identical to the scalar reference, every `vec_dot` arm equals
+/// the canonical decode-then-lane-dot reduction, and every
+/// `vec_dot_mat` arm equals the per-column `vec_dot` loop.
 #[cfg(test)]
 pub(crate) fn assert_decode_and_vec_dot_identity(fmt: QuantFormat, seed: u64) {
     let n = fmt.block_weights() * 3;
@@ -365,16 +810,27 @@ pub(crate) fn assert_decode_and_vec_dot_identity(fmt: QuantFormat, seed: u64) {
     let src: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
     let x: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
     let packed = super::quantize(fmt, &src, None).unwrap();
-    let mut fast = vec![0f32; n];
     let mut scalar = vec![0f32; n];
-    decode_blocks_pinned(fmt, &packed, &mut fast, true);
-    decode_blocks_pinned(fmt, &packed, &mut scalar, false);
+    decode_blocks_arm(fmt, &packed, &mut scalar, DispatchArm::Scalar);
     let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
-    assert_eq!(bits(&fast), bits(&scalar), "{fmt} decode arms");
     let want = dot_lanes(&scalar, &x);
-    for arm in [false, true] {
-        let got = vec_dot_pinned(fmt, &packed, &x, arm);
-        assert_eq!(got.to_bits(), want.to_bits(), "{fmt} vec_dot fast={arm}");
+    let t = 3usize;
+    let xs: Vec<f32> = (0..t * n).map(|_| rng.next_normal()).collect();
+    for arm in DispatchArm::ALL {
+        if !arm.available() {
+            continue;
+        }
+        let mut decoded = vec![0f32; n];
+        decode_blocks_arm(fmt, &packed, &mut decoded, arm);
+        assert_eq!(bits(&decoded), bits(&scalar), "{fmt} decode arm {}", arm.name());
+        let got = vec_dot_arm(fmt, &packed, &x, arm);
+        assert_eq!(got.to_bits(), want.to_bits(), "{fmt} vec_dot arm {}", arm.name());
+        let mut mat = vec![0f32; t];
+        vec_dot_mat_arm(fmt, &packed, &xs, n, &mut mat, arm);
+        for (c, &got) in mat.iter().enumerate() {
+            let want = vec_dot_arm(fmt, &packed, &xs[c * n..(c + 1) * n], DispatchArm::Scalar);
+            assert_eq!(got.to_bits(), want.to_bits(), "{fmt} vec_dot_mat[{c}] arm {}", arm.name());
+        }
     }
 }
 

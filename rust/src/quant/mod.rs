@@ -80,6 +80,40 @@
 //! and every `vec_dot_rows` thread count agree bit-for-bit — asserted
 //! by `tests/decode_kernels.rs`, the golden suite under both env arms
 //! in CI, and `dsq selfcheck` on the deployment host.
+//!
+//! **GEMM accumulation order:** [`BlockCodec::vec_dot_mat`] extends
+//! the same contract to a `T`-column activation panel. Each quantized
+//! block is decoded **once** and then accumulated against every
+//! column, but per output element the accumulation sequence is exactly
+//! the single-column one — blocks in order, element `i` into lane
+//! `i % LANES`, same `hsum` fold — so `out[c]` is bit-identical to
+//! `vec_dot(bytes, column_c)` for every column, and
+//! [`vec_dot_rows_mat`] is bit-identical to `T` independent
+//! [`vec_dot_rows`] calls at any thread count. The panel kernel only
+//! reorders *which column* is touched between block decodes, never the
+//! float operations within one output element.
+//!
+//! **Dispatch arms:** the decode/`vec_dot`/`vec_dot_mat` kernels come
+//! in up to three bit-identical arms, selected at process start by
+//! [`kernels::active_arm`]:
+//!
+//! | arm      | inner loop                          | availability |
+//! |----------|-------------------------------------|--------------|
+//! | `scalar` | format modules' reference loops     | always       |
+//! | `lanes`  | lane-chunked, branch-free kernels   | always       |
+//! | `simd`   | hand-written AVX2 / NEON intrinsics | `x86_64` with AVX2, any `aarch64` |
+//!
+//! `DSQ_FORCE_ARM={scalar,lanes,simd}` pins the arm (an unavailable
+//! `simd` request falls back to `lanes`); `DSQ_SCALAR_DECODE=1` is the
+//! back-compat spelling of `scalar`. The `simd` arm carries intrinsic
+//! decoders for `Q8_0` and `Q4_K` (the deployment-relevant formats)
+//! plus a shared intrinsic accumulator for every format; the remaining
+//! k-quants reuse the lane decoders inside the `simd` arm, and the raw
+//! `F32`/`F16` paths are arm-independent. The intrinsics use only
+//! separate multiply/add instructions (no FMA) in the canonical lane
+//! order, which is what keeps all arms bit-identical — proven per arm
+//! by `tests/decode_kernels.rs`, the `DSQ_FORCE_ARM` CI matrix over
+//! the golden suites, and `dsq selfcheck`.
 
 pub mod error;
 pub mod kernels;
@@ -296,6 +330,24 @@ pub trait BlockCodec: Sync {
             *o = self.vec_dot(row, x);
         }
     }
+
+    /// Fused dot products of one encoded row against a `T`-column
+    /// activation panel `xs` (token-major: column `c` is
+    /// `xs[c * n..(c + 1) * n]`, `out.len() == T`). Each block is
+    /// decoded once and accumulated against every column, but
+    /// `out[c]` is bit-identical to `vec_dot(bytes, column_c)` — see
+    /// the GEMM accumulation order in the module docs. The default is
+    /// the per-column reference loop; formats override with the
+    /// decode-once panel kernel.
+    fn vec_dot_mat(&self, bytes: &[u8], xs: &[f32], n: usize, out: &mut [f32]) {
+        if n == 0 {
+            out.fill(0.0);
+            return;
+        }
+        for (o, col) in out.iter_mut().zip(xs.chunks_exact(n)) {
+            *o = self.vec_dot(bytes, col);
+        }
+    }
 }
 
 /// Implement [`BlockCodec`] for a format module whose slice-level
@@ -334,6 +386,10 @@ macro_rules! impl_block_codec {
 
             fn vec_dot(&self, bytes: &[u8], x: &[f32]) -> f32 {
                 crate::quant::kernels::vec_dot_auto($fmt, bytes, x)
+            }
+
+            fn vec_dot_mat(&self, bytes: &[u8], xs: &[f32], n: usize, out: &mut [f32]) {
+                crate::quant::kernels::vec_dot_mat_auto($fmt, bytes, xs, n, out);
             }
         }
     };
@@ -477,6 +533,60 @@ pub fn vec_dot_rows_with(
         return Ok(());
     }
     parallel::vec_dot_rows_chunked(codec(fmt), bytes, x, out, rb, threads);
+    Ok(())
+}
+
+/// Quantized matrix × f32 activation panel (the prefill GEMM):
+/// `out[r * t + c]` = fused dot of row `r` of the row-major
+/// `fmt`-packed matrix with column `c` of the token-major panel `xs`
+/// (`xs.len() == t * n`, column `c` at `xs[c * n..(c + 1) * n]`;
+/// `out.len() == rows * t`, row-major). Each quantized block of a row
+/// is decoded once and accumulated against all `t` columns;
+/// bit-identical to `t` independent [`vec_dot_rows`] calls — see the
+/// GEMM accumulation order in the module docs.
+pub fn vec_dot_rows_mat(
+    fmt: QuantFormat,
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    out: &mut [f32],
+) -> Result<()> {
+    let threads = parallel::auto_threads(out.len().saturating_mul(n));
+    vec_dot_rows_mat_with(fmt, bytes, xs, n, t, out, threads)
+}
+
+/// [`vec_dot_rows_mat`] with an explicit worker-thread count (`1`
+/// forces the serial path; rows are split across threads, so the
+/// result is bit-identical at any count).
+pub fn vec_dot_rows_mat_with(
+    fmt: QuantFormat,
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    out: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let rb = fmt.row_bytes(n)?;
+    if xs.len() != t * n {
+        bail!("{fmt}: panel length {} does not match {t} columns × {n} weights", xs.len());
+    }
+    if t == 0 || out.len() % t != 0 {
+        bail!("{fmt}: output length {} is not a multiple of {t} columns", out.len());
+    }
+    let rows = out.len() / t;
+    if bytes.len() != rb * rows {
+        bail!(
+            "{fmt}: matrix byte length {} does not match {rows} rows × {rb} bytes",
+            bytes.len()
+        );
+    }
+    if rb == 0 {
+        out.fill(0.0);
+        return Ok(());
+    }
+    parallel::vec_dot_rows_mat_chunked(codec(fmt), bytes, xs, out, rb, n, t, threads);
     Ok(())
 }
 

@@ -207,6 +207,55 @@ pub(crate) fn vec_dot_rows_chunked(
     });
 }
 
+/// Compute the prefill GEMM `out[r * t + c] = vec_dot(row_r, col_c)`
+/// for a row-major quantized matrix against a `t`-column token-major
+/// activation panel `xs` (`xs.len() == t * n`), splitting rows across
+/// up to `threads` scoped threads. Each row's `t` outputs live in one
+/// contiguous row-major slot, so the split is a plain `split_at_mut`
+/// and the result is bit-identical to the serial loop. Caller passes
+/// the already validated row stride `rb` (non-zero) with
+/// `bytes.len() == (out.len() / t) * rb`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn vec_dot_rows_mat_chunked(
+    codec: &dyn BlockCodec,
+    bytes: &[u8],
+    xs: &[f32],
+    out: &mut [f32],
+    rb: usize,
+    n: usize,
+    t: usize,
+    threads: usize,
+) {
+    if t == 0 {
+        return;
+    }
+    let rows = out.len() / t;
+    let threads = threads.clamp(1, rows.max(1));
+    if threads == 1 {
+        for (row, o) in bytes.chunks_exact(rb).zip(out.chunks_exact_mut(t)) {
+            codec.vec_dot_mat(row, xs, n, o);
+        }
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut bytes = bytes;
+        let mut out: &mut [f32] = out;
+        while !out.is_empty() {
+            let nr = (out.len() / t).min(per);
+            let (bytes_head, bytes_tail) = bytes.split_at(nr * rb);
+            let (out_head, out_tail) = std::mem::take(&mut out).split_at_mut(nr * t);
+            bytes = bytes_tail;
+            out = out_tail;
+            scope.spawn(move || {
+                for (row, o) in bytes_head.chunks_exact(rb).zip(out_head.chunks_exact_mut(t)) {
+                    codec.vec_dot_mat(row, xs, n, o);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,5 +332,35 @@ mod tests {
         vec_dot_rows_chunked(c, &packed, &x, &mut par, rb, 3);
         let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&serial), bits(&par));
+    }
+
+    #[test]
+    fn chunked_vec_dot_rows_mat_identical_to_serial_and_per_column() {
+        // Row-parallel prefill GEMM: 7 rows × 5 columns over 3 threads
+        // (ragged split) must match the serial panel loop bit-for-bit,
+        // and every column must equal the independent vec_dot_rows run.
+        let fmt = QuantFormat::Q4K;
+        let n = fmt.block_weights() * 2;
+        let (rows, t) = (7usize, 5usize);
+        let mut rng = Pcg::new(61);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let xs: Vec<f32> = (0..t * n).map(|_| rng.next_normal()).collect();
+        let c = codec(fmt);
+        let mut packed = vec![0u8; fmt.row_bytes(rows * n).unwrap()];
+        encode_chunked(c, &data, None, &mut packed, 1);
+        let rb = fmt.row_bytes(n).unwrap();
+        let mut serial = vec![0f32; rows * t];
+        let mut par = vec![0f32; rows * t];
+        vec_dot_rows_mat_chunked(c, &packed, &xs, &mut serial, rb, n, t, 1);
+        vec_dot_rows_mat_chunked(c, &packed, &xs, &mut par, rb, n, t, 3);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&serial), bits(&par));
+        for col in 0..t {
+            let mut want = vec![0f32; rows];
+            vec_dot_rows_chunked(c, &packed, &xs[col * n..(col + 1) * n], &mut want, rb, 1);
+            for r in 0..rows {
+                assert_eq!(serial[r * t + col].to_bits(), want[r].to_bits(), "r={r} c={col}");
+            }
+        }
     }
 }

@@ -11,6 +11,10 @@
 //! [80..82)  f16 d
 //! [82..84)  f16 dmin
 //! ```
+//!
+//! Decode arms: scalar (this module) and lane-chunked; inside the
+//! `simd` dispatch arm the lane decoder is reused with the intrinsic
+//! accumulator (see the arm matrix in [`super`]).
 
 use super::scalar::{get_f16, make_qkx_quants, nearest_int, put_f16};
 use super::QK_K;

@@ -21,6 +21,10 @@
 //!
 //! (Note: high-bit byte index is `j % 4`, shift group is `j / 4`, which
 //! keeps the unpack a pure gather in the JAX mirror.)
+//!
+//! Decode arms: scalar (this module) and lane-chunked; inside the
+//! `simd` dispatch arm the lane decoder is reused with the intrinsic
+//! accumulator (see the arm matrix in [`super`]).
 
 use super::scalar::{get_f16, make_qx_quants, nearest_int, put_f16};
 use super::QK_K;

@@ -21,6 +21,11 @@
 //!
 //! i.e. `sc[j] = b[j] & 63`,
 //! `m[j] = (b[j] >> 6) | ((b[8 + j/2] >> (4·(j&1))) & 0x0F) << 2`.
+//!
+//! Decode arms: scalar (this module), lane-chunked, **and** a
+//! hand-written AVX2/NEON intrinsic decoder in [`super::kernels`] —
+//! `Q4_K` is the paper's single-machine serving format, so it gets a
+//! dedicated `simd`-arm body (see the arm matrix in [`super`]).
 
 use super::scalar::{get_f16, make_qkx_quants, nearest_int, put_f16};
 use super::QK_K;

@@ -11,6 +11,10 @@
 //! [48..176)  qs[128]   low 4 bits of c_i: nibble (i&1) of qs[i>>1]
 //! ```
 //! Codes `c_i ∈ [0, 31]`, `x_i = d · sc[j] · c_i − dmin · m[j]`.
+//!
+//! Decode arms: scalar (this module) and lane-chunked; inside the
+//! `simd` dispatch arm the lane decoder is reused with the intrinsic
+//! accumulator (see the arm matrix in [`super`]).
 
 use super::q4k::{dequantize_impl, quantize_impl};
 

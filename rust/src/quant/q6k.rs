@@ -12,6 +12,10 @@
 //! [192..208)  sc[16]     int8 sub-block scales
 //! [208..210)  f16 d
 //! ```
+//!
+//! Decode arms: scalar (this module) and lane-chunked; inside the
+//! `simd` dispatch arm the lane decoder is reused with the intrinsic
+//! accumulator (see the arm matrix in [`super`]).
 
 use super::scalar::{get_f16, make_qx_quants, nearest_int, put_f16};
 use super::QK_K;

@@ -9,6 +9,11 @@
 //! Like llama.cpp, `Q8_0` uses plain absmax scaling (no search): the
 //! format has enough resolution that the scale fit is not the
 //! bottleneck.
+//!
+//! Decode arms: scalar (this module), lane-chunked, **and** a
+//! hand-written AVX2/NEON intrinsic decoder in
+//! [`super::kernels`] — `Q8_0` is one of the two formats with a
+//! dedicated `simd`-arm body (see the arm matrix in [`super`]).
 
 use super::scalar::{get_f16, nearest_int, put_f16};
 use super::QK8_0;

@@ -21,6 +21,11 @@
 //! `tests/golden_vectors.rs` assert this; CI additionally runs the
 //! golden suite with `DSQ_SCALAR_SEARCH=1` to pin both dispatch arms to
 //! the same fixtures.
+//!
+//! The decode side goes one arm further: [`super::kernels`] adds
+//! hand-written AVX2/NEON intrinsic arms on top of the lane kernels
+//! (selected by `DSQ_FORCE_ARM`), all bound to the same `LANES`-wide
+//! reduction order — see the arm matrix in the [`super`] module docs.
 
 use std::sync::OnceLock;
 

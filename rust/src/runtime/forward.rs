@@ -4,9 +4,11 @@
 //!
 //! This is the computation `dsq serve|eval --native` runs: a complete
 //! decoder step — RMSNorm, attention, FFN, and the final unembedding —
-//! where **every matrix–vector product goes through the fused
-//! [`crate::quant::vec_dot_rows_with`] kernels on the container's
-//! packed payloads**. No weight matrix is ever materialized as a
+//! where **every matrix product goes through the fused
+//! [`crate::quant::vec_dot_rows_with`] /
+//! [`crate::quant::vec_dot_rows_mat_with`] kernels on the container's
+//! packed payloads** (single-column matvecs at decode, decode-once
+//! GEMM panels at prefill). No weight matrix is ever materialized as a
 //! resident f32 table; only the per-layer norm vectors (f32 in every
 //! scheme, a few KiB total) are decoded at load time. Two
 //! [`crate::model::ModelKind`]s are served:
@@ -60,9 +62,7 @@
 //! footprint `kv_bytes_per_token` accounts for both kinds):
 //!
 //! - **MLA**: the RMS-normed compressed latent plus the shared
-//!   post-RoPE rope key (`kv_lora_rank + qk_rope_head_dim` floats);
-//!   per-head keys/values are re-expanded from the latents through the
-//!   encoded `attn_kv_b` matvec each step.
+//!   post-RoPE rope key (`kv_lora_rank + qk_rope_head_dim` floats).
 //! - **GQA**: the conventional per-head state — post-RoPE keys followed
 //!   by values (`2 · n_kv_heads · head_dim` floats); query heads share
 //!   each KV head in groups of `n_heads / n_kv_heads`.
@@ -72,6 +72,46 @@
 //! is allocated **lazily on the first forwarded token**, so the unused
 //! batch slots a wave skips (length 0 at prefill, `pos < 0` at decode)
 //! never pay `n_layers × max_ctx × width` floats of idle memory.
+//!
+//! ## Absorbed MLA (PR 6)
+//!
+//! With absorption enabled (the default), the cache additionally keeps
+//! an **expanded-row plane**: the per-head `k_nope|v` rows that the
+//! encoded `attn_kv_b` matvec produces from each position's latent,
+//! computed **once when that position is appended** and read back by
+//! every later attention step. Decode therefore runs one `kv_b` matvec
+//! per step instead of re-expanding all `context` cached positions —
+//! the O(ctx) per-step re-expansion loop is gone. The trade is cache
+//! memory (`n_layers · max_ctx · n_heads · (nope + v)` extra floats);
+//! [`ForwardPass::set_mla_absorption`]`(false)` restores the
+//! memory-lean latent-only cache with eager re-expansion (the seam the
+//! equivalence tests pin against the goldens).
+//!
+//! Why not fold `kv_b` into the query/output projections algebraically
+//! (the textbook "absorbed MLA")? That rewrite reassociates the float
+//! sums — `(q·Wᵀ)·c` vs `q·(Wᵀ·c)` — and therefore cannot preserve
+//! the bit-exact determinism contract the golden fixtures pin. Caching
+//! the expansion instead runs the *same* matvec on the *same* inputs,
+//! just once per position instead of once per position per step, so
+//! the logits stay bit-identical while the per-step cost drops the
+//! same O(ctx) factor.
+//!
+//! ## Panel prefill (PR 6)
+//!
+//! [`ForwardPass::forward_tokens`] runs a whole prompt in one pass:
+//! every projection and FFN matvec is batched across the prompt's
+//! token dimension through the decode-once GEMM kernels
+//! ([`crate::quant::vec_dot_rows_mat_with`] /
+//! [`kernels::vec_dot_mat_arm`]), so each quantized weight tile is
+//! decoded **once per prompt** instead of once per token. RMSNorm,
+//! RoPE, attention scores/softmax and expert routing stay
+//! per-position; MoE layers gather the tokens routed to each expert
+//! and run one expert GEMM over them (ascending expert order, which is
+//! exactly each token's own combine order). Layer `l` processes every
+//! token before layer `l + 1`, but attention for token `j` only reads
+//! cache rows already written from bit-identical activations, so the
+//! cache and logits match the token loop bit-for-bit (asserted by
+//! `tests/native_forward.rs` and `dsq selfcheck`).
 //!
 //! ## RoPE
 //!
@@ -85,24 +125,29 @@
 //!
 //! ## Scratch reuse
 //!
-//! All per-token intermediates live in a caller-owned [`Scratch`]
-//! (created once per slot/wave via [`ForwardPass::new_scratch`]), so
-//! [`ForwardPass::forward_token`] performs **zero heap allocations per
-//! decoded token** — both architectures share the same allocation-free
-//! decode loop (asserted by a counting-allocator test in
-//! `tests/native_forward.rs` and reported by `benches/codec.rs`).
+//! All per-token and per-panel intermediates live in a caller-owned
+//! [`Scratch`] (created once per slot/wave via
+//! [`ForwardPass::new_scratch`]), so [`ForwardPass::forward_token`]
+//! performs **zero heap allocations per decoded token** and
+//! [`ForwardPass::forward_tokens`] none per prefilled prompt — both
+//! architectures share the same allocation-free loops (asserted by a
+//! counting-allocator test in `tests/native_forward.rs` and reported
+//! by `benches/codec.rs`).
 //!
 //! ## Determinism contract
 //!
 //! Identical to the PR-3 `vec_dot` contract, extended end to end: every
-//! dot product — quantized matvecs, attention scores, the RMSNorm sum
-//! of squares — reduces in the canonical 8-lane order
-//! ([`crate::quant::kernels::dot_lanes`]); every nonlinearity uses the
-//! deterministic [`crate::util::math`] kernels; softmaxes, weighted-sum
-//! folds and expert combines walk fixed sequential orders. Consequently
-//! the logits are **bit-identical** across matvec thread counts and
-//! across the `DSQ_SCALAR_DECODE` dispatch arms, and are mirrored
-//! bit-exactly by `python/tools/bless_goldens.py` (the committed
+//! dot product — quantized matvecs, the prefill GEMM panels, attention
+//! scores, the RMSNorm sum of squares — reduces in the canonical
+//! 8-lane order ([`crate::quant::kernels::dot_lanes`]); every
+//! nonlinearity uses the deterministic [`crate::util::math`] kernels;
+//! softmaxes, weighted-sum folds and expert combines walk fixed
+//! sequential orders. Consequently the logits are **bit-identical**
+//! across matvec thread counts, across panel vs token-loop prefill,
+//! across absorbed vs eager MLA, and across every `DSQ_FORCE_ARM`
+//! dispatch arm (scalar, lanes, AVX2/NEON simd — see the arm matrix in
+//! [`crate::quant`]), and are mirrored bit-exactly by
+//! `python/tools/bless_goldens.py` (the committed
 //! `rust/tests/golden/forward.*.fnv64` and
 //! `forward.tiny_dense.*.fnv64` checksums pin both sides).
 
@@ -126,10 +171,11 @@ pub enum MatvecMode {
     /// Row-parallel fused matvec over up to N threads, runtime-selected
     /// dispatch arm (the serving default; bit-identical for every N).
     Threads(usize),
-    /// Serial matvec with the dispatch arm pinned (`true` = lane
-    /// kernels, `false` = scalar reference) — the seam `dsq selfcheck`
-    /// and the arm-identity tests use.
-    Pinned(bool),
+    /// Serial matvec with the dispatch arm pinned
+    /// ([`kernels::DispatchArm`]: scalar reference, lane kernels, or
+    /// the AVX2/NEON intrinsics) — the seam `dsq selfcheck` and the
+    /// arm-identity tests use.
+    Pinned(kernels::DispatchArm),
 }
 
 /// Per-slot KV cache: `[n_layers][max_ctx][width]` f32, filled front to
@@ -143,15 +189,21 @@ pub enum MatvecMode {
 /// not `n_layers × max_ctx × width` floats.
 pub struct KvCache {
     data: Vec<f32>,
+    /// Absorbed-MLA expanded-row plane: per position the per-head
+    /// `k_nope|v` rows the `kv_b` matvec produces from the latent,
+    /// written once at append time. Empty when `xwidth == 0`
+    /// (GQA, or MLA with absorption disabled).
+    xdata: Vec<f32>,
     len: usize,
     width: usize,
+    xwidth: usize,
     max_ctx: usize,
     n_layers: usize,
 }
 
 impl KvCache {
-    fn new(n_layers: usize, width: usize, max_ctx: usize) -> Self {
-        KvCache { data: Vec::new(), len: 0, width, max_ctx, n_layers }
+    fn new(n_layers: usize, width: usize, xwidth: usize, max_ctx: usize) -> Self {
+        KvCache { data: Vec::new(), xdata: Vec::new(), len: 0, width, xwidth, max_ctx, n_layers }
     }
 
     /// Tokens cached so far (== the next token's position).
@@ -174,10 +226,13 @@ impl KvCache {
         !self.data.is_empty()
     }
 
-    /// Allocate the backing buffer on first use.
+    /// Allocate the backing buffer(s) on first use.
     fn ensure_allocated(&mut self) {
         if self.data.is_empty() {
             self.data = vec![0.0; self.n_layers * self.max_ctx * self.width];
+        }
+        if self.xwidth > 0 && self.xdata.is_empty() {
+            self.xdata = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
         }
     }
 
@@ -189,6 +244,32 @@ impl KvCache {
     fn row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
         let at = (layer * self.max_ctx + pos) * self.width;
         &mut self.data[at..at + self.width]
+    }
+
+    fn xrow(&self, layer: usize, pos: usize) -> &[f32] {
+        let at = (layer * self.max_ctx + pos) * self.xwidth;
+        &self.xdata[at..at + self.xwidth]
+    }
+
+    /// One position's latent row (read) together with its expanded row
+    /// (write) — the borrow split the append-time expansion needs.
+    fn row_and_xrow_mut(&mut self, layer: usize, pos: usize) -> (&[f32], &mut [f32]) {
+        let at = (layer * self.max_ctx + pos) * self.width;
+        let xat = (layer * self.max_ctx + pos) * self.xwidth;
+        (&self.data[at..at + self.width], &mut self.xdata[xat..xat + self.xwidth])
+    }
+
+    /// The raw cache plane (`[n_layers][max_ctx][width]`, zero-filled
+    /// past `len`) — the bit-identity tests compare prefill paths on
+    /// this directly.
+    pub fn raw_rows(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The raw absorbed-MLA expanded plane (empty unless absorption is
+    /// active) — same inspection seam as [`KvCache::raw_rows`].
+    pub fn raw_expanded(&self) -> &[f32] {
+        &self.xdata
     }
 }
 
@@ -311,6 +392,7 @@ pub struct Scratch {
     delta: Vec<f32>,
     attn: AttnScratch,
     ffn: FfnScratch,
+    panel: PanelScratch,
 }
 
 struct AttnScratch {
@@ -344,6 +426,52 @@ struct FfnScratch {
     idx: Vec<usize>,
 }
 
+/// Panel (multi-token) intermediates for
+/// [`ForwardPass::forward_tokens`]: token-major `[T][dim]` panels
+/// sized for `T = max_ctx`, plus the row-major GEMM staging buffer.
+/// Allocated once with the rest of the scratch, so panel prefill
+/// touches the heap zero times per prompt.
+struct PanelScratch {
+    /// Residual stream panel.
+    h: Vec<f32>,
+    /// Normed panel (attention/FFN input).
+    xn: Vec<f32>,
+    /// Attention/FFN output panel before the residual add.
+    delta: Vec<f32>,
+    /// Query projection panel.
+    q: Vec<f32>,
+    /// MLA: pre-norm query latent panel.
+    q_a: Vec<f32>,
+    /// MLA: RMS-normed query latent panel.
+    q_an: Vec<f32>,
+    /// MLA: joint (latent, rope key) panel; GQA: K projection panel.
+    kv: Vec<f32>,
+    /// GQA: V projection panel (MLA leaves it empty).
+    v: Vec<f32>,
+    /// Per-head attention output panel (input to `attn_output`).
+    heads_out: Vec<f32>,
+    /// Attention scores over the cached context, `max_ctx`.
+    scores: Vec<f32>,
+    /// SwiGLU gate panel (becomes `silu(g)·u` in place).
+    g: Vec<f32>,
+    /// SwiGLU up panel.
+    u: Vec<f32>,
+    /// MoE: router probability panel.
+    probs: Vec<f32>,
+    /// MoE: per-token selected experts, `[T][n_active]` flat.
+    sel: Vec<usize>,
+    /// MoE: per-token top-k probability normalizers.
+    z: Vec<f32>,
+    /// MoE: indices of the tokens routed to the current expert.
+    gather: Vec<usize>,
+    /// MoE: gathered activation columns for one expert's GEMM.
+    xg: Vec<f32>,
+    /// MoE: one expert's outputs over the gathered tokens.
+    y: Vec<f32>,
+    /// Row-major `[rows][T]` GEMM staging, transposed into the panels.
+    mat: Vec<f32>,
+}
+
 /// The forward-pass model over an opened (quantized or f32) container.
 pub struct ForwardPass {
     cfg: ModelConfig,
@@ -356,6 +484,7 @@ pub struct ForwardPass {
     rope: RopeTable,
     max_ctx: usize,
     mode: MatvecMode,
+    absorb_mla: bool,
 }
 
 /// Kind-specific config dims the forward pass depends on must be usable
@@ -511,6 +640,7 @@ impl ForwardPass {
             rope,
             max_ctx,
             mode: MatvecMode::Threads(threads.max(1)),
+            absorb_mla: true,
         })
     }
 
@@ -544,11 +674,28 @@ impl ForwardPass {
         self.mode = mode;
     }
 
+    /// Enable/disable MLA `kv_b` absorption (default: enabled).
+    /// Absorbed caches keep the per-head expanded `k_nope|v` rows,
+    /// written once at append time, dropping the O(context) per-step
+    /// re-expansion; disabling restores the memory-lean latent-only
+    /// cache with eager re-expansion — the seam the equivalence tests
+    /// use. Call **before** creating caches: the flag decides the
+    /// layout [`ForwardPass::new_cache`] builds. No-op for GQA models.
+    pub fn set_mla_absorption(&mut self, absorb: bool) {
+        self.absorb_mla = absorb;
+    }
+
     /// A fresh, empty per-slot cache bounded by this model's `max_ctx`.
     /// The backing buffer is allocated lazily on the first forwarded
     /// token, so idle batch slots stay (almost) free.
     pub fn new_cache(&self) -> KvCache {
-        KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), self.max_ctx)
+        let xwidth = match self.cfg.kind {
+            ModelKind::MlaMoe if self.absorb_mla => {
+                self.cfg.n_heads * (self.cfg.qk_nope_head_dim + self.cfg.v_head_dim)
+            }
+            _ => 0,
+        };
+        KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), xwidth, self.max_ctx)
     }
 
     /// A scratch sized for this model and context bound. One per slot
@@ -573,10 +720,25 @@ impl ForwardPass {
             .intermediate_size
             .max(cfg.moe_intermediate_size)
             .max(cfg.n_shared_experts * cfg.moe_intermediate_size);
+        let mc = self.max_ctx;
+        let hs = cfg.hidden_size;
+        // GQA projects V through its own panel; MLA leaves it empty.
+        let vp_len = match cfg.kind {
+            ModelKind::MlaMoe => 0,
+            ModelKind::DenseGqa => cfg.n_kv_heads * cfg.head_dim,
+        };
+        // Widest batched-GEMM output this model produces (the `mat`
+        // staging buffer holds one `[rows][T]` product at a time).
+        let max_rows = hs
+            .max(q_len)
+            .max(q_rank)
+            .max(cfg.kv_cache_width())
+            .max(inter_max)
+            .max(cfg.n_routed_experts);
         Scratch {
-            h: vec![0.0; cfg.hidden_size],
-            xn: vec![0.0; cfg.hidden_size],
-            delta: vec![0.0; cfg.hidden_size],
+            h: vec![0.0; hs],
+            xn: vec![0.0; hs],
+            delta: vec![0.0; hs],
             attn: AttnScratch {
                 q: vec![0.0; q_len],
                 q_a: vec![0.0; q_rank],
@@ -584,14 +746,35 @@ impl ForwardPass {
                 kv_a: vec![0.0; kv_a_len],
                 kvb: vec![0.0; kvb_len],
                 heads_out: vec![0.0; heads_len],
-                scores: vec![0.0; self.max_ctx],
+                scores: vec![0.0; mc],
             },
             ffn: FfnScratch {
                 g: vec![0.0; inter_max],
                 u: vec![0.0; inter_max],
-                y: vec![0.0; cfg.hidden_size],
+                y: vec![0.0; hs],
                 probs: vec![0.0; cfg.n_routed_experts],
                 idx: Vec::with_capacity(cfg.n_routed_experts),
+            },
+            panel: PanelScratch {
+                h: vec![0.0; mc * hs],
+                xn: vec![0.0; mc * hs],
+                delta: vec![0.0; mc * hs],
+                q: vec![0.0; mc * q_len],
+                q_a: vec![0.0; mc * q_rank],
+                q_an: vec![0.0; mc * q_rank],
+                kv: vec![0.0; mc * cfg.kv_cache_width()],
+                v: vec![0.0; mc * vp_len],
+                heads_out: vec![0.0; mc * heads_len],
+                scores: vec![0.0; mc],
+                g: vec![0.0; mc * inter_max],
+                u: vec![0.0; mc * inter_max],
+                probs: vec![0.0; mc * cfg.n_routed_experts],
+                sel: Vec::with_capacity(mc * cfg.n_active_experts),
+                z: vec![0.0; mc],
+                gather: Vec::with_capacity(mc),
+                xg: vec![0.0; mc * hs],
+                y: vec![0.0; mc * hs],
+                mat: vec![0.0; mc * max_rows],
             },
         }
     }
@@ -607,13 +790,13 @@ impl ForwardPass {
     ) -> Result<()> {
         match self.mode {
             MatvecMode::Threads(n) => quant::vec_dot_rows_with(fmt, bytes, x, out, n),
-            MatvecMode::Pinned(fast) => {
+            MatvecMode::Pinned(arm) => {
                 let rb = fmt.row_bytes(x.len())?;
                 if bytes.len() != rb * out.len() {
                     bail!("pinned matvec: {} bytes != {} rows × {rb}", bytes.len(), out.len());
                 }
                 for (o, row) in out.iter_mut().zip(bytes.chunks_exact(rb)) {
-                    *o = kernels::vec_dot_pinned(fmt, row, x, fast);
+                    *o = kernels::vec_dot_arm(fmt, row, x, arm);
                 }
                 Ok(())
             }
@@ -622,6 +805,66 @@ impl ForwardPass {
 
     fn matvec(&self, t: &TensorEntry, x: &[f32], out: &mut [f32]) -> Result<()> {
         self.matvec_bytes(t.format, self.ckpt.bytes(t), x, out)
+    }
+
+    /// Quantized GEMM over a token-major activation panel (`xs[c*n..]`
+    /// is column `c`), under the active [`MatvecMode`]: the kernel
+    /// fills the row-major `[rows][T]` staging buffer `mat` (that is
+    /// the layout the row-parallel split needs), which is then
+    /// transposed into the token-major `out` panel
+    /// (`out[c*rows + r] = row_r · col_c`). The transpose is a pure
+    /// permutation of finished f32 values, so every element is
+    /// bit-identical to the single-column matvec.
+    #[allow(clippy::too_many_arguments)]
+    fn matvec_mat_bytes(
+        &self,
+        fmt: QuantFormat,
+        bytes: &[u8],
+        xs: &[f32],
+        n: usize,
+        t: usize,
+        mat: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(out.len() % t, 0);
+        let rows = out.len() / t;
+        let m = &mut mat[..rows * t];
+        match self.mode {
+            MatvecMode::Threads(threads) => {
+                quant::vec_dot_rows_mat_with(fmt, bytes, xs, n, t, m, threads)?;
+            }
+            MatvecMode::Pinned(arm) => {
+                let rb = fmt.row_bytes(n)?;
+                if bytes.len() != rb * rows {
+                    bail!("pinned GEMM: {} bytes != {rows} rows × {rb}", bytes.len());
+                }
+                if rb == 0 {
+                    m.fill(0.0);
+                } else {
+                    for (row, o) in bytes.chunks_exact(rb).zip(m.chunks_exact_mut(t)) {
+                        kernels::vec_dot_mat_arm(fmt, row, xs, n, o, arm);
+                    }
+                }
+            }
+        }
+        for r in 0..rows {
+            for c in 0..t {
+                out[c * rows + r] = m[r * t + c];
+            }
+        }
+        Ok(())
+    }
+
+    fn matvec_mat(
+        &self,
+        e: &TensorEntry,
+        xs: &[f32],
+        n: usize,
+        t: usize,
+        mat: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.matvec_mat_bytes(e.format, self.ckpt.bytes(e), xs, n, t, mat, out)
     }
 
     /// The encoded rows of expert `e` inside a `[n_exp, out, in]`
@@ -665,6 +908,34 @@ impl ForwardPass {
         self.matvec_bytes(down.0, down.1, g, out)
     }
 
+    /// Panel SwiGLU: [`ForwardPass::mlp`] over a `t`-column token-major
+    /// panel, all three projections through the decode-once GEMM
+    /// kernels — bit-identical per column to the single-token path.
+    #[allow(clippy::too_many_arguments)]
+    fn mlp_mat(
+        &self,
+        gate: (QuantFormat, &[u8]),
+        up: (QuantFormat, &[u8]),
+        down: (QuantFormat, &[u8]),
+        inter: usize,
+        xs: &[f32],
+        n: usize,
+        t: usize,
+        mat: &mut [f32],
+        g_buf: &mut [f32],
+        u_buf: &mut [f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let g = &mut g_buf[..t * inter];
+        let u = &mut u_buf[..t * inter];
+        self.matvec_mat_bytes(gate.0, gate.1, xs, n, t, mat, g)?;
+        self.matvec_mat_bytes(up.0, up.1, xs, n, t, mat, u)?;
+        for (gv, &uv) in g.iter_mut().zip(&*u) {
+            *gv = math::silu(*gv) * uv;
+        }
+        self.matvec_mat_bytes(down.0, down.1, g, inter, t, mat, out)
+    }
+
     /// Attention for one layer at `pos` (appends this token's K/V state
     /// to the cache row first), dispatched by architecture family.
     #[allow(clippy::too_many_arguments)]
@@ -695,8 +966,11 @@ impl ForwardPass {
         }
     }
 
-    /// MLA attention: compressed-latent cache, per-step re-expansion of
-    /// the per-head keys/values through the encoded `kv_b` matvec.
+    /// MLA attention over the compressed-latent cache. Absorbed mode
+    /// (default) expands the new position's per-head keys/values once
+    /// into the cache's expanded plane; eager mode re-expands every
+    /// cached position per step through the same encoded `kv_b`
+    /// matvec (bit-identical either way — see the module docs).
     #[allow(clippy::too_many_arguments, clippy::type_complexity)]
     fn attention_mla(
         &self,
@@ -740,27 +1014,46 @@ impl ForwardPass {
             self.rope.apply(&mut row[kv_rank..], pos);
         }
 
-        // Re-expand per-head k_nope/v for every cached position from the
-        // compressed latents (the encoded kv_b matvec).
         let ctx = pos + 1;
         let kvb_w = cfg.n_heads * (nope + vh);
-        let kvb = &mut s.kvb[..ctx * kvb_w];
-        for p in 0..ctx {
-            let latent = &cache.row(li, p)[..kv_rank];
-            // Split borrow: `kvb` rows are disjoint per position.
-            let dst = &mut kvb[p * kvb_w..(p + 1) * kvb_w];
-            self.matvec(kv_b_w, latent, dst)?;
+        if self.absorb_mla {
+            // Absorbed: expand only the just-appended position into the
+            // cache's expanded-row plane — the same encoded kv_b matvec
+            // the eager path runs, so the bits are identical; older
+            // positions were expanded when *they* were appended.
+            let (row, xrow) = cache.row_and_xrow_mut(li, pos);
+            self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
+        } else {
+            // Eager reference: re-expand per-head k_nope/v for every
+            // cached position from the compressed latents.
+            let kvb = &mut s.kvb[..ctx * kvb_w];
+            for p in 0..ctx {
+                let latent = &cache.row(li, p)[..kv_rank];
+                // Split borrow: `kvb` rows are disjoint per position.
+                let dst = &mut kvb[p * kvb_w..(p + 1) * kvb_w];
+                self.matvec(kv_b_w, latent, dst)?;
+            }
         }
 
         let inv_scale = 1.0 / (qk_head as f32).sqrt();
         let heads_out = &mut s.heads_out[..cfg.n_heads * vh];
         heads_out.fill(0.0);
         let scores = &mut s.scores[..ctx];
+        let cache = &*cache;
+        let (absorbed, kvb) = (self.absorb_mla, &s.kvb[..]);
+        // Position `p`'s expanded `k_nope|v` rows, wherever they live.
+        let expanded = |p: usize| -> &[f32] {
+            if absorbed {
+                cache.xrow(li, p)
+            } else {
+                &kvb[p * kvb_w..(p + 1) * kvb_w]
+            }
+        };
         for hd in 0..cfg.n_heads {
             let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
             self.rope.apply(&mut qh[nope..], pos);
             for (p, sc) in scores.iter_mut().enumerate() {
-                let k_nope = &kvb[p * kvb_w + hd * (nope + vh)..][..nope];
+                let k_nope = &expanded(p)[hd * (nope + vh)..][..nope];
                 let k_rope = &cache.row(li, p)[kv_rank..];
                 let sv = kernels::dot_lanes(&qh[..nope], k_nope)
                     + kernels::dot_lanes(&qh[nope..], k_rope);
@@ -769,7 +1062,7 @@ impl ForwardPass {
             math::softmax_in_place(scores);
             let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
             for (p, &w) in scores.iter().enumerate() {
-                let v = &kvb[p * kvb_w + hd * (nope + vh) + nope..][..vh];
+                let v = &expanded(p)[hd * (nope + vh) + nope..][..vh];
                 for (o, &vv) in oh.iter_mut().zip(v) {
                     *o += w * vv;
                 }
@@ -834,6 +1127,192 @@ impl ForwardPass {
             }
         }
         self.matvec(attn_output, heads_out, out)
+    }
+
+    /// Panel attention for one layer over the tokens at positions
+    /// `base..base + t` (projections batched through the GEMM kernels;
+    /// cache writes, RoPE, scores and value sums per position),
+    /// dispatched by architecture family. Reads `p.xn`, writes
+    /// `p.delta`.
+    fn attention_panel(
+        &self,
+        li: usize,
+        lw: &LayerWeights,
+        t: usize,
+        base: usize,
+        cache: &mut KvCache,
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        match &lw.attn {
+            LayerAttn::Mla { q_a, q_a_norm, q_b, kv_a, kv_a_norm, kv_b } => self
+                .attention_mla_panel(
+                    li,
+                    (q_a, q_a_norm.as_slice(), q_b, kv_a, kv_a_norm.as_slice(), kv_b),
+                    &lw.attn_output,
+                    t,
+                    base,
+                    cache,
+                    p,
+                ),
+            LayerAttn::Gqa { q, k, v } => {
+                self.attention_gqa_panel(li, (q, k, v), &lw.attn_output, t, base, cache, p)
+            }
+        }
+    }
+
+    /// Panel MLA attention (absorbed caches only — the eager mode
+    /// falls back to the token loop in
+    /// [`ForwardPass::forward_tokens`]). Per token the score/value
+    /// loops are exactly [`ForwardPass::attention_mla`]'s; the
+    /// projections are its matvecs as GEMM columns.
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    fn attention_mla_panel(
+        &self,
+        li: usize,
+        (q_a_w, q_a_norm, q_b_w, kv_a_w, kv_a_norm, kv_b_w): (
+            &TensorEntry,
+            &[f32],
+            &TensorEntry,
+            &TensorEntry,
+            &[f32],
+            &TensorEntry,
+        ),
+        attn_output: &TensorEntry,
+        t: usize,
+        base: usize,
+        cache: &mut KvCache,
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let hs = cfg.hidden_size;
+        let (nope, vh) = (cfg.qk_nope_head_dim, cfg.v_head_dim);
+        let qk_head = nope + cfg.qk_rope_head_dim;
+        let (q_rank, kv_rank) = (cfg.q_lora_rank, cfg.kv_lora_rank);
+        let kv_w = cfg.kv_cache_width();
+        let q_len = cfg.n_heads * qk_head;
+        let ho_w = cfg.n_heads * vh;
+
+        // Query path, batched: hidden → q_rank → heads·(nope+rope).
+        let xs = &p.xn[..t * hs];
+        self.matvec_mat(q_a_w, xs, hs, t, &mut p.mat, &mut p.q_a[..t * q_rank])?;
+        for j in 0..t {
+            let (a, b) = (j * q_rank, (j + 1) * q_rank);
+            rms_norm(&p.q_a[a..b], q_a_norm, &mut p.q_an[a..b]);
+        }
+        let q_an = &p.q_an[..t * q_rank];
+        self.matvec_mat(q_b_w, q_an, q_rank, t, &mut p.mat, &mut p.q[..t * q_len])?;
+
+        // KV path, batched; per position: the cache-row write (normed
+        // latent + post-RoPE shared key) and the absorbed expansion.
+        self.matvec_mat(kv_a_w, xs, hs, t, &mut p.mat, &mut p.kv[..t * kv_w])?;
+        for j in 0..t {
+            let pos = base + j;
+            let kv_a = &p.kv[j * kv_w..(j + 1) * kv_w];
+            {
+                let row = cache.row_mut(li, pos);
+                rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
+                row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
+                self.rope.apply(&mut row[kv_rank..], pos);
+            }
+            let (row, xrow) = cache.row_and_xrow_mut(li, pos);
+            self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
+        }
+
+        let inv_scale = 1.0 / (qk_head as f32).sqrt();
+        p.heads_out[..t * ho_w].fill(0.0);
+        for j in 0..t {
+            let pos = base + j;
+            let scores = &mut p.scores[..pos + 1];
+            let q = &mut p.q[j * q_len..(j + 1) * q_len];
+            let heads_out = &mut p.heads_out[j * ho_w..(j + 1) * ho_w];
+            for hd in 0..cfg.n_heads {
+                let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
+                self.rope.apply(&mut qh[nope..], pos);
+                for (pp, sc) in scores.iter_mut().enumerate() {
+                    let k_nope = &cache.xrow(li, pp)[hd * (nope + vh)..][..nope];
+                    let k_rope = &cache.row(li, pp)[kv_rank..];
+                    let sv = kernels::dot_lanes(&qh[..nope], k_nope)
+                        + kernels::dot_lanes(&qh[nope..], k_rope);
+                    *sc = sv * inv_scale;
+                }
+                math::softmax_in_place(scores);
+                let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
+                for (pp, &w) in scores.iter().enumerate() {
+                    let v = &cache.xrow(li, pp)[hd * (nope + vh) + nope..][..vh];
+                    for (o, &vv) in oh.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        let ho = &p.heads_out[..t * ho_w];
+        self.matvec_mat(attn_output, ho, ho_w, t, &mut p.mat, &mut p.delta[..t * hs])
+    }
+
+    /// Panel GQA attention: per token the score/value loops are
+    /// exactly [`ForwardPass::attention_gqa`]'s; the Q/K/V and output
+    /// projections run as GEMM panels, K/V copied into the cache rows
+    /// before RoPE.
+    #[allow(clippy::too_many_arguments)]
+    fn attention_gqa_panel(
+        &self,
+        li: usize,
+        (q_w, k_w, v_w): (&TensorEntry, &TensorEntry, &TensorEntry),
+        attn_output: &TensorEntry,
+        t: usize,
+        base: usize,
+        cache: &mut KvCache,
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let hs = cfg.hidden_size;
+        let hd = cfg.head_dim;
+        let kd = cfg.n_kv_heads * hd;
+        let group = cfg.n_heads / cfg.n_kv_heads;
+        let q_len = cfg.n_heads * hd;
+
+        let xs = &p.xn[..t * hs];
+        self.matvec_mat(q_w, xs, hs, t, &mut p.mat, &mut p.q[..t * q_len])?;
+        self.matvec_mat(k_w, xs, hs, t, &mut p.mat, &mut p.kv[..t * kd])?;
+        self.matvec_mat(v_w, xs, hs, t, &mut p.mat, &mut p.v[..t * kd])?;
+        for j in 0..t {
+            let pos = base + j;
+            let row = cache.row_mut(li, pos);
+            let (krow, vrow) = row.split_at_mut(kd);
+            krow.copy_from_slice(&p.kv[j * kd..(j + 1) * kd]);
+            vrow.copy_from_slice(&p.v[j * kd..(j + 1) * kd]);
+            for kh in 0..cfg.n_kv_heads {
+                self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+            }
+        }
+
+        let inv_scale = 1.0 / (hd as f32).sqrt();
+        p.heads_out[..t * q_len].fill(0.0);
+        for j in 0..t {
+            let pos = base + j;
+            let scores = &mut p.scores[..pos + 1];
+            let q = &mut p.q[j * q_len..(j + 1) * q_len];
+            let heads_out = &mut p.heads_out[j * q_len..(j + 1) * q_len];
+            for h in 0..cfg.n_heads {
+                let qh = &mut q[h * hd..(h + 1) * hd];
+                self.rope.apply(qh, pos);
+                let kh = h / group;
+                for (pp, sc) in scores.iter_mut().enumerate() {
+                    let k = &cache.row(li, pp)[kh * hd..(kh + 1) * hd];
+                    *sc = kernels::dot_lanes(qh, k) * inv_scale;
+                }
+                math::softmax_in_place(scores);
+                let oh = &mut heads_out[h * hd..(h + 1) * hd];
+                for (pp, &w) in scores.iter().enumerate() {
+                    let v = &cache.row(li, pp)[kd + kh * hd..][..hd];
+                    for (o, &vv) in oh.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        let ho = &p.heads_out[..t * q_len];
+        self.matvec_mat(attn_output, ho, q_len, t, &mut p.mat, &mut p.delta[..t * hs])
     }
 
     /// FFN for one layer: dense SwiGLU, or router → top-k routed
@@ -922,6 +1401,216 @@ impl ForwardPass {
         }
     }
 
+    /// Panel FFN over `t` tokens: dense SwiGLU batched across the
+    /// panel; MoE routes per token, then batches each routed expert
+    /// over the tokens that selected it (gather → expert GEMM →
+    /// weighted scatter, experts ascending — exactly each token's own
+    /// combine order). Reads `p.xn`, writes `p.delta`; `s` lends the
+    /// top-k index scratch.
+    fn ffn_panel(
+        &self,
+        lw: &LayerWeights,
+        t: usize,
+        s: &mut FfnScratch,
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let hs = cfg.hidden_size;
+        let fb = |e: &TensorEntry| (e.format, self.ckpt.bytes(e));
+        match &lw.ffn {
+            LayerFfn::Dense { gate, up, down } => self.mlp_mat(
+                fb(gate),
+                fb(up),
+                fb(down),
+                cfg.intermediate_size,
+                &p.xn[..t * hs],
+                hs,
+                t,
+                &mut p.mat,
+                &mut p.g,
+                &mut p.u,
+                &mut p.delta[..t * hs],
+            ),
+            LayerFfn::Moe {
+                router,
+                gate_exps,
+                up_exps,
+                down_exps,
+                gate_shexp,
+                up_shexp,
+                down_shexp,
+            } => {
+                let ne = cfg.n_routed_experts;
+                let na = cfg.n_active_experts;
+                let xs = &p.xn[..t * hs];
+                self.matvec_mat(router, xs, hs, t, &mut p.mat, &mut p.probs[..t * ne])?;
+                p.sel.clear();
+                for j in 0..t {
+                    let probs = &mut p.probs[j * ne..(j + 1) * ne];
+                    math::softmax_in_place(probs);
+                    // Same top-k rule as the per-token path: highest
+                    // probability first, ties to the lower index.
+                    s.idx.clear();
+                    s.idx.extend(0..ne);
+                    s.idx.sort_unstable_by(|&a, &b| {
+                        probs[b]
+                            .partial_cmp(&probs[a])
+                            .expect("softmax is NaN-free")
+                            .then(a.cmp(&b))
+                    });
+                    s.idx.truncate(na);
+                    s.idx.sort_unstable();
+                    let mut z = 0f32;
+                    for &e in &s.idx {
+                        z += probs[e];
+                    }
+                    p.z[j] = z;
+                    p.sel.extend_from_slice(&s.idx);
+                }
+                // Shared expert (weight 1) over the whole panel.
+                let sh_inter = cfg.n_shared_experts * cfg.moe_intermediate_size;
+                self.mlp_mat(
+                    fb(gate_shexp),
+                    fb(up_shexp),
+                    fb(down_shexp),
+                    sh_inter,
+                    xs,
+                    hs,
+                    t,
+                    &mut p.mat,
+                    &mut p.g,
+                    &mut p.u,
+                    &mut p.delta[..t * hs],
+                )?;
+                // Routed experts, ascending: gather the tokens that
+                // selected each expert, run one panel mlp, scatter the
+                // weighted outputs back.
+                for e in 0..ne {
+                    p.gather.clear();
+                    for j in 0..t {
+                        if p.sel[j * na..(j + 1) * na].contains(&e) {
+                            p.gather.push(j);
+                        }
+                    }
+                    if p.gather.is_empty() {
+                        continue;
+                    }
+                    let gt = p.gather.len();
+                    for (gi, &j) in p.gather.iter().enumerate() {
+                        let (a, b) = (gi * hs, (gi + 1) * hs);
+                        p.xg[a..b].copy_from_slice(&p.xn[j * hs..(j + 1) * hs]);
+                    }
+                    self.mlp_mat(
+                        (gate_exps.format, self.expert_bytes(gate_exps, e)?),
+                        (up_exps.format, self.expert_bytes(up_exps, e)?),
+                        (down_exps.format, self.expert_bytes(down_exps, e)?),
+                        cfg.moe_intermediate_size,
+                        &p.xg[..gt * hs],
+                        hs,
+                        gt,
+                        &mut p.mat,
+                        &mut p.g,
+                        &mut p.u,
+                        &mut p.y[..gt * hs],
+                    )?;
+                    for (gi, &j) in p.gather.iter().enumerate() {
+                        let w = p.probs[j * ne + e] / p.z[j];
+                        let y = &p.y[gi * hs..(gi + 1) * hs];
+                        let out = &mut p.delta[j * hs..(j + 1) * hs];
+                        for (o, &yv) in out.iter_mut().zip(y) {
+                            *o += w * yv;
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Run a whole prompt through the stack in one panel pass: every
+    /// projection and FFN matvec is batched across the token dimension
+    /// through the decode-once GEMM kernels, while RMSNorm, RoPE,
+    /// attention and routing stay per-position. The KV cache is filled
+    /// for all `toks.len()` positions; `logits`, when given, receives
+    /// the unembedding of the **last** token.
+    ///
+    /// Bit-identity: layer `l` processes every token before layer
+    /// `l + 1`, but each per-token value is produced by exactly the
+    /// per-token code (or a GEMM column bit-identical to it by the
+    /// `vec_dot_mat` contract), and attention for token `j` only reads
+    /// cache rows already written from those same values — so cache
+    /// and logits match looping [`ForwardPass::forward_token`]
+    /// bit-for-bit. Eager-MLA mode (`set_mla_absorption(false)`) falls
+    /// back to that loop outright — it exists as the equivalence seam,
+    /// not as a serving path.
+    pub fn forward_tokens(
+        &self,
+        toks: &[i32],
+        cache: &mut KvCache,
+        scratch: &mut Scratch,
+        logits: Option<&mut [f32]>,
+    ) -> Result<()> {
+        let t = toks.len();
+        let base = cache.len;
+        if t == 0 {
+            if logits.is_some() {
+                bail!("forward_tokens: logits requested for an empty token run");
+            }
+            return Ok(());
+        }
+        if base + t > cache.max_ctx {
+            bail!(
+                "KV cache full: {t} tokens at position {base} exceed the engine's \
+                 configured max context {}",
+                cache.max_ctx
+            );
+        }
+        if let Some(out) = &logits {
+            if out.len() != self.cfg.vocab_size {
+                bail!("logits buffer {} != vocab {}", out.len(), self.cfg.vocab_size);
+            }
+        }
+        let eager_mla = matches!(self.cfg.kind, ModelKind::MlaMoe) && !self.absorb_mla;
+        if t == 1 || eager_mla {
+            let mut logits = logits;
+            for (j, &tok) in toks.iter().enumerate() {
+                let want = if j + 1 == t { logits.take() } else { None };
+                self.forward_token(tok, cache, scratch, want)?;
+            }
+            return Ok(());
+        }
+        cache.ensure_allocated();
+        let hs = self.cfg.hidden_size;
+        let Scratch { xn, ffn, panel: p, .. } = scratch;
+        for (j, &tok) in toks.iter().enumerate() {
+            self.embed(tok, &mut p.h[j * hs..(j + 1) * hs])?;
+        }
+        for (li, lw) in self.layers.iter().enumerate() {
+            for j in 0..t {
+                let (a, b) = (j * hs, (j + 1) * hs);
+                rms_norm(&p.h[a..b], &lw.attn_norm, &mut p.xn[a..b]);
+            }
+            self.attention_panel(li, lw, t, base, cache, p)?;
+            for (hv, &dv) in p.h[..t * hs].iter_mut().zip(&p.delta[..t * hs]) {
+                *hv += dv;
+            }
+            for j in 0..t {
+                let (a, b) = (j * hs, (j + 1) * hs);
+                rms_norm(&p.h[a..b], &lw.ffn_norm, &mut p.xn[a..b]);
+            }
+            self.ffn_panel(lw, t, ffn, p)?;
+            for (hv, &dv) in p.h[..t * hs].iter_mut().zip(&p.delta[..t * hs]) {
+                *hv += dv;
+            }
+        }
+        cache.len = base + t;
+        if let Some(out) = logits {
+            rms_norm(&p.h[(t - 1) * hs..t * hs], &self.output_norm, xn);
+            self.matvec(&self.output, xn, out)?;
+        }
+        Ok(())
+    }
+
     /// Run one token through the full stack at the cache's next
     /// position. When `logits` is given it receives the vocab-wide
     /// unembedding of the final hidden state (`logits.len() == vocab`);
@@ -953,7 +1642,7 @@ impl ForwardPass {
             }
         }
         cache.ensure_allocated();
-        let Scratch { h, xn, delta, attn, ffn } = scratch;
+        let Scratch { h, xn, delta, attn, ffn, .. } = scratch;
         self.embed(tok, h)?;
         for (li, lw) in self.layers.iter().enumerate() {
             rms_norm(h, &lw.attn_norm, xn);
@@ -1082,6 +1771,86 @@ mod tests {
         // Position 0 is the identity rotation for every frequency.
         assert!(t.cos[..16].iter().all(|&c| c == 1.0));
         assert!(t.sin[..16].iter().all(|&s| s == 0.0));
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn panel_prefill_matches_token_loop_dense() {
+        let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 7).unwrap();
+        let fwd = ForwardPass::new(src, 2, 8).unwrap();
+        let toks = [1i32, 5, 260, 3, 17];
+
+        let mut c_loop = fwd.new_cache();
+        let mut s_loop = fwd.new_scratch();
+        let mut l_loop = vec![0f32; fwd.vocab()];
+        for (j, &tok) in toks.iter().enumerate() {
+            let want = if j + 1 == toks.len() { Some(&mut l_loop[..]) } else { None };
+            fwd.forward_token(tok, &mut c_loop, &mut s_loop, want).unwrap();
+        }
+
+        let mut c_panel = fwd.new_cache();
+        let mut s_panel = fwd.new_scratch();
+        let mut l_panel = vec![0f32; fwd.vocab()];
+        fwd.forward_tokens(&toks, &mut c_panel, &mut s_panel, Some(&mut l_panel)).unwrap();
+
+        assert_eq!(c_panel.len(), toks.len());
+        assert_eq!(bits(&l_panel), bits(&l_loop), "panel logits must match the token loop");
+        assert_eq!(
+            bits(c_panel.raw_rows()),
+            bits(c_loop.raw_rows()),
+            "panel KV rows must match the token loop"
+        );
+    }
+
+    #[test]
+    fn panel_prefill_matches_token_loop_mla() {
+        let fwd = tiny_forward("q4_k_m", 1, 8);
+        let toks = [1i32, 17, 300, 42, 511];
+
+        let mut c_loop = fwd.new_cache();
+        let mut s_loop = fwd.new_scratch();
+        let mut l_loop = vec![0f32; fwd.vocab()];
+        for (j, &tok) in toks.iter().enumerate() {
+            let want = if j + 1 == toks.len() { Some(&mut l_loop[..]) } else { None };
+            fwd.forward_token(tok, &mut c_loop, &mut s_loop, want).unwrap();
+        }
+
+        let mut c_panel = fwd.new_cache();
+        let mut s_panel = fwd.new_scratch();
+        let mut l_panel = vec![0f32; fwd.vocab()];
+        fwd.forward_tokens(&toks, &mut c_panel, &mut s_panel, Some(&mut l_panel)).unwrap();
+
+        assert_eq!(bits(&l_panel), bits(&l_loop), "panel logits must match the token loop");
+        assert_eq!(bits(c_panel.raw_rows()), bits(c_loop.raw_rows()));
+        assert_eq!(
+            bits(c_panel.raw_expanded()),
+            bits(c_loop.raw_expanded()),
+            "panel-written expanded rows must match the per-token writes"
+        );
+    }
+
+    #[test]
+    fn absorbed_mla_decode_matches_unabsorbed() {
+        let fwd_a = tiny_forward("q4_k_m", 1, 8);
+        let mut fwd_e = tiny_forward("q4_k_m", 1, 8);
+        fwd_e.set_mla_absorption(false);
+
+        let mut ca = fwd_a.new_cache();
+        let mut ce = fwd_e.new_cache();
+        let mut sa = fwd_a.new_scratch();
+        let mut se = fwd_e.new_scratch();
+        let mut la = vec![0f32; fwd_a.vocab()];
+        let mut le = vec![0f32; fwd_e.vocab()];
+        for (step, &tok) in [1i32, 17, 300, 42, 511, 7].iter().enumerate() {
+            fwd_a.forward_token(tok, &mut ca, &mut sa, Some(&mut la)).unwrap();
+            fwd_e.forward_token(tok, &mut ce, &mut se, Some(&mut le)).unwrap();
+            assert_eq!(bits(&la), bits(&le), "step {step}: absorbed logits diverged");
+        }
+        assert_eq!(bits(ca.raw_rows()), bits(ce.raw_rows()));
+        assert!(ce.raw_expanded().is_empty(), "eager caches must not carry the expanded plane");
     }
 
     #[test]

@@ -32,7 +32,10 @@
 //! Qwen2.5-shaped dense-GQA step of the distill models (tiny-dense /
 //! distill-qwen-32b, Table 5) — so the coordinator can execute
 //! prefill/decode waves offline, no HLO artifacts, no PJRT, with
-//! logits bit-identical at every thread count. Per-wave mutable state
+//! logits bit-identical at every thread count. Since PR 6 native
+//! prefill runs each slot's whole prompt as one quantized-GEMM panel
+//! ([`forward::ForwardPass::forward_tokens`]), decoding each weight
+//! tile once per prompt instead of once per token. Per-wave mutable state
 //! (PJRT cache literals or native per-slot KV caches plus the wave's
 //! reused forward scratch) is threaded through [`StepOutput::state`]
 //! as a backend-tagged [`StepState`], keeping the engine itself
@@ -284,8 +287,8 @@ impl Engine {
     /// unused slot: the native backend skips its forward pass entirely
     /// (zero logits row, empty cache); the PJRT backend clamps the
     /// value to 1 so the compiled graph sees its historical input
-    /// shape. The native backend forwards each used slot's actual
-    /// prompt token by token and fills fresh per-slot KV caches
+    /// shape. The native backend runs each used slot's actual prompt
+    /// as one GEMM panel pass and fills fresh per-slot KV caches
     /// (returned in [`StepOutput::state`]).
     pub fn run_prefill(&self, tokens: &[i32], lengths: &[i32]) -> Result<StepOutput> {
         let (b, t) = (self.batch(), self.prompt_len());

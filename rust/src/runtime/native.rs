@@ -13,21 +13,25 @@
 //! tiny-MoE step (MLA attention + top-k routed experts, Tables 2–4)
 //! and the dense-GQA step of the distill shapes (grouped-query
 //! attention + dense SwiGLU, Table 5 — `tiny-dense` /
-//! `distill-qwen-32b`). Prefill feeds each slot's actual prompt token
-//! by token; decode advances one token per live slot, and slots marked
-//! inactive (`pos < 0`) are skipped entirely. Unused slots never even
-//! allocate their KV backing buffer ([`KvCache`] allocates lazily on
-//! the first forwarded token), and all per-token intermediates live in
-//! one reused [`Scratch`] per wave, so the decode loop is
-//! allocation-free.
+//! `distill-qwen-32b`). Since PR 6 prefill runs each slot's whole
+//! prompt as **one panel pass** ([`ForwardPass::forward_tokens`]):
+//! every projection/FFN matvec is a decode-once GEMM over the prompt's
+//! token dimension, so each quantized weight tile is decoded once per
+//! prompt instead of once per token. Decode advances one token per
+//! live slot, and slots marked inactive (`pos < 0`) are skipped
+//! entirely. Unused slots never even allocate their KV backing buffer
+//! ([`KvCache`] allocates lazily on the first forwarded token), and
+//! all per-token and per-panel intermediates live in one reused
+//! [`Scratch`] per wave, so both loops are allocation-free.
 //!
 //! Determinism: the PR-3 contract extends through the whole pass — the
-//! same 8-lane reduction order at every thread count and on both
-//! `DSQ_SCALAR_DECODE` dispatch arms, so two native engines over the
-//! same container produce bit-identical logits (asserted by
-//! `tests/native_engine.rs` / `tests/native_forward.rs`, pinned by the
-//! committed `rust/tests/golden/forward.*.fnv64` checksums, and proven
-//! on the deployment host by `dsq selfcheck`).
+//! same 8-lane reduction order at every thread count, on every
+//! `DSQ_FORCE_ARM` dispatch arm, and in panel prefill exactly as in
+//! the per-token loop, so two native engines over the same container
+//! produce bit-identical logits (asserted by `tests/native_engine.rs`
+//! / `tests/native_forward.rs`, pinned by the committed
+//! `rust/tests/golden/forward.*.fnv64` checksums, and proven on the
+//! deployment host by `dsq selfcheck`).
 
 use super::forward::{ForwardPass, KvCache, Scratch};
 use crate::container::Container;
@@ -150,9 +154,10 @@ impl NativeEngine {
     }
 
     /// Prefill: run each slot's actual prompt (`lengths[i]` tokens of
-    /// row `i`, clamped to `1..=prompt_len`) through the forward pass,
-    /// returning the last-token logits per slot (row-major
-    /// `[batch, vocab]`) and the filled per-slot caches.
+    /// row `i`, clamped to `1..=prompt_len`) through the forward pass
+    /// as one [`ForwardPass::forward_tokens`] panel, returning the
+    /// last-token logits per slot (row-major `[batch, vocab]`) and the
+    /// filled per-slot caches.
     ///
     /// `lengths[i] <= 0` marks an **unused** slot: it is skipped
     /// entirely (zero logits row, empty cache) instead of burning a
@@ -172,10 +177,7 @@ impl NativeEngine {
             let l = (lengths[slot] as usize).min(t);
             let prompt = &tokens[slot * t..slot * t + l];
             let row = &mut logits[slot * v..(slot + 1) * v];
-            for (j, &tok) in prompt.iter().enumerate() {
-                let want = if j + 1 == l { Some(&mut *row) } else { None };
-                self.fwd.forward_token(tok, cache, &mut kv.scratch, want)?;
-            }
+            self.fwd.forward_tokens(prompt, cache, &mut kv.scratch, Some(row))?;
         }
         Ok((logits, kv))
     }

@@ -1,23 +1,29 @@
-//! Decode-kernel property suite: the lane-chunked batch decoders and
-//! fused `vec_dot` kernels (`quant::kernels`) against their scalar
-//! references, across dispatch arms and thread counts.
+//! Decode-kernel property suite: the batch decoders and fused
+//! `vec_dot` / `vec_dot_mat` kernels (`quant::kernels`) against their
+//! scalar references, across dispatch arms and thread counts.
 //!
 //! The contract under test (see `quant/mod.rs` module docs):
 //!
-//! - `decode_blocks` is **bit-identical** between the lane-kernel arm
-//!   and the format modules' scalar loops, at every thread count;
+//! - `decode_blocks` is **bit-identical** across the scalar, lane and
+//!   simd (AVX2/NEON) dispatch arms, at every thread count;
 //! - `vec_dot(q, x)` equals `kernels::dot_lanes(decode_blocks(q), x)`
-//!   bit-for-bit on both arms (fixed 8-lane reduction order, no FMA);
+//!   bit-for-bit on every arm (fixed 8-lane reduction order, no FMA);
 //! - `vec_dot_rows` is bit-identical at thread counts {1, 2, 8} and
-//!   equals the per-row `vec_dot` loop.
+//!   equals the per-row `vec_dot` loop;
+//! - `vec_dot_mat` over a T-column panel equals T independent
+//!   `vec_dot` calls bit-for-bit, per arm, for every panel width, and
+//!   `vec_dot_rows_mat` is bit-identical at every thread count.
 //!
-//! The runtime dispatch itself (`DSQ_SCALAR_DECODE`) is process-global,
-//! so cross-arm assertions go through the pinned seams
-//! (`decode_blocks_pinned` / `vec_dot_pinned`); CI additionally reruns
-//! the whole suite under `DSQ_SCALAR_DECODE=1` so the env-selected path
-//! is exercised on both arms too.
+//! The runtime dispatch itself (`DSQ_FORCE_ARM` /
+//! `DSQ_SCALAR_DECODE`) is process-global, so cross-arm assertions go
+//! through the pinned seams (`decode_blocks_arm` / `vec_dot_arm` /
+//! `vec_dot_mat_arm`, plus the PR-3 bool-pinned wrappers); CI
+//! additionally reruns the whole suite with `DSQ_FORCE_ARM` pinned to
+//! each arm so the env-selected path is exercised everywhere too.
+//! Arms unavailable on the host (`simd` without AVX2) are skipped —
+//! `DispatchArm::available` gates each loop.
 
-use dsq::quant::{self, kernels, QuantFormat};
+use dsq::quant::{self, kernels, BlockCodec, QuantFormat};
 use dsq::util::rng::Pcg;
 
 fn bits(v: &[f32]) -> Vec<u32> {
@@ -119,6 +125,96 @@ fn fused_matvec_equals_dequantize_then_matvec() {
             .map(|row| kernels::dot_lanes(row, &x))
             .collect();
         assert_eq!(bits(&fused), bits(&reference), "{fmt}");
+    }
+}
+
+fn available_arms() -> Vec<kernels::DispatchArm> {
+    kernels::DispatchArm::ALL.into_iter().filter(|a| a.available()).collect()
+}
+
+#[test]
+fn vec_dot_mat_equals_per_column_vec_dot_on_every_arm() {
+    // The GEMM contract: decode-once panels reproduce T independent
+    // single-column fused dots bit-for-bit — per arm, for every panel
+    // width (1 = degenerate single column, 3/8 = partial MAT_COLS
+    // chunks, 17 = a full chunk plus remainder).
+    for fmt in QuantFormat::ALL {
+        let (data, packed) = seeded(fmt, 5, 0x6E17);
+        let n = data.len();
+        let mut rng = Pcg::new(0x6E18 ^ fmt.block_bytes() as u64);
+        for t in [1usize, 3, 8, 17] {
+            let xs: Vec<f32> = (0..t * n).map(|_| rng.next_normal()).collect();
+            let mut out = vec![0f32; t];
+            for arm in available_arms() {
+                kernels::vec_dot_mat_arm(fmt, &packed, &xs, n, &mut out, arm);
+                for (c, &got) in out.iter().enumerate() {
+                    let want = kernels::vec_dot_arm(fmt, &packed, &xs[c * n..(c + 1) * n], arm);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{fmt} arm={} t={t} col={c}",
+                        arm.name()
+                    );
+                }
+            }
+            // Public dispatch-selected entry point agrees per column.
+            let mut auto = vec![0f32; t];
+            quant::codec(fmt).vec_dot_mat(&packed, &xs, n, &mut auto);
+            for (c, &got) in auto.iter().enumerate() {
+                let want = quant::vec_dot(fmt, &packed, &xs[c * n..(c + 1) * n]).unwrap();
+                assert_eq!(got.to_bits(), want.to_bits(), "{fmt} dispatch t={t} col={c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vec_dot_rows_mat_bit_identical_across_thread_counts_and_widths() {
+    for fmt in QuantFormat::ALL {
+        let rows = 13usize;
+        let n = fmt.block_weights().max(64) * 2;
+        let mut rng = Pcg::new(0x6E19 ^ fmt.block_bytes() as u64);
+        let data: Vec<f32> = (0..rows * n).map(|_| rng.next_normal()).collect();
+        let packed = quant::quantize(fmt, &data, None).unwrap();
+        for t in [1usize, 3, 8, 17] {
+            let xs: Vec<f32> = (0..t * n).map(|_| rng.next_normal()).collect();
+            let mut base = vec![0f32; rows * t];
+            quant::vec_dot_rows_mat_with(fmt, &packed, &xs, n, t, &mut base, 1).unwrap();
+            // Row-major [rows][t] result == the column-by-column matvec.
+            let mut col = vec![0f32; rows];
+            for c in 0..t {
+                quant::vec_dot_rows_with(fmt, &packed, &xs[c * n..(c + 1) * n], &mut col, 1)
+                    .unwrap();
+                for (r, &want) in col.iter().enumerate() {
+                    assert_eq!(
+                        base[r * t + c].to_bits(),
+                        want.to_bits(),
+                        "{fmt} t={t} row={r} col={c}"
+                    );
+                }
+            }
+            for threads in [2usize, 8] {
+                let mut out = vec![0f32; rows * t];
+                quant::vec_dot_rows_mat_with(fmt, &packed, &xs, n, t, &mut out, threads).unwrap();
+                assert_eq!(bits(&out), bits(&base), "{fmt} t={t} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn vec_dot_mat_total_on_arbitrary_bytes() {
+    // GEMM kernels are total on any byte pattern, like the decoders.
+    let mut rng = Pcg::new(0x6E1A);
+    for fmt in QuantFormat::ALL {
+        let n = fmt.block_weights() * 3;
+        let nb = fmt.row_bytes(n).unwrap();
+        let bytes: Vec<u8> = (0..nb).map(|_| rng.next_u64() as u8).collect();
+        let xs = vec![1.0f32; 3 * n];
+        let mut out = vec![0f32; 3];
+        for arm in available_arms() {
+            kernels::vec_dot_mat_arm(fmt, &bytes, &xs, n, &mut out, arm);
+        }
     }
 }
 

@@ -7,12 +7,13 @@
 //! Since PR 4 every step is a complete forward pass fused on the
 //! encoded container payloads (MLA attention + routed experts for the
 //! MoE shapes; since PR 5, grouped-query attention + dense FFNs for
-//! the Table-5 tiny-dense proxy too); the per-step numeric properties
-//! live in `tests/native_forward.rs`, this file covers the serving
-//! plumbing: prefill/decode state threading, inactive-slot skipping
-//! (including that skipped slots never allocate KV backing memory),
-//! and the submit-time admission checks against the engine's context
-//! bound.
+//! the Table-5 tiny-dense proxy too; since PR 6 prefill pushes each
+//! slot's whole prompt through one quantized-GEMM panel pass); the
+//! per-step numeric properties live in `tests/native_forward.rs`, this
+//! file covers the serving plumbing: prefill/decode state threading,
+//! inactive-slot skipping (including that skipped slots never allocate
+//! KV backing memory), and the submit-time admission checks against
+//! the engine's context bound.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};

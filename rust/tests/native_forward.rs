@@ -19,21 +19,25 @@
 //!    *same* decoded weights, and within the per-scheme quantization
 //!    tolerance on the f32 *source* weights.
 //! 3. **Bit identity** — logits are identical across matvec thread
-//!    counts {1, 2, 8} and across both pinned vec_dot dispatch arms;
-//!    CI reruns this whole suite under `DSQ_SCALAR_DECODE=1` so the
-//!    env-selected scalar arm is pinned to the same fixtures.
+//!    counts {1, 2, 8}, across every available pinned dispatch arm
+//!    (scalar, lanes, AVX2/NEON simd), across panel-GEMM vs per-token
+//!    prefill, and across absorbed vs eager MLA; CI reruns this whole
+//!    suite with `DSQ_FORCE_ARM` pinned to each arm so the
+//!    env-selected path is held to the same fixtures.
 //! 4. **KV-cache coherence** — incremental decode (logits requested at
 //!    every step) is bit-identical to a fresh full prefill of the same
 //!    token prefix, and attention state actually matters (the same
 //!    token at different positions produces different logits).
 //! 5. **Allocation discipline** — `forward_token` performs zero heap
-//!    allocations per decoded token (counted by the test binary's
-//!    global allocator), scratch reuse does not perturb logits, and
-//!    untouched KV caches never allocate their backing buffer.
+//!    allocations per decoded token and panel prefill none beyond the
+//!    cache's lazy KV buffers (counted by the test binary's global
+//!    allocator), scratch reuse does not perturb logits, and untouched
+//!    KV caches never allocate their backing buffer.
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::coordinator::sampler::argmax;
 use dsq::model::{ModelConfig, ModelKind};
+use dsq::quant::kernels::DispatchArm;
 use dsq::runtime::forward::{ForwardPass, MatvecMode};
 use dsq::runtime::native::NATIVE_MAX_CTX;
 use dsq::util::fnv64;
@@ -161,6 +165,10 @@ fn bits(rows: &[Vec<f32>]) -> Vec<u32> {
     rows.iter().flatten().map(|v| v.to_bits()).collect()
 }
 
+fn slice_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
 #[test]
 fn golden_forward_logits_checksums() {
     for model in MODELS {
@@ -196,16 +204,80 @@ fn golden_forward_logits_checksums() {
 fn logits_bit_identical_across_threads_and_dispatch_arms() {
     for model in MODELS {
         let base = bits(&run_script(&forward(model, "dq3_k_m", 1)));
-        for (label, mode) in [
-            ("threads=2", MatvecMode::Threads(2)),
-            ("threads=8", MatvecMode::Threads(8)),
-            ("pinned scalar arm", MatvecMode::Pinned(false)),
-            ("pinned lane arm", MatvecMode::Pinned(true)),
-        ] {
+        let mut modes = vec![
+            ("threads=2".to_string(), MatvecMode::Threads(2)),
+            ("threads=8".to_string(), MatvecMode::Threads(8)),
+        ];
+        for arm in DispatchArm::ALL {
+            if arm.available() {
+                modes.push((format!("pinned {} arm", arm.name()), MatvecMode::Pinned(arm)));
+            }
+        }
+        for (label, mode) in modes {
             let mut fwd = forward(model, "dq3_k_m", 1);
             fwd.set_mode(mode);
             assert_eq!(base, bits(&run_script(&fwd)), "{model}: {label}");
         }
+    }
+}
+
+/// The panel-prefill lock: running the whole prompt as one quantized
+/// GEMM panel (`forward_tokens`) is bit-identical to the per-token
+/// loop — logits, the latent/K-V cache plane, and (for absorbed MLA)
+/// the expanded-KV plane — and decode continues identically off either
+/// cache.
+#[test]
+fn panel_prefill_matches_token_loop_bitwise() {
+    for model in MODELS {
+        for scheme in ["dq3_k_m", "q4_k_m"] {
+            let fwd = forward(model, scheme, 2);
+            // Per-token loop.
+            let mut c1 = fwd.new_cache();
+            let mut s1 = fwd.new_scratch();
+            let mut l1 = vec![0f32; fwd.vocab()];
+            for (j, &t) in PROMPT.iter().enumerate() {
+                let want = if j + 1 == PROMPT.len() { Some(&mut l1[..]) } else { None };
+                fwd.forward_token(t, &mut c1, &mut s1, want).unwrap();
+            }
+            // One GEMM panel over the same prompt.
+            let mut c2 = fwd.new_cache();
+            let mut s2 = fwd.new_scratch();
+            let mut l2 = vec![0f32; fwd.vocab()];
+            fwd.forward_tokens(&PROMPT, &mut c2, &mut s2, Some(&mut l2)).unwrap();
+            assert_eq!(c2.len(), PROMPT.len(), "{model}/{scheme}: panel cache length");
+            assert_eq!(slice_bits(&l1), slice_bits(&l2), "{model}/{scheme}: prefill logits");
+            assert_eq!(
+                slice_bits(c1.raw_rows()),
+                slice_bits(c2.raw_rows()),
+                "{model}/{scheme}: latent/K-V cache plane"
+            );
+            assert_eq!(
+                slice_bits(c1.raw_expanded()),
+                slice_bits(c2.raw_expanded()),
+                "{model}/{scheme}: expanded-KV plane"
+            );
+            // Greedy decode continues identically off either cache.
+            let tok = argmax(&l1);
+            fwd.forward_token(tok, &mut c1, &mut s1, Some(&mut l1)).unwrap();
+            fwd.forward_token(tok, &mut c2, &mut s2, Some(&mut l2)).unwrap();
+            assert_eq!(slice_bits(&l1), slice_bits(&l2), "{model}/{scheme}: decode after prefill");
+        }
+    }
+}
+
+/// The absorption seam: eager per-step latent re-expansion
+/// (`set_mla_absorption(false)`, the pre-PR-6 decode shape) lands on
+/// the same bits as the default absorbed path that the committed
+/// goldens pin — so the absorbed rewrite changed arithmetic cost, not
+/// arithmetic. Dense-GQA models ignore the toggle; they ride along to
+/// lock that.
+#[test]
+fn eager_mla_matches_absorbed_default() {
+    for model in MODELS {
+        let base = bits(&run_script(&forward(model, "dq3_k_m", 1)));
+        let mut fwd = forward(model, "dq3_k_m", 1);
+        fwd.set_mla_absorption(false);
+        assert_eq!(base, bits(&run_script(&fwd)), "{model}: eager vs absorbed MLA");
     }
 }
 
@@ -305,6 +377,39 @@ fn forward_token_decode_is_allocation_free() {
         }
         let allocs = thread_allocs() - before;
         assert_eq!(allocs, 0, "{model}: decode made {allocs} heap allocations in 3 tokens");
+    }
+}
+
+/// The panel-prefill allocation bound: after one warm-up wave, a whole
+/// prompt pushed through `forward_tokens` may only allocate the target
+/// cache's own lazy buffers — the latent/K-V plane plus, for absorbed
+/// MLA, the expanded-KV plane (≤ 2 allocation events). On a cache whose
+/// buffers already exist the wave is allocation-free: every panel lives
+/// in the reused scratch.
+#[test]
+fn panel_prefill_allocations_bounded_per_wave() {
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 1);
+        let mut scratch = fwd.new_scratch();
+        let mut logits = vec![0f32; fwd.vocab()];
+        // Warm up: first wave pays one-time costs (dispatch-arm env
+        // lookup) besides its own cache allocation.
+        let mut warm = fwd.new_cache();
+        fwd.forward_tokens(&PROMPT, &mut warm, &mut scratch, Some(&mut logits)).unwrap();
+        // Fresh cache: only the lazy cache buffers may allocate.
+        let mut cache = fwd.new_cache();
+        let before = thread_allocs();
+        fwd.forward_tokens(&PROMPT, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        let allocs = thread_allocs() - before;
+        assert!(
+            allocs <= 2,
+            "{model}: panel prefill made {allocs} heap allocations beyond the lazy cache buffers"
+        );
+        // Allocated cache (the warm one still has room): zero allocs.
+        let before = thread_allocs();
+        fwd.forward_tokens(&PROMPT, &mut warm, &mut scratch, Some(&mut logits)).unwrap();
+        let allocs = thread_allocs() - before;
+        assert_eq!(allocs, 0, "{model}: panel prefill on an allocated cache made {allocs} allocs");
     }
 }
 
