@@ -1,96 +1,217 @@
-//! End-to-end serving benchmark over the PJRT runtime (needs
-//! `make artifacts`; exits gracefully when artifacts are absent).
+//! Serving benchmark for the continuous-batching scheduler — artifact
+//! free: a synthetic tiny-moe container quantized to Q4_K_M, no HLO.
 //!
-//! Measures prefill latency, decode-step latency and wave throughput
-//! per quantization scheme — the data for EXPERIMENTS.md §Perf.
+//! Two sections:
+//!
+//! 1. **Batched-panel decode vs per-slot decode.** The same decode
+//!    workload (prefilled slots advanced 64 steps) run once as one
+//!    `forward_step_batch` GEMM panel per step and once as a
+//!    `forward_token` loop over the slots, at batch 1/4/8/16. The
+//!    panel amortizes each weight tile's dequantization across the
+//!    batch, so it must win from batch ≥ 4 (the PR 7 acceptance bar).
+//! 2. **Poisson open-loop load sweep.** Requests arrive with
+//!    exponential inter-arrival times at 0.5×/1.0×/2.0× the calibrated
+//!    closed-loop service rate and are pushed through a
+//!    `ContinuousScheduler`; per-request latency (arrival →
+//!    completion, queue wait included) and goodput are reported per
+//!    offered load.
+//!
+//! Pass `--json-serving PATH` to write the measurements as JSON (CI's
+//! `BENCH_serving.json`).
 
-use dsq::container::{quantize_container, Container};
-use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
+use dsq::coordinator::scheduler::{ContinuousScheduler, ServeConfig, SubmitOutcome};
+use dsq::coordinator::{sampler::SamplingParams, Request};
 use dsq::eval::{suites, tasks};
+use dsq::model::ModelConfig;
 use dsq::quant::parallel;
-use dsq::runtime::{loader, Engine};
+use dsq::runtime::native::NativeEngine;
 use dsq::scheme::builtin;
-use std::path::PathBuf;
+use dsq::util::json;
+use dsq::util::rng::Pcg;
+use std::time::{Duration, Instant};
+
+fn q4_container() -> anyhow::Result<Container> {
+    let src = synthetic_f32_container(&ModelConfig::tiny_moe(), 0xBE7C)?;
+    let scheme = builtin::scheme("q4_k_m")?;
+    Container::from_bytes(quantize_container_with(&src, &scheme, None, 1)?.to_bytes())
+}
+
+fn make_req(id: u64) -> Request {
+    let suite = &suites::SUITES[(id % suites::SUITES.len() as u64) as usize];
+    let q = tasks::eval_question(suite, id);
+    Request { id, prompt: q.prompt, params: SamplingParams::paper(), seed: id ^ 0x5eed }
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (p * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+/// Decode `steps` tokens across `k` prefilled slots; `panel` selects
+/// one `forward_step_batch` per step vs a `forward_token` loop.
+/// Returns live slot-steps per second.
+fn decode_rate(engine: &NativeEngine, k: usize, steps: usize, panel: bool) -> anyhow::Result<f64> {
+    let fwd = engine.forward();
+    let v = engine.vocab();
+    let prompt: Vec<i32> = (0..16).map(|i| 3 + (i * 11) % 400).collect();
+    let mut caches: Vec<_> = (0..k).map(|_| fwd.new_cache()).collect();
+    let mut scratch = fwd.new_scratch_cols(k);
+    for cache in caches.iter_mut() {
+        fwd.forward_tokens(&prompt, cache, &mut scratch, None)?;
+    }
+    let live = vec![true; k];
+    let mut logits = vec![0f32; k * v];
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let toks: Vec<i32> = (0..k).map(|s| ((step * 7 + s * 13) % 400) as i32 + 2).collect();
+        if panel {
+            fwd.forward_step_batch(&toks, &live, &mut caches, &mut scratch, &mut logits)?;
+        } else {
+            for (s, cache) in caches.iter_mut().enumerate() {
+                let row = &mut logits[s * v..(s + 1) * v];
+                fwd.forward_token(toks[s], cache, &mut scratch, Some(row))?;
+            }
+        }
+    }
+    std::hint::black_box(&logits);
+    Ok((k * steps) as f64 / t0.elapsed().as_secs_f64())
+}
+
+/// One open-loop run: `n_req` Poisson arrivals at `lambda` req/s.
+/// Returns (p50_ms, p99_ms, goodput_tok_s, wall_s).
+fn open_loop(
+    engine: &NativeEngine,
+    lambda: f64,
+    n_req: usize,
+    seed: u64,
+) -> anyhow::Result<(f64, f64, f64, f64)> {
+    let mut rng = Pcg::new(seed);
+    let mut arrivals = Vec::with_capacity(n_req);
+    let mut t = 0.0f64;
+    for _ in 0..n_req {
+        // Exponential inter-arrival; 1-u keeps ln() away from 0.
+        t += -(1.0 - rng.next_f64()).ln() / lambda;
+        arrivals.push(t);
+    }
+    let mut sched = ContinuousScheduler::new(engine, ServeConfig::default())?;
+    let mut latencies = Vec::with_capacity(n_req);
+    let mut tokens = 0u64;
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        while next < n_req && arrivals[next] <= now {
+            match sched.submit(make_req(next as u64))? {
+                SubmitOutcome::Queued => {}
+                SubmitOutcome::Backpressure(_) => unreachable!("unbounded queue"),
+            }
+            next += 1;
+        }
+        let worked = sched.step()?;
+        for r in sched.take_responses() {
+            let done = t0.elapsed().as_secs_f64();
+            latencies.push((done - arrivals[r.id as usize]) * 1e3);
+            tokens += r.n_generated as u64;
+        }
+        if next >= n_req && sched.pending() == 0 && sched.live() == 0 {
+            break;
+        }
+        if !worked && next < n_req {
+            let wait = arrivals[next] - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait.min(1e-4)));
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok((pct(&latencies, 0.5), pct(&latencies, 0.99), tokens as f64 / wall, wall))
+}
 
 fn main() -> anyhow::Result<()> {
-    let hlo = PathBuf::from("artifacts/hlo");
-    let ckpt_dir = PathBuf::from("artifacts/ckpt");
-    // Prefer a trained checkpoint; fall back to the smoke one.
-    let tag = ["r1", "v3", "smoke"]
-        .into_iter()
-        .find(|t| ckpt_dir.join(format!("{t}.f32.dsq")).exists());
-    let Some(tag) = tag else {
-        eprintln!("serving bench skipped: no checkpoints (run `make artifacts`)");
-        return Ok(());
-    };
-    println!("# serving bench on checkpoint {tag}\n");
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json-serving")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let threads = parallel::max_threads();
+    let q = q4_container()?;
 
-    // Weight-loader decode bench (artifact-free): prepare f32 literal
-    // payloads from a quantized container, serial vs fanned-out.
-    {
-        let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
-        let src = Container::open(&f32_path)?;
-        let q = Container::from_bytes(
-            quantize_container(&src, &builtin::scheme("dq3_k_m")?, None)?.to_bytes(),
-        )?;
-        let manifest = loader::f32_weight_manifest(&q);
-        let cores = parallel::max_threads();
-        let time = |threads: usize| -> anyhow::Result<f64> {
-            let mut best = f64::INFINITY;
-            for _ in 0..3 {
-                let t0 = std::time::Instant::now();
-                std::hint::black_box(loader::prepare_weights(&manifest, &q, threads)?);
-                best = best.min(t0.elapsed().as_secs_f64());
-            }
-            Ok(best)
-        };
-        let serial = time(1)?;
-        let par = time(cores)?;
+    // --- 1. batched-panel decode vs a per-slot token loop ---
+    // A taller context than the serving default so every slot can take
+    // 16 prompt + 64 decode tokens.
+    let engine = NativeEngine::with_limits(Container::from_bytes(q.to_bytes())?, threads, 16, 16, 96)?;
+    println!("# decode: one GEMM panel per step vs per-slot token loop ({threads} threads)\n");
+    let mut panel_report = Vec::new();
+    for k in [1usize, 4, 8, 16] {
+        let steps = 64;
+        let per_slot = decode_rate(&engine, k, steps, false)?;
+        let panel = decode_rate(&engine, k, steps, true)?;
+        let speedup = panel / per_slot;
         println!(
-            "bench loader-decode/dq3_k_m serial {serial:>8.4} s | parallel-{cores} {par:>8.4} s | {:.2}x\n",
-            serial / par
+            "bench serving/decode-batch-{k:<2} per-slot {per_slot:>8.1} slot-steps/s | \
+             panel {panel:>8.1} slot-steps/s | {speedup:.2}x"
         );
+        panel_report.push(json::obj(vec![
+            ("batch", json::num(k as f64)),
+            ("per_slot_steps_per_s", json::num(per_slot)),
+            ("panel_steps_per_s", json::num(panel)),
+            ("speedup", json::num(speedup)),
+        ]));
     }
-    for scheme in ["f32", "q4_k_m", "dq3_k_m", "q2_k_l"] {
-        let f32_path = ckpt_dir.join(format!("{tag}.f32.dsq"));
-        let path = if scheme == "f32" {
-            f32_path
-        } else {
-            let q = ckpt_dir.join(format!("{tag}.{scheme}.dsq"));
-            if !q.exists() {
-                let src = Container::open(&f32_path)?;
-                quantize_container(&src, &builtin::scheme(scheme)?, None)?.write(&q)?;
+
+    // --- 2. Poisson-arrival open-loop sweep ---
+    // Calibrate the closed-loop service rate, then offer 0.5×/1×/2×.
+    let engine = NativeEngine::from_container(Container::from_bytes(q.to_bytes())?, threads)?;
+    let calib_n = 48usize;
+    let t0 = Instant::now();
+    {
+        let mut sched = ContinuousScheduler::new(&engine, ServeConfig::default())?;
+        for id in 0..calib_n as u64 {
+            match sched.submit(make_req(id))? {
+                SubmitOutcome::Queued => {}
+                SubmitOutcome::Backpressure(_) => unreachable!("unbounded queue"),
             }
-            q
-        };
-        let t0 = std::time::Instant::now();
-        let engine = Engine::load(&hlo, &path)?;
-        let compile_s = t0.elapsed().as_secs_f64();
-        let mut coord = Coordinator::new(engine);
-        for i in 0..64u64 {
-            let suite = &suites::SUITES[(i % 9) as usize];
-            let q = tasks::eval_question(suite, i);
-            coord.submit(Request {
-                id: i,
-                prompt: q.prompt,
-                params: SamplingParams::paper(),
-                seed: i,
-            })?;
         }
-        let t0 = std::time::Instant::now();
-        coord.run_to_completion()?;
-        let wall = t0.elapsed().as_secs_f64();
-        let p = coord.metrics.prefill_summary();
-        let d = coord.metrics.decode_summary();
+        sched.run_to_completion()?;
+    }
+    let mu = calib_n as f64 / t0.elapsed().as_secs_f64();
+    println!("\n# open-loop Poisson sweep: closed-loop service rate ≈ {mu:.1} req/s\n");
+    let mut load_report = Vec::new();
+    for (i, factor) in [0.5f64, 1.0, 2.0].iter().enumerate() {
+        let lambda = factor * mu;
+        let (p50, p99, goodput, wall) = open_loop(&engine, lambda, 96, 0xA0 + i as u64)?;
         println!(
-            "bench serving/{:<10} compile {:>5.1}s | prefill med {:>7.1} ms | decode med {:>7.1} ms | {:>7.1} tok/s | 64 reqs in {:.2}s",
-            scheme,
-            compile_s,
-            p.median,
-            d.median,
-            coord.metrics.tokens_per_sec(),
-            wall
+            "bench serving/open-loop-{factor:.1}x offered {lambda:>8.1} req/s | \
+             p50 {p50:>7.2} ms | p99 {p99:>7.2} ms | goodput {goodput:>8.1} tok/s \
+             ({wall:.2}s wall)"
         );
+        load_report.push(json::obj(vec![
+            ("load_factor", json::num(*factor)),
+            ("offered_rps", json::num(lambda)),
+            ("p50_ms", json::num(p50)),
+            ("p99_ms", json::num(p99)),
+            ("goodput_tok_s", json::num(goodput)),
+            ("wall_s", json::num(wall)),
+        ]));
+    }
+
+    if let Some(path) = json_path {
+        let doc = json::obj(vec![
+            ("bench", json::str_("serving")),
+            ("model", json::str_("tiny-moe")),
+            ("scheme", json::str_("q4_k_m")),
+            ("cores", json::num(threads as f64)),
+            ("decode_panel", json::Value::Arr(panel_report)),
+            ("offered_load", json::Value::Arr(load_report)),
+        ]);
+        std::fs::write(&path, json::to_string_pretty(&doc))?;
+        eprintln!("wrote serving bench JSON → {path}");
     }
     Ok(())
 }

@@ -22,6 +22,7 @@ const SWITCHES: &[&str] = &[
     "json",
     "paper",
     "native",
+    "wave",
 ];
 
 impl Args {

@@ -17,9 +17,29 @@ pub struct Metrics {
     /// Live slot-steps across all decode calls (a decode step that only
     /// three of sixteen batch slots still need counts as 3, not 16).
     pub decode_slot_steps: u64,
+    /// Requests admitted into the continuous batch.
+    pub admitted: u64,
+    /// Requests that ran to completion under continuous batching.
+    pub completed: u64,
+    /// Requests cancelled (queued or mid-generation).
+    pub cancelled: u64,
+    /// Requests rejected at submit time (invalid, or can never fit the
+    /// KV block pool).
+    pub rejected: u64,
+    /// Total decode-step time under continuous batching, accumulated as
+    /// integer nanoseconds so the steady-state decode loop records
+    /// without pushing to a `Vec` (the zero-alloc gate).
+    pub decode_step_ns: u128,
+    /// Total admission-prefill time under continuous batching —
+    /// counter-only for the same reason: admission must allocate
+    /// nothing but KV blocks from the pool.
+    pub prefill_step_ns: u128,
     prefill_ms: Vec<f64>,
     decode_ms: Vec<f64>,
     wave_ms: Vec<f64>,
+    /// Per-request end-to-end latencies (submit → completion) under
+    /// continuous batching; pushed at request *finish*, never per step.
+    request_latency_ms: Vec<f64>,
 }
 
 fn pct(sorted: &[f64], p: f64) -> f64 {
@@ -60,10 +80,21 @@ impl Metrics {
         self.prefill_ms.push(d.as_secs_f64() * 1e3);
     }
 
+    /// Record one continuous-batching admission prefill of `tokens`
+    /// prompt tokens for a single slot. Counter-only — see
+    /// [`Metrics::record_decode_step`].
+    pub fn record_prefill_step(&mut self, d: Duration, tokens: usize) {
+        self.prefill_calls += 1;
+        self.prefill_slots += 1;
+        self.prefill_tokens += tokens as u64;
+        self.prefill_step_ns += d.as_nanos();
+    }
+
     /// Prompt tokens per second of prefill time — the throughput the
     /// panel-prefill GEMM path is measured in.
     pub fn prefill_tokens_per_sec(&self) -> f64 {
-        let total_s: f64 = self.prefill_ms.iter().sum::<f64>() / 1e3;
+        let total_s: f64 =
+            self.prefill_ms.iter().sum::<f64>() / 1e3 + self.prefill_step_ns as f64 / 1e9;
         if total_s == 0.0 {
             0.0
         } else {
@@ -78,10 +109,65 @@ impl Metrics {
         self.decode_ms.push(d.as_secs_f64() * 1e3);
     }
 
+    /// Record one continuous-batching decode step that `live` slots
+    /// rode in. Counter-only on purpose: unlike [`Metrics::record_decode`]
+    /// it pushes nothing to a `Vec`, so the steady-state decode loop
+    /// stays heap-allocation-free (asserted by the counting-allocator
+    /// test in `tests/continuous_batching.rs`).
+    pub fn record_decode_step(&mut self, d: Duration, live: usize) {
+        self.decode_calls += 1;
+        self.decode_slot_steps += live as u64;
+        self.decode_step_ns += d.as_nanos();
+    }
+
+    /// Record a request completed under continuous batching.
+    pub fn record_request(&mut self, latency_ms: f64, n_tokens: usize) {
+        self.completed += 1;
+        self.requests += 1;
+        self.generated_tokens += n_tokens as u64;
+        self.request_latency_ms.push(latency_ms);
+    }
+
+    /// (p50, p99) of per-request submit→completion latency in ms.
+    pub fn latency_percentiles(&self) -> (f64, f64) {
+        if self.request_latency_ms.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut s = self.request_latency_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (pct(&s, 0.5), pct(&s, 0.99))
+    }
+
+    /// Fold another `Metrics` into this one (the coordinator merges a
+    /// finished continuous-scheduler run into its long-lived metrics).
+    pub fn merge(&mut self, other: Metrics) {
+        self.waves += other.waves;
+        self.requests += other.requests;
+        self.generated_tokens += other.generated_tokens;
+        self.prefill_calls += other.prefill_calls;
+        self.decode_calls += other.decode_calls;
+        self.prefill_slots += other.prefill_slots;
+        self.prefill_tokens += other.prefill_tokens;
+        self.decode_slot_steps += other.decode_slot_steps;
+        self.admitted += other.admitted;
+        self.completed += other.completed;
+        self.cancelled += other.cancelled;
+        self.rejected += other.rejected;
+        self.decode_step_ns += other.decode_step_ns;
+        self.prefill_step_ns += other.prefill_step_ns;
+        self.prefill_ms.extend(other.prefill_ms);
+        self.decode_ms.extend(other.decode_ms);
+        self.wave_ms.extend(other.wave_ms);
+        self.request_latency_ms.extend(other.request_latency_ms);
+    }
+
     /// Live slot-steps per second of decode time — the honest per-slot
     /// decode throughput (excludes finished slots riding in the batch).
+    /// Covers both the wave path's per-call samples and the continuous
+    /// path's counter-only nanosecond total.
     pub fn decode_slot_steps_per_sec(&self) -> f64 {
-        let total_s: f64 = self.decode_ms.iter().sum::<f64>() / 1e3;
+        let total_s: f64 =
+            self.decode_ms.iter().sum::<f64>() / 1e3 + self.decode_step_ns as f64 / 1e9;
         if total_s == 0.0 {
             0.0
         } else {
@@ -132,13 +218,23 @@ impl Metrics {
         let p = self.prefill_summary();
         let d = self.decode_summary();
         let w = self.wave_summary();
+        let continuous = if self.completed > 0 {
+            let (p50, p99) = self.latency_percentiles();
+            format!(
+                "\ncontinuous: {} admitted, {} completed, {} cancelled, {} rejected, \
+                 latency p50 {:.1} ms, p99 {:.1} ms",
+                self.admitted, self.completed, self.cancelled, self.rejected, p50, p99
+            )
+        } else {
+            String::new()
+        };
         format!(
             "waves {} | requests {} | gen tokens {}\n\
              prefill: {} calls ({} seqs, {} prompt tokens), median {:.1} ms, p90 {:.1} ms\n\
              decode:  {} calls ({} live slot-steps), median {:.1} ms, p90 {:.1} ms\n\
              wave:    median {:.1} ms, p90 {:.1} ms\n\
              throughput: {:.1} tok/s, {:.2} req/s, {:.1} live slot-steps/s, \
-             {:.1} prefill tok/s",
+             {:.1} prefill tok/s{continuous}",
             self.waves,
             self.requests,
             self.generated_tokens,
@@ -193,6 +289,36 @@ mod tests {
         let report = m.report();
         assert!(report.contains("32 prompt tokens"), "{report}");
         assert!(report.contains("prefill tok/s"), "{report}");
+    }
+
+    #[test]
+    fn continuous_counters_and_percentiles() {
+        let mut m = Metrics::default();
+        m.admitted = 3;
+        m.record_decode_step(Duration::from_millis(2), 3);
+        m.record_decode_step(Duration::from_millis(2), 2);
+        for lat in [10.0, 20.0, 30.0] {
+            m.record_request(lat, 4);
+        }
+        assert_eq!(m.decode_calls, 2);
+        assert_eq!(m.decode_slot_steps, 5);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.generated_tokens, 12);
+        // 5 slot-steps over 4 ms of counter-only decode time.
+        assert!((m.decode_slot_steps_per_sec() - 1250.0).abs() < 1.0);
+        let (p50, p99) = m.latency_percentiles();
+        assert_eq!(p50, 20.0);
+        assert_eq!(p99, 30.0);
+        let report = m.report();
+        assert!(report.contains("continuous:"), "{report}");
+        assert!(report.contains("3 completed"), "{report}");
+
+        let mut base = Metrics::default();
+        base.record_decode(Duration::from_millis(1), 1);
+        base.merge(m);
+        assert_eq!(base.decode_calls, 3);
+        assert_eq!(base.completed, 3);
+        assert_eq!(base.latency_percentiles().0, 20.0);
     }
 
     #[test]

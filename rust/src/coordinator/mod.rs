@@ -7,14 +7,25 @@
 //! (latency / throughput) — all in Rust over the PJRT runtime;
 //! Python is never on this path.
 //!
-//! Scheduling model: *batch-synchronous with early termination*. The
-//! engine's executables are compiled for a fixed batch B; the scheduler
-//! drains up to B requests per wave, prefills them together, then
-//! decodes until every sequence has emitted EOS (or hit its token
-//! budget) — finished slots simply stop contributing steps, and the
-//! wave ends as soon as all slots finish. (Slot-level continuous
-//! batching would require per-slot KV-cache splicing across PJRT
-//! literals; see DESIGN.md §Perf for the measured trade-off.)
+//! Scheduling model — two, by backend:
+//!
+//! * **Native backend: continuous batching** (since PR 7).
+//!   [`run_to_completion`](Coordinator::run_to_completion) hands the
+//!   queue to [`scheduler::ContinuousScheduler`], which admits requests
+//!   into free batch slots at *any* decode step, recycles a slot the
+//!   moment its request finishes, and pages each slot's KV state out of
+//!   a shared fixed-size block pool (`runtime::paged`) instead of a
+//!   dense `max_ctx` buffer. Each decode step drives all live slots
+//!   through one `vec_dot_mat` GEMM panel; per-slot token streams stay
+//!   bit-identical to solo runs (see the scheduler docs for why).
+//! * **PJRT backend: batch-synchronous waves with early termination.**
+//!   The compiled executables fix batch B; [`run_wave`](Coordinator::run_wave)
+//!   drains up to B requests, prefills them together, then decodes
+//!   until every sequence has emitted EOS or hit its budget. Slot-level
+//!   continuous batching would require per-slot KV-cache splicing
+//!   across PJRT literals; see DESIGN.md §Perf for the trade-off.
+//!   `run_wave` remains available for the native backend too (the
+//!   `dsq serve --wave` escape hatch and differential tests).
 //!
 //! The coordinator is backend-agnostic: it drives the same wave loop
 //! whether the engine holds compiled PJRT executables or the native
@@ -39,6 +50,7 @@
 
 pub mod metrics;
 pub mod sampler;
+pub mod scheduler;
 
 use crate::eval::tasks::{EOS, PAD};
 use crate::runtime::Engine;
@@ -120,13 +132,41 @@ impl Coordinator {
         self.queue.len()
     }
 
-    /// Drain the queue, returning responses in completion order.
+    /// Drain the queue, returning responses in completion order. On
+    /// the native backend this runs the continuous-batching scheduler
+    /// (per-step admission, paged KV); the PJRT backend keeps the wave
+    /// loop. Either way each request's token stream is the same — the
+    /// differential suite in `tests/continuous_batching.rs` holds the
+    /// two paths bit-identical.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
+        if self.engine.native().is_some() {
+            return self.run_continuous();
+        }
         let mut out = Vec::new();
         while !self.queue.is_empty() {
             out.extend(self.run_wave()?);
         }
         Ok(out)
+    }
+
+    /// Drain the queue through a [`scheduler::ContinuousScheduler`]
+    /// with default sizing (dense-equivalent block pool, unbounded
+    /// queue), folding its metrics into the coordinator's.
+    fn run_continuous(&mut self) -> Result<Vec<Response>> {
+        let engine = self.engine.native().expect("caller checked the backend");
+        let mut sched =
+            scheduler::ContinuousScheduler::new(engine, scheduler::ServeConfig::default())?;
+        for req in self.queue.drain(..) {
+            match sched.submit(req)? {
+                scheduler::SubmitOutcome::Queued => {}
+                scheduler::SubmitOutcome::Backpressure(req) => {
+                    bail!("unbounded scheduler queue backpressured request {}", req.id)
+                }
+            }
+        }
+        let responses = sched.run_to_completion()?;
+        self.metrics.merge(sched.into_metrics());
+        Ok(responses)
     }
 
     /// Run one batch wave (up to `engine.batch()` requests).

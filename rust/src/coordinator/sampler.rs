@@ -27,23 +27,37 @@ impl SamplingParams {
 
 /// Sample one token from a logits row.
 pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Pcg) -> i32 {
+    let mut buf = Vec::new();
+    sample_into(logits, params, rng, &mut buf)
+}
+
+/// [`sample`] with a caller-owned scratch buffer: once `buf` has grown
+/// to the vocab size it is only cleared and refilled, so the continuous
+/// scheduler's steady-state decode loop samples without touching the
+/// heap. Bit-identical to [`sample`] — the unstable sort's explicit
+/// ascending-index tie-break reproduces exactly the order a stable
+/// descending-probability sort leaves equal entries in.
+pub fn sample_into(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Pcg,
+    buf: &mut Vec<(usize, f32)>,
+) -> i32 {
     if params.temperature <= 0.0 {
         return argmax(logits);
     }
     // Softmax with temperature (stable: subtract max).
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let inv_t = 1.0 / params.temperature;
-    let mut probs: Vec<(usize, f32)> = logits
-        .iter()
-        .enumerate()
-        .map(|(i, &l)| (i, ((l - max) * inv_t).exp()))
-        .collect();
+    buf.clear();
+    buf.extend(logits.iter().enumerate().map(|(i, &l)| (i, ((l - max) * inv_t).exp())));
+    let probs = buf;
     let z: f32 = probs.iter().map(|(_, p)| p).sum();
     for p in probs.iter_mut() {
         p.1 /= z;
     }
     // Nucleus truncation.
-    probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    probs.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
     let mut cum = 0.0;
     let mut cut = probs.len();
     for (i, (_, p)) in probs.iter().enumerate() {
@@ -56,7 +70,7 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Pcg) -> i32 {
     probs.truncate(cut);
     let z: f32 = probs.iter().map(|(_, p)| p).sum();
     let mut r = rng.next_f32() * z;
-    for (i, p) in &probs {
+    for (i, p) in probs.iter() {
         r -= p;
         if r <= 0.0 {
             return *i as i32;
@@ -150,6 +164,28 @@ mod tests {
             }
         }
         assert!(distinct >= 6, "only {distinct}/8 adjacent seed pairs differed");
+    }
+
+    /// `sample_into` must be bit-identical to `sample` — including on
+    /// logits rows full of exact ties, where the unstable sort's
+    /// index tie-break has to reproduce the stable sort's order.
+    #[test]
+    fn sample_into_matches_sample_bit_for_bit() {
+        let params = SamplingParams { temperature: 0.8, top_p: 0.9, max_new_tokens: 4 };
+        // Many repeated values → equal probabilities → tie-break matters.
+        let logits: Vec<f32> = (0..48).map(|i| ((i % 5) as f32) * 0.25).collect();
+        let mut buf = Vec::new();
+        for seed in 0..32u64 {
+            let mut a = Pcg::new(seed);
+            let mut b = Pcg::new(seed);
+            for _ in 0..16 {
+                assert_eq!(
+                    sample(&logits, &params, &mut a),
+                    sample_into(&logits, &params, &mut b, &mut buf),
+                    "seed {seed}"
+                );
+            }
+        }
     }
 
     /// Cloning the RNG mid-stream must replay the suffix — the

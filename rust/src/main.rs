@@ -8,7 +8,11 @@
 //! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json] [--native]
 //! dsq eval --native [--model M] [--scheme S]   (synthetic container, no artifacts)
 //! dsq serve --hlo D --ckpt F --requests N [--native]   (serving smoke/throughput)
-//! dsq serve --native [--model M] [--scheme S] [--requests N]   (no artifacts)
+//! dsq serve --native [--model M] [--scheme S] [--requests N]
+//!           [--kv-blocks N] [--block-tokens N] [--max-pending N] [--wave]
+//!   Native serving runs the continuous-batching scheduler (per-step
+//!   admission, paged KV from a block pool, submit-time backpressure);
+//!   --wave forces the legacy batch-synchronous wave loop instead.
 //! dsq memory --model M --scheme S [--ctx N] [--seqs N]
 //! dsq recommend --model M               §4.4 device recommendations
 //! dsq sweep-error --input CKPT.dsq      bpw ↔ reconstruction error (E10)
@@ -23,7 +27,7 @@ use dsq::cli::Args;
 use dsq::container::{
     quantize_container, quantize_container_with, synthetic_f32_container, Container,
 };
-use dsq::coordinator::{sampler::SamplingParams, Coordinator, Request};
+use dsq::coordinator::{sampler::SamplingParams, scheduler, Coordinator, Request};
 use dsq::eval::{self, report, suites};
 use dsq::memory::{self, devices};
 use dsq::model::ModelConfig;
@@ -63,6 +67,11 @@ Commands:
   eval --native [--model M] [--scheme S]    (synthetic container — works for tiny-dense too)
   serve --hlo DIR --ckpt FILE [--requests N] [--threads N] [--native]
   serve --native [--model M] [--scheme S] [--requests N]   (synthetic container)
+        [--kv-blocks N]    KV block pool size (0 = dense-equivalent capacity)
+        [--block-tokens N] tokens per paged-KV block (0 = default 4)
+        [--max-pending N]  queue depth before submit backpressures (default 2×batch)
+        [--wave]           legacy batch-synchronous waves instead of
+                           continuous batching (always used for PJRT)
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
@@ -332,28 +341,74 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n: usize = args.flag_parse("requests", 64usize)?;
     let threads = args.threads_flag(quant::parallel::max_threads())?;
     let engine = load_engine_from_args(args, &hlo, threads)?;
-    let mut coord = Coordinator::new(engine);
     // Mixed request stream drawn from the benchmark distribution.
-    let mut made = 0u64;
-    for suite in suites::SUITES.iter().cycle() {
-        if made as usize >= n {
-            break;
-        }
-        let q = eval::tasks::eval_question(suite, made);
-        coord.submit(Request {
-            id: made,
+    let make_req = |id: u64| {
+        let suite = &suites::SUITES[(id % suites::SUITES.len() as u64) as usize];
+        let q = eval::tasks::eval_question(suite, id);
+        Request {
+            id,
             prompt: q.prompt,
             params: SamplingParams::paper(),
-            seed: made.wrapping_mul(7919),
-        })?;
-        made += 1;
+            seed: id.wrapping_mul(7919),
+        }
+    };
+    // PJRT has no paged-KV path; `--wave` forces the legacy scheduler
+    // on the native backend too (the differential baseline).
+    if args.switch("wave") || engine.native().is_none() {
+        let mut coord = Coordinator::new(engine);
+        for id in 0..n as u64 {
+            coord.submit(make_req(id))?;
+        }
+        let t0 = std::time::Instant::now();
+        let mut responses = Vec::new();
+        while coord.pending() > 0 {
+            responses.extend(coord.run_wave()?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!("{}", coord.metrics.report());
+        println!(
+            "served {} requests in {wall:.2}s wall ({:.2} req/s end-to-end)",
+            responses.len(),
+            responses.len() as f64 / wall
+        );
+        return Ok(());
     }
+    let native = engine.native().expect("checked above");
+    let cfg = scheduler::ServeConfig {
+        kv_blocks: args.flag_parse("kv-blocks", 0usize)?,
+        block_tokens: args.flag_parse("block-tokens", 0usize)?,
+        max_pending: args.flag_parse("max-pending", 2 * native.batch())?,
+    };
+    let mut sched = scheduler::ContinuousScheduler::new(native, cfg)?;
     let t0 = std::time::Instant::now();
-    let responses = coord.run_to_completion()?;
+    let mut responses = Vec::new();
+    for id in 0..n as u64 {
+        let mut req = make_req(id);
+        // Submit-time backpressure: when the queue is at --max-pending
+        // the scheduler hands the request back; drain a step (admitting
+        // and decoding) and retry instead of growing the queue without
+        // bound.
+        loop {
+            match sched.submit(req)? {
+                scheduler::SubmitOutcome::Queued => break,
+                scheduler::SubmitOutcome::Backpressure(r) => {
+                    req = r;
+                    sched.step()?;
+                    responses.extend(sched.take_responses());
+                }
+            }
+        }
+    }
+    responses.extend(sched.run_to_completion()?);
     let wall = t0.elapsed().as_secs_f64();
-    println!("{}", coord.metrics.report());
+    let metrics = sched.into_metrics();
+    println!("{}", metrics.report());
+    let (p50, p99) = metrics.latency_percentiles();
+    let goodput = metrics.generated_tokens as f64 / wall;
     println!(
-        "served {} requests in {wall:.2}s wall ({:.2} req/s end-to-end)",
+        "served {} requests in {wall:.2}s wall ({:.2} req/s end-to-end)\n\
+         continuous batching: latency p50 {p50:.1} ms, p99 {p99:.1} ms, \
+         goodput {goodput:.1} tok/s",
         responses.len(),
         responses.len() as f64 / wall
     );

@@ -154,6 +154,7 @@
 use crate::container::{Container, TensorEntry};
 use crate::model::{ModelConfig, ModelKind};
 use crate::quant::{self, kernels, QuantFormat};
+use crate::runtime::paged::{KvBlock, KvBlockPool};
 use crate::util::math;
 use anyhow::{bail, Context, Result};
 
@@ -178,22 +179,50 @@ pub enum MatvecMode {
     Pinned(kernels::DispatchArm),
 }
 
-/// Per-slot KV cache: `[n_layers][max_ctx][width]` f32, filled front to
-/// back; `len` positions are valid in every layer. The row width is
-/// [`ModelConfig::kv_cache_width`] (compressed latent + rope key for
-/// MLA, per-head K then V for GQA).
+/// How a [`KvCache`]'s rows are stored.
+enum KvBacking {
+    /// One contiguous `[n_layers][max_ctx][width]` buffer (plus the
+    /// expanded plane), lazily allocated on the first forwarded token —
+    /// the wave-serving layout.
+    Dense {
+        data: Vec<f32>,
+        /// Absorbed-MLA expanded-row plane: per position the per-head
+        /// `k_nope|v` rows the `kv_b` matvec produces from the latent,
+        /// written once at append time. Empty when `xwidth == 0`
+        /// (GQA, or MLA with absorption disabled).
+        xdata: Vec<f32>,
+    },
+    /// Fixed-size blocks drawn from a shared [`KvBlockPool`] — the
+    /// continuous-batching layout. The `Vec` *is* the block table:
+    /// position `p` lives in `blocks[p / block_tokens]` at in-block
+    /// offset `p % block_tokens` (each block holds `block_tokens`
+    /// positions of **all** layers). Grown explicitly with
+    /// [`KvCache::grow_to`] before forwarding.
+    Paged {
+        blocks: Vec<KvBlock>,
+        block_tokens: usize,
+    },
+}
+
+/// Per-slot KV cache: logically `[n_layers][max_ctx][width]` f32,
+/// filled front to back; `len` positions are valid in every layer. The
+/// row width is [`ModelConfig::kv_cache_width`] (compressed latent +
+/// rope key for MLA, per-head K then V for GQA).
 ///
-/// The backing buffer is **lazily allocated** on the first forwarded
-/// token: a cache created for a batch slot that never sees a token
-/// (skipped at prefill, inactive at decode) costs a few machine words,
-/// not `n_layers × max_ctx × width` floats.
+/// Two backings share every forward path bit-for-bit (the row values
+/// never depend on where a row lives):
+///
+/// - **Dense** ([`ForwardPass::new_cache`]): one buffer, lazily
+///   allocated on the first forwarded token, so a batch slot that never
+///   sees a token costs a few machine words, not
+///   `n_layers × max_ctx × width` floats.
+/// - **Paged** ([`ForwardPass::new_paged_cache`]): fixed-size blocks
+///   from a shared [`KvBlockPool`], grown per admission/step with
+///   [`KvCache::grow_to`] and recycled with [`KvCache::release`] — the
+///   continuous-batching scheduler's layout (see
+///   [`crate::runtime::paged`]).
 pub struct KvCache {
-    data: Vec<f32>,
-    /// Absorbed-MLA expanded-row plane: per position the per-head
-    /// `k_nope|v` rows the `kv_b` matvec produces from the latent,
-    /// written once at append time. Empty when `xwidth == 0`
-    /// (GQA, or MLA with absorption disabled).
-    xdata: Vec<f32>,
+    backing: KvBacking,
     len: usize,
     width: usize,
     xwidth: usize,
@@ -203,7 +232,34 @@ pub struct KvCache {
 
 impl KvCache {
     fn new(n_layers: usize, width: usize, xwidth: usize, max_ctx: usize) -> Self {
-        KvCache { data: Vec::new(), xdata: Vec::new(), len: 0, width, xwidth, max_ctx, n_layers }
+        KvCache {
+            backing: KvBacking::Dense { data: Vec::new(), xdata: Vec::new() },
+            len: 0,
+            width,
+            xwidth,
+            max_ctx,
+            n_layers,
+        }
+    }
+
+    fn new_paged(
+        n_layers: usize,
+        width: usize,
+        xwidth: usize,
+        max_ctx: usize,
+        block_tokens: usize,
+    ) -> Self {
+        KvCache {
+            backing: KvBacking::Paged {
+                blocks: Vec::with_capacity(max_ctx.div_ceil(block_tokens)),
+                block_tokens,
+            },
+            len: 0,
+            width,
+            xwidth,
+            max_ctx,
+            n_layers,
+        }
     }
 
     /// Tokens cached so far (== the next token's position).
@@ -219,57 +275,238 @@ impl KvCache {
         self.max_ctx
     }
 
-    /// Whether the backing buffer has been allocated yet (it is, lazily,
-    /// by the first forwarded token — the skipped-slot regression tests
-    /// assert it stays `false` for slots a wave never touches).
+    /// Whether any backing memory is held yet (dense: the lazy buffer
+    /// was allocated by the first forwarded token; paged: at least one
+    /// block was taken — the skipped-slot regression tests assert it
+    /// stays `false` for slots a wave never touches).
     pub fn is_allocated(&self) -> bool {
-        !self.data.is_empty()
+        match &self.backing {
+            KvBacking::Dense { data, .. } => !data.is_empty(),
+            KvBacking::Paged { blocks, .. } => !blocks.is_empty(),
+        }
     }
 
-    /// Allocate the backing buffer(s) on first use.
-    fn ensure_allocated(&mut self) {
-        if self.data.is_empty() {
-            self.data = vec![0.0; self.n_layers * self.max_ctx * self.width];
+    /// Token positions this cache can currently hold without growing:
+    /// `max_ctx` for dense (the lazy buffer covers everything),
+    /// the block table's coverage for paged.
+    pub fn capacity(&self) -> usize {
+        match &self.backing {
+            KvBacking::Dense { .. } => self.max_ctx,
+            KvBacking::Paged { blocks, block_tokens } => {
+                (blocks.len() * block_tokens).min(self.max_ctx)
+            }
         }
-        if self.xwidth > 0 && self.xdata.is_empty() {
-            self.xdata = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
+    }
+
+    /// Make room for a cache of `tokens` positions: dense caches
+    /// lazily allocate their full buffer; paged caches must already
+    /// have been grown ([`KvCache::grow_to`]) — forwarding never
+    /// touches the pool, so an under-grown paged cache is a scheduler
+    /// bug reported before any state changes.
+    fn prepare_append(&mut self, tokens: usize) -> Result<()> {
+        match &mut self.backing {
+            KvBacking::Dense { data, xdata } => {
+                if data.is_empty() {
+                    *data = vec![0.0; self.n_layers * self.max_ctx * self.width];
+                }
+                if self.xwidth > 0 && xdata.is_empty() {
+                    *xdata = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
+                }
+                Ok(())
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let cap = blocks.len() * *block_tokens;
+                if cap < tokens {
+                    bail!(
+                        "paged KV cache holds {} blocks × {block_tokens} tokens = {cap} \
+                         positions but {tokens} are needed: grow it from the block pool \
+                         (KvCache::grow_to) before forwarding",
+                        blocks.len()
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Grow a paged cache's block table to cover `tokens` positions,
+    /// taking blocks from `pool` (each take must be covered by the
+    /// admission-time reservation — see [`crate::runtime::paged`]).
+    /// No-op when the table already covers `tokens`.
+    pub fn grow_to(&mut self, tokens: usize, pool: &mut KvBlockPool) -> Result<()> {
+        if tokens > self.max_ctx {
+            bail!(
+                "paged KV cache cannot grow to {tokens} tokens: the engine's configured \
+                 max context is {}",
+                self.max_ctx
+            );
+        }
+        if !pool.matches(self.n_layers, self.width, self.xwidth) {
+            bail!(
+                "paged KV cache shape ({} layers × width {} / xwidth {}) does not match \
+                 the block pool it is growing from — was MLA absorption toggled after \
+                 the pool was created?",
+                self.n_layers,
+                self.width,
+                self.xwidth
+            );
+        }
+        match &mut self.backing {
+            KvBacking::Dense { .. } => bail!("grow_to: dense KV caches do not use a block pool"),
+            KvBacking::Paged { blocks, block_tokens } => {
+                let need = tokens.div_ceil(*block_tokens);
+                while blocks.len() < need {
+                    blocks.push(pool.take()?);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Return every block to `pool` and reset the cache for reuse by
+    /// the next admitted request (paged caches only; returns the number
+    /// of blocks released). Block contents are left stale — safe, see
+    /// [`crate::runtime::paged`].
+    pub fn release(&mut self, pool: &mut KvBlockPool) -> usize {
+        self.len = 0;
+        match &mut self.backing {
+            KvBacking::Dense { .. } => 0,
+            KvBacking::Paged { blocks, .. } => {
+                let n = blocks.len();
+                for b in blocks.drain(..) {
+                    pool.put(b);
+                }
+                n
+            }
+        }
+    }
+
+    /// The base addresses of this cache's blocks (empty for dense) —
+    /// the aliasing property test's seam: across all live caches every
+    /// address must be distinct.
+    pub fn block_addrs(&self) -> Vec<usize> {
+        match &self.backing {
+            KvBacking::Dense { .. } => Vec::new(),
+            KvBacking::Paged { blocks, .. } => {
+                blocks.iter().map(|b| b.data.as_ptr() as usize).collect()
+            }
         }
     }
 
     fn row(&self, layer: usize, pos: usize) -> &[f32] {
-        let at = (layer * self.max_ctx + pos) * self.width;
-        &self.data[at..at + self.width]
+        match &self.backing {
+            KvBacking::Dense { data, .. } => {
+                let at = (layer * self.max_ctx + pos) * self.width;
+                &data[at..at + self.width]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let b = &blocks[pos / block_tokens];
+                let at = (layer * block_tokens + pos % block_tokens) * self.width;
+                &b.data[at..at + self.width]
+            }
+        }
     }
 
     fn row_mut(&mut self, layer: usize, pos: usize) -> &mut [f32] {
-        let at = (layer * self.max_ctx + pos) * self.width;
-        &mut self.data[at..at + self.width]
+        match &mut self.backing {
+            KvBacking::Dense { data, .. } => {
+                let at = (layer * self.max_ctx + pos) * self.width;
+                &mut data[at..at + self.width]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let bt = *block_tokens;
+                let b = &mut blocks[pos / bt];
+                let at = (layer * bt + pos % bt) * self.width;
+                &mut b.data[at..at + self.width]
+            }
+        }
     }
 
     fn xrow(&self, layer: usize, pos: usize) -> &[f32] {
-        let at = (layer * self.max_ctx + pos) * self.xwidth;
-        &self.xdata[at..at + self.xwidth]
+        match &self.backing {
+            KvBacking::Dense { xdata, .. } => {
+                let at = (layer * self.max_ctx + pos) * self.xwidth;
+                &xdata[at..at + self.xwidth]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let b = &blocks[pos / block_tokens];
+                let at = (layer * block_tokens + pos % block_tokens) * self.xwidth;
+                &b.xdata[at..at + self.xwidth]
+            }
+        }
     }
 
     /// One position's latent row (read) together with its expanded row
     /// (write) — the borrow split the append-time expansion needs.
     fn row_and_xrow_mut(&mut self, layer: usize, pos: usize) -> (&[f32], &mut [f32]) {
-        let at = (layer * self.max_ctx + pos) * self.width;
-        let xat = (layer * self.max_ctx + pos) * self.xwidth;
-        (&self.data[at..at + self.width], &mut self.xdata[xat..xat + self.xwidth])
+        match &mut self.backing {
+            KvBacking::Dense { data, xdata } => {
+                let at = (layer * self.max_ctx + pos) * self.width;
+                let xat = (layer * self.max_ctx + pos) * self.xwidth;
+                (&data[at..at + self.width], &mut xdata[xat..xat + self.xwidth])
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let bt = *block_tokens;
+                let b = &mut blocks[pos / bt];
+                let at = (layer * bt + pos % bt) * self.width;
+                let xat = (layer * bt + pos % bt) * self.xwidth;
+                (&b.data[at..at + self.width], &mut b.xdata[xat..xat + self.xwidth])
+            }
+        }
     }
 
-    /// The raw cache plane (`[n_layers][max_ctx][width]`, zero-filled
-    /// past `len`) — the bit-identity tests compare prefill paths on
-    /// this directly.
+    /// The raw dense cache plane (`[n_layers][max_ctx][width]`,
+    /// zero-filled past `len`) — the bit-identity tests compare prefill
+    /// paths on this directly. Dense-only seam: paged caches return an
+    /// empty slice (compare via [`KvCache::copy_rows`] instead).
     pub fn raw_rows(&self) -> &[f32] {
-        &self.data
+        match &self.backing {
+            KvBacking::Dense { data, .. } => data,
+            KvBacking::Paged { .. } => &[],
+        }
     }
 
-    /// The raw absorbed-MLA expanded plane (empty unless absorption is
-    /// active) — same inspection seam as [`KvCache::raw_rows`].
+    /// The raw dense absorbed-MLA expanded plane (empty unless
+    /// absorption is active) — same inspection seam as
+    /// [`KvCache::raw_rows`].
     pub fn raw_expanded(&self) -> &[f32] {
-        &self.xdata
+        match &self.backing {
+            KvBacking::Dense { xdata, .. } => xdata,
+            KvBacking::Paged { .. } => &[],
+        }
+    }
+
+    /// Materialize the logical `[n_layers][max_ctx][width]` plane for
+    /// either backing: positions `< len` copied row by row, everything
+    /// past `len` zero. Only `< len` rows are meaningful to compare —
+    /// recycled paged blocks carry stale values past `len` where a
+    /// dense buffer holds zeros, so this is the cross-backing
+    /// reconstruction seam the property tests use.
+    pub fn copy_rows(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.n_layers * self.max_ctx * self.width];
+        for layer in 0..self.n_layers {
+            for pos in 0..self.len {
+                let at = (layer * self.max_ctx + pos) * self.width;
+                out[at..at + self.width].copy_from_slice(self.row(layer, pos));
+            }
+        }
+        out
+    }
+
+    /// [`KvCache::copy_rows`] for the absorbed-MLA expanded plane
+    /// (empty when absorption is off / GQA).
+    pub fn copy_expanded(&self) -> Vec<f32> {
+        if self.xwidth == 0 {
+            return Vec::new();
+        }
+        let mut out = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
+        for layer in 0..self.n_layers {
+            for pos in 0..self.len {
+                let at = (layer * self.max_ctx + pos) * self.xwidth;
+                out[at..at + self.xwidth].copy_from_slice(self.xrow(layer, pos));
+            }
+        }
+        out
     }
 }
 
@@ -427,11 +664,21 @@ struct FfnScratch {
 }
 
 /// Panel (multi-token) intermediates for
-/// [`ForwardPass::forward_tokens`]: token-major `[T][dim]` panels
-/// sized for `T = max_ctx`, plus the row-major GEMM staging buffer.
-/// Allocated once with the rest of the scratch, so panel prefill
-/// touches the heap zero times per prompt.
+/// [`ForwardPass::forward_tokens`] and
+/// [`ForwardPass::forward_step_batch`]: token-major `[T][dim]` panels
+/// sized for `T = cap` (`max_ctx`, or the batch width if larger — see
+/// [`ForwardPass::new_scratch_cols`]), plus the row-major GEMM staging
+/// buffer. Allocated once with the rest of the scratch, so panel
+/// prefill and batched decode touch the heap zero times per call.
 struct PanelScratch {
+    /// Panel column capacity (`T ≤ cap` for every panel call).
+    cap: usize,
+    /// Batched decode: column → batch-slot map (the live slots, in
+    /// ascending slot order).
+    cols: Vec<usize>,
+    /// Batched decode: per-column logits staging (`[cap][vocab]`)
+    /// before the scatter back to slot-major rows.
+    lp: Vec<f32>,
     /// Residual stream panel.
     h: Vec<f32>,
     /// Normed panel (attention/FFN input).
@@ -685,23 +932,69 @@ impl ForwardPass {
         self.absorb_mla = absorb;
     }
 
-    /// A fresh, empty per-slot cache bounded by this model's `max_ctx`.
-    /// The backing buffer is allocated lazily on the first forwarded
-    /// token, so idle batch slots stay (almost) free.
-    pub fn new_cache(&self) -> KvCache {
-        let xwidth = match self.cfg.kind {
+    /// Expanded-plane row width of the caches this pass creates (zero
+    /// unless absorbed MLA is active).
+    fn cache_xwidth(&self) -> usize {
+        match self.cfg.kind {
             ModelKind::MlaMoe if self.absorb_mla => {
                 self.cfg.n_heads * (self.cfg.qk_nope_head_dim + self.cfg.v_head_dim)
             }
             _ => 0,
-        };
-        KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), xwidth, self.max_ctx)
+        }
+    }
+
+    /// A fresh, empty per-slot cache bounded by this model's `max_ctx`.
+    /// The backing buffer is allocated lazily on the first forwarded
+    /// token, so idle batch slots stay (almost) free.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), self.cache_xwidth(), self.max_ctx)
+    }
+
+    /// A KV block pool sized for this model's cache shape: `capacity`
+    /// blocks of `block_tokens` positions each (all layers, both
+    /// planes). Create the pool *after* any
+    /// [`ForwardPass::set_mla_absorption`] call — the flag decides the
+    /// expanded-plane width the blocks carry, and
+    /// [`KvCache::grow_to`] rejects mismatched pools.
+    pub fn new_block_pool(&self, capacity: usize, block_tokens: usize) -> Result<KvBlockPool> {
+        KvBlockPool::new(
+            self.cfg.n_layers,
+            self.cfg.kv_cache_width(),
+            self.cache_xwidth(),
+            block_tokens,
+            capacity,
+        )
+    }
+
+    /// A fresh, empty **paged** per-slot cache allocating from `pool`
+    /// (same logical layout and bits as [`ForwardPass::new_cache`];
+    /// grow it with [`KvCache::grow_to`] before forwarding, recycle
+    /// with [`KvCache::release`]).
+    pub fn new_paged_cache(&self, pool: &KvBlockPool) -> Result<KvCache> {
+        let (w, xw) = (self.cfg.kv_cache_width(), self.cache_xwidth());
+        if !pool.matches(self.cfg.n_layers, w, xw) {
+            bail!(
+                "paged cache shape ({} layers × width {w} / xwidth {xw}) does not match \
+                 the block pool — was MLA absorption toggled after the pool was created?",
+                self.cfg.n_layers
+            );
+        }
+        Ok(KvCache::new_paged(self.cfg.n_layers, w, xw, self.max_ctx, pool.block_tokens()))
     }
 
     /// A scratch sized for this model and context bound. One per slot
     /// (or per serving thread) is enough; [`ForwardPass::forward_token`]
     /// fully overwrites every buffer it reads.
     pub fn new_scratch(&self) -> Scratch {
+        self.new_scratch_cols(0)
+    }
+
+    /// A scratch whose panels additionally fit `cols` batched-decode
+    /// columns ([`ForwardPass::forward_step_batch`] needs one column
+    /// per live slot, and a serving batch may exceed `max_ctx`). The
+    /// panels are sized for `max(max_ctx, cols)` columns, so the same
+    /// scratch still serves every prefill/token path.
+    pub fn new_scratch_cols(&self, cols: usize) -> Scratch {
         let cfg = &self.cfg;
         let (q_len, heads_len, q_rank, kv_a_len, kvb_len) = match cfg.kind {
             ModelKind::MlaMoe => (
@@ -720,7 +1013,7 @@ impl ForwardPass {
             .intermediate_size
             .max(cfg.moe_intermediate_size)
             .max(cfg.n_shared_experts * cfg.moe_intermediate_size);
-        let mc = self.max_ctx;
+        let mc = self.max_ctx.max(cols);
         let hs = cfg.hidden_size;
         // GQA projects V through its own panel; MLA leaves it empty.
         let vp_len = match cfg.kind {
@@ -728,13 +1021,15 @@ impl ForwardPass {
             ModelKind::DenseGqa => cfg.n_kv_heads * cfg.head_dim,
         };
         // Widest batched-GEMM output this model produces (the `mat`
-        // staging buffer holds one `[rows][T]` product at a time).
+        // staging buffer holds one `[rows][T]` product at a time;
+        // vocab_size covers the batched-decode unembedding panel).
         let max_rows = hs
             .max(q_len)
             .max(q_rank)
             .max(cfg.kv_cache_width())
             .max(inter_max)
-            .max(cfg.n_routed_experts);
+            .max(cfg.n_routed_experts)
+            .max(cfg.vocab_size);
         Scratch {
             h: vec![0.0; hs],
             xn: vec![0.0; hs],
@@ -756,6 +1051,9 @@ impl ForwardPass {
                 idx: Vec::with_capacity(cfg.n_routed_experts),
             },
             panel: PanelScratch {
+                cap: mc,
+                cols: Vec::with_capacity(mc),
+                lp: vec![0.0; mc * cfg.vocab_size],
                 h: vec![0.0; mc * hs],
                 xn: vec![0.0; mc * hs],
                 delta: vec![0.0; mc * hs],
@@ -1579,7 +1877,7 @@ impl ForwardPass {
             }
             return Ok(());
         }
-        cache.ensure_allocated();
+        cache.prepare_append(base + t)?;
         let hs = self.cfg.hidden_size;
         let Scratch { xn, ffn, panel: p, .. } = scratch;
         for (j, &tok) in toks.iter().enumerate() {
@@ -1641,7 +1939,7 @@ impl ForwardPass {
                 bail!("logits buffer {} != vocab {}", out.len(), self.cfg.vocab_size);
             }
         }
-        cache.ensure_allocated();
+        cache.prepare_append(pos + 1)?;
         let Scratch { h, xn, delta, attn, ffn, .. } = scratch;
         self.embed(tok, h)?;
         for (li, lw) in self.layers.iter().enumerate() {
@@ -1662,6 +1960,314 @@ impl ForwardPass {
             self.matvec(&self.output, xn, out)?;
         }
         Ok(())
+    }
+
+    /// One decode step for a whole batch of independent slots as a
+    /// single GEMM panel — the continuous-batching hot path. Each live
+    /// slot `i` (`live[i]`) forwards `toks[i]` at its own cache's next
+    /// position; its logits land in `logits[i*vocab..]` (dead slots'
+    /// rows are zeroed).
+    ///
+    /// Every projection, FFN and the unembedding batch the live slots'
+    /// activations through the decode-once `vec_dot_mat` kernels (one
+    /// quantized-tile decode per step instead of one per slot), while
+    /// the per-slot cache writes, RoPE, attention scores/softmax and
+    /// value sums run per column against that column's own cache —
+    /// exactly [`ForwardPass::forward_token`]'s loops. By the GEMM
+    /// contract every column's bits equal the single-column matvec, so
+    /// **each slot's logits are bit-identical to running it alone**,
+    /// regardless of which other slots share the step (the
+    /// `tests/continuous_batching.rs` differential gate). With one live
+    /// slot (or eager MLA) this *is* the per-token path.
+    ///
+    /// All live slots are validated up front (context bound, paged
+    /// capacity), so an error leaves every cache unchanged.
+    pub fn forward_step_batch(
+        &self,
+        toks: &[i32],
+        live: &[bool],
+        caches: &mut [KvCache],
+        scratch: &mut Scratch,
+        logits: &mut [f32],
+    ) -> Result<()> {
+        let n_slots = caches.len();
+        if toks.len() != n_slots || live.len() != n_slots {
+            bail!(
+                "forward_step_batch: {} tokens / {} live flags for {n_slots} caches",
+                toks.len(),
+                live.len()
+            );
+        }
+        let v = self.cfg.vocab_size;
+        if logits.len() != n_slots * v {
+            bail!(
+                "forward_step_batch: logits buffer {} != {n_slots} slots × vocab {v}",
+                logits.len()
+            );
+        }
+        for (i, cache) in caches.iter_mut().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let pos = cache.len;
+            if pos >= cache.max_ctx {
+                bail!(
+                    "KV cache full: slot {i} token at position {pos} exceeds the \
+                     engine's configured max context {}",
+                    cache.max_ctx
+                );
+            }
+            cache.prepare_append(pos + 1)?;
+        }
+        logits.fill(0.0);
+        let t = live.iter().filter(|&&l| l).count();
+        if t == 0 {
+            return Ok(());
+        }
+        let eager_mla = matches!(self.cfg.kind, ModelKind::MlaMoe) && !self.absorb_mla;
+        if t == 1 || eager_mla {
+            for i in 0..n_slots {
+                if !live[i] {
+                    continue;
+                }
+                let row = &mut logits[i * v..(i + 1) * v];
+                self.forward_token(toks[i], &mut caches[i], scratch, Some(row))?;
+            }
+            return Ok(());
+        }
+        let hs = self.cfg.hidden_size;
+        let Scratch { ffn, panel: p, .. } = scratch;
+        if t > p.cap {
+            bail!(
+                "forward_step_batch: {t} live slots exceed the scratch's {}-column \
+                 panel capacity (create it with ForwardPass::new_scratch_cols)",
+                p.cap
+            );
+        }
+        p.cols.clear();
+        for (i, &l) in live.iter().enumerate() {
+            if l {
+                p.cols.push(i);
+            }
+        }
+        for (c, &slot) in p.cols.iter().enumerate() {
+            self.embed(toks[slot], &mut p.h[c * hs..(c + 1) * hs])?;
+        }
+        for (li, lw) in self.layers.iter().enumerate() {
+            for c in 0..t {
+                let (a, b) = (c * hs, (c + 1) * hs);
+                rms_norm(&p.h[a..b], &lw.attn_norm, &mut p.xn[a..b]);
+            }
+            self.attention_step(li, lw, t, caches, p)?;
+            for (hv, &dv) in p.h[..t * hs].iter_mut().zip(&p.delta[..t * hs]) {
+                *hv += dv;
+            }
+            for c in 0..t {
+                let (a, b) = (c * hs, (c + 1) * hs);
+                rms_norm(&p.h[a..b], &lw.ffn_norm, &mut p.xn[a..b]);
+            }
+            self.ffn_panel(lw, t, ffn, p)?;
+            for (hv, &dv) in p.h[..t * hs].iter_mut().zip(&p.delta[..t * hs]) {
+                *hv += dv;
+            }
+        }
+        for &slot in &p.cols {
+            caches[slot].len += 1;
+        }
+        // Batched unembedding, then a pure scatter of finished f32
+        // values back to slot-major logits rows (bit-preserving).
+        for c in 0..t {
+            let (a, b) = (c * hs, (c + 1) * hs);
+            rms_norm(&p.h[a..b], &self.output_norm, &mut p.xn[a..b]);
+        }
+        self.matvec_mat(&self.output, &p.xn[..t * hs], hs, t, &mut p.mat, &mut p.lp[..t * v])?;
+        for (c, &slot) in p.cols.iter().enumerate() {
+            logits[slot * v..(slot + 1) * v].copy_from_slice(&p.lp[c * v..(c + 1) * v]);
+        }
+        Ok(())
+    }
+
+    /// Batched-decode attention for one layer: each column `c` attends
+    /// over its own slot's cache (`caches[p.cols[c]]`) at that cache's
+    /// next position, dispatched by architecture family. Reads `p.xn`,
+    /// writes `p.delta`.
+    fn attention_step(
+        &self,
+        li: usize,
+        lw: &LayerWeights,
+        t: usize,
+        caches: &mut [KvCache],
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        match &lw.attn {
+            LayerAttn::Mla { q_a, q_a_norm, q_b, kv_a, kv_a_norm, kv_b } => self
+                .attention_mla_step(
+                    li,
+                    (q_a, q_a_norm.as_slice(), q_b, kv_a, kv_a_norm.as_slice(), kv_b),
+                    &lw.attn_output,
+                    t,
+                    caches,
+                    p,
+                ),
+            LayerAttn::Gqa { q, k, v } => {
+                self.attention_gqa_step(li, (q, k, v), &lw.attn_output, t, caches, p)
+            }
+        }
+    }
+
+    /// Batched-decode MLA attention (absorbed caches only — eager mode
+    /// falls back to the token loop in
+    /// [`ForwardPass::forward_step_batch`]). Identical to
+    /// [`ForwardPass::attention_mla_panel`] except each column targets
+    /// its own cache at its own position instead of consecutive
+    /// positions of one cache; per column the cache write, RoPE and
+    /// score/value loops are exactly [`ForwardPass::attention_mla`]'s.
+    #[allow(clippy::too_many_arguments, clippy::type_complexity)]
+    fn attention_mla_step(
+        &self,
+        li: usize,
+        (q_a_w, q_a_norm, q_b_w, kv_a_w, kv_a_norm, kv_b_w): (
+            &TensorEntry,
+            &[f32],
+            &TensorEntry,
+            &TensorEntry,
+            &[f32],
+            &TensorEntry,
+        ),
+        attn_output: &TensorEntry,
+        t: usize,
+        caches: &mut [KvCache],
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let hs = cfg.hidden_size;
+        let (nope, vh) = (cfg.qk_nope_head_dim, cfg.v_head_dim);
+        let qk_head = nope + cfg.qk_rope_head_dim;
+        let (q_rank, kv_rank) = (cfg.q_lora_rank, cfg.kv_lora_rank);
+        let kv_w = cfg.kv_cache_width();
+        let q_len = cfg.n_heads * qk_head;
+        let ho_w = cfg.n_heads * vh;
+
+        let xs = &p.xn[..t * hs];
+        self.matvec_mat(q_a_w, xs, hs, t, &mut p.mat, &mut p.q_a[..t * q_rank])?;
+        for c in 0..t {
+            let (a, b) = (c * q_rank, (c + 1) * q_rank);
+            rms_norm(&p.q_a[a..b], q_a_norm, &mut p.q_an[a..b]);
+        }
+        let q_an = &p.q_an[..t * q_rank];
+        self.matvec_mat(q_b_w, q_an, q_rank, t, &mut p.mat, &mut p.q[..t * q_len])?;
+
+        self.matvec_mat(kv_a_w, xs, hs, t, &mut p.mat, &mut p.kv[..t * kv_w])?;
+        for c in 0..t {
+            let cache = &mut caches[p.cols[c]];
+            let pos = cache.len;
+            let kv_a = &p.kv[c * kv_w..(c + 1) * kv_w];
+            {
+                let row = cache.row_mut(li, pos);
+                rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
+                row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
+                self.rope.apply(&mut row[kv_rank..], pos);
+            }
+            let (row, xrow) = cache.row_and_xrow_mut(li, pos);
+            self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
+        }
+
+        let inv_scale = 1.0 / (qk_head as f32).sqrt();
+        p.heads_out[..t * ho_w].fill(0.0);
+        for c in 0..t {
+            let cache = &caches[p.cols[c]];
+            let pos = cache.len;
+            let scores = &mut p.scores[..pos + 1];
+            let q = &mut p.q[c * q_len..(c + 1) * q_len];
+            let heads_out = &mut p.heads_out[c * ho_w..(c + 1) * ho_w];
+            for hd in 0..cfg.n_heads {
+                let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
+                self.rope.apply(&mut qh[nope..], pos);
+                for (pp, sc) in scores.iter_mut().enumerate() {
+                    let k_nope = &cache.xrow(li, pp)[hd * (nope + vh)..][..nope];
+                    let k_rope = &cache.row(li, pp)[kv_rank..];
+                    let sv = kernels::dot_lanes(&qh[..nope], k_nope)
+                        + kernels::dot_lanes(&qh[nope..], k_rope);
+                    *sc = sv * inv_scale;
+                }
+                math::softmax_in_place(scores);
+                let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
+                for (pp, &w) in scores.iter().enumerate() {
+                    let v = &cache.xrow(li, pp)[hd * (nope + vh) + nope..][..vh];
+                    for (o, &vv) in oh.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        let ho = &p.heads_out[..t * ho_w];
+        self.matvec_mat(attn_output, ho, ho_w, t, &mut p.mat, &mut p.delta[..t * hs])
+    }
+
+    /// Batched-decode GQA attention: the per-column analogue of
+    /// [`ForwardPass::attention_gqa_panel`] over each column's own
+    /// cache/position ([`ForwardPass::attention_gqa`]'s loops exactly).
+    #[allow(clippy::too_many_arguments)]
+    fn attention_gqa_step(
+        &self,
+        li: usize,
+        (q_w, k_w, v_w): (&TensorEntry, &TensorEntry, &TensorEntry),
+        attn_output: &TensorEntry,
+        t: usize,
+        caches: &mut [KvCache],
+        p: &mut PanelScratch,
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let hs = cfg.hidden_size;
+        let hd = cfg.head_dim;
+        let kd = cfg.n_kv_heads * hd;
+        let group = cfg.n_heads / cfg.n_kv_heads;
+        let q_len = cfg.n_heads * hd;
+
+        let xs = &p.xn[..t * hs];
+        self.matvec_mat(q_w, xs, hs, t, &mut p.mat, &mut p.q[..t * q_len])?;
+        self.matvec_mat(k_w, xs, hs, t, &mut p.mat, &mut p.kv[..t * kd])?;
+        self.matvec_mat(v_w, xs, hs, t, &mut p.mat, &mut p.v[..t * kd])?;
+        for c in 0..t {
+            let cache = &mut caches[p.cols[c]];
+            let pos = cache.len;
+            let row = cache.row_mut(li, pos);
+            let (krow, vrow) = row.split_at_mut(kd);
+            krow.copy_from_slice(&p.kv[c * kd..(c + 1) * kd]);
+            vrow.copy_from_slice(&p.v[c * kd..(c + 1) * kd]);
+            for kh in 0..cfg.n_kv_heads {
+                self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+            }
+        }
+
+        let inv_scale = 1.0 / (hd as f32).sqrt();
+        p.heads_out[..t * q_len].fill(0.0);
+        for c in 0..t {
+            let cache = &caches[p.cols[c]];
+            let pos = cache.len;
+            let scores = &mut p.scores[..pos + 1];
+            let q = &mut p.q[c * q_len..(c + 1) * q_len];
+            let heads_out = &mut p.heads_out[c * q_len..(c + 1) * q_len];
+            for h in 0..cfg.n_heads {
+                let qh = &mut q[h * hd..(h + 1) * hd];
+                self.rope.apply(qh, pos);
+                let kh = h / group;
+                for (pp, sc) in scores.iter_mut().enumerate() {
+                    let k = &cache.row(li, pp)[kh * hd..(kh + 1) * hd];
+                    *sc = kernels::dot_lanes(qh, k) * inv_scale;
+                }
+                math::softmax_in_place(scores);
+                let oh = &mut heads_out[h * hd..(h + 1) * hd];
+                for (pp, &w) in scores.iter().enumerate() {
+                    let v = &cache.row(li, pp)[kd + kh * hd..][..hd];
+                    for (o, &vv) in oh.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        let ho = &p.heads_out[..t * q_len];
+        self.matvec_mat(attn_output, ho, q_len, t, &mut p.mat, &mut p.delta[..t * hs])
     }
 }
 

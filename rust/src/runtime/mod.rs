@@ -45,6 +45,7 @@ pub mod forward;
 pub mod loader;
 pub mod manifest;
 pub mod native;
+pub mod paged;
 pub mod xla;
 
 use crate::container::Container;
@@ -250,6 +251,17 @@ impl Engine {
         let model_name = native.forward().config().name.clone();
         let scheme_name = native.forward().scheme_name().to_string();
         Ok(Engine { backend: Backend::Native(native), model_name, scheme_name })
+    }
+
+    /// The native backend, when this engine carries one — the
+    /// continuous-batching scheduler drives it directly (per-step
+    /// admission needs the forward pass, not the wave-shaped step API).
+    /// PJRT engines return `None` and keep serving fixed waves.
+    pub fn native(&self) -> Option<&native::NativeEngine> {
+        match &self.backend {
+            Backend::Native(m) => Some(m),
+            Backend::Pjrt { .. } => None,
+        }
     }
 
     pub fn batch(&self) -> usize {

@@ -33,7 +33,8 @@
 //! `rust/tests/golden/forward.*.fnv64` checksums, and proven on the
 //! deployment host by `dsq selfcheck`).
 
-use super::forward::{ForwardPass, KvCache, Scratch};
+use super::forward::{ForwardPass, KvCache, MatvecMode, Scratch};
+use super::paged::KvBlockPool;
 use crate::container::Container;
 use crate::quant::QuantFormat;
 use anyhow::{bail, Result};
@@ -138,18 +139,35 @@ impl NativeEngine {
         self.fwd.output_format()
     }
 
-    /// Direct access to the forward-pass model (tests, selfcheck).
+    /// Direct access to the forward-pass model (tests, selfcheck, the
+    /// continuous-batching scheduler).
     pub fn forward(&self) -> &ForwardPass {
         &self.fwd
     }
 
+    /// Override the matvec execution mode (thread count or pinned
+    /// dispatch arm) — the arm-identity seam the continuous-batching
+    /// determinism tests drive. Logits are bit-identical under every
+    /// mode.
+    pub fn set_mode(&mut self, mode: MatvecMode) {
+        self.fwd.set_mode(mode);
+    }
+
+    /// A KV block pool sized for this engine's cache shape (see
+    /// [`ForwardPass::new_block_pool`]).
+    pub fn new_block_pool(&self, capacity: usize, block_tokens: usize) -> Result<KvBlockPool> {
+        self.fwd.new_block_pool(capacity, block_tokens)
+    }
+
     /// Fresh per-slot caches (and the wave's reused scratch) for one
     /// wave. Nothing is heap-allocated per slot beyond the cache
-    /// handles themselves: KV buffers appear lazily on first use.
+    /// handles themselves: KV buffers appear lazily on first use. The
+    /// scratch panels are sized for `max(max_ctx, batch)` columns so
+    /// batched decode can feed every live slot through one GEMM panel.
     pub fn new_batch_kv(&self) -> BatchKv {
         BatchKv {
             slots: (0..self.batch).map(|_| self.fwd.new_cache()).collect(),
-            scratch: self.fwd.new_scratch(),
+            scratch: self.fwd.new_scratch_cols(self.batch),
         }
     }
 
@@ -186,19 +204,19 @@ impl NativeEngine {
     /// (`pos[i] < 0` marks an inactive slot — finished or unused — whose
     /// logits row is zeroed and whose cache is left untouched). Returns
     /// row-major `[batch, vocab]` logits.
+    ///
+    /// Since PR 7 the live slots run as **one GEMM panel** per step
+    /// ([`ForwardPass::forward_step_batch`]): each quantized weight
+    /// tile is decoded once per step instead of once per live slot,
+    /// with every slot's logits bit-identical to stepping it alone.
     pub fn decode(&self, token: &[i32], pos: &[i32], kv: &mut BatchKv) -> Result<Vec<f32>> {
         let (b, v) = (self.batch, self.vocab());
         if token.len() != b || pos.len() != b || kv.slots.len() != b {
             bail!("decode input shape mismatch");
         }
         let mut logits = vec![0f32; b * v];
-        for (slot, cache) in kv.slots.iter_mut().enumerate() {
-            if pos[slot] < 0 {
-                continue;
-            }
-            let row = &mut logits[slot * v..(slot + 1) * v];
-            self.fwd.forward_token(token[slot], cache, &mut kv.scratch, Some(row))?;
-        }
+        let live: Vec<bool> = pos.iter().map(|&p| p >= 0).collect();
+        self.fwd.forward_step_batch(token, &live, &mut kv.slots, &mut kv.scratch, &mut logits)?;
         Ok(logits)
     }
 }

@@ -1,0 +1,269 @@
+//! Paged KV allocation for the continuous-batching scheduler: a pool
+//! of fixed-size KV **blocks** that per-slot [`super::forward::KvCache`]s
+//! draw from and return to, decoupling how many requests can be live at
+//! once from `max_ctx` — a slot only ever holds the blocks its actual
+//! context length needs, not a dense `n_layers × max_ctx × width`
+//! buffer.
+//!
+//! ## Block layout
+//!
+//! One [`KvBlock`] stores `block_tokens` consecutive positions of **one
+//! slot's** cache across *all* layers: `data` is
+//! `[n_layers][block_tokens][width]` and (for absorbed MLA) `xdata` is
+//! `[n_layers][block_tokens][xwidth]`. A paged cache's block table is
+//! simply its `Vec<KvBlock>` — position `p` lives in block
+//! `p / block_tokens` at in-block offset `p % block_tokens`. Blocks are
+//! *moved* between the pool's free list and exactly one cache, so two
+//! slots can never alias the same block by construction (the
+//! pointer-uniqueness property tests re-verify this from outside).
+//!
+//! ## Block size
+//!
+//! `block_tokens` trades internal fragmentation (a slot wastes at most
+//! `block_tokens − 1` trailing token slots per plane) against
+//! block-table overhead and pool churn (smaller blocks mean more
+//! `take`/`put` traffic and more table entries per slot). The serving
+//! default is 4 — with the native engine's `max_ctx = 24` that is 6
+//! blocks per full-length slot, and a short 3-token request holds 1
+//! block instead of a full dense buffer.
+//!
+//! ## Reservation discipline (why admission can never deadlock)
+//!
+//! The pool tracks two counters: `outstanding` (blocks currently held
+//! by caches) and `reserved` (blocks promised to admitted requests).
+//! The scheduler reserves a request's **worst-case** block count
+//! (`ceil(min(prompt + max_new, max_ctx) / block_tokens)`) *before*
+//! admitting it — [`KvBlockPool::try_reserve`] fails when the pool
+//! cannot promise that many, and the request simply waits in the queue.
+//! [`KvBlockPool::take`] refuses to hand out a block beyond the
+//! reserved count, so the invariant `outstanding ≤ reserved ≤ capacity`
+//! holds at every step and an admitted request's mid-generation
+//! `grow_to` can never starve: its blocks were promised at admission.
+//! Requests whose worst case exceeds the *total* capacity are rejected
+//! at submit time with a clear error — they could never be scheduled.
+//!
+//! ## Recycling
+//!
+//! When a request finishes (or is cancelled) its cache releases every
+//! block back to the free list and the reservation is dropped. Freed
+//! blocks keep their (stale) contents; that is safe because attention
+//! at position `p` only reads rows `0..=p`, each written earlier by the
+//! *current* request before being read. The free list is pre-reserved
+//! to `capacity`, so steady-state recycling performs zero heap
+//! allocations — after warmup every admission is served from the free
+//! list ([`KvBlockPool::created`] stops growing, asserted by the
+//! counting-allocator test in `tests/continuous_batching.rs`).
+
+use anyhow::{bail, Result};
+
+/// One fixed-size page of KV state: `block_tokens` positions across all
+/// layers of a single slot's cache. Created by [`KvBlockPool::take`],
+/// returned by [`KvBlockPool::put`]; owned by at most one cache at a
+/// time.
+pub struct KvBlock {
+    /// `[n_layers][block_tokens][width]` main KV plane.
+    pub(crate) data: Vec<f32>,
+    /// `[n_layers][block_tokens][xwidth]` absorbed-MLA expanded plane
+    /// (empty when `xwidth == 0`).
+    pub(crate) xdata: Vec<f32>,
+}
+
+/// The fixed-capacity block pool a [`ContinuousScheduler`]'s paged
+/// caches allocate from.
+///
+/// [`ContinuousScheduler`]: crate::coordinator::scheduler::ContinuousScheduler
+pub struct KvBlockPool {
+    n_layers: usize,
+    width: usize,
+    xwidth: usize,
+    block_tokens: usize,
+    capacity: usize,
+    /// Recycled blocks, pre-reserved to `capacity` so `put` never
+    /// reallocates.
+    free: Vec<KvBlock>,
+    outstanding: usize,
+    reserved: usize,
+    created: usize,
+    peak_outstanding: usize,
+}
+
+impl KvBlockPool {
+    pub(crate) fn new(
+        n_layers: usize,
+        width: usize,
+        xwidth: usize,
+        block_tokens: usize,
+        capacity: usize,
+    ) -> Result<Self> {
+        if block_tokens == 0 {
+            bail!("KV block pool needs block_tokens ≥ 1");
+        }
+        if capacity == 0 {
+            bail!("KV block pool needs capacity ≥ 1 block");
+        }
+        Ok(KvBlockPool {
+            n_layers,
+            width,
+            xwidth,
+            block_tokens,
+            capacity,
+            free: Vec::with_capacity(capacity),
+            outstanding: 0,
+            reserved: 0,
+            created: 0,
+            peak_outstanding: 0,
+        })
+    }
+
+    /// Whether this pool's block layout matches a cache/model shape.
+    pub(crate) fn matches(&self, n_layers: usize, width: usize, xwidth: usize) -> bool {
+        self.n_layers == n_layers && self.width == width && self.xwidth == xwidth
+    }
+
+    /// Tokens per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total blocks this pool may ever hand out at once.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocks currently held by caches.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Blocks currently promised to admitted requests.
+    pub fn reserved(&self) -> usize {
+        self.reserved
+    }
+
+    /// Recycled blocks waiting on the free list.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks ever heap-allocated (monotone; stops growing once the
+    /// free list covers the working set — the zero-alloc gate).
+    pub fn created(&self) -> usize {
+        self.created
+    }
+
+    /// High-water mark of `outstanding` — bounded by the sum of
+    /// concurrent reservations, hence by `capacity` (the analytic bound
+    /// the property tests check).
+    pub fn peak_outstanding(&self) -> usize {
+        self.peak_outstanding
+    }
+
+    /// Promise `n` blocks to a request about to be admitted. Returns
+    /// `false` (promising nothing) when the pool cannot cover the
+    /// request's worst case on top of existing promises — the caller
+    /// leaves the request queued.
+    pub fn try_reserve(&mut self, n: usize) -> bool {
+        if self.reserved + n > self.capacity {
+            return false;
+        }
+        self.reserved += n;
+        true
+    }
+
+    /// Drop `n` promised blocks (request finished or cancelled).
+    pub fn unreserve(&mut self, n: usize) {
+        debug_assert!(n <= self.reserved, "unreserve {n} > reserved {}", self.reserved);
+        self.reserved = self.reserved.saturating_sub(n);
+    }
+
+    /// Hand out one block, recycled from the free list when possible.
+    /// Every take must be covered by a prior [`KvBlockPool::try_reserve`]
+    /// — taking beyond the reserved count is a scheduler bug, reported
+    /// as an error rather than silently overcommitting.
+    pub(crate) fn take(&mut self) -> Result<KvBlock> {
+        if self.outstanding >= self.reserved {
+            bail!(
+                "KV block pool: take without a covering reservation \
+                 ({} outstanding, {} reserved, {} capacity) — admission must \
+                 reserve a request's worst-case blocks before it grows a cache",
+                self.outstanding,
+                self.reserved,
+                self.capacity
+            );
+        }
+        self.outstanding += 1;
+        self.peak_outstanding = self.peak_outstanding.max(self.outstanding);
+        if let Some(b) = self.free.pop() {
+            return Ok(b);
+        }
+        self.created += 1;
+        Ok(KvBlock {
+            data: vec![0.0; self.n_layers * self.block_tokens * self.width],
+            xdata: vec![0.0; self.n_layers * self.block_tokens * self.xwidth],
+        })
+    }
+
+    /// Return a block to the free list (contents left stale — see the
+    /// module docs for why that is safe).
+    pub(crate) fn put(&mut self, b: KvBlock) {
+        debug_assert_eq!(b.data.len(), self.n_layers * self.block_tokens * self.width);
+        debug_assert!(self.outstanding > 0, "put with nothing outstanding");
+        self.outstanding -= 1;
+        self.free.push(b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(capacity: usize) -> KvBlockPool {
+        KvBlockPool::new(2, 8, 0, 4, capacity).unwrap()
+    }
+
+    #[test]
+    fn take_requires_a_reservation() {
+        let mut p = pool(4);
+        let err = p.take().unwrap_err().to_string();
+        assert!(err.contains("reservation"), "{err}");
+        assert!(p.try_reserve(2));
+        let a = p.take().unwrap();
+        let b = p.take().unwrap();
+        assert!(p.take().is_err(), "third take exceeds the 2-block reservation");
+        assert_eq!(p.outstanding(), 2);
+        p.put(a);
+        p.put(b);
+        p.unreserve(2);
+        assert_eq!((p.outstanding(), p.reserved(), p.free_blocks()), (0, 0, 2));
+    }
+
+    #[test]
+    fn reservations_are_capacity_bounded() {
+        let mut p = pool(3);
+        assert!(p.try_reserve(2));
+        assert!(!p.try_reserve(2), "2+2 > 3 must fail without promising anything");
+        assert_eq!(p.reserved(), 2);
+        assert!(p.try_reserve(1));
+        assert!(!p.try_reserve(1));
+    }
+
+    #[test]
+    fn recycling_serves_from_the_free_list() {
+        let mut p = pool(2);
+        assert!(p.try_reserve(1));
+        let a = p.take().unwrap();
+        p.put(a);
+        p.unreserve(1);
+        assert_eq!(p.created(), 1);
+        assert!(p.try_reserve(1));
+        let _b = p.take().unwrap();
+        assert_eq!(p.created(), 1, "recycled take must not heap-allocate a new block");
+        assert_eq!(p.peak_outstanding(), 1);
+    }
+
+    #[test]
+    fn degenerate_pools_are_rejected() {
+        assert!(KvBlockPool::new(1, 4, 0, 0, 4).is_err());
+        assert!(KvBlockPool::new(1, 4, 0, 4, 0).is_err());
+    }
+}
