@@ -207,6 +207,9 @@ fn main() -> anyhow::Result<()> {
             ("model", json::str_("tiny-moe")),
             ("scheme", json::str_("q4_k_m")),
             ("cores", json::num(threads as f64)),
+            // Shard count of the serving engine (0 = local/unsharded;
+            // the shard-count sweep lives in `benches/sharded.rs`).
+            ("shards", json::num(engine.shard_count() as f64)),
             ("decode_panel", json::Value::Arr(panel_report)),
             ("offered_load", json::Value::Arr(load_report)),
         ]);

@@ -1,0 +1,166 @@
+//! Sharded-serving benchmark — the Table-2 8-device deployment plan
+//! run as real cooperating shard workers, measured on the scaled 671B
+//! census proxy (`deepseek-v3-671b-sim`: the production layer plan
+//! with 64 routed experts, so `--shards 8` puts 8 experts per shard
+//! exactly like the paper's 256/32-per-device deployment).
+//!
+//! For each shard count the same prefill + decode workload runs
+//! through `ForwardPass::set_sharding(n)`. Logits are bit-identical by
+//! the `tests/sharded_identity.rs` suite, so the numbers isolate pure
+//! partition/exchange overhead: tokens per second for panel prefill
+//! and per-token decode, the exchange-barrier count, and the driver's
+//! total wait inside barriers. Per-shard resident weight bytes are
+//! verified against the analytic [`dsq::memory::shard_weights`]
+//! prediction — any drift fails the bench.
+//!
+//! Pass `--json-sharded PATH` to write the measurements as JSON (CI's
+//! `BENCH_sharded.json`).
+
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
+use dsq::memory::shard_weights;
+use dsq::model::ModelConfig;
+use dsq::quant::parallel;
+use dsq::runtime::forward::ForwardPass;
+use dsq::scheme::Scheme;
+use dsq::util::json;
+use std::time::Instant;
+
+const MAX_CTX: usize = 96;
+const PREFILL_LEN: usize = 48;
+const DECODE_STEPS: usize = 48;
+const PREFILL_REPS: usize = 3;
+
+fn sim_container() -> anyhow::Result<Container> {
+    let src = synthetic_f32_container(&ModelConfig::deepseek_v3_671b_sim(), 0x671B)?;
+    let scheme = dsq::scheme::builtin::scheme("q4_k_m")?;
+    let threads = parallel::max_threads();
+    Container::from_bytes(quantize_container_with(&src, &scheme, None, threads)?.to_bytes())
+}
+
+struct Run {
+    prefill_tok_s: f64,
+    decode_tok_s: f64,
+    exchanges: u64,
+    exchange_wait_ms: f64,
+    resident_max_bytes: u64,
+    planned_max_bytes: u64,
+}
+
+fn run(q: &Container, threads: usize, scheme: &Scheme, shards: usize) -> anyhow::Result<Run> {
+    let mut fwd = ForwardPass::new(Container::from_bytes(q.to_bytes())?, threads, MAX_CTX)?;
+    fwd.set_sharding(shards)?;
+    let mut scratch = fwd.new_scratch();
+    let prompt: Vec<i32> = (0..PREFILL_LEN as i32).map(|i| 2 + (i * 17) % 1000).collect();
+    let vocab = fwd.vocab();
+    let mut logits = vec![0f32; vocab];
+
+    // Validate the planner contract before timing anything.
+    let (resident_max_bytes, planned_max_bytes) = match fwd.shards() {
+        Some(sh) => {
+            let planned = shard_weights(fwd.config(), scheme, shards)?;
+            let planned_totals: Vec<u64> =
+                planned.iter().map(|s| s.iter().map(|(_, b)| b).sum()).collect();
+            if planned_totals != sh.resident_bytes() {
+                anyhow::bail!(
+                    "planner-vs-engine drift at {shards} shards: planned {planned_totals:?} \
+                     vs resident {:?}",
+                    sh.resident_bytes()
+                );
+            }
+            let max = |v: &[u64]| v.iter().copied().max().unwrap_or(0);
+            (max(sh.resident_bytes()), max(&planned_totals))
+        }
+        None => (0, 0),
+    };
+
+    // Warm-up wave (lazy allocations, dispatch-arm env lookup).
+    let mut cache = fwd.new_cache();
+    fwd.forward_tokens(&prompt, &mut cache, &mut scratch, Some(&mut logits))?;
+
+    let (x0, w0) = match fwd.shards() {
+        Some(sh) => (sh.exchanges(), sh.exchange_wait_ns()),
+        None => (0, 0),
+    };
+
+    // Panel prefill, fresh cache per repetition.
+    let t0 = Instant::now();
+    for _ in 0..PREFILL_REPS {
+        let mut c = fwd.new_cache();
+        fwd.forward_tokens(&prompt, &mut c, &mut scratch, Some(&mut logits))?;
+    }
+    let prefill_tok_s = (PREFILL_REPS * PREFILL_LEN) as f64 / t0.elapsed().as_secs_f64();
+
+    // Per-token decode continuing off the warm cache.
+    let t0 = Instant::now();
+    for step in 0..DECODE_STEPS {
+        let tok = 2 + ((step * 13) % 1000) as i32;
+        fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits))?;
+    }
+    let decode_tok_s = DECODE_STEPS as f64 / t0.elapsed().as_secs_f64();
+    std::hint::black_box(&logits);
+
+    let (exchanges, exchange_wait_ms) = match fwd.shards() {
+        Some(sh) => (sh.exchanges() - x0, (sh.exchange_wait_ns() - w0) as f64 / 1e6),
+        None => (0, 0.0),
+    };
+    Ok(Run {
+        prefill_tok_s,
+        decode_tok_s,
+        exchanges,
+        exchange_wait_ms,
+        resident_max_bytes,
+        planned_max_bytes,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json-sharded")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let threads = parallel::max_threads();
+    let scheme = dsq::scheme::builtin::scheme("q4_k_m")?;
+    let q = sim_container()?;
+    println!(
+        "# sharded native serving on deepseek-v3-671b-sim / q4_k_m ({threads} threads); \
+         shards=0 is the local (unsharded) engine\n"
+    );
+    let mut rows = Vec::new();
+    for shards in [0usize, 1, 2, 4, 8] {
+        let r = run(&q, threads, &scheme, shards)?;
+        println!(
+            "bench sharded/shards-{shards} prefill {:>7.1} tok/s | decode {:>6.1} tok/s | \
+             {:>5} exchanges ({:>7.1} ms waited) | max shard resident {:.2} MiB",
+            r.prefill_tok_s,
+            r.decode_tok_s,
+            r.exchanges,
+            r.exchange_wait_ms,
+            r.resident_max_bytes as f64 / (1 << 20) as f64,
+        );
+        rows.push(json::obj(vec![
+            ("shards", json::num(shards as f64)),
+            ("prefill_tok_s", json::num(r.prefill_tok_s)),
+            ("decode_tok_s", json::num(r.decode_tok_s)),
+            ("exchanges", json::num(r.exchanges as f64)),
+            ("exchange_wait_ms", json::num(r.exchange_wait_ms)),
+            ("resident_max_bytes", json::num(r.resident_max_bytes as f64)),
+            ("planned_max_bytes", json::num(r.planned_max_bytes as f64)),
+        ]));
+    }
+    if let Some(path) = json_path {
+        let doc = json::obj(vec![
+            ("bench", json::str_("sharded")),
+            ("model", json::str_("deepseek-v3-671b-sim")),
+            ("scheme", json::str_("q4_k_m")),
+            ("cores", json::num(threads as f64)),
+            ("prefill_len", json::num(PREFILL_LEN as f64)),
+            ("decode_steps", json::num(DECODE_STEPS as f64)),
+            ("shard_sweep", json::Value::Arr(rows)),
+        ]);
+        std::fs::write(&path, json::to_string_pretty(&doc))?;
+        eprintln!("wrote sharded bench JSON → {path}");
+    }
+    Ok(())
+}

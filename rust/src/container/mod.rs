@@ -392,6 +392,44 @@ pub fn quantize_container_with(
     Ok(w)
 }
 
+/// Load a calibration importance-matrix container and validate it
+/// against the model container it will steer: an imatrix is itself a
+/// `.dsq` file whose tensors hold per-element importance under the
+/// **same names** as the model's tensors. Every imatrix tensor must
+/// name a tensor of `src` and carry exactly as many elements (one
+/// importance weight per model weight) — a mismatched width would
+/// silently mis-weight the scale search, so both drifts are rejected
+/// here with the offending tensor named, before any quantization work
+/// starts (`dsq quantize --imatrix F`).
+pub fn load_imatrix(
+    path: &Path,
+    src: &Container,
+) -> Result<std::collections::HashMap<String, Vec<f32>>> {
+    let c = Container::open(path)?;
+    let mut map = std::collections::HashMap::with_capacity(c.tensors.len());
+    for t in &c.tensors {
+        let model_t = src.tensor(&t.name).map_err(|_| {
+            anyhow!(
+                "imatrix {}: tensor {} does not exist in the model checkpoint",
+                path.display(),
+                t.name
+            )
+        })?;
+        if t.n_elems() != model_t.n_elems() {
+            bail!(
+                "imatrix {}: tensor {} has {} importance values but the model tensor \
+                 has {} weights",
+                path.display(),
+                t.name,
+                t.n_elems(),
+                model_t.n_elems()
+            );
+        }
+        map.insert(t.name.clone(), c.dequantize(t)?);
+    }
+    Ok(map)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

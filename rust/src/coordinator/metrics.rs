@@ -34,6 +34,14 @@ pub struct Metrics {
     /// counter-only for the same reason: admission must allocate
     /// nothing but KV blocks from the pool.
     pub prefill_step_ns: u128,
+    /// Shard workers the native forward pass was partitioned across
+    /// (0 = unsharded local execution).
+    pub shards: u64,
+    /// Barrier/all-gather exchange steps the sharded pass completed
+    /// (copied from `runtime::sharded::ShardRuntime` at run end).
+    pub exchanges: u64,
+    /// Total driver time spent inside exchange barriers, nanoseconds.
+    pub exchange_wait_ns: u64,
     prefill_ms: Vec<f64>,
     decode_ms: Vec<f64>,
     wave_ms: Vec<f64>,
@@ -155,6 +163,9 @@ impl Metrics {
         self.rejected += other.rejected;
         self.decode_step_ns += other.decode_step_ns;
         self.prefill_step_ns += other.prefill_step_ns;
+        self.shards = self.shards.max(other.shards);
+        self.exchanges += other.exchanges;
+        self.exchange_wait_ns += other.exchange_wait_ns;
         self.prefill_ms.extend(other.prefill_ms);
         self.decode_ms.extend(other.decode_ms);
         self.wave_ms.extend(other.wave_ms);
@@ -228,13 +239,23 @@ impl Metrics {
         } else {
             String::new()
         };
+        let sharded = if self.shards > 0 {
+            format!(
+                "\nsharded: {} shards, {} exchange barriers, {:.1} ms total exchange wait",
+                self.shards,
+                self.exchanges,
+                self.exchange_wait_ns as f64 / 1e6
+            )
+        } else {
+            String::new()
+        };
         format!(
             "waves {} | requests {} | gen tokens {}\n\
              prefill: {} calls ({} seqs, {} prompt tokens), median {:.1} ms, p90 {:.1} ms\n\
              decode:  {} calls ({} live slot-steps), median {:.1} ms, p90 {:.1} ms\n\
              wave:    median {:.1} ms, p90 {:.1} ms\n\
              throughput: {:.1} tok/s, {:.2} req/s, {:.1} live slot-steps/s, \
-             {:.1} prefill tok/s{continuous}",
+             {:.1} prefill tok/s{continuous}{sharded}",
             self.waves,
             self.requests,
             self.generated_tokens,

@@ -72,6 +72,9 @@ Commands:
         [--max-pending N]  queue depth before submit backpressures (default 2×batch)
         [--wave]           legacy batch-synchronous waves instead of
                            continuous batching (always used for PJRT)
+        [--shards N]       partition the native forward pass across N shard
+                           workers (expert-parallel MoE + row-parallel matmuls;
+                           logits bit-identical to unsharded; also for eval)
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
@@ -238,8 +241,11 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let output = PathBuf::from(args.require("output")?);
     let threads = args.threads_flag(quant::parallel::max_threads())?;
     let src = Container::open(&input)?;
+    // imatrix container: a .dsq file whose tensors hold per-element
+    // importance (f32), same names/widths as the model — validated
+    // against `src` before any quantization work starts.
     let imatrix = match args.flag("imatrix") {
-        Some(p) => Some(load_imatrix(Path::new(p))?),
+        Some(p) => Some(dsq::container::load_imatrix(Path::new(p), &src)?),
         None => None,
     };
     let t0 = std::time::Instant::now();
@@ -261,27 +267,26 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_imatrix(path: &Path) -> Result<std::collections::HashMap<String, Vec<f32>>> {
-    // imatrix container: a .dsq file whose tensors hold per-element
-    // importance (f32), same names as the model.
-    let c = Container::open(path)?;
-    let mut map = std::collections::HashMap::new();
-    for t in &c.tensors {
-        map.insert(t.name.clone(), c.dequantize(t)?);
-    }
-    Ok(map)
-}
-
 /// Resolve the serving engine for `eval`/`serve`: `--ckpt FILE` serves
 /// a checkpoint from disk (native or PJRT per `--native`); `--native`
 /// **without** `--ckpt` synthesizes a deterministic quantized container
 /// in memory from `--model M` (default tiny-moe) and `--scheme S`
 /// (default dq3_k_m), so both model kinds — tiny-moe and the Table-5
 /// tiny-dense proxy — can be served end to end with zero artifacts:
-/// `dsq eval --native --model tiny-dense`.
+/// `dsq eval --native --model tiny-dense`. `--shards N` partitions the
+/// native forward pass across N shard workers (`runtime::sharded`) —
+/// logits stay bit-identical to the unsharded engine at every count.
 fn load_engine_from_args(args: &Args, hlo: &Path, threads: usize) -> Result<Engine> {
+    let shards: usize = args.flag_parse("shards", 0usize)?;
+    if shards > 0 && !args.switch("native") {
+        bail!("--shards requires the native backend (pass --native)");
+    }
     match (args.flag("ckpt"), args.switch("native")) {
-        (Some(ckpt), true) => Engine::load_native(Path::new(ckpt), threads),
+        (Some(ckpt), true) => Engine::native_from_container_sharded(
+            Container::open(Path::new(ckpt))?,
+            threads,
+            shards,
+        ),
         (Some(ckpt), false) => Engine::load_with(hlo, Path::new(ckpt), threads),
         (None, true) => {
             let model = ModelConfig::by_name(&args.flag_or("model", "tiny-moe"))?;
@@ -300,7 +305,7 @@ fn load_engine_from_args(args: &Args, hlo: &Path, threads: usize) -> Result<Engi
                  with {scheme_name}",
                 model.name
             );
-            Engine::native_from_container(ckpt, threads)
+            Engine::native_from_container_sharded(ckpt, threads, shards)
         }
         (None, false) => bail!(
             "missing required flag --ckpt (or pass --native with --model M to serve a \
@@ -365,6 +370,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             responses.extend(coord.run_wave()?);
         }
         let wall = t0.elapsed().as_secs_f64();
+        if let Some(sh) = coord.engine().native().and_then(|m| m.forward().shards()) {
+            coord.metrics.shards = sh.n_shards() as u64;
+            coord.metrics.exchanges = sh.exchanges();
+            coord.metrics.exchange_wait_ns = sh.exchange_wait_ns();
+        }
         println!("{}", coord.metrics.report());
         println!(
             "served {} requests in {wall:.2}s wall ({:.2} req/s end-to-end)",
@@ -401,7 +411,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     responses.extend(sched.run_to_completion()?);
     let wall = t0.elapsed().as_secs_f64();
-    let metrics = sched.into_metrics();
+    let mut metrics = sched.into_metrics();
+    if let Some(sh) = native.forward().shards() {
+        metrics.shards = sh.n_shards() as u64;
+        metrics.exchanges = sh.exchanges();
+        metrics.exchange_wait_ns = sh.exchange_wait_ns();
+    }
     println!("{}", metrics.report());
     let (p50, p99) = metrics.latency_percentiles();
     let goodput = metrics.generated_tokens as f64 / wall;
@@ -789,13 +804,64 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         }
     }
 
+    // Sharded identity: partitioning the same forward pass across
+    // shard workers (expert-parallel MoE + row-parallel matmuls, see
+    // runtime::sharded) must leave the logits bit-identical to the
+    // unsharded engine — per scheme, per model kind, at shards
+    // {1, 2, 4}.
+    println!();
+    {
+        use dsq::runtime::forward::ForwardPass;
+        let toks = [1i32, 17, 300, 42, 511];
+        let dense_src = synthetic_f32_container(&ModelConfig::tiny_dense(), 0x5E1F)?;
+        for (model_src, model_name) in [(&src, "tiny-moe"), (&dense_src, "tiny-dense")] {
+            for scheme_name in ["dq3_k_m", "q4_k_m"] {
+                let scheme = builtin::scheme(scheme_name)?;
+                let qbytes = quantize_container_with(model_src, &scheme, None, threads)?
+                    .to_bytes();
+                let run = |shards: usize| -> Result<Vec<u32>> {
+                    let q = Container::from_bytes(qbytes.clone())?;
+                    let mut fwd =
+                        ForwardPass::new(q, threads, dsq::runtime::native::NATIVE_MAX_CTX)?;
+                    fwd.set_sharding(shards)?;
+                    let mut cache = fwd.new_cache();
+                    let mut scratch = fwd.new_scratch();
+                    let mut logits = vec![0f32; fwd.vocab()];
+                    let mut bits = Vec::new();
+                    for &t in &toks {
+                        fwd.forward_token(t, &mut cache, &mut scratch, Some(&mut logits))?;
+                        bits.extend(logits.iter().map(|v| v.to_bits()));
+                    }
+                    Ok(bits)
+                };
+                let unsharded = run(0)?;
+                let mut ok = true;
+                for n in [1usize, 2, 4] {
+                    ok &= run(n)? == unsharded;
+                }
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "  sharded/{model_name}/{:<8} (shards 1, 2, 4 vs unsharded, {} steps \
+                     × {} logits): {}",
+                    scheme_name,
+                    toks.len(),
+                    unsharded.len() / toks.len(),
+                    if ok { "identical" } else { "MISMATCH" }
+                );
+            }
+        }
+    }
+
     if failures > 0 {
         bail!("selfcheck FAILED: {failures} mismatching case(s)");
     }
     println!(
         "\nselfcheck passed: parallel encode, loader decode, fused vec_dot, the \
-         vec_dot_mat GEMM panels and the native forward pass are bit-identical \
-         to their serial/scalar references on every available dispatch arm"
+         vec_dot_mat GEMM panels, the native forward pass and the sharded \
+         expert/tensor-parallel pass are bit-identical to their serial/scalar/\
+         unsharded references on every available dispatch arm"
     );
     Ok(())
 }

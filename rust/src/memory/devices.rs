@@ -1,4 +1,11 @@
 //! Device database and deployment recommendation (§4.4 of the paper).
+//!
+//! The 8-device plan recommended here is executable, not just
+//! arithmetic: [`crate::runtime::sharded`] runs the same partition as
+//! real cooperating shard workers (`dsq serve --native --shards 8`),
+//! and [`crate::memory::shard_weights`] predicts each shard's resident
+//! weight bytes exactly — the engine's measured bytes are validated
+//! against that prediction in `tests/sharded_identity.rs`.
 
 use super::MemoryEstimate;
 

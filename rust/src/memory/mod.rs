@@ -23,7 +23,9 @@
 pub mod devices;
 
 use crate::model::ModelConfig;
+use crate::runtime::sharded::{expert_range, row_range, MAX_SHARDS};
 use crate::scheme::Scheme;
+use anyhow::{bail, Result};
 
 /// Parallel 32K-token sequences assumed by the paper's deployment.
 pub const DEFAULT_N_SEQ: usize = 16;
@@ -75,6 +77,51 @@ pub fn estimate(cfg: &ModelConfig, scheme: &Scheme, n_ctx: usize, n_seq: usize) 
 /// Estimate with the paper's defaults (32K context, 16 sequences).
 pub fn estimate_default(cfg: &ModelConfig, scheme: &Scheme) -> MemoryEstimate {
     estimate(cfg, scheme, 32_768, DEFAULT_N_SEQ)
+}
+
+/// Predict the per-shard per-tensor weight bytes the sharded engine
+/// ([`crate::runtime::sharded::ShardRuntime`]) will hold resident when
+/// `cfg` quantized with `scheme` is partitioned across `n_shards`
+/// workers.
+///
+/// This is the analytic side of the planner-vs-engine contract: the
+/// returned lists must match [`ShardRuntime::shard_plan`] tensor for
+/// tensor and byte for byte (exact `row_bytes` arithmetic, not the
+/// fractional bits-per-weight approximation used for Table 1 sizes).
+/// The partition rule mirrors the loader's classification: 3-D tensors
+/// split by expert range, 2-D tensors other than the embedding split by
+/// output-row range, everything else stays on the driver and is omitted.
+///
+/// [`ShardRuntime::shard_plan`]: crate::runtime::sharded::ShardRuntime::shard_plan
+pub fn shard_weights(
+    cfg: &ModelConfig,
+    scheme: &Scheme,
+    n_shards: usize,
+) -> Result<Vec<Vec<(String, u64)>>> {
+    if n_shards == 0 || n_shards > MAX_SHARDS {
+        bail!("shard count {n_shards} out of range 1..={MAX_SHARDS}");
+    }
+    let mut plan: Vec<Vec<(String, u64)>> = vec![Vec::new(); n_shards];
+    for t in cfg.census() {
+        let fmt = scheme.assign(&t, cfg);
+        if t.shape.len() == 3 {
+            // Expert-parallel: whole experts, `row_bytes(in) * out` each.
+            let Ok(rb) = fmt.row_bytes(t.shape[2]) else { continue };
+            let per = (rb * t.shape[1]) as u64;
+            for (s, shard) in plan.iter_mut().enumerate() {
+                let (e0, e1) = expert_range(t.shape[0], n_shards, s);
+                shard.push((t.name.clone(), (e1 - e0) as u64 * per));
+            }
+        } else if t.shape.len() == 2 && t.name != "token_embd.weight" {
+            // Row-parallel: contiguous output rows, one k-quant row each.
+            let Ok(rb) = fmt.row_bytes(t.shape[1]) else { continue };
+            for (s, shard) in plan.iter_mut().enumerate() {
+                let (r0, r1) = row_range(t.shape[0], n_shards, s);
+                shard.push((t.name.clone(), (r1 - r0) as u64 * rb as u64));
+            }
+        }
+    }
+    Ok(plan)
 }
 
 impl MemoryEstimate {
@@ -142,6 +189,34 @@ mod tests {
         let b = estimate(&cfg, &s, 8192, 16);
         assert_eq!(b.kv_bytes, 2 * a.kv_bytes);
         assert!(b.total_bytes > a.total_bytes);
+    }
+
+    /// Whatever the shard count, the partition must cover each sliced
+    /// tensor exactly once: per-tensor bytes summed over shards are
+    /// invariant, and the sliced-tensor set itself never changes.
+    #[test]
+    fn shard_weights_partition_is_conservative() {
+        let cfg = ModelConfig::tiny_moe();
+        let s = builtin::scheme("dq3_k_m").unwrap();
+        let one = shard_weights(&cfg, &s, 1).unwrap();
+        assert_eq!(one.len(), 1);
+        let totals: std::collections::HashMap<&str, u64> =
+            one[0].iter().map(|(n, b)| (n.as_str(), *b)).collect();
+        assert!(!totals.is_empty());
+        for n in [2usize, 3, 4, 8] {
+            let plan = shard_weights(&cfg, &s, n).unwrap();
+            assert_eq!(plan.len(), n);
+            let mut sums: std::collections::HashMap<&str, u64> = std::collections::HashMap::new();
+            for shard in &plan {
+                assert_eq!(shard.len(), one[0].len(), "sliced-tensor set drifted at n={n}");
+                for (name, bytes) in shard {
+                    *sums.entry(name.as_str()).or_default() += bytes;
+                }
+            }
+            assert_eq!(sums, totals, "byte conservation failed at n={n}");
+        }
+        assert!(shard_weights(&cfg, &s, 0).is_err());
+        assert!(shard_weights(&cfg, &s, 65).is_err());
     }
 
     #[test]

@@ -171,6 +171,40 @@ impl ModelConfig {
         }
     }
 
+    /// Scaled-down 671B deployment proxy: the layer plan of
+    /// [`ModelConfig::deepseek_v3_671b`] (leading dense layers, then
+    /// MoE with a shared expert and 8 active routed experts) at
+    /// synthesizable dims, with **64 routed experts** so the Table-2
+    /// 8-device deployment shape — a contiguous expert range per shard,
+    /// 8 experts per shard at `--shards 8`, mirroring 256/32 per device
+    /// on the real model — runs end to end through `runtime::sharded`.
+    /// All quantizable in-features are multiples of 256 (the k-quant
+    /// super-block rule the tiny proxies follow).
+    pub fn deepseek_v3_671b_sim() -> Self {
+        ModelConfig {
+            name: "deepseek-v3-671b-sim".into(),
+            kind: ModelKind::MlaMoe,
+            vocab_size: 1024,
+            hidden_size: 256,
+            n_layers: 4,
+            first_dense: 1,
+            n_heads: 8,
+            n_kv_heads: 8,
+            head_dim: 0,
+            rope_base: DEFAULT_ROPE_BASE,
+            q_lora_rank: 256,
+            kv_lora_rank: 256,
+            qk_nope_head_dim: 64,
+            qk_rope_head_dim: 32,
+            v_head_dim: 64,
+            intermediate_size: 512,
+            moe_intermediate_size: 256,
+            n_routed_experts: 64,
+            n_shared_experts: 1,
+            n_active_experts: 8,
+        }
+    }
+
     /// Look up a named config.
     pub fn by_name(name: &str) -> Result<Self> {
         Ok(match name {
@@ -181,6 +215,7 @@ impl ModelConfig {
                 }
                 c
             }
+            "deepseek-v3-671b-sim" | "671b-sim" => Self::deepseek_v3_671b_sim(),
             "distill-qwen-32b" | "32b" => Self::distill_qwen_32b(),
             "tiny-moe" => Self::tiny_moe(),
             "tiny-dense" => Self::tiny_dense(),
@@ -286,13 +321,29 @@ mod tests {
     fn tiny_rows_are_superblock_aligned() {
         // Quantization requirement: every quantizable in-feature dim is a
         // multiple of 256 (checked properly in census tests).
-        let c = ModelConfig::tiny_moe();
-        assert_eq!(c.hidden_size % 256, 0);
-        assert_eq!(c.q_lora_rank % 256, 0);
-        assert_eq!(c.kv_lora_rank % 256, 0);
-        assert_eq!(c.moe_intermediate_size % 256, 0);
-        assert_eq!(c.intermediate_size % 256, 0);
-        assert_eq!(c.n_heads * c.v_head_dim % 256, 0);
+        for c in [ModelConfig::tiny_moe(), ModelConfig::deepseek_v3_671b_sim()] {
+            assert_eq!(c.hidden_size % 256, 0, "{}", c.name);
+            assert_eq!(c.q_lora_rank % 256, 0, "{}", c.name);
+            assert_eq!(c.kv_lora_rank % 256, 0, "{}", c.name);
+            assert_eq!(c.moe_intermediate_size % 256, 0, "{}", c.name);
+            assert_eq!(c.intermediate_size % 256, 0, "{}", c.name);
+            assert_eq!(c.n_heads * c.v_head_dim % 256, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn sim_671b_mirrors_the_table2_deployment_shape() {
+        let c = ModelConfig::by_name("671b-sim").unwrap();
+        assert_eq!(c.name, "deepseek-v3-671b-sim");
+        assert_eq!(c.kind, ModelKind::MlaMoe);
+        // The deployment-defining ratio: a contiguous expert range per
+        // shard, 8 experts per shard at 8 shards (Table 2 deploys
+        // 256 experts as 32 per device on the real model).
+        assert_eq!(c.n_routed_experts % 8, 0);
+        assert_eq!(c.n_routed_experts / 8, 8);
+        assert_eq!(c.n_active_experts, 8, "V3's top-k is preserved");
+        assert_eq!(c.n_shared_experts, 1);
+        assert!(c.first_dense >= 1, "leading dense layer(s) like the real plan");
     }
 }
 
@@ -409,6 +460,7 @@ mod json_tests {
     fn config_json_roundtrip() {
         for cfg in [
             ModelConfig::deepseek_v3_671b(),
+            ModelConfig::deepseek_v3_671b_sim(),
             ModelConfig::distill_qwen_32b(),
             ModelConfig::tiny_moe(),
             ModelConfig::tiny_dense(),

@@ -155,6 +155,7 @@ use crate::container::{Container, TensorEntry};
 use crate::model::{ModelConfig, ModelKind};
 use crate::quant::{self, kernels, QuantFormat};
 use crate::runtime::paged::{KvBlock, KvBlockPool};
+use crate::runtime::sharded::ShardRuntime;
 use crate::util::math;
 use anyhow::{bail, Context, Result};
 
@@ -616,6 +617,160 @@ pub fn rms_norm(x: &[f32], w: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Quantized matvec `out[r] = row_r · x` on encoded bytes under an
+/// explicit [`MatvecMode`] — the kernel both the driver
+/// ([`ForwardPass`]) and the shard workers
+/// ([`crate::runtime::sharded`]) run, so a shard computing rows
+/// `r0..r1` from its sliced bytes executes exactly the unsharded
+/// arithmetic for those rows.
+pub(crate) fn matvec_bytes_mode(
+    mode: MatvecMode,
+    fmt: QuantFormat,
+    bytes: &[u8],
+    x: &[f32],
+    out: &mut [f32],
+) -> Result<()> {
+    match mode {
+        MatvecMode::Threads(n) => quant::vec_dot_rows_with(fmt, bytes, x, out, n),
+        MatvecMode::Pinned(arm) => {
+            let rb = fmt.row_bytes(x.len())?;
+            if bytes.len() != rb * out.len() {
+                bail!("pinned matvec: {} bytes != {} rows × {rb}", bytes.len(), out.len());
+            }
+            for (o, row) in out.iter_mut().zip(bytes.chunks_exact(rb)) {
+                *o = kernels::vec_dot_arm(fmt, row, x, arm);
+            }
+            Ok(())
+        }
+    }
+}
+
+/// GEMM staging under an explicit [`MatvecMode`]: fill the row-major
+/// `[rows][t]` plane `m` with `m[r*t + c] = row_r · col_c` over the
+/// token-major activation panel `xs` (`rows = m.len() / t`). This is
+/// the pre-transpose half of [`ForwardPass::matvec_mat`], factored out
+/// so each shard worker can fill its own disjoint row range of the
+/// shared staging plane.
+pub(crate) fn stage_rows_mode(
+    mode: MatvecMode,
+    fmt: QuantFormat,
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    m: &mut [f32],
+) -> Result<()> {
+    match mode {
+        MatvecMode::Threads(threads) => {
+            quant::vec_dot_rows_mat_with(fmt, bytes, xs, n, t, m, threads)
+        }
+        MatvecMode::Pinned(arm) => {
+            debug_assert_eq!(m.len() % t, 0);
+            let rows = m.len() / t;
+            let rb = fmt.row_bytes(n)?;
+            if bytes.len() != rb * rows {
+                bail!("pinned GEMM: {} bytes != {rows} rows × {rb}", bytes.len());
+            }
+            if rb == 0 {
+                m.fill(0.0);
+            } else {
+                for (row, o) in bytes.chunks_exact(rb).zip(m.chunks_exact_mut(t)) {
+                    kernels::vec_dot_mat_arm(fmt, row, xs, n, o, arm);
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Transpose the row-major `[rows][t]` staging plane into a token-major
+/// `[t][rows]` panel — a pure permutation of finished f32 values, so
+/// every element stays bit-identical to the single-column matvec.
+pub(crate) fn transpose_into(m: &[f32], out: &mut [f32], rows: usize, t: usize) {
+    for r in 0..rows {
+        for c in 0..t {
+            out[c * rows + r] = m[r * t + c];
+        }
+    }
+}
+
+/// [`stage_rows_mode`] + [`transpose_into`]: the complete unsharded
+/// GEMM (`out[c*rows + r] = row_r · col_c`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matvec_mat_bytes_mode(
+    mode: MatvecMode,
+    fmt: QuantFormat,
+    bytes: &[u8],
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    mat: &mut [f32],
+    out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(out.len() % t, 0);
+    let rows = out.len() / t;
+    let m = &mut mat[..rows * t];
+    stage_rows_mode(mode, fmt, bytes, xs, n, t, m)?;
+    transpose_into(m, out, rows, t);
+    Ok(())
+}
+
+/// `down(silu(gate(x)) · up(x))` with all three projections fused on
+/// encoded rows under an explicit [`MatvecMode`] — the routed-expert
+/// MLP body, shared by the unsharded driver and the shard workers (an
+/// expert's whole MLP runs on its owner shard, so the arithmetic is
+/// identical wherever it executes).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mlp_bytes_mode(
+    mode: MatvecMode,
+    gate: (QuantFormat, &[u8]),
+    up: (QuantFormat, &[u8]),
+    down: (QuantFormat, &[u8]),
+    inter: usize,
+    x: &[f32],
+    out: &mut [f32],
+    g_buf: &mut [f32],
+    u_buf: &mut [f32],
+) -> Result<()> {
+    let g = &mut g_buf[..inter];
+    let u = &mut u_buf[..inter];
+    matvec_bytes_mode(mode, gate.0, gate.1, x, g)?;
+    matvec_bytes_mode(mode, up.0, up.1, x, u)?;
+    for (gv, &uv) in g.iter_mut().zip(&*u) {
+        *gv = math::silu(*gv) * uv;
+    }
+    matvec_bytes_mode(mode, down.0, down.1, g, out)
+}
+
+/// Panel analogue of [`mlp_bytes_mode`]: the SwiGLU MLP over a
+/// `t`-column token-major panel, all three projections through the
+/// decode-once GEMM kernels — bit-identical per column to the
+/// single-token path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mlp_mat_bytes_mode(
+    mode: MatvecMode,
+    gate: (QuantFormat, &[u8]),
+    up: (QuantFormat, &[u8]),
+    down: (QuantFormat, &[u8]),
+    inter: usize,
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    mat: &mut [f32],
+    g_buf: &mut [f32],
+    u_buf: &mut [f32],
+    out: &mut [f32],
+) -> Result<()> {
+    let g = &mut g_buf[..t * inter];
+    let u = &mut u_buf[..t * inter];
+    matvec_mat_bytes_mode(mode, gate.0, gate.1, xs, n, t, mat, g)?;
+    matvec_mat_bytes_mode(mode, up.0, up.1, xs, n, t, mat, u)?;
+    for (gv, &uv) in g.iter_mut().zip(&*u) {
+        *gv = math::silu(*gv) * uv;
+    }
+    matvec_mat_bytes_mode(mode, down.0, down.1, g, inter, t, mat, out)
+}
+
 /// Reusable per-slot scratch for [`ForwardPass::forward_token`]: every
 /// per-token intermediate, allocated once (sized to the model and
 /// `max_ctx`) and fully overwritten each use, so the decode loop itself
@@ -657,6 +812,10 @@ struct FfnScratch {
     u: Vec<f32>,
     /// MoE: one routed expert's output before the weighted combine.
     y: Vec<f32>,
+    /// Sharded MoE: all selected experts' outputs, `[n_active][hidden]`
+    /// — the owners fill their disjoint rows concurrently, then the
+    /// driver combines in ascending expert order.
+    ye: Vec<f32>,
     /// MoE: router probabilities.
     probs: Vec<f32>,
     /// MoE: expert ordering for the top-k selection.
@@ -715,6 +874,20 @@ struct PanelScratch {
     xg: Vec<f32>,
     /// MoE: one expert's outputs over the gathered tokens.
     y: Vec<f32>,
+    /// Sharded MoE: gathered activations for **all** experts' token
+    /// groups at once, `[cap·n_active][hidden]` — empty unless the
+    /// scratch was created on a sharded pass (see
+    /// [`ForwardPass::set_sharding`]).
+    xge: Vec<f32>,
+    /// Sharded MoE: every expert's outputs over its gathered tokens,
+    /// same plane layout as `xge` (empty unsharded).
+    ye: Vec<f32>,
+    /// Sharded MoE: `(expert, plane row offset, token count)` per
+    /// non-empty expert, ascending expert order.
+    exp_jobs: Vec<(usize, usize, usize)>,
+    /// Sharded MoE: concatenated gathered token indices (rows of `xge`
+    /// back to panel columns), aligned with `exp_jobs` offsets.
+    gat: Vec<usize>,
     /// Row-major `[rows][T]` GEMM staging, transposed into the panels.
     mat: Vec<f32>,
 }
@@ -732,6 +905,9 @@ pub struct ForwardPass {
     max_ctx: usize,
     mode: MatvecMode,
     absorb_mla: bool,
+    /// Sharded execution runtime (expert-parallel MoE + row-split
+    /// tensor-parallel matmuls); `None` runs everything locally.
+    shards: Option<ShardRuntime>,
 }
 
 /// Kind-specific config dims the forward pass depends on must be usable
@@ -888,6 +1064,7 @@ impl ForwardPass {
             max_ctx,
             mode: MatvecMode::Threads(threads.max(1)),
             absorb_mla: true,
+            shards: None,
         })
     }
 
@@ -930,6 +1107,35 @@ impl ForwardPass {
     /// layout [`ForwardPass::new_cache`] builds. No-op for GQA models.
     pub fn set_mla_absorption(&mut self, absorb: bool) {
         self.absorb_mla = absorb;
+    }
+
+    /// Partition this pass across `n` shard worker threads
+    /// (expert-parallel MoE FFNs, output-row tensor-parallel matmuls —
+    /// see [`crate::runtime::sharded`]); `n == 0` restores local
+    /// execution. Logits are **bit-identical** for every shard count —
+    /// the sharded-identity suite and `dsq selfcheck` pin it.
+    ///
+    /// Call **before** creating scratches: sharded MoE panels need the
+    /// gather/output planes [`ForwardPass::new_scratch_cols`] only
+    /// allocates when sharding is active.
+    pub fn set_sharding(&mut self, n: usize) -> Result<()> {
+        self.shards = match n {
+            0 => None,
+            n => Some(ShardRuntime::new(&self.ckpt, n)?),
+        };
+        Ok(())
+    }
+
+    /// Active shard count (0 when running locally).
+    pub fn shard_count(&self) -> usize {
+        self.shards.as_ref().map_or(0, |s| s.n_shards())
+    }
+
+    /// The shard runtime, when sharding is active — the seam the
+    /// planner-validation tests and serving metrics read (per-shard
+    /// resident bytes, exchange counters).
+    pub fn shards(&self) -> Option<&ShardRuntime> {
+        self.shards.as_ref()
     }
 
     /// Expanded-plane row width of the caches this pass creates (zero
@@ -1030,6 +1236,11 @@ impl ForwardPass {
             .max(inter_max)
             .max(cfg.n_routed_experts)
             .max(cfg.vocab_size);
+        // The all-experts gather/output planes only exist on a sharded
+        // pass (worst case every token's row appears in n_active expert
+        // groups) — the unsharded zero-alloc decode path must not pay
+        // for them.
+        let exp_planes = if self.shards.is_some() { mc * cfg.n_active_experts * hs } else { 0 };
         Scratch {
             h: vec![0.0; hs],
             xn: vec![0.0; hs],
@@ -1047,6 +1258,7 @@ impl ForwardPass {
                 g: vec![0.0; inter_max],
                 u: vec![0.0; inter_max],
                 y: vec![0.0; hs],
+                ye: vec![0.0; cfg.n_active_experts * hs],
                 probs: vec![0.0; cfg.n_routed_experts],
                 idx: Vec::with_capacity(cfg.n_routed_experts),
             },
@@ -1072,87 +1284,34 @@ impl ForwardPass {
                 gather: Vec::with_capacity(mc),
                 xg: vec![0.0; mc * hs],
                 y: vec![0.0; mc * hs],
+                xge: vec![0.0; exp_planes],
+                ye: vec![0.0; exp_planes],
+                exp_jobs: Vec::with_capacity(cfg.n_routed_experts),
+                gat: Vec::with_capacity(mc * cfg.n_active_experts.max(1)),
                 mat: vec![0.0; mc * max_rows],
             },
         }
     }
 
-    /// Quantized matvec `out[r] = row_r · x` on encoded bytes, under
-    /// the active [`MatvecMode`].
-    fn matvec_bytes(
-        &self,
-        fmt: QuantFormat,
-        bytes: &[u8],
-        x: &[f32],
-        out: &mut [f32],
-    ) -> Result<()> {
-        match self.mode {
-            MatvecMode::Threads(n) => quant::vec_dot_rows_with(fmt, bytes, x, out, n),
-            MatvecMode::Pinned(arm) => {
-                let rb = fmt.row_bytes(x.len())?;
-                if bytes.len() != rb * out.len() {
-                    bail!("pinned matvec: {} bytes != {} rows × {rb}", bytes.len(), out.len());
-                }
-                for (o, row) in out.iter_mut().zip(bytes.chunks_exact(rb)) {
-                    *o = kernels::vec_dot_arm(fmt, row, x, arm);
-                }
-                Ok(())
-            }
-        }
-    }
-
+    /// Quantized matvec `out[r] = row_r · x` on a resolved tensor.
+    /// Sharded: one row-split job per shard (each computes its own
+    /// disjoint row range of `out`, so no cross-shard sum ever forms),
+    /// one barrier. Local: [`matvec_bytes_mode`] under the active mode.
     fn matvec(&self, t: &TensorEntry, x: &[f32], out: &mut [f32]) -> Result<()> {
-        self.matvec_bytes(t.format, self.ckpt.bytes(t), x, out)
+        if let Some(sh) = &self.shards {
+            return sh.matvec(t, x, out, self.mode);
+        }
+        matvec_bytes_mode(self.mode, t.format, self.ckpt.bytes(t), x, out)
     }
 
     /// Quantized GEMM over a token-major activation panel (`xs[c*n..]`
-    /// is column `c`), under the active [`MatvecMode`]: the kernel
-    /// fills the row-major `[rows][T]` staging buffer `mat` (that is
-    /// the layout the row-parallel split needs), which is then
-    /// transposed into the token-major `out` panel
-    /// (`out[c*rows + r] = row_r · col_c`). The transpose is a pure
-    /// permutation of finished f32 values, so every element is
-    /// bit-identical to the single-column matvec.
-    #[allow(clippy::too_many_arguments)]
-    fn matvec_mat_bytes(
-        &self,
-        fmt: QuantFormat,
-        bytes: &[u8],
-        xs: &[f32],
-        n: usize,
-        t: usize,
-        mat: &mut [f32],
-        out: &mut [f32],
-    ) -> Result<()> {
-        debug_assert_eq!(out.len() % t, 0);
-        let rows = out.len() / t;
-        let m = &mut mat[..rows * t];
-        match self.mode {
-            MatvecMode::Threads(threads) => {
-                quant::vec_dot_rows_mat_with(fmt, bytes, xs, n, t, m, threads)?;
-            }
-            MatvecMode::Pinned(arm) => {
-                let rb = fmt.row_bytes(n)?;
-                if bytes.len() != rb * rows {
-                    bail!("pinned GEMM: {} bytes != {rows} rows × {rb}", bytes.len());
-                }
-                if rb == 0 {
-                    m.fill(0.0);
-                } else {
-                    for (row, o) in bytes.chunks_exact(rb).zip(m.chunks_exact_mut(t)) {
-                        kernels::vec_dot_mat_arm(fmt, row, xs, n, o, arm);
-                    }
-                }
-            }
-        }
-        for r in 0..rows {
-            for c in 0..t {
-                out[c * rows + r] = m[r * t + c];
-            }
-        }
-        Ok(())
-    }
-
+    /// is column `c`): the kernels fill the row-major `[rows][T]`
+    /// staging buffer `mat` (the layout the row-parallel / row-sharded
+    /// split needs), which is then transposed into the token-major
+    /// `out` panel (`out[c*rows + r] = row_r · col_c`). The transpose
+    /// is a pure permutation of finished f32 values, so every element
+    /// is bit-identical to the single-column matvec — sharded (each
+    /// shard stages its own row range, one barrier) or local alike.
     fn matvec_mat(
         &self,
         e: &TensorEntry,
@@ -1162,7 +1321,15 @@ impl ForwardPass {
         mat: &mut [f32],
         out: &mut [f32],
     ) -> Result<()> {
-        self.matvec_mat_bytes(e.format, self.ckpt.bytes(e), xs, n, t, mat, out)
+        if let Some(sh) = &self.shards {
+            debug_assert_eq!(out.len() % t, 0);
+            let rows = out.len() / t;
+            let m = &mut mat[..rows * t];
+            sh.matvec_mat(e, xs, n, t, m, self.mode)?;
+            transpose_into(m, out, rows, t);
+            return Ok(());
+        }
+        matvec_mat_bytes_mode(self.mode, e.format, self.ckpt.bytes(e), xs, n, t, mat, out)
     }
 
     /// The encoded rows of expert `e` inside a `[n_exp, out, in]`
@@ -1182,14 +1349,16 @@ impl ForwardPass {
         quant::dequantize_into(self.token_embd.format, row, h)
     }
 
-    /// `down(silu(gate(x)) · up(x))` with all three projections fused
-    /// on encoded rows; `g_buf`/`u_buf` are the scratch projections.
+    /// `down(silu(gate(x)) · up(x))` on resolved tensors, every
+    /// projection through the sharding-aware [`ForwardPass::matvec`]
+    /// (the SiLU gating runs on the driver either way);
+    /// `g_buf`/`u_buf` are the scratch projections.
     #[allow(clippy::too_many_arguments)]
     fn mlp(
         &self,
-        gate: (QuantFormat, &[u8]),
-        up: (QuantFormat, &[u8]),
-        down: (QuantFormat, &[u8]),
+        gate: &TensorEntry,
+        up: &TensorEntry,
+        down: &TensorEntry,
         inter: usize,
         x: &[f32],
         out: &mut [f32],
@@ -1198,23 +1367,24 @@ impl ForwardPass {
     ) -> Result<()> {
         let g = &mut g_buf[..inter];
         let u = &mut u_buf[..inter];
-        self.matvec_bytes(gate.0, gate.1, x, g)?;
-        self.matvec_bytes(up.0, up.1, x, u)?;
+        self.matvec(gate, x, g)?;
+        self.matvec(up, x, u)?;
         for (gv, &uv) in g.iter_mut().zip(&*u) {
             *gv = math::silu(*gv) * uv;
         }
-        self.matvec_bytes(down.0, down.1, g, out)
+        self.matvec(down, g, out)
     }
 
     /// Panel SwiGLU: [`ForwardPass::mlp`] over a `t`-column token-major
-    /// panel, all three projections through the decode-once GEMM
-    /// kernels — bit-identical per column to the single-token path.
+    /// panel, all three projections through the (sharding-aware)
+    /// decode-once GEMM kernels — bit-identical per column to the
+    /// single-token path.
     #[allow(clippy::too_many_arguments)]
     fn mlp_mat(
         &self,
-        gate: (QuantFormat, &[u8]),
-        up: (QuantFormat, &[u8]),
-        down: (QuantFormat, &[u8]),
+        gate: &TensorEntry,
+        up: &TensorEntry,
+        down: &TensorEntry,
         inter: usize,
         xs: &[f32],
         n: usize,
@@ -1226,12 +1396,12 @@ impl ForwardPass {
     ) -> Result<()> {
         let g = &mut g_buf[..t * inter];
         let u = &mut u_buf[..t * inter];
-        self.matvec_mat_bytes(gate.0, gate.1, xs, n, t, mat, g)?;
-        self.matvec_mat_bytes(up.0, up.1, xs, n, t, mat, u)?;
+        self.matvec_mat(gate, xs, n, t, mat, g)?;
+        self.matvec_mat(up, xs, n, t, mat, u)?;
         for (gv, &uv) in g.iter_mut().zip(&*u) {
             *gv = math::silu(*gv) * uv;
         }
-        self.matvec_mat_bytes(down.0, down.1, g, inter, t, mat, out)
+        self.matvec_mat(down, g, inter, t, mat, out)
     }
 
     /// Attention for one layer at `pos` (appends this token's K/V state
@@ -1625,18 +1795,10 @@ impl ForwardPass {
         s: &mut FfnScratch,
     ) -> Result<()> {
         let cfg = &self.cfg;
-        let fb = |t: &TensorEntry| (t.format, self.ckpt.bytes(t));
         match &lw.ffn {
-            LayerFfn::Dense { gate, up, down } => self.mlp(
-                fb(gate),
-                fb(up),
-                fb(down),
-                cfg.intermediate_size,
-                xn,
-                out,
-                &mut s.g,
-                &mut s.u,
-            ),
+            LayerFfn::Dense { gate, up, down } => {
+                self.mlp(gate, up, down, cfg.intermediate_size, xn, out, &mut s.g, &mut s.u)
+            }
             LayerFfn::Moe {
                 router,
                 gate_exps,
@@ -1667,20 +1829,39 @@ impl ForwardPass {
                 }
                 // Shared expert contributes with weight 1.
                 let sh_inter = cfg.n_shared_experts * cfg.moe_intermediate_size;
-                self.mlp(
-                    fb(gate_shexp),
-                    fb(up_shexp),
-                    fb(down_shexp),
-                    sh_inter,
-                    xn,
-                    out,
-                    &mut s.g,
-                    &mut s.u,
-                )?;
+                self.mlp(gate_shexp, up_shexp, down_shexp, sh_inter, xn, out, &mut s.g, &mut s.u)?;
+                if let Some(sh) = &self.shards {
+                    // Expert-parallel: every selected expert's MLP runs
+                    // whole on its owner shard (concurrently, one
+                    // barrier); the driver then combines in ascending
+                    // expert order — exactly the local loop's order.
+                    let hs = cfg.hidden_size;
+                    let ye = &mut s.ye[..s.idx.len() * hs];
+                    sh.moe_token(
+                        gate_exps,
+                        up_exps,
+                        down_exps,
+                        &s.idx,
+                        xn,
+                        ye,
+                        cfg.moe_intermediate_size,
+                        hs,
+                        self.mode,
+                    )?;
+                    for (k, &e) in s.idx.iter().enumerate() {
+                        let w = probs[e] / z;
+                        let y = &ye[k * hs..(k + 1) * hs];
+                        for (o, &yv) in out.iter_mut().zip(y) {
+                            *o += w * yv;
+                        }
+                    }
+                    return Ok(());
+                }
                 let y = &mut s.y[..cfg.hidden_size];
                 for &e in &s.idx {
                     let w = probs[e] / z;
-                    self.mlp(
+                    mlp_bytes_mode(
+                        self.mode,
                         (gate_exps.format, self.expert_bytes(gate_exps, e)?),
                         (up_exps.format, self.expert_bytes(up_exps, e)?),
                         (down_exps.format, self.expert_bytes(down_exps, e)?),
@@ -1714,12 +1895,11 @@ impl ForwardPass {
     ) -> Result<()> {
         let cfg = &self.cfg;
         let hs = cfg.hidden_size;
-        let fb = |e: &TensorEntry| (e.format, self.ckpt.bytes(e));
         match &lw.ffn {
             LayerFfn::Dense { gate, up, down } => self.mlp_mat(
-                fb(gate),
-                fb(up),
-                fb(down),
+                gate,
+                up,
+                down,
                 cfg.intermediate_size,
                 &p.xn[..t * hs],
                 hs,
@@ -1768,9 +1948,9 @@ impl ForwardPass {
                 // Shared expert (weight 1) over the whole panel.
                 let sh_inter = cfg.n_shared_experts * cfg.moe_intermediate_size;
                 self.mlp_mat(
-                    fb(gate_shexp),
-                    fb(up_shexp),
-                    fb(down_shexp),
+                    gate_shexp,
+                    up_shexp,
+                    down_shexp,
                     sh_inter,
                     xs,
                     hs,
@@ -1780,6 +1960,65 @@ impl ForwardPass {
                     &mut p.u,
                     &mut p.delta[..t * hs],
                 )?;
+                if let Some(sh) = &self.shards {
+                    // Expert-parallel panel: gather every expert's
+                    // token group up front, dispatch all groups to
+                    // their owner shards at once (one barrier), then
+                    // scatter in ascending expert order — the same
+                    // combine order as the local loop below.
+                    p.exp_jobs.clear();
+                    p.gat.clear();
+                    let mut cursor = 0usize;
+                    for e in 0..ne {
+                        let start = p.gat.len();
+                        for j in 0..t {
+                            if p.sel[j * na..(j + 1) * na].contains(&e) {
+                                p.gat.push(j);
+                            }
+                        }
+                        let gt = p.gat.len() - start;
+                        if gt == 0 {
+                            continue;
+                        }
+                        if (cursor + gt) * hs > p.xge.len() {
+                            bail!(
+                                "sharded MoE panel: the scratch's gather plane is too small \
+                                 — create scratches after ForwardPass::set_sharding"
+                            );
+                        }
+                        for gi in 0..gt {
+                            let j = p.gat[start + gi];
+                            let (a, b) = ((cursor + gi) * hs, (cursor + gi + 1) * hs);
+                            p.xge[a..b].copy_from_slice(&p.xn[j * hs..(j + 1) * hs]);
+                        }
+                        p.exp_jobs.push((e, cursor, gt));
+                        cursor += gt;
+                    }
+                    sh.moe_panel(
+                        gate_exps,
+                        up_exps,
+                        down_exps,
+                        &p.exp_jobs,
+                        &p.xge[..cursor * hs],
+                        &mut p.ye[..cursor * hs],
+                        cfg.moe_intermediate_size,
+                        hs,
+                        hs,
+                        self.mode,
+                    )?;
+                    for &(e, off, gt) in &p.exp_jobs {
+                        for gi in 0..gt {
+                            let j = p.gat[off + gi];
+                            let w = p.probs[j * ne + e] / p.z[j];
+                            let y = &p.ye[(off + gi) * hs..(off + gi + 1) * hs];
+                            let out = &mut p.delta[j * hs..(j + 1) * hs];
+                            for (o, &yv) in out.iter_mut().zip(y) {
+                                *o += w * yv;
+                            }
+                        }
+                    }
+                    return Ok(());
+                }
                 // Routed experts, ascending: gather the tokens that
                 // selected each expert, run one panel mlp, scatter the
                 // weighted outputs back.
@@ -1798,7 +2037,8 @@ impl ForwardPass {
                         let (a, b) = (gi * hs, (gi + 1) * hs);
                         p.xg[a..b].copy_from_slice(&p.xn[j * hs..(j + 1) * hs]);
                     }
-                    self.mlp_mat(
+                    mlp_mat_bytes_mode(
+                        self.mode,
                         (gate_exps.format, self.expert_bytes(gate_exps, e)?),
                         (up_exps.format, self.expert_bytes(up_exps, e)?),
                         (down_exps.format, self.expert_bytes(down_exps, e)?),

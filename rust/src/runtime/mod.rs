@@ -46,6 +46,7 @@ pub mod loader;
 pub mod manifest;
 pub mod native;
 pub mod paged;
+pub mod sharded;
 pub mod xla;
 
 use crate::container::Container;
@@ -242,6 +243,26 @@ impl Engine {
     /// over whole — the backend serves from its payloads in place).
     pub fn native_from_container(ckpt: Container, threads: usize) -> Result<Engine> {
         Self::from_native(native::NativeEngine::from_container(ckpt, threads)?)
+    }
+
+    /// [`Engine::native_from_container`] partitioned across `shards`
+    /// shard worker threads ([`sharded`]; `0` = unsharded local
+    /// execution). Logits are bit-identical at every shard count — the
+    /// flag trades memory-per-shard and exchange overhead, never
+    /// output bits (`dsq serve|eval --native --shards N`).
+    pub fn native_from_container_sharded(
+        ckpt: Container,
+        threads: usize,
+        shards: usize,
+    ) -> Result<Engine> {
+        Self::from_native(native::NativeEngine::with_limits_sharded(
+            ckpt,
+            threads,
+            native::NATIVE_BATCH,
+            native::NATIVE_PROMPT_LEN,
+            native::NATIVE_MAX_CTX,
+            shards,
+        )?)
     }
 
     /// Wrap an already-built native backend (tests and benches use this

@@ -106,11 +106,34 @@ impl NativeEngine {
         prompt_len: usize,
         max_ctx: usize,
     ) -> Result<Self> {
+        Self::with_limits_sharded(ckpt, threads, batch, prompt_len, max_ctx, 0)
+    }
+
+    /// [`NativeEngine::with_limits`] partitioned across `shards` shard
+    /// worker threads (0 = local execution) — the Table-2 deployment
+    /// plan as cooperating shards, logits bit-identical to unsharded at
+    /// every shard count (see [`crate::runtime::sharded`]). Sharding is
+    /// set **before** any scratch exists, so every wave/scheduler
+    /// scratch built from this engine carries the sharded MoE planes.
+    pub fn with_limits_sharded(
+        ckpt: Container,
+        threads: usize,
+        batch: usize,
+        prompt_len: usize,
+        max_ctx: usize,
+        shards: usize,
+    ) -> Result<Self> {
         if batch == 0 || prompt_len == 0 {
             bail!("native backend needs batch ≥ 1 and prompt_len ≥ 1");
         }
-        let fwd = ForwardPass::new(ckpt, threads, max_ctx)?;
+        let mut fwd = ForwardPass::new(ckpt, threads, max_ctx)?;
+        fwd.set_sharding(shards)?;
         Ok(NativeEngine { fwd, batch, prompt_len, max_ctx })
+    }
+
+    /// Active shard count (0 when running locally).
+    pub fn shard_count(&self) -> usize {
+        self.fwd.shard_count()
     }
 
     pub fn batch(&self) -> usize {

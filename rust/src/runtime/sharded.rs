@@ -1,0 +1,748 @@
+//! Sharded execution of the native forward pass: the Table-2 8-device
+//! deployment plan run as N cooperating worker threads, each holding
+//! **only its own encoded weight slices** (the memory partition
+//! `memory::shard_weights` predicts and `memory/devices.rs` plans on
+//! paper).
+//!
+//! ## Partition map
+//!
+//! Built once from the container by [`ShardRuntime::new`], mirroring
+//! exactly what [`crate::memory::shard_weights`] computes analytically:
+//!
+//! - **3-D expert-stacked tensors** (`ffn_{gate,up,down}_exps`,
+//!   `[n_exp, out, in]`) are **expert-parallel**: shard `s` owns the
+//!   contiguous expert range [`expert_range`]`(n_exp, n, s)` and copies
+//!   only those experts' encoded bytes.
+//! - **2-D matmul weights** (all attention projections, dense/shared
+//!   FFNs, the router, the unembedding) are **output-row
+//!   tensor-parallel**: shard `s` owns row range [`row_range`]
+//!   `(rows, n, s)` — k-quant rows are whole blocks, so a row range is
+//!   a contiguous slice of the encoded payload.
+//! - Everything else (`token_embd.weight`, the f32 norm vectors, any
+//!   1-D tensor) stays on the **driver**, which also keeps the opened
+//!   container as the host checkpoint image.
+//!
+//! ## Execution model
+//!
+//! The driver thread runs all sequential glue — embedding, RMSNorm,
+//! RoPE, attention scores/softmax, routing, SiLU, residual adds and the
+//! MoE weighted combine — through literally the same code as the
+//! unsharded engine. Only the fused matmuls fan out:
+//!
+//! - a **row-split matvec/GEMM** sends one job to every shard; shard
+//!   `s` computes output rows `r0..r1` into its disjoint range of the
+//!   shared output plane (a preallocated scratch buffer);
+//! - a **routed-expert MLP** is sent to the one shard owning that
+//!   expert, which runs the whole gate/up/SiLU/down pipeline locally
+//!   and writes the expert's output rows into its disjoint slice of
+//!   the expert-output plane.
+//!
+//! Each dispatch ends in an explicit **barrier** (the driver blocks
+//! until every job acknowledges) — the all-gather exchange step: after
+//! it, the output plane is fully materialized and the driver's
+//! sequential glue proceeds. [`ShardRuntime::exchanges`] /
+//! [`ShardRuntime::exchange_wait_ns`] count these barriers and the time
+//! the driver spent inside them (the exchange overhead
+//! `benches/sharded.rs` reports).
+//!
+//! ## Why logits are bit-identical to the unsharded engine
+//!
+//! No floating-point sum is ever split across shards:
+//!
+//! - Row-split keeps every output element's **complete** canonical
+//!   8-lane dot product on exactly one shard — per-row dots are
+//!   independent of surrounding rows, so computing rows `r0..r1` from
+//!   the sliced bytes is the same arithmetic as the unsharded kernel's
+//!   rows `r0..r1`. No cross-shard reduction exists, hence no
+//!   reassociation.
+//! - Expert-parallel MoE computes each routed expert's MLP whole on
+//!   its owner; the **driver** then folds the weighted outputs in
+//!   ascending global expert order — the PR 6 combine contract,
+//!   independent of which shard produced which output.
+//! - All remaining arithmetic runs on the driver, unchanged.
+//!
+//! Hence logits are bit-identical for every shard count (the
+//! `tests/sharded_identity.rs` differential suite and `dsq selfcheck`
+//! pin shards {1, 2, 4, 8} against the unsharded engine across both
+//! model kinds, both headline schemes and every dispatch arm).
+
+use crate::container::{Container, TensorEntry};
+use crate::quant::QuantFormat;
+use crate::runtime::forward::{self, MatvecMode};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Most shards a runtime will spin up — far beyond the 8-device node
+/// the paper deploys; a guard against nonsense CLI input.
+pub const MAX_SHARDS: usize = 64;
+
+/// How long the driver waits on a shard barrier before declaring the
+/// worker wedged (internal-bug guard; normal exchanges are µs–ms).
+const BARRIER_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Output rows owned by shard `s` of `n`: the contiguous range
+/// `[rows·s/n, rows·(s+1)/n)` — a balanced partition (sizes differ by
+/// at most one row) that is exhaustive and disjoint for any `rows`.
+pub fn row_range(rows: usize, n_shards: usize, s: usize) -> (usize, usize) {
+    (rows * s / n_shards, rows * (s + 1) / n_shards)
+}
+
+/// Experts owned by shard `s` of `n` — same balanced contiguous
+/// partition as [`row_range`] (256 experts over 8 shards is 32 per
+/// shard, the Table-2 per-device expert count).
+pub fn expert_range(n_experts: usize, n_shards: usize, s: usize) -> (usize, usize) {
+    row_range(n_experts, n_shards, s)
+}
+
+/// The shard whose [`expert_range`] contains expert `e`.
+pub fn expert_owner(n_experts: usize, n_shards: usize, e: usize) -> usize {
+    debug_assert!(e < n_experts);
+    (0..n_shards)
+        .find(|&s| {
+            let (a, b) = expert_range(n_experts, n_shards, s);
+            e >= a && e < b
+        })
+        .expect("expert ranges are exhaustive")
+}
+
+/// A read-only f32 plane handed to a worker by raw pointer. Safe by
+/// protocol: the driver keeps the backing buffer borrowed (and does not
+/// mutate it) until the dispatch barrier completes.
+struct SendPtr(*const f32, usize);
+unsafe impl Send for SendPtr {}
+
+/// A writable f32 plane handed to a worker by raw pointer. Safe by
+/// protocol: every concurrently dispatched job writes a disjoint
+/// sub-range (row ranges / expert plane segments are disjoint by
+/// construction) and the driver blocks on the barrier before reading
+/// or releasing the buffer.
+struct SendPtrMut(*mut f32, usize);
+unsafe impl Send for SendPtrMut {}
+
+impl SendPtr {
+    fn new(x: &[f32]) -> Self {
+        SendPtr(x.as_ptr(), x.len())
+    }
+    /// Reconstruct the slice inside the worker.
+    unsafe fn get(&self) -> &[f32] {
+        std::slice::from_raw_parts(self.0, self.1)
+    }
+}
+
+impl SendPtrMut {
+    fn new(x: &mut [f32]) -> Self {
+        SendPtrMut(x.as_mut_ptr(), x.len())
+    }
+    /// Reconstruct a sub-slice `[at, at + len)` inside the worker.
+    unsafe fn get(&self, at: usize, len: usize) -> &mut [f32] {
+        debug_assert!(at + len <= self.1);
+        std::slice::from_raw_parts_mut(self.0.add(at), len)
+    }
+}
+
+/// One shard's local copy of one tensor's slice.
+enum WorkerSlice {
+    /// Output-row range `r0..r1` of a 2-D weight (encoded bytes of
+    /// exactly those rows).
+    Rows { fmt: QuantFormat, bytes: Vec<u8>, r0: usize, r1: usize },
+    /// Expert range `e0..e1` of a 3-D expert stack (`per` encoded bytes
+    /// per expert).
+    Experts { fmt: QuantFormat, bytes: Vec<u8>, e0: usize, per: usize },
+}
+
+/// Driver-side view of how each container tensor was partitioned.
+#[derive(Debug, Clone, Copy)]
+enum SliceMeta {
+    Rows { rows: usize },
+    Experts { n_exp: usize },
+    /// Driver-held (embedding, norms, 1-D): never dispatched.
+    Driver,
+}
+
+enum Job {
+    /// Row-split matvec: every shard computes its own `r0..r1` rows of
+    /// `out`.
+    Matvec { tid: usize, x: SendPtr, out: SendPtrMut, mode: MatvecMode },
+    /// Row-split GEMM staging: every shard fills rows `r0..r1` of the
+    /// row-major `[rows][t]` staging plane (the driver transposes).
+    MatStage { tid: usize, xs: SendPtr, n: usize, t: usize, mat: SendPtrMut, mode: MatvecMode },
+    /// One routed expert's full gate/up/SiLU/down MLP on its owner.
+    ExpertMlp {
+        gid: usize,
+        uid: usize,
+        did: usize,
+        e: usize,
+        x: SendPtr,
+        y: SendPtrMut,
+        inter: usize,
+        mode: MatvecMode,
+    },
+    /// Panel variant: the expert's MLP over `t` gathered tokens
+    /// (`xs` token-major `[t][n]`, output `[t][hs]` at `y_at`).
+    ExpertMlpPanel {
+        gid: usize,
+        uid: usize,
+        did: usize,
+        e: usize,
+        xs: SendPtr,
+        n: usize,
+        t: usize,
+        y: SendPtrMut,
+        y_at: usize,
+        inter: usize,
+        mode: MatvecMode,
+    },
+    Stop,
+}
+
+/// The job/ack channels, behind one lock: a dispatch (send every job,
+/// then drain exactly that many acks) must be exclusive — there is a
+/// single ack stream — and the `Mutex` also keeps [`ShardRuntime`]
+/// `Sync` (mpsc endpoints are not).
+struct Channels {
+    txs: Vec<Sender<Job>>,
+    done_rx: Receiver<Result<(), String>>,
+}
+
+/// N persistent shard worker threads plus the partition bookkeeping —
+/// created by [`ShardRuntime::new`], owned by
+/// [`crate::runtime::forward::ForwardPass`] (see
+/// `ForwardPass::set_sharding`).
+pub struct ShardRuntime {
+    n: usize,
+    chan: Mutex<Channels>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Container tensor index by payload offset (unique per tensor).
+    lookup: HashMap<usize, usize>,
+    metas: Vec<SliceMeta>,
+    /// Per-shard (tensor name, resident slice bytes) — the loader-side
+    /// truth the planner test diffs against `memory::shard_weights`.
+    plan: Vec<Vec<(String, u64)>>,
+    resident: Vec<u64>,
+    exchanges: AtomicU64,
+    exchange_wait_ns: AtomicU64,
+}
+
+fn classify(t: &TensorEntry) -> Option<SliceMeta> {
+    if t.shape.len() == 3 {
+        t.format.row_bytes(t.shape[2]).ok()?;
+        Some(SliceMeta::Experts { n_exp: t.shape[0] })
+    } else if t.shape.len() == 2 && t.name != "token_embd.weight" {
+        t.format.row_bytes(t.shape[1]).ok()?;
+        Some(SliceMeta::Rows { rows: t.shape[0] })
+    } else {
+        None
+    }
+}
+
+impl ShardRuntime {
+    /// Partition `ckpt` across `n` shard workers. Each worker gets real
+    /// owned copies of its weight slices (so per-shard resident bytes
+    /// are genuinely allocated and measurable); the driver keeps the
+    /// container itself as the host image for the embedding and norms.
+    pub fn new(ckpt: &Container, n: usize) -> Result<Self> {
+        if n == 0 || n > MAX_SHARDS {
+            bail!("shard count {n} out of range 1..={MAX_SHARDS}");
+        }
+        let nt = ckpt.tensors.len();
+        let mut lookup = HashMap::with_capacity(nt);
+        let mut metas = Vec::with_capacity(nt);
+        let mut tables: Vec<Vec<Option<WorkerSlice>>> =
+            (0..n).map(|_| Vec::with_capacity(nt)).collect();
+        let mut plan: Vec<Vec<(String, u64)>> = vec![Vec::new(); n];
+        let mut resident = vec![0u64; n];
+        for (tid, t) in ckpt.tensors.iter().enumerate() {
+            if lookup.insert(t.offset, tid).is_some() {
+                bail!("container tensors alias payload offset {}", t.offset);
+            }
+            let data = ckpt.bytes(t);
+            let meta = classify(t);
+            metas.push(meta.unwrap_or(SliceMeta::Driver));
+            match meta {
+                Some(SliceMeta::Experts { n_exp }) => {
+                    let per = t.format.row_bytes(t.shape[2])? * t.shape[1];
+                    for (s, table) in tables.iter_mut().enumerate() {
+                        let (e0, e1) = expert_range(n_exp, n, s);
+                        let bytes = data[e0 * per..e1 * per].to_vec();
+                        resident[s] += bytes.len() as u64;
+                        plan[s].push((t.name.clone(), bytes.len() as u64));
+                        table.push(Some(WorkerSlice::Experts { fmt: t.format, bytes, e0, per }));
+                    }
+                }
+                Some(SliceMeta::Rows { rows }) => {
+                    let rb = t.format.row_bytes(t.shape[1])?;
+                    for (s, table) in tables.iter_mut().enumerate() {
+                        let (r0, r1) = row_range(rows, n, s);
+                        let bytes = data[r0 * rb..r1 * rb].to_vec();
+                        resident[s] += bytes.len() as u64;
+                        plan[s].push((t.name.clone(), bytes.len() as u64));
+                        table.push(Some(WorkerSlice::Rows { fmt: t.format, bytes, r0, r1 }));
+                    }
+                }
+                _ => {
+                    for table in tables.iter_mut() {
+                        table.push(None);
+                    }
+                }
+            }
+        }
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let mut txs = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for (s, table) in tables.into_iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::channel::<Job>();
+            let done = done_tx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("dsq-shard-{s}"))
+                    .spawn(move || worker_loop(table, rx, done))?,
+            );
+            txs.push(tx);
+        }
+        Ok(ShardRuntime {
+            n,
+            chan: Mutex::new(Channels { txs, done_rx }),
+            workers,
+            lookup,
+            metas,
+            plan,
+            resident,
+            exchanges: AtomicU64::new(0),
+            exchange_wait_ns: AtomicU64::new(0),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n
+    }
+
+    /// Encoded weight bytes resident on each shard (the measured side
+    /// of the planner-vs-engine validation).
+    pub fn resident_bytes(&self) -> &[u64] {
+        &self.resident
+    }
+
+    /// Per-shard per-tensor resident bytes, in container tensor order.
+    pub fn shard_plan(&self) -> &[Vec<(String, u64)>] {
+        &self.plan
+    }
+
+    /// Barrier/all-gather exchange steps completed so far.
+    pub fn exchanges(&self) -> u64 {
+        self.exchanges.load(Ordering::Relaxed)
+    }
+
+    /// Total driver time spent inside exchange barriers (dispatch to
+    /// last ack), in nanoseconds.
+    pub fn exchange_wait_ns(&self) -> u64 {
+        self.exchange_wait_ns.load(Ordering::Relaxed)
+    }
+
+    fn tensor_id(&self, t: &TensorEntry) -> Result<usize> {
+        self.lookup
+            .get(&t.offset)
+            .copied()
+            .ok_or_else(|| anyhow!("tensor {} is not part of the sharded container", t.name))
+    }
+
+    /// Per-worker matvec threading: divide the driver's thread budget
+    /// across the shards (bit-identity holds at any thread count, so
+    /// this is purely an oversubscription guard).
+    fn worker_mode(&self, mode: MatvecMode) -> MatvecMode {
+        match mode {
+            MatvecMode::Threads(t) => MatvecMode::Threads((t / self.n).max(1)),
+            pinned => pinned,
+        }
+    }
+
+    /// Drain exactly `k` acks, surfacing the first worker error after
+    /// all jobs of the dispatch have quiesced (so no straggler is still
+    /// writing when the caller regains the buffers).
+    fn wait(&self, chan: &Channels, k: usize) -> Result<()> {
+        let mut first_err: Option<String> = None;
+        for _ in 0..k {
+            match chan.done_rx.recv_timeout(BARRIER_TIMEOUT) {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(e) => {
+                    first_err.get_or_insert(format!("shard barrier broke: {e}"));
+                    break;
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => bail!("shard worker failed: {e}"),
+        }
+    }
+
+    fn barrier_done(&self, t0: Instant) {
+        self.exchanges.fetch_add(1, Ordering::Relaxed);
+        self.exchange_wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Row-split sharded matvec: `out[r] = row_r · x` with shard `s`
+    /// computing its own disjoint row range. One exchange barrier.
+    pub(crate) fn matvec(
+        &self,
+        t: &TensorEntry,
+        x: &[f32],
+        out: &mut [f32],
+        mode: MatvecMode,
+    ) -> Result<()> {
+        let tid = self.tensor_id(t)?;
+        match self.metas[tid] {
+            SliceMeta::Rows { rows } if rows == out.len() => {}
+            SliceMeta::Rows { rows } => {
+                bail!("sharded matvec on {}: {} outputs != {rows} rows", t.name, out.len())
+            }
+            _ => bail!("sharded matvec on {}: tensor is not row-partitioned", t.name),
+        }
+        let mode = self.worker_mode(mode);
+        let t0 = Instant::now();
+        let chan = self.chan.lock().map_err(|_| anyhow!("shard channel poisoned"))?;
+        for tx in &chan.txs {
+            tx.send(Job::Matvec {
+                tid,
+                x: SendPtr::new(x),
+                out: SendPtrMut::new(out),
+                mode,
+            })
+            .map_err(|_| anyhow!("shard worker hung up"))?;
+        }
+        let r = self.wait(&chan, self.n);
+        self.barrier_done(t0);
+        r
+    }
+
+    /// Row-split sharded GEMM staging: fills the row-major `[rows][t]`
+    /// plane `mat` (the caller transposes into its token-major panel,
+    /// exactly as the unsharded path does). One exchange barrier.
+    pub(crate) fn matvec_mat(
+        &self,
+        e: &TensorEntry,
+        xs: &[f32],
+        n: usize,
+        t: usize,
+        mat: &mut [f32],
+        mode: MatvecMode,
+    ) -> Result<()> {
+        let tid = self.tensor_id(e)?;
+        match self.metas[tid] {
+            SliceMeta::Rows { rows } if rows * t == mat.len() => {}
+            SliceMeta::Rows { rows } => bail!(
+                "sharded GEMM on {}: staging plane {} != {rows} rows × {t} cols",
+                e.name,
+                mat.len()
+            ),
+            _ => bail!("sharded GEMM on {}: tensor is not row-partitioned", e.name),
+        }
+        let mode = self.worker_mode(mode);
+        let t0 = Instant::now();
+        let chan = self.chan.lock().map_err(|_| anyhow!("shard channel poisoned"))?;
+        for tx in &chan.txs {
+            tx.send(Job::MatStage {
+                tid,
+                xs: SendPtr::new(xs),
+                n,
+                t,
+                mat: SendPtrMut::new(mat),
+                mode,
+            })
+            .map_err(|_| anyhow!("shard worker hung up"))?;
+        }
+        let r = self.wait(&chan, self.n);
+        self.barrier_done(t0);
+        r
+    }
+
+    /// Expert-parallel routed MoE for one token: each selected expert's
+    /// MLP runs whole on its owner shard, writing `ye[k*hs..]` for the
+    /// k-th selected expert (ascending order — the driver's combine
+    /// order). One exchange barrier over all selected experts.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn moe_token(
+        &self,
+        gate: &TensorEntry,
+        up: &TensorEntry,
+        down: &TensorEntry,
+        idx: &[usize],
+        x: &[f32],
+        ye: &mut [f32],
+        inter: usize,
+        hs: usize,
+        mode: MatvecMode,
+    ) -> Result<()> {
+        if idx.is_empty() {
+            return Ok(());
+        }
+        let (gid, uid, did) = (self.tensor_id(gate)?, self.tensor_id(up)?, self.tensor_id(down)?);
+        let n_exp = match self.metas[gid] {
+            SliceMeta::Experts { n_exp } => n_exp,
+            _ => bail!("sharded MoE on {}: tensor is not expert-partitioned", gate.name),
+        };
+        if ye.len() < idx.len() * hs {
+            bail!("sharded MoE: expert-output plane {} < {} experts × {hs}", ye.len(), idx.len());
+        }
+        let mode = self.worker_mode(mode);
+        let t0 = Instant::now();
+        let chan = self.chan.lock().map_err(|_| anyhow!("shard channel poisoned"))?;
+        let out = SendPtrMut::new(ye);
+        for (k, &e) in idx.iter().enumerate() {
+            let owner = expert_owner(n_exp, self.n, e);
+            chan.txs[owner]
+                .send(Job::ExpertMlp {
+                    gid,
+                    uid,
+                    did,
+                    e,
+                    x: SendPtr::new(x),
+                    y: SendPtrMut(unsafe { out.0.add(k * hs) }, hs),
+                    inter,
+                    mode,
+                })
+                .map_err(|_| anyhow!("shard worker hung up"))?;
+        }
+        let r = self.wait(&chan, idx.len());
+        self.barrier_done(t0);
+        r
+    }
+
+    /// Expert-parallel routed MoE for a token panel: `jobs` lists
+    /// `(expert, plane offset, token count)` with gathered activations
+    /// in `xs` (`[Σ gt][n]`) and outputs into `ye` (`[Σ gt][hs]`) at
+    /// the same offsets. One exchange barrier over all expert jobs.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn moe_panel(
+        &self,
+        gate: &TensorEntry,
+        up: &TensorEntry,
+        down: &TensorEntry,
+        jobs: &[(usize, usize, usize)],
+        xs: &[f32],
+        ye: &mut [f32],
+        inter: usize,
+        n: usize,
+        hs: usize,
+        mode: MatvecMode,
+    ) -> Result<()> {
+        if jobs.is_empty() {
+            return Ok(());
+        }
+        let (gid, uid, did) = (self.tensor_id(gate)?, self.tensor_id(up)?, self.tensor_id(down)?);
+        let n_exp = match self.metas[gid] {
+            SliceMeta::Experts { n_exp } => n_exp,
+            _ => bail!("sharded MoE on {}: tensor is not expert-partitioned", gate.name),
+        };
+        let mode = self.worker_mode(mode);
+        let t0 = Instant::now();
+        let chan = self.chan.lock().map_err(|_| anyhow!("shard channel poisoned"))?;
+        let out = SendPtrMut::new(ye);
+        for &(e, off, gt) in jobs {
+            let owner = expert_owner(n_exp, self.n, e);
+            chan.txs[owner]
+                .send(Job::ExpertMlpPanel {
+                    gid,
+                    uid,
+                    did,
+                    e,
+                    xs: SendPtr(unsafe { xs.as_ptr().add(off * n) }, gt * n),
+                    n,
+                    t: gt,
+                    y: SendPtrMut(out.0, out.1),
+                    y_at: off * hs,
+                    inter,
+                    mode,
+                })
+                .map_err(|_| anyhow!("shard worker hung up"))?;
+        }
+        let r = self.wait(&chan, jobs.len());
+        self.barrier_done(t0);
+        r
+    }
+}
+
+impl Drop for ShardRuntime {
+    fn drop(&mut self) {
+        if let Ok(chan) = self.chan.lock() {
+            for tx in &chan.txs {
+                let _ = tx.send(Job::Stop);
+            }
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Per-worker reusable scratch (gate/up projections and GEMM staging
+/// for the expert MLPs — row-split jobs need none).
+#[derive(Default)]
+struct WorkerScratch {
+    g: Vec<f32>,
+    u: Vec<f32>,
+    mat: Vec<f32>,
+}
+
+fn worker_loop(
+    slices: Vec<Option<WorkerSlice>>,
+    rx: Receiver<Job>,
+    done: Sender<Result<(), String>>,
+) {
+    let mut scratch = WorkerScratch::default();
+    while let Ok(job) = rx.recv() {
+        if matches!(job, Job::Stop) {
+            break;
+        }
+        let r = run_job(&slices, &mut scratch, job);
+        if done.send(r.map_err(|e| format!("{e:#}"))).is_err() {
+            break;
+        }
+    }
+}
+
+/// The encoded bytes of expert `e` on this shard, or an error if the
+/// expert landed here by a dispatch bug.
+fn expert_bytes(
+    slices: &[Option<WorkerSlice>],
+    tid: usize,
+    e: usize,
+) -> Result<(QuantFormat, &[u8])> {
+    match slices.get(tid).and_then(|s| s.as_ref()) {
+        Some(WorkerSlice::Experts { fmt, bytes, e0, per }) => {
+            let local = e
+                .checked_sub(*e0)
+                .ok_or_else(|| anyhow!("expert {e} dispatched below this shard's range"))?;
+            let at = local * per;
+            if at + per > bytes.len() {
+                bail!("expert {e} dispatched beyond this shard's range");
+            }
+            Ok((*fmt, &bytes[at..at + per]))
+        }
+        _ => bail!("tensor {tid} is not expert-partitioned on this shard"),
+    }
+}
+
+fn run_job(slices: &[Option<WorkerSlice>], s: &mut WorkerScratch, job: Job) -> Result<()> {
+    match job {
+        Job::Stop => Ok(()),
+        Job::Matvec { tid, x, out, mode } => {
+            let Some(WorkerSlice::Rows { fmt, bytes, r0, r1 }) =
+                slices.get(tid).and_then(|s| s.as_ref())
+            else {
+                bail!("tensor {tid} is not row-partitioned on this shard");
+            };
+            if r0 == r1 {
+                return Ok(());
+            }
+            let x = unsafe { x.get() };
+            let out = unsafe { out.get(*r0, r1 - r0) };
+            forward::matvec_bytes_mode(mode, *fmt, bytes, x, out)
+        }
+        Job::MatStage { tid, xs, n, t, mat, mode } => {
+            let Some(WorkerSlice::Rows { fmt, bytes, r0, r1 }) =
+                slices.get(tid).and_then(|s| s.as_ref())
+            else {
+                bail!("tensor {tid} is not row-partitioned on this shard");
+            };
+            if r0 == r1 {
+                return Ok(());
+            }
+            let xs = unsafe { xs.get() };
+            let m = unsafe { mat.get(r0 * t, (r1 - r0) * t) };
+            forward::stage_rows_mode(mode, *fmt, bytes, xs, n, t, m)
+        }
+        Job::ExpertMlp { gid, uid, did, e, x, y, inter, mode } => {
+            let gate = expert_bytes(slices, gid, e)?;
+            let up = expert_bytes(slices, uid, e)?;
+            let down = expert_bytes(slices, did, e)?;
+            let x = unsafe { x.get() };
+            let y = unsafe { y.get(0, y.1) };
+            s.g.resize(inter, 0.0);
+            s.u.resize(inter, 0.0);
+            forward::mlp_bytes_mode(mode, gate, up, down, inter, x, y, &mut s.g, &mut s.u)
+        }
+        Job::ExpertMlpPanel { gid, uid, did, e, xs, n, t, y, y_at, inter, mode } => {
+            let gate = expert_bytes(slices, gid, e)?;
+            let up = expert_bytes(slices, uid, e)?;
+            let down = expert_bytes(slices, did, e)?;
+            let xs = unsafe { xs.get() };
+            let out_rows = {
+                // Output width per token comes from the down slice: its
+                // rows-per-expert is the hidden size.
+                match slices.get(did).and_then(|s| s.as_ref()) {
+                    Some(WorkerSlice::Experts { fmt, per, .. }) => {
+                        let rb = fmt.row_bytes(inter)?;
+                        if rb == 0 {
+                            bail!("expert down-projection has zero-byte rows");
+                        }
+                        per / rb
+                    }
+                    _ => bail!("tensor {did} is not expert-partitioned on this shard"),
+                }
+            };
+            let y = unsafe { y.get(y_at, t * out_rows) };
+            s.g.resize(t * inter, 0.0);
+            s.u.resize(t * inter, 0.0);
+            s.mat.resize(t * inter.max(out_rows), 0.0);
+            forward::mlp_mat_bytes_mode(
+                mode, gate, up, down, inter, xs, n, t, &mut s.mat, &mut s.g, &mut s.u, y,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition_exhaustively() {
+        for rows in [0usize, 1, 7, 8, 64, 129, 256] {
+            for n in [1usize, 2, 3, 4, 8] {
+                let mut covered = 0;
+                for s in 0..n {
+                    let (a, b) = row_range(rows, n, s);
+                    assert!(a <= b && b <= rows);
+                    assert_eq!(a, covered, "rows={rows} n={n} s={s}: ranges must be contiguous");
+                    covered = b;
+                }
+                assert_eq!(covered, rows, "rows={rows} n={n}: ranges must cover everything");
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_are_balanced() {
+        // Sizes differ by at most one — the Table-2 case is exact.
+        for s in 0..8 {
+            let (a, b) = expert_range(256, 8, s);
+            assert_eq!(b - a, 32, "256 experts over 8 shards is 32 per device");
+        }
+        let sizes: Vec<usize> = (0..4)
+            .map(|s| {
+                let (a, b) = row_range(7, 4, s);
+                b - a
+            })
+            .collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 7);
+        assert!(sizes.iter().all(|&z| z == 1 || z == 2));
+    }
+
+    #[test]
+    fn expert_owner_inverts_expert_range() {
+        for n in [1usize, 2, 4, 8] {
+            for e in 0..64 {
+                let s = expert_owner(64, n, e);
+                let (a, b) = expert_range(64, n, s);
+                assert!(e >= a && e < b, "expert {e} not inside its owner {s}'s range");
+            }
+        }
+    }
+}

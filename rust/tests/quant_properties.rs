@@ -4,7 +4,8 @@
 //! prints the failing seed on assertion).
 
 use dsq::container::{
-    quantize_container, quantize_container_with, synthetic_f32_container, Container, Writer,
+    load_imatrix, quantize_container, quantize_container_with, synthetic_f32_container, Container,
+    Writer,
 };
 use dsq::model::{ModelConfig, ModuleClass, TensorInfo};
 use dsq::quant::{self, error::rel_rmse, QuantFormat};
@@ -311,4 +312,82 @@ fn prop_imatrix_never_hurts_weighted_error() {
         worse <= cases / 4,
         "imatrix made weighted error worse in {worse}/{cases} cases"
     );
+}
+
+// --- imatrix at census scale + load_imatrix error paths -------------------
+
+/// Satellite of the sharded-serving PR: the scaled 671B deployment
+/// proxy's full DeepSeek census (attention low-rank stack, 64-expert
+/// MoE tensors across the Table-2 layer plan), imatrix-weighted, must
+/// quantize byte-identically serial vs parallel.
+#[test]
+fn prop_parallel_container_identical_with_imatrix_at_census_scale() {
+    let src = synthetic_f32_container(&ModelConfig::deepseek_v3_671b_sim(), 31).unwrap();
+    let mut rng = Pcg::new(32);
+    let mut imatrix: HashMap<String, Vec<f32>> = HashMap::new();
+    for t in &src.tensors {
+        let n: usize = t.shape.iter().product();
+        imatrix.insert(t.name.clone(), (0..n).map(|_| rng.next_f32() + 0.05).collect());
+    }
+    let scheme = builtin::scheme("dq3_k_m").unwrap();
+    let serial = quantize_container_with(&src, &scheme, Some(&imatrix), 1).unwrap().to_bytes();
+    let par = quantize_container_with(&src, &scheme, Some(&imatrix), 8).unwrap().to_bytes();
+    assert_eq!(serial, par, "census-scale imatrix quantization must not depend on threading");
+}
+
+/// `container::load_imatrix` fails early, naming the offending tensor:
+/// malformed files, unknown tensor names, and width mismatches are all
+/// rejected before the quantizer ever sees the map.
+#[test]
+fn load_imatrix_rejects_malformed_and_mismatched_containers() {
+    let dir = std::env::temp_dir().join("dsq-imatrix-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 7).unwrap();
+    let f32_payload = |vals: &[f32]| quant::quantize(QuantFormat::F32, vals, None).unwrap();
+
+    // Malformed file: not a container at all.
+    let garbage = dir.join("garbage.dsq");
+    std::fs::write(&garbage, b"not a dsq container").unwrap();
+    assert!(load_imatrix(&garbage, &src).is_err(), "garbage bytes must not parse");
+
+    // Unknown tensor name.
+    let mut w = Writer::new(ModelConfig::tiny_dense(), "f32");
+    let payload = f32_payload(&[1.0f32; 256]);
+    w.add_tensor("no.such.weight", ModuleClass::Norm, None, &[256], QuantFormat::F32, &payload)
+        .unwrap();
+    let unknown = dir.join("unknown.dsq");
+    w.write(&unknown).unwrap();
+    let err = load_imatrix(&unknown, &src).unwrap_err().to_string();
+    assert!(err.contains("no.such.weight"), "error should name the tensor: {err}");
+
+    // Mismatched width: right name, wrong element count.
+    let mut w = Writer::new(ModelConfig::tiny_dense(), "f32");
+    let payload = f32_payload(&[1.0f32; 256]);
+    w.add_tensor(
+        "token_embd.weight",
+        ModuleClass::TokenEmbd,
+        None,
+        &[1, 256],
+        QuantFormat::F32,
+        &payload,
+    )
+    .unwrap();
+    let mismatched = dir.join("mismatched.dsq");
+    w.write(&mismatched).unwrap();
+    let err = load_imatrix(&mismatched, &src).unwrap_err().to_string();
+    assert!(
+        err.contains("token_embd.weight") && err.contains("importance"),
+        "error should name the mismatched tensor: {err}"
+    );
+
+    // Happy path: a well-formed partial imatrix loads with full widths.
+    let t0 = src.tensors.iter().find(|t| t.shape.len() == 2).unwrap();
+    let mut w = Writer::new(ModelConfig::tiny_dense(), "f32");
+    let payload = f32_payload(&vec![0.5f32; t0.n_elems()]);
+    w.add_tensor(&t0.name, t0.class, t0.layer, &t0.shape, QuantFormat::F32, &payload).unwrap();
+    let good = dir.join("good.dsq");
+    w.write(&good).unwrap();
+    let map = load_imatrix(&good, &src).unwrap();
+    assert_eq!(map.len(), 1);
+    assert_eq!(map[&t0.name].len(), t0.n_elems());
 }

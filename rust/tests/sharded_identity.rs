@@ -1,0 +1,331 @@
+//! Acceptance suite for the sharded native engine
+//! (`runtime::sharded`): the Table-2 8-device deployment plan run as
+//! real cooperating shard workers must be **bit-identical** to the
+//! unsharded engine, and the analytic memory planner must predict the
+//! engine's per-shard resident bytes exactly.
+//!
+//! Three locks:
+//!
+//! 1. **Shard-count identity** — logits from the per-token loop, the
+//!    panel prefill (`forward_tokens`, including both KV-cache planes),
+//!    and batched decode (`forward_step_batch`) are bit-identical to
+//!    local execution for every shard count in {1, 2, 4, 8}, across
+//!    matvec thread counts, every available pinned dispatch arm
+//!    (CI reruns the suite under each `DSQ_FORCE_ARM`), absorbed and
+//!    eager MLA, and both architecture families — plus the scaled
+//!    671B deployment proxy at the full 8-shard Table-2 shape.
+//! 2. **Planner-vs-engine weights** — [`dsq::memory::shard_weights`]
+//!    must match [`ShardRuntime::shard_plan`] tensor for tensor and
+//!    byte for byte; any drift fails with a named-tensor diff.
+//! 3. **Planner-vs-engine KV** — `kv_bytes_per_token` must agree with
+//!    the rows the dense cache and the paged block pool actually
+//!    allocate, for both model kinds.
+//!
+//! [`ShardRuntime::shard_plan`]: dsq::runtime::sharded::ShardRuntime::shard_plan
+
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
+use dsq::coordinator::sampler::argmax;
+use dsq::memory::shard_weights;
+use dsq::model::ModelConfig;
+use dsq::quant::kernels::DispatchArm;
+use dsq::runtime::forward::{ForwardPass, MatvecMode};
+use dsq::runtime::native::NATIVE_MAX_CTX;
+use dsq::runtime::sharded::ShardRuntime;
+use dsq::scheme::builtin;
+use std::sync::OnceLock;
+
+/// Same golden script as `tests/native_forward.rs`.
+const PROMPT: [i32; 8] = [1, 17, 300, 42, 511, 7, 5, 260];
+const DECODE_STEPS: usize = 3;
+
+const MODELS: [&str; 2] = ["tiny-moe", "tiny-dense"];
+const SCHEMES: [&str; 2] = ["dq3_k_m", "q4_k_m"];
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// Quantized golden-container bytes, built once per (model, scheme).
+fn qbytes(model: &str, scheme: &str) -> &'static [u8] {
+    static MOE_DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static MOE_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    static DENSE_DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static DENSE_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    static SIM_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    let cell = match (model, scheme) {
+        ("tiny-moe", "dq3_k_m") => &MOE_DQ3,
+        ("tiny-moe", "q4_k_m") => &MOE_Q4,
+        ("tiny-dense", "dq3_k_m") => &DENSE_DQ3,
+        ("tiny-dense", "q4_k_m") => &DENSE_Q4,
+        ("deepseek-v3-671b-sim", "q4_k_m") => &SIM_Q4,
+        other => panic!("unexpected combination {other:?}"),
+    };
+    cell.get_or_init(|| {
+        let cfg = ModelConfig::by_name(model).unwrap();
+        let src = synthetic_f32_container(&cfg, 0x601D).unwrap();
+        let scheme = builtin::scheme(scheme).unwrap();
+        quantize_container_with(&src, &scheme, None, 4).unwrap().to_bytes()
+    })
+}
+
+fn forward(model: &str, scheme: &str, threads: usize, shards: usize) -> ForwardPass {
+    let ckpt = Container::from_bytes(qbytes(model, scheme).to_vec()).unwrap();
+    let mut fwd = ForwardPass::new(ckpt, threads, NATIVE_MAX_CTX).unwrap();
+    fwd.set_sharding(shards).unwrap();
+    fwd
+}
+
+/// Prefill `prompt` token by token (logits at the last), then greedy
+/// decode; returns every emitted logits row.
+fn run_script(fwd: &ForwardPass, prompt: &[i32], steps: usize) -> Vec<Vec<f32>> {
+    let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
+    let mut logits = vec![0f32; fwd.vocab()];
+    for (j, &t) in prompt.iter().enumerate() {
+        let want = if j + 1 == prompt.len() { Some(&mut logits[..]) } else { None };
+        fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
+    }
+    let mut rows = vec![logits.clone()];
+    for _ in 0..steps {
+        let tok = argmax(rows.last().unwrap());
+        fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        rows.push(logits.clone());
+    }
+    rows
+}
+
+fn bits(rows: &[Vec<f32>]) -> Vec<u32> {
+    rows.iter().flatten().map(|v| v.to_bits()).collect()
+}
+
+fn slice_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// --- lock 1: shard-count identity -----------------------------------------
+
+#[test]
+fn token_loop_is_bit_identical_across_shard_counts() {
+    for model in MODELS {
+        for scheme in SCHEMES {
+            let base = bits(&run_script(&forward(model, scheme, 2, 0), &PROMPT, DECODE_STEPS));
+            for shards in SHARD_COUNTS {
+                for threads in [1usize, 2] {
+                    let fwd = forward(model, scheme, threads, shards);
+                    assert_eq!(fwd.shard_count(), shards);
+                    assert_eq!(
+                        base,
+                        bits(&run_script(&fwd, &PROMPT, DECODE_STEPS)),
+                        "{model}/{scheme}: shards={shards} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Panel prefill under sharding: logits, both cache planes, and the
+/// decode step that continues off the panel cache all match local bits.
+#[test]
+fn panel_prefill_is_bit_identical_under_sharding() {
+    for model in MODELS {
+        for scheme in SCHEMES {
+            let local = forward(model, scheme, 2, 0);
+            let mut c1 = local.new_cache();
+            let mut s1 = local.new_scratch();
+            let mut l1 = vec![0f32; local.vocab()];
+            local.forward_tokens(&PROMPT, &mut c1, &mut s1, Some(&mut l1)).unwrap();
+
+            let sharded = forward(model, scheme, 2, 4);
+            let mut c2 = sharded.new_cache();
+            let mut s2 = sharded.new_scratch();
+            let mut l2 = vec![0f32; sharded.vocab()];
+            sharded.forward_tokens(&PROMPT, &mut c2, &mut s2, Some(&mut l2)).unwrap();
+
+            assert_eq!(slice_bits(&l1), slice_bits(&l2), "{model}/{scheme}: panel logits");
+            assert_eq!(
+                slice_bits(c1.raw_rows()),
+                slice_bits(c2.raw_rows()),
+                "{model}/{scheme}: latent/K-V cache plane"
+            );
+            assert_eq!(
+                slice_bits(c1.raw_expanded()),
+                slice_bits(c2.raw_expanded()),
+                "{model}/{scheme}: expanded-KV plane"
+            );
+            let tok = argmax(&l1);
+            local.forward_token(tok, &mut c1, &mut s1, Some(&mut l1)).unwrap();
+            sharded.forward_token(tok, &mut c2, &mut s2, Some(&mut l2)).unwrap();
+            assert_eq!(slice_bits(&l1), slice_bits(&l2), "{model}/{scheme}: decode after panel");
+        }
+    }
+}
+
+/// Batched decode (`forward_step_batch`, the continuous-serving step,
+/// dead slot included) under sharding matches local bits per slot per
+/// step.
+#[test]
+fn batched_decode_is_bit_identical_under_sharding() {
+    for model in MODELS {
+        let prompts: [&[i32]; 3] = [&[1, 17, 300], &[42, 511], &[7, 5, 260, 9]];
+        let live = [true, false, true];
+        let steps = 3;
+        let mut per_engine: Vec<Vec<u32>> = Vec::new();
+        for shards in [0usize, 2] {
+            let fwd = forward(model, "q4_k_m", 2, shards);
+            let mut caches: Vec<_> = (0..prompts.len()).map(|_| fwd.new_cache()).collect();
+            let mut scratch = fwd.new_scratch_cols(prompts.len());
+            let mut logits = vec![0f32; prompts.len() * fwd.vocab()];
+            for (slot, p) in prompts.iter().enumerate() {
+                for &t in *p {
+                    fwd.forward_token(t, &mut caches[slot], &mut scratch, None).unwrap();
+                }
+            }
+            let mut all = Vec::new();
+            let mut toks = [2i32, 3, 4];
+            for _ in 0..steps {
+                fwd.forward_step_batch(&toks, &live, &mut caches, &mut scratch, &mut logits)
+                    .unwrap();
+                all.extend(slice_bits(&logits));
+                for (slot, t) in toks.iter_mut().enumerate() {
+                    if live[slot] {
+                        let v = fwd.vocab();
+                        *t = argmax(&logits[slot * v..(slot + 1) * v]);
+                    }
+                }
+            }
+            per_engine.push(all);
+        }
+        assert_eq!(per_engine[0], per_engine[1], "{model}: batched decode local vs 2 shards");
+    }
+}
+
+#[test]
+fn sharding_is_bit_identical_on_every_pinned_arm() {
+    for model in MODELS {
+        for arm in DispatchArm::ALL {
+            if !arm.available() {
+                continue;
+            }
+            let mut local = forward(model, "dq3_k_m", 1, 0);
+            local.set_mode(MatvecMode::Pinned(arm));
+            let base = bits(&run_script(&local, &PROMPT, DECODE_STEPS));
+            let mut sharded = forward(model, "dq3_k_m", 1, 2);
+            sharded.set_mode(MatvecMode::Pinned(arm));
+            assert_eq!(
+                base,
+                bits(&run_script(&sharded, &PROMPT, DECODE_STEPS)),
+                "{model}: pinned {} arm under sharding",
+                arm.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn eager_mla_is_bit_identical_under_sharding() {
+    let mut local = forward("tiny-moe", "dq3_k_m", 1, 0);
+    local.set_mla_absorption(false);
+    let base = bits(&run_script(&local, &PROMPT, DECODE_STEPS));
+    let mut sharded = forward("tiny-moe", "dq3_k_m", 1, 4);
+    sharded.set_mla_absorption(false);
+    assert_eq!(base, bits(&run_script(&sharded, &PROMPT, DECODE_STEPS)), "eager MLA sharded");
+}
+
+/// The scaled 671B deployment proxy at the full Table-2 shape: 64
+/// routed experts over 8 shards (8 experts per shard, mirroring the
+/// paper's 256/32 per device).
+#[test]
+fn sim_671b_is_bit_identical_at_8_shards() {
+    let model = "deepseek-v3-671b-sim";
+    let prompt = [1i32, 17, 1000, 42];
+    let base = bits(&run_script(&forward(model, "q4_k_m", 2, 0), &prompt, 2));
+    let fwd = forward(model, "q4_k_m", 2, 8);
+    assert_eq!(base, bits(&run_script(&fwd, &prompt, 2)), "671b-sim at 8 shards");
+}
+
+// --- lock 2: planner-vs-engine weight bytes -------------------------------
+
+/// The planner's per-shard per-tensor byte predictions must match what
+/// the shard loader actually allocated — reported tensor by tensor.
+#[test]
+fn planner_predicts_engine_shard_bytes_exactly() {
+    for model in ["tiny-moe", "tiny-dense", "deepseek-v3-671b-sim"] {
+        let scheme_name = "q4_k_m";
+        let ckpt = Container::from_bytes(qbytes(model, scheme_name).to_vec()).unwrap();
+        let scheme = builtin::scheme(scheme_name).unwrap();
+        for shards in SHARD_COUNTS {
+            let engine = ShardRuntime::new(&ckpt, shards).unwrap();
+            let predicted = shard_weights(&ckpt.model, &scheme, shards).unwrap();
+            let measured = engine.shard_plan();
+            assert_eq!(predicted.len(), measured.len(), "{model}: shard count");
+            let mut diffs = Vec::new();
+            for (s, (p, m)) in predicted.iter().zip(measured).enumerate() {
+                let pn: Vec<&str> = p.iter().map(|(n, _)| n.as_str()).collect();
+                let mn: Vec<&str> = m.iter().map(|(n, _)| n.as_str()).collect();
+                assert_eq!(pn, mn, "{model} shard {s}: sliced-tensor sets differ");
+                for ((name, pb), (_, mb)) in p.iter().zip(m) {
+                    if pb != mb {
+                        diffs.push(format!("shard {s} {name}: planner {pb} vs engine {mb}"));
+                    }
+                }
+            }
+            assert!(
+                diffs.is_empty(),
+                "{model} at {shards} shards: planner-vs-engine weight bytes drifted:\n{}",
+                diffs.join("\n")
+            );
+            // Resident totals are the plan's row sums.
+            for (s, shard) in measured.iter().enumerate() {
+                let total: u64 = shard.iter().map(|(_, b)| b).sum();
+                assert_eq!(engine.resident_bytes()[s], total, "{model} shard {s} resident");
+            }
+        }
+    }
+}
+
+// --- lock 3: planner-vs-engine KV bytes -----------------------------------
+
+/// `kv_bytes_per_token` (the f16 deployment arithmetic behind Table 1)
+/// must agree element-for-element with the rows the engine's dense
+/// cache and paged block pool allocate (f32 planes, hence the factor
+/// of 2 between bytes-per-token and elements-per-token).
+#[test]
+fn planner_kv_bytes_match_engine_cache_allocation() {
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 1, 0);
+        let cfg = fwd.config();
+        let width = cfg.kv_cache_width();
+        assert_eq!(
+            cfg.kv_bytes_per_token(),
+            cfg.n_layers * width * 2,
+            "{model}: planner kv arithmetic"
+        );
+        // Dense: the lazily allocated plane holds exactly
+        // n_layers × max_ctx × width f32 elements.
+        let mut cache = fwd.new_cache();
+        let mut scratch = fwd.new_scratch();
+        fwd.forward_token(1, &mut cache, &mut scratch, None).unwrap();
+        let per_pos = cache.raw_rows().len() / NATIVE_MAX_CTX;
+        assert_eq!(
+            per_pos * 2,
+            cfg.kv_bytes_per_token(),
+            "{model}: dense cache rows vs planner bytes per token"
+        );
+        // Paged: growing to k tokens takes exactly ceil(k / block_tokens)
+        // blocks, each covering block_tokens positions of the same width.
+        let block_tokens = 4usize;
+        let mut pool = fwd.new_block_pool(4, block_tokens).unwrap();
+        let mut paged = fwd.new_paged_cache(&pool).unwrap();
+        assert!(pool.try_reserve(2));
+        paged.grow_to(6, &mut pool).unwrap();
+        assert_eq!(paged.block_addrs().len(), 2, "{model}: blocks for 6 tokens");
+        assert_eq!(pool.outstanding(), 2);
+        let covered = paged.block_addrs().len() * block_tokens;
+        let pool_bytes_f16 = covered * cfg.n_layers * width * 2;
+        assert_eq!(
+            pool_bytes_f16,
+            covered * cfg.kv_bytes_per_token(),
+            "{model}: paged pool allocation vs planner bytes"
+        );
+        paged.release(&mut pool);
+        pool.unreserve(2);
+    }
+}
