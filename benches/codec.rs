@@ -11,6 +11,11 @@
 //! container benchmark: multi-tensor Q4_K container quantization,
 //! serial vs tensor-parallel (the `dsq quantize` hot path).
 //!
+//! Since PR 9 the decode section also measures **GGUF import
+//! throughput**: the `dsq import` transcode of a llama.cpp-layout
+//! q4_k_m checkpoint into the DSQ1 container, serial vs
+//! tensor-parallel (`gguf_import_parallel_speedup` in the summary).
+//!
 //! Pass `--json PATH` to additionally write every measurement (and the
 //! speedup summary) as a JSON report — CI uploads it as an artifact.
 //! Pass `--json-decode PATH` to also write the decode-side measurements
@@ -26,7 +31,7 @@
 //! the quantized-GEMM `forward_tokens` pass vs the per-token loop,
 //! with the speedup ratio in the summary (`prefill_*_panel_speedup`).
 
-use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
+use dsq::container::{gguf, quantize_container_with, synthetic_f32_container, Container};
 use dsq::model::ModelConfig;
 use dsq::quant::{self, kernels, parallel, scalar, QuantFormat};
 use dsq::runtime::forward::{ForwardPass, MatvecMode};
@@ -509,6 +514,49 @@ fn main() -> anyhow::Result<()> {
         decode_report.push(result_json(r));
     }
     decode_summary.push(("decode_dq3_k_m_speedup".to_string(), dq3_speedup));
+
+    // --- GGUF import throughput (PR 9): transcoding a llama.cpp-layout
+    // checkpoint into the DSQ1 container — the `dsq import` hot path
+    // (per-tensor bit-permutation + census reorder), serial vs
+    // tensor-parallel. Source bytes come from exporting a q4_k_m
+    // tiny-dense container, so the measured work is exactly the
+    // from-llama transcode the importer runs on real checkpoints.
+    let dense = Container::from_bytes(
+        quantize_container_with(
+            &synthetic_f32_container(&ModelConfig::tiny_dense(), 0x601D)?,
+            &builtin::scheme("q4_k_m")?,
+            None,
+            cores,
+        )?
+        .to_bytes(),
+    )?;
+    let gguf_bytes = gguf::export_bytes(&dense)?;
+    let g = gguf::Gguf::from_bytes(&gguf_bytes)?;
+    let gguf_len = gguf_bytes.len() as u64;
+    println!(
+        "\n# gguf import: q4_k_m tiny-dense ({} tensors, {:.1} MiB)\n",
+        g.tensors.len(),
+        gguf_len as f64 / (1 << 20) as f64
+    );
+    let mut import_results = Vec::new();
+    for (threads, label) in [(1usize, "serial"), (cores, "parallel")] {
+        let r = Bench::new().throughput_bytes(gguf_len).run(
+            &format!("gguf-import-{label}/q4_k_m"),
+            || gguf::import_gguf(&g, threads).unwrap().to_bytes().len(),
+        );
+        import_results.push(r);
+    }
+    let import_speedup = import_results[0].median_ns / import_results[1].median_ns;
+    println!(
+        "gguf import q4_k_m: serial {:>6.2} GiB/s → parallel-{cores} {:>6.2} GiB/s  \
+         ({import_speedup:.2}x)",
+        gibps(gguf_len, &import_results[0]),
+        gibps(gguf_len, &import_results[1]),
+    );
+    for r in &import_results {
+        decode_report.push(result_json(r));
+    }
+    decode_summary.push(("gguf_import_parallel_speedup".to_string(), import_speedup));
 
     // --- native forward pass (PR 4, dense since PR 5): tokens/s
     // through the full step on encoded weights — the MLA+MoE tiny-moe

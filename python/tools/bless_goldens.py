@@ -1097,11 +1097,13 @@ class RopeMirror:
                 c, s = cn, sn
 
     def apply(self, x: np.ndarray, pos: int) -> np.ndarray:
-        a, b = x[0::2], x[1::2]
+        # Half-split (NeoX) pairing: frequency i rotates (x[i], x[i+half]),
+        # matching python/compile/model.py::rope and Qwen checkpoints.
+        a, b = x[: self.half], x[self.half :]
         c, s = self.cos[pos], self.sin[pos]
         out = np.empty_like(x)
-        out[0::2] = a * c - b * s
-        out[1::2] = a * s + b * c
+        out[: self.half] = a * c - b * s
+        out[self.half :] = a * s + b * c
         return out
 
 
@@ -1295,11 +1297,13 @@ def forward_reference_f64(weights: dict, prompt, step_tokens, max_ctx=24):
     inv_freq = 10000.0 ** (-np.arange(0, rope_d, 2) / rope_d)
 
     def rope(x, pos):
+        # Half-split (NeoX) pairing, matching python/compile/model.py.
         ang = pos * inv_freq
         co, si = np.cos(ang), np.sin(ang)
+        half = x.size // 2
         out = np.empty_like(x)
-        out[0::2] = x[0::2] * co - x[1::2] * si
-        out[1::2] = x[0::2] * si + x[1::2] * co
+        out[:half] = x[:half] * co - x[half:] * si
+        out[half:] = x[:half] * si + x[half:] * co
         return out
 
     def norm(x, g):
@@ -1378,11 +1382,13 @@ def forward_reference_f64_dense(weights: dict, prompt, step_tokens, max_ctx=24):
     inv_freq = float(c["rope_base"]) ** (-np.arange(0, hd, 2) / hd)
 
     def rope(x, pos):
+        # Half-split (NeoX) pairing, matching python/compile/model.py.
         ang = pos * inv_freq
         co, si = np.cos(ang), np.sin(ang)
+        half = x.size // 2
         out = np.empty_like(x)
-        out[0::2] = x[0::2] * co - x[1::2] * si
-        out[1::2] = x[0::2] * si + x[1::2] * co
+        out[:half] = x[:half] * co - x[half:] * si
+        out[half:] = x[:half] * si + x[half:] * co
         return out
 
     def norm(x, g):

@@ -1,0 +1,326 @@
+#!/usr/bin/env python3
+"""Generate the committed tiny-dense GGUF fixture (and its import golden)
+for the Rust `container::gguf` test suite — so CI needs no network.
+
+The fixture is a *foreign-style* GGUF v3 file: `qwen2.*` metadata only
+(no `dsq.*` keys), tensors written in reversed census order, payloads in
+llama.cpp bit placement. It holds the same synthetic tiny-dense weights
+as `synthetic_f32_container(tiny_dense, 0x601D)` quantized under
+`q4_k_m`, produced by the bit-exact mirror in `bless_goldens.py` — so
+the Rust importer must reconstruct a container byte-identical to its own
+`dsq quantize` output, pinned here by `import.tiny_dense.q4_k_m.fnv64`.
+
+Payload transcoding (our dense bit placement → llama.cpp's interleaved
+planes) is an independent Python port of the Rust `to_llama` functions;
+this script self-checks every payload two ways before writing anything:
+
+  1. round-trip: from_llama(to_llama(p)) == p for every tensor;
+  2. semantics: integer codes + scales extracted from the llama-placement
+     bytes via loops transcribed from llama.cpp's `dequantize_row_q4_K` /
+     `dequantize_row_q6_K` / `get_scale_min_k4` must equal the codes +
+     scales extracted from the native bytes via the native layout.
+
+Usage:  python3 python/tools/make_gguf_fixture.py [--check-only]
+"""
+
+from __future__ import annotations
+
+import struct
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from bless_goldens import (  # noqa: E402
+    GOLDEN_DIR,
+    TINY_DENSE,
+    Pcg,
+    build_container,
+    fnv64,
+    quantize_census,
+    tiny_dense_census,
+)
+
+U8 = np.uint8
+SEED = 0x601D
+SCHEME = "q4_k_m"
+ALIGN = 32
+GGML_TYPE = {"f32": 0, "f16": 1, "q8_0": 8, "q2_k": 10, "q3_k": 11,
+             "q4_k": 12, "q5_k": 13, "q6_k": 14}
+BLOCK_BYTES = {"q2_k": 84, "q3_k": 110, "q4_k": 144, "q5_k": 176, "q6_k": 210}
+
+FIXTURE = GOLDEN_DIR / "tiny_dense.q4_k_m.gguf"
+IMPORT_GOLDEN = GOLDEN_DIR / "import.tiny_dense.q4_k_m.fnv64"
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane moves (vectorized over blocks; element index i is the weight
+# position, identical on both sides — only (byte, shift) placement moves)
+# ---------------------------------------------------------------------------
+
+
+def _move(blocks, src, dst, mask, out):
+    """out[:, dst_byte] |= ((blocks[:, src_byte] >> src_shift) & mask) << dst_shift."""
+    for (sb, ss), (db, ds) in zip(src, dst):
+        out[:, db] |= ((blocks[:, sb] >> ss) & mask) << ds
+
+
+def _plane2(base):
+    """llama 2-bit plane: i = 128g + 32j + l → byte base+32g+l, shift 2j."""
+    return [(base + 32 * (i >> 7) + (i & 31), 2 * ((i >> 5) & 3)) for i in range(256)]
+
+
+def _nib_llama(base):
+    """llama nibble plane: i = 64g + r → byte base+32g+(r%32), shift 4·(r≥32)."""
+    return [(base + 32 * (i >> 6) + ((i & 63) & 31), 4 * ((i & 63) >= 32)) for i in range(256)]
+
+
+def _dense(base, bits):
+    per = 8 // bits
+    return [(base + i // per, bits * (i % per)) for i in range(256)]
+
+
+def _scale_min_native_unpack(b):
+    sc = np.zeros((len(b), 8), U8)
+    mn = np.zeros((len(b), 8), U8)
+    for j in range(8):
+        sc[:, j] = b[:, j] & 0x3F
+        mn[:, j] = (b[:, j] >> 6) | (((b[:, 8 + j // 2] >> (4 * (j & 1))) & 0x0F) << 2)
+    return sc, mn
+
+
+def _scale_min_llama_pack(sc, mn, out):
+    for j in range(4):
+        out[:, j] = (sc[:, j] & 63) | ((sc[:, j + 4] >> 4) << 6)
+        out[:, j + 4] = (mn[:, j] & 63) | ((mn[:, j + 4] >> 4) << 6)
+        out[:, j + 8] = (sc[:, j + 4] & 0x0F) | ((mn[:, j + 4] & 0x0F) << 4)
+
+
+def _scale_min_llama_unpack(b):
+    sc = np.zeros((len(b), 8), U8)
+    mn = np.zeros((len(b), 8), U8)
+    for j in range(8):
+        if j < 4:
+            sc[:, j] = b[:, j] & 63
+            mn[:, j] = b[:, j + 4] & 63
+        else:
+            sc[:, j] = (b[:, j + 4] & 0x0F) | ((b[:, j - 4] >> 6) << 4)
+            mn[:, j] = (b[:, j + 4] >> 4) | ((b[:, j] >> 6) << 4)
+    return sc, mn
+
+
+def _scale_min_native_pack(sc, mn, out):
+    for j in range(8):
+        out[:, j] = (sc[:, j] & 0x3F) | ((mn[:, j] & 0x03) << 6)
+    for k in range(4):
+        out[:, 8 + k] = (mn[:, 2 * k] >> 2) | ((mn[:, 2 * k + 1] >> 2) << 4)
+
+
+def transcode(fmt: str, payload: bytes, to_llama: bool) -> bytes:
+    """Move payload bits between native and llama.cpp placement (pure
+    bijective permutation; the inverse of itself with flipped arg)."""
+    if fmt not in BLOCK_BYTES:
+        return payload  # f32 / f16 / q8_0 are byte-identical
+    bb = BLOCK_BYTES[fmt]
+    blk = np.frombuffer(payload, U8).reshape(-1, bb)
+    out = np.zeros_like(blk)
+    if fmt == "q2_k":
+        out[:, :16] = blk[:, :16]
+        out[:, 80:84] = blk[:, 80:84]
+        nat, lla = _dense(16, 2), _plane2(16)
+        _move(blk, *((nat, lla) if to_llama else (lla, nat)), 3, out)
+    elif fmt == "q3_k":
+        # field order: llama hmask|qs|scales|d, ours scales|hmask|qs|d;
+        # the 12 scale bytes are byte-identical.
+        if to_llama:
+            out[:, 96:108] = blk[:, :12]
+        else:
+            out[:, :12] = blk[:, 96:108]
+        out[:, 108:110] = blk[:, 108:110]
+        nat_h = _dense(12, 1)
+        lla_h = [(i & 31, i >> 5) for i in range(256)]
+        _move(blk, *((nat_h, lla_h) if to_llama else (lla_h, nat_h)), 1, out)
+        nat_q, lla_q = _dense(44, 2), _plane2(32)
+        _move(blk, *((nat_q, lla_q) if to_llama else (lla_q, nat_q)), 3, out)
+    elif fmt in ("q4_k", "q5_k"):
+        out[:, :4] = blk[:, :4]
+        if to_llama:
+            sc, mn = _scale_min_native_unpack(blk[:, 4:16])
+            _scale_min_llama_pack(sc, mn, out[:, 4:16])
+        else:
+            sc, mn = _scale_min_llama_unpack(blk[:, 4:16])
+            _scale_min_native_pack(sc, mn, out[:, 4:16])
+        qs_off = 16 if fmt == "q4_k" else 48
+        if fmt == "q5_k":
+            nat_h = _dense(16, 1)
+            lla_h = [(16 + ((i & 63) & 31), 2 * (i >> 6) + ((i & 63) >= 32))
+                     for i in range(256)]
+            _move(blk, *((nat_h, lla_h) if to_llama else (lla_h, nat_h)), 1, out)
+        nat_q, lla_q = _dense(qs_off, 4), _nib_llama(qs_off)
+        _move(blk, *((nat_q, lla_q) if to_llama else (lla_q, nat_q)), 0x0F, out)
+    elif fmt == "q6_k":
+        out[:, 192:210] = blk[:, 192:210]
+        nat_l = _dense(0, 4)
+        lla_l = [(64 * (i >> 7) + 32 * (((i >> 5) & 3) & 1) + (i & 31),
+                  4 * (((i >> 5) & 3) >> 1)) for i in range(256)]
+        _move(blk, *((nat_l, lla_l) if to_llama else (lla_l, nat_l)), 0x0F, out)
+        nat_h, lla_h = _dense(128, 2), _plane2(128)
+        _move(blk, *((nat_h, lla_h) if to_llama else (lla_h, nat_h)), 3, out)
+    return out.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Independent semantic checks, transcribed from llama.cpp's dequant loops
+# ---------------------------------------------------------------------------
+
+
+def _check_q4k_semantics(native: bytes, llama: bytes):
+    nb = np.frombuffer(native, U8).reshape(-1, 144)
+    lb = np.frombuffer(llama, U8).reshape(-1, 144)
+    assert np.array_equal(nb[:, :4], lb[:, :4])  # d, dmin
+    sc_n, mn_n = _scale_min_native_unpack(nb[:, 4:16])
+    sc_l, mn_l = _scale_min_llama_unpack(lb[:, 4:16])  # = get_scale_min_k4
+    assert np.array_equal(sc_n, sc_l) and np.array_equal(mn_n, mn_l)
+    codes_n = np.zeros((len(nb), 256), U8)
+    for i in range(256):
+        codes_n[:, i] = (nb[:, 16 + i // 2] >> (4 * (i % 2))) & 0x0F
+    # dequantize_row_q4_K: per 64-group, 32 low nibbles then 32 high.
+    codes_l = np.zeros_like(codes_n)
+    for g in range(4):
+        for l in range(32):
+            codes_l[:, 64 * g + l] = lb[:, 16 + 32 * g + l] & 0x0F
+            codes_l[:, 64 * g + 32 + l] = lb[:, 16 + 32 * g + l] >> 4
+    assert np.array_equal(codes_n, codes_l), "q4_k code permutation broken"
+
+
+def _check_q6k_semantics(native: bytes, llama: bytes):
+    nb = np.frombuffer(native, U8).reshape(-1, 210)
+    lb = np.frombuffer(llama, U8).reshape(-1, 210)
+    assert np.array_equal(nb[:, 192:210], lb[:, 192:210])  # sc[16], d
+    codes_n = np.zeros((len(nb), 256), U8)
+    for i in range(256):
+        lo = (nb[:, i // 2] >> (4 * (i % 2))) & 0x0F
+        hi = (nb[:, 128 + i // 4] >> (2 * (i % 4))) & 3
+        codes_n[:, i] = lo | (hi << 4)
+    # dequantize_row_q6_K: q1..q4 per 128-group.
+    codes_l = np.zeros_like(codes_n)
+    for n in range(2):
+        for l in range(32):
+            ql, qh = lb[:, 64 * n + l], lb[:, 128 + 32 * n + l]
+            ql32 = lb[:, 64 * n + 32 + l]
+            codes_l[:, 128 * n + l] = (ql & 0x0F) | (((qh >> 0) & 3) << 4)
+            codes_l[:, 128 * n + 32 + l] = (ql32 & 0x0F) | (((qh >> 2) & 3) << 4)
+            codes_l[:, 128 * n + 64 + l] = (ql >> 4) | (((qh >> 4) & 3) << 4)
+            codes_l[:, 128 * n + 96 + l] = (ql32 >> 4) | (((qh >> 6) & 3) << 4)
+    assert np.array_equal(codes_n, codes_l), "q6_k code permutation broken"
+
+
+# ---------------------------------------------------------------------------
+# GGUF v3 writer (foreign-style: qwen2 metadata, no dsq keys)
+# ---------------------------------------------------------------------------
+
+
+def _gstr(s: str) -> bytes:
+    return struct.pack("<Q", len(s)) + s.encode()
+
+
+def _kv_u32(key: str, v: int) -> bytes:
+    return _gstr(key) + struct.pack("<II", 4, v)
+
+
+def _kv_f32(key: str, v: float) -> bytes:
+    return _gstr(key) + struct.pack("<If", 6, v)
+
+
+def _kv_str(key: str, v: str) -> bytes:
+    return _gstr(key) + struct.pack("<I", 8) + _gstr(v)
+
+
+def build_gguf(quantized: list[dict]) -> bytes:
+    c = TINY_DENSE
+    kvs = [
+        _kv_str("general.architecture", "qwen2"),
+        _kv_str("general.name", c["name"]),
+        _kv_u32("qwen2.block_count", c["n_layers"]),
+        _kv_u32("qwen2.embedding_length", c["hidden_size"]),
+        _kv_u32("qwen2.feed_forward_length", c["intermediate_size"]),
+        _kv_u32("qwen2.attention.head_count", c["n_heads"]),
+        _kv_u32("qwen2.attention.head_count_kv", c["n_kv_heads"]),
+        _kv_u32("qwen2.attention.key_length", c["head_dim"]),
+        _kv_f32("qwen2.rope.freq_base", float(c["rope_base"])),
+    ]
+    # Reversed census order in the file: the importer must reassemble in
+    # census order regardless of on-disk order.
+    entries = list(reversed(quantized))
+    infos, data = [], bytearray()
+    for q in entries:
+        payload = transcode(q["format"], bytes(q["payload"]), to_llama=True)
+        off = -(-len(data) // ALIGN) * ALIGN
+        data.extend(b"\0" * (off - len(data)))
+        data.extend(payload)
+        dims = list(reversed(q["shape"]))  # GGUF stores ne[0] (row) first
+        infos.append(
+            _gstr(q["name"])
+            + struct.pack("<I", len(dims))
+            + b"".join(struct.pack("<Q", d) for d in dims)
+            + struct.pack("<IQ", GGML_TYPE[q["format"]], off)
+        )
+    head = bytearray()
+    head += b"GGUF" + struct.pack("<IQQ", 3, len(entries), len(kvs))
+    for kv in kvs:
+        head += kv
+    for info in infos:
+        head += info
+    head += b"\0" * (-(-len(head) // ALIGN) * ALIGN - len(head))
+    return bytes(head) + bytes(data)
+
+
+def main():
+    check_only = "--check-only" in sys.argv
+    census = tiny_dense_census()
+    rng = Pcg(SEED)
+    values = {}
+    for name, _cls, _layer, shape in census:
+        values[name] = rng.normals(int(np.prod(shape)), 0.05)
+    print(f"· synthetic tiny-dense weights, seed {SEED:#x} "
+          f"({sum(v.size for v in values.values())} f32)")
+
+    quantized = quantize_census(SCHEME, values, census=census, model=TINY_DENSE)
+    fmts = sorted({q["format"] for q in quantized})
+    print(f"· quantized under {SCHEME}: formats {fmts}")
+
+    for q in quantized:
+        native = bytes(q["payload"])
+        llama = transcode(q["format"], native, to_llama=True)
+        back = transcode(q["format"], llama, to_llama=False)
+        assert back == native, f"{q['name']}: transcode round-trip broken"
+        if q["format"] == "q4_k":
+            _check_q4k_semantics(native, llama)
+        elif q["format"] == "q6_k":
+            _check_q6k_semantics(native, llama)
+    print("· transcode self-checks passed (round-trip + llama.cpp-loop semantics)")
+
+    gguf_blob = build_gguf(quantized)
+    container_blob = build_container(SCHEME, quantized, model=TINY_DENSE)
+    golden_line = f"{fnv64(container_blob):016x} {len(container_blob)}\n"
+    outputs = {FIXTURE: gguf_blob, IMPORT_GOLDEN: golden_line.encode()}
+
+    if check_only:
+        stale = [p.name for p, blob in outputs.items()
+                 if not p.exists() or p.read_bytes() != blob]
+        if stale:
+            print(f"STALE fixtures: {stale} — rerun without --check-only")
+            sys.exit(1)
+        print("· fixtures up to date")
+        return
+    for p, blob in outputs.items():
+        p.write_bytes(blob)
+        print(f"· wrote {p.relative_to(GOLDEN_DIR.parents[1])} ({len(blob)} bytes)")
+    print(f"· expected import container: fnv64 {golden_line.split()[0]}, "
+          f"{len(container_blob)} bytes")
+
+
+if __name__ == "__main__":
+    main()

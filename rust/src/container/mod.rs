@@ -29,6 +29,13 @@
 //! `offset` is relative to the start of the data section. Written by
 //! `dsq quantize` (Rust) and `python/compile/train.py` (f32 checkpoints);
 //! both sides are covered by cross-format tests.
+//!
+//! The [`gguf`] submodule converts between this container and llama.cpp
+//! GGUF v3 checkpoints (`dsq import|export`). Tensor names need no
+//! mapping: the census already uses GGUF spelling, so the gguf↔census
+//! name map is the identity (enforced as exact set equality on import).
+
+pub mod gguf;
 
 use crate::model::{ModelConfig, ModuleClass, TensorInfo};
 use crate::quant::QuantFormat;

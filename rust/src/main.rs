@@ -5,6 +5,8 @@
 //! dsq table 1|6|7|8 [--paper]            regenerate resource tables
 //! dsq table 2|3|4|5 [--hlo D --ckpt-dir D]  accuracy tables (needs artifacts)
 //! dsq quantize IN.dsq --scheme S --output OUT.dsq [--imatrix F] [--threads N]
+//! dsq import IN.gguf --output OUT.dsq [--threads N]   llama.cpp → DSQ1
+//! dsq export IN.dsq --output OUT.gguf                  DSQ1 → llama.cpp
 //! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json] [--native]
 //! dsq eval --native [--model M] [--scheme S]   (synthetic container, no artifacts)
 //! dsq serve --hlo D --ckpt F --requests N [--native]   (serving smoke/throughput)
@@ -63,7 +65,10 @@ dsq — DeepSeek quantization analysis (paper reproduction)
 Commands:
   table <1-8>        regenerate a paper table (2-5 need artifacts)
   quantize IN.dsq --scheme S --output OUT.dsq [--threads N]
+  import IN.gguf --output OUT.dsq [--threads N]   convert a llama.cpp checkpoint
+  export IN.dsq --output OUT.gguf                 convert back to GGUF v3
   eval --hlo DIR --ckpt FILE [--out results.json] [--full-size] [--threads N] [--native]
+                     (--native --ckpt accepts .dsq or .gguf, sniffed by magic)
   eval --native [--model M] [--scheme S]    (synthetic container — works for tiny-dense too)
   serve --hlo DIR --ckpt FILE [--requests N] [--threads N] [--native]
   serve --native [--model M] [--scheme S] [--requests N]   (synthetic container)
@@ -89,6 +94,8 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "table" => cmd_table(args),
         "quantize" => cmd_quantize(args),
+        "import" => cmd_import(args),
+        "export" => cmd_export(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "memory" => cmd_memory(args),
@@ -267,6 +274,47 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_import(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.positional_at(0).or_else(|_| args.require("input"))?);
+    let output = PathBuf::from(args.require("output")?);
+    let threads = args.threads_flag(quant::parallel::max_threads())?;
+    let t0 = std::time::Instant::now();
+    let g = dsq::container::gguf::Gguf::open(&input)?;
+    let w = dsq::container::gguf::import_gguf(&g, threads)?;
+    w.write(&output)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let out = Container::open(&output)?;
+    println!(
+        "imported {} → {} ({} tensors, model {}, scheme {}) on {threads} threads \
+         in {elapsed:.2}s ({:.1} MiB/s)",
+        input.display(),
+        output.display(),
+        out.tensors.len(),
+        out.model.name,
+        out.scheme_name,
+        out.data_bytes() as f64 / (1 << 20) as f64 / elapsed.max(1e-9),
+    );
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.positional_at(0).or_else(|_| args.require("input"))?);
+    let output = PathBuf::from(args.require("output")?);
+    let t0 = std::time::Instant::now();
+    let c = Container::open(&input)?;
+    dsq::container::gguf::export(&c, &output)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "exported {} → {} ({} tensors, model {}, scheme {}) in {elapsed:.2}s",
+        input.display(),
+        output.display(),
+        c.tensors.len(),
+        c.model.name,
+        c.scheme_name,
+    );
+    Ok(())
+}
+
 /// Resolve the serving engine for `eval`/`serve`: `--ckpt FILE` serves
 /// a checkpoint from disk (native or PJRT per `--native`); `--native`
 /// **without** `--ckpt` synthesizes a deterministic quantized container
@@ -282,8 +330,10 @@ fn load_engine_from_args(args: &Args, hlo: &Path, threads: usize) -> Result<Engi
         bail!("--shards requires the native backend (pass --native)");
     }
     match (args.flag("ckpt"), args.switch("native")) {
+        // The native path sniffs the checkpoint magic, so `--ckpt` takes
+        // either a .dsq container or a llama.cpp .gguf file directly.
         (Some(ckpt), true) => Engine::native_from_container_sharded(
-            Container::open(Path::new(ckpt))?,
+            dsq::container::gguf::open_checkpoint(Path::new(ckpt), threads)?,
             threads,
             shards,
         ),

@@ -218,10 +218,19 @@ impl QuantFormat {
     }
 
     /// Parse a lower-case format name.
+    ///
+    /// `bf16` is rejected by name: bfloat16 has a different bit layout
+    /// (8-bit exponent, 7-bit mantissa) from IEEE half, so treating a
+    /// bf16 payload as [`QuantFormat::F16`] silently decodes every
+    /// weight wrong instead of failing loudly.
     pub fn parse(name: &str) -> Result<Self> {
         Ok(match name {
             "f32" | "fp32" => QuantFormat::F32,
-            "f16" | "fp16" | "bf16" => QuantFormat::F16,
+            "bf16" => bail!(
+                "bf16 is not IEEE half: refusing to decode a bfloat16 payload as f16 \
+                 (no bf16 codec is implemented)"
+            ),
+            "f16" | "fp16" => QuantFormat::F16,
             "q8_0" => QuantFormat::Q8_0,
             "q6_k" => QuantFormat::Q6K,
             "q5_k" => QuantFormat::Q5K,
@@ -654,6 +663,21 @@ mod tests {
         for fmt in QuantFormat::ALL {
             assert_eq!(QuantFormat::parse(fmt.name()).unwrap(), fmt);
         }
+    }
+
+    #[test]
+    fn parse_rejects_bf16_by_name() {
+        // Regression: "bf16" used to alias to F16 and silently misdecode
+        // bfloat16 payloads as IEEE half. It must fail with a named error.
+        let err = QuantFormat::parse("bf16").unwrap_err().to_string();
+        assert!(err.contains("bf16"), "error must name bf16: {err}");
+        assert!(
+            "bf16".parse::<QuantFormat>().is_err(),
+            "FromStr must reject bf16 too"
+        );
+        // The legitimate IEEE-half spellings still parse.
+        assert_eq!(QuantFormat::parse("f16").unwrap(), QuantFormat::F16);
+        assert_eq!(QuantFormat::parse("fp16").unwrap(), QuantFormat::F16);
     }
 
     #[test]

@@ -123,6 +123,15 @@
 //! exactly-rounded angle-addition recurrence — no libm, so it is
 //! reproducible bit-for-bit anywhere, including the Python mirror.
 //!
+//! Pairing is **half-split** (NeoX style): frequency `i` rotates
+//! `(x[i], x[i+half])`, matching `python/compile/model.py::rope` and
+//! the convention HF/llama.cpp Qwen checkpoints (the R1 distills) are
+//! trained with. An earlier revision rotated interleaved pairs
+//! `(x[2i], x[2i+1])` — self-consistent on synthetic weights but wrong
+//! for every externally-trained checkpoint, which is why GGUF interop
+//! (`container::gguf`) was gated on this reconciliation and the four
+//! forward goldens were re-blessed through the mirror.
+//!
 //! ## Scratch reuse
 //!
 //! All per-token and per-panel intermediates live in a caller-owned
@@ -593,15 +602,25 @@ impl RopeTable {
         RopeTable { half, cos, sin }
     }
 
-    /// Rotate consecutive pairs `(x[2i], x[2i+1])` by `pos · θ_i`.
+    /// Rotate half-split pairs `(x[i], x[i+half])` by `pos · θ_i`.
+    ///
+    /// This is the HF/llama.cpp "NeoX" pairing that Qwen (and hence the
+    /// DeepSeek-R1 distills) are trained with, and what
+    /// `python/compile/model.py::rope` computes: the first half of the
+    /// rotated span carries `x1·cos − x2·sin`, the second `x1·sin +
+    /// x2·cos`. Earlier revisions rotated interleaved GPT-NeoX-*source*
+    /// pairs `(x[2i], x[2i+1])`, which is self-consistent on synthetic
+    /// weights but serves externally-trained checkpoints with garbage
+    /// attention; the forward goldens were re-blessed when the pairing
+    /// was reconciled (see `rust/tests/golden/README.md`).
     fn apply(&self, x: &mut [f32], pos: usize) {
         debug_assert_eq!(x.len(), 2 * self.half);
         for i in 0..self.half {
             let c = self.cos[pos * self.half + i];
             let s = self.sin[pos * self.half + i];
-            let (a, b) = (x[2 * i], x[2 * i + 1]);
-            x[2 * i] = a * c - b * s;
-            x[2 * i + 1] = a * s + b * c;
+            let (a, b) = (x[i], x[i + self.half]);
+            x[i] = a * c - b * s;
+            x[i + self.half] = a * s + b * c;
         }
     }
 }

@@ -1,0 +1,397 @@
+//! GGUF interop suite: the committed mirror-generated fixture
+//! (`tests/golden/tiny_dense.q4_k_m.gguf`, written by
+//! `python/tools/make_gguf_fixture.py`) must import to a DSQ1 container
+//! **byte-identical** to the native `dsq quantize` output for the same
+//! seed — pinned cross-language by `import.tiny_dense.q4_k_m.fnv64` —
+//! at every thread count; export back must reproduce the fixture's
+//! payload bytes exactly; the imported container must serve the
+//! forward-logits golden; and imported K-quant rows must satisfy the
+//! fused `vec_dot` ≡ dequantize+dot identity on every dispatch arm
+//! (CI reruns this file under each `DSQ_FORCE_ARM`).
+//!
+//! The error-path half holds the importer to the same totality
+//! discipline as `decode_kernels.rs`: truncated files, bad
+//! magic/version, unknown tensor types, misaligned or overlapping
+//! offsets, and census-name mismatches are all named errors — never
+//! panics — including under a byte-flip/truncation sweep.
+
+use dsq::container::gguf::{self, Gguf};
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container, Writer};
+use dsq::coordinator::sampler::argmax;
+use dsq::model::{ModelConfig, ModuleClass};
+use dsq::quant::kernels::{self, DispatchArm};
+use dsq::quant::{self, QuantFormat};
+use dsq::runtime::forward::ForwardPass;
+use dsq::runtime::native::NATIVE_MAX_CTX;
+use dsq::util::fnv64;
+use dsq::util::rng::Pcg;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn fixture_bytes() -> &'static [u8] {
+    static CELL: OnceLock<Vec<u8>> = OnceLock::new();
+    CELL.get_or_init(|| {
+        std::fs::read(golden_dir().join("tiny_dense.q4_k_m.gguf"))
+            .expect("missing fixture — run python3 python/tools/make_gguf_fixture.py")
+    })
+}
+
+/// Imported container bytes at a given thread count.
+fn import_fixture(threads: usize) -> Vec<u8> {
+    let g = Gguf::from_bytes(fixture_bytes()).unwrap();
+    gguf::import_gguf(&g, threads).unwrap().to_bytes()
+}
+
+/// The same checkpoint produced natively: synthetic f32 weights
+/// (seed 0x601D, identical to the mirror's) quantized under q4_k_m.
+fn native_quantize_path() -> Vec<u8> {
+    let src = synthetic_f32_container(&ModelConfig::tiny_dense(), 0x601D).unwrap();
+    let scheme = dsq::scheme::builtin::scheme("q4_k_m").unwrap();
+    quantize_container_with(&src, &scheme, None, 1).unwrap().to_bytes()
+}
+
+// ---------------------------------------------------------------------------
+// Import: cross-language byte identity + determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_imports_byte_identical_to_native_quantize_path() {
+    let imported = import_fixture(1);
+    assert_eq!(
+        imported,
+        native_quantize_path(),
+        "imported GGUF container != native dsq-quantize container"
+    );
+    let c = Container::from_bytes(imported).unwrap();
+    assert_eq!(c.model.name, "tiny-dense");
+    assert_eq!(c.model.rope_base, 1_000_000.0, "qwen2.rope.freq_base lost in import");
+    assert_eq!(c.scheme_name, "q4_k_m", "scheme inference should match the builtin plan");
+}
+
+#[test]
+fn fixture_import_matches_committed_mirror_golden() {
+    let imported = import_fixture(1);
+    let line = format!("{:016x} {}\n", fnv64(&imported), imported.len());
+    let path = golden_dir().join("import.tiny_dense.q4_k_m.fnv64");
+    let expect = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        expect.trim(),
+        line.trim(),
+        "imported container drifted from the Python mirror golden {}; if intentional, \
+         regenerate via python/tools/make_gguf_fixture.py and call it out in the PR",
+        path.display()
+    );
+}
+
+#[test]
+fn import_is_bit_identical_across_thread_counts() {
+    let base = import_fixture(1);
+    for threads in [2, 8] {
+        assert_eq!(base, import_fixture(threads), "threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Export: payload-exact round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn import_export_roundtrip_payloads_byte_identical() {
+    let g = Gguf::from_bytes(fixture_bytes()).unwrap();
+    let c = Container::from_bytes(import_fixture(1)).unwrap();
+    let exported = gguf::export_bytes(&c).unwrap();
+    let g2 = Gguf::from_bytes(&exported).unwrap();
+    assert_eq!(g.tensors.len(), g2.tensors.len());
+    for t in &g.tensors {
+        let t2 = g2.tensors.iter().find(|x| x.name == t.name).unwrap_or_else(|| {
+            panic!("tensor {:?} lost in export", t.name)
+        });
+        assert_eq!(t.shape, t2.shape, "{}", t.name);
+        assert_eq!(t.format, t2.format, "{}", t.name);
+        assert_eq!(g.payload(t), g2.payload(t2), "{}: payload bytes drifted", t.name);
+    }
+    // Re-importing the export lands on the identical container again
+    // (the export carries dsq.model_config, so nothing is inferred).
+    let reimported = gguf::import_gguf(&g2, 1).unwrap().to_bytes();
+    assert_eq!(reimported, import_fixture(1));
+}
+
+// ---------------------------------------------------------------------------
+// Serving + kernel identities on imported bytes
+// ---------------------------------------------------------------------------
+
+/// The golden forward script (same as tests/native_forward.rs) run off
+/// the *imported* checkpoint must hash to the committed
+/// forward.tiny_dense.q4_k_m.fnv64 golden — the fixture really serves.
+#[test]
+fn imported_fixture_serves_the_forward_logits_golden() {
+    const PROMPT: [i32; 8] = [1, 17, 300, 42, 511, 7, 5, 260];
+    const DECODE_STEPS: usize = 4;
+    let ckpt = Container::from_bytes(import_fixture(1)).unwrap();
+    let fwd = ForwardPass::new(ckpt, 1, NATIVE_MAX_CTX).unwrap();
+    let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
+    let mut logits = vec![0f32; fwd.vocab()];
+    for (j, &t) in PROMPT.iter().enumerate() {
+        let want = if j + 1 == PROMPT.len() { Some(&mut logits[..]) } else { None };
+        fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
+    }
+    let mut rows = vec![logits.clone()];
+    for _ in 0..DECODE_STEPS {
+        let tok = argmax(rows.last().unwrap());
+        fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        rows.push(logits.clone());
+    }
+    let mut blob = Vec::new();
+    for r in &rows {
+        for v in r {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let line = format!("{:016x} {}", fnv64(&blob), blob.len());
+    let expect = std::fs::read_to_string(golden_dir().join("forward.tiny_dense.q4_k_m.fnv64"))
+        .unwrap();
+    assert_eq!(expect.trim(), line.trim(), "imported checkpoint serves drifted logits");
+}
+
+/// Imported K-quant rows: fused `vec_dot` equals decode-then-`dot_lanes`
+/// bit-for-bit on every available dispatch arm (per-arm CI pins each).
+#[test]
+fn imported_kquant_rows_satisfy_vec_dot_identity_on_every_arm() {
+    let c = Container::from_bytes(import_fixture(1)).unwrap();
+    let mut rng = Pcg::new(0x99F);
+    let mut checked = 0;
+    for t in &c.tensors {
+        if !matches!(t.format, QuantFormat::Q4K | QuantFormat::Q6K) {
+            continue;
+        }
+        let row_len = *t.shape.last().unwrap();
+        let row_bytes = t.format.row_bytes(row_len).unwrap();
+        let row = &c.bytes(t)[..row_bytes];
+        let x: Vec<f32> = (0..row_len).map(|_| rng.next_normal()).collect();
+        let decoded = quant::dequantize(t.format, row, row_len).unwrap();
+        let want = kernels::dot_lanes(&decoded, &x);
+        for arm in DispatchArm::ALL {
+            if arm.available() {
+                let got = kernels::vec_dot_arm(t.format, row, &x, arm);
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "{}: vec_dot ({}) != dequantize+dot",
+                    t.name,
+                    arm.name()
+                );
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked > 10, "fixture unexpectedly holds only {checked} K-quant tensors");
+}
+
+#[test]
+fn open_checkpoint_sniffs_both_magics() {
+    let dir = std::env::temp_dir().join(format!("dsq-gguf-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let gguf_path = dir.join("ckpt.gguf");
+    let dsq_path = dir.join("ckpt.dsq");
+    std::fs::write(&gguf_path, fixture_bytes()).unwrap();
+    std::fs::write(&dsq_path, import_fixture(1)).unwrap();
+    let a = gguf::open_checkpoint(&gguf_path, 1).unwrap();
+    let b = gguf::open_checkpoint(&dsq_path, 1).unwrap();
+    assert_eq!(a.model.name, b.model.name);
+    assert_eq!(a.tensors.len(), b.tensors.len());
+    for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!(a.bytes(ta), b.bytes(tb), "{}", ta.name);
+    }
+    std::fs::write(dir.join("junk"), b"XXXXnothing").unwrap();
+    assert!(gguf::open_checkpoint(&dir.join("junk"), 1).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial error paths (named errors, no panics)
+// ---------------------------------------------------------------------------
+
+fn err_of(bytes: &[u8]) -> String {
+    match Gguf::from_bytes(bytes) {
+        Ok(g) => match gguf::import_gguf(&g, 1) {
+            Ok(_) => panic!("adversarial input imported cleanly"),
+            Err(e) => format!("{e:#}"),
+        },
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+/// Minimal hand-rolled GGUF builder for adversarial cases.
+fn gstr(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u64).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// One-tensor GGUF: `name` with innermost-first `dims`, raw ggml type
+/// id and offset, plus a data section of `data_len` zero bytes.
+fn one_tensor_gguf(name: &str, dims: &[u64], ggml_type: u32, offset: u64, data_len: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"GGUF");
+    out.extend_from_slice(&3u32.to_le_bytes());
+    out.extend_from_slice(&1u64.to_le_bytes()); // tensors
+    out.extend_from_slice(&1u64.to_le_bytes()); // kvs
+    gstr(&mut out, "general.architecture");
+    out.extend_from_slice(&8u32.to_le_bytes());
+    gstr(&mut out, "llama");
+    gstr(&mut out, name);
+    out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+    for d in dims {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    out.extend_from_slice(&ggml_type.to_le_bytes());
+    out.extend_from_slice(&offset.to_le_bytes());
+    let data_start = out.len().div_ceil(32) * 32;
+    out.resize(data_start + data_len, 0);
+    out
+}
+
+#[test]
+fn bad_magic_is_a_named_error() {
+    let mut b = fixture_bytes().to_vec();
+    b[0] = b'X';
+    assert!(err_of(&b).contains("not a GGUF"), "{}", err_of(&b));
+    assert!(err_of(b"GG").contains("truncated"));
+}
+
+#[test]
+fn bad_version_is_a_named_error() {
+    let mut b = fixture_bytes().to_vec();
+    b[4..8].copy_from_slice(&2u32.to_le_bytes());
+    assert!(err_of(&b).contains("unsupported GGUF version 2"), "{}", err_of(&b));
+}
+
+#[test]
+fn unknown_tensor_type_is_a_named_error() {
+    // 2 = ggml q4_0: a real type we have no codec for; 99 = nonsense.
+    for ty in [2u32, 99] {
+        let b = one_tensor_gguf("t.weight", &[256], ty, 0, 1024);
+        let e = err_of(&b);
+        assert!(e.contains(&format!("unsupported ggml tensor type {ty}")), "{e}");
+    }
+}
+
+#[test]
+fn misaligned_offset_is_a_named_error() {
+    let b = one_tensor_gguf("t.weight", &[8], 0 /* f32 */, 7, 1024);
+    assert!(err_of(&b).contains("not aligned"), "{}", err_of(&b));
+}
+
+#[test]
+fn out_of_bounds_payload_is_a_named_error() {
+    let b = one_tensor_gguf("t.weight", &[256], 0, 0, 64); // needs 1024 bytes
+    assert!(err_of(&b).contains("out of bounds"), "{}", err_of(&b));
+}
+
+#[test]
+fn overlapping_payloads_are_a_named_error() {
+    // Two f32 tensors of 64 elements (256 bytes each) at offsets 0 and 128.
+    let mut out = Vec::new();
+    out.extend_from_slice(b"GGUF");
+    out.extend_from_slice(&3u32.to_le_bytes());
+    out.extend_from_slice(&2u64.to_le_bytes());
+    out.extend_from_slice(&0u64.to_le_bytes());
+    for (name, off) in [("a.weight", 0u64), ("b.weight", 128)] {
+        gstr(&mut out, name);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&64u64.to_le_bytes());
+        out.extend_from_slice(&0u32.to_le_bytes());
+        out.extend_from_slice(&off.to_le_bytes());
+    }
+    let data_start = out.len().div_ceil(32) * 32;
+    out.resize(data_start + 512, 0);
+    let e = err_of(&out);
+    assert!(e.contains("overlapping"), "{e}");
+}
+
+#[test]
+fn unsupported_architecture_is_a_named_error() {
+    let b = one_tensor_gguf("t.weight", &[8], 0, 0, 32);
+    assert!(err_of(&b).contains("unsupported GGUF architecture"), "{}", err_of(&b));
+}
+
+#[test]
+fn census_name_mismatch_is_a_named_error() {
+    // Same-length rename inside the fixture: the importer must notice
+    // the census tensor has gone missing, by name.
+    let from: &[u8] = b"blk.0.attn_q.weight";
+    let to: &[u8] = b"blk.0.attn_x.weight";
+    let mut b = fixture_bytes().to_vec();
+    let pos = b.windows(from.len()).position(|w| w == from).unwrap();
+    b[pos..pos + to.len()].copy_from_slice(to);
+    let e = err_of(&b);
+    assert!(e.contains("missing tensor") && e.contains("blk.0.attn_q.weight"), "{e}");
+}
+
+#[test]
+fn unexpected_tensor_is_a_named_error() {
+    // A container with one extra non-census tensor exports fine but
+    // must be rejected on re-import (exact set equality both ways).
+    let cfg = ModelConfig::tiny_dense();
+    let mut w = Writer::new(cfg.clone(), "f32");
+    for t in cfg.census() {
+        let n: usize = t.shape.iter().product();
+        let payload = quant::quantize(QuantFormat::F32, &vec![0.25f32; n], None).unwrap();
+        w.add_tensor(&t.name, t.class, t.layer, &t.shape, QuantFormat::F32, &payload).unwrap();
+    }
+    let payload = quant::quantize(QuantFormat::F32, &vec![1.0f32; 256], None).unwrap();
+    w.add_tensor("extra.weight", ModuleClass::Norm, None, &[256], QuantFormat::F32, &payload)
+        .unwrap();
+    let c = Container::from_bytes(w.to_bytes()).unwrap();
+    let e = err_of(&gguf::export_bytes(&c).unwrap());
+    assert!(e.contains("unexpected tensor") && e.contains("extra.weight"), "{e}");
+}
+
+#[test]
+fn shape_mismatch_is_a_named_error() {
+    // token_embd.weight transposed relative to the census.
+    let cfg = ModelConfig::tiny_dense();
+    let mut w = Writer::new(cfg.clone(), "f32");
+    for t in cfg.census() {
+        let n: usize = t.shape.iter().product();
+        let payload = quant::quantize(QuantFormat::F32, &vec![0.25f32; n], None).unwrap();
+        let shape: Vec<usize> = if t.name == "token_embd.weight" {
+            t.shape.iter().rev().copied().collect()
+        } else {
+            t.shape.clone()
+        };
+        w.add_tensor(&t.name, t.class, t.layer, &shape, QuantFormat::F32, &payload).unwrap();
+    }
+    let c = Container::from_bytes(w.to_bytes()).unwrap();
+    let e = err_of(&gguf::export_bytes(&c).unwrap());
+    assert!(e.contains("does not match the census shape"), "{e}");
+}
+
+/// Totality sweep: every prefix of a small valid file, plus a
+/// deterministic byte-flip fuzz over the fixture's header region, must
+/// parse-or-error without panicking.
+#[test]
+fn truncation_and_byteflip_sweep_never_panics() {
+    let small = one_tensor_gguf("t.weight", &[8], 0, 0, 32);
+    assert!(Gguf::from_bytes(&small).is_ok());
+    for len in 0..small.len() {
+        assert!(Gguf::from_bytes(&small[..len]).is_err(), "prefix {len} parsed");
+    }
+    let fixture = fixture_bytes();
+    for len in [0, 3, 4, 8, 24, 100, 1000, fixture.len() - 1] {
+        let _ = Gguf::from_bytes(&fixture[..len]).map(|g| gguf::import_gguf(&g, 1));
+    }
+    let mut rng = Pcg::new(0xF522);
+    for _ in 0..200 {
+        let mut b = fixture.to_vec();
+        let pos = (rng.next_u64() % 4096) as usize; // header + kv region
+        let bit = 1u8 << (rng.next_u64() % 8);
+        b[pos] ^= bit;
+        // Must return, Ok or Err — never panic.
+        let _ = Gguf::from_bytes(&b).map(|g| gguf::import_gguf(&g, 1));
+    }
+}

@@ -468,15 +468,18 @@ impl RefForward<'_> {
         x.iter().zip(g).map(|(&v, &gv)| v * s * gv).collect()
     }
 
-    /// Rotate consecutive pairs with `θ_i = rope_base^(−2i/d)` — `d` is
-    /// the rotated span (rope head dim for MLA, full head dim for GQA).
+    /// Rotate half-split pairs `(x[i], x[i+half])` with
+    /// `θ_i = rope_base^(−2i/d)` — `d` is the rotated span (rope head
+    /// dim for MLA, full head dim for GQA). Matches the HF/llama.cpp
+    /// NeoX pairing used by `python/compile/model.py` and the runtime.
     fn rope(&self, x: &mut [f64], pos: usize, d: usize) {
-        for i in 0..x.len() / 2 {
+        let half = x.len() / 2;
+        for i in 0..half {
             let ang = pos as f64 * self.cfg.rope_base.powf(-(2 * i) as f64 / d as f64);
             let (s, c) = ang.sin_cos();
-            let (a, b) = (x[2 * i], x[2 * i + 1]);
-            x[2 * i] = a * c - b * s;
-            x[2 * i + 1] = a * s + b * c;
+            let (a, b) = (x[i], x[i + half]);
+            x[i] = a * c - b * s;
+            x[i + half] = a * s + b * c;
         }
     }
 
