@@ -15,16 +15,22 @@
 //!    `ContinuousScheduler`; per-request latency (arrival →
 //!    completion, queue wait included) and goodput are reported per
 //!    offered load.
+//! 3. **Context-length × KV-scheme sweep.** Slots are decoded out to
+//!    increasing context bounds under `f32` and `q8_0` KV caches,
+//!    reporting decode throughput and the resident KV bytes at full
+//!    context — the serving-side measurement behind ROADMAP item 5
+//!    (KV, not weights, is the marginal byte at long context; q8_0
+//!    holds ~3.8× more tokens in the same budget).
 //!
 //! Pass `--json-serving PATH` to write the measurements as JSON (CI's
-//! `BENCH_serving.json`).
+//! `BENCH_serving.json`; the sweep lands under `kv_ctx_sweep`).
 
 use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
 use dsq::coordinator::scheduler::{ContinuousScheduler, ServeConfig, SubmitOutcome};
 use dsq::coordinator::{sampler::SamplingParams, Request};
 use dsq::eval::{suites, tasks};
 use dsq::model::ModelConfig;
-use dsq::quant::parallel;
+use dsq::quant::{parallel, KvScheme};
 use dsq::runtime::native::NativeEngine;
 use dsq::scheme::builtin;
 use dsq::util::json;
@@ -79,6 +85,32 @@ fn decode_rate(engine: &NativeEngine, k: usize, steps: usize, panel: bool) -> an
     }
     std::hint::black_box(&logits);
     Ok((k * steps) as f64 / t0.elapsed().as_secs_f64())
+}
+
+/// Prefill `k` slots (16 tokens) and decode them out to `ctx` as GEMM
+/// panels. Returns (decode slot-steps/s, resident KV bytes across the
+/// slots at full context).
+fn ctx_fill(engine: &NativeEngine, k: usize, ctx: usize) -> anyhow::Result<(f64, u64)> {
+    let fwd = engine.forward();
+    let v = engine.vocab();
+    let prompt: Vec<i32> = (0..16).map(|i| 3 + (i * 11) % 400).collect();
+    let mut caches: Vec<_> = (0..k).map(|_| fwd.new_cache()).collect();
+    let mut scratch = fwd.new_scratch_cols(k);
+    for cache in caches.iter_mut() {
+        fwd.forward_tokens(&prompt, cache, &mut scratch, None)?;
+    }
+    let live = vec![true; k];
+    let mut logits = vec![0f32; k * v];
+    let steps = ctx - prompt.len();
+    let t0 = Instant::now();
+    for step in 0..steps {
+        let toks: Vec<i32> = (0..k).map(|s| ((step * 7 + s * 13) % 400) as i32 + 2).collect();
+        fwd.forward_step_batch(&toks, &live, &mut caches, &mut scratch, &mut logits)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&logits);
+    let resident: u64 = caches.iter().map(|c| c.resident_bytes() as u64).sum();
+    Ok(((k * steps) as f64 / dt, resident))
 }
 
 /// One open-loop run: `n_req` Poisson arrivals at `lambda` req/s.
@@ -201,6 +233,41 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // --- 3. context-length × KV-scheme sweep ---
+    // Same decode workload pushed to increasing context bounds under
+    // f32 and q8_0 KV; resident bytes are measured on the live caches,
+    // not estimated, so a planner/engine drift would show up here too.
+    println!("\n# context sweep: decode rate + resident KV bytes, f32 vs q8_0 KV\n");
+    let sweep_k = 4usize;
+    let mut ctx_report = Vec::new();
+    for kv in [KvScheme::F32, KvScheme::Q8_0] {
+        for ctx in [32usize, 64, 96] {
+            let mut engine = NativeEngine::with_limits(
+                Container::from_bytes(q.to_bytes())?,
+                threads,
+                sweep_k,
+                16,
+                ctx,
+            )?;
+            engine.set_kv_scheme(kv)?;
+            let bpt = engine.kv_bytes_per_token();
+            let (rate, resident) = ctx_fill(&engine, sweep_k, ctx)?;
+            println!(
+                "bench serving/kv-ctx-{}-{ctx:<3} {rate:>8.1} slot-steps/s | \
+                 {resident:>8} B resident KV ({bpt} B/token x {sweep_k} slots)",
+                kv.name()
+            );
+            ctx_report.push(json::obj(vec![
+                ("kv_scheme", json::str_(kv.name())),
+                ("ctx", json::num(ctx as f64)),
+                ("batch", json::num(sweep_k as f64)),
+                ("panel_steps_per_s", json::num(rate)),
+                ("resident_kv_bytes", json::num(resident as f64)),
+                ("kv_bytes_per_token", json::num(bpt as f64)),
+            ]));
+        }
+    }
+
     if let Some(path) = json_path {
         let doc = json::obj(vec![
             ("bench", json::str_("serving")),
@@ -212,6 +279,7 @@ fn main() -> anyhow::Result<()> {
             ("shards", json::num(engine.shard_count() as f64)),
             ("decode_panel", json::Value::Arr(panel_report)),
             ("offered_load", json::Value::Arr(load_report)),
+            ("kv_ctx_sweep", json::Value::Arr(ctx_report)),
         ]);
         std::fs::write(&path, json::to_string_pretty(&doc))?;
         eprintln!("wrote serving bench JSON → {path}");

@@ -1107,15 +1107,39 @@ class RopeMirror:
         return out
 
 
+def q8_kv_roundtrip(row: np.ndarray) -> np.ndarray:
+    """Encode one KV line to q8_0 and decode it back — the exact
+    transform the Rust quantize-on-append cache applies to each staged
+    row (quant::encode_kv_line then per-read decode).  Rows whose width
+    is not a multiple of 32 are zero-padded to the block grid before
+    encoding and truncated after decoding, mirroring
+    KvScheme::line_weights."""
+    padded = (row.size + QK8_0 - 1) // QK8_0 * QK8_0
+    staged = np.zeros(padded, dtype=F32)
+    staged[: row.size] = row
+    payload = encode_q8_0(staged, None)
+    return pyquants.dequantize("q8_0", payload, padded)[: row.size].astype(F32)
+
+
 class ForwardMirror:
     """Bit-exact mirror of runtime::forward::ForwardPass over a
     quantized tiny-model census — MLA+MoE (tiny-moe) or dense GQA
     (tiny-dense) — with weights decoded once via the
     python/compile/quants.py unpackers."""
 
-    def __init__(self, quantized: list[dict], model=TINY_MOE, max_ctx: int = 24):
+    def __init__(
+        self, quantized: list[dict], model=TINY_MOE, max_ctx: int = 24, kv_scheme: str = "f32"
+    ):
+        assert kv_scheme in ("f32", "q8_0"), kv_scheme
         self.c = model
         self.max_ctx = max_ctx
+        self.kv_scheme = kv_scheme
+        # Absorbed-MLA expanded-row cache (per layer, filled once per
+        # position at append time) — only used under a quantized KV
+        # scheme, where the Rust cache stores the expansion of the
+        # *exact* staged latent as its own encoded row instead of
+        # recomputing it from the (lossy) cached latent.
+        self.xc: list[np.ndarray] | None = None
         self.w = {}
         for q in quantized:
             n = int(np.prod(q["shape"]))
@@ -1159,8 +1183,13 @@ class ForwardMirror:
         v = lane_matvec(self._lw(li, "attn_v"), xn)
         for kh in range(n_kv):
             k[kh * hd : (kh + 1) * hd] = self.rope.apply(k[kh * hd : (kh + 1) * hd], pos)
-        cache[pos, :kd] = k
-        cache[pos, kd:] = v
+        if self.kv_scheme == "q8_0":
+            # Quantize-on-append: the staged [roped-K | V] row is
+            # encoded once and every later read sees the decoded form.
+            cache[pos] = q8_kv_roundtrip(np.concatenate([k, v]).astype(F32))
+        else:
+            cache[pos, :kd] = k
+            cache[pos, kd:] = v
         ctx = pos + 1
         inv = F32(F32(1.0) / np.float32(np.sqrt(F32(float(hd)))))
         heads = np.zeros(nh * hd, dtype=F32)
@@ -1185,14 +1214,27 @@ class ForwardMirror:
         q_an = rms_norm_f32(q_a, self._lw(li, "attn_q_a_norm"))
         q = lane_matvec(self._lw(li, "attn_q_b"), q_an)
         kv_a = lane_matvec(self._lw(li, "attn_kv_a_mqa"), xn)
-        cache[pos, :kv_rank] = rms_norm_f32(kv_a[:kv_rank], self._lw(li, "attn_kv_a_norm"))
-        cache[pos, kv_rank:] = self.rope.apply(kv_a[kv_rank:], pos)
+        latent = rms_norm_f32(kv_a[:kv_rank], self._lw(li, "attn_kv_a_norm"))
+        roped = self.rope.apply(kv_a[kv_rank:], pos)
         ctx = pos + 1
         kvb_w = c["n_heads"] * (nope + vh)
-        kvb = np.zeros((ctx, kvb_w), dtype=F32)
         w_kvb = self._lw(li, "attn_kv_b")
-        for p in range(ctx):
-            kvb[p] = lane_matvec(w_kvb, cache[p, :kv_rank])
+        if self.kv_scheme == "q8_0":
+            # Quantize-on-append, matching the Rust absorbed-MLA cache:
+            # the main row [normed latent | roped rope] and the expanded
+            # row W_kvb · latent (computed from the *exact* staged
+            # latent, not the quantized one) are each encoded once;
+            # reads below see only the decoded forms.  The quantized
+            # latent segment of the main row is write-only.
+            cache[pos] = q8_kv_roundtrip(np.concatenate([latent, roped]).astype(F32))
+            self.xc[li][pos] = q8_kv_roundtrip(lane_matvec(w_kvb, latent))
+            kvb = self.xc[li]
+        else:
+            cache[pos, :kv_rank] = latent
+            cache[pos, kv_rank:] = roped
+            kvb = np.zeros((ctx, kvb_w), dtype=F32)
+            for p in range(ctx):
+                kvb[p] = lane_matvec(w_kvb, cache[p, :kv_rank])
         inv = F32(F32(1.0) / np.float32(np.sqrt(F32(float(qk_head)))))
         heads = np.zeros(c["n_heads"] * vh, dtype=F32)
         for hd in range(c["n_heads"]):
@@ -1262,6 +1304,11 @@ class ForwardMirror:
         caches = [
             np.zeros((self.max_ctx, self.kv_width()), dtype=F32) for _ in range(c["n_layers"])
         ]
+        if c["kind"] != "dense_gqa" and self.kv_scheme == "q8_0":
+            kvb_w = c["n_heads"] * (c["qk_nope_head_dim"] + c["v_head_dim"])
+            self.xc = [
+                np.zeros((self.max_ctx, kvb_w), dtype=F32) for _ in range(c["n_layers"])
+            ]
         rows = []
         pos = 0
         out = None
@@ -1610,6 +1657,27 @@ def main():
             f"· forward {scheme_name}: {len(rows)} logits rows, fnv64 {fwd_line.split()[0]}"
         )
 
+        if scheme_name == "q4_k_m":
+            # Quantized-KV forward golden: the same script with the KV
+            # cache held in q8_0 (quantize-on-append, decoded reads).
+            # This is the ONLY bless path for forward.kv_q8_0.* — the
+            # Rust suite fails, never self-blesses, when it is missing.
+            fwd_q8 = ForwardMirror(quantized, kv_scheme="q8_0")
+            q8_rows = fwd_q8.run(FORWARD_PROMPT, FORWARD_DECODE_STEPS)
+            q8_blob = b"".join(
+                np.ascontiguousarray(r, dtype=F32).tobytes() for r in q8_rows
+            )
+            q8_line = f"{fnv64(q8_blob):016x} {len(q8_blob)}\n"
+            outputs[f"forward.kv_q8_0.{scheme_name}.fnv64"] = q8_line
+            kv_drift = rel_l2(q8_rows[0], rows[0])
+            assert q8_blob != fwd_blob, "q8_0 KV unexpectedly bit-identical to f32 KV"
+            assert kv_drift < 0.05, f"q8_0 KV drift vs f32 KV out of band: {kv_drift}"
+            print(
+                f"· forward kv_q8_0 {scheme_name}: {len(q8_rows)} logits rows, "
+                f"fnv64 {q8_line.split()[0]} (prefill-row rel-L2 vs f32 KV "
+                f"{kv_drift:.2e})"
+            )
+
         # Independent structural check: a plain-numpy float64 forward
         # (np.dot reductions, libm transcendentals — no shared code)
         # over the same decoded weights must agree within float
@@ -1671,6 +1739,25 @@ def main():
             f"· forward tiny-dense {scheme_name}: {len(rows)} logits rows, "
             f"fnv64 {fwd_line.split()[0]}"
         )
+
+        if scheme_name == "q4_k_m":
+            # Quantized-KV golden for the GQA branch (whole [K|V] row
+            # encoded on append) — mirror-only bless, as for tiny-moe.
+            fwd_q8 = ForwardMirror(quantized, TINY_DENSE, kv_scheme="q8_0")
+            q8_rows = fwd_q8.run(FORWARD_PROMPT, FORWARD_DECODE_STEPS)
+            q8_blob = b"".join(
+                np.ascontiguousarray(r, dtype=F32).tobytes() for r in q8_rows
+            )
+            q8_line = f"{fnv64(q8_blob):016x} {len(q8_blob)}\n"
+            outputs[f"forward.kv_q8_0.tiny_dense.{scheme_name}.fnv64"] = q8_line
+            kv_drift = rel_l2(q8_rows[0], rows[0])
+            assert q8_blob != fwd_blob, "q8_0 KV unexpectedly bit-identical to f32 KV"
+            assert kv_drift < 0.05, f"q8_0 KV drift vs f32 KV out of band: {kv_drift}"
+            print(
+                f"· forward kv_q8_0 tiny-dense {scheme_name}: {len(q8_rows)} logits "
+                f"rows, fnv64 {q8_line.split()[0]} (prefill-row rel-L2 vs f32 KV "
+                f"{kv_drift:.2e})"
+            )
 
         # Independent structural check, exactly as for tiny-moe: a
         # plain-numpy float64 GQA forward over the same decoded weights

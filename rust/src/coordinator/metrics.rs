@@ -34,6 +34,13 @@ pub struct Metrics {
     /// counter-only for the same reason: admission must allocate
     /// nothing but KV blocks from the pool.
     pub prefill_step_ns: u128,
+    /// Active KV-cache storage scheme of the engine this run was
+    /// served on (`""` until recorded; the engine default is `f32`,
+    /// `q8_0` stores encoded codec lines — see `--kv-scheme`).
+    pub kv_scheme: &'static str,
+    /// Engine-measured KV bytes per cached token under that scheme
+    /// (all layers, both planes — `KvCache::bytes_per_token`).
+    pub kv_bytes_per_token: u64,
     /// Shard workers the native forward pass was partitioned across
     /// (0 = unsharded local execution).
     pub shards: u64,
@@ -128,6 +135,15 @@ impl Metrics {
         self.decode_step_ns += d.as_nanos();
     }
 
+    /// Record the KV-cache configuration of the engine a run is served
+    /// on, so reports identify what was measured. Set once at
+    /// scheduler/serve construction — never in the decode loop (the
+    /// `&'static str` keeps this allocation-free regardless).
+    pub fn record_kv_config(&mut self, scheme: &'static str, bytes_per_token: usize) {
+        self.kv_scheme = scheme;
+        self.kv_bytes_per_token = bytes_per_token as u64;
+    }
+
     /// Record a request completed under continuous batching.
     pub fn record_request(&mut self, latency_ms: f64, n_tokens: usize) {
         self.completed += 1;
@@ -163,6 +179,10 @@ impl Metrics {
         self.rejected += other.rejected;
         self.decode_step_ns += other.decode_step_ns;
         self.prefill_step_ns += other.prefill_step_ns;
+        if self.kv_scheme.is_empty() {
+            self.kv_scheme = other.kv_scheme;
+            self.kv_bytes_per_token = other.kv_bytes_per_token;
+        }
         self.shards = self.shards.max(other.shards);
         self.exchanges += other.exchanges;
         self.exchange_wait_ns += other.exchange_wait_ns;
@@ -249,13 +269,21 @@ impl Metrics {
         } else {
             String::new()
         };
+        let kv = if self.kv_scheme.is_empty() {
+            String::new()
+        } else {
+            format!(
+                "\nkv: scheme {}, {} B/token measured",
+                self.kv_scheme, self.kv_bytes_per_token
+            )
+        };
         format!(
             "waves {} | requests {} | gen tokens {}\n\
              prefill: {} calls ({} seqs, {} prompt tokens), median {:.1} ms, p90 {:.1} ms\n\
              decode:  {} calls ({} live slot-steps), median {:.1} ms, p90 {:.1} ms\n\
              wave:    median {:.1} ms, p90 {:.1} ms\n\
              throughput: {:.1} tok/s, {:.2} req/s, {:.1} live slot-steps/s, \
-             {:.1} prefill tok/s{continuous}{sharded}",
+             {:.1} prefill tok/s{continuous}{sharded}{kv}",
             self.waves,
             self.requests,
             self.generated_tokens,
@@ -340,6 +368,25 @@ mod tests {
         assert_eq!(base.decode_calls, 3);
         assert_eq!(base.completed, 3);
         assert_eq!(base.latency_percentiles().0, 20.0);
+    }
+
+    #[test]
+    fn kv_config_line_and_merge_precedence() {
+        let mut m = Metrics::default();
+        assert!(!m.report().contains("kv:"), "no kv line before recording");
+        m.record_kv_config("q8_0", 714);
+        let report = m.report();
+        assert!(report.contains("kv: scheme q8_0, 714 B/token"), "{report}");
+
+        let mut base = Metrics::default();
+        base.merge(m);
+        assert_eq!(base.kv_scheme, "q8_0");
+        assert_eq!(base.kv_bytes_per_token, 714);
+        // An already-recorded scheme is not overwritten by a later merge.
+        let mut other = Metrics::default();
+        other.record_kv_config("f32", 2688);
+        base.merge(other);
+        assert_eq!(base.kv_scheme, "q8_0");
     }
 
     #[test]

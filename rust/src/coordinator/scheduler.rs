@@ -144,10 +144,16 @@ impl<'e> ContinuousScheduler<'e> {
         let bt = if cfg.block_tokens == 0 { DEFAULT_BLOCK_TOKENS } else { cfg.block_tokens };
         let capacity =
             if cfg.kv_blocks == 0 { batch * max_ctx.div_ceil(bt) } else { cfg.kv_blocks };
+        // The pool inherits the engine's KV scheme (set via
+        // `NativeEngine::set_kv_scheme` before the scheduler exists),
+        // so block byte sizes and admission budgets automatically
+        // reflect the encoded per-token footprint.
         let pool = engine.new_block_pool(capacity, bt)?;
         let caches = (0..batch)
             .map(|_| engine.forward().new_paged_cache(&pool))
             .collect::<Result<Vec<_>>>()?;
+        let mut metrics = Metrics::default();
+        metrics.record_kv_config(engine.kv_scheme().name(), pool.bytes_per_token());
         Ok(ContinuousScheduler {
             engine,
             pool,
@@ -162,7 +168,7 @@ impl<'e> ContinuousScheduler<'e> {
             gen: (0..batch).map(|_| Vec::with_capacity(max_ctx)).collect(),
             samp: Vec::with_capacity(vocab),
             responses: Vec::new(),
-            metrics: Metrics::default(),
+            metrics,
         })
     }
 

@@ -1,0 +1,307 @@
+//! Long-generation KV-scheme sweeps — the eval surface of the
+//! quantized KV cache (ROADMAP item 5, PR 10).
+//!
+//! The paper's Table 1 shows weights stop dominating memory once
+//! generations get long: at 32K context the KV cache is the marginal
+//! byte. Related work (the Qwen3 and reasoning-model quantization
+//! studies in PAPERS.md) finds that quantization failures surface
+//! precisely on long chain-of-thought generations — short-prompt
+//! accuracy hides drift that accumulates over hundreds of decoded
+//! tokens. This module builds the corresponding measurement at proxy
+//! scale: synthetic prompts decoded greedily out to a configurable
+//! context length, swept over **weight scheme × KV scheme × context
+//! length**, reporting
+//!
+//! - **token agreement** — the fraction of greedily decoded tokens
+//!   matching the f32-KV baseline *with the same weight scheme*, so the
+//!   column isolates KV-quantization damage from weight-quantization
+//!   damage; and
+//! - **an NLL perplexity proxy** — the mean negative log-likelihood the
+//!   swept configuration assigns to the baseline's generated tail under
+//!   teacher forcing (`exp` of it is a perplexity over the baseline
+//!   trajectory). Unlike agreement this is smooth: it moves even when
+//!   every argmax survives the perturbation.
+//!
+//! Greedy decoding keeps every cell deterministic (bit-stable across
+//! threads/arms by the PR-3..PR-10 identity chain), so sweep output is
+//! reproducible byte-for-byte and CI-diffable.
+
+use crate::container::{quantize_container_with, synthetic_f32_container, Container};
+use crate::coordinator::sampler::argmax;
+use crate::eval::{suites, tasks};
+use crate::model::ModelConfig;
+use crate::quant::KvScheme;
+use crate::runtime::forward::ForwardPass;
+use crate::scheme::builtin;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Result};
+
+/// One sweep configuration (the CLI fills this from `dsq longgen`).
+#[derive(Debug, Clone)]
+pub struct LongGenConfig {
+    /// Model to synthesize (`tiny-moe` / `tiny-dense`).
+    pub model: String,
+    /// Weight quantization schemes (container-level, e.g. `q4_k_m`).
+    pub weight_schemes: Vec<String>,
+    /// KV cache storage schemes to compare (baseline `F32` is always
+    /// run — it anchors the agreement/NLL reference per weight scheme).
+    pub kv_schemes: Vec<KvScheme>,
+    /// Total context lengths (prompt + generation) to sweep.
+    pub ctx_lens: Vec<usize>,
+    /// Synthetic prompts averaged per cell.
+    pub n_prompts: usize,
+    /// Threads for container quantization (forward runs single-thread;
+    /// logits are bit-identical at any count).
+    pub threads: usize,
+}
+
+impl Default for LongGenConfig {
+    fn default() -> Self {
+        LongGenConfig {
+            model: "tiny-moe".into(),
+            weight_schemes: vec!["q4_k_m".into(), "dq3_k_m".into()],
+            kv_schemes: vec![KvScheme::F32, KvScheme::Q8_0],
+            ctx_lens: vec![16, 32, 48],
+            n_prompts: 3,
+            threads: 1,
+        }
+    }
+}
+
+/// One measured cell of the sweep.
+#[derive(Debug, Clone)]
+pub struct LongGenCell {
+    pub weight_scheme: String,
+    pub kv_scheme: KvScheme,
+    pub ctx_len: usize,
+    /// Greedy tokens generated per prompt (ctx − prompt length, summed).
+    pub n_generated: usize,
+    /// % of generated tokens agreeing with the f32-KV baseline at the
+    /// same weight scheme (100.0 for the baseline itself).
+    pub agreement_pct: f64,
+    /// Mean NLL of the baseline's generated tail under this
+    /// configuration (teacher-forced); `exp` = perplexity proxy.
+    pub nll: f64,
+    /// Engine-measured KV bytes per cached token under this scheme.
+    pub kv_bytes_per_token: usize,
+}
+
+/// Greedy-decode from `prompt` until `total` tokens are cached,
+/// returning the generated tail (panel prefill + token loop — the same
+/// code paths serving uses).
+fn greedy_tail(fwd: &ForwardPass, prompt: &[i32], total: usize) -> Result<Vec<i32>> {
+    let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
+    let mut logits = vec![0f32; fwd.vocab()];
+    fwd.forward_tokens(prompt, &mut cache, &mut scratch, Some(&mut logits))?;
+    let gen_len = total - prompt.len();
+    let mut out = Vec::with_capacity(gen_len);
+    for i in 0..gen_len {
+        let tok = argmax(&logits);
+        out.push(tok);
+        if i + 1 < gen_len {
+            fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits))?;
+        }
+    }
+    Ok(out)
+}
+
+/// Numerically stable `log∑exp` over a logits row (f64 accumulation so
+/// the proxy is insensitive to vocab ordering).
+fn log_sum_exp(logits: &[f32]) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    m + logits.iter().map(|&x| (x as f64 - m).exp()).sum::<f64>().ln()
+}
+
+/// Teacher-force `stream` through `fwd`, summing the NLL of each token
+/// from `score_from` onward (position `i ≥ score_from` is scored by the
+/// logits after forwarding `stream[i−1]`). Returns (total NLL, count).
+fn forced_nll(fwd: &ForwardPass, stream: &[i32], score_from: usize) -> Result<(f64, usize)> {
+    let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
+    let mut logits = vec![0f32; fwd.vocab()];
+    let mut nll = 0.0;
+    let mut n = 0;
+    for (i, &t) in stream.iter().enumerate() {
+        fwd.forward_token(t, &mut cache, &mut scratch, Some(&mut logits))?;
+        if i + 1 < stream.len() && i + 1 >= score_from {
+            let next = stream[i + 1] as usize;
+            nll += log_sum_exp(&logits) - logits[next] as f64;
+            n += 1;
+        }
+    }
+    Ok((nll, n))
+}
+
+/// Deterministic prompt mix: one question from each benchmark suite in
+/// round-robin, truncated to leave room to generate.
+fn sweep_prompts(n: usize, max_prompt: usize) -> Vec<Vec<i32>> {
+    (0..n as u64)
+        .map(|i| {
+            let suite = &suites::SUITES[(i % suites::SUITES.len() as u64) as usize];
+            let mut p = tasks::eval_question(suite, i).prompt;
+            p.truncate(max_prompt);
+            p
+        })
+        .collect()
+}
+
+/// Run the full sweep: for every (weight scheme, context length) an
+/// f32-KV baseline trajectory is generated first, then every requested
+/// KV scheme is measured against it.
+pub fn run_sweep(cfg: &LongGenConfig) -> Result<Vec<LongGenCell>> {
+    let model = ModelConfig::by_name(&cfg.model)?;
+    let min_ctx = *cfg.ctx_lens.iter().min().unwrap_or(&0);
+    if min_ctx < 2 {
+        bail!("context lengths must be ≥ 2 (got {:?})", cfg.ctx_lens);
+    }
+    let src = synthetic_f32_container(&model, 0x601D)?;
+    let mut cells = Vec::new();
+    for ws in &cfg.weight_schemes {
+        let qbytes = if ws == "f32" {
+            src.to_bytes()
+        } else {
+            quantize_container_with(&src, &builtin::scheme(ws)?, None, cfg.threads)?.to_bytes()
+        };
+        let build = |kv: KvScheme, max_ctx: usize| -> Result<ForwardPass> {
+            let mut fwd = ForwardPass::new(Container::from_bytes(qbytes.clone())?, 1, max_ctx)?;
+            fwd.set_kv_scheme(kv)?;
+            Ok(fwd)
+        };
+        for &ctx in &cfg.ctx_lens {
+            // Prompts leave at least half the context to generate into.
+            let prompts = sweep_prompts(cfg.n_prompts, ctx / 2);
+            let baseline = build(KvScheme::F32, ctx)?;
+            let refs: Vec<Vec<i32>> = prompts
+                .iter()
+                .map(|p| {
+                    let tail = greedy_tail(&baseline, p, ctx)?;
+                    let mut s = p.clone();
+                    s.extend_from_slice(&tail);
+                    Ok(s)
+                })
+                .collect::<Result<_>>()?;
+            for &kv in &cfg.kv_schemes {
+                let fwd = build(kv, ctx)?;
+                let mut agree = 0usize;
+                let mut total = 0usize;
+                let mut nll_sum = 0.0;
+                let mut nll_n = 0usize;
+                for (p, r) in prompts.iter().zip(&refs) {
+                    let tail = greedy_tail(&fwd, p, ctx)?;
+                    let ref_tail = &r[p.len()..];
+                    agree += tail.iter().zip(ref_tail).filter(|(a, b)| a == b).count();
+                    total += tail.len();
+                    let (s, n) = forced_nll(&fwd, r, p.len())?;
+                    nll_sum += s;
+                    nll_n += n;
+                }
+                cells.push(LongGenCell {
+                    weight_scheme: ws.clone(),
+                    kv_scheme: kv,
+                    ctx_len: ctx,
+                    n_generated: total,
+                    agreement_pct: agree as f64 / total.max(1) as f64 * 100.0,
+                    nll: nll_sum / nll_n.max(1) as f64,
+                    kv_bytes_per_token: fwd.new_cache().bytes_per_token(),
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the sweep as a `dsq table`-style text report.
+pub fn render(model: &str, cells: &[LongGenCell]) -> String {
+    let mut out = format!(
+        "# long-generation KV sweep: {model} (greedy decode, agreement/NLL vs f32-KV \
+         baseline at the same weight scheme)\n\
+         {:<6} {:<10} {:<6} {:>6} {:>8} {:>9} {:>10} {:>9}\n",
+        "ctx", "weights", "kv", "gen", "agree%", "nll", "ppl-proxy", "kv B/tok"
+    );
+    for c in cells {
+        out.push_str(&format!(
+            "{:<6} {:<10} {:<6} {:>6} {:>8.1} {:>9.4} {:>10.3} {:>9}\n",
+            c.ctx_len,
+            c.weight_scheme,
+            c.kv_scheme.name(),
+            c.n_generated,
+            c.agreement_pct,
+            c.nll,
+            c.nll.exp(),
+            c.kv_bytes_per_token
+        ));
+    }
+    out
+}
+
+/// JSON form (one object per cell) for `--out` / CI artifacts.
+pub fn to_json(model: &str, cells: &[LongGenCell]) -> Value {
+    json::obj(vec![
+        ("bench", json::str_("longgen_kv_sweep")),
+        ("model", json::str_(model)),
+        (
+            "cells",
+            json::arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        json::obj(vec![
+                            ("weight_scheme", json::str_(&c.weight_scheme)),
+                            ("kv_scheme", json::str_(c.kv_scheme.name())),
+                            ("ctx_len", json::num(c.ctx_len as f64)),
+                            ("n_generated", json::num(c.n_generated as f64)),
+                            ("agreement_pct", json::num(c.agreement_pct)),
+                            ("nll", json::num(c.nll)),
+                            ("kv_bytes_per_token", json::num(c.kv_bytes_per_token as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal sweep must anchor its own baseline: the f32-KV cell
+    /// agrees 100% with itself, q8_0 stays within a loose agreement
+    /// band, and the reported per-token footprint shrinks ≥3×.
+    #[test]
+    fn tiny_sweep_baseline_and_q8() {
+        let cfg = LongGenConfig {
+            model: "tiny-moe".into(),
+            weight_schemes: vec!["q4_k_m".into()],
+            kv_schemes: vec![KvScheme::F32, KvScheme::Q8_0],
+            ctx_lens: vec![12],
+            n_prompts: 2,
+            threads: 1,
+        };
+        let cells = run_sweep(&cfg).unwrap();
+        assert_eq!(cells.len(), 2);
+        let f = cells.iter().find(|c| c.kv_scheme == KvScheme::F32).unwrap();
+        let q = cells.iter().find(|c| c.kv_scheme == KvScheme::Q8_0).unwrap();
+        assert_eq!(f.agreement_pct, 100.0, "baseline must agree with itself");
+        assert!(f.nll.is_finite() && q.nll.is_finite());
+        assert!(q.agreement_pct >= 0.0 && q.agreement_pct <= 100.0);
+        assert!(q.kv_bytes_per_token * 3 <= f.kv_bytes_per_token, "≥3× KV saving");
+        assert!(f.n_generated > 0 && q.n_generated == f.n_generated);
+        let text = render("tiny-moe", &cells);
+        assert!(text.contains("q8_0"), "{text}");
+        // Determinism: the whole sweep reruns bit-identically.
+        let again = run_sweep(&cfg).unwrap();
+        assert_eq!(again.len(), cells.len());
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.agreement_pct.to_bits(), b.agreement_pct.to_bits());
+            assert_eq!(a.nll.to_bits(), b.nll.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_context() {
+        let cfg = LongGenConfig { ctx_lens: vec![1], ..LongGenConfig::default() };
+        assert!(run_sweep(&cfg).is_err());
+    }
+}

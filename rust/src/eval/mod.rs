@@ -6,6 +6,7 @@
 //! population-std across sample passes; plain and Table-8-weighted
 //! averages; relative accuracy drop vs the reference column.
 
+pub mod longgen;
 pub mod report;
 pub mod suites;
 pub mod tasks;

@@ -10,11 +10,13 @@
 //! dsq eval --hlo D --ckpt F [--suite N] [--full-size] [--out R.json] [--native]
 //! dsq eval --native [--model M] [--scheme S]   (synthetic container, no artifacts)
 //! dsq serve --hlo D --ckpt F --requests N [--native]   (serving smoke/throughput)
-//! dsq serve --native [--model M] [--scheme S] [--requests N]
+//! dsq serve --native [--model M] [--scheme S] [--kv-scheme f32|q8_0] [--requests N]
 //!           [--kv-blocks N] [--block-tokens N] [--max-pending N] [--wave]
 //!   Native serving runs the continuous-batching scheduler (per-step
 //!   admission, paged KV from a block pool, submit-time backpressure);
 //!   --wave forces the legacy batch-synchronous wave loop instead.
+//!   --kv-scheme q8_0 stores KV rows as quantized codec blocks (~3.8×
+//!   smaller); eval/selfcheck accept it too.
 //! dsq memory --model M --scheme S [--ctx N] [--seqs N]
 //! dsq recommend --model M               §4.4 device recommendations
 //! dsq sweep-error --input CKPT.dsq      bpw ↔ reconstruction error (E10)
@@ -33,7 +35,7 @@ use dsq::coordinator::{sampler::SamplingParams, scheduler, Coordinator, Request}
 use dsq::eval::{self, report, suites};
 use dsq::memory::{self, devices};
 use dsq::model::ModelConfig;
-use dsq::quant::{self, QuantFormat};
+use dsq::quant::{self, KvScheme, QuantFormat};
 use dsq::runtime::Engine;
 use dsq::scheme::builtin;
 use dsq::util::json;
@@ -80,6 +82,16 @@ Commands:
         [--shards N]       partition the native forward pass across N shard
                            workers (expert-parallel MoE + row-parallel matmuls;
                            logits bit-identical to unsharded; also for eval)
+        [--kv-scheme S]    KV-cache storage scheme: f32 (default) or q8_0
+                           (rows quantized to codec blocks on append, read
+                           through the fused vec_dot kernels; ~3.8× less KV
+                           memory; also for eval and selfcheck)
+  longgen [--model M] [--schemes a,b] [--kv-schemes f32,q8_0]
+          [--ctx-lens 16,32,48] [--prompts N] [--out FILE.json]
+                     long-generation sweep: greedy-decode synthetic prompts out
+                     to each context length and report token agreement + an NLL
+                     perplexity proxy vs the f32-KV baseline, per weight scheme
+                     × KV scheme × context length
   memory --model M --scheme S [--ctx N] [--seqs N]
   recommend [--model M]
   sweep-error --input CKPT.dsq
@@ -97,6 +109,7 @@ fn run(args: &Args) -> Result<()> {
         "import" => cmd_import(args),
         "export" => cmd_export(args),
         "eval" => cmd_eval(args),
+        "longgen" => cmd_longgen(args),
         "serve" => cmd_serve(args),
         "memory" => cmd_memory(args),
         "recommend" => cmd_recommend(args),
@@ -324,11 +337,41 @@ fn cmd_export(args: &Args) -> Result<()> {
 /// `dsq eval --native --model tiny-dense`. `--shards N` partitions the
 /// native forward pass across N shard workers (`runtime::sharded`) —
 /// logits stay bit-identical to the unsharded engine at every count.
+/// `--kv-scheme S` (`f32` default, `q8_0`) selects the KV-cache
+/// storage scheme on the native backend: rows are encoded into codec
+/// blocks on append and attention reads them through the fused
+/// `vec_dot` kernels, so logits stay bit-identical across threads,
+/// arms, shards, and dense/paged backings (but differ numerically from
+/// f32-KV by the bounded quantization error).
 fn load_engine_from_args(args: &Args, hlo: &Path, threads: usize) -> Result<Engine> {
     let shards: usize = args.flag_parse("shards", 0usize)?;
     if shards > 0 && !args.switch("native") {
         bail!("--shards requires the native backend (pass --native)");
     }
+    let kv_scheme = KvScheme::parse(&args.flag_or("kv-scheme", "f32"))?;
+    if kv_scheme != KvScheme::F32 && !args.switch("native") {
+        bail!("--kv-scheme {kv_scheme} requires the native backend (pass --native)");
+    }
+    let mut engine = load_engine_backend(args, hlo, threads, shards)?;
+    if kv_scheme != KvScheme::F32 {
+        engine
+            .native_mut()
+            .expect("--native checked above")
+            .set_kv_scheme(kv_scheme)?;
+        eprintln!(
+            "[native] KV cache scheme {kv_scheme}: {} B/token (vs {} B/token at f32)",
+            engine.native().expect("native").kv_bytes_per_token(),
+            {
+                let fwd = engine.native().expect("native").forward();
+                let cfg = fwd.config();
+                memory::kv_bytes_per_token(cfg, KvScheme::F32, true)
+            }
+        );
+    }
+    Ok(engine)
+}
+
+fn load_engine_backend(args: &Args, hlo: &Path, threads: usize, shards: usize) -> Result<Engine> {
     match (args.flag("ckpt"), args.switch("native")) {
         // The native path sniffs the checkpoint magic, so `--ckpt` takes
         // either a .dsq container or a llama.cpp .gguf file directly.
@@ -386,6 +429,44 @@ fn cmd_eval(args: &Args) -> Result<()> {
     println!("--- serving metrics ---\n{}", coord.metrics.report());
     if let Some(out) = args.flag("out") {
         std::fs::write(out, json::to_string_pretty(&result.to_json()))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `dsq longgen` — the long-generation KV-scheme sweep
+/// (`eval::longgen`): accuracy-proxy (token agreement vs the f32-KV
+/// baseline) and NLL perplexity proxy × weight scheme × KV scheme ×
+/// context length, on a synthetic container. Deterministic (greedy
+/// decode), so the report is byte-reproducible and CI-diffable.
+fn cmd_longgen(args: &Args) -> Result<()> {
+    let parse_list = |flag: &str, default: &str| -> Vec<String> {
+        args.flag_or(flag, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let kv_schemes = parse_list("kv-schemes", "f32,q8_0")
+        .iter()
+        .map(|s| KvScheme::parse(s))
+        .collect::<Result<Vec<_>>>()?;
+    let ctx_lens = parse_list("ctx-lens", "16,32,48")
+        .iter()
+        .map(|s| s.parse::<usize>().map_err(|e| anyhow!("invalid --ctx-lens entry {s:?}: {e}")))
+        .collect::<Result<Vec<_>>>()?;
+    let cfg = eval::longgen::LongGenConfig {
+        model: args.flag_or("model", "tiny-moe"),
+        weight_schemes: parse_list("schemes", "q4_k_m,dq3_k_m"),
+        kv_schemes,
+        ctx_lens,
+        n_prompts: args.flag_parse("prompts", 3usize)?,
+        threads: args.threads_flag(quant::parallel::max_threads())?,
+    };
+    let cells = eval::longgen::run_sweep(&cfg)?;
+    print!("{}", eval::longgen::render(&cfg.model, &cells));
+    if let Some(out) = args.flag("out") {
+        std::fs::write(out, json::to_string_pretty(&eval::longgen::to_json(&cfg.model, &cells)))?;
         eprintln!("wrote {out}");
     }
     Ok(())
@@ -904,14 +985,68 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         }
     }
 
+    // Quantized-KV identity: with the KV cache stored as q8_0 codec
+    // blocks (`--kv-scheme q8_0`) the same bit-identity matrix must
+    // hold — quantize-on-write/fused-read may not depend on thread
+    // count or dispatch arm. Logits legitimately differ from the f32-KV
+    // runs above by bounded quantization error, but never between two
+    // q8_0 runs.
+    println!();
+    {
+        use dsq::runtime::forward::{ForwardPass, MatvecMode};
+        let toks = [1i32, 17, 300, 42, 511];
+        let dense_src = synthetic_f32_container(&ModelConfig::tiny_dense(), 0x5E1F)?;
+        for (model_src, model_name) in [(&src, "tiny-moe"), (&dense_src, "tiny-dense")] {
+            for scheme_name in ["dq3_k_m", "q4_k_m"] {
+                let scheme = builtin::scheme(scheme_name)?;
+                let qbytes = quantize_container_with(model_src, &scheme, None, threads)?
+                    .to_bytes();
+                let run = |mode: MatvecMode| -> Result<Vec<u32>> {
+                    let q = Container::from_bytes(qbytes.clone())?;
+                    let mut fwd =
+                        ForwardPass::new(q, 1, dsq::runtime::native::NATIVE_MAX_CTX)?;
+                    fwd.set_kv_scheme(KvScheme::Q8_0)?;
+                    fwd.set_mode(mode);
+                    let mut cache = fwd.new_cache();
+                    let mut scratch = fwd.new_scratch();
+                    let mut logits = vec![0f32; fwd.vocab()];
+                    let mut bits = Vec::new();
+                    for &t in &toks {
+                        fwd.forward_token(t, &mut cache, &mut scratch, Some(&mut logits))?;
+                        bits.extend(logits.iter().map(|v| v.to_bits()));
+                    }
+                    Ok(bits)
+                };
+                let serial = run(MatvecMode::Threads(1))?;
+                let mut ok = run(MatvecMode::Threads(threads))? == serial;
+                for &arm in &arms {
+                    ok &= run(MatvecMode::Pinned(arm))? == serial;
+                }
+                if !ok {
+                    failures += 1;
+                }
+                println!(
+                    "  kv-q8_0/{model_name}/{:<8} ({} steps × {} logits, 1 vs {threads} \
+                     threads + {} arms): {}",
+                    scheme_name,
+                    toks.len(),
+                    serial.len() / toks.len(),
+                    arms.len(),
+                    if ok { "identical" } else { "MISMATCH" }
+                );
+            }
+        }
+    }
+
     if failures > 0 {
         bail!("selfcheck FAILED: {failures} mismatching case(s)");
     }
     println!(
         "\nselfcheck passed: parallel encode, loader decode, fused vec_dot, the \
-         vec_dot_mat GEMM panels, the native forward pass and the sharded \
-         expert/tensor-parallel pass are bit-identical to their serial/scalar/\
-         unsharded references on every available dispatch arm"
+         vec_dot_mat GEMM panels, the native forward pass (f32 and q8_0 KV \
+         caches) and the sharded expert/tensor-parallel pass are bit-identical \
+         to their serial/scalar/unsharded references on every available \
+         dispatch arm"
     );
     Ok(())
 }

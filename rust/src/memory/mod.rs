@@ -22,7 +22,8 @@
 
 pub mod devices;
 
-use crate::model::ModelConfig;
+use crate::model::{ModelConfig, ModelKind};
+use crate::quant::KvScheme;
 use crate::runtime::sharded::{expert_range, row_range, MAX_SHARDS};
 use crate::scheme::Scheme;
 use anyhow::{bail, Result};
@@ -124,6 +125,57 @@ pub fn shard_weights(
     Ok(plan)
 }
 
+/// Named per-layer byte plan one cached token occupies in the native
+/// engine under KV scheme `scheme` — the analytic side of the
+/// planner-vs-engine contract for the **quantized KV cache** (PR 10).
+///
+/// The returned list must match
+/// [`KvCache::measured_token_plan`] entry for entry
+/// (`blk.{i}.kv_row` / `blk.{i}.kv_expanded`), exactly like
+/// [`shard_weights`] matches `ShardRuntime::shard_plan`: the
+/// differential suite diffs the two lists by *name* so any drift is
+/// reported per tensor, not as one opaque total. `absorb_mla` mirrors
+/// [`ForwardPass::set_mla_absorption`] — it decides whether the
+/// expanded plane exists (and quantized KV requires it for MLA
+/// models).
+///
+/// Note this is the **engine** cache footprint (f32 rows by default,
+/// encoded codec lines under `q8_0`), not the f16 deployment analytic
+/// [`ModelConfig::kv_bytes_per_token`] Table 1 is calibrated on —
+/// that constant is pinned by `table1_reproduction` and unchanged.
+///
+/// [`KvCache::measured_token_plan`]: crate::runtime::forward::KvCache::measured_token_plan
+/// [`ForwardPass::set_mla_absorption`]: crate::runtime::forward::ForwardPass::set_mla_absorption
+pub fn kv_token_plan(
+    cfg: &ModelConfig,
+    scheme: KvScheme,
+    absorb_mla: bool,
+) -> Vec<(String, u64)> {
+    let width = cfg.kv_cache_width();
+    let xwidth = match cfg.kind {
+        ModelKind::MlaMoe if absorb_mla => cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim),
+        _ => 0,
+    };
+    let (row_b, xrow_b) = (scheme.line_bytes(width), scheme.line_bytes(xwidth));
+    let mut plan = Vec::with_capacity(cfg.n_layers * 2);
+    for li in 0..cfg.n_layers {
+        plan.push((format!("blk.{li}.kv_row"), row_b as u64));
+        if xwidth > 0 {
+            plan.push((format!("blk.{li}.kv_expanded"), xrow_b as u64));
+        }
+    }
+    plan
+}
+
+/// Total engine KV bytes per cached token under `scheme` — the sum of
+/// [`kv_token_plan`]. The acceptance gate checks this equals
+/// `KvCache::bytes_per_token()` exactly and that `q8_0` reports a
+/// ≥ 3× reduction vs `f32` (Q8_0 packs 32 weights into 34 bytes:
+/// 128/34 ≈ 3.76× on block-aligned widths).
+pub fn kv_bytes_per_token(cfg: &ModelConfig, scheme: KvScheme, absorb_mla: bool) -> u64 {
+    kv_token_plan(cfg, scheme, absorb_mla).iter().map(|(_, b)| b).sum()
+}
+
 impl MemoryEstimate {
     pub fn model_gib(&self) -> f64 {
         self.model_bytes as f64 / (1u64 << 30) as f64
@@ -217,6 +269,47 @@ mod tests {
         }
         assert!(shard_weights(&cfg, &s, 0).is_err());
         assert!(shard_weights(&cfg, &s, 65).is_err());
+    }
+
+    /// The scheme-aware KV plan: q8_0 must report the promised ≥3×
+    /// per-token saving over f32 on every built-in shape (Q8_0 packs
+    /// 32×4 f32 bytes into 34), and the per-layer naming must follow
+    /// the `blk.{i}.kv_row` / `blk.{i}.kv_expanded` contract the
+    /// engine's `measured_token_plan` mirrors (the exact engine-vs-
+    /// planner equality is asserted in `tests/quantized_kv.rs`, where
+    /// a real cache exists).
+    #[test]
+    fn kv_token_plan_is_scheme_aware() {
+        for (cfg, absorb) in [
+            (ModelConfig::tiny_moe(), true),
+            (ModelConfig::tiny_dense(), false),
+            (ModelConfig::deepseek_v3_671b(), true),
+        ] {
+            let f32b = kv_bytes_per_token(&cfg, KvScheme::F32, absorb);
+            let q8b = kv_bytes_per_token(&cfg, KvScheme::Q8_0, absorb);
+            assert!(
+                q8b * 3 <= f32b,
+                "{:?}: q8_0 {q8b} B/token vs f32 {f32b} — expected ≥3× reduction",
+                cfg.name
+            );
+            let plan = kv_token_plan(&cfg, KvScheme::Q8_0, absorb);
+            assert_eq!(plan[0].0, "blk.0.kv_row");
+            let expanded = plan.iter().filter(|(n, _)| n.ends_with(".kv_expanded")).count();
+            match cfg.kind {
+                ModelKind::MlaMoe => assert_eq!(expanded, cfg.n_layers),
+                ModelKind::DenseGqa => assert_eq!(expanded, 0),
+            }
+            assert_eq!(
+                kv_token_plan(&cfg, KvScheme::F32, absorb)
+                    .iter()
+                    .map(|(_, b)| b)
+                    .sum::<u64>(),
+                f32b
+            );
+        }
+        // Eager (non-absorbed) MLA carries no expanded plane at all.
+        let eager = kv_token_plan(&ModelConfig::tiny_moe(), KvScheme::F32, false);
+        assert_eq!(eager.len(), ModelConfig::tiny_moe().n_layers);
     }
 
     #[test]

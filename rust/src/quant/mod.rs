@@ -255,6 +255,116 @@ impl std::str::FromStr for QuantFormat {
     }
 }
 
+/// KV-cache storage scheme: how the serving engine encodes appended
+/// cache lines (one per-token row per layer plane).
+///
+/// `F32` is the default and keeps the historical raw `f32` planes
+/// byte-for-byte (the golden-logits fixtures are pinned against it).
+/// `Q8_0` stores every cache line as Q8_0 blocks, quantized **once on
+/// append** (write-once, like the absorbed-MLA expanded plane) and read
+/// through the fused [`kernels::vec_dot_arm`] / [`kernels::decode_blocks_arm`]
+/// kernels so attention scores keep the canonical 8-lane reduction
+/// order. Lines whose element count is not a multiple of the 32-weight
+/// block are padded with zeros to the block grid ([`KvScheme::line_weights`]);
+/// the padding participates in the (absmax) scale search only as zeros
+/// and is never read back.
+///
+/// Lower-bit K-quants are admissible later: everything downstream
+/// speaks [`KvScheme::line_bytes`], not `4 * width`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvScheme {
+    #[default]
+    F32,
+    Q8_0,
+}
+
+impl KvScheme {
+    /// The canonical lower-case name (`"f32"` / `"q8_0"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvScheme::F32 => "f32",
+            KvScheme::Q8_0 => "q8_0",
+        }
+    }
+
+    /// Parse a `--kv-scheme` value.
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name {
+            "f32" | "fp32" => KvScheme::F32,
+            "q8_0" => KvScheme::Q8_0,
+            other => bail!(
+                "unknown KV scheme {other:?} (supported: f32, q8_0)"
+            ),
+        })
+    }
+
+    /// The underlying block format of encoded cache lines.
+    pub fn format(self) -> QuantFormat {
+        match self {
+            KvScheme::F32 => QuantFormat::F32,
+            KvScheme::Q8_0 => QuantFormat::Q8_0,
+        }
+    }
+
+    /// Element count of an `n`-element cache line after padding up to
+    /// the scheme's block grid (identity for `F32`).
+    pub fn line_weights(self, n: usize) -> usize {
+        let bw = self.format().block_weights();
+        n.div_ceil(bw) * bw
+    }
+
+    /// Encoded bytes of an `n`-element cache line, padding included.
+    /// This is the unit all KV reservation / planner arithmetic uses.
+    pub fn line_bytes(self, n: usize) -> usize {
+        let fmt = self.format();
+        self.line_weights(n) / fmt.block_weights() * fmt.block_bytes()
+    }
+}
+
+impl std::fmt::Display for KvScheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KvScheme {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        KvScheme::parse(s)
+    }
+}
+
+/// Encode one staged cache line into `scheme`-packed bytes.
+///
+/// `staged` is the exact f32 line **already padded** to
+/// [`KvScheme::line_weights`] (callers keep a preallocated staging
+/// buffer whose zero tail is written once — appends are write-once, so
+/// the tail stays zero); `out` is exactly [`KvScheme::line_bytes`] for
+/// the unpadded width. Serial and allocation-free: this is the
+/// quantize-on-append hot path of the serving decode loop. The scale
+/// search is plain absmax (`Q8_0`), so the encoding is a pure function
+/// of the line — identical across threads, shards, and dispatch arms.
+pub fn encode_kv_line(scheme: KvScheme, staged: &[f32], out: &mut [u8]) -> Result<()> {
+    let fmt = scheme.format();
+    let bw = fmt.block_weights();
+    if staged.len() % bw != 0 {
+        bail!(
+            "kv line: staged length {} not padded to the {bw}-weight {fmt} block grid",
+            staged.len()
+        );
+    }
+    let nbytes = staged.len() / bw * fmt.block_bytes();
+    if out.len() != nbytes {
+        bail!(
+            "kv line: output buffer {} bytes, expected {nbytes} for {} staged weights",
+            out.len(),
+            staged.len()
+        );
+    }
+    codec(fmt).encode_blocks(staged, None, out);
+    Ok(())
+}
+
 /// A block quantization codec.
 ///
 /// One implementation per [`QuantFormat`], registered in [`codec`].
@@ -723,6 +833,44 @@ mod tests {
         let packed = quantize(QuantFormat::Q4K, &src, None).unwrap();
         let mut out = vec![0f32; QK_K - 1]; // ragged target length
         assert!(dequantize_into(QuantFormat::Q4K, &packed, &mut out).is_err());
+    }
+
+    #[test]
+    fn kv_scheme_line_arithmetic_and_parse() {
+        assert_eq!(KvScheme::F32.line_weights(288), 288);
+        assert_eq!(KvScheme::F32.line_bytes(288), 288 * 4);
+        // 288 = 9 whole Q8_0 blocks → 9 × 34 bytes, no padding.
+        assert_eq!(KvScheme::Q8_0.line_weights(288), 288);
+        assert_eq!(KvScheme::Q8_0.line_bytes(288), 9 * 34);
+        // Ragged widths pad up to the 32 grid.
+        assert_eq!(KvScheme::Q8_0.line_weights(33), 64);
+        assert_eq!(KvScheme::Q8_0.line_bytes(33), 2 * 34);
+        assert_eq!(KvScheme::Q8_0.line_bytes(0), 0);
+        for s in [KvScheme::F32, KvScheme::Q8_0] {
+            assert_eq!(KvScheme::parse(s.name()).unwrap(), s);
+        }
+        assert!(KvScheme::parse("q4_k").is_err());
+        assert_eq!(KvScheme::default(), KvScheme::F32);
+    }
+
+    #[test]
+    fn encode_kv_line_matches_whole_row_encoding_and_validates() {
+        let mut rng = crate::util::rng::Pcg::new(77);
+        let line: Vec<f32> = (0..64).map(|_| rng.next_normal()).collect();
+        let mut enc = vec![0u8; KvScheme::Q8_0.line_bytes(64)];
+        encode_kv_line(KvScheme::Q8_0, &line, &mut enc).unwrap();
+        // Identical to the general whole-row encoder on the same data.
+        assert_eq!(enc, quantize(QuantFormat::Q8_0, &line, None).unwrap());
+        // Zero-padded staging: the tail only feeds the last block.
+        let mut padded = vec![0f32; 64];
+        padded[..40].copy_from_slice(&line[..40]);
+        let mut enc2 = vec![0u8; KvScheme::Q8_0.line_bytes(40)];
+        encode_kv_line(KvScheme::Q8_0, &padded, &mut enc2).unwrap();
+        assert_eq!(enc2, quantize(QuantFormat::Q8_0, &padded, None).unwrap());
+        // Un-padded staging or wrong output size is an error.
+        assert!(encode_kv_line(KvScheme::Q8_0, &line[..40], &mut enc2).is_err());
+        let mut short = vec![0u8; 10];
+        assert!(encode_kv_line(KvScheme::Q8_0, &line, &mut short).is_err());
     }
 
     #[test]

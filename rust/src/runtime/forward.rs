@@ -73,6 +73,33 @@
 //! batch slots a wave skips (length 0 at prefill, `pos < 0` at decode)
 //! never pay `n_layers × max_ctx × width` floats of idle memory.
 //!
+//! ## Quantized KV (PR 10)
+//!
+//! [`ForwardPass::set_kv_scheme`] swaps the f32 planes for per-row
+//! codec blocks ([`crate::quant::KvScheme`], `q8_0` first). The
+//! determinism argument is **quantize-on-write, fused-read**:
+//!
+//! - *Write once*: each appended position's row is built **exactly** in
+//!   a preallocated f32 staging line (projections, RMSNorm, RoPE — the
+//!   same arithmetic as the f32 path, on the same inputs), then encoded
+//!   once into whole codec blocks via
+//!   [`crate::quant::encode_kv_line`]. The absorbed-MLA expansion runs
+//!   on the *staged exact latent* before encoding, so quantization
+//!   error enters each plane exactly once, never compounds, and the
+//!   encoded bytes are a pure function of the activations — identical
+//!   whichever path (token loop, panel prefill, batched decode) appends
+//!   the row, and wherever the row lives (dense or paged).
+//! - *Fused read*: attention scores run [`kernels::vec_dot_arm`]
+//!   directly on each row's encoded blocks (head segments sit on the
+//!   block grid — validated at scheme-set time), which is bit-identical
+//!   to decode-then-[`kernels::dot_lanes`] on every dispatch arm by the
+//!   PR-3 `vec_dot` contract; value rows decode into preallocated
+//!   scratch and fold in the same sequential order as f32.
+//!
+//! Hence quantized-KV logits inherit the full identity matrix below —
+//! threads × shards × arms × backings × batched-vs-solo — and `f32`
+//! (the default) remains byte-identical to every pre-PR-10 golden.
+//!
 //! ## Absorbed MLA (PR 6)
 //!
 //! With absorption enabled (the default), the cache additionally keeps
@@ -162,7 +189,7 @@
 
 use crate::container::{Container, TensorEntry};
 use crate::model::{ModelConfig, ModelKind};
-use crate::quant::{self, kernels, QuantFormat};
+use crate::quant::{self, kernels, KvScheme, QuantFormat};
 use crate::runtime::paged::{KvBlock, KvBlockPool};
 use crate::runtime::sharded::ShardRuntime;
 use crate::util::math;
@@ -201,6 +228,12 @@ enum KvBacking {
         /// written once at append time. Empty when `xwidth == 0`
         /// (GQA, or MLA with absorption disabled).
         xdata: Vec<f32>,
+        /// Encoded main plane `[n_layers][max_ctx][row_enc]` bytes —
+        /// quantized [`KvScheme`]s only (empty under f32, and vice
+        /// versa: exactly one plane pair is ever allocated).
+        qdata: Vec<u8>,
+        /// Encoded expanded plane `[n_layers][max_ctx][xrow_enc]`.
+        xqdata: Vec<u8>,
     },
     /// Fixed-size blocks drawn from a shared [`KvBlockPool`] — the
     /// continuous-batching layout. The `Vec` *is* the block table:
@@ -238,17 +271,33 @@ pub struct KvCache {
     xwidth: usize,
     max_ctx: usize,
     n_layers: usize,
+    /// How rows are stored: f32 planes (default) or per-row codec
+    /// blocks quantized on append ([`ForwardPass::set_kv_scheme`]).
+    scheme: KvScheme,
+    /// Encoded bytes per main row (`scheme.line_bytes(width)`; the f32
+    /// path never touches it).
+    row_enc: usize,
+    /// Encoded bytes per expanded row (`scheme.line_bytes(xwidth)`).
+    xrow_enc: usize,
 }
 
 impl KvCache {
-    fn new(n_layers: usize, width: usize, xwidth: usize, max_ctx: usize) -> Self {
+    fn new(n_layers: usize, width: usize, xwidth: usize, max_ctx: usize, scheme: KvScheme) -> Self {
         KvCache {
-            backing: KvBacking::Dense { data: Vec::new(), xdata: Vec::new() },
+            backing: KvBacking::Dense {
+                data: Vec::new(),
+                xdata: Vec::new(),
+                qdata: Vec::new(),
+                xqdata: Vec::new(),
+            },
             len: 0,
             width,
             xwidth,
             max_ctx,
             n_layers,
+            scheme,
+            row_enc: scheme.line_bytes(width),
+            xrow_enc: scheme.line_bytes(xwidth),
         }
     }
 
@@ -257,6 +306,7 @@ impl KvCache {
         width: usize,
         xwidth: usize,
         max_ctx: usize,
+        scheme: KvScheme,
         block_tokens: usize,
     ) -> Self {
         KvCache {
@@ -269,6 +319,59 @@ impl KvCache {
             xwidth,
             max_ctx,
             n_layers,
+            scheme,
+            row_enc: scheme.line_bytes(width),
+            xrow_enc: scheme.line_bytes(xwidth),
+        }
+    }
+
+    /// The KV encoding this cache stores rows under.
+    pub fn scheme(&self) -> KvScheme {
+        self.scheme
+    }
+
+    /// Bytes one cached position occupies across all layers under the
+    /// active scheme — measured from the same arithmetic the backing
+    /// allocation uses, so the planner test can diff it against
+    /// [`crate::memory`]'s analytic plan name by name.
+    pub fn bytes_per_token(&self) -> usize {
+        match self.scheme {
+            KvScheme::F32 => self.n_layers * 4 * (self.width + self.xwidth),
+            _ => self.n_layers * (self.row_enc + self.xrow_enc),
+        }
+    }
+
+    /// Named per-layer byte plan one token actually occupies in this
+    /// cache — the engine-measured side of the planner-vs-engine gate
+    /// (`blk.{i}.kv_row` / `blk.{i}.kv_expanded`, matching
+    /// [`crate::memory::kv_token_plan`]).
+    pub fn measured_token_plan(&self) -> Vec<(String, u64)> {
+        let (row_b, xrow_b) = match self.scheme {
+            KvScheme::F32 => (4 * self.width, 4 * self.xwidth),
+            _ => (self.row_enc, self.xrow_enc),
+        };
+        let mut plan = Vec::with_capacity(self.n_layers * 2);
+        for li in 0..self.n_layers {
+            plan.push((format!("blk.{li}.kv_row"), row_b as u64));
+            if self.xwidth > 0 {
+                plan.push((format!("blk.{li}.kv_expanded"), xrow_b as u64));
+            }
+        }
+        plan
+    }
+
+    /// Payload bytes the backing currently holds resident (dense: the
+    /// lazily-allocated planes; paged: the blocks in the table) — the
+    /// context-length sweep in `benches/serving.rs` reports this.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.backing {
+            KvBacking::Dense { data, xdata, qdata, xqdata } => {
+                4 * (data.len() + xdata.len()) + qdata.len() + xqdata.len()
+            }
+            KvBacking::Paged { blocks, .. } => blocks
+                .iter()
+                .map(|b| 4 * (b.data.len() + b.xdata.len()) + b.qdata.len() + b.xqdata.len())
+                .sum(),
         }
     }
 
@@ -291,7 +394,7 @@ impl KvCache {
     /// stays `false` for slots a wave never touches).
     pub fn is_allocated(&self) -> bool {
         match &self.backing {
-            KvBacking::Dense { data, .. } => !data.is_empty(),
+            KvBacking::Dense { data, qdata, .. } => !data.is_empty() || !qdata.is_empty(),
             KvBacking::Paged { blocks, .. } => !blocks.is_empty(),
         }
     }
@@ -315,12 +418,24 @@ impl KvCache {
     /// bug reported before any state changes.
     fn prepare_append(&mut self, tokens: usize) -> Result<()> {
         match &mut self.backing {
-            KvBacking::Dense { data, xdata } => {
-                if data.is_empty() {
-                    *data = vec![0.0; self.n_layers * self.max_ctx * self.width];
-                }
-                if self.xwidth > 0 && xdata.is_empty() {
-                    *xdata = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
+            KvBacking::Dense { data, xdata, qdata, xqdata } => {
+                match self.scheme {
+                    KvScheme::F32 => {
+                        if data.is_empty() {
+                            *data = vec![0.0; self.n_layers * self.max_ctx * self.width];
+                        }
+                        if self.xwidth > 0 && xdata.is_empty() {
+                            *xdata = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
+                        }
+                    }
+                    _ => {
+                        if qdata.is_empty() {
+                            *qdata = vec![0; self.n_layers * self.max_ctx * self.row_enc];
+                        }
+                        if self.xrow_enc > 0 && xqdata.is_empty() {
+                            *xqdata = vec![0; self.n_layers * self.max_ctx * self.xrow_enc];
+                        }
+                    }
                 }
                 Ok(())
             }
@@ -351,14 +466,15 @@ impl KvCache {
                 self.max_ctx
             );
         }
-        if !pool.matches(self.n_layers, self.width, self.xwidth) {
+        if !pool.matches(self.n_layers, self.width, self.xwidth, self.scheme) {
             bail!(
-                "paged KV cache shape ({} layers × width {} / xwidth {}) does not match \
-                 the block pool it is growing from — was MLA absorption toggled after \
-                 the pool was created?",
+                "paged KV cache shape ({} layers × width {} / xwidth {}, kv scheme {}) \
+                 does not match the block pool it is growing from — was MLA absorption \
+                 or the KV scheme toggled after the pool was created?",
                 self.n_layers,
                 self.width,
-                self.xwidth
+                self.xwidth,
+                self.scheme
             );
         }
         match &mut self.backing {
@@ -397,9 +513,10 @@ impl KvCache {
     pub fn block_addrs(&self) -> Vec<usize> {
         match &self.backing {
             KvBacking::Dense { .. } => Vec::new(),
-            KvBacking::Paged { blocks, .. } => {
-                blocks.iter().map(|b| b.data.as_ptr() as usize).collect()
-            }
+            KvBacking::Paged { blocks, .. } => match self.scheme {
+                KvScheme::F32 => blocks.iter().map(|b| b.data.as_ptr() as usize).collect(),
+                _ => blocks.iter().map(|b| b.qdata.as_ptr() as usize).collect(),
+            },
         }
     }
 
@@ -450,7 +567,7 @@ impl KvCache {
     /// (write) — the borrow split the append-time expansion needs.
     fn row_and_xrow_mut(&mut self, layer: usize, pos: usize) -> (&[f32], &mut [f32]) {
         match &mut self.backing {
-            KvBacking::Dense { data, xdata } => {
+            KvBacking::Dense { data, xdata, .. } => {
                 let at = (layer * self.max_ctx + pos) * self.width;
                 let xat = (layer * self.max_ctx + pos) * self.xwidth;
                 (&data[at..at + self.width], &mut xdata[xat..xat + self.xwidth])
@@ -461,6 +578,164 @@ impl KvCache {
                 let at = (layer * bt + pos % bt) * self.width;
                 let xat = (layer * bt + pos % bt) * self.xwidth;
                 (&b.data[at..at + self.width], &mut b.xdata[xat..xat + self.xwidth])
+            }
+        }
+    }
+
+    /// One position's encoded main row (quantized schemes only).
+    fn row_enc(&self, layer: usize, pos: usize) -> &[u8] {
+        match &self.backing {
+            KvBacking::Dense { qdata, .. } => {
+                let at = (layer * self.max_ctx + pos) * self.row_enc;
+                &qdata[at..at + self.row_enc]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let b = &blocks[pos / block_tokens];
+                let at = (layer * block_tokens + pos % block_tokens) * self.row_enc;
+                &b.qdata[at..at + self.row_enc]
+            }
+        }
+    }
+
+    /// One position's encoded expanded row (quantized absorbed MLA).
+    fn xrow_enc(&self, layer: usize, pos: usize) -> &[u8] {
+        match &self.backing {
+            KvBacking::Dense { xqdata, .. } => {
+                let at = (layer * self.max_ctx + pos) * self.xrow_enc;
+                &xqdata[at..at + self.xrow_enc]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let b = &blocks[pos / block_tokens];
+                let at = (layer * block_tokens + pos % block_tokens) * self.xrow_enc;
+                &b.xqdata[at..at + self.xrow_enc]
+            }
+        }
+    }
+
+    /// Quantize-on-append: encode the staged f32 row (already padded to
+    /// the scheme's block grid) into position `pos`'s main-plane codec
+    /// blocks. Write-once, like the absorbed-MLA expanded plane.
+    fn write_row_enc(&mut self, layer: usize, pos: usize, staged: &[f32]) -> Result<()> {
+        let scheme = self.scheme;
+        let re = self.row_enc;
+        let dst = match &mut self.backing {
+            KvBacking::Dense { qdata, .. } => {
+                let at = (layer * self.max_ctx + pos) * re;
+                &mut qdata[at..at + re]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let bt = *block_tokens;
+                let b = &mut blocks[pos / bt];
+                let at = (layer * bt + pos % bt) * re;
+                &mut b.qdata[at..at + re]
+            }
+        };
+        quant::encode_kv_line(scheme, staged, dst)
+    }
+
+    /// [`KvCache::write_row_enc`] for the expanded plane.
+    fn write_xrow_enc(&mut self, layer: usize, pos: usize, staged: &[f32]) -> Result<()> {
+        let scheme = self.scheme;
+        let re = self.xrow_enc;
+        let dst = match &mut self.backing {
+            KvBacking::Dense { xqdata, .. } => {
+                let at = (layer * self.max_ctx + pos) * re;
+                &mut xqdata[at..at + re]
+            }
+            KvBacking::Paged { blocks, block_tokens } => {
+                let bt = *block_tokens;
+                let b = &mut blocks[pos / bt];
+                let at = (layer * bt + pos % bt) * re;
+                &mut b.xqdata[at..at + re]
+            }
+        };
+        quant::encode_kv_line(scheme, staged, dst)
+    }
+
+    /// Attention-score dot of `q` against elements
+    /// `[off, off + q.len())` of position `pos`'s main row. f32 reads
+    /// the plane directly through [`kernels::dot_lanes`]; quantized
+    /// schemes run the fused [`kernels::vec_dot_arm`] over the row's
+    /// codec blocks — same canonical 8-lane reduction order, so scores
+    /// are bit-identical across threads, shards and dispatch arms.
+    /// `off` and `q.len()` must sit on the scheme's block grid
+    /// (validated once by [`ForwardPass::set_kv_scheme`]).
+    fn score_dot(&self, layer: usize, pos: usize, off: usize, q: &[f32], arm: kernels::DispatchArm) -> f32 {
+        match self.scheme {
+            KvScheme::F32 => kernels::dot_lanes(q, &self.row(layer, pos)[off..off + q.len()]),
+            s => {
+                let fmt = s.format();
+                let (bw, bb) = (fmt.block_weights(), fmt.block_bytes());
+                let seg = &self.row_enc(layer, pos)[off / bw * bb..(off + q.len()) / bw * bb];
+                kernels::vec_dot_arm(fmt, seg, q, arm)
+            }
+        }
+    }
+
+    /// [`KvCache::score_dot`] against the absorbed-MLA expanded row.
+    fn score_dot_x(
+        &self,
+        layer: usize,
+        pos: usize,
+        off: usize,
+        q: &[f32],
+        arm: kernels::DispatchArm,
+    ) -> f32 {
+        match self.scheme {
+            KvScheme::F32 => kernels::dot_lanes(q, &self.xrow(layer, pos)[off..off + q.len()]),
+            s => {
+                let fmt = s.format();
+                let (bw, bb) = (fmt.block_weights(), fmt.block_bytes());
+                let seg = &self.xrow_enc(layer, pos)[off / bw * bb..(off + q.len()) / bw * bb];
+                kernels::vec_dot_arm(fmt, seg, q, arm)
+            }
+        }
+    }
+
+    /// The value segment `[off, off + len)` of position `pos`'s main
+    /// row as f32: a direct plane slice under f32, a block decode into
+    /// the caller's preallocated `dec` scratch under a quantized scheme
+    /// (zero heap allocations either way). The weighted-sum fold over
+    /// the returned slice is unchanged, so the reduction order is too.
+    fn values<'a>(
+        &'a self,
+        layer: usize,
+        pos: usize,
+        off: usize,
+        len: usize,
+        dec: &'a mut [f32],
+        arm: kernels::DispatchArm,
+    ) -> &'a [f32] {
+        match self.scheme {
+            KvScheme::F32 => &self.row(layer, pos)[off..off + len],
+            s => {
+                let fmt = s.format();
+                let (bw, bb) = (fmt.block_weights(), fmt.block_bytes());
+                let seg = &self.row_enc(layer, pos)[off / bw * bb..(off + len) / bw * bb];
+                kernels::decode_blocks_arm(fmt, seg, &mut dec[..len], arm);
+                &dec[..len]
+            }
+        }
+    }
+
+    /// [`KvCache::values`] against the absorbed-MLA expanded row.
+    fn values_x<'a>(
+        &'a self,
+        layer: usize,
+        pos: usize,
+        off: usize,
+        len: usize,
+        dec: &'a mut [f32],
+        arm: kernels::DispatchArm,
+    ) -> &'a [f32] {
+        match self.scheme {
+            KvScheme::F32 => &self.xrow(layer, pos)[off..off + len],
+            s => {
+                let fmt = s.format();
+                let (bw, bb) = (fmt.block_weights(), fmt.block_bytes());
+                let seg = &self.xrow_enc(layer, pos)[off / bw * bb..(off + len) / bw * bb];
+                kernels::decode_blocks_arm(fmt, seg, &mut dec[..len], arm);
+                &dec[..len]
             }
         }
     }
@@ -494,10 +769,22 @@ impl KvCache {
     /// reconstruction seam the property tests use.
     pub fn copy_rows(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.n_layers * self.max_ctx * self.width];
+        let mut dec = vec![0.0f32; self.scheme.line_weights(self.width)];
         for layer in 0..self.n_layers {
             for pos in 0..self.len {
                 let at = (layer * self.max_ctx + pos) * self.width;
-                out[at..at + self.width].copy_from_slice(self.row(layer, pos));
+                match self.scheme {
+                    KvScheme::F32 => out[at..at + self.width].copy_from_slice(self.row(layer, pos)),
+                    s => {
+                        kernels::decode_blocks_arm(
+                            s.format(),
+                            self.row_enc(layer, pos),
+                            &mut dec,
+                            kernels::active_arm(),
+                        );
+                        out[at..at + self.width].copy_from_slice(&dec[..self.width]);
+                    }
+                }
             }
         }
         out
@@ -510,10 +797,58 @@ impl KvCache {
             return Vec::new();
         }
         let mut out = vec![0.0; self.n_layers * self.max_ctx * self.xwidth];
+        let mut dec = vec![0.0f32; self.scheme.line_weights(self.xwidth)];
         for layer in 0..self.n_layers {
             for pos in 0..self.len {
                 let at = (layer * self.max_ctx + pos) * self.xwidth;
-                out[at..at + self.xwidth].copy_from_slice(self.xrow(layer, pos));
+                match self.scheme {
+                    KvScheme::F32 => {
+                        out[at..at + self.xwidth].copy_from_slice(self.xrow(layer, pos))
+                    }
+                    s => {
+                        kernels::decode_blocks_arm(
+                            s.format(),
+                            self.xrow_enc(layer, pos),
+                            &mut dec,
+                            kernels::active_arm(),
+                        );
+                        out[at..at + self.xwidth].copy_from_slice(&dec[..self.xwidth]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialize the logical encoded plane
+    /// `[n_layers][max_ctx][row_enc]` bytes, zero past `len` — the
+    /// byte-level cross-backing reconstruction seam for quantized
+    /// schemes (dense ≡ paged must hold on the *encoded* blocks, not
+    /// just their decode). Empty under f32.
+    pub fn copy_rows_enc(&self) -> Vec<u8> {
+        if self.scheme == KvScheme::F32 {
+            return Vec::new();
+        }
+        let mut out = vec![0u8; self.n_layers * self.max_ctx * self.row_enc];
+        for layer in 0..self.n_layers {
+            for pos in 0..self.len {
+                let at = (layer * self.max_ctx + pos) * self.row_enc;
+                out[at..at + self.row_enc].copy_from_slice(self.row_enc(layer, pos));
+            }
+        }
+        out
+    }
+
+    /// [`KvCache::copy_rows_enc`] for the encoded expanded plane.
+    pub fn copy_expanded_enc(&self) -> Vec<u8> {
+        if self.scheme == KvScheme::F32 || self.xwidth == 0 {
+            return Vec::new();
+        }
+        let mut out = vec![0u8; self.n_layers * self.max_ctx * self.xrow_enc];
+        for layer in 0..self.n_layers {
+            for pos in 0..self.len {
+                let at = (layer * self.max_ctx + pos) * self.xrow_enc;
+                out[at..at + self.xrow_enc].copy_from_slice(self.xrow_enc(layer, pos));
             }
         }
         out
@@ -822,6 +1157,16 @@ struct AttnScratch {
     heads_out: Vec<f32>,
     /// Attention scores over the cached context, `max_ctx`.
     scores: Vec<f32>,
+    /// Quantized KV: staging line for the exact f32 row (norm/RoPE/
+    /// projections land here, then one `encode_kv_line` writes the
+    /// cache blocks), padded to the scheme's block grid with a
+    /// zero tail. Empty under f32 KV.
+    kv_stage: Vec<f32>,
+    /// Quantized absorbed MLA: staging line for the expanded row.
+    xkv_stage: Vec<f32>,
+    /// Quantized KV: per-segment value decode scratch for the
+    /// weighted-sum fold. Empty under f32 KV.
+    vdec: Vec<f32>,
 }
 
 struct FfnScratch {
@@ -909,6 +1254,13 @@ struct PanelScratch {
     gat: Vec<usize>,
     /// Row-major `[rows][T]` GEMM staging, transposed into the panels.
     mat: Vec<f32>,
+    /// Quantized KV: staging line for the exact f32 row before the
+    /// one-shot `encode_kv_line` cache write (see [`AttnScratch`]).
+    kv_stage: Vec<f32>,
+    /// Quantized absorbed MLA: staging line for the expanded row.
+    xkv_stage: Vec<f32>,
+    /// Quantized KV: per-segment value decode scratch.
+    vdec: Vec<f32>,
 }
 
 /// The forward-pass model over an opened (quantized or f32) container.
@@ -924,6 +1276,8 @@ pub struct ForwardPass {
     max_ctx: usize,
     mode: MatvecMode,
     absorb_mla: bool,
+    /// KV cache encoding ([`ForwardPass::set_kv_scheme`]); f32 default.
+    kv_scheme: KvScheme,
     /// Sharded execution runtime (expert-parallel MoE + row-split
     /// tensor-parallel matmuls); `None` runs everything locally.
     shards: Option<ShardRuntime>,
@@ -1083,6 +1437,7 @@ impl ForwardPass {
             max_ctx,
             mode: MatvecMode::Threads(threads.max(1)),
             absorb_mla: true,
+            kv_scheme: KvScheme::F32,
             shards: None,
         })
     }
@@ -1126,6 +1481,73 @@ impl ForwardPass {
     /// layout [`ForwardPass::new_cache`] builds. No-op for GQA models.
     pub fn set_mla_absorption(&mut self, absorb: bool) {
         self.absorb_mla = absorb;
+    }
+
+    /// Select the KV cache encoding (default [`KvScheme::F32`], which
+    /// keeps every existing golden byte-identical). Quantized schemes
+    /// store each appended row as codec blocks (quantize-on-write) and
+    /// read attention scores through the fused [`kernels::vec_dot_arm`]
+    /// — bit-identical across threads, shards, dispatch arms and
+    /// batched-vs-solo decode, because encode and fused dot are
+    /// themselves arm-stable and the reduction order is unchanged.
+    ///
+    /// Call **before** creating caches, pools or scratches (the scheme
+    /// decides their layout; [`KvCache::grow_to`] rejects mismatched
+    /// pools). Errors when the model's attention segment widths do not
+    /// sit on the scheme's block grid — the fused score/value reads
+    /// slice whole codec blocks per head segment — or when MLA
+    /// absorption is disabled (the eager path re-expands from f32
+    /// latents the quantized cache does not store).
+    pub fn set_kv_scheme(&mut self, scheme: KvScheme) -> Result<()> {
+        if scheme != KvScheme::F32 {
+            let cfg = &self.cfg;
+            let bw = scheme.format().block_weights();
+            let check = |name: &str, dim: usize| -> Result<()> {
+                if dim % bw != 0 {
+                    bail!(
+                        "kv scheme {scheme}: model {:?} has {name} = {dim}, not a multiple \
+                         of the codec's {bw}-weight block — attention reads whole codec \
+                         blocks per head segment, so this model cannot use {scheme} KV",
+                        cfg.name
+                    );
+                }
+                Ok(())
+            };
+            match cfg.kind {
+                ModelKind::MlaMoe => {
+                    if !self.absorb_mla {
+                        bail!(
+                            "kv scheme {scheme} needs absorbed MLA: the eager path \
+                             re-expands every position from f32 latents the quantized \
+                             cache does not keep (enable absorption or use f32 KV)"
+                        );
+                    }
+                    check("kv_lora_rank", cfg.kv_lora_rank)?;
+                    check("qk_rope_head_dim", cfg.qk_rope_head_dim)?;
+                    check("qk_nope_head_dim", cfg.qk_nope_head_dim)?;
+                    check("v_head_dim", cfg.v_head_dim)?;
+                }
+                ModelKind::DenseGqa => check("head_dim", cfg.head_dim)?,
+            }
+        }
+        self.kv_scheme = scheme;
+        Ok(())
+    }
+
+    /// The active KV cache encoding.
+    pub fn kv_scheme(&self) -> KvScheme {
+        self.kv_scheme
+    }
+
+    /// The dispatch arm quantized-KV reads run under: the pinned arm in
+    /// [`MatvecMode::Pinned`], else the runtime-selected one — every
+    /// arm produces identical bits, so this only matters for the
+    /// arm-identity seam.
+    fn kv_arm(&self) -> kernels::DispatchArm {
+        match self.mode {
+            MatvecMode::Pinned(arm) => arm,
+            MatvecMode::Threads(_) => kernels::active_arm(),
+        }
     }
 
     /// Partition this pass across `n` shard worker threads
@@ -1172,7 +1594,13 @@ impl ForwardPass {
     /// The backing buffer is allocated lazily on the first forwarded
     /// token, so idle batch slots stay (almost) free.
     pub fn new_cache(&self) -> KvCache {
-        KvCache::new(self.cfg.n_layers, self.cfg.kv_cache_width(), self.cache_xwidth(), self.max_ctx)
+        KvCache::new(
+            self.cfg.n_layers,
+            self.cfg.kv_cache_width(),
+            self.cache_xwidth(),
+            self.max_ctx,
+            self.kv_scheme,
+        )
     }
 
     /// A KV block pool sized for this model's cache shape: `capacity`
@@ -1186,6 +1614,7 @@ impl ForwardPass {
             self.cfg.n_layers,
             self.cfg.kv_cache_width(),
             self.cache_xwidth(),
+            self.kv_scheme,
             block_tokens,
             capacity,
         )
@@ -1197,14 +1626,23 @@ impl ForwardPass {
     /// with [`KvCache::release`]).
     pub fn new_paged_cache(&self, pool: &KvBlockPool) -> Result<KvCache> {
         let (w, xw) = (self.cfg.kv_cache_width(), self.cache_xwidth());
-        if !pool.matches(self.cfg.n_layers, w, xw) {
+        if !pool.matches(self.cfg.n_layers, w, xw, self.kv_scheme) {
             bail!(
-                "paged cache shape ({} layers × width {w} / xwidth {xw}) does not match \
-                 the block pool — was MLA absorption toggled after the pool was created?",
-                self.cfg.n_layers
+                "paged cache shape ({} layers × width {w} / xwidth {xw}, kv scheme {}) \
+                 does not match the block pool — was MLA absorption or the KV scheme \
+                 toggled after the pool was created?",
+                self.cfg.n_layers,
+                self.kv_scheme
             );
         }
-        Ok(KvCache::new_paged(self.cfg.n_layers, w, xw, self.max_ctx, pool.block_tokens()))
+        Ok(KvCache::new_paged(
+            self.cfg.n_layers,
+            w,
+            xw,
+            self.max_ctx,
+            self.kv_scheme,
+            pool.block_tokens(),
+        ))
     }
 
     /// A scratch sized for this model and context bound. One per slot
@@ -1260,6 +1698,17 @@ impl ForwardPass {
         // groups) — the unsharded zero-alloc decode path must not pay
         // for them.
         let exp_planes = if self.shards.is_some() { mc * cfg.n_active_experts * hs } else { 0 };
+        // Quantized-KV staging/decode lines (padded to the scheme's
+        // block grid, zero tails); absent under f32 so the default
+        // scratch layout is unchanged.
+        let (stage_len, xstage_len, vdec_len) = match self.kv_scheme {
+            KvScheme::F32 => (0, 0, 0),
+            s => (
+                s.line_weights(cfg.kv_cache_width()),
+                s.line_weights(self.cache_xwidth()),
+                s.line_weights(cfg.kv_cache_width().max(self.cache_xwidth())),
+            ),
+        };
         Scratch {
             h: vec![0.0; hs],
             xn: vec![0.0; hs],
@@ -1272,6 +1721,9 @@ impl ForwardPass {
                 kvb: vec![0.0; kvb_len],
                 heads_out: vec![0.0; heads_len],
                 scores: vec![0.0; mc],
+                kv_stage: vec![0.0; stage_len],
+                xkv_stage: vec![0.0; xstage_len],
+                vdec: vec![0.0; vdec_len],
             },
             ffn: FfnScratch {
                 g: vec![0.0; inter_max],
@@ -1308,6 +1760,9 @@ impl ForwardPass {
                 exp_jobs: Vec::with_capacity(cfg.n_routed_experts),
                 gat: Vec::with_capacity(mc * cfg.n_active_experts.max(1)),
                 mat: vec![0.0; mc * max_rows],
+                kv_stage: vec![0.0; stage_len],
+                xkv_stage: vec![0.0; xstage_len],
+                vdec: vec![0.0; vdec_len],
             },
         }
     }
@@ -1494,31 +1949,56 @@ impl ForwardPass {
         // RMS-normed latent and the post-RoPE shared key.
         let kv_a = &mut s.kv_a[..cfg.kv_cache_width()];
         self.matvec(kv_a_w, xn, kv_a)?;
-        {
-            let row = cache.row_mut(li, pos);
-            rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
-            row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
-            self.rope.apply(&mut row[kv_rank..], pos);
-        }
-
         let ctx = pos + 1;
         let kvb_w = cfg.n_heads * (nope + vh);
-        if self.absorb_mla {
-            // Absorbed: expand only the just-appended position into the
-            // cache's expanded-row plane — the same encoded kv_b matvec
-            // the eager path runs, so the bits are identical; older
-            // positions were expanded when *they* were appended.
-            let (row, xrow) = cache.row_and_xrow_mut(li, pos);
-            self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
-        } else {
-            // Eager reference: re-expand per-head k_nope/v for every
-            // cached position from the compressed latents.
-            let kvb = &mut s.kvb[..ctx * kvb_w];
-            for p in 0..ctx {
-                let latent = &cache.row(li, p)[..kv_rank];
-                // Split borrow: `kvb` rows are disjoint per position.
-                let dst = &mut kvb[p * kvb_w..(p + 1) * kvb_w];
-                self.matvec(kv_b_w, latent, dst)?;
+        match cache.scheme() {
+            KvScheme::F32 => {
+                {
+                    let row = cache.row_mut(li, pos);
+                    rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
+                    row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
+                    self.rope.apply(&mut row[kv_rank..], pos);
+                }
+                if self.absorb_mla {
+                    // Absorbed: expand only the just-appended position
+                    // into the cache's expanded-row plane — the same
+                    // encoded kv_b matvec the eager path runs, so the
+                    // bits are identical; older positions were expanded
+                    // when *they* were appended.
+                    let (row, xrow) = cache.row_and_xrow_mut(li, pos);
+                    self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
+                } else {
+                    // Eager reference: re-expand per-head k_nope/v for
+                    // every cached position from the compressed latents.
+                    let kvb = &mut s.kvb[..ctx * kvb_w];
+                    for p in 0..ctx {
+                        let latent = &cache.row(li, p)[..kv_rank];
+                        // Split borrow: `kvb` rows are disjoint per position.
+                        let dst = &mut kvb[p * kvb_w..(p + 1) * kvb_w];
+                        self.matvec(kv_b_w, latent, dst)?;
+                    }
+                }
+            }
+            _ => {
+                if !self.absorb_mla {
+                    bail!(
+                        "quantized KV requires absorbed MLA \
+                         (ForwardPass::set_kv_scheme enforces this before caches exist)"
+                    );
+                }
+                // Quantize-on-append: build the exact f32 row — and its
+                // absorbed expansion, from the exact (pre-quantization)
+                // latent — in the staging lines, then encode each once
+                // into the cache's codec blocks.
+                let w = cfg.kv_cache_width();
+                let stage = &mut s.kv_stage;
+                rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut stage[..kv_rank]);
+                stage[kv_rank..w].copy_from_slice(&kv_a[kv_rank..]);
+                self.rope.apply(&mut stage[kv_rank..w], pos);
+                let xstage = &mut s.xkv_stage;
+                self.matvec(kv_b_w, &stage[..kv_rank], &mut xstage[..kvb_w])?;
+                cache.write_row_enc(li, pos, stage)?;
+                cache.write_xrow_enc(li, pos, xstage)?;
             }
         }
 
@@ -1527,31 +2007,53 @@ impl ForwardPass {
         heads_out.fill(0.0);
         let scores = &mut s.scores[..ctx];
         let cache = &*cache;
-        let (absorbed, kvb) = (self.absorb_mla, &s.kvb[..]);
-        // Position `p`'s expanded `k_nope|v` rows, wherever they live.
-        let expanded = |p: usize| -> &[f32] {
-            if absorbed {
-                cache.xrow(li, p)
-            } else {
-                &kvb[p * kvb_w..(p + 1) * kvb_w]
+        if self.absorb_mla {
+            // Scheme-generic absorbed path: under f32 the score/value
+            // helpers read the planes with the exact historical
+            // dot_lanes calls; under a quantized scheme they run the
+            // fused vec_dot / block decode on the encoded rows — same
+            // canonical reduction order either way.
+            let arm = self.kv_arm();
+            let vdec = &mut s.vdec;
+            for hd in 0..cfg.n_heads {
+                let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
+                self.rope.apply(&mut qh[nope..], pos);
+                for (p, sc) in scores.iter_mut().enumerate() {
+                    let sv = cache.score_dot_x(li, p, hd * (nope + vh), &qh[..nope], arm)
+                        + cache.score_dot(li, p, kv_rank, &qh[nope..], arm);
+                    *sc = sv * inv_scale;
+                }
+                math::softmax_in_place(scores);
+                let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
+                for (p, &w) in scores.iter().enumerate() {
+                    let v =
+                        cache.values_x(li, p, hd * (nope + vh) + nope, vh, &mut vdec[..], arm);
+                    for (o, &vv) in oh.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
+                }
             }
-        };
-        for hd in 0..cfg.n_heads {
-            let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
-            self.rope.apply(&mut qh[nope..], pos);
-            for (p, sc) in scores.iter_mut().enumerate() {
-                let k_nope = &expanded(p)[hd * (nope + vh)..][..nope];
-                let k_rope = &cache.row(li, p)[kv_rank..];
-                let sv = kernels::dot_lanes(&qh[..nope], k_nope)
-                    + kernels::dot_lanes(&qh[nope..], k_rope);
-                *sc = sv * inv_scale;
-            }
-            math::softmax_in_place(scores);
-            let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
-            for (p, &w) in scores.iter().enumerate() {
-                let v = &expanded(p)[hd * (nope + vh) + nope..][..vh];
-                for (o, &vv) in oh.iter_mut().zip(v) {
-                    *o += w * vv;
+        } else {
+            // Eager (f32-only): per-step re-expanded rows from scratch.
+            let kvb = &s.kvb[..];
+            let expanded = |p: usize| -> &[f32] { &kvb[p * kvb_w..(p + 1) * kvb_w] };
+            for hd in 0..cfg.n_heads {
+                let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
+                self.rope.apply(&mut qh[nope..], pos);
+                for (p, sc) in scores.iter_mut().enumerate() {
+                    let k_nope = &expanded(p)[hd * (nope + vh)..][..nope];
+                    let k_rope = &cache.row(li, p)[kv_rank..];
+                    let sv = kernels::dot_lanes(&qh[..nope], k_nope)
+                        + kernels::dot_lanes(&qh[nope..], k_rope);
+                    *sc = sv * inv_scale;
+                }
+                math::softmax_in_place(scores);
+                let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
+                for (p, &w) in scores.iter().enumerate() {
+                    let v = &expanded(p)[hd * (nope + vh) + nope..][..vh];
+                    for (o, &vv) in oh.iter_mut().zip(v) {
+                        *o += w * vv;
+                    }
                 }
             }
         }
@@ -1581,13 +2083,29 @@ impl ForwardPass {
 
         let q = &mut s.q[..cfg.n_heads * hd];
         self.matvec(q_w, xn, q)?;
-        {
-            let row = cache.row_mut(li, pos);
-            let (krow, vrow) = row.split_at_mut(kd);
-            self.matvec(k_w, xn, krow)?;
-            self.matvec(v_w, xn, vrow)?;
-            for kh in 0..cfg.n_kv_heads {
-                self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+        match cache.scheme() {
+            KvScheme::F32 => {
+                let row = cache.row_mut(li, pos);
+                let (krow, vrow) = row.split_at_mut(kd);
+                self.matvec(k_w, xn, krow)?;
+                self.matvec(v_w, xn, vrow)?;
+                for kh in 0..cfg.n_kv_heads {
+                    self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+                }
+            }
+            _ => {
+                // Quantize-on-append: project and rotate into the exact
+                // f32 staging line, then encode the row's codec blocks
+                // once (write-once, preallocated scratch — zero heap
+                // allocations per token).
+                let stage = &mut s.kv_stage;
+                let (krow, vrow) = stage[..2 * kd].split_at_mut(kd);
+                self.matvec(k_w, xn, krow)?;
+                self.matvec(v_w, xn, vrow)?;
+                for kh in 0..cfg.n_kv_heads {
+                    self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+                }
+                cache.write_row_enc(li, pos, stage)?;
             }
         }
 
@@ -1596,18 +2114,20 @@ impl ForwardPass {
         let heads_out = &mut s.heads_out[..cfg.n_heads * hd];
         heads_out.fill(0.0);
         let scores = &mut s.scores[..ctx];
+        let cache = &*cache;
+        let arm = self.kv_arm();
+        let vdec = &mut s.vdec;
         for h in 0..cfg.n_heads {
             let qh = &mut q[h * hd..(h + 1) * hd];
             self.rope.apply(qh, pos);
             let kh = h / group;
             for (p, sc) in scores.iter_mut().enumerate() {
-                let k = &cache.row(li, p)[kh * hd..(kh + 1) * hd];
-                *sc = kernels::dot_lanes(qh, k) * inv_scale;
+                *sc = cache.score_dot(li, p, kh * hd, qh, arm) * inv_scale;
             }
             math::softmax_in_place(scores);
             let oh = &mut heads_out[h * hd..(h + 1) * hd];
             for (p, &w) in scores.iter().enumerate() {
-                let v = &cache.row(li, p)[kd + kh * hd..][..hd];
+                let v = cache.values(li, p, kd + kh * hd, hd, &mut vdec[..], arm);
                 for (o, &vv) in oh.iter_mut().zip(v) {
                     *o += w * vv;
                 }
@@ -1692,20 +2212,39 @@ impl ForwardPass {
         // KV path, batched; per position: the cache-row write (normed
         // latent + post-RoPE shared key) and the absorbed expansion.
         self.matvec_mat(kv_a_w, xs, hs, t, &mut p.mat, &mut p.kv[..t * kv_w])?;
+        let xw = cfg.n_heads * (nope + vh);
         for j in 0..t {
             let pos = base + j;
             let kv_a = &p.kv[j * kv_w..(j + 1) * kv_w];
-            {
-                let row = cache.row_mut(li, pos);
-                rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
-                row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
-                self.rope.apply(&mut row[kv_rank..], pos);
+            match cache.scheme() {
+                KvScheme::F32 => {
+                    {
+                        let row = cache.row_mut(li, pos);
+                        rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
+                        row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
+                        self.rope.apply(&mut row[kv_rank..], pos);
+                    }
+                    let (row, xrow) = cache.row_and_xrow_mut(li, pos);
+                    self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
+                }
+                _ => {
+                    // Same quantize-on-append staging as the token loop:
+                    // exact f32 row + expansion from the exact latent,
+                    // one codec-block encode per plane.
+                    let stage = &mut p.kv_stage;
+                    rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut stage[..kv_rank]);
+                    stage[kv_rank..kv_w].copy_from_slice(&kv_a[kv_rank..]);
+                    self.rope.apply(&mut stage[kv_rank..kv_w], pos);
+                    let xstage = &mut p.xkv_stage;
+                    self.matvec(kv_b_w, &stage[..kv_rank], &mut xstage[..xw])?;
+                    cache.write_row_enc(li, pos, stage)?;
+                    cache.write_xrow_enc(li, pos, xstage)?;
+                }
             }
-            let (row, xrow) = cache.row_and_xrow_mut(li, pos);
-            self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
         }
 
         let inv_scale = 1.0 / (qk_head as f32).sqrt();
+        let arm = self.kv_arm();
         p.heads_out[..t * ho_w].fill(0.0);
         for j in 0..t {
             let pos = base + j;
@@ -1716,16 +2255,21 @@ impl ForwardPass {
                 let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
                 self.rope.apply(&mut qh[nope..], pos);
                 for (pp, sc) in scores.iter_mut().enumerate() {
-                    let k_nope = &cache.xrow(li, pp)[hd * (nope + vh)..][..nope];
-                    let k_rope = &cache.row(li, pp)[kv_rank..];
-                    let sv = kernels::dot_lanes(&qh[..nope], k_nope)
-                        + kernels::dot_lanes(&qh[nope..], k_rope);
+                    let sv = cache.score_dot_x(li, pp, hd * (nope + vh), &qh[..nope], arm)
+                        + cache.score_dot(li, pp, kv_rank, &qh[nope..], arm);
                     *sc = sv * inv_scale;
                 }
                 math::softmax_in_place(scores);
                 let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
                 for (pp, &w) in scores.iter().enumerate() {
-                    let v = &cache.xrow(li, pp)[hd * (nope + vh) + nope..][..vh];
+                    let v = cache.values_x(
+                        li,
+                        pp,
+                        hd * (nope + vh) + nope,
+                        vh,
+                        &mut p.vdec[..],
+                        arm,
+                    );
                     for (o, &vv) in oh.iter_mut().zip(v) {
                         *o += w * vv;
                     }
@@ -1764,16 +2308,33 @@ impl ForwardPass {
         self.matvec_mat(v_w, xs, hs, t, &mut p.mat, &mut p.v[..t * kd])?;
         for j in 0..t {
             let pos = base + j;
-            let row = cache.row_mut(li, pos);
-            let (krow, vrow) = row.split_at_mut(kd);
-            krow.copy_from_slice(&p.kv[j * kd..(j + 1) * kd]);
-            vrow.copy_from_slice(&p.v[j * kd..(j + 1) * kd]);
-            for kh in 0..cfg.n_kv_heads {
-                self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+            match cache.scheme() {
+                KvScheme::F32 => {
+                    let row = cache.row_mut(li, pos);
+                    let (krow, vrow) = row.split_at_mut(kd);
+                    krow.copy_from_slice(&p.kv[j * kd..(j + 1) * kd]);
+                    vrow.copy_from_slice(&p.v[j * kd..(j + 1) * kd]);
+                    for kh in 0..cfg.n_kv_heads {
+                        self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+                    }
+                }
+                _ => {
+                    // Quantize-on-append via the exact f32 staging line
+                    // (same rotation, then one codec-block encode).
+                    let stage = &mut p.kv_stage;
+                    let (krow, vrow) = stage[..2 * kd].split_at_mut(kd);
+                    krow.copy_from_slice(&p.kv[j * kd..(j + 1) * kd]);
+                    vrow.copy_from_slice(&p.v[j * kd..(j + 1) * kd]);
+                    for kh in 0..cfg.n_kv_heads {
+                        self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+                    }
+                    cache.write_row_enc(li, pos, stage)?;
+                }
             }
         }
 
         let inv_scale = 1.0 / (hd as f32).sqrt();
+        let arm = self.kv_arm();
         p.heads_out[..t * q_len].fill(0.0);
         for j in 0..t {
             let pos = base + j;
@@ -1785,13 +2346,12 @@ impl ForwardPass {
                 self.rope.apply(qh, pos);
                 let kh = h / group;
                 for (pp, sc) in scores.iter_mut().enumerate() {
-                    let k = &cache.row(li, pp)[kh * hd..(kh + 1) * hd];
-                    *sc = kernels::dot_lanes(qh, k) * inv_scale;
+                    *sc = cache.score_dot(li, pp, kh * hd, qh, arm) * inv_scale;
                 }
                 math::softmax_in_place(scores);
                 let oh = &mut heads_out[h * hd..(h + 1) * hd];
                 for (pp, &w) in scores.iter().enumerate() {
-                    let v = &cache.row(li, pp)[kd + kh * hd..][..hd];
+                    let v = cache.values(li, pp, kd + kh * hd, hd, &mut p.vdec[..], arm);
                     for (o, &vv) in oh.iter_mut().zip(v) {
                         *o += w * vv;
                     }
@@ -2417,21 +2977,40 @@ impl ForwardPass {
         self.matvec_mat(q_b_w, q_an, q_rank, t, &mut p.mat, &mut p.q[..t * q_len])?;
 
         self.matvec_mat(kv_a_w, xs, hs, t, &mut p.mat, &mut p.kv[..t * kv_w])?;
+        let xw = cfg.n_heads * (nope + vh);
         for c in 0..t {
             let cache = &mut caches[p.cols[c]];
             let pos = cache.len;
             let kv_a = &p.kv[c * kv_w..(c + 1) * kv_w];
-            {
-                let row = cache.row_mut(li, pos);
-                rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
-                row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
-                self.rope.apply(&mut row[kv_rank..], pos);
+            match cache.scheme() {
+                KvScheme::F32 => {
+                    {
+                        let row = cache.row_mut(li, pos);
+                        rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut row[..kv_rank]);
+                        row[kv_rank..].copy_from_slice(&kv_a[kv_rank..]);
+                        self.rope.apply(&mut row[kv_rank..], pos);
+                    }
+                    let (row, xrow) = cache.row_and_xrow_mut(li, pos);
+                    self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
+                }
+                _ => {
+                    // Quantize-on-append via the staging lines — see
+                    // attention_mla; per column the bits are identical
+                    // to the solo decode path.
+                    let stage = &mut p.kv_stage;
+                    rms_norm(&kv_a[..kv_rank], kv_a_norm, &mut stage[..kv_rank]);
+                    stage[kv_rank..kv_w].copy_from_slice(&kv_a[kv_rank..]);
+                    self.rope.apply(&mut stage[kv_rank..kv_w], pos);
+                    let xstage = &mut p.xkv_stage;
+                    self.matvec(kv_b_w, &stage[..kv_rank], &mut xstage[..xw])?;
+                    cache.write_row_enc(li, pos, stage)?;
+                    cache.write_xrow_enc(li, pos, xstage)?;
+                }
             }
-            let (row, xrow) = cache.row_and_xrow_mut(li, pos);
-            self.matvec(kv_b_w, &row[..kv_rank], xrow)?;
         }
 
         let inv_scale = 1.0 / (qk_head as f32).sqrt();
+        let arm = self.kv_arm();
         p.heads_out[..t * ho_w].fill(0.0);
         for c in 0..t {
             let cache = &caches[p.cols[c]];
@@ -2443,16 +3022,21 @@ impl ForwardPass {
                 let qh = &mut q[hd * qk_head..(hd + 1) * qk_head];
                 self.rope.apply(&mut qh[nope..], pos);
                 for (pp, sc) in scores.iter_mut().enumerate() {
-                    let k_nope = &cache.xrow(li, pp)[hd * (nope + vh)..][..nope];
-                    let k_rope = &cache.row(li, pp)[kv_rank..];
-                    let sv = kernels::dot_lanes(&qh[..nope], k_nope)
-                        + kernels::dot_lanes(&qh[nope..], k_rope);
+                    let sv = cache.score_dot_x(li, pp, hd * (nope + vh), &qh[..nope], arm)
+                        + cache.score_dot(li, pp, kv_rank, &qh[nope..], arm);
                     *sc = sv * inv_scale;
                 }
                 math::softmax_in_place(scores);
                 let oh = &mut heads_out[hd * vh..(hd + 1) * vh];
                 for (pp, &w) in scores.iter().enumerate() {
-                    let v = &cache.xrow(li, pp)[hd * (nope + vh) + nope..][..vh];
+                    let v = cache.values_x(
+                        li,
+                        pp,
+                        hd * (nope + vh) + nope,
+                        vh,
+                        &mut p.vdec[..],
+                        arm,
+                    );
                     for (o, &vv) in oh.iter_mut().zip(v) {
                         *o += w * vv;
                     }
@@ -2490,16 +3074,33 @@ impl ForwardPass {
         for c in 0..t {
             let cache = &mut caches[p.cols[c]];
             let pos = cache.len;
-            let row = cache.row_mut(li, pos);
-            let (krow, vrow) = row.split_at_mut(kd);
-            krow.copy_from_slice(&p.kv[c * kd..(c + 1) * kd]);
-            vrow.copy_from_slice(&p.v[c * kd..(c + 1) * kd]);
-            for kh in 0..cfg.n_kv_heads {
-                self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+            match cache.scheme() {
+                KvScheme::F32 => {
+                    let row = cache.row_mut(li, pos);
+                    let (krow, vrow) = row.split_at_mut(kd);
+                    krow.copy_from_slice(&p.kv[c * kd..(c + 1) * kd]);
+                    vrow.copy_from_slice(&p.v[c * kd..(c + 1) * kd]);
+                    for kh in 0..cfg.n_kv_heads {
+                        self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+                    }
+                }
+                _ => {
+                    // Quantize-on-append via the exact f32 staging line
+                    // — per column identical to the solo decode path.
+                    let stage = &mut p.kv_stage;
+                    let (krow, vrow) = stage[..2 * kd].split_at_mut(kd);
+                    krow.copy_from_slice(&p.kv[c * kd..(c + 1) * kd]);
+                    vrow.copy_from_slice(&p.v[c * kd..(c + 1) * kd]);
+                    for kh in 0..cfg.n_kv_heads {
+                        self.rope.apply(&mut krow[kh * hd..(kh + 1) * hd], pos);
+                    }
+                    cache.write_row_enc(li, pos, stage)?;
+                }
             }
         }
 
         let inv_scale = 1.0 / (hd as f32).sqrt();
+        let arm = self.kv_arm();
         p.heads_out[..t * q_len].fill(0.0);
         for c in 0..t {
             let cache = &caches[p.cols[c]];
@@ -2512,13 +3113,12 @@ impl ForwardPass {
                 self.rope.apply(qh, pos);
                 let kh = h / group;
                 for (pp, sc) in scores.iter_mut().enumerate() {
-                    let k = &cache.row(li, pp)[kh * hd..(kh + 1) * hd];
-                    *sc = kernels::dot_lanes(qh, k) * inv_scale;
+                    *sc = cache.score_dot(li, pp, kh * hd, qh, arm) * inv_scale;
                 }
                 math::softmax_in_place(scores);
                 let oh = &mut heads_out[h * hd..(h + 1) * hd];
                 for (pp, &w) in scores.iter().enumerate() {
-                    let v = &cache.row(li, pp)[kd + kh * hd..][..hd];
+                    let v = cache.values(li, pp, kd + kh * hd, hd, &mut p.vdec[..], arm);
                     for (o, &vv) in oh.iter_mut().zip(v) {
                         *o += w * vv;
                     }

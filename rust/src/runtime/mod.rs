@@ -285,6 +285,16 @@ impl Engine {
         }
     }
 
+    /// Mutable access to the native backend — `--kv-scheme` configures
+    /// the KV-cache storage scheme through this before any cache or
+    /// scratch exists ([`native::NativeEngine::set_kv_scheme`]).
+    pub fn native_mut(&mut self) -> Option<&mut native::NativeEngine> {
+        match &mut self.backend {
+            Backend::Native(m) => Some(m),
+            Backend::Pjrt { .. } => None,
+        }
+    }
+
     pub fn batch(&self) -> usize {
         match &self.backend {
             Backend::Pjrt { prefill, .. } => prefill.manifest.batch,

@@ -36,7 +36,7 @@
 use super::forward::{ForwardPass, KvCache, MatvecMode, Scratch};
 use super::paged::KvBlockPool;
 use crate::container::Container;
-use crate::quant::QuantFormat;
+use crate::quant::{KvScheme, QuantFormat};
 use anyhow::{bail, Result};
 
 /// Batch slots the native backend serves per wave (mirrors the tiny
@@ -174,6 +174,30 @@ impl NativeEngine {
     /// mode.
     pub fn set_mode(&mut self, mode: MatvecMode) {
         self.fwd.set_mode(mode);
+    }
+
+    /// Select the KV-cache storage scheme (see
+    /// [`ForwardPass::set_kv_scheme`]). Call **before** any cache,
+    /// block pool, or scratch is created from this engine — the scheme
+    /// decides block byte sizes and staging-scratch layouts, and
+    /// [`KvCache::grow_to`] rejects pools built under a different one.
+    /// Logits under `q8_0` stay bit-identical across threads, dispatch
+    /// arms, shards, and dense/paged backings (only f32 matches the
+    /// pre-quantized-KV goldens byte-for-byte).
+    pub fn set_kv_scheme(&mut self, scheme: KvScheme) -> Result<()> {
+        self.fwd.set_kv_scheme(scheme)
+    }
+
+    /// Active KV-cache storage scheme (f32 unless overridden).
+    pub fn kv_scheme(&self) -> KvScheme {
+        self.fwd.kv_scheme()
+    }
+
+    /// Encoded KV bytes one cached token occupies across all layers
+    /// and planes under the active scheme — the engine-measured side
+    /// of the planner's [`crate::memory::kv_token_plan`].
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.fwd.new_cache().bytes_per_token()
     }
 
     /// A KV block pool sized for this engine's cache shape (see

@@ -8,14 +8,28 @@
 //! ## Block layout
 //!
 //! One [`KvBlock`] stores `block_tokens` consecutive positions of **one
-//! slot's** cache across *all* layers: `data` is
-//! `[n_layers][block_tokens][width]` and (for absorbed MLA) `xdata` is
-//! `[n_layers][block_tokens][xwidth]`. A paged cache's block table is
+//! slot's** cache across *all* layers. Under the default
+//! [`KvScheme::F32`], `data` is `[n_layers][block_tokens][width]` f32
+//! and (for absorbed MLA) `xdata` is `[n_layers][block_tokens][xwidth]`.
+//! Under a quantized scheme the planes are **encoded bytes** instead:
+//! `qdata` is `[n_layers][block_tokens][row_bytes]` where `row_bytes =
+//! scheme.line_bytes(width)` — each per-token row padded up to the
+//! scheme's 32-element block grid and stored as whole codec blocks
+//! (f16 scale + packed ints), and `xqdata` likewise for the expanded
+//! plane. All sizing and reservation arithmetic is expressed in
+//! **blocks of bytes** derived from the scheme ([`KvBlockPool::block_bytes`]),
+//! never by assuming the f32 plane width. A paged cache's block table is
 //! simply its `Vec<KvBlock>` — position `p` lives in block
 //! `p / block_tokens` at in-block offset `p % block_tokens`. Blocks are
 //! *moved* between the pool's free list and exactly one cache, so two
 //! slots can never alias the same block by construction (the
 //! pointer-uniqueness property tests re-verify this from outside).
+//! Because every position owns a whole number of codec blocks (the
+//! padded row), a `block_tokens` that is *not* a multiple of the
+//! codec's 32-weight grid cannot make two positions share a codec
+//! block: padding is per-row, write-once, and zero-filled — it can
+//! neither alias a neighbour nor leak stale state (swept by the
+//! property test in `tests/continuous_batching.rs`).
 //!
 //! ## Block size
 //!
@@ -48,24 +62,35 @@
 //! block back to the free list and the reservation is dropped. Freed
 //! blocks keep their (stale) contents; that is safe because attention
 //! at position `p` only reads rows `0..=p`, each written earlier by the
-//! *current* request before being read. The free list is pre-reserved
-//! to `capacity`, so steady-state recycling performs zero heap
-//! allocations — after warmup every admission is served from the free
-//! list ([`KvBlockPool::created`] stops growing, asserted by the
+//! *current* request before being read — and under a quantized scheme
+//! each row's codec blocks (including the zero padding tail) are
+//! rewritten whole at append time, so stale encoded bytes are never
+//! decoded. The free list is pre-reserved to `capacity`, so
+//! steady-state recycling performs zero heap allocations — after warmup
+//! every admission is served from the free list
+//! ([`KvBlockPool::created`] stops growing, asserted by the
 //! counting-allocator test in `tests/continuous_batching.rs`).
 
+use crate::quant::KvScheme;
 use anyhow::{bail, Result};
 
 /// One fixed-size page of KV state: `block_tokens` positions across all
 /// layers of a single slot's cache. Created by [`KvBlockPool::take`],
 /// returned by [`KvBlockPool::put`]; owned by at most one cache at a
-/// time.
+/// time. Exactly one plane pair is allocated, per the pool's scheme.
 pub struct KvBlock {
-    /// `[n_layers][block_tokens][width]` main KV plane.
+    /// `[n_layers][block_tokens][width]` main KV plane
+    /// ([`KvScheme::F32`] only; empty under a quantized scheme).
     pub(crate) data: Vec<f32>,
     /// `[n_layers][block_tokens][xwidth]` absorbed-MLA expanded plane
-    /// (empty when `xwidth == 0`).
+    /// (empty when `xwidth == 0` or the scheme is quantized).
     pub(crate) xdata: Vec<f32>,
+    /// `[n_layers][block_tokens][scheme.line_bytes(width)]` encoded main
+    /// plane (quantized schemes only; empty under f32).
+    pub(crate) qdata: Vec<u8>,
+    /// `[n_layers][block_tokens][scheme.line_bytes(xwidth)]` encoded
+    /// expanded plane (quantized schemes with `xwidth > 0` only).
+    pub(crate) xqdata: Vec<u8>,
 }
 
 /// The fixed-capacity block pool a [`ContinuousScheduler`]'s paged
@@ -76,6 +101,7 @@ pub struct KvBlockPool {
     n_layers: usize,
     width: usize,
     xwidth: usize,
+    scheme: KvScheme,
     block_tokens: usize,
     capacity: usize,
     /// Recycled blocks, pre-reserved to `capacity` so `put` never
@@ -92,6 +118,7 @@ impl KvBlockPool {
         n_layers: usize,
         width: usize,
         xwidth: usize,
+        scheme: KvScheme,
         block_tokens: usize,
         capacity: usize,
     ) -> Result<Self> {
@@ -105,6 +132,7 @@ impl KvBlockPool {
             n_layers,
             width,
             xwidth,
+            scheme,
             block_tokens,
             capacity,
             free: Vec::with_capacity(capacity),
@@ -115,14 +143,43 @@ impl KvBlockPool {
         })
     }
 
-    /// Whether this pool's block layout matches a cache/model shape.
-    pub(crate) fn matches(&self, n_layers: usize, width: usize, xwidth: usize) -> bool {
-        self.n_layers == n_layers && self.width == width && self.xwidth == xwidth
+    /// Whether this pool's block layout matches a cache/model shape and
+    /// KV scheme (a cache must never draw blocks whose planes were
+    /// sized for a different encoding).
+    pub(crate) fn matches(
+        &self,
+        n_layers: usize,
+        width: usize,
+        xwidth: usize,
+        scheme: KvScheme,
+    ) -> bool {
+        self.n_layers == n_layers
+            && self.width == width
+            && self.xwidth == xwidth
+            && self.scheme == scheme
     }
 
     /// Tokens per block.
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
+    }
+
+    /// The KV encoding this pool's block planes are sized for.
+    pub fn scheme(&self) -> KvScheme {
+        self.scheme
+    }
+
+    /// Bytes one cached position occupies across all layers under this
+    /// pool's scheme — encoded row + expanded plane, including the
+    /// padding that rounds each row up to the codec's block grid.
+    pub fn bytes_per_token(&self) -> usize {
+        self.n_layers * (self.scheme.line_bytes(self.width) + self.scheme.line_bytes(self.xwidth))
+    }
+
+    /// Total payload bytes one block allocates (reservation arithmetic
+    /// is expressed in these blocks-of-bytes, not f32 plane widths).
+    pub fn block_bytes(&self) -> usize {
+        self.block_tokens * self.bytes_per_token()
     }
 
     /// Total blocks this pool may ever hand out at once.
@@ -197,16 +254,31 @@ impl KvBlockPool {
             return Ok(b);
         }
         self.created += 1;
-        Ok(KvBlock {
-            data: vec![0.0; self.n_layers * self.block_tokens * self.width],
-            xdata: vec![0.0; self.n_layers * self.block_tokens * self.xwidth],
+        let slots = self.n_layers * self.block_tokens;
+        Ok(match self.scheme {
+            KvScheme::F32 => KvBlock {
+                data: vec![0.0; slots * self.width],
+                xdata: vec![0.0; slots * self.xwidth],
+                qdata: Vec::new(),
+                xqdata: Vec::new(),
+            },
+            s => KvBlock {
+                data: Vec::new(),
+                xdata: Vec::new(),
+                qdata: vec![0; slots * s.line_bytes(self.width)],
+                xqdata: vec![0; slots * s.line_bytes(self.xwidth)],
+            },
         })
     }
 
     /// Return a block to the free list (contents left stale — see the
     /// module docs for why that is safe).
     pub(crate) fn put(&mut self, b: KvBlock) {
-        debug_assert_eq!(b.data.len(), self.n_layers * self.block_tokens * self.width);
+        let slots = self.n_layers * self.block_tokens;
+        match self.scheme {
+            KvScheme::F32 => debug_assert_eq!(b.data.len(), slots * self.width),
+            s => debug_assert_eq!(b.qdata.len(), slots * s.line_bytes(self.width)),
+        }
         debug_assert!(self.outstanding > 0, "put with nothing outstanding");
         self.outstanding -= 1;
         self.free.push(b);
@@ -218,7 +290,7 @@ mod tests {
     use super::*;
 
     fn pool(capacity: usize) -> KvBlockPool {
-        KvBlockPool::new(2, 8, 0, 4, capacity).unwrap()
+        KvBlockPool::new(2, 8, 0, KvScheme::F32, 4, capacity).unwrap()
     }
 
     #[test]
@@ -262,8 +334,32 @@ mod tests {
     }
 
     #[test]
+    fn quantized_blocks_are_sized_in_encoded_bytes() {
+        // width 8 pads to one 32-weight Q8_0 block (34 B) per row; the
+        // f32 plane would have been 8 · 4 = 32 B — the accounting must
+        // come from the codec grid, not the plane width.
+        let mut p = KvBlockPool::new(2, 8, 8, KvScheme::Q8_0, 3, 4).unwrap();
+        assert_eq!(p.scheme(), KvScheme::Q8_0);
+        assert_eq!(p.bytes_per_token(), 2 * (34 + 34));
+        assert_eq!(p.block_bytes(), 3 * 2 * 68);
+        assert!(p.try_reserve(1));
+        let b = p.take().unwrap();
+        assert!(b.data.is_empty() && b.xdata.is_empty(), "no f32 planes under q8_0");
+        assert_eq!(b.qdata.len(), 2 * 3 * 34);
+        assert_eq!(b.xqdata.len(), 2 * 3 * 34);
+        assert!(b.qdata.iter().all(|&x| x == 0), "fresh blocks are zeroed");
+        p.put(b);
+        p.unreserve(1);
+        // An f32 pool of the same shape reports the un-padded footprint.
+        let f = pool(4);
+        assert_eq!(f.bytes_per_token(), 2 * 8 * 4);
+        assert!(!f.matches(2, 8, 0, KvScheme::Q8_0), "scheme is part of the layout");
+        assert!(f.matches(2, 8, 0, KvScheme::F32));
+    }
+
+    #[test]
     fn degenerate_pools_are_rejected() {
-        assert!(KvBlockPool::new(1, 4, 0, 0, 4).is_err());
-        assert!(KvBlockPool::new(1, 4, 0, 4, 0).is_err());
+        assert!(KvBlockPool::new(1, 4, 0, KvScheme::F32, 0, 4).is_err());
+        assert!(KvBlockPool::new(1, 4, 0, KvScheme::F32, 4, 0).is_err());
     }
 }

@@ -28,6 +28,7 @@ use dsq::coordinator::scheduler::{ContinuousScheduler, ServeConfig, SubmitOutcom
 use dsq::coordinator::{Coordinator, Request};
 use dsq::model::ModelConfig;
 use dsq::quant::kernels::DispatchArm;
+use dsq::quant::KvScheme;
 use dsq::runtime::forward::{KvCache, MatvecMode};
 use dsq::runtime::native::NativeEngine;
 use dsq::runtime::Engine;
@@ -104,6 +105,15 @@ fn qbytes(model: &str, scheme: &str) -> &'static [u8] {
 fn engine(model: &str, scheme: &str, threads: usize) -> NativeEngine {
     let q = Container::from_bytes(qbytes(model, scheme).to_vec()).unwrap();
     NativeEngine::with_limits(q, threads, 4, 6, 12).unwrap()
+}
+
+/// [`engine`] with the KV cache switched to Q8_0 (set before the
+/// scheduler exists, so its pool inherits the quantized block layout).
+fn q8_engine(model: &str, scheme: &str, threads: usize, max_ctx: usize) -> NativeEngine {
+    let q = Container::from_bytes(qbytes(model, scheme).to_vec()).unwrap();
+    let mut eng = NativeEngine::with_limits(q, threads, 4, 6, max_ctx).unwrap();
+    eng.set_kv_scheme(KvScheme::Q8_0).unwrap();
+    eng
 }
 
 fn mk_req(id: u64, plen: usize, max_new: usize, seed: u64) -> Request {
@@ -339,6 +349,126 @@ fn paged_allocator_random_schedules_hold_invariants() {
         assert_eq!(pool.reserved(), 0, "reservations leaked");
         assert_eq!(pool.free_blocks(), pool.created(), "free list lost recycled blocks");
         assert!(pool.created() <= pool.capacity());
+    }
+}
+
+/// The allocator property test again under a **Q8_0** KV cache, with
+/// every swept `block_tokens` deliberately *not* a multiple (or
+/// divisor) of the codec's 32-weight block: lines are padded to the
+/// block grid inside each token slot, so block-boundary arithmetic and
+/// codec-padding arithmetic land on different offsets. Reservation is
+/// blocks-of-bytes: each block's byte footprint must be exactly
+/// `block_tokens × bytes_per_token` under the quantized layout, and no
+/// schedule may leak or alias a block.
+#[test]
+fn paged_allocator_random_schedules_hold_invariants_under_q8_kv() {
+    let eng = q8_engine("tiny-moe", "q4_k_m", 1, 12);
+    let fwd = eng.forward();
+    let max_ctx = eng.max_ctx();
+    for (bt, capacity, seed) in [(1usize, 8usize, 55u64), (3, 6, 66), (5, 7, 77), (7, 9, 88)] {
+        assert_ne!(bt % 32, 0);
+        let mut pool = fwd.new_block_pool(capacity, bt).unwrap();
+        assert_eq!(pool.scheme(), KvScheme::Q8_0);
+        assert_eq!(pool.block_bytes(), bt * pool.bytes_per_token());
+        let n_slots = 4;
+        let mut caches: Vec<KvCache> =
+            (0..n_slots).map(|_| fwd.new_paged_cache(&pool).unwrap()).collect();
+        let mut active: Vec<Option<(usize, usize)>> = vec![None; n_slots];
+        let mut rng = Pcg::new(seed);
+        for _ in 0..400 {
+            let i = rng.next_below(n_slots as u64) as usize;
+            match active[i] {
+                None => {
+                    let target = 1 + rng.next_below(max_ctx as u64) as usize;
+                    let need = target.div_ceil(bt);
+                    if pool.try_reserve(need) {
+                        active[i] = Some((target, need));
+                        let first = 1 + rng.next_below(target as u64) as usize;
+                        caches[i].grow_to(first, &mut pool).unwrap();
+                    }
+                }
+                Some((target, need)) => {
+                    let grown = caches[i].capacity();
+                    if grown < target && rng.next_below(3) > 0 {
+                        caches[i].grow_to((grown + 1).min(target), &mut pool).unwrap();
+                    } else {
+                        let freed = caches[i].release(&mut pool);
+                        assert!(freed <= need, "released {freed} > reserved {need}");
+                        pool.unreserve(need);
+                        active[i] = None;
+                    }
+                }
+            }
+            let held: usize = caches.iter().map(|c| c.block_addrs().len()).sum();
+            assert_eq!(pool.outstanding(), held, "pool/caches disagree on outstanding");
+            let addrs: Vec<usize> = caches.iter().flat_map(|c| c.block_addrs()).collect();
+            let uniq: HashSet<usize> = addrs.iter().copied().collect();
+            assert_eq!(uniq.len(), addrs.len(), "two caches alias one block");
+            assert!(pool.outstanding() <= pool.reserved());
+            assert!(pool.reserved() <= pool.capacity());
+            assert!(pool.peak_outstanding() <= pool.capacity());
+        }
+        for (i, cache) in caches.iter_mut().enumerate() {
+            if let Some((_, need)) = active[i].take() {
+                cache.release(&mut pool);
+                pool.unreserve(need);
+            }
+        }
+        assert_eq!(pool.outstanding(), 0, "blocks leaked");
+        assert_eq!(pool.reserved(), 0, "reservations leaked");
+        assert_eq!(pool.free_blocks(), pool.created(), "free list lost recycled blocks");
+        assert!(pool.created() <= pool.capacity());
+    }
+}
+
+/// Q8_0 padding must not leak across token slots or block boundaries:
+/// with `block_tokens = 3` (crossing the codec grid at every boundary)
+/// a recycled paged q8 cache reconstructs the same encoded bytes a
+/// fresh dense q8 cache holds after identical forwards — stale block
+/// contents from the previous tenant never show through.
+#[test]
+fn q8_paged_padding_does_not_alias_across_recycled_blocks() {
+    for model in ["tiny-moe", "tiny-dense"] {
+        let eng = q8_engine(model, "q4_k_m", 1, 12);
+        let fwd = eng.forward();
+        let v = eng.vocab();
+        let mut scratch = fwd.new_scratch_cols(4);
+        let mut logits = vec![0f32; v];
+        let mut pool = fwd.new_block_pool(4, 3).unwrap();
+
+        // First tenant dirties the pool's blocks with its own rows.
+        assert!(pool.try_reserve(4));
+        let mut first = fwd.new_paged_cache(&pool).unwrap();
+        first.grow_to(10, &mut pool).unwrap();
+        let warm: Vec<i32> = (0..10).map(|i| 11 + i * 29).collect();
+        fwd.forward_tokens(&warm, &mut first, &mut scratch, None).unwrap();
+        first.release(&mut pool);
+        pool.unreserve(4);
+
+        // Second tenant recycles those dirty blocks for a shorter run.
+        let toks: Vec<i32> = (0..7).map(|i| 3 + i * 37).collect();
+        let mut dense = fwd.new_cache();
+        fwd.forward_tokens(&toks, &mut dense, &mut scratch, Some(&mut logits)).unwrap();
+        let dense_logits = logits.clone();
+
+        assert!(pool.try_reserve(3));
+        let mut paged = fwd.new_paged_cache(&pool).unwrap();
+        paged.grow_to(toks.len(), &mut pool).unwrap();
+        fwd.forward_tokens(&toks, &mut paged, &mut scratch, Some(&mut logits)).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dense_logits), bits(&logits), "{model}: recycled-block logits");
+        assert_eq!(
+            dense.copy_rows_enc(),
+            paged.copy_rows_enc(),
+            "{model}: stale recycled bytes leaked into the encoded row plane"
+        );
+        assert_eq!(
+            dense.copy_expanded_enc(),
+            paged.copy_expanded_enc(),
+            "{model}: stale recycled bytes leaked into the encoded expanded plane"
+        );
+        paged.release(&mut pool);
+        pool.unreserve(3);
     }
 }
 
@@ -590,4 +720,93 @@ fn steady_state_continuous_decode_is_allocation_free() {
     assert!(clean_steps >= 2, "only {clean_steps} finish-free decode steps measured");
     sched.run_to_completion().unwrap();
     assert_eq!(sched.metrics.completed, 8);
+}
+
+/// The zero-alloc gate under a **Q8_0** KV cache: quantize-on-append
+/// encodes into the block's preallocated byte plane and fused reads
+/// decode into preallocated scratch, so post-warmup continuous decode
+/// must stay exactly as allocation-free as the f32 path.
+#[test]
+fn steady_state_q8_continuous_decode_is_allocation_free() {
+    let eng = q8_engine("tiny-moe", "q4_k_m", 1, 16);
+    let mut sched = ContinuousScheduler::new(&eng, ServeConfig::default()).unwrap();
+    assert_eq!(sched.pool().scheme(), KvScheme::Q8_0);
+
+    // Warmup: a full 4-slot workload end to end.
+    let warm: Vec<Request> = (0..4).map(|i| mk_req(i, 4, 8, 0xF0 + i)).collect();
+    submit_all(&mut sched, &warm);
+    sched.run_to_completion().unwrap();
+
+    let fresh: Vec<Request> = (10..14).map(|i| mk_req(i, 4, 8, 0xF0 + i)).collect();
+    submit_all(&mut sched, &fresh);
+
+    let created_before = sched.pool().created();
+    let a0 = thread_allocs();
+    assert_eq!(sched.admit().unwrap(), 4);
+    let admit_allocs = thread_allocs() - a0;
+    assert_eq!(
+        sched.pool().created(),
+        created_before,
+        "q8 admission must be served from the recycled free list"
+    );
+    if sched.live() == 4 {
+        assert_eq!(admit_allocs, 0, "q8 admission after warmup must not touch the heap");
+    }
+
+    let mut clean_steps = 0;
+    for _ in 0..5 {
+        let live_before = sched.live();
+        if live_before == 0 {
+            break;
+        }
+        let d0 = thread_allocs();
+        let stepped = sched.decode_step().unwrap();
+        assert_eq!(stepped, live_before);
+        if sched.live() == live_before {
+            assert_eq!(
+                thread_allocs() - d0,
+                0,
+                "steady-state q8 decode step touched the heap"
+            );
+            clean_steps += 1;
+        }
+    }
+    assert!(clean_steps >= 2, "only {clean_steps} finish-free q8 decode steps measured");
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.metrics.completed, 8);
+}
+
+/// End-to-end continuous serving under q8_0 KV: every batched stream
+/// matches its solo q8 run bit for bit (sampling included), and the
+/// serving report names the quantized scheme with its measured
+/// bytes-per-token.
+#[test]
+fn q8_continuous_streams_match_q8_solo() {
+    let reqs = mixed_requests();
+    for threads in [1usize, 2] {
+        let eng = q8_engine("tiny-moe", "q4_k_m", threads, 12);
+        let solo: HashMap<u64, Vec<i32>> =
+            reqs.iter().map(|r| (r.id, solo_tokens(&eng, r))).collect();
+        let mut sched = ContinuousScheduler::new(&eng, ServeConfig::default()).unwrap();
+        submit_all(&mut sched, &reqs);
+        let responses = sched.run_to_completion().unwrap();
+        assert_eq!(responses.len(), reqs.len());
+        for r in responses {
+            assert_eq!(
+                r.tokens, solo[&r.id],
+                "threads={threads} request {}: q8 continuous stream diverged from q8 solo",
+                r.id
+            );
+        }
+        let report = sched.metrics.report();
+        assert!(
+            report.contains("kv: scheme q8_0"),
+            "serving report must name the KV scheme:\n{report}"
+        );
+        let bpt = sched.pool().bytes_per_token();
+        assert!(
+            report.contains(&format!("{bpt} B/token")),
+            "serving report must carry the measured bytes/token:\n{report}"
+        );
+    }
 }

@@ -1,0 +1,459 @@
+//! Acceptance suite for the quantized (Q8_0) KV cache — the
+//! scheme-parametric store behind `--kv-scheme q8_0`, quantizing each
+//! appended cache line once (write-once) and reading attention through
+//! the fused block-codec kernels.
+//!
+//! Five locks, mirroring `tests/native_forward.rs` one scheme down:
+//!
+//! 1. **Golden logits, mirror-blessed only** — the shared golden script
+//!    under a Q8_0 KV cache must hash to the committed
+//!    `tests/golden/forward.kv_q8_0.*.fnv64` fixtures. Unlike the f32
+//!    goldens these are **never self-blessed by the Rust side**: a
+//!    missing fixture fails the test, and the only way to produce one
+//!    is the bit-exact Python mirror (`python/tools/bless_goldens.py`),
+//!    so Rust and Python must agree on every quantized cache byte
+//!    before a fixture can exist at all.
+//! 2. **Bit identity** — q8-KV logits are identical across matvec
+//!    thread counts {1, 2, 8}, every available pinned dispatch arm
+//!    (CI re-runs the suite under each `DSQ_FORCE_ARM`), shard counts
+//!    {1, 2, 4}, dense vs paged backing (logits *and* the encoded block
+//!    planes), and batched panel decode vs solo per-slot decode.
+//! 3. **Accuracy bound** — teacher-forcing the f32-KV greedy trajectory
+//!    through a q8-KV cache perturbs logits measurably but stays within
+//!    a small relative-L2 bound (KV quantization error is tiny next to
+//!    the weight quantization the paper studies).
+//! 4. **Planner-vs-engine bytes** — [`dsq::memory::kv_token_plan`]
+//!    must match [`KvCache::measured_token_plan`] entry for entry and
+//!    byte for byte (named diff on drift), the block pool must agree,
+//!    and q8_0 must be a ≥3× reduction vs the f32 planes.
+//! 5. **Clean rejection** — eager (non-absorbed) MLA refuses a
+//!    quantized KV scheme, and a pool created under one scheme cannot
+//!    back caches of another.
+//!
+//! [`KvCache::measured_token_plan`]: dsq::runtime::forward::KvCache::measured_token_plan
+
+use dsq::container::{quantize_container_with, synthetic_f32_container, Container};
+use dsq::coordinator::sampler::argmax;
+use dsq::memory;
+use dsq::model::ModelConfig;
+use dsq::quant::kernels::DispatchArm;
+use dsq::quant::KvScheme;
+use dsq::runtime::forward::{ForwardPass, MatvecMode};
+use dsq::runtime::native::NATIVE_MAX_CTX;
+use dsq::util::fnv64;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// Same golden script as `tests/native_forward.rs` — the q8-KV fixtures
+/// pin this exact prompt + greedy-decode sequence.
+const PROMPT: [i32; 8] = [1, 17, 300, 42, 511, 7, 5, 260];
+const DECODE_STEPS: usize = 4;
+
+const MODELS: [&str; 2] = ["tiny-moe", "tiny-dense"];
+const SCHEMES: [&str; 2] = ["dq3_k_m", "q4_k_m"];
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Quantized golden-container bytes (seed 0x601D, the shared golden
+/// source), built once per (model, scheme).
+fn qbytes(model: &str, scheme: &str) -> &'static [u8] {
+    static MOE_DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static MOE_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    static DENSE_DQ3: OnceLock<Vec<u8>> = OnceLock::new();
+    static DENSE_Q4: OnceLock<Vec<u8>> = OnceLock::new();
+    let cell = match (model, scheme) {
+        ("tiny-moe", "dq3_k_m") => &MOE_DQ3,
+        ("tiny-moe", "q4_k_m") => &MOE_Q4,
+        ("tiny-dense", "dq3_k_m") => &DENSE_DQ3,
+        ("tiny-dense", "q4_k_m") => &DENSE_Q4,
+        other => panic!("unexpected combination {other:?}"),
+    };
+    cell.get_or_init(|| {
+        let cfg = ModelConfig::by_name(model).unwrap();
+        let src = synthetic_f32_container(&cfg, 0x601D).unwrap();
+        let scheme = dsq::scheme::builtin::scheme(scheme).unwrap();
+        quantize_container_with(&src, &scheme, None, 1).unwrap().to_bytes()
+    })
+}
+
+fn forward(model: &str, scheme: &str, threads: usize, shards: usize, kv: KvScheme) -> ForwardPass {
+    let ckpt = Container::from_bytes(qbytes(model, scheme).to_vec()).unwrap();
+    let mut fwd = ForwardPass::new(ckpt, threads, NATIVE_MAX_CTX).unwrap();
+    fwd.set_sharding(shards).unwrap();
+    fwd.set_kv_scheme(kv).unwrap();
+    fwd
+}
+
+/// Prefill [`PROMPT`] token by token (logits at the last), then
+/// [`DECODE_STEPS`] greedy steps; returns every emitted logits row.
+fn run_script(fwd: &ForwardPass) -> Vec<Vec<f32>> {
+    let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
+    let mut logits = vec![0f32; fwd.vocab()];
+    for (j, &t) in PROMPT.iter().enumerate() {
+        let want = if j + 1 == PROMPT.len() { Some(&mut logits[..]) } else { None };
+        fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
+    }
+    let mut rows = vec![logits.clone()];
+    for _ in 0..DECODE_STEPS {
+        let tok = argmax(rows.last().unwrap());
+        fwd.forward_token(tok, &mut cache, &mut scratch, Some(&mut logits)).unwrap();
+        rows.push(logits.clone());
+    }
+    rows
+}
+
+/// Teacher-force a fixed token stream, collecting logits at every
+/// position from `want_from` on — the accuracy-bound comparison runs
+/// the *same* tokens through both KV schemes.
+fn run_forced(fwd: &ForwardPass, stream: &[i32], want_from: usize) -> Vec<Vec<f32>> {
+    let mut cache = fwd.new_cache();
+    let mut scratch = fwd.new_scratch();
+    let mut logits = vec![0f32; fwd.vocab()];
+    let mut rows = Vec::new();
+    for (j, &t) in stream.iter().enumerate() {
+        let want = if j >= want_from { Some(&mut logits[..]) } else { None };
+        fwd.forward_token(t, &mut cache, &mut scratch, want).unwrap();
+        if j >= want_from {
+            rows.push(logits.clone());
+        }
+    }
+    rows
+}
+
+fn bits(rows: &[Vec<f32>]) -> Vec<u32> {
+    rows.iter().flatten().map(|v| v.to_bits()).collect()
+}
+
+fn slice_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(&x, &y)| (x as f64 - y as f64).powi(2)).sum();
+    let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+// --- lock 1: mirror-blessed goldens ---------------------------------------
+
+/// The q8-KV fixtures exist **only** via the Python mirror: a missing
+/// file is a hard failure (never blessed from this side), a present
+/// file is the Rust↔Python cross-language gate for the quantized cache.
+#[test]
+fn golden_q8_kv_logits_checksums_mirror_blessed_only() {
+    for model in MODELS {
+        let rows = run_script(&forward(model, "q4_k_m", 1, 0, KvScheme::Q8_0));
+        let mut blob = Vec::with_capacity(rows.len() * rows[0].len() * 4);
+        for r in &rows {
+            for v in r {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let line = format!("{:016x} {}\n", fnv64(&blob), blob.len());
+        let name = match model {
+            "tiny-moe" => "forward.kv_q8_0.q4_k_m.fnv64",
+            "tiny-dense" => "forward.kv_q8_0.tiny_dense.q4_k_m.fnv64",
+            other => panic!("unexpected model {other}"),
+        };
+        let path = golden_dir().join(name);
+        assert!(
+            path.exists(),
+            "missing q8-KV golden {} — quantized-KV fixtures are blessed ONLY from the \
+             bit-exact Python mirror: run `python3 python/tools/bless_goldens.py` and commit \
+             the file (the Rust side never self-blesses these)",
+            path.display()
+        );
+        let expect = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            expect.trim(),
+            line.trim(),
+            "q8-KV forward logits for {model}/q4_k_m drifted from {}; if intentional, \
+             re-bless from python/tools/bless_goldens.py and call it out in the PR",
+            path.display()
+        );
+    }
+}
+
+// --- lock 2: bit identity -------------------------------------------------
+
+#[test]
+fn q8_kv_bit_identical_across_threads_and_dispatch_arms() {
+    for model in MODELS {
+        for scheme in SCHEMES {
+            let base = bits(&run_script(&forward(model, scheme, 1, 0, KvScheme::Q8_0)));
+            let mut modes = vec![
+                ("threads=2".to_string(), MatvecMode::Threads(2)),
+                ("threads=8".to_string(), MatvecMode::Threads(8)),
+            ];
+            for arm in DispatchArm::ALL {
+                if arm.available() {
+                    modes.push((format!("pinned {} arm", arm.name()), MatvecMode::Pinned(arm)));
+                }
+            }
+            for (label, mode) in modes {
+                let mut fwd = forward(model, scheme, 1, 0, KvScheme::Q8_0);
+                fwd.set_mode(mode);
+                assert_eq!(base, bits(&run_script(&fwd)), "{model}/{scheme}: q8 KV, {label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn q8_kv_bit_identical_across_shard_counts() {
+    for model in MODELS {
+        let base = bits(&run_script(&forward(model, "q4_k_m", 2, 0, KvScheme::Q8_0)));
+        for shards in [1usize, 2, 4] {
+            let fwd = forward(model, "q4_k_m", 2, shards, KvScheme::Q8_0);
+            assert_eq!(fwd.shard_count(), shards);
+            assert_eq!(
+                base,
+                bits(&run_script(&fwd)),
+                "{model}: q8 KV at {shards} shards vs local"
+            );
+        }
+    }
+}
+
+/// Dense vs paged backing under q8_0: logits, the decoded planes, and
+/// the **encoded** block planes must all match bit for bit. The paged
+/// run uses `block_tokens = 5` — deliberately not a multiple (or
+/// divisor) of the 32-weight codec block, so per-line zero padding and
+/// block-table indexing are exercised against each other.
+#[test]
+fn q8_dense_and_paged_caches_are_bit_identical() {
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 2, 0, KvScheme::Q8_0);
+        let total = PROMPT.len() + DECODE_STEPS;
+        let mut scratch = fwd.new_scratch();
+        let mut logits = vec![0f32; fwd.vocab()];
+
+        let mut dense = fwd.new_cache();
+        let mut dense_rows: Vec<Vec<f32>> = Vec::new();
+        for (j, &t) in PROMPT.iter().enumerate() {
+            let want = if j + 1 == PROMPT.len() { Some(&mut logits[..]) } else { None };
+            fwd.forward_token(t, &mut dense, &mut scratch, want).unwrap();
+        }
+        dense_rows.push(logits.clone());
+        for _ in 0..DECODE_STEPS {
+            let tok = argmax(dense_rows.last().unwrap());
+            fwd.forward_token(tok, &mut dense, &mut scratch, Some(&mut logits)).unwrap();
+            dense_rows.push(logits.clone());
+        }
+
+        let block_tokens = 5usize;
+        let n_blocks = total.div_ceil(block_tokens);
+        let mut pool = fwd.new_block_pool(n_blocks, block_tokens).unwrap();
+        assert!(pool.try_reserve(n_blocks));
+        let mut paged = fwd.new_paged_cache(&pool).unwrap();
+        paged.grow_to(total, &mut pool).unwrap();
+        let mut paged_rows: Vec<Vec<f32>> = Vec::new();
+        for (j, &t) in PROMPT.iter().enumerate() {
+            let want = if j + 1 == PROMPT.len() { Some(&mut logits[..]) } else { None };
+            fwd.forward_token(t, &mut paged, &mut scratch, want).unwrap();
+        }
+        paged_rows.push(logits.clone());
+        for _ in 0..DECODE_STEPS {
+            let tok = argmax(paged_rows.last().unwrap());
+            fwd.forward_token(tok, &mut paged, &mut scratch, Some(&mut logits)).unwrap();
+            paged_rows.push(logits.clone());
+        }
+
+        assert_eq!(bits(&dense_rows), bits(&paged_rows), "{model}: q8 dense vs paged logits");
+        assert_eq!(dense.len(), paged.len());
+        assert_eq!(
+            dense.copy_rows_enc(),
+            paged.copy_rows_enc(),
+            "{model}: encoded KV-row plane dense vs paged"
+        );
+        assert_eq!(
+            dense.copy_expanded_enc(),
+            paged.copy_expanded_enc(),
+            "{model}: encoded expanded plane dense vs paged"
+        );
+        assert_eq!(
+            slice_bits(&dense.copy_rows()),
+            slice_bits(&paged.copy_rows()),
+            "{model}: decoded KV-row plane dense vs paged"
+        );
+        paged.release(&mut pool);
+        pool.unreserve(n_blocks);
+    }
+}
+
+/// Batched panel decode (`forward_step_batch`, dead slot included) under
+/// q8_0 matches solo per-slot decode bit for bit, step for step.
+#[test]
+fn q8_batched_decode_matches_solo() {
+    for model in MODELS {
+        let fwd = forward(model, "q4_k_m", 2, 0, KvScheme::Q8_0);
+        let prompts: [&[i32]; 3] = [&[1, 17, 300], &[42, 511], &[7, 5, 260, 9]];
+        let live = [true, false, true];
+        let steps = 3usize;
+        let v = fwd.vocab();
+
+        // Batched run, recording each slot's fed token and logits row.
+        let mut caches: Vec<_> = (0..prompts.len()).map(|_| fwd.new_cache()).collect();
+        let mut scratch = fwd.new_scratch_cols(prompts.len());
+        let mut logits = vec![0f32; prompts.len() * v];
+        for (slot, p) in prompts.iter().enumerate() {
+            for &t in *p {
+                fwd.forward_token(t, &mut caches[slot], &mut scratch, None).unwrap();
+            }
+        }
+        let mut fed: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
+        let mut rows: Vec<Vec<Vec<u32>>> = vec![Vec::new(); prompts.len()];
+        let mut toks = [2i32, 3, 4];
+        for _ in 0..steps {
+            for (slot, &t) in toks.iter().enumerate() {
+                fed[slot].push(t);
+            }
+            fwd.forward_step_batch(&toks, &live, &mut caches, &mut scratch, &mut logits).unwrap();
+            for slot in 0..prompts.len() {
+                rows[slot].push(slice_bits(&logits[slot * v..(slot + 1) * v]));
+            }
+            for (slot, t) in toks.iter_mut().enumerate() {
+                if live[slot] {
+                    *t = argmax(&logits[slot * v..(slot + 1) * v]);
+                }
+            }
+        }
+
+        // Solo replay of each live slot: same prompt, same fed tokens.
+        for (slot, p) in prompts.iter().enumerate() {
+            if !live[slot] {
+                continue;
+            }
+            let mut cache = fwd.new_cache();
+            let mut s = fwd.new_scratch();
+            let mut l = vec![0f32; v];
+            for &t in *p {
+                fwd.forward_token(t, &mut cache, &mut s, None).unwrap();
+            }
+            for (step, &t) in fed[slot].iter().enumerate() {
+                fwd.forward_token(t, &mut cache, &mut s, Some(&mut l)).unwrap();
+                assert_eq!(
+                    slice_bits(&l),
+                    rows[slot][step],
+                    "{model}: q8 batched vs solo, slot {slot} step {step}"
+                );
+            }
+        }
+    }
+}
+
+// --- lock 3: accuracy bound -----------------------------------------------
+
+/// Teacher-forcing the f32-KV greedy trajectory through a q8_0 KV cache
+/// must move logits measurably (quantization is real) but stay within a
+/// small relative-L2 bound — KV-cache error is far below the
+/// weight-quantization error budget the paper's schemes spend.
+#[test]
+fn q8_kv_tracks_f32_kv_within_bound() {
+    for model in MODELS {
+        for scheme in SCHEMES {
+            let f32_fwd = forward(model, scheme, 1, 0, KvScheme::F32);
+            let rows = run_script(&f32_fwd);
+            let mut stream: Vec<i32> = PROMPT.to_vec();
+            for r in &rows[..DECODE_STEPS] {
+                stream.push(argmax(r));
+            }
+            let want_from = PROMPT.len() - 1;
+            let base = run_forced(&f32_fwd, &stream, want_from);
+            let q8 = run_forced(
+                &forward(model, scheme, 1, 0, KvScheme::Q8_0),
+                &stream,
+                want_from,
+            );
+            assert_eq!(base.len(), q8.len());
+            let worst = base
+                .iter()
+                .zip(&q8)
+                .map(|(b, q)| rel_l2(q, b))
+                .fold(0.0f64, f64::max);
+            assert!(
+                worst < 0.05,
+                "{model}/{scheme}: q8-KV logits drift {worst:.3e} exceeds the 5e-2 bound"
+            );
+            assert_ne!(
+                bits(&base),
+                bits(&q8),
+                "{model}/{scheme}: q8 KV should measurably perturb logits"
+            );
+        }
+    }
+}
+
+// --- lock 4: planner-vs-engine bytes --------------------------------------
+
+/// [`dsq::memory::kv_token_plan`] vs the engine's measured plan — entry
+/// names and bytes must match exactly under both schemes, the block
+/// pool must price tokens identically, and q8_0 must buy ≥3× vs f32.
+#[test]
+fn planner_kv_plan_matches_engine_measured_exactly() {
+    for model in MODELS {
+        let cfg = ModelConfig::by_name(model).unwrap();
+        for kv in [KvScheme::F32, KvScheme::Q8_0] {
+            let fwd = forward(model, "q4_k_m", 1, 0, kv);
+            let cache = fwd.new_cache();
+            let planned = memory::kv_token_plan(&cfg, kv, true);
+            let measured = cache.measured_token_plan();
+            assert_eq!(planned.len(), measured.len(), "{model}/{kv}: plan entry count");
+            let mut diffs = Vec::new();
+            for ((pn, pb), (mn, mb)) in planned.iter().zip(&measured) {
+                if pn != mn || pb != mb {
+                    diffs.push(format!("planner {pn}={pb} vs engine {mn}={mb}"));
+                }
+            }
+            assert!(
+                diffs.is_empty(),
+                "{model}/{kv}: planner-vs-engine KV token plan drifted:\n{}",
+                diffs.join("\n")
+            );
+            assert_eq!(
+                memory::kv_bytes_per_token(&cfg, kv, true),
+                cache.bytes_per_token() as u64,
+                "{model}/{kv}: planner total vs engine cache"
+            );
+            let pool = fwd.new_block_pool(1, 4).unwrap();
+            assert_eq!(
+                pool.bytes_per_token(),
+                cache.bytes_per_token(),
+                "{model}/{kv}: block pool vs dense cache bytes per token"
+            );
+            assert_eq!(pool.block_bytes(), 4 * pool.bytes_per_token());
+        }
+        let f32b = memory::kv_bytes_per_token(&cfg, KvScheme::F32, true);
+        let q8b = memory::kv_bytes_per_token(&cfg, KvScheme::Q8_0, true);
+        assert!(
+            q8b * 3 <= f32b,
+            "{model}: q8_0 KV must be a ≥3× reduction (f32 {f32b} B/token, q8_0 {q8b})"
+        );
+    }
+}
+
+// --- lock 5: clean rejection ----------------------------------------------
+
+#[test]
+fn eager_mla_rejects_quantized_kv() {
+    let ckpt = Container::from_bytes(qbytes("tiny-moe", "q4_k_m").to_vec()).unwrap();
+    let mut fwd = ForwardPass::new(ckpt, 1, NATIVE_MAX_CTX).unwrap();
+    fwd.set_mla_absorption(false);
+    let err = fwd.set_kv_scheme(KvScheme::Q8_0).unwrap_err().to_string();
+    assert!(err.contains("absorbed MLA"), "unexpected error: {err}");
+    // f32 stays available to the eager path.
+    fwd.set_kv_scheme(KvScheme::F32).unwrap();
+}
+
+#[test]
+fn pool_created_under_another_scheme_is_rejected() {
+    let ckpt = Container::from_bytes(qbytes("tiny-dense", "q4_k_m").to_vec()).unwrap();
+    let mut fwd = ForwardPass::new(ckpt, 1, NATIVE_MAX_CTX).unwrap();
+    let pool = fwd.new_block_pool(2, 4).unwrap();
+    fwd.set_kv_scheme(KvScheme::Q8_0).unwrap();
+    let err = fwd.new_paged_cache(&pool).unwrap_err().to_string();
+    assert!(err.contains("does not match the block pool"), "unexpected error: {err}");
+}
